@@ -1,0 +1,162 @@
+//! End-to-end driver across all three layers (the mandated full-stack
+//! workload): the **predictive autoscaler** — L1 Pallas window-statistics
+//! kernel → L2 JAX forecaster, AOT-lowered to HLO text by `make artifacts`,
+//! loaded and executed here from Rust via PJRT — calibrated *online* with
+//! the AOT `train_step` and then raced against the paper's reactive rule
+//! on the two-week trace.
+//!
+//! Run `make artifacts` first, then:
+//!
+//! ```text
+//! cargo run --release --example predictive_scaling
+//! ```
+//!
+//! Reported in EXPERIMENTS.md §E2E.
+
+use phoenix_cloud::runtime::ForecastEngine;
+use phoenix_cloud::trace::web_synth::{self, WebTraceConfig};
+use phoenix_cloud::util::timefmt::WEEK;
+use phoenix_cloud::wscms::autoscaler::{utilization, Reactive};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    if !ForecastEngine::artifacts_present(&dir) {
+        anyhow::bail!(
+            "AOT artifacts not found in '{dir}' — run `make artifacts` first \
+             (python lowers the JAX/Pallas forecaster to HLO text once; \
+             it is never on this request path)"
+        );
+    }
+
+    let mut engine = ForecastEngine::load(&dir)?;
+    let (s, w) = (engine.meta.num_services, engine.meta.window);
+    println!(
+        "ForecastEngine: platform={}, batch={}x{}, params={} (alpha={}, lr={})",
+        engine.platform(),
+        s,
+        w,
+        engine.meta.num_params,
+        engine.meta.alpha,
+        engine.meta.learning_rate
+    );
+
+    let cfg = WebTraceConfig::default();
+    let rates = web_synth::generate(&cfg);
+    let cap = cfg.instance_capacity_rps;
+    let samples_per_week = (WEEK / cfg.sample_period) as usize;
+    // Feature/target normalization: everything is expressed as a fraction
+    // of the peak fleet (64 instances) so features and targets live in
+    // ~[0, 1] and the AOT train_step's fixed learning rate is stable.
+    let fleet = cfg.target_peak_instances as f32;
+
+    // ---- phase 1: online calibration on week 1 ------------------------------
+    // Sliding windows of (utilization, normalized rate) become training
+    // rows; the target is the demand the reactive rule settled on one
+    // decision later (learning to predict the paper's own policy, then
+    // jumping to it without the ±1 lag).
+    let mut reactive = Reactive::new(u64::MAX);
+    let mut util_hist = vec![0f32; w];
+    let mut rate_hist = vec![0f32; w];
+    let mut rows: Vec<(Vec<f32>, Vec<f32>, f32)> = Vec::new();
+    for &rate in rates.rates.iter().take(samples_per_week) {
+        let util = utilization(rate, reactive.instances(), cap);
+        let target = reactive.decide(util) as f32 / fleet;
+        util_hist.rotate_left(1);
+        *util_hist.last_mut().unwrap() = util as f32;
+        rate_hist.rotate_left(1);
+        *rate_hist.last_mut().unwrap() = (rate / cap) as f32 / fleet;
+        rows.push((util_hist.clone(), rate_hist.clone(), target));
+    }
+    // SGD over shuffled batches of S rows via the AOT train_step
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::new();
+    let epochs = 3usize;
+    for epoch in 0..epochs {
+        let mut loss_sum = 0f32;
+        let mut batches = 0;
+        for chunk in rows.chunks(s) {
+            if chunk.len() < s {
+                break;
+            }
+            let mut util = Vec::with_capacity(s * w);
+            let mut reqs = Vec::with_capacity(s * w);
+            let mut target = Vec::with_capacity(s);
+            for (u, r, t) in chunk {
+                util.extend_from_slice(u);
+                reqs.extend_from_slice(r);
+                target.push(*t);
+            }
+            loss_sum += engine.train_step(&util, &reqs, &target)?;
+            batches += 1;
+        }
+        let mean = loss_sum / batches as f32;
+        losses.push(mean);
+        println!("  epoch {epoch}: mean MSE {mean:.3} over {batches} train_step calls");
+    }
+    println!(
+        "calibration: {} PJRT executions in {:.2?} ({:.0} µs/call)",
+        engine.calls,
+        t0.elapsed(),
+        t0.elapsed().as_micros() as f64 / engine.calls as f64
+    );
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "training must reduce loss"
+    );
+
+    // ---- phase 2: race on week 2 --------------------------------------------
+    let mut reactive = Reactive::new(u64::MAX);
+    let mut util_hist = vec![0f32; w];
+    let mut rate_hist = vec![0f32; w];
+    let mut pred_n: u64 = 1;
+    let (mut r_short, mut p_short) = (0u64, 0u64); // overload samples
+    let (mut r_over, mut p_over) = (0f64, 0f64); // mean over-provision
+    let week2 = &rates.rates[samples_per_week..];
+    let t1 = std::time::Instant::now();
+    let mut forecast_calls = 0u64;
+    for &rate in week2 {
+        // reactive baseline
+        let r_util = utilization(rate, reactive.instances(), cap);
+        let rn = reactive.decide(r_util);
+        // predictive: forecast from the same observable state
+        let p_util = utilization(rate, pred_n, cap);
+        util_hist.rotate_left(1);
+        *util_hist.last_mut().unwrap() = p_util as f32;
+        rate_hist.rotate_left(1);
+        *rate_hist.last_mut().unwrap() = (rate / cap) as f32 / fleet;
+        let pred = engine.forecast_one(&util_hist, &rate_hist)? * fleet;
+        forecast_calls += 1;
+        pred_n = (pred.ceil().max(1.0) as u64).min(10_000);
+
+        let need = (rate / cap).ceil() as u64;
+        if rn < need {
+            r_short += 1;
+        }
+        if pred_n < need {
+            p_short += 1;
+        }
+        r_over += rn.saturating_sub(need) as f64;
+        p_over += pred_n.saturating_sub(need) as f64;
+    }
+    let n2 = week2.len() as f64;
+    println!("\nweek-2 race (one decision per 20 s sample, {} samples):", week2.len());
+    println!(
+        "  reactive  : overload samples {:>5} ({:.2} %), mean surplus {:.2} instances",
+        r_short,
+        100.0 * r_short as f64 / n2,
+        r_over / n2
+    );
+    println!(
+        "  predictive: overload samples {:>5} ({:.2} %), mean surplus {:.2} instances",
+        p_short,
+        100.0 * p_short as f64 / n2,
+        p_over / n2
+    );
+    println!(
+        "  forecast hot path: {:.0} µs/decision over {} PJRT executions",
+        t1.elapsed().as_micros() as f64 / forecast_calls as f64,
+        forecast_calls
+    );
+    println!("\nall three layers composed: Pallas kernel (L1) inside the JAX graph (L2),\nexecuted from the Rust coordinator (L3) via PJRT — python never ran here.");
+    Ok(())
+}

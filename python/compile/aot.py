@@ -1,0 +1,77 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernel) -> HLO text.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits:  forecast.hlo.txt, train_step.hlo.txt, meta.json
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all() -> dict[str, str]:
+    """Lower every artifact; returns {name: hlo_text}."""
+    out = {}
+    out["forecast"] = to_hlo_text(
+        jax.jit(model.forecast).lower(*model.example_args())
+    )
+    out["train_step"] = to_hlo_text(
+        jax.jit(model.train_step).lower(*model.example_train_args())
+    )
+    return out
+
+
+def meta() -> dict:
+    """Shape/constant metadata consumed by the Rust runtime loader."""
+    return {
+        "num_services": model.NUM_SERVICES,
+        "window": model.WINDOW,
+        "num_params": model.NUM_PARAMS,
+        "alpha": model.ALPHA,
+        "learning_rate": model.LEARNING_RATE,
+        "init_params": model.INIT_PARAMS,
+        "artifacts": {
+            "forecast": "forecast.hlo.txt",
+            "train_step": "train_step.hlo.txt",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+    mpath = os.path.join(args.out_dir, "meta.json")
+    with open(mpath, "w") as f:
+        json.dump(meta(), f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

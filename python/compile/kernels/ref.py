@@ -1,0 +1,80 @@
+"""Pure-jnp oracle for the window-statistics kernel and the forecaster.
+
+This is the correctness ground truth: the Pallas kernel in
+``window_stats.py`` and the L2 model in ``model.py`` are both checked
+against these functions by pytest at build time. Keep this file free of
+Pallas — plain ``jax.numpy`` only.
+"""
+
+import jax.numpy as jnp
+
+# Feature layout produced by window_stats (per service row):
+#   0: mean   — arithmetic mean over the window
+#   1: peak   — max over the window
+#   2: ewma   — exponentially weighted moving average (newest-heaviest)
+#   3: slope  — least-squares trend (per-step) over the window
+NUM_FEATURES = 4
+
+
+def ewma_weights(window: int, alpha: float) -> jnp.ndarray:
+    """Normalized EWMA weights, oldest→newest: w_i ∝ (1-alpha)^(W-1-i).
+
+    Computing EWMA as a weighted reduction (rather than a sequential scan)
+    is exact and keeps the Pallas kernel a pure VPU reduction — see
+    DESIGN.md §Hardware-Adaptation.
+    """
+    idx = jnp.arange(window, dtype=jnp.float32)
+    w = (1.0 - alpha) ** (window - 1.0 - idx)
+    return w / jnp.sum(w)
+
+
+def slope_weights(window: int) -> jnp.ndarray:
+    """Weights s.t. dot(x, w) = least-squares slope of x against t=0..W-1."""
+    t = jnp.arange(window, dtype=jnp.float32)
+    tc = t - jnp.mean(t)
+    denom = jnp.sum(tc * tc)
+    return tc / denom
+
+
+def window_stats_ref(x: jnp.ndarray, alpha: float = 0.3) -> jnp.ndarray:
+    """Reference window statistics.
+
+    x: (S, W) float32 — per-service history, oldest→newest.
+    returns: (S, 4) float32 — [mean, peak, ewma, slope] per service.
+    """
+    _, w = x.shape
+    mean = jnp.mean(x, axis=1)
+    peak = jnp.max(x, axis=1)
+    ewma = x @ ewma_weights(w, alpha)
+    slope = x @ slope_weights(w)
+    return jnp.stack([mean, peak, ewma, slope], axis=1)
+
+
+def forecast_ref(util: jnp.ndarray, reqs: jnp.ndarray, params: jnp.ndarray,
+                 alpha: float = 0.3) -> jnp.ndarray:
+    """Reference demand forecaster (the L2 model, sans Pallas).
+
+    util:   (S, W) per-service CPU-utilization history in [0, 1+].
+    reqs:   (S, W) per-service normalized request-rate history.
+    params: (2*NUM_FEATURES + 1,) linear head [w_util(4), w_req(4), bias].
+    returns: (S,) predicted next-interval resource demand (instances),
+             continuous; the Rust coordinator rounds and clamps.
+    """
+    fu = window_stats_ref(util, alpha)
+    fr = window_stats_ref(reqs, alpha)
+    x = jnp.concatenate([fu, fr], axis=1)  # (S, 8)
+    return x @ params[:-1] + params[-1]
+
+
+def train_step_ref(params, util, reqs, target, lr: float = 0.05,
+                   alpha: float = 0.3):
+    """Reference one-step SGD on MSE(forecast, target). Returns (params', loss)."""
+    import jax
+
+    def loss_fn(p):
+        pred = forecast_ref(util, reqs, p, alpha)
+        err = pred - target
+        return jnp.mean(err * err)
+
+    loss, grad = jax.value_and_grad(loss_fn)(params)
+    return params - lr * grad, loss

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: batched sliding-window statistics.
+
+Computes, for each of S services, four statistics over its W-sample
+history: [mean, peak, ewma, slope]. All four are expressed as weighted
+reductions over the window axis so the kernel is a pure VPU workload —
+no sequential scan, no cross-row dependence (see DESIGN.md
+§Hardware-Adaptation).
+
+TPU mapping (design intent; executed here with interpret=True because the
+CPU PJRT plugin cannot run Mosaic custom-calls):
+  * grid over S in tiles of ROW_TILE=8 rows (sublane dimension),
+  * the window axis W stays whole in the lane dimension (pad to a
+    multiple of 128 upstream for real-TPU efficiency),
+  * per-step VMEM working set: (8, W) f32 input block + three (1, W)
+    weight vectors + (8, 4) output ≈ 4·(8·W + 3·W + 32) bytes — for
+    W=1024 that is ~45 KiB, far under the ~16 MiB VMEM budget, leaving
+    room for double-buffering the HBM→VMEM pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+ROW_TILE = 8  # services per grid step (f32 sublane tile)
+
+
+def _window_stats_kernel(x_ref, we_ref, ws_ref, o_ref, *, inv_w: float):
+    """One grid step: (ROW_TILE, W) history block -> (ROW_TILE, 4) features.
+
+    x_ref:  (ROW_TILE, W) history block.
+    we_ref: (1, W) normalized EWMA weights.
+    ws_ref: (1, W) least-squares slope weights.
+    o_ref:  (ROW_TILE, 4) output features.
+    """
+    x = x_ref[...]
+    mean = jnp.sum(x, axis=1) * inv_w
+    peak = jnp.max(x, axis=1)
+    ewma = jnp.sum(x * we_ref[...], axis=1)
+    slope = jnp.sum(x * ws_ref[...], axis=1)
+    o_ref[...] = jnp.stack([mean, peak, ewma, slope], axis=1)
+
+
+def window_stats(x: jnp.ndarray, alpha: float = 0.3) -> jnp.ndarray:
+    """Pallas window statistics. x: (S, W) f32, S % ROW_TILE == 0.
+
+    Returns (S, 4) f32 [mean, peak, ewma, slope] — bit-compatible with
+    ``ref.window_stats_ref`` up to float associativity.
+    """
+    s, w = x.shape
+    if s % ROW_TILE != 0:
+        raise ValueError(f"S={s} must be a multiple of {ROW_TILE}; pad upstream")
+    we = ref.ewma_weights(w, alpha).reshape(1, w)
+    ws = ref.slope_weights(w).reshape(1, w)
+    grid = (s // ROW_TILE,)
+    kernel = functools.partial(_window_stats_kernel, inv_w=1.0 / w)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, ref.NUM_FEATURES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, ref.NUM_FEATURES), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, we, ws)

@@ -1,0 +1,89 @@
+"""L2 JAX model: the WS-CMS demand forecaster.
+
+The paper's WS Server scales reactively (80 %-CPU rule, §III-C). The
+predictive policy — the natural extension exercised by the three-layer
+stack — forecasts the next-interval resource demand per service from two
+sliding windows (CPU utilization and request rate) using the L1 Pallas
+window-statistics kernel followed by a linear head.
+
+Both entry points here are lowered once to HLO text by ``aot.py`` and
+executed from the Rust coordinator via PJRT; Python is never on the
+request path.
+
+Shapes are fixed at lowering (AOT):
+  S = NUM_SERVICES service rows (the coordinator pads unused rows with 0),
+  W = WINDOW history samples (oldest→newest),
+  params = (2*4 + 1,) linear head [w_util(4), w_req(4), bias].
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.window_stats import window_stats
+
+NUM_SERVICES = 8
+WINDOW = 64
+ALPHA = 0.3          # EWMA decay
+LEARNING_RATE = 0.01  # stable for feature scales util∈[0,1], reqs∈[0,~4]
+NUM_PARAMS = 2 * ref.NUM_FEATURES + 1
+
+# Heuristic initial head: demand ≈ ewma(util)·0 + peak-dominated mix of the
+# request-rate window. Calibration (train_step) refines it online.
+INIT_PARAMS = [0.0, 0.25, 0.5, 4.0, 0.0, 0.25, 0.5, 4.0, 0.0]
+
+
+def features(util: jnp.ndarray, reqs: jnp.ndarray) -> jnp.ndarray:
+    """(S, W) x 2 -> (S, 8) feature matrix via the Pallas kernel."""
+    fu = window_stats(util, ALPHA)
+    fr = window_stats(reqs, ALPHA)
+    return jnp.concatenate([fu, fr], axis=1)
+
+
+def forecast(util: jnp.ndarray, reqs: jnp.ndarray,
+             params: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Predict next-interval demand per service. Returns a 1-tuple (S,).
+
+    Tuple return keeps the lowered HLO a tuple so the Rust side can use
+    ``to_tuple1`` uniformly (see /opt/xla-example/load_hlo).
+    """
+    x = features(util, reqs)
+    return (x @ params[:-1] + params[-1],)
+
+
+def train_step(params: jnp.ndarray, util: jnp.ndarray, reqs: jnp.ndarray,
+               target: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One SGD step on MSE(forecast, target). Returns (params', loss).
+
+    Used by the Rust coordinator to calibrate the head online against
+    observed demand (the ``predictive_scaling`` example drives this).
+    """
+
+    def loss_fn(p):
+        pred = forecast(util, reqs, p)[0]
+        err = pred - target
+        return jnp.mean(err * err)
+
+    loss, grad = jax.value_and_grad(loss_fn)(params)
+    return params - LEARNING_RATE * grad, loss
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering of ``forecast``."""
+    s = jax.ShapeDtypeStruct
+    return (
+        s((NUM_SERVICES, WINDOW), jnp.float32),   # util
+        s((NUM_SERVICES, WINDOW), jnp.float32),   # reqs
+        s((NUM_PARAMS,), jnp.float32),            # params
+    )
+
+
+def example_train_args():
+    """ShapeDtypeStructs for AOT lowering of ``train_step``."""
+    s = jax.ShapeDtypeStruct
+    return (
+        s((NUM_PARAMS,), jnp.float32),
+        s((NUM_SERVICES, WINDOW), jnp.float32),
+        s((NUM_SERVICES, WINDOW), jnp.float32),
+        s((NUM_SERVICES,), jnp.float32),
+    )

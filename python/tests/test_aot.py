@@ -1,0 +1,36 @@
+"""AOT path: lowering must produce parseable HLO text with stable signatures.
+
+This is the build-time contract with the Rust runtime loader
+(rust/src/runtime): entry computation name, parameter count, and tuple
+root must all be present in the emitted text.
+"""
+
+import json
+
+from compile import aot, model
+
+
+def test_lower_all_emits_both():
+    arts = aot.lower_all()
+    assert set(arts) == {"forecast", "train_step"}
+    for name, text in arts.items():
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+        # return_tuple=True => root is a tuple
+        assert "tuple(" in text or "(f32[" in text, name
+
+
+def test_forecast_signature():
+    text = aot.lower_all()["forecast"]
+    s, w, p = model.NUM_SERVICES, model.WINDOW, model.NUM_PARAMS
+    assert f"f32[{s},{w}]" in text
+    assert f"f32[{p}]" in text
+    assert f"f32[{s}]" in text  # output row
+
+
+def test_meta_contract():
+    m = aot.meta()
+    assert m["num_services"] == model.NUM_SERVICES
+    assert m["window"] == model.WINDOW
+    assert m["num_params"] == model.NUM_PARAMS == len(m["init_params"])
+    json.dumps(m)  # must be serializable

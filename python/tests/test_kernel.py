@@ -1,0 +1,105 @@
+"""L1 correctness: Pallas window_stats vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, window sizes, decay, and value ranges; every
+case asserts allclose against ref.window_stats_ref. This is the core
+correctness signal for the kernel.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.window_stats import ROW_TILE, window_stats
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(seed: int, s: int, w: int, lo: float, hi: float) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=(s, w)).astype(np.float32))
+
+
+# ---------------------------------------------------------------- unit tests
+
+
+def test_constant_rows():
+    """A constant history has mean=peak=ewma=c and slope=0."""
+    x = jnp.full((ROW_TILE, 16), 3.5, dtype=jnp.float32)
+    out = np.asarray(window_stats(x))
+    np.testing.assert_allclose(out[:, 0], 3.5, rtol=1e-6)
+    np.testing.assert_allclose(out[:, 1], 3.5, rtol=1e-6)
+    np.testing.assert_allclose(out[:, 2], 3.5, rtol=1e-5)
+    np.testing.assert_allclose(out[:, 3], 0.0, atol=1e-6)
+
+
+def test_linear_ramp_slope():
+    """x_t = a*t + b has slope exactly a."""
+    w = 32
+    t = jnp.arange(w, dtype=jnp.float32)
+    x = jnp.stack([0.5 * t + 1.0] * ROW_TILE)
+    out = np.asarray(window_stats(x))
+    np.testing.assert_allclose(out[:, 3], 0.5, rtol=1e-5)
+
+
+def test_peak_is_max():
+    x = _mk(0, ROW_TILE, 64, 0.0, 10.0)
+    out = np.asarray(window_stats(x))
+    np.testing.assert_allclose(out[:, 1], np.max(np.asarray(x), axis=1))
+
+
+def test_ewma_weights_newest_heaviest():
+    w = np.asarray(ref.ewma_weights(16, 0.3))
+    assert np.all(np.diff(w) > 0), "weights must increase toward newest"
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+
+
+def test_rejects_unpadded_rows():
+    with pytest.raises(ValueError):
+        window_stats(jnp.zeros((ROW_TILE + 1, 8), jnp.float32))
+
+
+def test_multi_tile_grid():
+    """S > ROW_TILE exercises the grid; rows must be independent."""
+    x = _mk(7, 4 * ROW_TILE, 24, -5.0, 5.0)
+    got = np.asarray(window_stats(x))
+    want = np.asarray(ref.window_stats_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # row independence: permuting rows permutes outputs
+    perm = np.arange(4 * ROW_TILE)[::-1].copy()
+    got_p = np.asarray(window_stats(jnp.asarray(np.asarray(x)[perm])))
+    np.testing.assert_allclose(got_p, got[perm], rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------- property sweep
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[hypothesis.HealthCheck.too_slow])
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 4),
+    w=st.sampled_from([4, 8, 16, 33, 64, 100, 128]),
+    lo=st.floats(-100.0, 0.0),
+    span=st.floats(0.1, 200.0),
+    alpha=st.floats(0.05, 0.95),
+)
+def test_matches_ref(seed, tiles, w, lo, span, alpha):
+    x = _mk(seed, tiles * ROW_TILE, w, lo, lo + span)
+    got = np.asarray(window_stats(x, alpha))
+    want = np.asarray(ref.window_stats_ref(x, alpha))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_jit_composition(seed):
+    """The kernel must lower inside jit (the AOT path) identically."""
+    x = _mk(seed, ROW_TILE, 32, 0.0, 1.0)
+    eager = np.asarray(window_stats(x))
+    jitted = np.asarray(jax.jit(window_stats)(x))
+    np.testing.assert_allclose(jitted, eager, rtol=1e-6, atol=1e-7)

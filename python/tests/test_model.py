@@ -1,0 +1,70 @@
+"""L2 correctness: forecaster + train_step vs oracle; training sanity."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+S, W, P = model.NUM_SERVICES, model.WINDOW, model.NUM_PARAMS
+
+
+def _data(seed: int):
+    rng = np.random.default_rng(seed)
+    util = jnp.asarray(rng.uniform(0, 1, (S, W)).astype(np.float32))
+    reqs = jnp.asarray(rng.uniform(0, 4, (S, W)).astype(np.float32))
+    params = jnp.asarray(rng.normal(0, 0.5, (P,)).astype(np.float32))
+    return util, reqs, params
+
+
+def test_forecast_shape_and_tuple():
+    util, reqs, params = _data(0)
+    out = model.forecast(util, reqs, params)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (S,)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_forecast_matches_ref(seed):
+    util, reqs, params = _data(seed)
+    got = np.asarray(model.forecast(util, reqs, params)[0])
+    want = np.asarray(ref.forecast_ref(util, reqs, params, model.ALPHA))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_train_step_matches_ref(seed):
+    util, reqs, params = _data(seed)
+    target = jnp.asarray(
+        np.random.default_rng(seed + 1).uniform(0, 32, (S,)).astype(np.float32))
+    got_p, got_l = model.train_step(params, util, reqs, target)
+    want_p, want_l = ref.train_step_ref(
+        params, util, reqs, target, model.LEARNING_RATE, model.ALPHA)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(float(got_l), float(want_l), rtol=3e-4)
+
+
+def test_training_decreases_loss():
+    """A few SGD steps on a learnable target must reduce the loss."""
+    util, reqs, _ = _data(42)
+    true_params = jnp.asarray(
+        np.random.default_rng(7).normal(0, 1, (P,)).astype(np.float32))
+    target = ref.forecast_ref(util, reqs, true_params, model.ALPHA)
+    params = jnp.zeros((P,), jnp.float32)
+    losses = []
+    for _ in range(25):
+        params, loss = model.train_step(params, util, reqs, target)
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses
+
+
+def test_init_params_sane():
+    assert len(model.INIT_PARAMS) == P

@@ -1,0 +1,44 @@
+//! Ablation benches over the design choices DESIGN.md §4 calls out:
+//! kill order, scheduler, provisioning policy, and autoscaler. Each
+//! prints the quality metrics alongside the timing so the trade-off the
+//! paper's choice makes is visible in one table.
+//!
+//! `cargo bench --bench ablations`
+
+use phoenix_cloud::config::ExperimentConfig;
+use phoenix_cloud::experiments::ablations;
+use phoenix_cloud::util::bench::{bench, section};
+
+fn main() {
+    let base = ExperimentConfig::dynamic(160);
+
+    section("kill-order ablation at DC-160 (paper: min-size, shortest-elapsed)");
+    let rows = bench_once("kill_orders", || ablations::kill_orders(&base));
+    println!("{:<12} {:>9} {:>10} {:>14}", "order", "killed", "completed", "turnaround(s)");
+    for (name, r) in &rows {
+        println!("{:<12} {:>9} {:>10} {:>14.0}", name, r.killed, r.completed, r.avg_turnaround);
+    }
+
+    section("scheduler ablation at DC-160 (paper: first-fit)");
+    let rows = bench_once("schedulers", || ablations::schedulers(&base));
+    println!("{:<12} {:>9} {:>10} {:>14}", "scheduler", "killed", "completed", "turnaround(s)");
+    for (name, r) in &rows {
+        println!("{:<12} {:>9} {:>10} {:>14.0}", name, r.killed, r.completed, r.avg_turnaround);
+    }
+
+    section("autoscaler ablation on the Fig-5 trace (paper: reactive 80% rule)");
+    let rows = bench_once("autoscalers", || ablations::autoscalers(&base.web));
+    println!("{:<12} {:>6} {:>9} {:>17}", "scaler", "peak", "mean", "overload-samples");
+    for (name, peak, mean, short) in &rows {
+        println!("{:<12} {:>6} {:>9.2} {:>17}", name, peak, mean, short);
+    }
+}
+
+fn bench_once<T: Clone>(name: &str, mut f: impl FnMut() -> T) -> T {
+    let mut out: Option<T> = None;
+    bench(name, 0, 3, || {
+        out = Some(f());
+        1
+    });
+    out.unwrap()
+}

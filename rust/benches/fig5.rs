@@ -1,0 +1,35 @@
+//! Bench: regenerate paper **Fig. 5** (WS resource consumption, two weeks)
+//! and print the figure's headline numbers next to the timing.
+//!
+//! `cargo bench --bench fig5`
+
+use phoenix_cloud::experiments::fig5;
+use phoenix_cloud::trace::web_synth::{self, WebTraceConfig};
+use phoenix_cloud::util::bench::{bench, section};
+use phoenix_cloud::wscms::serving;
+
+fn main() {
+    section("Fig 5 — WS resource consumption (two-week trace, 60 480 samples)");
+
+    let cfg = WebTraceConfig::default();
+    bench("trace generation (incl. peak calibration)", 1, 10, || {
+        let r = web_synth::generate(&cfg);
+        r.rates.len() as u64
+    });
+
+    let rates = web_synth::generate(&cfg);
+    bench("autoscaler sweep (reactive 80% rule)", 1, 20, || {
+        let (d, _) = serving::autoscale_series(&rates, cfg.instance_capacity_rps, u64::MAX);
+        d.len() as u64
+    });
+
+    bench("full fig5 experiment", 1, 10, || fig5::run(&cfg).samples as u64);
+
+    // the figure's numbers (shape check alongside the timing)
+    let fig = fig5::run(&cfg);
+    println!(
+        "\nfig5: peak={} instances (paper 64), normal(median)={:.0}, mean={:.1}, \
+         peak rate={:.0} rps",
+        fig.peak_instances, fig.normal_instances, fig.mean_instances, fig.peak_rate_rps
+    );
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate paper **Fig. 7** (completed jobs & average turnaround
+//! vs cluster size) — the full SC + {200..150} sweep over the two-week
+//! traces — and print the figure rows next to the timing.
+//!
+//! `cargo bench --bench fig7`
+
+use phoenix_cloud::config::ExperimentConfig;
+use phoenix_cloud::experiments::{consolidation, report};
+use phoenix_cloud::util::bench::{bench, section};
+
+fn main() {
+    section("Fig 7 — completed jobs & turnaround vs cluster size (7 two-week runs)");
+
+    let base = ExperimentConfig::default();
+    bench("single DC-160 run (2672 jobs, two weeks)", 1, 10, || {
+        consolidation::run_one(ExperimentConfig::dynamic(160)).events
+    });
+    bench("full sweep (SC + 6 DC sizes)", 1, 5, || {
+        consolidation::sweep(&base, &consolidation::PAPER_SIZES)
+            .iter()
+            .map(|r| r.events)
+            .sum()
+    });
+
+    let results = consolidation::sweep(&base, &consolidation::PAPER_SIZES);
+    println!("\n{}", report::sweep_text(&results));
+    match consolidation::headline(&results) {
+        Some((n, ratio)) => {
+            println!("headline: DC-{n} at {:.1} % of SC cost (paper: DC-160, 76.9 %)", ratio * 100.0)
+        }
+        None => println!("headline: NOT reproduced"),
+    }
+}

@@ -1,0 +1,155 @@
+//! Micro-benchmarks over the L3 hot paths: the event engine, the ledger,
+//! the schedulers, the kill policy, the balancers, and (when artifacts are
+//! present) the PJRT forecast call. These are the §Perf probes used in
+//! EXPERIMENTS.md.
+//!
+//! `cargo bench --bench micro`
+
+use std::collections::BTreeMap;
+
+use phoenix_cloud::cluster::{Ledger, Owner};
+use phoenix_cloud::config::{KillOrder, SchedulerKind};
+use phoenix_cloud::runtime::ForecastEngine;
+use phoenix_cloud::sim::{Engine, EventHandler, Schedule};
+use phoenix_cloud::stcms::kill::pick_victims;
+use phoenix_cloud::stcms::queue::JobQueue;
+use phoenix_cloud::stcms::scheduler::{RunningJob, Scheduler};
+use phoenix_cloud::util::bench::{bench, section};
+use phoenix_cloud::util::rng::Rng;
+use phoenix_cloud::workload::{Instance, Job};
+use phoenix_cloud::wscms::balancer::{Balancer, LeastConnection, RoundRobin};
+
+struct Chain;
+
+impl EventHandler<u32> for Chain {
+    fn handle(&mut self, ev: u32, sched: &mut Schedule<u32>) {
+        if ev > 0 {
+            sched.after(1, ev - 1);
+        }
+    }
+}
+
+fn main() {
+    section("event engine");
+    bench("100k chained events", 1, 20, || {
+        let mut eng = Engine::new();
+        eng.schedule(0, 100_000u32);
+        eng.run(&mut Chain);
+        eng.processed()
+    });
+    bench("100k same-timestamp events", 1, 20, || {
+        let mut eng: Engine<u32> = Engine::new();
+        for i in 0..100_000u32 {
+            eng.schedule(5, i.min(0));
+        }
+        eng.run(&mut Chain);
+        eng.processed()
+    });
+
+    section("cluster ledger");
+    bench("1M transfers", 1, 10, || {
+        let mut l = Ledger::new(208);
+        for i in 0..1_000_000u64 {
+            let n = i % 32;
+            let _ = l.transfer(Owner::Free, Owner::St, n);
+            let _ = l.transfer(Owner::St, Owner::Free, n);
+        }
+        1_000_000
+    });
+
+    section("schedulers (queue of 500, pool 160)");
+    let mut rng = Rng::new(1);
+    let mut queue = JobQueue::new();
+    for i in 0..500 {
+        let runtime = rng.range_u64(60, 7200);
+        queue.push(Job {
+            id: i,
+            submit: 0,
+            size: rng.range_u64(1, 64),
+            runtime,
+            requested: runtime * 2,
+        });
+    }
+    let mut running = BTreeMap::new();
+    for i in 0..40u64 {
+        running.insert(
+            1000 + i,
+            RunningJob {
+                size: rng.range_u64(1, 16),
+                submit: 0,
+                start: 0,
+                expected_end: rng.range_u64(100, 50_000),
+            },
+        );
+    }
+    for kind in [SchedulerKind::FirstFit, SchedulerKind::Fcfs, SchedulerKind::EasyBackfill] {
+        let sched = Scheduler::new(kind);
+        bench(&format!("{} pick over 500 queued", kind.name()), 10, 200, || {
+            sched.pick(&queue, &running, 64, 1000).len() as u64
+        });
+    }
+
+    section("kill policy (200 running jobs)");
+    let mut running = BTreeMap::new();
+    for i in 0..200u64 {
+        running.insert(
+            i,
+            RunningJob {
+                size: rng.range_u64(1, 32),
+                submit: 0,
+                start: rng.range_u64(0, 5000),
+                expected_end: 100_000,
+            },
+        );
+    }
+    for order in [
+        KillOrder::MinSizeShortestElapsed,
+        KillOrder::MaxSizeFirst,
+        KillOrder::ShortestElapsedFirst,
+    ] {
+        bench(&format!("pick_victims({}) for 40 nodes", order.name()), 10, 200, || {
+            pick_victims(&running, 40, order, 6000).len() as u64
+        });
+    }
+
+    section("balancers (64 instances)");
+    let mut instances: Vec<Instance> = (0..64).map(Instance::new).collect();
+    for inst in instances.iter_mut() {
+        inst.connections = rng.range_u64(0, 50) as u32;
+    }
+    let mut lc = LeastConnection;
+    bench("least-connection pick x10k", 5, 100, || {
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            acc += lc.pick(&instances).unwrap() as u64;
+        }
+        acc.min(10_000)
+    });
+    let mut rr = RoundRobin::default();
+    bench("round-robin pick x10k", 5, 100, || {
+        let mut acc = 0u64;
+        for _ in 0..10_000 {
+            acc += rr.pick(&instances).unwrap() as u64;
+        }
+        acc.min(10_000)
+    });
+
+    if ForecastEngine::artifacts_present("artifacts") {
+        section("PJRT forecaster (the predictive-autoscaler hot path)");
+        let mut engine = ForecastEngine::load("artifacts").unwrap();
+        let (s, w) = (engine.meta.num_services, engine.meta.window);
+        let util: Vec<f32> = (0..s * w).map(|i| (i % 97) as f32 / 97.0).collect();
+        let reqs = util.clone();
+        bench("forecast (batched 8x64) per call", 5, 200, || {
+            engine.forecast(&util, &reqs).unwrap();
+            1
+        });
+        let target: Vec<f32> = (0..s).map(|i| i as f32).collect();
+        bench("train_step per call", 5, 200, || {
+            engine.train_step(&util, &reqs, &target).unwrap();
+            1
+        });
+    } else {
+        println!("\n(skipping PJRT benches: run `make artifacts` first)");
+    }
+}

@@ -1,0 +1,160 @@
+//! Cluster substrate: the shared node pool and its allocation ledger.
+//!
+//! The paper's resource unit is a *node* (§III-D equates one Web-service VM
+//! with one node when sizing clusters; `vms_per_node` stays configurable in
+//! [`crate::config`]). The ledger tracks which owner (ST CMS, WS CMS, or
+//! free) holds each node and enforces conservation invariants in debug
+//! builds: nodes are never double-allocated and never lost.
+
+use std::fmt;
+
+/// Who currently holds a block of nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Owner {
+    /// Held by the Resource Provision Service (idle).
+    Free,
+    /// Provisioned to the scientific-computing CMS (ST Server).
+    St,
+    /// Provisioned to the Web-service CMS (WS Server).
+    Ws,
+}
+
+impl fmt::Display for Owner {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Owner::Free => write!(f, "free"),
+            Owner::St => write!(f, "ST"),
+            Owner::Ws => write!(f, "WS"),
+        }
+    }
+}
+
+/// Allocation ledger over a fixed pool of `total` identical nodes.
+///
+/// Node identity is immaterial to the policies (any node serves any
+/// purpose once the Web-service stack is pre-deployed, per §III-D), so the
+/// ledger tracks *counts*, which keeps every operation O(1). The
+/// invariant `free + st + ws == total` is checked after every transfer.
+#[derive(Debug, Clone)]
+pub struct Ledger {
+    total: u64,
+    free: u64,
+    st: u64,
+    ws: u64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum LedgerError {
+    #[error("insufficient nodes: requested {requested} from {owner} holding {held}")]
+    Insufficient { owner: &'static str, requested: u64, held: u64 },
+}
+
+impl Ledger {
+    /// All nodes start free (held by the provision service).
+    pub fn new(total: u64) -> Self {
+        Self { total, free: total, st: 0, ws: 0 }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn free(&self) -> u64 {
+        self.free
+    }
+
+    pub fn held(&self, owner: Owner) -> u64 {
+        match owner {
+            Owner::Free => self.free,
+            Owner::St => self.st,
+            Owner::Ws => self.ws,
+        }
+    }
+
+    fn slot(&mut self, owner: Owner) -> &mut u64 {
+        match owner {
+            Owner::Free => &mut self.free,
+            Owner::St => &mut self.st,
+            Owner::Ws => &mut self.ws,
+        }
+    }
+
+    /// Move `n` nodes `from` → `to`. Fails (without mutating) if `from`
+    /// holds fewer than `n`.
+    pub fn transfer(&mut self, from: Owner, to: Owner, n: u64) -> Result<(), LedgerError> {
+        let held = self.held(from);
+        if held < n {
+            return Err(LedgerError::Insufficient {
+                owner: match from {
+                    Owner::Free => "free",
+                    Owner::St => "ST",
+                    Owner::Ws => "WS",
+                },
+                requested: n,
+                held,
+            });
+        }
+        *self.slot(from) -= n;
+        *self.slot(to) += n;
+        self.check();
+        Ok(())
+    }
+
+    /// Conservation invariant; cheap enough to run unconditionally.
+    #[inline]
+    fn check(&self) {
+        debug_assert_eq!(
+            self.free + self.st + self.ws,
+            self.total,
+            "ledger leaked nodes: free={} st={} ws={} total={}",
+            self.free,
+            self.st,
+            self.ws,
+            self.total
+        );
+    }
+
+    /// Snapshot as (free, st, ws) for metrics sampling.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (self.free, self.st, self.ws)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_all_free() {
+        let l = Ledger::new(208);
+        assert_eq!(l.free(), 208);
+        assert_eq!(l.held(Owner::St), 0);
+        assert_eq!(l.held(Owner::Ws), 0);
+    }
+
+    #[test]
+    fn transfer_moves_counts() {
+        let mut l = Ledger::new(100);
+        l.transfer(Owner::Free, Owner::St, 60).unwrap();
+        l.transfer(Owner::Free, Owner::Ws, 10).unwrap();
+        l.transfer(Owner::St, Owner::Ws, 5).unwrap();
+        assert_eq!(l.snapshot(), (30, 55, 15));
+    }
+
+    #[test]
+    fn refuses_overdraw_without_mutating() {
+        let mut l = Ledger::new(10);
+        l.transfer(Owner::Free, Owner::St, 10).unwrap();
+        let before = l.snapshot();
+        let err = l.transfer(Owner::Free, Owner::Ws, 1).unwrap_err();
+        assert!(matches!(err, LedgerError::Insufficient { requested: 1, held: 0, .. }));
+        assert_eq!(l.snapshot(), before);
+    }
+
+    #[test]
+    fn zero_transfer_is_noop() {
+        let mut l = Ledger::new(5);
+        l.transfer(Owner::Free, Owner::Ws, 0).unwrap();
+        assert_eq!(l.snapshot(), (5, 0, 0));
+    }
+}

@@ -1,0 +1,319 @@
+//! Typed configuration for the whole system, loadable from the TOML-subset
+//! parser ([`crate::util::toml`]) with defaults matching the paper's
+//! evaluation setup. Every field is validated; errors name the offending
+//! key.
+
+use anyhow::{bail, Context, Result};
+
+use crate::trace::hpc_synth::HpcTraceConfig;
+use crate::trace::web_synth::WebTraceConfig;
+use crate::util::json::Json;
+use crate::util::timefmt::TWO_WEEKS;
+
+/// How the organization's clusters are arranged (§III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Configuration {
+    /// Each department runs its own dedicated cluster (the baseline):
+    /// ST on `st_nodes`, WS on `ws_nodes`, no sharing possible.
+    Static,
+    /// One shared cluster of `total` nodes under the cooperative policy.
+    Dynamic,
+}
+
+/// Scheduler selection for ST CMS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// The paper's policy: scan the queue in order, start anything that fits.
+    FirstFit,
+    /// Strict FCFS (head-of-line blocking) — ablation baseline.
+    Fcfs,
+    /// EASY backfilling — ablation extension.
+    EasyBackfill,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "first-fit" | "firstfit" => SchedulerKind::FirstFit,
+            "fcfs" => SchedulerKind::Fcfs,
+            "easy" | "backfill" => SchedulerKind::EasyBackfill,
+            _ => bail!("unknown scheduler '{s}' (first-fit|fcfs|easy)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::FirstFit => "first-fit",
+            SchedulerKind::Fcfs => "fcfs",
+            SchedulerKind::EasyBackfill => "easy",
+        }
+    }
+}
+
+/// Kill-selection order when ST must surrender busy nodes (§II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KillOrder {
+    /// The paper's rule: ascending (size, elapsed running time).
+    MinSizeShortestElapsed,
+    /// Ablation: biggest jobs first (fewest kills, most work lost).
+    MaxSizeFirst,
+    /// Ablation: most-recently-started first (least work lost per kill).
+    ShortestElapsedFirst,
+}
+
+impl KillOrder {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "paper" | "min-size" => KillOrder::MinSizeShortestElapsed,
+            "max-size" => KillOrder::MaxSizeFirst,
+            "newest" => KillOrder::ShortestElapsedFirst,
+            _ => bail!("unknown kill order '{s}' (paper|max-size|newest)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KillOrder::MinSizeShortestElapsed => "paper",
+            KillOrder::MaxSizeFirst => "max-size",
+            KillOrder::ShortestElapsedFirst => "newest",
+        }
+    }
+}
+
+/// WS-CMS autoscaler selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AutoscalerKind {
+    /// The paper's reactive 80 %-CPU rule (§III-C).
+    Reactive,
+    /// Predictive: the AOT-compiled JAX/Pallas forecaster via PJRT.
+    Predictive,
+}
+
+/// Everything one consolidation run needs.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub configuration: Configuration,
+    /// Total shared nodes (Dynamic) — the Fig. 7/8 sweep variable.
+    pub total_nodes: u64,
+    /// Dedicated pools (Static): paper 144 + 64.
+    pub st_nodes: u64,
+    pub ws_nodes: u64,
+    pub horizon: u64,
+    pub scheduler: SchedulerKind,
+    pub kill_order: KillOrder,
+    /// WS demand sampling / autoscaler decision period (paper: 20 s).
+    pub ws_sample_period: u64,
+    /// Seconds to move a node between CMSes (paper: "only seconds").
+    pub realloc_delay: u64,
+    pub hpc: HpcTraceConfig,
+    pub web: WebTraceConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            configuration: Configuration::Dynamic,
+            total_nodes: 160,
+            st_nodes: 144,
+            ws_nodes: 64,
+            horizon: TWO_WEEKS,
+            scheduler: SchedulerKind::FirstFit,
+            kill_order: KillOrder::MinSizeShortestElapsed,
+            ws_sample_period: 20,
+            realloc_delay: 5,
+            hpc: HpcTraceConfig::default(),
+            web: WebTraceConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// The paper's static configuration: 144 (ST) + 64 (WS) = 208 nodes.
+    pub fn static_paper() -> Self {
+        Self {
+            configuration: Configuration::Static,
+            total_nodes: 208,
+            ..Default::default()
+        }
+    }
+
+    /// Dynamic configuration at a given shared-cluster size.
+    pub fn dynamic(total_nodes: u64) -> Self {
+        Self { configuration: Configuration::Dynamic, total_nodes, ..Default::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.horizon == 0 {
+            bail!("horizon must be positive");
+        }
+        if self.ws_sample_period == 0 {
+            bail!("ws_sample_period must be positive");
+        }
+        match self.configuration {
+            Configuration::Static => {
+                if self.st_nodes == 0 || self.ws_nodes == 0 {
+                    bail!("static configuration needs st_nodes and ws_nodes > 0");
+                }
+            }
+            Configuration::Dynamic => {
+                if self.total_nodes == 0 {
+                    bail!("dynamic configuration needs total_nodes > 0");
+                }
+                if self.total_nodes < self.web.target_peak_instances {
+                    bail!(
+                        "total_nodes ({}) below WS peak demand ({}): WS priority \
+                         could never be satisfied",
+                        self.total_nodes,
+                        self.web.target_peak_instances
+                    );
+                }
+            }
+        }
+        if self.hpc.machine_nodes == 0 || self.hpc.num_jobs == 0 {
+            bail!("hpc trace config degenerate");
+        }
+        if self.web.instance_capacity_rps <= 0.0 {
+            bail!("web.instance_capacity_rps must be positive");
+        }
+        Ok(())
+    }
+
+    /// Overlay values from a parsed TOML document (missing keys keep
+    /// defaults). Recognized layout mirrors `configs/*.toml`.
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<()> {
+        if let Some(v) = doc.get("configuration").and_then(Json::as_str) {
+            self.configuration = match v {
+                "static" => Configuration::Static,
+                "dynamic" => Configuration::Dynamic,
+                _ => bail!("configuration must be 'static' or 'dynamic', got '{v}'"),
+            };
+        }
+        if let Some(c) = doc.get("cluster") {
+            if let Some(n) = c.get("total_nodes").and_then(Json::as_u64) {
+                self.total_nodes = n;
+            }
+            if let Some(n) = c.get("st_nodes").and_then(Json::as_u64) {
+                self.st_nodes = n;
+            }
+            if let Some(n) = c.get("ws_nodes").and_then(Json::as_u64) {
+                self.ws_nodes = n;
+            }
+            if let Some(n) = c.get("realloc_delay").and_then(Json::as_u64) {
+                self.realloc_delay = n;
+            }
+        }
+        if let Some(s) = doc.get("stcms") {
+            if let Some(v) = s.get("scheduler").and_then(Json::as_str) {
+                self.scheduler = SchedulerKind::parse(v)?;
+            }
+            if let Some(v) = s.get("kill_order").and_then(Json::as_str) {
+                self.kill_order = KillOrder::parse(v)?;
+            }
+        }
+        if let Some(w) = doc.get("wscms") {
+            if let Some(n) = w.get("sample_period").and_then(Json::as_u64) {
+                self.ws_sample_period = n;
+                self.web.sample_period = n;
+            }
+            if let Some(f) = w.get("instance_capacity_rps").and_then(Json::as_f64) {
+                self.web.instance_capacity_rps = f;
+            }
+            if let Some(n) = w.get("target_peak_instances").and_then(Json::as_u64) {
+                self.web.target_peak_instances = n;
+            }
+        }
+        if let Some(h) = doc.get("hpc") {
+            if let Some(n) = h.get("num_jobs").and_then(Json::as_u64) {
+                self.hpc.num_jobs = n as usize;
+            }
+            if let Some(n) = h.get("machine_nodes").and_then(Json::as_u64) {
+                self.hpc.machine_nodes = n;
+            }
+            if let Some(f) = h.get("target_load").and_then(Json::as_f64) {
+                self.hpc.target_load = f;
+            }
+            if let Some(n) = h.get("seed").and_then(Json::as_u64) {
+                self.hpc.seed = n;
+            }
+        }
+        if let Some(n) = doc.get("horizon").and_then(Json::as_u64) {
+            self.horizon = n;
+            self.hpc.horizon = n;
+            self.web.horizon = n;
+        }
+        if let Some(n) = doc.get("seed").and_then(Json::as_u64) {
+            self.hpc.seed = n;
+            self.web.seed = n ^ 0x77;
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file over the defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let doc = crate::util::toml::parse_file(path)
+            .with_context(|| format!("loading config {path}"))?;
+        let mut cfg = Self::default();
+        cfg.apply_toml(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+        ExperimentConfig::static_paper().validate().unwrap();
+        ExperimentConfig::dynamic(160).validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_total_below_ws_peak() {
+        let cfg = ExperimentConfig::dynamic(32);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let doc = crate::util::toml::parse(
+            "configuration = \"dynamic\"\nhorizon = 3600\n\n[cluster]\ntotal_nodes = 170\n\n\
+             [stcms]\nscheduler = \"fcfs\"\nkill_order = \"max-size\"\n\n\
+             [hpc]\nnum_jobs = 100\ntarget_load = 0.5\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.total_nodes, 170);
+        assert_eq!(cfg.scheduler, SchedulerKind::Fcfs);
+        assert_eq!(cfg.kill_order, KillOrder::MaxSizeFirst);
+        assert_eq!(cfg.hpc.num_jobs, 100);
+        assert_eq!(cfg.horizon, 3600);
+        assert_eq!(cfg.web.horizon, 3600);
+    }
+
+    #[test]
+    fn rejects_bad_enum_values() {
+        let doc = crate::util::toml::parse("configuration = \"hybrid\"\n").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.apply_toml(&doc).is_err());
+        assert!(SchedulerKind::parse("lottery").is_err());
+        assert!(KillOrder::parse("random").is_err());
+    }
+
+    #[test]
+    fn enum_names_roundtrip() {
+        for k in [SchedulerKind::FirstFit, SchedulerKind::Fcfs, SchedulerKind::EasyBackfill] {
+            assert_eq!(SchedulerKind::parse(k.name()).unwrap(), k);
+        }
+        for k in [
+            KillOrder::MinSizeShortestElapsed,
+            KillOrder::MaxSizeFirst,
+            KillOrder::ShortestElapsedFirst,
+        ] {
+            assert_eq!(KillOrder::parse(k.name()).unwrap(), k);
+        }
+    }
+}

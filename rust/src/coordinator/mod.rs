@@ -1,0 +1,358 @@
+//! The Phoenix Cloud coordinator: wires the Resource Provision Service,
+//! ST CMS and WS CMS together over the cluster ledger and drives them —
+//! either in virtual time over the two-week traces (the evaluation path,
+//! [`ConsolidationSim`]) or in wall-clock time over the service framework
+//! ([`realtime`]).
+
+pub mod realtime;
+
+use crate::config::{Configuration, ExperimentConfig};
+use crate::metrics::Registry;
+use crate::provision::{PolicyKind, Rps};
+use crate::sim::{Engine, EventHandler, Schedule, SimTime};
+use crate::stcms::StServer;
+use crate::workload::{Job, JobState};
+use crate::wscms::{WsAction, WsServer};
+
+/// Events of the consolidation simulation.
+#[derive(Debug, Clone)]
+enum Ev {
+    /// Job `trace_idx` arrives at ST CMS.
+    Submit(usize),
+    /// A started job reaches its runtime (stale if the job was killed).
+    Finish { job_id: u64 },
+    /// WS demand series moves to the value of sample `k`.
+    WsDemand { sample: usize },
+    /// Forced-return nodes arrive at WS after the reallocation delay.
+    GrantArrive { nodes: u64 },
+}
+
+/// Result of one consolidation run (one bar of Figs. 7/8).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub label: String,
+    pub cluster_nodes: u64,
+    pub submitted: usize,
+    pub completed: u64,
+    pub killed: u64,
+    /// Jobs still queued/running at the horizon.
+    pub in_flight: usize,
+    /// Average turnaround of *completed* jobs, seconds (Fig. 7 right axis).
+    pub avg_turnaround: f64,
+    /// The paper's end-user benefit metric: 1 / avg-turnaround.
+    pub benefit_end_user: f64,
+    /// WS unmet demand (node-seconds; the paper's claim is that this is 0).
+    pub ws_shortage_node_secs: u64,
+    /// Forced-return events and the nodes they moved.
+    pub force_returns: u64,
+    pub forced_nodes: u64,
+    /// Time-weighted mean busy nodes in the ST pool.
+    pub st_busy_mean: f64,
+    /// Simulator events processed (perf accounting).
+    pub events: u64,
+    pub registry: Registry,
+}
+
+/// The consolidation simulation: one cluster, one configuration.
+pub struct ConsolidationSim {
+    cfg: ExperimentConfig,
+    jobs: Vec<Job>,
+    /// WS node-demand per `ws_sample_period` (from the Fig.-5 autoscaler).
+    ws_demand: Vec<u64>,
+    rps: Rps,
+    st: StServer,
+    ws: WsServer,
+    registry: Registry,
+}
+
+impl ConsolidationSim {
+    /// Build from a config plus precomputed traces. `ws_demand` is the
+    /// instance-demand series (instances ≙ nodes).
+    pub fn new(cfg: ExperimentConfig, jobs: Vec<Job>, ws_demand: Vec<u64>) -> Self {
+        let policy = match cfg.configuration {
+            Configuration::Static => {
+                PolicyKind::StaticPartition { st: cfg.st_nodes, ws: cfg.ws_nodes }
+            }
+            Configuration::Dynamic => PolicyKind::Cooperative,
+        };
+        let total = match cfg.configuration {
+            Configuration::Static => cfg.st_nodes + cfg.ws_nodes,
+            Configuration::Dynamic => cfg.total_nodes,
+        };
+        let rps = Rps::new(total, policy);
+        let st = StServer::new(cfg.scheduler, cfg.kill_order);
+        let ws = WsServer::new();
+        Self { cfg, jobs, ws_demand, rps, st, ws, registry: Registry::new() }
+    }
+
+    /// Run to the horizon and collect the figure metrics.
+    pub fn run(mut self) -> RunResult {
+        let mut engine: Engine<Ev> = Engine::new();
+
+        // boot: WS gets its first-sample demand, ST gets the rest
+        let ws0 = *self.ws_demand.first().unwrap_or(&1);
+        let (ws_grant, st_grant) = self.rps.bootstrap(ws0);
+        self.ws.grant(ws_grant);
+        self.ws.set_demand(ws0, 0);
+        self.st.grant(st_grant);
+
+        // seed events: all submissions…
+        for (i, job) in self.jobs.iter().enumerate() {
+            if job.submit <= self.cfg.horizon {
+                engine.schedule(job.submit, Ev::Submit(i));
+            }
+        }
+        // …and only the samples where WS demand *changes* (event-count
+        // discipline: 60 480 samples/2 weeks, but only ~2 000 changes)
+        let mut prev = ws0;
+        for (k, &d) in self.ws_demand.iter().enumerate() {
+            if d != prev {
+                engine.schedule(k as u64 * self.cfg.ws_sample_period, Ev::WsDemand { sample: k });
+                prev = d;
+            }
+        }
+
+        let horizon = self.cfg.horizon;
+        let mut handler = Handler { sim: &mut self };
+        engine.run_until(&mut handler, horizon);
+        let events = engine.processed();
+        let now = engine.now();
+        // close out WS shortage accounting at the horizon
+        let d = self.ws.demand();
+        self.ws.set_demand(d, now);
+
+        self.finish(events)
+    }
+
+    fn finish(mut self, events: u64) -> RunResult {
+        let completed = self
+            .st
+            .outcomes
+            .iter()
+            .filter(|o| o.state == JobState::Completed)
+            .count() as u64;
+        let killed = self
+            .st
+            .outcomes
+            .iter()
+            .filter(|o| o.state == JobState::Killed)
+            .count() as u64;
+        let turnarounds: Vec<f64> = self
+            .st
+            .outcomes
+            .iter()
+            .filter(|o| o.state == JobState::Completed)
+            .map(|o| o.turnaround() as f64)
+            .collect();
+        let avg_turnaround = crate::util::stats::mean(&turnarounds);
+        let st_busy_mean = self
+            .registry
+            .series
+            .get("st.busy")
+            .map(|s| s.time_weighted_mean(self.cfg.horizon))
+            .unwrap_or(0.0);
+        let label = match self.cfg.configuration {
+            Configuration::Static => format!("SC-{}", self.cfg.st_nodes + self.cfg.ws_nodes),
+            Configuration::Dynamic => format!("DC-{}", self.cfg.total_nodes),
+        };
+        let cluster_nodes = self.rps.ledger().total();
+        self.registry.counter("jobs.completed").add(completed);
+        self.registry.counter("jobs.killed").add(killed);
+        RunResult {
+            label,
+            cluster_nodes,
+            submitted: self.jobs.len(),
+            completed,
+            killed,
+            in_flight: self.st.in_flight(),
+            avg_turnaround,
+            benefit_end_user: if avg_turnaround > 0.0 { 1.0 / avg_turnaround } else { 0.0 },
+            ws_shortage_node_secs: self.ws.shortage_node_secs,
+            force_returns: self.rps.force_returns,
+            forced_nodes: self.rps.forced_nodes,
+            st_busy_mean,
+            events,
+            registry: self.registry,
+        }
+    }
+
+    // ---- event bodies ------------------------------------------------------
+
+    fn on_submit(&mut self, idx: usize, now: SimTime, sched: &mut Schedule<Ev>) {
+        let job = self.jobs[idx].clone();
+        self.st.submit(job);
+        self.run_scheduler(now, sched);
+    }
+
+    fn on_finish(&mut self, job_id: u64, now: SimTime, sched: &mut Schedule<Ev>) {
+        if self.st.finish(job_id, now) {
+            self.run_scheduler(now, sched);
+        }
+    }
+
+    fn on_ws_demand(&mut self, sample: usize, now: SimTime, sched: &mut Schedule<Ev>) {
+        let target = self.ws_demand[sample];
+        match self.ws.set_demand(target, now) {
+            WsAction::None => {}
+            WsAction::Release(n) => {
+                self.ws.release(n);
+                self.rps.ws_release(n);
+                // idle flows to ST immediately (cooperative) or up to its
+                // partition (static)
+                let grant = self.rps.provision_idle_to_st();
+                if grant > 0 {
+                    self.st.grant(grant);
+                    self.run_scheduler(now, sched);
+                }
+            }
+            WsAction::Request(n) => {
+                let d = self.rps.ws_request(n);
+                if d.from_free > 0 {
+                    self.ws.grant(d.from_free);
+                }
+                if d.force_from_st > 0 {
+                    let killed = self.st.force_return(d.force_from_st, now);
+                    self.registry.counter("force.kills").add(killed.len() as u64);
+                    self.rps.complete_force(d.force_from_st);
+                    // reallocation takes seconds (§III-D): kill + rewire
+                    sched.after(self.cfg.realloc_delay, Ev::GrantArrive {
+                        nodes: d.force_from_st,
+                    });
+                }
+                if d.denied > 0 {
+                    // only reachable under the non-cooperative baselines
+                    self.registry.counter("ws.denied").add(d.denied);
+                }
+            }
+        }
+        self.sample_pools(now);
+    }
+
+    fn on_grant_arrive(&mut self, nodes: u64, now: SimTime) {
+        self.ws.grant(nodes);
+        self.sample_pools(now);
+    }
+
+    /// Run the ST scheduler and schedule completions for started jobs.
+    fn run_scheduler(&mut self, now: SimTime, sched: &mut Schedule<Ev>) {
+        for started in self.st.schedule(now) {
+            sched.at(started.finish_at, Ev::Finish { job_id: started.job_id });
+        }
+        self.sample_pools(now);
+    }
+
+    fn sample_pools(&mut self, now: SimTime) {
+        let busy = (self.st.pool() - self.st.idle()) as f64;
+        self.registry.series("st.busy").push(now, busy);
+        self.registry.series("st.pool").push(now, self.st.pool() as f64);
+        self.registry.series("ws.holding").push(now, self.ws.holding() as f64);
+    }
+}
+
+struct Handler<'a> {
+    sim: &'a mut ConsolidationSim,
+}
+
+impl EventHandler<Ev> for Handler<'_> {
+    fn handle(&mut self, ev: Ev, sched: &mut Schedule<Ev>) {
+        let now = sched.now();
+        match ev {
+            Ev::Submit(idx) => self.sim.on_submit(idx, now, sched),
+            Ev::Finish { job_id } => self.sim.on_finish(job_id, now, sched),
+            Ev::WsDemand { sample } => self.sim.on_ws_demand(sample, now, sched),
+            Ev::GrantArrive { nodes } => self.sim.on_grant_arrive(nodes, now),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn tiny_jobs() -> Vec<Job> {
+        // 4 jobs on a small machine
+        vec![
+            Job { id: 1, submit: 0, size: 4, runtime: 100, requested: 200 },
+            Job { id: 2, submit: 10, size: 2, runtime: 50, requested: 100 },
+            Job { id: 3, submit: 20, size: 8, runtime: 100, requested: 200 },
+            Job { id: 4, submit: 500, size: 1, runtime: 10, requested: 20 },
+        ]
+    }
+
+    fn tiny_cfg(total: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::dynamic(total);
+        cfg.horizon = 2000;
+        cfg.web.target_peak_instances = 4;
+        cfg.ws_sample_period = 20;
+        cfg
+    }
+
+    #[test]
+    fn all_jobs_complete_with_flat_ws_demand() {
+        let cfg = tiny_cfg(16);
+        let ws_demand = vec![1u64; 100];
+        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run();
+        assert_eq!(res.completed, 4);
+        assert_eq!(res.killed, 0);
+        assert_eq!(res.in_flight, 0);
+        assert!(res.avg_turnaround >= 10.0);
+        assert_eq!(res.ws_shortage_node_secs, 0);
+    }
+
+    #[test]
+    fn ws_spike_forces_kills_when_cluster_tight() {
+        // cluster of 10: jobs occupy everything; WS spikes to 8 at t=40
+        let cfg = tiny_cfg(10);
+        let mut ws_demand = vec![1u64; 100];
+        for d in ws_demand.iter_mut().skip(2) {
+            *d = 8;
+        }
+        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run();
+        assert!(res.killed > 0, "spike must kill jobs: {res:?}");
+        assert!(res.force_returns > 0);
+        // WS always satisfied (within a sample period) under cooperation
+        assert_eq!(res.registry.counter_value("ws.denied"), 0);
+    }
+
+    #[test]
+    fn static_configuration_never_kills() {
+        let mut cfg = ExperimentConfig::static_paper();
+        cfg.horizon = 2000;
+        cfg.st_nodes = 12;
+        cfg.ws_nodes = 8;
+        let mut ws_demand = vec![1u64; 100];
+        ws_demand[50] = 8;
+        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run();
+        assert_eq!(res.killed, 0);
+        assert_eq!(res.force_returns, 0);
+        assert_eq!(res.completed, 4);
+    }
+
+    #[test]
+    fn smaller_cluster_worse_or_equal_completion() {
+        let mk = |total| {
+            let cfg = tiny_cfg(total);
+            ConsolidationSim::new(cfg, tiny_jobs(), vec![1u64; 100]).run()
+        };
+        let big = mk(16);
+        let small = mk(6);
+        assert!(small.completed <= big.completed);
+        assert!(small.avg_turnaround >= big.avg_turnaround);
+    }
+
+    #[test]
+    fn ws_release_returns_nodes_to_st() {
+        let cfg = tiny_cfg(16);
+        // WS starts at 4 and drops to 1 at sample 2
+        let mut ws_demand = vec![4u64; 100];
+        for d in ws_demand.iter_mut().skip(2) {
+            *d = 1;
+        }
+        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run();
+        assert_eq!(res.completed, 4);
+        // ST pool must have grown after the release
+        let pool_max = res.registry.series["st.pool"].max();
+        assert!(pool_max >= 15.0, "pool_max={pool_max}");
+    }
+}

@@ -1,0 +1,281 @@
+//! Realtime (wall-clock) mode: the same RPS / ST / WS logic running as
+//! live services on the message bus, with the WS autoscaler driven by a
+//! request-rate trace replayed at a configurable speedup — the shape of
+//! the paper's testbed run (§III-C), minus the Xen boxes.
+//!
+//! This is the serve path `phoenixd serve` and the predictive-scaling
+//! example use; the figure experiments use the virtual-time
+//! [`super::ConsolidationSim`] instead.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use crate::config::ExperimentConfig;
+use crate::provision::{PolicyKind, Rps};
+use crate::services::{Bus, Ctx, Msg, Service, ServiceId};
+use crate::stcms::StServer;
+use crate::trace::web_synth::RateSeries;
+use crate::workload::Job;
+use crate::wscms::autoscaler::utilization;
+use crate::wscms::{WsAction, WsServer};
+
+/// The scaling brain injected into the WS service: maps (avg_util, rate)
+/// to an instance target. Wraps either the reactive rule or the PJRT
+/// forecaster.
+pub type ScalerFn = Box<dyn FnMut(f64, f64) -> u64>;
+
+/// Run statistics shared out of the boxed services (the bus owns the
+/// services; the report reads these after the loop).
+#[derive(Debug, Default)]
+struct Shared {
+    completed: Cell<u64>,
+    killed: Cell<u64>,
+    ws_peak: Cell<u64>,
+    ws_shortage: Cell<u64>,
+}
+
+struct RpsSvc {
+    rps: Rps,
+    st: ServiceId,
+    ws: ServiceId,
+}
+
+impl Service for RpsSvc {
+    fn name(&self) -> &str {
+        "resource-provision-service"
+    }
+
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            Msg::WsClaim { nodes } => {
+                let d = self.rps.ws_request(nodes);
+                if d.from_free > 0 {
+                    ctx.send(self.ws, Msg::WsGrant { nodes: d.from_free });
+                }
+                if d.force_from_st > 0 {
+                    ctx.send(self.st, Msg::ForceReturn { nodes: d.force_from_st });
+                }
+            }
+            Msg::WsRelease { nodes } => {
+                self.rps.ws_release(nodes);
+                let grant = self.rps.provision_idle_to_st();
+                if grant > 0 {
+                    ctx.send(self.st, Msg::StGrant { nodes: grant });
+                }
+            }
+            Msg::StReleased { nodes, .. } => {
+                self.rps.complete_force(nodes);
+                ctx.send(self.ws, Msg::WsGrant { nodes });
+            }
+            _ => {}
+        }
+    }
+}
+
+struct StSvc {
+    st: StServer,
+    jobs: Vec<Job>,
+    next_job: usize,
+    /// (finish_time, job_id) pending completions, processed on ticks.
+    finishes: Vec<(u64, u64)>,
+    shared: Rc<Shared>,
+}
+
+impl Service for StSvc {
+    fn name(&self) -> &str {
+        "st-server"
+    }
+
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            Msg::StGrant { nodes } => {
+                self.st.grant(nodes);
+                self.schedule(ctx.now());
+            }
+            Msg::ForceReturn { nodes } => {
+                let killed = self.st.force_return(nodes, ctx.now());
+                self.shared.killed.set(self.shared.killed.get() + killed.len() as u64);
+                let sender = ctx.sender();
+                ctx.send(sender, Msg::StReleased { nodes, killed: killed.len() as u64 });
+            }
+            Msg::Tick { now } => {
+                // retire due completions
+                let mut done = Vec::new();
+                self.finishes.retain(|&(t, id)| {
+                    if t <= now {
+                        done.push(id);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                for id in done {
+                    if self.st.finish(id, now) {
+                        self.shared.completed.set(self.shared.completed.get() + 1);
+                    }
+                }
+                // admit newly arrived jobs
+                while self.next_job < self.jobs.len() && self.jobs[self.next_job].submit <= now {
+                    self.st.submit(self.jobs[self.next_job].clone());
+                    self.next_job += 1;
+                }
+                self.schedule(now);
+            }
+            _ => {}
+        }
+    }
+}
+
+impl StSvc {
+    fn schedule(&mut self, now: u64) {
+        for s in self.st.schedule(now) {
+            self.finishes.push((s.finish_at, s.job_id));
+        }
+    }
+}
+
+struct WsSvc {
+    ws: WsServer,
+    scaler: ScalerFn,
+    rates: RateSeries,
+    cap: f64,
+    rps: ServiceId,
+    shared: Rc<Shared>,
+}
+
+impl Service for WsSvc {
+    fn name(&self) -> &str {
+        "ws-server"
+    }
+
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            Msg::Tick { now } => {
+                let rate = self.rates.at(now);
+                let held = self.ws.holding().max(1);
+                let util = utilization(rate, held, self.cap);
+                let target = (self.scaler)(util, rate);
+                self.shared.ws_peak.set(self.shared.ws_peak.get().max(target));
+                self.shared.ws_shortage.set(self.ws.shortage_node_secs);
+                match self.ws.set_demand(target, now) {
+                    WsAction::None => {}
+                    WsAction::Release(n) => {
+                        self.ws.release(n);
+                        ctx.send(self.rps, Msg::WsRelease { nodes: n });
+                    }
+                    WsAction::Request(n) => ctx.send(self.rps, Msg::WsClaim { nodes: n }),
+                }
+            }
+            Msg::WsGrant { nodes } => self.ws.grant(nodes),
+            _ => {}
+        }
+    }
+}
+
+/// Summary of a realtime run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub sim_seconds: u64,
+    pub wall: Duration,
+    pub ticks: u64,
+    pub messages: u64,
+    pub jobs_completed: u64,
+    pub jobs_killed: u64,
+    pub ws_peak_demand: u64,
+    pub ws_shortage_node_secs: u64,
+}
+
+/// Run the live coordinator for `sim_seconds` of trace time at `speedup`×
+/// wall clock (speedup 0 = as fast as possible).
+pub fn serve(
+    cfg: &ExperimentConfig,
+    jobs: Vec<Job>,
+    rates: RateSeries,
+    scaler: ScalerFn,
+    sim_seconds: u64,
+    speedup: u64,
+) -> ServeReport {
+    let mut bus = Bus::new();
+    let total = cfg.total_nodes;
+    // ids are assigned in registration order: rps=0, st=1, ws=2
+    let rps_id = 0;
+    let st_id = 1;
+    let ws_id = 2;
+    let mut rps = Rps::new(total, PolicyKind::Cooperative);
+    let (_, st0) = rps.bootstrap(0);
+    let cap = cfg.web.instance_capacity_rps;
+
+    let shared = Rc::new(Shared::default());
+    bus.register(Box::new(RpsSvc { rps, st: st_id, ws: ws_id }));
+    let mut st_server = StServer::new(cfg.scheduler, cfg.kill_order);
+    st_server.grant(st0);
+    bus.register(Box::new(StSvc {
+        st: st_server,
+        jobs,
+        next_job: 0,
+        finishes: Vec::new(),
+        shared: Rc::clone(&shared),
+    }));
+    bus.register(Box::new(WsSvc {
+        ws: WsServer::new(),
+        scaler,
+        rates,
+        cap,
+        rps: rps_id,
+        shared: Rc::clone(&shared),
+    }));
+
+    let started = Instant::now();
+    let tick_step = cfg.ws_sample_period;
+    let mut ticks = 0;
+    let mut now = 0u64;
+    while now <= sim_seconds {
+        bus.set_now(now);
+        bus.post(ws_id, Msg::Tick { now });
+        bus.post(st_id, Msg::Tick { now });
+        bus.run_until_quiescent(10_000);
+        ticks += 1;
+        now += tick_step;
+        if speedup > 0 {
+            let wall_target = Duration::from_secs_f64(now as f64 / speedup as f64);
+            let elapsed = started.elapsed();
+            if wall_target > elapsed {
+                std::thread::sleep(wall_target - elapsed);
+            }
+        }
+    }
+
+    ServeReport {
+        sim_seconds,
+        wall: started.elapsed(),
+        ticks,
+        messages: bus.delivered,
+        jobs_completed: shared.completed.get(),
+        jobs_killed: shared.killed.get(),
+        ws_peak_demand: shared.ws_peak.get(),
+        ws_shortage_node_secs: shared.ws_shortage.get(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::wscms::autoscaler::Reactive;
+
+    #[test]
+    fn serve_runs_and_routes_messages() {
+        let mut cfg = ExperimentConfig::dynamic(64);
+        cfg.ws_sample_period = 20;
+        let rates = RateSeries { sample_period: 20, rates: vec![200.0; 100] };
+        let jobs = vec![Job { id: 1, submit: 0, size: 8, runtime: 60, requested: 120 }];
+        let mut reactive = Reactive::new(64);
+        let scaler: ScalerFn = Box::new(move |util, _| reactive.decide(util));
+        let report = serve(&cfg, jobs, rates, scaler, 400, 0);
+        assert_eq!(report.ticks, 21);
+        assert!(report.messages > 40, "messages={}", report.messages);
+        assert_eq!(report.jobs_completed, 1);
+        assert!(report.ws_peak_demand >= 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! **Figs. 7 & 8** — the consolidation sweep: static configuration
+//! (SC = 144 + 64 dedicated) versus dynamic configuration (DC = one shared
+//! cluster) at sizes 200, 190, 180, 170, 160, 150, reporting completed
+//! jobs, average turnaround, and killed jobs over the two-week traces.
+
+use crate::config::{Configuration, ExperimentConfig};
+use crate::coordinator::{ConsolidationSim, RunResult};
+use crate::trace::csv::Table;
+use crate::trace::hpc_synth;
+use crate::workload::Job;
+
+use super::fig5;
+
+/// The paper's DC sweep sizes.
+pub const PAPER_SIZES: [u64; 6] = [200, 190, 180, 170, 160, 150];
+
+/// Build the shared inputs for one run: the HPC job trace and the WS
+/// node-demand series (autoscaler output, capped at the WS ceiling the
+/// configuration allows).
+pub fn build_inputs(cfg: &ExperimentConfig) -> (Vec<Job>, Vec<u64>) {
+    let jobs = hpc_synth::generate(&cfg.hpc);
+    let ws_cap = match cfg.configuration {
+        Configuration::Static => cfg.ws_nodes,
+        Configuration::Dynamic => cfg.total_nodes,
+    };
+    let demand = fig5::demand_series(&cfg.web, ws_cap);
+    (jobs, demand)
+}
+
+/// Run one configuration end to end.
+pub fn run_one(cfg: ExperimentConfig) -> RunResult {
+    cfg.validate().expect("invalid experiment config");
+    let (jobs, demand) = build_inputs(&cfg);
+    ConsolidationSim::new(cfg, jobs, demand).run()
+}
+
+/// The full Fig. 7/8 sweep: SC first, then DC at each size.
+/// Jobs and the WS demand series are identical across runs (same seeds),
+/// exactly like replaying the same traces against each configuration.
+///
+/// Perf note (EXPERIMENTS.md §Perf): trace generation dominates a single
+/// run (~8 ms of the ~9 ms), so the sweep generates each distinct trace
+/// once and replays it — the demand series depends only on the autoscaler
+/// cap, which is identical across configurations whenever the cap exceeds
+/// the calibrated 64-instance peak.
+pub fn sweep(base: &ExperimentConfig, sizes: &[u64]) -> Vec<RunResult> {
+    let mut results = Vec::with_capacity(sizes.len() + 1);
+    let jobs = hpc_synth::generate(&base.hpc);
+    // The autoscaler trajectory only depends on the cap when the cap binds;
+    // compute the uncapped series once and reuse it for every cap above
+    // its peak (all the paper's sizes — the calibrated peak is 64).
+    let uncapped = fig5::demand_series(&base.web, u64::MAX);
+    let uncapped_peak = uncapped.iter().copied().max().unwrap_or(0);
+    let demand_for = |cap: u64, web: &crate::trace::web_synth::WebTraceConfig| {
+        if cap >= uncapped_peak {
+            uncapped.clone()
+        } else {
+            fig5::demand_series(web, cap)
+        }
+    };
+
+    let mut sc = base.clone();
+    sc.configuration = Configuration::Static;
+    sc.total_nodes = sc.st_nodes + sc.ws_nodes;
+    let d = demand_for(sc.ws_nodes, &sc.web);
+    results.push(ConsolidationSim::new(sc, jobs.clone(), d).run());
+
+    for &n in sizes {
+        let mut dc = base.clone();
+        dc.configuration = Configuration::Dynamic;
+        dc.total_nodes = n;
+        let d = demand_for(n, &dc.web);
+        results.push(ConsolidationSim::new(dc, jobs.clone(), d).run());
+    }
+    results
+}
+
+/// Fig. 7 table: completed jobs + average turnaround per cluster size.
+pub fn fig7_table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(&["cluster_nodes", "completed_jobs", "avg_turnaround_s"]);
+    for r in results {
+        t.push(vec![r.cluster_nodes as f64, r.completed as f64, r.avg_turnaround]);
+    }
+    t
+}
+
+/// Fig. 8 table: killed jobs per cluster size.
+pub fn fig8_table(results: &[RunResult]) -> Table {
+    let mut t = Table::new(&["cluster_nodes", "killed_jobs"]);
+    for r in results {
+        t.push(vec![r.cluster_nodes as f64, r.killed as f64]);
+    }
+    t
+}
+
+/// The paper's headline check (§III-D): find the smallest DC size that
+/// still beats SC on *both* benefits. Returns (size, cost_ratio).
+pub fn headline(results: &[RunResult]) -> Option<(u64, f64)> {
+    let sc = results.iter().find(|r| r.label.starts_with("SC"))?;
+    results
+        .iter()
+        .filter(|r| r.label.starts_with("DC"))
+        .filter(|r| r.completed >= sc.completed && r.avg_turnaround <= sc.avg_turnaround)
+        .map(|r| (r.cluster_nodes, r.cluster_nodes as f64 / sc.cluster_nodes as f64))
+        .min_by_key(|&(n, _)| n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timefmt::DAY;
+
+    /// A scaled-down config so tests stay fast: 2 days, ~400 jobs.
+    pub fn fast_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.horizon = 2 * DAY;
+        cfg.hpc.horizon = cfg.horizon;
+        cfg.web.horizon = cfg.horizon;
+        cfg.hpc.num_jobs = 400;
+        cfg
+    }
+
+    #[test]
+    fn sc_and_dc_use_same_traces() {
+        let cfg = fast_cfg();
+        let mut sc = cfg.clone();
+        sc.configuration = Configuration::Static;
+        let (jobs_a, _) = build_inputs(&sc);
+        let mut dc = cfg.clone();
+        dc.configuration = Configuration::Dynamic;
+        dc.total_nodes = 160;
+        let (jobs_b, _) = build_inputs(&dc);
+        assert_eq!(jobs_a, jobs_b);
+    }
+
+    #[test]
+    fn dc_160_beats_sc_on_both_benefits() {
+        // the paper's §III-D headline claim, on the full two-week traces
+        // (the virtual-time simulator covers the full config in ~50 ms)
+        let cfg = ExperimentConfig::default();
+        let results = sweep(&cfg, &[160]);
+        let sc = &results[0];
+        let dc = &results[1];
+        assert!(
+            dc.completed >= sc.completed,
+            "DC-160 completed {} < SC {}",
+            dc.completed,
+            sc.completed
+        );
+        assert!(
+            dc.avg_turnaround <= sc.avg_turnaround,
+            "DC-160 turnaround {} > SC {}",
+            dc.avg_turnaround,
+            sc.avg_turnaround
+        );
+        assert_eq!(sc.killed, 0, "SC must never kill");
+        // cost ratio: 160/208 = 76.9 % — the paper's number
+        assert!((dc.cluster_nodes as f64 / sc.cluster_nodes as f64 - 0.769).abs() < 0.001);
+    }
+
+    #[test]
+    fn fast_config_is_directionally_consistent() {
+        // scaled-down sanity: turnaround benefit holds even on 2-day runs
+        let cfg = fast_cfg();
+        let results = sweep(&cfg, &[160]);
+        let (sc, dc) = (&results[0], &results[1]);
+        assert!(dc.avg_turnaround <= sc.avg_turnaround);
+        // completions stay within 2 % of SC on the short horizon
+        assert!(dc.completed as f64 >= sc.completed as f64 * 0.98);
+    }
+
+    #[test]
+    fn ws_never_starved_under_cooperation() {
+        let cfg = fast_cfg();
+        let results = sweep(&cfg, &[160, 150]);
+        for r in &results {
+            assert_eq!(
+                r.registry.counter_value("ws.denied"),
+                0,
+                "{}: WS denied nodes",
+                r.label
+            );
+        }
+    }
+
+    #[test]
+    fn tables_align_with_results() {
+        let cfg = fast_cfg();
+        let results = sweep(&cfg, &[180]);
+        let t7 = fig7_table(&results);
+        let t8 = fig8_table(&results);
+        assert_eq!(t7.rows.len(), 2);
+        assert_eq!(t8.rows.len(), 2);
+        assert_eq!(t7.rows[0][0], results[0].cluster_nodes as f64);
+        assert_eq!(t8.rows[1][1], results[1].killed as f64);
+    }
+}

@@ -1,0 +1,110 @@
+//! **Fig. 5** — "The resource consumption of Web service trace in two
+//! weeks": the WorldCup-like request-rate trace swept through the paper's
+//! reactive autoscaler (§III-C rule) yields the VM-demand series whose
+//! peak is 64 instances.
+
+use crate::trace::csv::Table;
+use crate::trace::web_synth::{self, WebTraceConfig};
+use crate::util::timefmt::HOUR;
+use crate::wscms::serving;
+
+/// Result of the Fig.-5 experiment.
+#[derive(Debug)]
+pub struct Fig5 {
+    /// (hours, instances) series — the figure itself.
+    pub series: Vec<(f64, u64)>,
+    pub peak_instances: u64,
+    pub mean_instances: f64,
+    /// Demand at the p50 sample — the "normal load".
+    pub normal_instances: f64,
+    pub peak_rate_rps: f64,
+    pub samples: usize,
+}
+
+/// Run Fig. 5 with the given web-trace config.
+pub fn run(cfg: &WebTraceConfig) -> Fig5 {
+    let rates = web_synth::generate(cfg);
+    let (demand, _utils) = serving::autoscale_series(&rates, cfg.instance_capacity_rps, u64::MAX);
+
+    let period = cfg.sample_period as f64;
+    let series: Vec<(f64, u64)> = demand
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| (i as f64 * period / HOUR as f64, d))
+        .collect();
+    let peak = *demand.iter().max().unwrap_or(&0);
+    let mean = demand.iter().sum::<u64>() as f64 / demand.len().max(1) as f64;
+    let mut sorted = demand.clone();
+    sorted.sort_unstable();
+    let normal = sorted[sorted.len() / 2] as f64;
+    Fig5 {
+        series,
+        peak_instances: peak,
+        mean_instances: mean,
+        normal_instances: normal,
+        peak_rate_rps: rates.peak(),
+        samples: demand.len(),
+    }
+}
+
+/// The instance-demand series alone (input to the consolidation sim).
+pub fn demand_series(cfg: &WebTraceConfig, max_instances: u64) -> Vec<u64> {
+    let rates = web_synth::generate(cfg);
+    serving::autoscale_series(&rates, cfg.instance_capacity_rps, max_instances).0
+}
+
+/// Export the figure as CSV (downsampled to keep the file readable).
+pub fn to_table(fig: &Fig5, stride: usize) -> Table {
+    let mut t = Table::new(&["hours", "instances"]);
+    for (i, &(h, d)) in fig.series.iter().enumerate() {
+        if i % stride.max(1) == 0 {
+            t.push(vec![h, d as f64]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_peak() {
+        let fig = run(&WebTraceConfig::default());
+        // paper: "the peak resource demand is 64 virtual machines"
+        assert!(
+            (60..=66).contains(&fig.peak_instances),
+            "peak={} (expected ≈64)",
+            fig.peak_instances
+        );
+        // two weeks at 20 s sampling
+        assert_eq!(fig.samples, 60_480);
+    }
+
+    #[test]
+    fn peak_to_normal_ratio_high() {
+        let fig = run(&WebTraceConfig::default());
+        assert!(
+            fig.peak_instances as f64 / fig.normal_instances.max(1.0) > 4.0,
+            "peak={} normal={}",
+            fig.peak_instances,
+            fig.normal_instances
+        );
+    }
+
+    #[test]
+    fn table_export_has_both_columns() {
+        let fig = run(&WebTraceConfig::default());
+        let t = to_table(&fig, 180);
+        assert_eq!(t.columns, vec!["hours", "instances"]);
+        assert!(t.rows.len() > 100);
+        let inst = t.col("instances").unwrap();
+        assert!(inst.iter().cloned().fold(0.0, f64::max) >= 50.0);
+    }
+
+    #[test]
+    fn demand_series_respects_cap() {
+        let d = demand_series(&WebTraceConfig::default(), 32);
+        assert!(*d.iter().max().unwrap() <= 32);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment harnesses: one module per paper figure, plus ablations over
+//! the design choices and the report writers. See DESIGN.md §4 for the
+//! experiment index.
+
+pub mod ablations;
+pub mod consolidation;
+pub mod fig5;
+pub mod report;
+pub mod sensitivity;

@@ -1,0 +1,102 @@
+//! Report writers: render run results as aligned text / markdown tables
+//! and CSV files under `out/`.
+
+use crate::coordinator::RunResult;
+use crate::trace::csv::Table;
+
+/// Markdown table over the sweep results (the Fig. 7 + Fig. 8 columns the
+//  paper reports, side by side).
+pub fn sweep_markdown(results: &[RunResult]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| config | nodes | completed | killed | avg turnaround (s) | 1/turnaround (1e-5) | \
+         WS shortage (node·s) | force returns |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|\n");
+    for r in results {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {:.0} | {:.3} | {} | {} |\n",
+            r.label,
+            r.cluster_nodes,
+            r.completed,
+            r.killed,
+            r.avg_turnaround,
+            r.benefit_end_user * 1e5,
+            r.ws_shortage_node_secs,
+            r.force_returns,
+        ));
+    }
+    out
+}
+
+/// Plain aligned text (CLI output).
+pub fn sweep_text(results: &[RunResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8} {:>6} {:>10} {:>7} {:>16} {:>14} {:>13}\n",
+        "config", "nodes", "completed", "killed", "turnaround(s)", "1/ta(1e-5)", "ws-short"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:<8} {:>6} {:>10} {:>7} {:>16.0} {:>14.3} {:>13}\n",
+            r.label,
+            r.cluster_nodes,
+            r.completed,
+            r.killed,
+            r.avg_turnaround,
+            r.benefit_end_user * 1e5,
+            r.ws_shortage_node_secs,
+        ));
+    }
+    out
+}
+
+/// Ensure `out/` exists and save a table.
+pub fn save_table(t: &Table, name: &str) -> anyhow::Result<String> {
+    std::fs::create_dir_all("out")?;
+    let path = format!("out/{name}.csv");
+    t.save(&path)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Registry;
+
+    fn result(label: &str, nodes: u64, completed: u64, killed: u64) -> RunResult {
+        RunResult {
+            label: label.to_string(),
+            cluster_nodes: nodes,
+            submitted: 2672,
+            completed,
+            killed,
+            in_flight: 10,
+            avg_turnaround: 5000.0,
+            benefit_end_user: 1.0 / 5000.0,
+            ws_shortage_node_secs: 0,
+            force_returns: 3,
+            forced_nodes: 40,
+            st_busy_mean: 120.0,
+            events: 9999,
+            registry: Registry::new(),
+        }
+    }
+
+    #[test]
+    fn markdown_has_all_rows() {
+        let rows = vec![result("SC-208", 208, 2400, 0), result("DC-160", 160, 2450, 12)];
+        let md = sweep_markdown(&rows);
+        assert!(md.contains("SC-208"));
+        assert!(md.contains("DC-160"));
+        assert_eq!(md.lines().count(), 4);
+    }
+
+    #[test]
+    fn text_is_aligned() {
+        let rows = vec![result("SC-208", 208, 2400, 0)];
+        let txt = sweep_text(&rows);
+        assert!(txt.contains("completed"));
+        assert!(txt.contains("2400"));
+    }
+}

@@ -1,0 +1,33 @@
+//! Phoenix Cloud — consolidating HPC and Web-service loads on a shared cluster.
+//!
+//! Reproduction of Zhan et al., *"Phoenix Cloud: Consolidating Different
+//! Computing Loads on Shared Cluster System for Large Organization"* (2009).
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   common service framework, the Resource Provision Service and its
+//!   cooperative policy, ST CMS (batch scheduling), WS CMS (autoscaling +
+//!   load balancing), plus every substrate they need (event simulator,
+//!   cluster ledger, trace generators, metrics, config, CLI).
+//! * **L2/L1 (python/, build-time)** — the predictive-autoscaler forecaster
+//!   (JAX) over a Pallas window-statistics kernel, AOT-lowered to HLO text.
+//! * **runtime** — loads `artifacts/*.hlo.txt` via the PJRT CPU client and
+//!   executes them from the WS-CMS scaling loop.
+//!
+//! See DESIGN.md for the system inventory and the experiment index
+//! (Fig. 5 / Fig. 7 / Fig. 8), and EXPERIMENTS.md for paper-vs-measured.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod provision;
+pub mod runtime;
+pub mod services;
+pub mod sim;
+pub mod stcms;
+pub mod trace;
+pub mod util;
+pub mod workload;
+pub mod wscms;

@@ -1,0 +1,345 @@
+//! `phoenixd` — the Phoenix Cloud launcher.
+//!
+//! ```text
+//! phoenixd fig5   [--seed N] [--out out/fig5.csv]
+//! phoenixd fig7   [--sizes 200,190,180,170,160,150] [--load 0.85]
+//! phoenixd fig8   [--sizes ...]
+//! phoenixd sweep  [--sizes ...]            # fig7 + fig8 + headline
+//! phoenixd ablate [--what kill|sched|scaler]
+//! phoenixd serve  [--nodes 160] [--secs 3600] [--speedup 100] [--predictive]
+//! phoenixd tracegen --kind hpc|web --out FILE
+//! phoenixd validate [--config FILE]        # config check
+//! ```
+
+use anyhow::{bail, Result};
+
+use phoenix_cloud::config::ExperimentConfig;
+use phoenix_cloud::coordinator::realtime::{self, ScalerFn};
+use phoenix_cloud::experiments::{ablations, consolidation, fig5, report, sensitivity};
+use phoenix_cloud::runtime::ForecastEngine;
+use phoenix_cloud::trace::{hpc_synth, swf, web_synth, worldcup};
+use phoenix_cloud::util::cli::Args;
+use phoenix_cloud::util::logger;
+use phoenix_cloud::util::plot;
+use phoenix_cloud::wscms::autoscaler::Reactive;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn base_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(seed) = args.get("seed") {
+        let seed: u64 = seed.parse().map_err(|_| anyhow::anyhow!("--seed must be integer"))?;
+        cfg.hpc.seed = seed;
+        cfg.web.seed = seed ^ 0x77;
+    }
+    cfg.hpc.target_load = args.get_f64("load", cfg.hpc.target_load)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["verbose", "predictive", "help"])?;
+    logger::init(if args.has("verbose") { "debug" } else { "info" });
+
+    match args.subcommand.as_deref() {
+        Some("fig5") => cmd_fig5(&args),
+        Some("fig7") | Some("fig8") | Some("sweep") => {
+            cmd_sweep(&args, args.subcommand.as_deref().unwrap())
+        }
+        Some("ablate") => cmd_ablate(&args),
+        Some("sense") => cmd_sense(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("tracegen") => cmd_tracegen(&args),
+        Some("validate") => {
+            let cfg = base_config(&args)?;
+            println!("config OK: {cfg:#?}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try --help)"),
+        None => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "phoenixd — Phoenix Cloud (paper reproduction)\n\
+subcommands:\n  \
+fig5      Web-service resource consumption over two weeks (paper Fig. 5)\n  \
+fig7      completed jobs + turnaround vs cluster size (paper Fig. 7)\n  \
+fig8      killed jobs vs cluster size (paper Fig. 8)\n  \
+sweep     fig7 + fig8 + the headline consolidation claim\n  \
+ablate    design ablations (--what kill|sched|scaler)\n  \
+sense     headline sensitivity across seeds and load band (--seeds N)\n  \
+serve     realtime coordinator on a live trace (--predictive for PJRT)\n  \
+tracegen  emit a synthetic trace (--kind hpc|web)\n  \
+validate  parse + validate a config file\n\
+common flags: --config FILE --seed N --load F --verbose";
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    // with --worldcup DIR the real archive replaces the synthetic trace
+    let fig = match args.get("worldcup") {
+        Some(dir) => {
+            let rates = worldcup::load_dir(dir, cfg.web.sample_period, 2.22)?;
+            println!("using real WorldCup records from {dir} (scale 2.22)");
+            let (demand, _) = phoenix_cloud::wscms::serving::autoscale_series(
+                &rates,
+                cfg.web.instance_capacity_rps,
+                u64::MAX,
+            );
+            let series: Vec<(f64, u64)> = demand
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| (i as f64 * cfg.web.sample_period as f64 / 3600.0, d))
+                .collect();
+            let peak = *demand.iter().max().unwrap_or(&0);
+            let mean = demand.iter().sum::<u64>() as f64 / demand.len().max(1) as f64;
+            let mut sorted = demand.clone();
+            sorted.sort_unstable();
+            fig5::Fig5 {
+                series,
+                peak_instances: peak,
+                mean_instances: mean,
+                normal_instances: sorted[sorted.len() / 2] as f64,
+                peak_rate_rps: rates.peak(),
+                samples: demand.len(),
+            }
+        }
+        None => fig5::run(&cfg.web),
+    };
+    println!(
+        "Fig 5 — WS resource consumption ({} samples over two weeks)",
+        fig.samples
+    );
+    println!("  peak instances   : {}", fig.peak_instances);
+    println!("  mean instances   : {:.1}", fig.mean_instances);
+    println!("  normal (median)  : {:.0}", fig.normal_instances);
+    println!("  peak rate        : {:.0} rps", fig.peak_rate_rps);
+    let table = fig5::to_table(&fig, 30); // 10-minute resolution
+    let path = report::save_table(&table, "fig5")?;
+    println!("  series written   : {path}");
+    let pts: Vec<(f64, f64)> = fig.series.iter().map(|&(h, d)| (h, d as f64)).collect();
+    println!("\n{}", plot::line_chart(&pts, 96, 14, "instances vs hours (Fig 5)"));
+    Ok(())
+}
+
+fn cmd_sense(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let dc_size = args.get_u64("nodes", 160)?;
+    let n_seeds = args.get_u64("seeds", 5)? as usize;
+    let seeds: Vec<u64> = (0..n_seeds as u64).map(|i| cfg.hpc.seed ^ (i * 7919)).collect();
+    println!("headline sensitivity: DC-{dc_size} vs SC-208 across {n_seeds} seeds…");
+    let outs = sensitivity::across_seeds(&cfg, dc_size, &seeds);
+    println!(
+        "{:<12} {:>9} {:>9} {:>11} {:>11} {:>7} {:>6}",
+        "seed", "SC-compl", "DC-compl", "SC-ta(s)", "DC-ta(s)", "killed", "wins"
+    );
+    for o in &outs {
+        println!(
+            "{:<12} {:>9} {:>9} {:>11.0} {:>11.0} {:>7} {:>6}",
+            o.seed, o.sc_completed, o.dc_completed, o.sc_turnaround, o.dc_turnaround,
+            o.dc_killed, o.wins_both
+        );
+    }
+    let agg = sensitivity::aggregate(&outs);
+    println!(
+        "\nDC-{dc_size} wins both benefits in {}/{} seeds; completed delta {:+.0}±{:.0}; \
+         turnaround ratio {:.2}±{:.2}",
+        agg.wins,
+        agg.runs,
+        agg.completed_delta.mean(),
+        agg.completed_delta.stddev(),
+        agg.turnaround_ratio.mean(),
+        agg.turnaround_ratio.stddev()
+    );
+
+    // load band
+    let loads = [0.95, 1.0, 1.05, 1.07, 1.1, 1.15];
+    println!("\nload band (seed {}):", cfg.hpc.seed);
+    println!("{:<7} {:>9} {:>9} {:>8} {:>12}", "load", "SC-compl", "DC-compl", "killed", "DC/SC-ta");
+    for (load, sc, dc) in sensitivity::across_loads(&cfg, dc_size, &loads) {
+        println!(
+            "{:<7} {:>9} {:>9} {:>8} {:>12.2}",
+            load,
+            sc.completed,
+            dc.completed,
+            dc.killed,
+            dc.avg_turnaround / sc.avg_turnaround.max(1e-9)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, which: &str) -> Result<()> {
+    let cfg = base_config(args)?;
+    let sizes = args.get_u64_list("sizes", &consolidation::PAPER_SIZES)?;
+    let results = consolidation::sweep(&cfg, &sizes);
+    match which {
+        "fig7" => {
+            println!("Fig 7 — completed jobs & avg turnaround vs cluster size");
+            print!("{}", report::sweep_text(&results));
+            let rows: Vec<(String, f64)> =
+                results.iter().map(|r| (r.label.clone(), r.completed as f64)).collect();
+            println!("\n{}", plot::bar_chart(&rows, 48, "completed jobs"));
+            let rows: Vec<(String, f64)> =
+                results.iter().map(|r| (r.label.clone(), r.avg_turnaround)).collect();
+            println!("{}", plot::bar_chart(&rows, 48, "avg turnaround (s)"));
+            report::save_table(&consolidation::fig7_table(&results), "fig7")?;
+        }
+        "fig8" => {
+            println!("Fig 8 — killed jobs vs cluster size");
+            let rows: Vec<(String, f64)> =
+                results.iter().map(|r| (r.label.clone(), r.killed as f64)).collect();
+            println!("{}", plot::bar_chart(&rows, 48, ""));
+            report::save_table(&consolidation::fig8_table(&results), "fig8")?;
+        }
+        _ => {
+            println!("Consolidation sweep (SC baseline + DC sizes {sizes:?})");
+            print!("{}", report::sweep_text(&results));
+            report::save_table(&consolidation::fig7_table(&results), "fig7")?;
+            report::save_table(&consolidation::fig8_table(&results), "fig8")?;
+            match consolidation::headline(&results) {
+                Some((n, ratio)) => println!(
+                    "headline: DC-{n} ({:.1}% of SC cost) still beats SC on completed \
+                     jobs AND turnaround",
+                    ratio * 100.0
+                ),
+                None => println!("headline: no DC size beat SC on both benefits"),
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let cfg = {
+        let mut c = base_config(args)?;
+        c.configuration = phoenix_cloud::config::Configuration::Dynamic;
+        c.total_nodes = args.get_u64("nodes", 160)?;
+        c
+    };
+    match args.get_or("what", "kill") {
+        "kill" => {
+            println!("kill-order ablation at DC-{}", cfg.total_nodes);
+            for (name, r) in ablations::kill_orders(&cfg) {
+                println!(
+                    "  {:<10} killed={:<5} completed={:<5} turnaround={:.0}s",
+                    name, r.killed, r.completed, r.avg_turnaround
+                );
+            }
+        }
+        "sched" => {
+            println!("scheduler ablation at DC-{}", cfg.total_nodes);
+            for (name, r) in ablations::schedulers(&cfg) {
+                println!(
+                    "  {:<10} completed={:<5} turnaround={:.0}s killed={}",
+                    name, r.completed, r.avg_turnaround, r.killed
+                );
+            }
+        }
+        "scaler" => {
+            println!("autoscaler ablation (reactive vs predictive)");
+            for (name, peak, mean, short) in ablations::autoscalers(&cfg.web) {
+                println!(
+                    "  {:<10} peak={:<4} mean={:<7.2} overload-samples={}",
+                    name, peak, mean, short
+                );
+            }
+        }
+        other => bail!("unknown ablation '{other}' (kill|sched|scaler)"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = base_config(args)?;
+    cfg.configuration = phoenix_cloud::config::Configuration::Dynamic;
+    cfg.total_nodes = args.get_u64("nodes", 160)?;
+    let secs = args.get_u64("secs", 3600)?;
+    let speedup = args.get_u64("speedup", 0)?;
+    cfg.hpc.horizon = secs;
+    cfg.web.horizon = secs.max(cfg.web.sample_period * 64);
+
+    let jobs = hpc_synth::generate(&cfg.hpc);
+    let rates = web_synth::generate(&cfg.web);
+    let cap = cfg.web.instance_capacity_rps;
+
+    let scaler: ScalerFn = if args.has("predictive") {
+        let dir = args.get_or("artifacts", "artifacts");
+        if !ForecastEngine::artifacts_present(dir) {
+            bail!("--predictive needs AOT artifacts in '{dir}' (run `make artifacts`)");
+        }
+        let mut engine = ForecastEngine::load(dir)?;
+        println!("predictive autoscaler on PJRT ({})", engine.platform());
+        let w = engine.meta.window;
+        let mut util_hist = vec![0f32; w];
+        let mut rate_hist = vec![0f32; w];
+        Box::new(move |util, rate| {
+            util_hist.rotate_left(1);
+            *util_hist.last_mut().unwrap() = util as f32;
+            rate_hist.rotate_left(1);
+            *rate_hist.last_mut().unwrap() = (rate / cap) as f32;
+            let pred = engine.forecast_one(&util_hist, &rate_hist).unwrap_or(1.0);
+            (pred / 0.8).ceil().max(1.0) as u64
+        })
+    } else {
+        let mut reactive = Reactive::new(cfg.total_nodes);
+        Box::new(move |util, _| reactive.decide(util))
+    };
+
+    println!(
+        "serving DC-{} for {}s of trace time (speedup {}x)…",
+        cfg.total_nodes,
+        secs,
+        if speedup == 0 { "max".to_string() } else { speedup.to_string() }
+    );
+    let report = realtime::serve(&cfg, jobs, rates, scaler, secs, speedup);
+    println!("  ticks            : {}", report.ticks);
+    println!("  bus messages     : {}", report.messages);
+    println!("  jobs completed   : {}", report.jobs_completed);
+    println!("  jobs killed      : {}", report.jobs_killed);
+    println!("  WS peak demand   : {}", report.ws_peak_demand);
+    println!("  WS shortage      : {} node·s", report.ws_shortage_node_secs);
+    println!("  wall time        : {:.2?}", report.wall);
+    Ok(())
+}
+
+fn cmd_tracegen(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let out = args.get_or("out", "out/trace.txt").to_string();
+    std::fs::create_dir_all(
+        std::path::Path::new(&out).parent().unwrap_or(std::path::Path::new(".")),
+    )?;
+    match args.get_or("kind", "hpc") {
+        "hpc" => {
+            let jobs = hpc_synth::generate(&cfg.hpc);
+            std::fs::write(&out, swf::write(&jobs, 8))?;
+            println!(
+                "wrote {} jobs (offered load {:.2}) to {out}",
+                jobs.len(),
+                hpc_synth::offered_load(&jobs, cfg.hpc.machine_nodes, cfg.hpc.horizon)
+            );
+        }
+        "web" => {
+            let rates = web_synth::generate(&cfg.web);
+            let mut t = phoenix_cloud::trace::csv::Table::new(&["t_secs", "rps"]);
+            for (i, &r) in rates.rates.iter().enumerate() {
+                t.push(vec![(i as u64 * rates.sample_period) as f64, r]);
+            }
+            t.save(&out)?;
+            println!("wrote {} samples (peak {:.0} rps) to {out}", rates.rates.len(), rates.peak());
+        }
+        other => bail!("unknown trace kind '{other}' (hpc|web)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Metrics: counters, gauges, and time series, collected per run and
+//! rendered into the experiment reports. Lightweight by design — the
+//! simulator samples the ledger on every provisioning decision, so pushes
+//! must be cheap (Vec push, no locking; the simulator is single-threaded
+//! and the realtime coordinator keeps a registry per worker).
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+use crate::util::stats::OnlineStats;
+
+/// A named monotonically increasing counter.
+#[derive(Debug, Default, Clone)]
+pub struct Counter {
+    pub value: u64,
+}
+
+impl Counter {
+    pub fn inc(&mut self) {
+        self.value += 1;
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.value += n;
+    }
+}
+
+/// A time-stamped series of samples (step-wise, for figure export).
+#[derive(Debug, Default, Clone)]
+pub struct TimeSeries {
+    pub points: Vec<(SimTime, f64)>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t: SimTime, v: f64) {
+        // collapse repeated identical samples to keep exports small
+        if let Some(&(_, last)) = self.points.last() {
+            if last == v {
+                return;
+            }
+        }
+        self.points.push((t, v));
+    }
+
+    /// Force-record a sample even if unchanged (period boundaries).
+    pub fn push_always(&mut self, t: SimTime, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Time-weighted mean over [0, horizon] treating the series as a step
+    /// function (value holds until the next sample).
+    pub fn time_weighted_mean(&self, horizon: SimTime) -> f64 {
+        if self.points.is_empty() || horizon == 0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for (i, &(t, v)) in self.points.iter().enumerate() {
+            let next = self
+                .points
+                .get(i + 1)
+                .map(|&(t2, _)| t2)
+                .unwrap_or(horizon)
+                .min(horizon);
+            if next > t {
+                acc += v * (next - t) as f64;
+            }
+        }
+        // before the first sample the value is taken as the first sample
+        let first_t = self.points[0].0.min(horizon);
+        acc += self.points[0].1 * first_t as f64;
+        acc / horizon as f64
+    }
+}
+
+/// Per-run metrics registry.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    pub counters: BTreeMap<String, Counter>,
+    pub series: BTreeMap<String, TimeSeries>,
+    pub stats: BTreeMap<String, OnlineStats>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&mut self, name: &str) -> &mut Counter {
+        self.counters.entry(name.to_string()).or_default()
+    }
+
+    pub fn series(&mut self, name: &str) -> &mut TimeSeries {
+        self.series.entry(name.to_string()).or_default()
+    }
+
+    pub fn stat(&mut self, name: &str) -> &mut OnlineStats {
+        self.stats
+            .entry(name.to_string())
+            .or_insert_with(OnlineStats::new)
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.get(name).map(|c| c.value).unwrap_or(0)
+    }
+
+    /// Render a compact text summary (used by `phoenixd --verbose`).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in &self.counters {
+            out.push_str(&format!("{k} = {}\n", c.value));
+        }
+        for (k, s) in &self.stats {
+            out.push_str(&format!(
+                "{k}: n={} mean={:.3} sd={:.3} min={:.3} max={:.3}\n",
+                s.count(),
+                s.mean(),
+                s.stddev(),
+                s.min(),
+                s.max()
+            ));
+        }
+        for (k, ts) in &self.series {
+            out.push_str(&format!("{k}: {} samples, max={:.3}\n", ts.points.len(), ts.max()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_stats() {
+        let mut r = Registry::new();
+        r.counter("jobs.completed").inc();
+        r.counter("jobs.completed").add(2);
+        r.stat("turnaround").push(10.0);
+        r.stat("turnaround").push(20.0);
+        assert_eq!(r.counter_value("jobs.completed"), 3);
+        assert_eq!(r.stats["turnaround"].mean(), 15.0);
+        assert!(r.summary().contains("jobs.completed = 3"));
+    }
+
+    #[test]
+    fn series_dedups_repeats() {
+        let mut ts = TimeSeries::default();
+        ts.push(0, 1.0);
+        ts.push(10, 1.0);
+        ts.push(20, 2.0);
+        assert_eq!(ts.points.len(), 2);
+        assert_eq!(ts.last(), Some(2.0));
+    }
+
+    #[test]
+    fn time_weighted_mean_step_function() {
+        let mut ts = TimeSeries::default();
+        ts.push_always(0, 0.0);
+        ts.push_always(50, 10.0);
+        // 0 for [0,50), 10 for [50,100) => mean 5
+        assert!((ts.time_weighted_mean(100) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn twm_handles_nonzero_start() {
+        let mut ts = TimeSeries::default();
+        ts.push_always(20, 4.0);
+        // value 4 assumed from t=0 (first sample extends back)
+        assert!((ts.time_weighted_mean(40) - 4.0).abs() < 1e-9);
+    }
+}

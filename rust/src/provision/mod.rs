@@ -1,0 +1,137 @@
+//! The Resource Provision Service (RPS) — the common service framework's
+//! proxy for the whole organization (§II-B): it owns the ledger and decides
+//! when to provision how many nodes to which CMS, under a pluggable policy.
+
+pub mod policy;
+
+use crate::cluster::{Ledger, Owner};
+
+pub use self::policy::{PolicyKind, ProvisionDecision};
+
+/// The RPS: ledger + policy.
+#[derive(Debug)]
+pub struct Rps {
+    ledger: Ledger,
+    policy: PolicyKind,
+    /// Forced-return events issued (metrics).
+    pub force_returns: u64,
+    /// Nodes moved by forced returns (metrics).
+    pub forced_nodes: u64,
+}
+
+impl Rps {
+    pub fn new(total_nodes: u64, policy: PolicyKind) -> Self {
+        Self { ledger: Ledger::new(total_nodes), policy, force_returns: 0, forced_nodes: 0 }
+    }
+
+    pub fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    pub fn policy(&self) -> PolicyKind {
+        self.policy
+    }
+
+    /// WS claims `need` more nodes (urgent). The policy decides how much
+    /// comes from the free pool and how much must be forced out of ST; the
+    /// driver performs the ST-side kills then calls [`Rps::complete_force`].
+    pub fn ws_request(&mut self, need: u64) -> ProvisionDecision {
+        let d = self.policy.on_ws_request(&self.ledger, need);
+        if d.from_free > 0 {
+            self.ledger
+                .transfer(Owner::Free, Owner::Ws, d.from_free)
+                .expect("policy over-granted free nodes");
+        }
+        if d.force_from_st > 0 {
+            self.force_returns += 1;
+            self.forced_nodes += d.force_from_st;
+        }
+        d
+    }
+
+    /// Finish a forced return after ST released the nodes.
+    pub fn complete_force(&mut self, n: u64) {
+        self.ledger
+            .transfer(Owner::St, Owner::Ws, n)
+            .expect("forced transfer exceeded ST holding");
+    }
+
+    /// WS released `n` idle nodes.
+    pub fn ws_release(&mut self, n: u64) {
+        self.ledger
+            .transfer(Owner::Ws, Owner::Free, n)
+            .expect("WS released more than it held");
+    }
+
+    /// Provision idle resources to ST per the policy ("if there are idle
+    /// resources, provision all of them to ST Server"). Returns the grant.
+    pub fn provision_idle_to_st(&mut self) -> u64 {
+        let grant = self.policy.idle_grant_to_st(&self.ledger);
+        if grant > 0 {
+            self.ledger
+                .transfer(Owner::Free, Owner::St, grant)
+                .expect("idle grant exceeded free pool");
+        }
+        grant
+    }
+
+    /// Initial split at cluster boot.
+    pub fn bootstrap(&mut self, ws_initial: u64) -> (u64, u64) {
+        let ws = ws_initial.min(self.ledger.free());
+        if ws > 0 {
+            self.ledger.transfer(Owner::Free, Owner::Ws, ws).unwrap();
+        }
+        let st = self.provision_idle_to_st();
+        (ws, st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bootstrap_grants_everything() {
+        let mut rps = Rps::new(160, PolicyKind::Cooperative);
+        let (ws, st) = rps.bootstrap(1);
+        assert_eq!(ws, 1);
+        assert_eq!(st, 159);
+        assert_eq!(rps.ledger().free(), 0);
+    }
+
+    #[test]
+    fn ws_request_from_free_then_force() {
+        let mut rps = Rps::new(100, PolicyKind::Cooperative);
+        rps.bootstrap(0); // all 100 to ST
+        let d = rps.ws_request(30);
+        assert_eq!(d.from_free, 0);
+        assert_eq!(d.force_from_st, 30);
+        rps.complete_force(30);
+        assert_eq!(rps.ledger().held(crate::cluster::Owner::Ws), 30);
+        assert_eq!(rps.force_returns, 1);
+        assert_eq!(rps.forced_nodes, 30);
+    }
+
+    #[test]
+    fn ws_release_then_idle_to_st() {
+        let mut rps = Rps::new(100, PolicyKind::Cooperative);
+        rps.bootstrap(40);
+        rps.ws_release(10);
+        assert_eq!(rps.ledger().free(), 10);
+        let grant = rps.provision_idle_to_st();
+        assert_eq!(grant, 10);
+        assert_eq!(rps.ledger().free(), 0);
+    }
+
+    #[test]
+    fn static_policy_never_forces() {
+        let mut rps = Rps::new(208, PolicyKind::StaticPartition { st: 144, ws: 64 });
+        rps.bootstrap(64);
+        assert_eq!(rps.ledger().held(crate::cluster::Owner::St), 144);
+        // WS asks beyond its partition: nothing from free, nothing forced
+        let d = rps.ws_request(10);
+        assert_eq!(d.from_free, 0);
+        assert_eq!(d.force_from_st, 0);
+        assert!(d.denied > 0);
+    }
+}

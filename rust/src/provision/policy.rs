@@ -1,0 +1,141 @@
+//! Resource provisioning policies (§II-B) plus baselines for ablation.
+
+use crate::cluster::Ledger;
+
+/// What the policy decided for a WS request of `need` nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProvisionDecision {
+    /// Granted straight from the free pool (applied by the RPS).
+    pub from_free: u64,
+    /// To be forcibly returned by ST (the driver kills jobs, then calls
+    /// `complete_force`).
+    pub force_from_st: u64,
+    /// Demand the policy refused (only the non-cooperative baselines).
+    pub denied: u64,
+}
+
+/// Provisioning policy selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// The paper's cooperative policy: WS has absolute priority; all idle
+    /// nodes flow to ST; urgent WS claims force ST returns.
+    Cooperative,
+    /// The static baseline: hard partition, no flow between departments
+    /// (models the two dedicated clusters of the SC configuration).
+    StaticPartition { st: u64, ws: u64 },
+    /// Ablation: WS may claim only up to a share of the cluster; the rest
+    /// is protected for ST (quantifies what WS priority costs ST).
+    ProportionalShare { ws_cap: u64 },
+}
+
+impl PolicyKind {
+    /// Decide a WS request of `need` more nodes given the current ledger.
+    pub fn on_ws_request(&self, ledger: &Ledger, need: u64) -> ProvisionDecision {
+        match *self {
+            PolicyKind::Cooperative => {
+                let from_free = need.min(ledger.free());
+                let shortfall = need - from_free;
+                let force_from_st = shortfall.min(ledger.held(crate::cluster::Owner::St));
+                ProvisionDecision {
+                    from_free,
+                    force_from_st,
+                    denied: shortfall - force_from_st,
+                }
+            }
+            PolicyKind::StaticPartition { ws, .. } => {
+                let held = ledger.held(crate::cluster::Owner::Ws);
+                let allowed = ws.saturating_sub(held);
+                let grant = need.min(allowed).min(ledger.free());
+                ProvisionDecision { from_free: grant, force_from_st: 0, denied: need - grant }
+            }
+            PolicyKind::ProportionalShare { ws_cap } => {
+                let held = ledger.held(crate::cluster::Owner::Ws);
+                let allowed = ws_cap.saturating_sub(held).min(need);
+                let from_free = allowed.min(ledger.free());
+                let shortfall = allowed - from_free;
+                let force_from_st = shortfall.min(ledger.held(crate::cluster::Owner::St));
+                ProvisionDecision {
+                    from_free,
+                    force_from_st,
+                    denied: need - from_free - force_from_st,
+                }
+            }
+        }
+    }
+
+    /// How much of the free pool goes to ST right now.
+    pub fn idle_grant_to_st(&self, ledger: &Ledger) -> u64 {
+        match *self {
+            // "if there are idle resources … provision all idle to ST"
+            PolicyKind::Cooperative | PolicyKind::ProportionalShare { .. } => ledger.free(),
+            PolicyKind::StaticPartition { st, .. } => {
+                let held = ledger.held(crate::cluster::Owner::St);
+                st.saturating_sub(held).min(ledger.free())
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Cooperative => "cooperative",
+            PolicyKind::StaticPartition { .. } => "static",
+            PolicyKind::ProportionalShare { .. } => "proportional",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Owner;
+
+    fn ledger(free: u64, st: u64, ws: u64) -> Ledger {
+        let mut l = Ledger::new(free + st + ws);
+        l.transfer(Owner::Free, Owner::St, st).unwrap();
+        l.transfer(Owner::Free, Owner::Ws, ws).unwrap();
+        l
+    }
+
+    #[test]
+    fn cooperative_prefers_free_then_forces() {
+        let l = ledger(10, 50, 5);
+        let d = PolicyKind::Cooperative.on_ws_request(&l, 25);
+        assert_eq!(d, ProvisionDecision { from_free: 10, force_from_st: 15, denied: 0 });
+    }
+
+    #[test]
+    fn cooperative_denies_only_when_cluster_exhausted() {
+        let l = ledger(0, 10, 5);
+        let d = PolicyKind::Cooperative.on_ws_request(&l, 25);
+        assert_eq!(d.force_from_st, 10);
+        assert_eq!(d.denied, 15);
+    }
+
+    #[test]
+    fn cooperative_gives_all_idle_to_st() {
+        let l = ledger(42, 0, 0);
+        assert_eq!(PolicyKind::Cooperative.idle_grant_to_st(&l), 42);
+    }
+
+    #[test]
+    fn static_partition_caps_both_sides() {
+        let p = PolicyKind::StaticPartition { st: 144, ws: 64 };
+        let l = ledger(144 + 14, 0, 50); // ws holds 50 of its 64
+        let d = p.on_ws_request(&l, 30);
+        assert_eq!(d.from_free, 14);
+        assert_eq!(d.force_from_st, 0);
+        assert_eq!(d.denied, 16);
+        // ST fills only to its partition
+        assert_eq!(p.idle_grant_to_st(&ledger(200, 100, 0)), 44);
+    }
+
+    #[test]
+    fn proportional_share_caps_ws() {
+        let p = PolicyKind::ProportionalShare { ws_cap: 40 };
+        let l = ledger(0, 100, 30);
+        let d = p.on_ws_request(&l, 30);
+        assert_eq!(d.from_free, 0);
+        assert_eq!(d.force_from_st, 10); // only up to the 40-node cap
+        assert_eq!(d.denied, 20);
+    }
+}

@@ -1,0 +1,248 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them from the Rust hot path.
+//! Python is never on the request path — this module is the only bridge to
+//! the L1/L2 compute.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits protos with 64-bit ids
+//! which xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see python/compile/aot.py and /opt/xla-example/README.md).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape/constant contract emitted by `aot.py` alongside the artifacts.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub num_services: usize,
+    pub window: usize,
+    pub num_params: usize,
+    pub alpha: f64,
+    pub learning_rate: f64,
+    pub init_params: Vec<f32>,
+}
+
+impl Meta {
+    pub fn load(dir: &str) -> Result<Meta> {
+        let path = format!("{dir}/meta.json");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        let v = Json::parse(&text).context("parsing meta.json")?;
+        let req_u = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .with_context(|| format!("meta.json missing '{k}'"))
+        };
+        let params = v
+            .get("init_params")
+            .and_then(Json::as_arr)
+            .context("meta.json missing 'init_params'")?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+            .collect::<Vec<_>>();
+        let meta = Meta {
+            num_services: req_u("num_services")?,
+            window: req_u("window")?,
+            num_params: req_u("num_params")?,
+            alpha: v.get("alpha").and_then(Json::as_f64).unwrap_or(0.3),
+            learning_rate: v.get("learning_rate").and_then(Json::as_f64).unwrap_or(0.01),
+            init_params: params,
+        };
+        if meta.init_params.len() != meta.num_params {
+            bail!(
+                "meta.json init_params length {} != num_params {}",
+                meta.init_params.len(),
+                meta.num_params
+            );
+        }
+        Ok(meta)
+    }
+}
+
+/// The forecaster engine: compiled `forecast` + `train_step` executables
+/// and the current head parameters.
+pub struct ForecastEngine {
+    client: xla::PjRtClient,
+    forecast_exe: xla::PjRtLoadedExecutable,
+    train_exe: xla::PjRtLoadedExecutable,
+    pub meta: Meta,
+    pub params: Vec<f32>,
+    /// Executions since load (perf counters).
+    pub calls: u64,
+}
+
+impl ForecastEngine {
+    /// Load and compile both artifacts from `dir` (usually `artifacts/`).
+    pub fn load(dir: &str) -> Result<ForecastEngine> {
+        let meta = Meta::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = format!("{dir}/{name}.hlo.txt");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {name}"))
+        };
+        let forecast_exe = compile("forecast")?;
+        let train_exe = compile("train_step")?;
+        let params = meta.init_params.clone();
+        Ok(ForecastEngine { client, forecast_exe, train_exe, meta, params, calls: 0 })
+    }
+
+    /// Convenience: does `dir` contain the artifacts?
+    pub fn artifacts_present(dir: &str) -> bool {
+        ["forecast.hlo.txt", "train_step.hlo.txt", "meta.json"]
+            .iter()
+            .all(|f| std::path::Path::new(&format!("{dir}/{f}")).exists())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn matrix_literal(&self, data: &[f32]) -> Result<xla::Literal> {
+        let (s, w) = (self.meta.num_services as i64, self.meta.window as i64);
+        if data.len() != (s * w) as usize {
+            bail!("expected {}x{} = {} values, got {}", s, w, s * w, data.len());
+        }
+        Ok(xla::Literal::vec1(data).reshape(&[s, w])?)
+    }
+
+    /// Batched forecast: `util` and `reqs` are row-major (S, W) windows,
+    /// oldest→newest. Returns S per-service demand predictions.
+    pub fn forecast(&mut self, util: &[f32], reqs: &[f32]) -> Result<Vec<f32>> {
+        let u = self.matrix_literal(util)?;
+        let r = self.matrix_literal(reqs)?;
+        let p = xla::Literal::vec1(&self.params);
+        let result = self.forecast_exe.execute::<xla::Literal>(&[u, r, p])?[0][0]
+            .to_literal_sync()?;
+        self.calls += 1;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Forecast for a single service: pads the batch with zero rows.
+    pub fn forecast_one(&mut self, util_window: &[f32], rate_window: &[f32]) -> Result<f32> {
+        let (s, w) = (self.meta.num_services, self.meta.window);
+        if util_window.len() != w || rate_window.len() != w {
+            bail!("window length must be {w}");
+        }
+        let mut util = vec![0.0f32; s * w];
+        let mut reqs = vec![0.0f32; s * w];
+        util[..w].copy_from_slice(util_window);
+        reqs[..w].copy_from_slice(rate_window);
+        Ok(self.forecast(&util, &reqs)?[0])
+    }
+
+    /// One SGD step against observed demand; updates `self.params` and
+    /// returns the loss.
+    pub fn train_step(&mut self, util: &[f32], reqs: &[f32], target: &[f32]) -> Result<f32> {
+        if target.len() != self.meta.num_services {
+            bail!("target length must be {}", self.meta.num_services);
+        }
+        let u = self.matrix_literal(util)?;
+        let r = self.matrix_literal(reqs)?;
+        let p = xla::Literal::vec1(&self.params);
+        let t = xla::Literal::vec1(target);
+        let result = self.train_exe.execute::<xla::Literal>(&[p, u, r, t])?[0][0]
+            .to_literal_sync()?;
+        self.calls += 1;
+        let (new_params, loss) = result.to_tuple2()?;
+        self.params = new_params.to_vec::<f32>()?;
+        let loss = loss.to_vec::<f32>()?;
+        Ok(loss[0])
+    }
+}
+
+/// Pure-Rust mirror of the forecaster (same math as kernels/ref.py).
+///
+/// Two jobs: (1) an oracle to cross-check the HLO path in tests — the
+/// L1↔L3 numerics contract; (2) a fallback so examples stay runnable
+/// before `make artifacts`.
+pub fn reference_forecast(
+    util: &[f32],
+    reqs: &[f32],
+    params: &[f32],
+    s: usize,
+    w: usize,
+    alpha: f32,
+) -> Vec<f32> {
+    assert_eq!(util.len(), s * w);
+    assert_eq!(reqs.len(), s * w);
+    assert_eq!(params.len(), 9);
+    // EWMA weights w_i ∝ (1-alpha)^(W-1-i), normalized
+    let mut ew = vec![0.0f32; w];
+    let mut sum = 0.0f32;
+    for (i, e) in ew.iter_mut().enumerate() {
+        *e = (1.0 - alpha).powi((w - 1 - i) as i32);
+        sum += *e;
+    }
+    for e in &mut ew {
+        *e /= sum;
+    }
+    // slope weights
+    let tbar = (w as f32 - 1.0) / 2.0;
+    let denom: f32 = (0..w).map(|t| (t as f32 - tbar).powi(2)).sum();
+    let sw: Vec<f32> = (0..w).map(|t| (t as f32 - tbar) / denom).collect();
+
+    let feats = |row: &[f32]| -> [f32; 4] {
+        let mean = row.iter().sum::<f32>() / w as f32;
+        let peak = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let ewma = row.iter().zip(&ew).map(|(x, e)| x * e).sum::<f32>();
+        let slope = row.iter().zip(&sw).map(|(x, c)| x * c).sum::<f32>();
+        [mean, peak, ewma, slope]
+    };
+
+    (0..s)
+        .map(|i| {
+            let fu = feats(&util[i * w..(i + 1) * w]);
+            let fr = feats(&reqs[i * w..(i + 1) * w]);
+            let mut acc = params[8];
+            for k in 0..4 {
+                acc += fu[k] * params[k] + fr[k] * params[4 + k];
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_forecast_constant_rows() {
+        // util rows all 0.5, reqs rows all 2.0; slope 0; mean=peak=ewma=c
+        let (s, w) = (2, 8);
+        let util = vec![0.5f32; s * w];
+        let reqs = vec![2.0f32; s * w];
+        // params: weight only util-mean (idx 0) and req-peak (idx 5), bias 1
+        let mut params = vec![0.0f32; 9];
+        params[0] = 2.0;
+        params[5] = 3.0;
+        params[8] = 1.0;
+        let out = reference_forecast(&util, &reqs, &params, s, w, 0.3);
+        for v in out {
+            assert!((v - (2.0 * 0.5 + 3.0 * 2.0 + 1.0)).abs() < 1e-5, "v={v}");
+        }
+    }
+
+    #[test]
+    fn meta_load_validates_param_length() {
+        let dir = std::env::temp_dir().join("phoenix_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"num_services": 2, "window": 4, "num_params": 9, "init_params": [1, 2]}"#,
+        )
+        .unwrap();
+        let err = Meta::load(dir.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("init_params"), "{err}");
+    }
+
+    #[test]
+    fn artifacts_present_detects_missing() {
+        assert!(!ForecastEngine::artifacts_present("/nonexistent"));
+    }
+}

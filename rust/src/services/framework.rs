@@ -1,0 +1,177 @@
+//! Service registry + deterministic message bus.
+
+use std::collections::VecDeque;
+
+use super::messages::Msg;
+
+/// Dense service handle assigned at registration.
+pub type ServiceId = usize;
+
+/// Context handed to a service while it handles a message: lets it send
+/// follow-ups and read the logical clock.
+pub struct Ctx {
+    sender: ServiceId,
+    now: u64,
+    outbox: Vec<(ServiceId, Msg)>,
+}
+
+impl Ctx {
+    pub fn send(&mut self, to: ServiceId, msg: Msg) {
+        self.outbox.push((to, msg));
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Who delivered the message being handled.
+    pub fn sender(&self) -> ServiceId {
+        self.sender
+    }
+}
+
+/// A cloud management service (or the RPS) plugged into the framework.
+pub trait Service {
+    fn name(&self) -> &str;
+    /// Handle one message; send responses through `ctx`.
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx);
+}
+
+/// The message bus: FIFO queue over registered services, dispatched
+/// deterministically (delivery order = send order).
+pub struct Bus {
+    services: Vec<Box<dyn Service>>,
+    queue: VecDeque<(ServiceId, ServiceId, Msg)>, // (from, to, msg)
+    now: u64,
+    pub delivered: u64,
+}
+
+impl Default for Bus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bus {
+    pub fn new() -> Self {
+        Self { services: Vec::new(), queue: VecDeque::new(), now: 0, delivered: 0 }
+    }
+
+    /// Register a service; returns its id (used as a message address).
+    pub fn register(&mut self, svc: Box<dyn Service>) -> ServiceId {
+        self.services.push(svc);
+        self.services.len() - 1
+    }
+
+    pub fn service_name(&self, id: ServiceId) -> &str {
+        self.services[id].name()
+    }
+
+    pub fn len_services(&self) -> usize {
+        self.services.len()
+    }
+
+    /// Advance the logical clock (dispatch mode).
+    pub fn set_now(&mut self, now: u64) {
+        self.now = now;
+    }
+
+    /// Inject a message from "outside" (client tools, timers).
+    pub fn post(&mut self, to: ServiceId, msg: Msg) {
+        self.queue.push_back((usize::MAX, to, msg));
+    }
+
+    /// Deliver messages until the queue drains. Returns the number
+    /// delivered. `limit` guards against ping-pong livelock (panics if
+    /// exceeded — a protocol bug, not an operational condition).
+    pub fn run_until_quiescent(&mut self, limit: u64) -> u64 {
+        let mut n = 0;
+        while let Some((from, to, msg)) = self.queue.pop_front() {
+            n += 1;
+            assert!(n <= limit, "bus livelock: {n} messages without quiescence");
+            let mut ctx = Ctx { sender: from, now: self.now, outbox: Vec::new() };
+            self.services[to].handle(msg, &mut ctx);
+            for (dest, m) in ctx.outbox {
+                assert!(dest < self.services.len(), "message to unregistered service {dest}");
+                self.queue.push_back((to, dest, m));
+            }
+        }
+        self.delivered += n;
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echoes WsClaim back as WsGrant to the sender.
+    struct Granter;
+
+    impl Service for Granter {
+        fn name(&self) -> &str {
+            "granter"
+        }
+
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+            if let Msg::WsClaim { nodes } = msg {
+                let sender = ctx.sender();
+                if sender != usize::MAX {
+                    ctx.send(sender, Msg::WsGrant { nodes });
+                }
+            }
+        }
+    }
+
+    /// Claims once at Tick, records grants.
+    struct Claimer {
+        rps: ServiceId,
+        granted: u64,
+    }
+
+    impl Service for Claimer {
+        fn name(&self) -> &str {
+            "claimer"
+        }
+
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+            match msg {
+                Msg::Tick { .. } => ctx.send(self.rps, Msg::WsClaim { nodes: 7 }),
+                Msg::WsGrant { nodes } => self.granted += nodes,
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn request_grant_roundtrip() {
+        let mut bus = Bus::new();
+        let rps = bus.register(Box::new(Granter));
+        let ws = bus.register(Box::new(Claimer { rps, granted: 0 }));
+        bus.post(ws, Msg::Tick { now: 0 });
+        let delivered = bus.run_until_quiescent(100);
+        assert_eq!(delivered, 3); // Tick, WsClaim, WsGrant
+        assert_eq!(bus.service_name(rps), "granter");
+    }
+
+    #[test]
+    #[should_panic(expected = "livelock")]
+    fn livelock_guard_fires() {
+        struct PingPong {
+            peer: ServiceId,
+        }
+        impl Service for PingPong {
+            fn name(&self) -> &str {
+                "pingpong"
+            }
+            fn handle(&mut self, _msg: Msg, ctx: &mut Ctx) {
+                ctx.send(self.peer, Msg::Shutdown);
+            }
+        }
+        let mut bus = Bus::new();
+        let a = bus.register(Box::new(PingPong { peer: 1 }));
+        let _b = bus.register(Box::new(PingPong { peer: a }));
+        bus.post(a, Msg::Shutdown);
+        bus.run_until_quiescent(50);
+    }
+}

@@ -1,0 +1,42 @@
+//! Messages exchanged between the RPS and the cloud management services.
+//! One closed enum — the framework stays allocation-light and the full
+//! protocol is visible in one place.
+
+use crate::sim::SimTime;
+
+/// Service-to-service message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    // ---- WS Server -> RPS --------------------------------------------------
+    /// Urgent claim for `nodes` more nodes.
+    WsClaim { nodes: u64 },
+    /// Immediate release of idle nodes.
+    WsRelease { nodes: u64 },
+
+    // ---- RPS -> WS Server --------------------------------------------------
+    /// Nodes provisioned to WS.
+    WsGrant { nodes: u64 },
+
+    // ---- RPS -> ST Server --------------------------------------------------
+    /// Nodes provisioned to ST.
+    StGrant { nodes: u64 },
+    /// Forced return: release `nodes` immediately (killing jobs if needed).
+    ForceReturn { nodes: u64 },
+
+    // ---- ST Server -> RPS --------------------------------------------------
+    /// ST released nodes after a forced return (`killed` jobs died for it).
+    StReleased { nodes: u64, killed: u64 },
+
+    // ---- client tools -> ST CMS --------------------------------------------
+    /// Submit a job (index into the run's trace).
+    SubmitJob { trace_idx: usize },
+
+    // ---- timers / lifecycle -------------------------------------------------
+    /// Periodic tick (dispatch mode injects these; realtime mode uses the
+    /// wall clock).
+    Tick { now: SimTime },
+    /// Heartbeat for the monitor.
+    Heartbeat { from: usize, now: SimTime },
+    /// Orderly shutdown.
+    Shutdown,
+}

@@ -1,0 +1,18 @@
+//! The common service framework (§II-A): the substrate every cloud
+//! management service is built on. It provides service registration, a
+//! message bus with deterministic FIFO dispatch, and a heartbeat monitor —
+//! the "set of services that manage, monitor the shared cluster resources
+//! and provision resources to cloud management services".
+//!
+//! Two execution modes share the same [`Service`] trait:
+//! * **dispatch mode** — single-threaded, deterministic delivery
+//!   ([`Bus::run_until_quiescent`]); the simulator and tests use this;
+//! * **realtime mode** — [`crate::coordinator::realtime`] pumps the same
+//!   bus from a wall-clock loop with live services.
+
+pub mod framework;
+pub mod messages;
+pub mod monitor;
+
+pub use framework::{Bus, Ctx, Service, ServiceId};
+pub use messages::Msg;

@@ -1,0 +1,72 @@
+//! Heartbeat monitor — the framework's health-tracking service. Each CMS
+//! heartbeats every period; the monitor flags services whose heartbeat is
+//! overdue by `timeout`. (In the real Phoenix stack this drives failover;
+//! here it drives the coordinator's health report and exercises the
+//! framework's periodic-message machinery.)
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+
+/// Tracks last-heard-from times.
+#[derive(Debug)]
+pub struct Monitor {
+    timeout: u64,
+    last_seen: BTreeMap<usize, SimTime>,
+}
+
+impl Monitor {
+    pub fn new(timeout: u64) -> Self {
+        Self { timeout, last_seen: BTreeMap::new() }
+    }
+
+    /// Record a heartbeat.
+    pub fn beat(&mut self, service: usize, now: SimTime) {
+        self.last_seen.insert(service, now);
+    }
+
+    /// Services considered down at `now` (never-seen services are not
+    /// listed until they have beaten once — registration is implicit).
+    pub fn down(&self, now: SimTime) -> Vec<usize> {
+        self.last_seen
+            .iter()
+            .filter(|&(_, &t)| now.saturating_sub(t) > self.timeout)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    pub fn tracked(&self) -> usize {
+        self.last_seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_services_not_flagged() {
+        let mut m = Monitor::new(30);
+        m.beat(1, 100);
+        m.beat(2, 110);
+        assert!(m.down(120).is_empty());
+    }
+
+    #[test]
+    fn overdue_service_flagged() {
+        let mut m = Monitor::new(30);
+        m.beat(1, 100);
+        m.beat(2, 100);
+        m.beat(1, 150);
+        assert_eq!(m.down(160), vec![2]);
+    }
+
+    #[test]
+    fn recovery_clears_flag() {
+        let mut m = Monitor::new(30);
+        m.beat(1, 0);
+        assert_eq!(m.down(100), vec![1]);
+        m.beat(1, 100);
+        assert!(m.down(110).is_empty());
+    }
+}

@@ -1,0 +1,226 @@
+//! The event heap and dispatch loop.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+/// Handle used by handlers to schedule further events.
+pub struct Schedule<E> {
+    now: SimTime,
+    pending: Vec<(SimTime, E)>,
+}
+
+impl<E> Schedule<E> {
+    /// Current simulation time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `at` (clamped to now — events may not
+    /// be scheduled in the past).
+    pub fn at(&mut self, at: SimTime, ev: E) {
+        self.pending.push((at.max(self.now), ev));
+    }
+
+    /// Schedule `ev` after `delay` seconds.
+    pub fn after(&mut self, delay: u64, ev: E) {
+        self.pending.push((self.now + delay, ev));
+    }
+}
+
+/// Implemented by the simulation model; the engine is generic over the
+/// event type so each experiment defines its own compact enum.
+pub trait EventHandler<E> {
+    /// Process one event; schedule follow-ups through `sched`.
+    fn handle(&mut self, ev: E, sched: &mut Schedule<E>);
+}
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// The discrete-event engine.
+pub struct Engine<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Events processed so far (the perf counters report this).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Seed an event at absolute time `at`.
+    pub fn schedule(&mut self, at: SimTime, ev: E) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time: at.max(self.now), seq: self.seq, ev }));
+    }
+
+    /// Run until the queue drains or the clock passes `horizon`.
+    /// Events scheduled exactly at `horizon` still run; later ones do not.
+    pub fn run_until<H: EventHandler<E>>(&mut self, handler: &mut H, horizon: SimTime) {
+        while let Some(Reverse(head)) = self.heap.peek() {
+            if head.time > horizon {
+                break;
+            }
+            let Reverse(entry) = self.heap.pop().unwrap();
+            debug_assert!(entry.time >= self.now, "time went backwards");
+            self.now = entry.time;
+            self.processed += 1;
+            let mut sched = Schedule { now: self.now, pending: Vec::new() };
+            handler.handle(entry.ev, &mut sched);
+            for (t, ev) in sched.pending {
+                self.seq += 1;
+                self.heap.push(Reverse(Entry { time: t, seq: self.seq, ev }));
+            }
+        }
+        // Clock lands on the horizon so post-run metrics read a full window
+        // (not for the unbounded `run`, which ends at the last event).
+        if horizon != SimTime::MAX && self.now < horizon {
+            self.now = horizon;
+        }
+    }
+
+    /// Drain everything (no horizon).
+    pub fn run<H: EventHandler<E>>(&mut self, handler: &mut H) {
+        self.run_until(handler, SimTime::MAX);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq, Clone)]
+    enum Ev {
+        Ping(u32),
+        Chain(u32),
+    }
+
+    struct Recorder {
+        seen: Vec<(SimTime, Ev)>,
+    }
+
+    impl EventHandler<Ev> for Recorder {
+        fn handle(&mut self, ev: Ev, sched: &mut Schedule<Ev>) {
+            self.seen.push((sched.now(), ev.clone()));
+            if let Ev::Chain(n) = ev {
+                if n > 0 {
+                    sched.after(10, Ev::Chain(n - 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delivers_in_time_order() {
+        let mut eng = Engine::new();
+        eng.schedule(30, Ev::Ping(3));
+        eng.schedule(10, Ev::Ping(1));
+        eng.schedule(20, Ev::Ping(2));
+        let mut rec = Recorder { seen: vec![] };
+        eng.run(&mut rec);
+        let times: Vec<SimTime> = rec.seen.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn fifo_among_equal_timestamps() {
+        let mut eng = Engine::new();
+        for i in 0..100 {
+            eng.schedule(5, Ev::Ping(i));
+        }
+        let mut rec = Recorder { seen: vec![] };
+        eng.run(&mut rec);
+        let ids: Vec<u32> = rec
+            .seen
+            .iter()
+            .map(|(_, e)| match e {
+                Ev::Ping(i) => *i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chained_scheduling_advances_clock() {
+        let mut eng = Engine::new();
+        eng.schedule(0, Ev::Chain(5));
+        let mut rec = Recorder { seen: vec![] };
+        eng.run(&mut rec);
+        assert_eq!(rec.seen.len(), 6);
+        assert_eq!(eng.now(), 50);
+        assert_eq!(eng.processed(), 6);
+    }
+
+    #[test]
+    fn horizon_stops_and_clock_lands_on_horizon() {
+        let mut eng = Engine::new();
+        eng.schedule(0, Ev::Chain(1000));
+        let mut rec = Recorder { seen: vec![] };
+        eng.run_until(&mut rec, 95);
+        // events at t=0,10,...,90 ran; t=100 did not
+        assert_eq!(rec.seen.len(), 10);
+        assert_eq!(eng.now(), 95);
+        assert!(!eng.is_empty());
+    }
+
+    #[test]
+    fn event_at_horizon_runs() {
+        let mut eng = Engine::new();
+        eng.schedule(50, Ev::Ping(1));
+        let mut rec = Recorder { seen: vec![] };
+        eng.run_until(&mut rec, 50);
+        assert_eq!(rec.seen.len(), 1);
+    }
+}

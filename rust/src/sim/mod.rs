@@ -1,0 +1,15 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper replays two-week traces at 100× wall-clock speedup; we go one
+//! step further and simulate in virtual time (events jump the clock), which
+//! is exact and runs the whole evaluation in seconds. The engine is a
+//! classic event-heap design: `(time, seq, event)` ordered by time with a
+//! monotonically increasing sequence number to make same-time ordering
+//! deterministic (FIFO among equal timestamps).
+
+mod engine;
+
+pub use engine::{Engine, EventHandler, Schedule};
+
+/// Simulation time in whole seconds since the trace epoch.
+pub type SimTime = u64;

@@ -1,0 +1,112 @@
+//! Kill-selection policy: which running jobs die when the RPS forces ST to
+//! surrender busy nodes (§II-B).
+//!
+//! The paper's rule: *"kill jobs in turn from the beginning of job with
+//! minimum size and shortest running time"* — ascending (size, elapsed).
+//! Two ablation orders quantify that design choice (see `benches/
+//! ablations.rs`): killing the biggest job first frees the demand in the
+//! fewest kills, and killing the newest job first destroys the least
+//! sunk work.
+
+use std::collections::BTreeMap;
+
+use crate::config::KillOrder;
+use crate::sim::SimTime;
+
+use super::scheduler::RunningJob;
+
+/// Choose victims until `needed` nodes would be freed. Returns victim job
+/// ids in kill order. The caller guarantees `needed` ≤ total busy nodes.
+pub fn pick_victims(
+    running: &BTreeMap<u64, RunningJob>,
+    needed: u64,
+    order: KillOrder,
+    now: SimTime,
+) -> Vec<u64> {
+    let mut candidates: Vec<(&u64, &RunningJob)> = running.iter().collect();
+    match order {
+        KillOrder::MinSizeShortestElapsed => {
+            candidates.sort_by_key(|(id, rj)| (rj.size, now.saturating_sub(rj.start), **id));
+        }
+        KillOrder::MaxSizeFirst => {
+            candidates.sort_by_key(|(id, rj)| {
+                (std::cmp::Reverse(rj.size), now.saturating_sub(rj.start), **id)
+            });
+        }
+        KillOrder::ShortestElapsedFirst => {
+            candidates.sort_by_key(|(id, rj)| (now.saturating_sub(rj.start), rj.size, **id));
+        }
+    }
+    let mut victims = Vec::new();
+    let mut freed = 0;
+    for (id, rj) in candidates {
+        if freed >= needed {
+            break;
+        }
+        victims.push(*id);
+        freed += rj.size;
+    }
+    assert!(freed >= needed, "running jobs hold fewer nodes than demanded");
+    victims
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn running(jobs: &[(u64, u64, SimTime)]) -> BTreeMap<u64, RunningJob> {
+        // (id, size, start)
+        jobs.iter()
+            .map(|&(id, size, start)| {
+                (id, RunningJob { size, submit: 0, start, expected_end: start + 1000 })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn paper_order_min_size_then_shortest_elapsed() {
+        let r = running(&[(1, 8, 0), (2, 2, 0), (3, 2, 90), (4, 4, 50)]);
+        // at now=100: job 3 elapsed 10, job 2 elapsed 100 — both size 2;
+        // paper kills the *shortest running time* first => job 3.
+        let v = pick_victims(&r, 1, KillOrder::MinSizeShortestElapsed, 100);
+        assert_eq!(v, vec![3]);
+        // needing 5 nodes: 3 (2) then 2 (2) then 4 (4) => 8 freed
+        let v = pick_victims(&r, 5, KillOrder::MinSizeShortestElapsed, 100);
+        assert_eq!(v, vec![3, 2, 4]);
+    }
+
+    #[test]
+    fn max_size_first_frees_in_fewest_kills() {
+        let r = running(&[(1, 8, 0), (2, 2, 0), (3, 4, 0)]);
+        let v = pick_victims(&r, 5, KillOrder::MaxSizeFirst, 100);
+        assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn newest_first_preserves_sunk_work() {
+        let r = running(&[(1, 4, 0), (2, 4, 99)]);
+        let v = pick_victims(&r, 1, KillOrder::ShortestElapsedFirst, 100);
+        assert_eq!(v, vec![2]);
+    }
+
+    #[test]
+    fn exact_boundary_stops_killing() {
+        let r = running(&[(1, 2, 0), (2, 2, 0)]);
+        let v = pick_victims(&r, 2, KillOrder::MinSizeShortestElapsed, 10);
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer nodes than demanded")]
+    fn overdemand_panics() {
+        let r = running(&[(1, 2, 0)]);
+        pick_victims(&r, 5, KillOrder::MinSizeShortestElapsed, 10);
+    }
+
+    #[test]
+    fn deterministic_tiebreak_by_id() {
+        let r = running(&[(7, 2, 0), (3, 2, 0)]);
+        let v = pick_victims(&r, 1, KillOrder::MinSizeShortestElapsed, 10);
+        assert_eq!(v, vec![3]);
+    }
+}

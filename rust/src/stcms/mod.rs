@@ -1,0 +1,275 @@
+//! ST CMS — the cloud management service for scientific computing
+//! (OpenPBS-like, §II-A): **ST Server** (resource management policy) plus
+//! a pluggable **Scheduler**.
+//!
+//! Resource-management policy (§II-B, implemented exactly):
+//! * passively receives nodes provisioned by the RPS ([`StServer::grant`]);
+//! * on a forced return, surrenders idle nodes first, then **kills running
+//!   jobs in ascending (size, elapsed-runtime) order** until the demanded
+//!   count is free ([`StServer::force_return`]);
+//! * killed jobs are lost (they are the paper's Fig.-8 metric, not
+//!   resubmitted).
+
+pub mod kill;
+pub mod queue;
+pub mod scheduler;
+
+use std::collections::BTreeMap;
+
+use crate::config::{KillOrder, SchedulerKind};
+use crate::sim::SimTime;
+use crate::workload::{Job, JobOutcome, JobState};
+
+use self::queue::JobQueue;
+use self::scheduler::{RunningJob, Scheduler};
+
+/// A job started by the scheduler (returned so the driver can schedule its
+/// completion event).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Started {
+    pub job_id: u64,
+    pub finish_at: SimTime,
+}
+
+/// The ST Server.
+#[derive(Debug)]
+pub struct StServer {
+    /// Nodes currently provisioned to ST by the RPS.
+    pool: u64,
+    /// Nodes of `pool` occupied by running jobs.
+    busy: u64,
+    queue: JobQueue,
+    running: BTreeMap<u64, RunningJob>,
+    scheduler: Scheduler,
+    kill_order: KillOrder,
+    /// Terminal outcomes (completed + killed) for metrics.
+    pub outcomes: Vec<JobOutcome>,
+}
+
+impl StServer {
+    pub fn new(scheduler: SchedulerKind, kill_order: KillOrder) -> Self {
+        Self {
+            pool: 0,
+            busy: 0,
+            queue: JobQueue::new(),
+            running: BTreeMap::new(),
+            scheduler: Scheduler::new(scheduler),
+            kill_order,
+            outcomes: Vec::new(),
+        }
+    }
+
+    pub fn pool(&self) -> u64 {
+        self.pool
+    }
+
+    pub fn idle(&self) -> u64 {
+        self.pool - self.busy
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Enqueue a newly submitted job.
+    pub fn submit(&mut self, job: Job) {
+        self.queue.push(job);
+    }
+
+    /// RPS provisions `n` more nodes (the ST Server receives passively).
+    pub fn grant(&mut self, n: u64) {
+        self.pool += n;
+    }
+
+    /// RPS demands `n` nodes back *immediately* (urgent WS claim).
+    ///
+    /// Returns the ids of killed jobs. Idle nodes are surrendered first;
+    /// if those do not cover the demand, running jobs are killed in the
+    /// configured order until enough nodes are free. Panics only if `n`
+    /// exceeds the whole pool (the RPS never asks for more than ST holds).
+    pub fn force_return(&mut self, n: u64, now: SimTime) -> Vec<u64> {
+        assert!(
+            n <= self.pool,
+            "RPS demanded {n} nodes but ST holds only {}",
+            self.pool
+        );
+        let mut killed = Vec::new();
+        if self.idle() < n {
+            let shortfall = n - self.idle();
+            let victims = kill::pick_victims(&self.running, shortfall, self.kill_order, now);
+            for id in victims {
+                let rj = self.running.remove(&id).expect("victim not running");
+                self.busy -= rj.size;
+                self.outcomes.push(JobOutcome {
+                    id,
+                    size: rj.size,
+                    submit: rj.submit,
+                    start: rj.start,
+                    end: now,
+                    state: JobState::Killed,
+                });
+                killed.push(id);
+            }
+        }
+        debug_assert!(self.idle() >= n, "kill selection under-freed");
+        self.pool -= n;
+        killed
+    }
+
+    /// A running job reached its runtime. Returns false if the job was
+    /// already killed (stale completion event).
+    pub fn finish(&mut self, job_id: u64, now: SimTime) -> bool {
+        match self.running.remove(&job_id) {
+            Some(rj) => {
+                self.busy -= rj.size;
+                self.outcomes.push(JobOutcome {
+                    id: job_id,
+                    size: rj.size,
+                    submit: rj.submit,
+                    start: rj.start,
+                    end: now,
+                    state: JobState::Completed,
+                });
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run the scheduling policy over the queue; start everything it picks.
+    /// Returns the started jobs with their completion times.
+    pub fn schedule(&mut self, now: SimTime) -> Vec<Started> {
+        let idle = self.idle();
+        let picked = self.scheduler.pick(&self.queue, &self.running, idle, now);
+        let mut started = Vec::with_capacity(picked.len());
+        // remove from the back first so indices stay valid…
+        for &qidx in picked.iter().rev() {
+            let job = self.queue.remove(qidx);
+            let finish_at = now + job.runtime;
+            self.busy += job.size;
+            self.running.insert(
+                job.id,
+                RunningJob {
+                    size: job.size,
+                    submit: job.submit,
+                    start: now,
+                    expected_end: finish_at,
+                },
+            );
+            started.push(Started { job_id: job.id, finish_at });
+        }
+        // …then restore scheduler order for the caller
+        started.reverse();
+        debug_assert!(self.busy <= self.pool, "scheduler oversubscribed the pool");
+        started
+    }
+
+    /// Jobs still queued or running when the horizon ends (neither
+    /// completed nor killed — they don't count toward either figure).
+    pub fn in_flight(&self) -> usize {
+        self.queue.len() + self.running.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, submit: SimTime, size: u64, runtime: u64) -> Job {
+        Job { id, submit, size, runtime, requested: runtime * 2 }
+    }
+
+    fn server() -> StServer {
+        StServer::new(SchedulerKind::FirstFit, KillOrder::MinSizeShortestElapsed)
+    }
+
+    #[test]
+    fn grant_and_schedule_starts_fitting_jobs() {
+        let mut st = server();
+        st.grant(10);
+        st.submit(job(1, 0, 4, 100));
+        st.submit(job(2, 0, 8, 100)); // doesn't fit alongside job 1
+        st.submit(job(3, 0, 6, 100)); // fits (first-fit skips job 2)
+        let started = st.schedule(0);
+        let ids: Vec<u64> = started.iter().map(|s| s.job_id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        assert_eq!(st.idle(), 0);
+        assert_eq!(st.queued(), 1);
+    }
+
+    #[test]
+    fn finish_frees_nodes_and_records_outcome() {
+        let mut st = server();
+        st.grant(4);
+        st.submit(job(1, 5, 4, 100));
+        let started = st.schedule(10);
+        assert_eq!(started[0].finish_at, 110);
+        assert!(st.finish(1, 110));
+        assert_eq!(st.idle(), 4);
+        let o = &st.outcomes[0];
+        assert_eq!(o.state, JobState::Completed);
+        assert_eq!(o.turnaround(), 105);
+    }
+
+    #[test]
+    fn stale_finish_is_ignored() {
+        let mut st = server();
+        assert!(!st.finish(99, 10));
+    }
+
+    #[test]
+    fn force_return_prefers_idle_nodes() {
+        let mut st = server();
+        st.grant(10);
+        st.submit(job(1, 0, 4, 100));
+        st.schedule(0);
+        // 6 idle; demanding 6 must kill nothing
+        let killed = st.force_return(6, 50);
+        assert!(killed.is_empty());
+        assert_eq!(st.pool(), 4);
+        assert_eq!(st.idle(), 0);
+    }
+
+    #[test]
+    fn force_return_kills_min_size_first() {
+        let mut st = server();
+        st.grant(12);
+        st.submit(job(1, 0, 8, 100));
+        st.submit(job(2, 0, 4, 100));
+        st.schedule(0);
+        // no idle; demanding 2 kills the size-4 job (minimum size first)
+        let killed = st.force_return(2, 50);
+        assert_eq!(killed, vec![2]);
+        assert_eq!(st.pool(), 10);
+        assert_eq!(st.idle(), 2);
+        assert_eq!(
+            st.outcomes.iter().filter(|o| o.state == JobState::Killed).count(),
+            1
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "RPS demanded")]
+    fn force_return_beyond_pool_panics() {
+        let mut st = server();
+        st.grant(2);
+        st.force_return(3, 0);
+    }
+
+    #[test]
+    fn killed_jobs_do_not_complete_later() {
+        let mut st = server();
+        st.grant(4);
+        st.submit(job(1, 0, 4, 100));
+        st.schedule(0);
+        st.force_return(4, 10);
+        // the stale completion event at t=100 must be ignored
+        assert!(!st.finish(1, 100));
+        assert_eq!(st.outcomes.len(), 1);
+        assert_eq!(st.outcomes[0].state, JobState::Killed);
+    }
+}

@@ -1,0 +1,77 @@
+//! The ST CMS wait queue: arrival-ordered, with O(1) inspection by index.
+//!
+//! A plain `Vec` (not `VecDeque`) because the First-Fit scheduler scans by
+//! index and removes from arbitrary positions; removal compacts with
+//! `remove`, which is O(n) worst case but the queue stays short (hundreds)
+//! and profiling showed it is nowhere near the hot path.
+
+use crate::workload::Job;
+
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    items: Vec<Job>,
+}
+
+impl JobQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append at the tail (arrival order is preserved; submissions arrive
+    /// in time order from the trace).
+    pub fn push(&mut self, job: Job) {
+        self.items.push(job);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> &Job {
+        &self.items[idx]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Job> {
+        self.items.iter()
+    }
+
+    /// Remove and return the job at `idx` (shifts the tail down).
+    pub fn remove(&mut self, idx: usize) -> Job {
+        self.items.remove(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64) -> Job {
+        Job { id, submit: 0, size: 1, runtime: 10, requested: 20 }
+    }
+
+    #[test]
+    fn preserves_arrival_order() {
+        let mut q = JobQueue::new();
+        for id in [3, 1, 2] {
+            q.push(job(id));
+        }
+        let ids: Vec<u64> = q.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn remove_compacts() {
+        let mut q = JobQueue::new();
+        for id in 0..5 {
+            q.push(job(id));
+        }
+        let removed = q.remove(2);
+        assert_eq!(removed.id, 2);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.get(2).id, 3);
+    }
+}

@@ -1,0 +1,228 @@
+//! Scheduling policies for ST CMS.
+//!
+//! The paper evaluates **First-Fit** (§III-D: "Scheduler is specified with
+//! the First-Fit scheduling policy"). FCFS and EASY backfilling are
+//! implemented as ablation baselines (DESIGN.md §4).
+
+use std::collections::BTreeMap;
+
+use crate::config::SchedulerKind;
+use crate::sim::SimTime;
+
+use super::queue::JobQueue;
+
+/// Book-keeping for a running job (shared with the kill policy).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunningJob {
+    pub size: u64,
+    pub submit: SimTime,
+    pub start: SimTime,
+    /// Completion time if undisturbed (used by EASY's reservation).
+    pub expected_end: SimTime,
+}
+
+/// A scheduling policy: given the queue and the idle-node count, pick the
+/// queue indices to start *now* (indices into the current queue, strictly
+/// increasing).
+#[derive(Debug)]
+pub struct Scheduler {
+    kind: SchedulerKind,
+}
+
+impl Scheduler {
+    pub fn new(kind: SchedulerKind) -> Self {
+        Self { kind }
+    }
+
+    pub fn kind(&self) -> SchedulerKind {
+        self.kind
+    }
+
+    pub fn pick(
+        &self,
+        queue: &JobQueue,
+        running: &BTreeMap<u64, RunningJob>,
+        idle: u64,
+        now: SimTime,
+    ) -> Vec<usize> {
+        match self.kind {
+            SchedulerKind::FirstFit => first_fit(queue, idle),
+            SchedulerKind::Fcfs => fcfs(queue, idle),
+            SchedulerKind::EasyBackfill => easy(queue, running, idle, now),
+        }
+    }
+}
+
+/// Scan the queue in arrival order; start everything that fits in the
+/// remaining idle nodes (jobs that don't fit are skipped, not blocking).
+fn first_fit(queue: &JobQueue, mut idle: u64) -> Vec<usize> {
+    let mut picked = Vec::new();
+    for (i, job) in queue.iter().enumerate() {
+        if idle == 0 {
+            break;
+        }
+        if job.size <= idle {
+            idle -= job.size;
+            picked.push(i);
+        }
+    }
+    picked
+}
+
+/// Strict FCFS: start from the head only while it fits.
+fn fcfs(queue: &JobQueue, mut idle: u64) -> Vec<usize> {
+    let mut picked = Vec::new();
+    for (i, job) in queue.iter().enumerate() {
+        if job.size <= idle {
+            idle -= job.size;
+            picked.push(i);
+        } else {
+            break; // head-of-line blocking
+        }
+    }
+    picked
+}
+
+/// EASY backfilling: FCFS prefix + a reservation for the blocked head; a
+/// later job may backfill iff it fits the current idle nodes AND (by its
+/// *requested* wallclock) finishes before the head's reservation, or uses
+/// only nodes beyond what the head needs.
+fn easy(
+    queue: &JobQueue,
+    running: &BTreeMap<u64, RunningJob>,
+    mut idle: u64,
+    now: SimTime,
+) -> Vec<usize> {
+    let mut picked = Vec::new();
+    let mut i = 0;
+    // FCFS prefix
+    while i < queue.len() {
+        let job = queue.get(i);
+        if job.size <= idle {
+            idle -= job.size;
+            picked.push(i);
+            i += 1;
+        } else {
+            break;
+        }
+    }
+    if i >= queue.len() {
+        return picked;
+    }
+
+    // Reservation for the blocked head: when will `head.size` nodes be
+    // free, assuming running jobs end at expected_end?
+    let head = queue.get(i);
+    let mut ends: Vec<(SimTime, u64)> =
+        running.values().map(|r| (r.expected_end, r.size)).collect();
+    ends.sort_unstable();
+    let mut avail = idle;
+    let mut shadow_time = now;
+    let mut extra = 0u64; // nodes free at shadow_time beyond the head's need
+    for (end, size) in ends {
+        avail += size;
+        if avail >= head.size {
+            shadow_time = end;
+            extra = avail - head.size;
+            break;
+        }
+    }
+
+    // Backfill pass over the rest of the queue.
+    for j in (i + 1)..queue.len() {
+        if idle == 0 {
+            break;
+        }
+        let job = queue.get(j);
+        if job.size > idle {
+            continue;
+        }
+        let fits_before_shadow = now + job.requested <= shadow_time;
+        let fits_extra = job.size <= extra;
+        if fits_before_shadow || fits_extra {
+            idle -= job.size;
+            if fits_extra {
+                extra -= job.size;
+            }
+            picked.push(j);
+        }
+    }
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Job;
+
+    fn queue(jobs: &[(u64, u64, u64)]) -> JobQueue {
+        // (id, size, requested)
+        let mut q = JobQueue::new();
+        for &(id, size, requested) in jobs {
+            q.push(Job { id, submit: 0, size, runtime: requested / 2, requested });
+        }
+        q
+    }
+
+    #[test]
+    fn first_fit_skips_blockers() {
+        let q = queue(&[(1, 8, 100), (2, 16, 100), (3, 2, 100)]);
+        let picked = first_fit(&q, 10);
+        assert_eq!(picked, vec![0, 2]); // job 2 skipped
+    }
+
+    #[test]
+    fn fcfs_blocks_at_head() {
+        let q = queue(&[(1, 8, 100), (2, 16, 100), (3, 2, 100)]);
+        let picked = fcfs(&q, 10);
+        assert_eq!(picked, vec![0]); // job 2 blocks job 3
+    }
+
+    #[test]
+    fn easy_backfills_short_jobs_only() {
+        // 4 idle; head needs 8; one running job (size 4) ends at t=100, so
+        // the head's reservation is (t=100, extra=0): a backfill candidate
+        // must finish (by requested time) before t=100.
+        let mut running = BTreeMap::new();
+        running.insert(
+            9,
+            RunningJob { size: 4, submit: 0, start: 0, expected_end: 100 },
+        );
+        // candidate A requests 200s (would delay the head) — rejected;
+        // candidate B requests 50s — backfilled.
+        let q = queue(&[(1, 8, 400), (2, 4, 200), (3, 4, 50)]);
+        let picked = easy(&q, &running, 4, 0);
+        assert_eq!(picked, vec![2]);
+    }
+
+    #[test]
+    fn easy_uses_extra_nodes_beyond_reservation() {
+        // 4 idle; head needs 8; a size-8 job ends at t=100 → at the shadow
+        // time 12 nodes are free, 4 beyond the head's need: a long size-4
+        // candidate may run on the extra nodes without delaying the head.
+        let mut running = BTreeMap::new();
+        running.insert(
+            9,
+            RunningJob { size: 8, submit: 0, start: 0, expected_end: 100 },
+        );
+        let q = queue(&[(1, 8, 400), (2, 4, 200)]);
+        let picked = easy(&q, &running, 4, 0);
+        assert_eq!(picked, vec![1]);
+    }
+
+    #[test]
+    fn easy_equals_fcfs_when_nothing_blocks() {
+        let q = queue(&[(1, 2, 10), (2, 2, 10)]);
+        let running = BTreeMap::new();
+        assert_eq!(easy(&q, &running, 10, 0), fcfs(&q, 10));
+    }
+
+    #[test]
+    fn empty_queue_picks_nothing() {
+        let q = JobQueue::new();
+        let running = BTreeMap::new();
+        for kind in [SchedulerKind::FirstFit, SchedulerKind::Fcfs, SchedulerKind::EasyBackfill] {
+            assert!(Scheduler::new(kind).pick(&q, &running, 100, 0).is_empty());
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Tiny CSV writer/reader for exporting figure series and loading
+//! externally prepared traces (e.g. a rate series reduced from the real
+//! WorldCup log). No quoting gymnastics: numeric tables with a header row.
+
+use anyhow::{bail, Context, Result};
+
+/// A numeric table with named columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Self {
+        Self { columns: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        debug_assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row);
+    }
+
+    pub fn col(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .map(|v| {
+                    if v.fract() == 0.0 && v.abs() < 1e15 {
+                        format!("{}", *v as i64)
+                    } else {
+                        format!("{v}")
+                    }
+                })
+                .collect();
+            out.push_str(&line.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_csv(text: &str) -> Result<Table> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty csv")?;
+        let columns: Vec<String> = header.split(',').map(|s| s.trim().to_string()).collect();
+        let mut rows = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let row: Result<Vec<f64>> = line
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .with_context(|| format!("csv line {}: bad number '{s}'", i + 2))
+                })
+                .collect();
+            let row = row?;
+            if row.len() != columns.len() {
+                bail!("csv line {}: {} fields, expected {}", i + 2, row.len(), columns.len());
+            }
+            rows.push(row);
+        }
+        Ok(Table { columns, rows })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_csv()).with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Table> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_csv(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(&["t", "value"]);
+        t.push(vec![0.0, 1.5]);
+        t.push(vec![20.0, 2.0]);
+        let back = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.col("value").unwrap(), vec![1.5, 2.0]);
+    }
+
+    #[test]
+    fn rejects_ragged_and_garbage() {
+        assert!(Table::from_csv("a,b\n1\n").is_err());
+        assert!(Table::from_csv("a,b\n1,x\n").is_err());
+        assert!(Table::from_csv("").is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Trace substrates.
+//!
+//! The paper evaluates on two real traces we cannot fetch in this offline
+//! environment (see DESIGN.md §6 substitutions):
+//!
+//! * **SDSC BLUE** (2 weeks from 2000-04-25; 144-node machine; 2672 jobs
+//!   submitted) — we provide a full Standard Workload Format parser
+//!   ([`swf`]) for running against the real log when available, plus a
+//!   calibrated synthetic generator ([`hpc_synth`]) that matches the
+//!   paper's stated facts and a target offered load.
+//! * **WorldCup'98** (2 weeks from 1998-06-07, scaled ×2.22; high
+//!   peak/normal ratio) — [`web_synth`] generates a diurnal request-rate
+//!   series with match-day spikes calibrated so the Fig.-5 autoscaler
+//!   peaks at exactly the paper's 64 VMs.
+
+pub mod csv;
+pub mod hpc_synth;
+pub mod swf;
+pub mod web_synth;
+pub mod worldcup;

@@ -1,0 +1,187 @@
+//! Standard Workload Format (SWF) parser / writer.
+//!
+//! SWF (Feitelson's Parallel Workloads Archive format, the format of the
+//! SDSC BLUE log the paper uses) is line-oriented: `;` header comments,
+//! then 18 whitespace-separated fields per job. We consume the fields the
+//! simulator needs and preserve enough to round-trip:
+//!
+//! ```text
+//!  1 job number        2 submit time     3 wait time      4 run time
+//!  5 allocated procs   6 avg cpu time    7 used memory    8 requested procs
+//!  9 requested time   10 requested mem  11 status        12 user id
+//! 13 group id         14 executable     15 queue         16 partition
+//! 17 preceding job    18 think time
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::workload::Job;
+
+/// One raw SWF record (fields we keep).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwfRecord {
+    pub job_id: u64,
+    pub submit: i64,
+    pub wait: i64,
+    pub runtime: i64,
+    pub alloc_procs: i64,
+    pub req_procs: i64,
+    pub req_time: i64,
+    pub status: i64,
+}
+
+/// Parse SWF text. Records with non-positive runtime or no processor count
+/// are dropped (cancelled entries), matching standard archive practice.
+pub fn parse(text: &str) -> Result<Vec<SwfRecord>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with(';') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() < 11 {
+            bail!("swf line {}: expected >=11 fields, got {}", lineno + 1, fields.len());
+        }
+        let f = |i: usize| -> Result<i64> {
+            fields[i]
+                .parse::<f64>()
+                .map(|v| v as i64)
+                .with_context(|| format!("swf line {}: field {}", lineno + 1, i + 1))
+        };
+        let rec = SwfRecord {
+            job_id: f(0)? as u64,
+            submit: f(1)?,
+            wait: f(2)?,
+            runtime: f(3)?,
+            alloc_procs: f(4)?,
+            req_procs: f(7)?,
+            req_time: f(8)?,
+            status: f(10)?,
+        };
+        out.push(rec);
+    }
+    Ok(out)
+}
+
+/// Convert SWF records to simulator [`Job`]s.
+///
+/// * `procs_per_node`: SDSC BLUE logs processors (8 per node on Blue
+///   Horizon); the paper's unit is nodes, so sizes are divided (ceil).
+/// * `window`: keep only jobs submitted in `[start, start+len)`, re-based
+///   to 0 — the paper uses a two-week slice.
+pub fn to_jobs(
+    records: &[SwfRecord],
+    procs_per_node: u64,
+    window: Option<(i64, i64)>,
+) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for r in records {
+        if r.runtime <= 0 {
+            continue;
+        }
+        let procs = if r.alloc_procs > 0 { r.alloc_procs } else { r.req_procs };
+        if procs <= 0 {
+            continue;
+        }
+        if let Some((start, len)) = window {
+            if r.submit < start || r.submit >= start + len {
+                continue;
+            }
+        }
+        let base = window.map(|(s, _)| s).unwrap_or(0);
+        let size = (procs as u64).div_ceil(procs_per_node);
+        let runtime = r.runtime as u64;
+        jobs.push(Job {
+            id: r.job_id,
+            submit: (r.submit - base).max(0) as u64,
+            size,
+            runtime,
+            requested: if r.req_time > 0 { r.req_time as u64 } else { runtime },
+        });
+    }
+    jobs.sort_by_key(|j| (j.submit, j.id));
+    jobs
+}
+
+/// Serialize jobs back out as SWF (for interchange with archive tooling).
+pub fn write(jobs: &[Job], procs_per_node: u64) -> String {
+    let mut out = String::from(
+        "; SWF written by phoenix-cloud (fields 6,7,10,12..18 are -1)\n",
+    );
+    for j in jobs {
+        out.push_str(&format!(
+            "{} {} -1 {} {} -1 -1 {} {} -1 1 -1 -1 -1 -1 -1 -1 -1\n",
+            j.id,
+            j.submit,
+            j.runtime,
+            j.size * procs_per_node,
+            j.size * procs_per_node,
+            j.requested,
+        ));
+    }
+    out
+}
+
+/// Load and convert a `.swf` file.
+pub fn load_file(path: &str, procs_per_node: u64, window: Option<(i64, i64)>) -> Result<Vec<Job>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let recs = parse(&text)?;
+    Ok(to_jobs(&recs, procs_per_node, window))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+; Version: 2
+; Computer: test
+1 10 5 100 8 -1 -1 8 120 -1 1 3 1 -1 1 -1 -1 -1
+2 20 0 50 16 -1 -1 16 60 -1 1 4 1 -1 1 -1 -1 -1
+3 30 0 -1 8 -1 -1 8 60 -1 0 4 1 -1 1 -1 -1 -1
+4 40 0 70 0 -1 -1 0 60 -1 0 4 1 -1 1 -1 -1 -1
+";
+
+    #[test]
+    fn parses_and_skips_comments() {
+        let recs = parse(SAMPLE).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert_eq!(recs[0].job_id, 1);
+        assert_eq!(recs[1].alloc_procs, 16);
+    }
+
+    #[test]
+    fn to_jobs_converts_and_filters() {
+        let recs = parse(SAMPLE).unwrap();
+        let jobs = to_jobs(&recs, 8, None);
+        // job 3 (runtime -1) and job 4 (0 procs) dropped
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].size, 1); // 8 procs / 8 per node
+        assert_eq!(jobs[1].size, 2);
+        assert_eq!(jobs[0].requested, 120);
+    }
+
+    #[test]
+    fn window_rebases_submit() {
+        let recs = parse(SAMPLE).unwrap();
+        let jobs = to_jobs(&recs, 8, Some((15, 100)));
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].id, 2);
+        assert_eq!(jobs[0].submit, 5);
+    }
+
+    #[test]
+    fn roundtrip_through_writer() {
+        let recs = parse(SAMPLE).unwrap();
+        let jobs = to_jobs(&recs, 8, None);
+        let text = write(&jobs, 8);
+        let back = to_jobs(&parse(&text).unwrap(), 8, None);
+        assert_eq!(jobs, back);
+    }
+
+    #[test]
+    fn rejects_short_lines() {
+        assert!(parse("1 2 3\n").is_err());
+    }
+}

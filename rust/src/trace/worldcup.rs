@@ -1,0 +1,194 @@
+//! WorldCup'98 access-log binary format (the paper's real Web trace).
+//!
+//! The Internet Traffic Archive distributes the WC98 logs as fixed-size
+//! 20-byte big-endian records (Arlitt & Jin, HP Labs 1999):
+//!
+//! ```text
+//! struct record {
+//!   uint32 timestamp;   // seconds since epoch
+//!   uint32 clientID;
+//!   uint32 objectID;
+//!   uint32 size;        // response bytes
+//!   uint8  method;
+//!   uint8  status;      // HTTP status ∧ cache bits
+//!   uint8  type;        // file type
+//!   uint8  server;      // region ∧ server number
+//! }
+//! ```
+//!
+//! This module decodes that format and reduces it to the request-rate
+//! series the resource simulator consumes — the exact path the paper used
+//! (scale factor 2.22, §III-B). The archive is unreachable in this offline
+//! environment, so the synthetic generator ([`super::web_synth`]) is the
+//! default; drop the real files in and `phoenixd fig5 --worldcup DIR`
+//! replaces it.
+
+use anyhow::{bail, Context, Result};
+
+use super::web_synth::RateSeries;
+
+/// One decoded request record (the fields the simulator uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WcRecord {
+    pub timestamp: u32,
+    pub client_id: u32,
+    pub object_id: u32,
+    pub size: u32,
+    pub method: u8,
+    pub status: u8,
+    pub file_type: u8,
+    pub server: u8,
+}
+
+pub const RECORD_BYTES: usize = 20;
+
+/// Decode a buffer of fixed-size records. Errors on trailing bytes.
+pub fn decode(buf: &[u8]) -> Result<Vec<WcRecord>> {
+    if buf.len() % RECORD_BYTES != 0 {
+        bail!(
+            "worldcup log length {} is not a multiple of the {}-byte record",
+            buf.len(),
+            RECORD_BYTES
+        );
+    }
+    let be32 =
+        |b: &[u8], o: usize| u32::from_be_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]]);
+    Ok(buf
+        .chunks_exact(RECORD_BYTES)
+        .map(|r| WcRecord {
+            timestamp: be32(r, 0),
+            client_id: be32(r, 4),
+            object_id: be32(r, 8),
+            size: be32(r, 12),
+            method: r[16],
+            status: r[17],
+            file_type: r[18],
+            server: r[19],
+        })
+        .collect())
+}
+
+/// Encode records back to the archive format (test fixtures, subsetting).
+pub fn encode(records: &[WcRecord]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(records.len() * RECORD_BYTES);
+    for r in records {
+        out.extend_from_slice(&r.timestamp.to_be_bytes());
+        out.extend_from_slice(&r.client_id.to_be_bytes());
+        out.extend_from_slice(&r.object_id.to_be_bytes());
+        out.extend_from_slice(&r.size.to_be_bytes());
+        out.extend_from_slice(&[r.method, r.status, r.file_type, r.server]);
+    }
+    out
+}
+
+/// Reduce records to a request-rate series (requests/second per
+/// `sample_period`), re-based to the first timestamp and scaled by
+/// `scale` — the paper's 2.22 (§III-B).
+pub fn to_rate_series(records: &[WcRecord], sample_period: u64, scale: f64) -> RateSeries {
+    if records.is_empty() {
+        return RateSeries { sample_period, rates: Vec::new() };
+    }
+    let t0 = records.iter().map(|r| r.timestamp).min().unwrap() as u64;
+    let t1 = records.iter().map(|r| r.timestamp).max().unwrap() as u64;
+    let n = ((t1 - t0) / sample_period + 1) as usize;
+    let mut counts = vec![0u64; n];
+    for r in records {
+        counts[((r.timestamp as u64 - t0) / sample_period) as usize] += 1;
+    }
+    let rates = counts
+        .into_iter()
+        .map(|c| c as f64 * scale / sample_period as f64)
+        .collect();
+    RateSeries { sample_period, rates }
+}
+
+/// Load every `wc_day*` file in a directory, in name order, as one series.
+pub fn load_dir(dir: &str, sample_period: u64, scale: f64) -> Result<RateSeries> {
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {dir}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.file_name().map(|n| n.to_string_lossy().starts_with("wc_day")) == Some(true))
+        .collect();
+    if paths.is_empty() {
+        bail!("no wc_day* files in {dir}");
+    }
+    paths.sort();
+    let mut records = Vec::new();
+    for p in paths {
+        let buf = std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
+        records.extend(decode(&buf)?);
+    }
+    records.sort_by_key(|r| r.timestamp);
+    Ok(to_rate_series(&records, sample_period, scale))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(ts: u32, obj: u32) -> WcRecord {
+        WcRecord {
+            timestamp: ts,
+            client_id: 7,
+            object_id: obj,
+            size: 1024,
+            method: 0,
+            status: 200,
+            file_type: 1,
+            server: 3,
+        }
+    }
+
+    #[test]
+    fn roundtrip_encode_decode() {
+        let records: Vec<WcRecord> = (0..50).map(|i| rec(894_000_000 + i, i)).collect();
+        let buf = encode(&records);
+        assert_eq!(buf.len(), 50 * RECORD_BYTES);
+        assert_eq!(decode(&buf).unwrap(), records);
+    }
+
+    #[test]
+    fn rejects_truncated_buffer() {
+        let buf = encode(&[rec(1, 1)]);
+        assert!(decode(&buf[..RECORD_BYTES - 3]).is_err());
+    }
+
+    #[test]
+    fn rate_series_counts_and_scales() {
+        // 40 requests in second 0, 10 in second 20 → with period 20 and
+        // scale 2.0: [2·40/20, 2·10/20] = [4, 1]
+        let mut records = Vec::new();
+        for i in 0..40 {
+            records.push(rec(1000, i));
+        }
+        for i in 0..10 {
+            records.push(rec(1020, 100 + i));
+        }
+        let rs = to_rate_series(&records, 20, 2.0);
+        assert_eq!(rs.rates.len(), 2);
+        assert!((rs.rates[0] - 4.0).abs() < 1e-12);
+        assert!((rs.rates[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_dir_concatenates_days() {
+        let dir = std::env::temp_dir().join("phoenix_wc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let day1: Vec<WcRecord> = (0..30).map(|i| rec(500, i)).collect();
+        let day2: Vec<WcRecord> = (0..20).map(|i| rec(520, i)).collect();
+        std::fs::write(dir.join("wc_day01_1"), encode(&day1)).unwrap();
+        std::fs::write(dir.join("wc_day02_1"), encode(&day2)).unwrap();
+        std::fs::write(dir.join("README"), b"not a trace").unwrap();
+        let rs = load_dir(dir.to_str().unwrap(), 20, 1.0).unwrap();
+        assert_eq!(rs.rates.len(), 2);
+        assert!((rs.rates[0] - 1.5).abs() < 1e-12);
+        assert!((rs.rates[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_input_gives_empty_series() {
+        let rs = to_rate_series(&[], 20, 2.22);
+        assert!(rs.rates.is_empty());
+    }
+}

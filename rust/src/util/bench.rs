@@ -1,0 +1,114 @@
+//! Micro-bench harness shared by the `benches/` targets (criterion is not
+//! reachable offline). Measures wall time across warmup + timed iterations
+//! and prints mean / p50 / p95 per iteration plus derived throughput.
+
+use std::time::Instant;
+
+use super::stats::percentile;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs. The
+/// closure returns a u64 "work token" (e.g. events processed) that is
+/// summed and black-boxed to keep the optimizer honest; the sum is also
+/// used for throughput reporting.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> u64) -> BenchResult {
+    let mut sink = 0u64;
+    for _ in 0..warmup {
+        sink = sink.wrapping_add(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut work = 0u64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let w = f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        work = work.wrapping_add(w);
+    }
+    std::hint::black_box(sink);
+    let mean_ns = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns,
+        p50_ns: percentile(&samples, 0.5),
+        p95_ns: percentile(&samples, 0.95),
+    };
+    let per_work = if work > 0 {
+        format!(
+            "  ({:.1} ns/unit over {} units)",
+            mean_ns * iters as f64 / work as f64,
+            work
+        )
+    } else {
+        String::new()
+    };
+    println!(
+        "{:<44} mean {:>12}  p50 {:>12}  p95 {:>12}{}",
+        result.name,
+        fmt_ns(result.mean_ns),
+        fmt_ns(result.p50_ns),
+        fmt_ns(result.p95_ns),
+        per_work
+    );
+    result
+}
+
+/// Human duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Header line for a bench binary.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-loop", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            acc
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny CLI parser: `phoenixd <subcommand> [--flag value] [--switch]`.
+//!
+//! No external crates are reachable offline, so this replaces clap with the
+//! subset the launcher needs: one positional subcommand, `--key value`
+//! options, `--key=value`, and boolean switches, plus generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl Args {
+    /// Parse raw argv (without the program name). `switch_names` lists the
+    /// flags that take no value; everything else starting with `--` expects
+    /// one.
+    pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{name} expects a value")))?;
+                    out.options.insert(name.to_string(), v.clone());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positionals.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Parse a comma-separated list of u64 (e.g. `--sizes 200,190,180`).
+    pub fn get_u64_list(&self, key: &str, default: &[u64]) -> Result<Vec<u64>, CliError> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{key}: bad integer '{p}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_switches() {
+        let a = Args::parse(
+            &argv(&["fig7", "--sizes", "200,160", "--verbose", "--seed=7", "extra"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("fig7"));
+        assert_eq!(a.get("sizes"), Some("200,160"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&argv(&["x", "--n", "42", "--f", "1.5"]), &[]).unwrap();
+        assert_eq!(a.get_u64("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_u64("missing", 9).unwrap(), 9);
+        assert_eq!(a.get_u64_list("sizes", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn errors_on_missing_value_and_bad_types() {
+        assert!(Args::parse(&argv(&["x", "--n"]), &[]).is_err());
+        let a = Args::parse(&argv(&["x", "--n", "abc"]), &[]).unwrap();
+        assert!(a.get_u64("n", 0).is_err());
+    }
+}

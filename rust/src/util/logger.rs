@@ -1,0 +1,88 @@
+//! Minimal leveled logger backing the `log` crate facade.
+//!
+//! `init(level)` installs a stderr logger; the simulator and coordinator
+//! log through the ordinary `log::{info,debug,...}` macros. Level can be
+//! overridden with `PHOENIX_LOG=debug|info|warn|error|trace|off`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static LOGGER: StderrLogger = StderrLogger;
+static VERBOSITY: AtomicU8 = AtomicU8::new(2); // warn by default
+
+struct StderrLogger;
+
+fn level_to_u8(l: Level) -> u8 {
+    match l {
+        Level::Error => 1,
+        Level::Warn => 2,
+        Level::Info => 3,
+        Level::Debug => 4,
+        Level::Trace => 5,
+    }
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        level_to_u8(metadata.level()) <= VERBOSITY.load(Ordering::Relaxed)
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:5}] {}: {}",
+                record.level(),
+                record.target().split("::").last().unwrap_or(""),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+fn parse_level(s: &str) -> Option<(u8, LevelFilter)> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some((0, LevelFilter::Off)),
+        "error" => Some((1, LevelFilter::Error)),
+        "warn" => Some((2, LevelFilter::Warn)),
+        "info" => Some((3, LevelFilter::Info)),
+        "debug" => Some((4, LevelFilter::Debug)),
+        "trace" => Some((5, LevelFilter::Trace)),
+        _ => None,
+    }
+}
+
+/// Install the logger. Safe to call more than once (subsequent calls only
+/// adjust the level). `level` is a name like "info"; the `PHOENIX_LOG`
+/// environment variable wins if set.
+pub fn init(level: &str) {
+    let chosen = std::env::var("PHOENIX_LOG")
+        .ok()
+        .as_deref()
+        .and_then(parse_level)
+        .or_else(|| parse_level(level))
+        .unwrap_or((3, LevelFilter::Info));
+    VERBOSITY.store(chosen.0, Ordering::Relaxed);
+    let _ = log::set_logger(&LOGGER); // Err if already set — fine
+    log::set_max_level(chosen.1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init("info");
+        init("debug");
+        log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn parse_level_names() {
+        assert_eq!(parse_level("INFO").map(|x| x.0), Some(3));
+        assert_eq!(parse_level("bogus"), None);
+    }
+}

@@ -1,0 +1,15 @@
+//! Foundation utilities built from scratch (this environment has no network,
+//! so no external crates beyond `xla`/`anyhow`/`thiserror`/`log`): PRNG +
+//! distributions, JSON, a TOML-subset config parser, CLI parsing, logging,
+//! descriptive statistics, and a seeded property-testing harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod plot;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timefmt;
+pub mod toml;

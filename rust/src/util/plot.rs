@@ -1,0 +1,130 @@
+//! Terminal plotting: render the paper's figures as ASCII charts directly
+//! from `phoenixd fig5|fig7|fig8` so a reproduction run needs no external
+//! tooling to eyeball the shapes.
+
+/// Render a line chart of `(x, y)` samples into `width`×`height` text.
+/// X is assumed monotonically increasing; y autoscales.
+pub fn line_chart(points: &[(f64, f64)], width: usize, height: usize, title: &str) -> String {
+    if points.is_empty() || width < 8 || height < 2 {
+        return format!("{title}\n(no data)\n");
+    }
+    let (xmin, xmax) = (points[0].0, points[points.len() - 1].0);
+    let ymax = points.iter().map(|&(_, y)| y).fold(f64::MIN, f64::max);
+    let ymin = points.iter().map(|&(_, y)| y).fold(f64::MAX, f64::min);
+    let yspan = (ymax - ymin).max(1e-12);
+    let xspan = (xmax - xmin).max(1e-12);
+
+    // bucket per column: max of the bucket (peaks must stay visible)
+    let mut cols = vec![f64::NEG_INFINITY; width];
+    for &(x, y) in points {
+        let c = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+        cols[c] = cols[c].max(y);
+    }
+    // forward-fill empty columns
+    let mut last = ymin;
+    for c in cols.iter_mut() {
+        if c.is_finite() {
+            last = *c;
+        } else {
+            *c = last;
+        }
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (c, &y) in cols.iter().enumerate() {
+        let r = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+        let r = height - 1 - r.min(height - 1);
+        grid[r][c] = '*';
+        // draw a light column below the point for readability
+        for fill in grid.iter_mut().skip(r + 1) {
+            if fill[c] == ' ' {
+                fill[c] = '.';
+            }
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>8.1} ┤")
+        } else if i == height - 1 {
+            format!("{ymin:>8.1} ┤")
+        } else {
+            format!("{:>8} │", "")
+        };
+        out.push_str(&label);
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9}└{}\n{:>10}{:<width$}\n",
+        "",
+        "─".repeat(width),
+        "",
+        format!("{xmin:.0} … {xmax:.0}"),
+    ));
+    out
+}
+
+/// Render a labelled horizontal bar chart (for the Fig. 7/8 sweeps).
+pub fn bar_chart(rows: &[(String, f64)], width: usize, title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    if rows.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let vmax = rows.iter().map(|&(_, v)| v).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    for (label, v) in rows {
+        let n = ((v / vmax) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:>label_w$} │{} {v:.0}\n",
+            "█".repeat(n.min(width)),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_peak() {
+        let pts: Vec<(f64, f64)> =
+            (0..100).map(|i| (i as f64, if i == 50 { 64.0 } else { 6.0 })).collect();
+        let chart = line_chart(&pts, 40, 8, "demand");
+        assert!(chart.contains("demand"));
+        assert!(chart.contains('*'));
+        assert!(chart.contains("64.0"), "{chart}");
+    }
+
+    #[test]
+    fn line_chart_handles_flat_series() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 5.0)).collect();
+        let chart = line_chart(&pts, 20, 4, "flat");
+        assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let rows = vec![
+            ("SC-208".to_string(), 0.0),
+            ("DC-160".to_string(), 37.0),
+            ("DC-150".to_string(), 56.0),
+        ];
+        let chart = bar_chart(&rows, 30, "killed jobs");
+        assert!(chart.contains("DC-150 │██████████████████████████████ 56"));
+        assert!(chart.contains("SC-208 │ 0"));
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        assert!(line_chart(&[], 40, 8, "x").contains("no data"));
+        assert!(bar_chart(&[], 10, "y").contains("no data"));
+    }
+}

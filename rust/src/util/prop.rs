@@ -1,0 +1,141 @@
+//! Seeded property-testing harness (proptest is unreachable offline).
+//!
+//! A property is a closure over a [`Gen`]; [`check`] runs it across many
+//! seeded cases and, on failure, reports the failing case seed so the case
+//! reproduces exactly with `PHOENIX_PROP_SEED=<seed>`. `PHOENIX_PROP_CASES`
+//! overrides the case count (CI can crank it up).
+
+use super::rng::Rng;
+
+/// Per-case generator handle: a seeded RNG plus helpers that mirror the
+/// subset of proptest strategies the invariant suites use.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// A vec of `n ∈ [lo_len, hi_len]` items from `f`.
+    pub fn vec_of<T>(
+        &mut self,
+        lo_len: usize,
+        hi_len: usize,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize_in(lo_len, hi_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of one case: `Ok(())` or a failure message.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` across `default_cases` seeded cases (unless overridden by
+/// env). Panics with the failing seed + message on the first failure.
+pub fn check(name: &str, default_cases: usize, mut prop: impl FnMut(&mut Gen) -> CaseResult) {
+    let cases = std::env::var("PHOENIX_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_cases);
+    let forced_seed: Option<u64> =
+        std::env::var("PHOENIX_PROP_SEED").ok().and_then(|v| v.parse().ok());
+
+    if let Some(seed) = forced_seed {
+        let mut g = Gen { rng: Rng::new(seed), case: 0 };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed (PHOENIX_PROP_SEED={seed}): {msg}");
+        }
+        return;
+    }
+
+    for case in 0..cases {
+        // Stable per-case seed: name hash ⊕ case index.
+        let seed = fnv1a(name.as_bytes()) ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (reproduce with PHOENIX_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("always-true", 50, |g| {
+            ran += 1;
+            let x = g.u64_in(0, 100);
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 10, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        check("gen-bounds", 30, |g| {
+            let v = g.vec_of(1, 10, |g| g.f64_in(-1.0, 1.0));
+            prop_assert!(!v.is_empty() && v.len() <= 10, "len {}", v.len());
+            prop_assert!(v.iter().all(|x| (-1.0..1.0).contains(x)), "out of range");
+            let xs = [1, 2, 3];
+            let p = *g.pick(&xs);
+            prop_assert!(xs.contains(&p), "pick");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! Simulated-time formatting helpers. Simulation time is integer seconds
+//! from the trace epoch; two weeks = 1,209,600 s.
+
+pub const MINUTE: u64 = 60;
+pub const HOUR: u64 = 3600;
+pub const DAY: u64 = 86_400;
+pub const WEEK: u64 = 7 * DAY;
+pub const TWO_WEEKS: u64 = 2 * WEEK;
+
+/// "3d 04:05:06" style rendering for logs and reports.
+pub fn fmt_duration(secs: u64) -> String {
+    let d = secs / DAY;
+    let h = (secs % DAY) / HOUR;
+    let m = (secs % HOUR) / MINUTE;
+    let s = secs % MINUTE;
+    if d > 0 {
+        format!("{d}d {h:02}:{m:02}:{s:02}")
+    } else {
+        format!("{h:02}:{m:02}:{s:02}")
+    }
+}
+
+/// Seconds → fractional hours (for figure axes).
+pub fn hours(secs: u64) -> f64 {
+    secs as f64 / HOUR as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders() {
+        assert_eq!(fmt_duration(0), "00:00:00");
+        assert_eq!(fmt_duration(3661), "01:01:01");
+        assert_eq!(fmt_duration(DAY + 2 * HOUR + 3 * MINUTE + 4), "1d 02:03:04");
+        assert_eq!(TWO_WEEKS, 1_209_600);
+    }
+
+    #[test]
+    fn hour_conversion() {
+        assert!((hours(HOUR) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,264 @@
+//! TOML-subset parser for config files (`configs/*.toml`).
+//!
+//! Supported (all the config system needs): `[table]` / `[a.b]` headers,
+//! `key = value` with strings, integers, floats, booleans, and homogeneous
+//! arrays; `#` comments; bare or quoted keys. Not supported (rejected with
+//! an error, never silently misparsed): inline tables, array-of-tables
+//! (`[[x]]`), multiline strings, datetimes.
+//!
+//! Values land in the same [`Json`] model so config plumbing and report
+//! plumbing share accessors.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse TOML text into a nested `Json::Obj`.
+pub fn parse(src: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(rest) = line.strip_prefix("[[") {
+            let _ = rest;
+            return Err(err("array-of-tables [[..]] is not supported"));
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest.strip_suffix(']').ok_or_else(|| err("unterminated table header"))?;
+            let path: Vec<String> = inner.split('.').map(|p| unquote_key(p.trim())).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty table-name component"));
+            }
+            // materialize the table
+            ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+            current_path = path;
+            continue;
+        }
+
+        let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+        let key = unquote_key(line[..eq].trim());
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let val_src = line[eq + 1..].trim();
+        let val = parse_value(val_src).map_err(|m| err(&m))?;
+        let table = ensure_table(&mut root, &current_path).map_err(|m| err(&m))?;
+        if table.insert(key.clone(), val).is_some() {
+            return Err(err(&format!("duplicate key '{key}'")));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Read + parse a config file.
+pub fn parse_file(path: &str) -> anyhow::Result<Json> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    Ok(parse(&src)?)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote_key(k: &str) -> String {
+    let k = k.trim();
+    if k.len() >= 2 && k.starts_with('"') && k.ends_with('"') {
+        k[1..k.len() - 1].to_string()
+    } else {
+        k.to_string()
+    }
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(format!("'{part}' is both a value and a table")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(src: &str) -> Result<Json, String> {
+    if src.is_empty() {
+        return Err("missing value".into());
+    }
+    if src == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if src == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if src.starts_with('"') {
+        return parse_basic_string(src);
+    }
+    if src.starts_with('[') {
+        return parse_array(src);
+    }
+    if src.starts_with('{') {
+        return Err("inline tables are not supported".into());
+    }
+    // number: TOML allows underscores as separators
+    let cleaned: String = src.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value '{src}'"))
+}
+
+fn parse_basic_string(src: &str) -> Result<Json, String> {
+    let inner = src
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or("unterminated string")?;
+    let mut out = String::new();
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('r') => out.push('\r'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(format!("unknown escape \\{other:?}")),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(Json::Str(out))
+}
+
+fn parse_array(src: &str) -> Result<Json, String> {
+    let inner = src
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or("unterminated array")?;
+    let mut out = Vec::new();
+    for part in split_top_level(inner) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(parse_value(part)?);
+    }
+    Ok(Json::Arr(out))
+}
+
+/// Split on commas not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let v = parse("a = 1\nb = 2.5\nc = \"x\"\nd = true\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_tables_and_dotted_headers() {
+        let src = "top = 1\n[cluster]\nnodes = 208\n[cluster.ws]\npeak = 64\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("top").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("cluster").unwrap().get("nodes").unwrap().as_u64(), Some(208));
+        assert_eq!(
+            v.get("cluster").unwrap().get("ws").unwrap().get("peak").unwrap().as_u64(),
+            Some(64)
+        );
+    }
+
+    #[test]
+    fn parses_arrays_and_comments() {
+        let src = "sizes = [200, 190, 180] # sweep\nnames = [\"a\", \"b,c\"]\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("sizes").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("names").unwrap().as_arr().unwrap()[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let v = parse("t = 1_209_600\n").unwrap();
+        assert_eq!(v.get("t").unwrap().as_u64(), Some(1_209_600));
+    }
+
+    #[test]
+    fn rejects_unsupported_and_garbage() {
+        assert!(parse("[[x]]\n").is_err());
+        assert!(parse("x = {a=1}\n").is_err());
+        assert!(parse("x 1\n").is_err());
+        assert!(parse("x = \n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let v = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a#b"));
+    }
+}

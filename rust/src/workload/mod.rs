@@ -1,0 +1,104 @@
+//! Workload models: HPC batch jobs (ST CMS) and Web requests / service
+//! instances (WS CMS).
+
+use crate::sim::SimTime;
+
+/// A parallel batch job, as in an SWF trace record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    /// Trace-unique id.
+    pub id: u64,
+    /// Submission time (seconds from trace epoch).
+    pub submit: SimTime,
+    /// Number of nodes requested (the paper's allocation unit).
+    pub size: u64,
+    /// Actual runtime in seconds once started.
+    pub runtime: u64,
+    /// User-requested wallclock limit (>= runtime in well-formed traces).
+    pub requested: u64,
+}
+
+/// Lifecycle of a job inside ST CMS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Completed,
+    /// Killed by a forced resource return (the cooperative policy's cost).
+    Killed,
+}
+
+/// Terminal accounting for one job, for the Fig. 7/8 metrics.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub size: u64,
+    pub submit: SimTime,
+    pub start: SimTime,
+    pub end: SimTime,
+    pub state: JobState,
+}
+
+impl JobOutcome {
+    /// Turnaround = completion − submission (the paper's end-user metric).
+    pub fn turnaround(&self) -> u64 {
+        self.end.saturating_sub(self.submit)
+    }
+
+    /// Wait = start − submission.
+    pub fn wait(&self) -> u64 {
+        self.start.saturating_sub(self.submit)
+    }
+}
+
+/// One HTTP request in the serving simulator (Fig. 4/5 testbed).
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    /// Arrival time in **milliseconds** (the serving path needs sub-second
+    /// resolution; the batch side keeps whole seconds).
+    pub arrival_ms: u64,
+    /// Service demand in milliseconds of CPU on one instance.
+    pub work_ms: u32,
+}
+
+/// A running Web-service instance (one ZAP! process on one VM).
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: u64,
+    /// Active connections (least-connection balancing state).
+    pub connections: u32,
+    /// Utilization sample in [0, 1+] for the most recent window.
+    pub cpu_util: f64,
+}
+
+impl Instance {
+    pub fn new(id: u64) -> Self {
+        Self { id, connections: 0, cpu_util: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn turnaround_and_wait() {
+        let o = JobOutcome {
+            id: 1,
+            size: 4,
+            submit: 100,
+            start: 150,
+            end: 400,
+            state: JobState::Completed,
+        };
+        assert_eq!(o.turnaround(), 300);
+        assert_eq!(o.wait(), 50);
+    }
+
+    #[test]
+    fn saturating_accounting() {
+        // killed-at-start edge: end may equal submit
+        let o = JobOutcome { id: 1, size: 1, submit: 10, start: 10, end: 10, state: JobState::Killed };
+        assert_eq!(o.turnaround(), 0);
+    }
+}

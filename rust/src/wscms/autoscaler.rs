@@ -1,0 +1,220 @@
+//! Autoscaling policies: how many Web-service instances to run.
+//!
+//! * [`Reactive`] — the paper's rule (§III-C), verbatim: with n current
+//!   instances, if the average CPU utilization over the past 20 s exceeds
+//!   80 %, add one instance; if it falls below 80 %·(n−1)/n, remove one
+//!   (never below one instance).
+//! * [`Predictive`] — the L1/L2 extension: feeds utilization and
+//!   request-rate windows to the AOT-compiled JAX/Pallas forecaster (via
+//!   [`crate::runtime::ForecastEngine`] in production; any closure in
+//!   tests) and jumps straight to the predicted demand, clamped and
+//!   rate-limited.
+
+/// Utilization of n instances at offered rate `rate` with per-instance
+/// capacity `cap` rps. CPU cannot exceed 100 %.
+pub fn utilization(rate: f64, instances: u64, cap: f64) -> f64 {
+    if instances == 0 {
+        return 1.0;
+    }
+    (rate / (instances as f64 * cap)).min(1.0)
+}
+
+/// The paper's reactive ±1 rule. Stateful: owns the current instance count.
+#[derive(Debug, Clone)]
+pub struct Reactive {
+    n: u64,
+    /// Upper bound (the dedicated-cluster size in SC; total nodes in DC).
+    max: u64,
+    threshold: f64,
+}
+
+impl Reactive {
+    pub fn new(max: u64) -> Self {
+        Self { n: 1, max, threshold: 0.8 }
+    }
+
+    pub fn instances(&self) -> u64 {
+        self.n
+    }
+
+    /// One 20-second decision with the measured average utilization.
+    pub fn decide(&mut self, avg_util: f64) -> u64 {
+        if avg_util > self.threshold && self.n < self.max {
+            self.n += 1;
+        } else if self.n > 1 {
+            let down = self.threshold * (self.n - 1) as f64 / self.n as f64;
+            if avg_util < down {
+                self.n -= 1;
+            }
+        }
+        self.n
+    }
+}
+
+/// Predictive autoscaler over a demand forecaster.
+///
+/// Maintains sliding windows of per-sample utilization and normalized
+/// request rate; each decision calls the forecaster and adopts
+/// `ceil(pred)` clamped to [1, max] and rate-limited to ±`max_step` per
+/// decision (a safeguard the reactive rule gets implicitly from ±1).
+pub struct Predictive<F>
+where
+    F: FnMut(&[f32], &[f32]) -> f32,
+{
+    forecast: F,
+    window: usize,
+    util_hist: Vec<f32>,
+    rate_hist: Vec<f32>,
+    n: u64,
+    max: u64,
+    max_step: u64,
+    /// Rate normalization constant (per-instance capacity).
+    cap: f64,
+}
+
+impl<F> Predictive<F>
+where
+    F: FnMut(&[f32], &[f32]) -> f32,
+{
+    pub fn new(forecast: F, window: usize, max: u64, cap: f64) -> Self {
+        Self {
+            forecast,
+            window,
+            util_hist: vec![0.0; window],
+            rate_hist: vec![0.0; window],
+            n: 1,
+            max,
+            max_step: 8,
+            cap,
+        }
+    }
+
+    pub fn instances(&self) -> u64 {
+        self.n
+    }
+
+    /// One decision from the measured utilization and offered rate.
+    pub fn decide(&mut self, avg_util: f64, rate: f64) -> u64 {
+        self.util_hist.rotate_left(1);
+        *self.util_hist.last_mut().unwrap() = avg_util as f32;
+        self.rate_hist.rotate_left(1);
+        // normalize rate to "instances worth of load" so the feature scale
+        // matches what the forecaster was trained on
+        *self.rate_hist.last_mut().unwrap() = (rate / self.cap) as f32;
+
+        let pred = (self.forecast)(&self.util_hist, &self.rate_hist);
+        let target = pred.ceil().max(1.0) as u64;
+        let target = target.min(self.max);
+        // rate-limit
+        self.n = if target > self.n {
+            (self.n + self.max_step).min(target)
+        } else {
+            self.n.saturating_sub(self.max_step).max(target).max(1)
+        };
+        self.n
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_saturates_at_one() {
+        assert_eq!(utilization(1000.0, 1, 50.0), 1.0);
+        assert!((utilization(40.0, 1, 50.0) - 0.8).abs() < 1e-12);
+        assert_eq!(utilization(10.0, 0, 50.0), 1.0);
+    }
+
+    #[test]
+    fn reactive_scales_up_above_80pct() {
+        let mut a = Reactive::new(64);
+        assert_eq!(a.decide(0.85), 2);
+        assert_eq!(a.decide(0.85), 3);
+    }
+
+    #[test]
+    fn reactive_scales_down_below_hysteresis() {
+        let mut a = Reactive::new(64);
+        a.decide(0.9); // n=2
+        a.decide(0.9); // n=3
+        // down threshold at n=3 is 0.8*2/3 ≈ 0.533
+        assert_eq!(a.decide(0.5), 2);
+        // at n=2 threshold is 0.4; 0.45 holds steady
+        assert_eq!(a.decide(0.45), 2);
+    }
+
+    #[test]
+    fn reactive_never_below_one_or_above_max() {
+        let mut a = Reactive::new(3);
+        for _ in 0..10 {
+            a.decide(0.99);
+        }
+        assert_eq!(a.instances(), 3);
+        for _ in 0..10 {
+            a.decide(0.0);
+        }
+        assert_eq!(a.instances(), 1);
+    }
+
+    #[test]
+    fn reactive_hysteresis_band_is_stable() {
+        // the fixed point: util in (0.8*(n-1)/n, 0.8] holds n
+        let mut a = Reactive::new(64);
+        a.decide(0.85); // 2
+        let n = a.decide(0.7); // between 0.4 and 0.8 at n=2
+        assert_eq!(n, 2);
+        assert_eq!(a.decide(0.7), 2);
+    }
+
+    #[test]
+    fn predictive_follows_forecast_with_rate_limit() {
+        let mut a = Predictive::new(|_, _| 40.0, 8, 64, 50.0);
+        // jumps rate-limited by 8 per decision: 1 -> 9 -> 17 ...
+        assert_eq!(a.decide(0.9, 100.0), 9);
+        assert_eq!(a.decide(0.9, 100.0), 17);
+        for _ in 0..10 {
+            a.decide(0.9, 100.0);
+        }
+        assert_eq!(a.instances(), 40);
+    }
+
+    #[test]
+    fn predictive_clamps_to_bounds() {
+        let mut a = Predictive::new(|_, _| 1e9, 4, 16, 50.0);
+        for _ in 0..10 {
+            a.decide(1.0, 1e6);
+        }
+        assert_eq!(a.instances(), 16);
+        let mut b = Predictive::new(|_, _| -5.0, 4, 16, 50.0);
+        for _ in 0..10 {
+            b.decide(0.0, 0.0);
+        }
+        assert_eq!(b.instances(), 1);
+    }
+
+    #[test]
+    fn predictive_feeds_windows_oldest_first() {
+        let mut seen: Vec<Vec<f32>> = Vec::new();
+        {
+            let mut a = Predictive::new(
+                |u: &[f32], _r: &[f32]| {
+                    seen.push(u.to_vec());
+                    1.0
+                },
+                3,
+                8,
+                50.0,
+            );
+            a.decide(0.1, 0.0);
+            a.decide(0.2, 0.0);
+            a.decide(0.3, 0.0);
+        }
+        let last = seen.last().unwrap();
+        assert_eq!(last, &vec![0.1, 0.2, 0.3]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Load-balancing policies for distributing requests across Web-service
+//! instances. The paper's testbed uses LVS with **least-connection**
+//! scheduling (§III-C); round-robin and weighted round-robin are provided
+//! for the DNS tier and ablations.
+
+use crate::workload::Instance;
+
+/// A balancing policy picks the index of the instance to receive the next
+/// request.
+pub trait Balancer {
+    fn pick(&mut self, instances: &[Instance]) -> Option<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// LVS least-connection: the instance with the fewest active connections
+/// (ties broken by lowest index, matching ipvs behaviour deterministically).
+#[derive(Debug, Default)]
+pub struct LeastConnection;
+
+impl Balancer for LeastConnection {
+    fn pick(&mut self, instances: &[Instance]) -> Option<usize> {
+        instances
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, inst)| (inst.connections, *i))
+            .map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &'static str {
+        "least-connection"
+    }
+}
+
+/// Round-robin (the paper's DNS policy across the four LVS directors).
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Balancer for RoundRobin {
+    fn pick(&mut self, instances: &[Instance]) -> Option<usize> {
+        if instances.is_empty() {
+            return None;
+        }
+        let i = self.next % instances.len();
+        self.next = self.next.wrapping_add(1);
+        Some(i)
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Weighted round-robin (ablation; weight = remaining CPU headroom).
+#[derive(Debug, Default)]
+pub struct WeightedRoundRobin {
+    counter: u64,
+}
+
+impl Balancer for WeightedRoundRobin {
+    fn pick(&mut self, instances: &[Instance]) -> Option<usize> {
+        if instances.is_empty() {
+            return None;
+        }
+        self.counter = self.counter.wrapping_add(1);
+        // headroom-weighted draw, deterministic via the rotating counter
+        let weights: Vec<f64> =
+            instances.iter().map(|i| (1.0 - i.cpu_util).max(0.05)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut x = (self.counter as f64 * 0.6180339887498949).fract() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return Some(i);
+            }
+        }
+        Some(instances.len() - 1)
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted-round-robin"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn instances(conns: &[u32]) -> Vec<Instance> {
+        conns
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let mut inst = Instance::new(i as u64);
+                inst.connections = c;
+                inst
+            })
+            .collect()
+    }
+
+    #[test]
+    fn least_connection_picks_min() {
+        let insts = instances(&[3, 1, 2]);
+        assert_eq!(LeastConnection.pick(&insts), Some(1));
+    }
+
+    #[test]
+    fn least_connection_tie_breaks_low_index() {
+        let insts = instances(&[2, 1, 1]);
+        assert_eq!(LeastConnection.pick(&insts), Some(1));
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let insts = instances(&[0, 0, 0]);
+        let mut rr = RoundRobin::default();
+        let picks: Vec<usize> = (0..6).map(|_| rr.pick(&insts).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_pool_yields_none() {
+        assert_eq!(LeastConnection.pick(&[]), None);
+        assert_eq!(RoundRobin::default().pick(&[]), None);
+        assert_eq!(WeightedRoundRobin::default().pick(&[]), None);
+    }
+
+    #[test]
+    fn weighted_rr_avoids_saturated_instances() {
+        let mut insts = instances(&[0, 0]);
+        insts[0].cpu_util = 1.0; // saturated
+        insts[1].cpu_util = 0.0;
+        let mut w = WeightedRoundRobin::default();
+        let picks: Vec<usize> = (0..100).filter_map(|_| w.pick(&insts)).collect();
+        let to_free = picks.iter().filter(|&&p| p == 1).count();
+        assert!(to_free > 80, "saturated instance got too much: {to_free}");
+    }
+}

@@ -1,0 +1,87 @@
+//! httperf-style open-loop load generator: Poisson arrivals at the trace's
+//! instantaneous rate, exponential per-request service demand. Open-loop
+//! matters — like httperf, arrivals do not slow down when the service
+//! saturates, which is what creates the overload the autoscaler must chase.
+
+use crate::trace::web_synth::RateSeries;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+/// Generate request arrivals over `[start, end)` following `rates`.
+///
+/// Thinning (Lewis–Shedler) against the series' max rate gives an exact
+/// nonhomogeneous Poisson process; `mean_work_ms` is the mean exponential
+/// service demand per request on one instance.
+pub fn generate(
+    rates: &RateSeries,
+    start: u64,
+    end: u64,
+    mean_work_ms: f64,
+    rng: &mut Rng,
+) -> Vec<Request> {
+    let mut out = Vec::new();
+    let max_rate = rates.peak().max(1e-9);
+    let mut t = start as f64;
+    while t < end as f64 {
+        t += rng.exp(max_rate);
+        if t >= end as f64 {
+            break;
+        }
+        let inst_rate = rates.at(t as u64);
+        if rng.f64() < inst_rate / max_rate {
+            out.push(Request {
+                arrival_ms: (t * 1000.0) as u64,
+                work_ms: rng.exp(1.0 / mean_work_ms).max(0.1) as u32 + 1,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(rate: f64, secs: u64) -> RateSeries {
+        RateSeries { sample_period: 20, rates: vec![rate; (secs / 20) as usize] }
+    }
+
+    #[test]
+    fn rate_matches_expectation() {
+        let rates = flat(100.0, 200);
+        let mut rng = Rng::new(1);
+        let reqs = generate(&rates, 0, 200, 20.0, &mut rng);
+        let measured = reqs.len() as f64 / 200.0;
+        assert!((measured - 100.0).abs() < 5.0, "rate={measured}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_bounded() {
+        let rates = flat(50.0, 100);
+        let mut rng = Rng::new(2);
+        let reqs = generate(&rates, 10, 100, 20.0, &mut rng);
+        assert!(reqs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        assert!(reqs.iter().all(|r| (10_000..100_000).contains(&r.arrival_ms)));
+    }
+
+    #[test]
+    fn thinning_tracks_rate_changes() {
+        // first half rate 10, second half rate 100
+        let mut rates = vec![10.0; 5];
+        rates.extend(vec![100.0; 5]);
+        let rs = RateSeries { sample_period: 20, rates };
+        let mut rng = Rng::new(3);
+        let reqs = generate(&rs, 0, 200, 20.0, &mut rng);
+        let first = reqs.iter().filter(|r| r.arrival_ms < 100_000).count();
+        let second = reqs.len() - first;
+        assert!(second > 4 * first, "first={first} second={second}");
+    }
+
+    #[test]
+    fn work_is_positive() {
+        let rates = flat(50.0, 40);
+        let mut rng = Rng::new(4);
+        let reqs = generate(&rates, 0, 40, 15.0, &mut rng);
+        assert!(reqs.iter().all(|r| r.work_ms >= 1));
+    }
+}

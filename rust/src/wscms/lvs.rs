@@ -1,0 +1,117 @@
+//! The Fig.-4 front tier: DNS round-robin across four LVS directors, each
+//! distributing to the shared instance pool with least-connection
+//! scheduling (direct-route mode: responses bypass the director, so the
+//! director only tracks connection counts).
+
+use crate::workload::Instance;
+
+use super::balancer::{Balancer, LeastConnection, RoundRobin};
+
+/// One LVS director.
+pub struct Director {
+    pub id: usize,
+    balancer: LeastConnection,
+    pub forwarded: u64,
+}
+
+impl Director {
+    fn new(id: usize) -> Self {
+        Self { id, balancer: LeastConnection, forwarded: 0 }
+    }
+}
+
+/// The DNS + LVS front end.
+pub struct FrontEnd {
+    dns: RoundRobin,
+    pub directors: Vec<Director>,
+}
+
+impl FrontEnd {
+    /// The paper deploys four directors.
+    pub fn paper() -> Self {
+        Self::new(4)
+    }
+
+    pub fn new(n_directors: usize) -> Self {
+        assert!(n_directors > 0);
+        Self {
+            dns: RoundRobin::default(),
+            directors: (0..n_directors).map(Director::new).collect(),
+        }
+    }
+
+    /// Route one incoming connection: DNS picks a director (round-robin per
+    /// client resolution), the director picks an instance
+    /// (least-connection). Returns (director, instance) indices and bumps
+    /// the instance's connection count.
+    pub fn route(&mut self, instances: &mut [Instance]) -> Option<(usize, usize)> {
+        if instances.is_empty() {
+            return None;
+        }
+        let d = self.dns_pick();
+        let director = &mut self.directors[d];
+        let i = director.balancer.pick(instances)?;
+        director.forwarded += 1;
+        instances[i].connections += 1;
+        Some((d, i))
+    }
+
+    fn dns_pick(&mut self) -> usize {
+        // DNS RR over directors: reuse the RoundRobin balancer on a dummy
+        // slice the length of the director list.
+        let dummy: Vec<Instance> =
+            (0..self.directors.len() as u64).map(Instance::new).collect();
+        self.dns.pick(&dummy).unwrap()
+    }
+
+    /// A connection completed on `instance`.
+    pub fn complete(&mut self, instances: &mut [Instance], instance: usize) {
+        let inst = &mut instances[instance];
+        debug_assert!(inst.connections > 0, "completing on idle instance");
+        inst.connections = inst.connections.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dns_spreads_across_directors() {
+        let mut fe = FrontEnd::paper();
+        let mut insts: Vec<Instance> = (0..8).map(Instance::new).collect();
+        for _ in 0..40 {
+            fe.route(&mut insts).unwrap();
+        }
+        for d in &fe.directors {
+            assert_eq!(d.forwarded, 10, "director {} skewed", d.id);
+        }
+    }
+
+    #[test]
+    fn least_connection_keeps_pool_balanced() {
+        let mut fe = FrontEnd::paper();
+        let mut insts: Vec<Instance> = (0..5).map(Instance::new).collect();
+        for _ in 0..50 {
+            fe.route(&mut insts).unwrap();
+        }
+        for inst in &insts {
+            assert_eq!(inst.connections, 10);
+        }
+    }
+
+    #[test]
+    fn complete_decrements() {
+        let mut fe = FrontEnd::new(1);
+        let mut insts: Vec<Instance> = (0..2).map(Instance::new).collect();
+        let (_, i) = fe.route(&mut insts).unwrap();
+        fe.complete(&mut insts, i);
+        assert_eq!(insts[i].connections, 0);
+    }
+
+    #[test]
+    fn empty_pool_routes_none() {
+        let mut fe = FrontEnd::paper();
+        assert!(fe.route(&mut []).is_none());
+    }
+}

@@ -1,0 +1,142 @@
+//! WS CMS — the cloud management service for Web services (Oceano-like,
+//! §II-A): **WS Server** (resource management policy + autoscaler) and the
+//! serving data plane (DNS-RR → LVS tier → least-connection instances,
+//! Fig. 4).
+//!
+//! Resource-management policy (§II-B): idle resources are released to the
+//! RPS *immediately*; deficits are requested (and treated as urgent by the
+//! cooperative provisioning policy).
+
+pub mod autoscaler;
+pub mod balancer;
+pub mod loadgen;
+pub mod lvs;
+pub mod serving;
+
+use crate::sim::SimTime;
+
+/// WS Server state for the consolidation simulation: tracks the instance
+/// demand (from the autoscaler-derived demand series) against what the RPS
+/// has actually provisioned, and accounts satisfaction for the paper's
+/// "enough resources to the Web service department" claim.
+#[derive(Debug)]
+pub struct WsServer {
+    /// Nodes currently provisioned by the RPS.
+    holding: u64,
+    /// Current demand target (instances ≙ nodes, §III-D).
+    demand: u64,
+    /// Node-seconds of unmet demand (0 in every paper scenario).
+    pub shortage_node_secs: u64,
+    /// Number of samples with any shortage.
+    pub shortage_samples: u64,
+    last_change: SimTime,
+}
+
+impl WsServer {
+    pub fn new() -> Self {
+        Self { holding: 0, demand: 0, shortage_node_secs: 0, shortage_samples: 0, last_change: 0 }
+    }
+
+    pub fn holding(&self) -> u64 {
+        self.holding
+    }
+
+    pub fn demand(&self) -> u64 {
+        self.demand
+    }
+
+    /// Account the elapsed interval, then adopt a new demand target.
+    /// Returns the (release, request) the management policy issues:
+    /// surplus is released immediately; deficit is requested urgently.
+    pub fn set_demand(&mut self, demand: u64, now: SimTime) -> WsAction {
+        if self.holding < self.demand {
+            let dt = now - self.last_change;
+            self.shortage_node_secs += (self.demand - self.holding) * dt;
+            if dt > 0 {
+                self.shortage_samples += 1;
+            }
+        }
+        self.last_change = now;
+        self.demand = demand;
+        if self.holding > demand {
+            WsAction::Release(self.holding - demand)
+        } else if self.holding < demand {
+            WsAction::Request(demand - self.holding)
+        } else {
+            WsAction::None
+        }
+    }
+
+    /// RPS granted `n` nodes.
+    pub fn grant(&mut self, n: u64) {
+        self.holding += n;
+    }
+
+    /// WS released `n` nodes back (called by the driver after `Release`).
+    pub fn release(&mut self, n: u64) {
+        assert!(n <= self.holding, "releasing more than held");
+        self.holding -= n;
+    }
+}
+
+impl Default for WsServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// What the WS resource-management policy wants after a demand change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WsAction {
+    None,
+    /// Release this many idle nodes to the RPS immediately.
+    Release(u64),
+    /// Request this many more nodes (urgent).
+    Request(u64),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surplus_released_immediately() {
+        let mut ws = WsServer::new();
+        ws.grant(10);
+        assert_eq!(ws.set_demand(4, 20), WsAction::Release(6));
+        ws.release(6);
+        assert_eq!(ws.holding(), 4);
+    }
+
+    #[test]
+    fn deficit_requested() {
+        let mut ws = WsServer::new();
+        ws.grant(2);
+        assert_eq!(ws.set_demand(6, 20), WsAction::Request(4));
+    }
+
+    #[test]
+    fn satisfied_demand_is_none() {
+        let mut ws = WsServer::new();
+        ws.grant(3);
+        assert_eq!(ws.set_demand(3, 20), WsAction::None);
+        assert_eq!(ws.shortage_node_secs, 0);
+    }
+
+    #[test]
+    fn shortage_accounting_is_time_weighted() {
+        let mut ws = WsServer::new();
+        ws.set_demand(5, 0); // demand 5, holding 0
+        // 10 seconds later the shortage has been 5 nodes for 10 s
+        ws.set_demand(5, 10);
+        assert_eq!(ws.shortage_node_secs, 50);
+        assert_eq!(ws.shortage_samples, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing more than held")]
+    fn over_release_panics() {
+        let mut ws = WsServer::new();
+        ws.release(1);
+    }
+}

@@ -1,0 +1,222 @@
+//! The serving data plane, two ways:
+//!
+//! 1. [`autoscale_series`] — the fast path behind **Fig. 5**: sweep the
+//!    request-rate series through the paper's reactive autoscaler and
+//!    produce the instance-demand series (what §III-C measures on the Xen
+//!    testbed, here via the CPU-utilization model).
+//! 2. [`simulate_requests`] — a request-level discrete-event simulation of
+//!    the Fig.-4 deployment (open-loop arrivals → DNS-RR → 4 LVS
+//!    least-connection → FCFS instances), producing response-time and
+//!    throughput distributions. Too slow for two simulated weeks at peak
+//!    rate, it validates the analytic model on windows (tests/benches) —
+//!    exactly the role of the paper's real testbed run.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::trace::web_synth::RateSeries;
+use crate::util::rng::Rng;
+use crate::util::stats::OnlineStats;
+use crate::workload::{Instance, Request};
+
+use super::autoscaler::{utilization, Reactive};
+use super::lvs::FrontEnd;
+
+/// Instance-demand series: one entry per `rates.sample_period` (Fig. 5's
+/// y-axis). Also returns the per-sample utilization seen by the scaler.
+pub fn autoscale_series(rates: &RateSeries, cap: f64, max: u64) -> (Vec<u64>, Vec<f64>) {
+    let mut scaler = Reactive::new(max);
+    let mut demand = Vec::with_capacity(rates.rates.len());
+    let mut utils = Vec::with_capacity(rates.rates.len());
+    for &rate in &rates.rates {
+        // the utilization the *current* fleet experienced this interval
+        let util = utilization(rate, scaler.instances(), cap);
+        utils.push(util);
+        demand.push(scaler.decide(util));
+    }
+    (demand, utils)
+}
+
+/// Analytic per-sample mean response time (M/M/1 per instance under
+/// least-connection ≈ even split): W = S/(1−ρ), clamped at `clamp_ms`
+/// when saturated. `mean_work_ms` is the mean service demand S.
+pub fn analytic_response_ms(
+    rate: f64,
+    instances: u64,
+    cap: f64,
+    mean_work_ms: f64,
+    clamp_ms: f64,
+) -> f64 {
+    let rho = if instances == 0 { 1.0 } else { rate / (instances as f64 * cap) };
+    if rho >= 0.995 {
+        clamp_ms
+    } else {
+        (mean_work_ms / (1.0 - rho)).min(clamp_ms)
+    }
+}
+
+/// Result of a request-level run.
+#[derive(Debug)]
+pub struct ServingStats {
+    pub completed: u64,
+    pub response_ms: OnlineStats,
+    /// Response-time samples (for percentiles).
+    pub samples: Vec<f64>,
+    /// Per-instance busy fraction.
+    pub utilization: Vec<f64>,
+    pub horizon_ms: u64,
+}
+
+impl ServingStats {
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 * 1000.0 / self.horizon_ms as f64
+    }
+}
+
+/// Request-level simulation of `n_instances` FCFS single-CPU instances
+/// behind the Fig.-4 front end. `requests` must be arrival-sorted
+/// (work in ms of CPU).
+pub fn simulate_requests(
+    requests: &[Request],
+    n_instances: usize,
+    rng: &mut Rng,
+) -> ServingStats {
+    let _ = rng; // deterministic given the request list; kept for API parity
+    assert!(n_instances > 0);
+    let mut instances: Vec<Instance> = (0..n_instances as u64).map(Instance::new).collect();
+    let mut front = FrontEnd::paper();
+
+    // per-instance FCFS queue: time when the instance becomes free (ms)
+    let mut free_at = vec![0u64; n_instances];
+    let mut busy_ms = vec![0u64; n_instances];
+
+    // heap of departures: Reverse<(depart_ms, instance, seq)>
+    let mut departures: BinaryHeap<Reverse<(u64, usize, u64)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+
+    let mut stats = OnlineStats::new();
+    let mut samples = Vec::with_capacity(requests.len());
+    let mut completed = 0u64;
+    // replay duration (first arrival → last arrival + drain margin)
+    let horizon_ms = match (requests.first(), requests.last()) {
+        (Some(f), Some(l)) => l.arrival_ms - f.arrival_ms + 60_000,
+        _ => 0,
+    };
+
+    for req in requests {
+        let now_ms = req.arrival_ms;
+        // retire departures up to now so connection counts are current
+        while let Some(Reverse((t, inst, _))) = departures.peek().copied() {
+            if t > now_ms {
+                break;
+            }
+            departures.pop();
+            front.complete(&mut instances, inst);
+        }
+        let Some((_, inst)) = front.route(&mut instances) else {
+            continue;
+        };
+        // FCFS: starts when the instance frees up
+        let start = free_at[inst].max(now_ms);
+        let finish = start + req.work_ms as u64;
+        free_at[inst] = finish;
+        busy_ms[inst] += req.work_ms as u64;
+        seq += 1;
+        departures.push(Reverse((finish, inst, seq)));
+        let resp = (finish - now_ms) as f64;
+        stats.push(resp);
+        samples.push(resp);
+        completed += 1;
+    }
+
+    let utilization = busy_ms
+        .iter()
+        .map(|&b| b as f64 / horizon_ms.max(1) as f64)
+        .collect();
+    ServingStats { completed, response_ms: stats, samples, utilization, horizon_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::web_synth::{generate, WebTraceConfig};
+    use crate::util::stats::percentile;
+    use crate::wscms::loadgen;
+
+    #[test]
+    fn fig5_series_peaks_at_target() {
+        let cfg = WebTraceConfig::default();
+        let rates = generate(&cfg);
+        let (demand, _) = autoscale_series(&rates, cfg.instance_capacity_rps, 10_000);
+        let peak = *demand.iter().max().unwrap();
+        // the ±1-per-20 s rule lags sharp ramps; the equilibrium peak is 64
+        assert!(
+            (60..=66).contains(&peak),
+            "peak demand {peak} should be ~64"
+        );
+        assert!(*demand.iter().min().unwrap() >= 1);
+    }
+
+    #[test]
+    fn fig5_mean_far_below_peak() {
+        let cfg = WebTraceConfig::default();
+        let rates = generate(&cfg);
+        let (demand, _) = autoscale_series(&rates, cfg.instance_capacity_rps, 10_000);
+        let mean = demand.iter().sum::<u64>() as f64 / demand.len() as f64;
+        let peak = *demand.iter().max().unwrap() as f64;
+        assert!(
+            peak / mean > 3.0,
+            "consolidation headroom requires peak≫mean (peak={peak}, mean={mean:.1})"
+        );
+    }
+
+    #[test]
+    fn analytic_response_grows_with_load() {
+        let base = analytic_response_ms(10.0, 1, 50.0, 20.0, 5000.0);
+        let loaded = analytic_response_ms(45.0, 1, 50.0, 20.0, 5000.0);
+        assert!(loaded > base);
+        assert_eq!(analytic_response_ms(100.0, 1, 50.0, 20.0, 5000.0), 5000.0);
+    }
+
+    #[test]
+    fn request_sim_low_load_response_near_service_time() {
+        let rates = RateSeries { sample_period: 20, rates: vec![5.0; 30] };
+        let mut rng = Rng::new(5);
+        let reqs = loadgen::generate(&rates, 0, 600, 20.0, &mut rng);
+        let stats = simulate_requests(&reqs, 4, &mut rng);
+        // at ρ≈2.5% the mean response ≈ mean service time (20 ms)
+        assert!(
+            (stats.response_ms.mean() - 20.0).abs() < 8.0,
+            "mean={}",
+            stats.response_ms.mean()
+        );
+    }
+
+    #[test]
+    fn request_sim_overload_queues() {
+        // 2 instances at 50 rps capacity = 100 rps; offer 150 rps
+        let rates = RateSeries { sample_period: 20, rates: vec![150.0; 10] };
+        let mut rng = Rng::new(6);
+        let reqs = loadgen::generate(&rates, 0, 200, 20.0, &mut rng);
+        let stats = simulate_requests(&reqs, 2, &mut rng);
+        let p90 = percentile(&stats.samples, 0.9);
+        assert!(p90 > 500.0, "overload p90 should blow up, got {p90}");
+        assert!(stats.utilization.iter().all(|&u| u > 0.8));
+    }
+
+    #[test]
+    fn request_sim_matches_analytic_at_moderate_load() {
+        // ρ = 0.6: M/M/1 predicts W = 20/(1-0.6) = 50 ms
+        let rates = RateSeries { sample_period: 20, rates: vec![120.0; 60] };
+        let mut rng = Rng::new(7);
+        let reqs = loadgen::generate(&rates, 0, 1200, 20.0, &mut rng);
+        let stats = simulate_requests(&reqs, 4, &mut rng);
+        let analytic = analytic_response_ms(120.0, 4, 50.0, 20.0, 5000.0);
+        let ratio = stats.response_ms.mean() / analytic;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "sim {} vs analytic {analytic}",
+            stats.response_ms.mean()
+        );
+    }
+}

