@@ -1,20 +1,38 @@
 //! Micro-benchmarks over the L3 hot paths: the event engine, the ledger,
-//! the schedulers, the kill policy, the balancers, and (when artifacts are
-//! present) the PJRT forecast call. These are the §Perf probes used in
-//! EXPERIMENTS.md.
+//! the schedulers, the kill policy, the balancers, the fig7/fig8 sweep
+//! (serial vs parallel), and (when artifacts are present) the PJRT
+//! forecast call. These are the §Perf probes used in EXPERIMENTS.md.
 //!
-//! `cargo bench --bench micro`
+//! `cargo bench --bench micro` — add `-- --quick` (or set
+//! `PHOENIX_BENCH_QUICK=1`) for the short CI smoke pass. Every run writes
+//! the machine-readable `BENCH_micro.json` (ns/event + events/sec per
+//! probe) — the repo's perf-trajectory record; commit-over-commit deltas
+//! come from comparing that file across runs (see ROADMAP §Perf).
+//!
+//! EXPERIMENTS notes (§Perf):
+//! * "100k chained events" and "100k same-timestamp events" are the
+//!   engine probes. The seed engine paid one `Vec` allocation per
+//!   dispatched event (a fresh `Schedule` buffer) plus O(log n) binary
+//!   heap maintenance per operation; the timing-wheel engine (sim/wheel.rs)
+//!   reuses one per-engine scratch buffer and makes push/pop O(1)
+//!   amortized with batch-drain of same-timestamp storms — the acceptance
+//!   gate for this rewrite is ≥2× on both probes, read from
+//!   `BENCH_micro.json` against the seed's numbers.
+//! * "full fig7/fig8 sweep" is timed twice — workers=1 (serial) and
+//!   workers=0 (one per core) — and this bench *asserts* the two produce
+//!   identical RunResult tables before reporting the speedup.
 
 use std::collections::BTreeMap;
 
 use phoenix_cloud::cluster::{Ledger, Owner};
-use phoenix_cloud::config::{KillOrder, SchedulerKind};
+use phoenix_cloud::config::{ExperimentConfig, KillOrder, SchedulerKind};
+use phoenix_cloud::experiments::consolidation;
 use phoenix_cloud::runtime::ForecastEngine;
 use phoenix_cloud::sim::{Engine, EventHandler, Schedule};
 use phoenix_cloud::stcms::kill::pick_victims;
 use phoenix_cloud::stcms::queue::JobQueue;
 use phoenix_cloud::stcms::scheduler::{RunningJob, Scheduler};
-use phoenix_cloud::util::bench::{bench, section};
+use phoenix_cloud::util::bench::{bench, quick, section, BenchReport};
 use phoenix_cloud::util::rng::Rng;
 use phoenix_cloud::workload::{Instance, Job};
 use phoenix_cloud::wscms::balancer::{Balancer, LeastConnection, RoundRobin};
@@ -29,25 +47,36 @@ impl EventHandler<u32> for Chain {
     }
 }
 
+/// Scale iteration counts down under `--quick` / `PHOENIX_BENCH_QUICK=1`.
+fn iters(n: usize) -> usize {
+    if quick() {
+        (n / 10).max(1)
+    } else {
+        n
+    }
+}
+
 fn main() {
+    let mut rep = BenchReport::new("micro");
+
     section("event engine");
-    bench("100k chained events", 1, 20, || {
+    rep.record(bench("100k chained events", 1, iters(20), || {
         let mut eng = Engine::new();
         eng.schedule(0, 100_000u32);
         eng.run(&mut Chain);
         eng.processed()
-    });
-    bench("100k same-timestamp events", 1, 20, || {
+    }));
+    rep.record(bench("100k same-timestamp events", 1, iters(20), || {
         let mut eng: Engine<u32> = Engine::new();
         for i in 0..100_000u32 {
             eng.schedule(5, i.min(0));
         }
         eng.run(&mut Chain);
         eng.processed()
-    });
+    }));
 
     section("cluster ledger");
-    bench("1M transfers", 1, 10, || {
+    rep.record(bench("1M transfers", 1, iters(10), || {
         let mut l = Ledger::new(208);
         for i in 0..1_000_000u64 {
             let n = i % 32;
@@ -55,7 +84,7 @@ fn main() {
             let _ = l.transfer(Owner::St, Owner::Free, n);
         }
         1_000_000
-    });
+    }));
 
     section("schedulers (queue of 500, pool 160)");
     let mut rng = Rng::new(1);
@@ -84,9 +113,9 @@ fn main() {
     }
     for kind in [SchedulerKind::FirstFit, SchedulerKind::Fcfs, SchedulerKind::EasyBackfill] {
         let sched = Scheduler::new(kind);
-        bench(&format!("{} pick over 500 queued", kind.name()), 10, 200, || {
+        rep.record(bench(&format!("{} pick over 500 queued", kind.name()), 10, iters(200), || {
             sched.pick(&queue, &running, 64, 1000).len() as u64
-        });
+        }));
     }
 
     section("kill policy (200 running jobs)");
@@ -107,9 +136,9 @@ fn main() {
         KillOrder::MaxSizeFirst,
         KillOrder::ShortestElapsedFirst,
     ] {
-        bench(&format!("pick_victims({}) for 40 nodes", order.name()), 10, 200, || {
+        rep.record(bench(&format!("pick_victims({}) for 40 nodes", order.name()), 10, iters(200), || {
             pick_victims(&running, 40, order, 6000).len() as u64
-        });
+        }));
     }
 
     section("balancers (64 instances)");
@@ -118,21 +147,33 @@ fn main() {
         inst.connections = rng.range_u64(0, 50) as u32;
     }
     let mut lc = LeastConnection;
-    bench("least-connection pick x10k", 5, 100, || {
+    rep.record(bench("least-connection pick x10k", 5, iters(100), || {
         let mut acc = 0u64;
         for _ in 0..10_000 {
             acc += lc.pick(&instances).unwrap() as u64;
         }
         acc.min(10_000)
-    });
+    }));
     let mut rr = RoundRobin::default();
-    bench("round-robin pick x10k", 5, 100, || {
+    rep.record(bench("round-robin pick x10k", 5, iters(100), || {
         let mut acc = 0u64;
         for _ in 0..10_000 {
             acc += rr.pick(&instances).unwrap() as u64;
         }
         acc.min(10_000)
-    });
+    }));
+
+    section("fig7/fig8 sweep (SC + 6 DC sizes, two-week traces)");
+    let mut serial_cfg = ExperimentConfig::default();
+    serial_cfg.workers = 1;
+    let mut par_cfg = ExperimentConfig::default();
+    par_cfg.workers = 0; // one per core
+    let serial = rep_bench_sweep(&mut rep, "full sweep serial (workers=1)", &serial_cfg);
+    let par = rep_bench_sweep(&mut rep, "full sweep parallel (workers=auto)", &par_cfg);
+    println!(
+        "parallel sweep speedup: {:.2}x over serial (identical tables verified)",
+        serial / par.max(1e-9)
+    );
 
     if ForecastEngine::artifacts_present("artifacts") {
         section("PJRT forecaster (the predictive-autoscaler hot path)");
@@ -140,16 +181,47 @@ fn main() {
         let (s, w) = (engine.meta.num_services, engine.meta.window);
         let util: Vec<f32> = (0..s * w).map(|i| (i % 97) as f32 / 97.0).collect();
         let reqs = util.clone();
-        bench("forecast (batched 8x64) per call", 5, 200, || {
+        rep.record(bench("forecast (batched 8x64) per call", 5, iters(200), || {
             engine.forecast(&util, &reqs).unwrap();
             1
-        });
+        }));
         let target: Vec<f32> = (0..s).map(|i| i as f32).collect();
-        bench("train_step per call", 5, 200, || {
+        rep.record(bench("train_step per call", 5, iters(200), || {
             engine.train_step(&util, &reqs, &target).unwrap();
             1
-        });
+        }));
     } else {
         println!("\n(skipping PJRT benches: run `make artifacts` first)");
     }
+
+    match rep.write() {
+        Ok(path) => println!("\nmachine-readable report: {path}"),
+        Err(e) => eprintln!("\nfailed to write bench report: {e}"),
+    }
+}
+
+/// Time one full sweep configuration and verify the parallel/serial runs
+/// agree; returns the mean ns so the caller can report the speedup.
+fn rep_bench_sweep(rep: &mut BenchReport, name: &str, cfg: &ExperimentConfig) -> f64 {
+    let r = bench(name, 0, iters(3).max(2), || {
+        consolidation::sweep(cfg, &consolidation::PAPER_SIZES)
+            .iter()
+            .map(|r| r.events)
+            .sum()
+    });
+    let mean = r.mean_ns;
+    rep.record(r);
+    // determinism gate: the parallel sweep must match the serial tables
+    static TABLE: std::sync::OnceLock<Vec<(String, u64, u64, u64, u64)>> =
+        std::sync::OnceLock::new();
+    let table: Vec<(String, u64, u64, u64, u64)> =
+        consolidation::sweep(cfg, &consolidation::PAPER_SIZES)
+            .iter()
+            .map(|r| {
+                (r.label.clone(), r.completed, r.killed, r.avg_turnaround.to_bits(), r.events)
+            })
+            .collect();
+    let first = TABLE.get_or_init(|| table.clone());
+    assert_eq!(first, &table, "parallel sweep diverged from serial RunResult table");
+    mean
 }

@@ -105,6 +105,10 @@ pub struct ExperimentConfig {
     pub ws_sample_period: u64,
     /// Seconds to move a node between CMSes (paper: "only seconds").
     pub realloc_delay: u64,
+    /// Worker threads for experiment fan-out (sweeps, sensitivity grids,
+    /// ablations): 0 = one per available core, 1 = serial. Parallel runs
+    /// return results in configuration order, bit-identical to serial.
+    pub workers: usize,
     pub hpc: HpcTraceConfig,
     pub web: WebTraceConfig,
 }
@@ -121,6 +125,7 @@ impl Default for ExperimentConfig {
             kill_order: KillOrder::MinSizeShortestElapsed,
             ws_sample_period: 20,
             realloc_delay: 5,
+            workers: 0,
             hpc: HpcTraceConfig::default(),
             web: WebTraceConfig::default(),
         }
@@ -222,6 +227,11 @@ impl ExperimentConfig {
                 self.web.target_peak_instances = n;
             }
         }
+        if let Some(x) = doc.get("experiments") {
+            if let Some(n) = x.get("workers").and_then(Json::as_u64) {
+                self.workers = n as usize;
+            }
+        }
         if let Some(h) = doc.get("hpc") {
             if let Some(n) = h.get("num_jobs").and_then(Json::as_u64) {
                 self.hpc.num_jobs = n as usize;
@@ -292,6 +302,17 @@ mod tests {
         assert_eq!(cfg.hpc.num_jobs, 100);
         assert_eq!(cfg.horizon, 3600);
         assert_eq!(cfg.web.horizon, 3600);
+    }
+
+    #[test]
+    fn toml_experiments_workers() {
+        let doc =
+            crate::util::toml::parse("[experiments]\nworkers = 4\n").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.workers, 0, "default is auto (one per core)");
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.workers, 4);
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -6,6 +6,8 @@
 
 pub mod realtime;
 
+use std::sync::Arc;
+
 use crate::config::{Configuration, ExperimentConfig};
 use crate::metrics::Registry;
 use crate::provision::{PolicyKind, Rps};
@@ -54,11 +56,16 @@ pub struct RunResult {
 }
 
 /// The consolidation simulation: one cluster, one configuration.
+///
+/// The input traces are shared (`Arc<[..]>`) so sweep workers replay one
+/// immutable generated trace instead of deep-cloning jobs per run; the
+/// whole sim is `Send`, which lets the experiment layer fan runs out
+/// across `std::thread::scope` workers.
 pub struct ConsolidationSim {
     cfg: ExperimentConfig,
-    jobs: Vec<Job>,
+    jobs: Arc<[Job]>,
     /// WS node-demand per `ws_sample_period` (from the Fig.-5 autoscaler).
-    ws_demand: Vec<u64>,
+    ws_demand: Arc<[u64]>,
     rps: Rps,
     st: StServer,
     ws: WsServer,
@@ -67,8 +74,15 @@ pub struct ConsolidationSim {
 
 impl ConsolidationSim {
     /// Build from a config plus precomputed traces. `ws_demand` is the
-    /// instance-demand series (instances ≙ nodes).
-    pub fn new(cfg: ExperimentConfig, jobs: Vec<Job>, ws_demand: Vec<u64>) -> Self {
+    /// instance-demand series (instances ≙ nodes). Both traces accept
+    /// owned `Vec`s or shared `Arc` slices.
+    pub fn new(
+        cfg: ExperimentConfig,
+        jobs: impl Into<Arc<[Job]>>,
+        ws_demand: impl Into<Arc<[u64]>>,
+    ) -> Self {
+        let jobs = jobs.into();
+        let ws_demand = ws_demand.into();
         let policy = match cfg.configuration {
             Configuration::Static => {
                 PolicyKind::StaticPartition { st: cfg.st_nodes, ws: cfg.ws_nodes }
@@ -286,6 +300,15 @@ mod tests {
         cfg.web.target_peak_instances = 4;
         cfg.ws_sample_period = 20;
         cfg
+    }
+
+    /// The experiment layer runs sims on scoped worker threads; keep the
+    /// run-producing types `Send` (compile-time check).
+    #[test]
+    fn run_types_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ConsolidationSim>();
+        assert_send::<RunResult>();
     }
 
     #[test]

@@ -9,35 +9,35 @@ use crate::trace::web_synth;
 use crate::wscms::autoscaler::{utilization, Predictive, Reactive};
 
 use super::consolidation::build_inputs;
+use super::parallel;
 
-/// Kill-order ablation at a fixed cluster size.
+/// Kill-order ablation at a fixed cluster size. Variants share one
+/// generated trace (kill order doesn't change the inputs) and run across
+/// worker threads; results come back in variant order.
 pub fn kill_orders(base: &ExperimentConfig) -> Vec<(&'static str, RunResult)> {
-    [
+    let orders = [
         KillOrder::MinSizeShortestElapsed,
         KillOrder::MaxSizeFirst,
         KillOrder::ShortestElapsedFirst,
-    ]
-    .into_iter()
-    .map(|order| {
+    ];
+    let (jobs, demand) = build_inputs(base);
+    parallel::parallel_map(orders.len(), base.workers, |i| {
         let mut cfg = base.clone();
-        cfg.kill_order = order;
-        let (jobs, demand) = build_inputs(&cfg);
-        (order.name(), ConsolidationSim::new(cfg, jobs, demand).run())
+        cfg.kill_order = orders[i];
+        (orders[i].name(), ConsolidationSim::new(cfg, jobs.clone(), demand.clone()).run())
     })
-    .collect()
 }
 
-/// Scheduler ablation at a fixed cluster size.
+/// Scheduler ablation at a fixed cluster size; same fan-out and trace
+/// sharing as [`kill_orders`].
 pub fn schedulers(base: &ExperimentConfig) -> Vec<(&'static str, RunResult)> {
-    [SchedulerKind::FirstFit, SchedulerKind::Fcfs, SchedulerKind::EasyBackfill]
-        .into_iter()
-        .map(|sched| {
-            let mut cfg = base.clone();
-            cfg.scheduler = sched;
-            let (jobs, demand) = build_inputs(&cfg);
-            (sched.name(), ConsolidationSim::new(cfg, jobs, demand).run())
-        })
-        .collect()
+    let kinds = [SchedulerKind::FirstFit, SchedulerKind::Fcfs, SchedulerKind::EasyBackfill];
+    let (jobs, demand) = build_inputs(base);
+    parallel::parallel_map(kinds.len(), base.workers, |i| {
+        let mut cfg = base.clone();
+        cfg.scheduler = kinds[i];
+        (kinds[i].name(), ConsolidationSim::new(cfg, jobs.clone(), demand.clone()).run())
+    })
 }
 
 /// Autoscaler comparison on the Fig.-5 trace: reactive (paper) vs

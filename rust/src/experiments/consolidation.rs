@@ -3,27 +3,35 @@
 //! cluster) at sizes 200, 190, 180, 170, 160, 150, reporting completed
 //! jobs, average turnaround, and killed jobs over the two-week traces.
 
+use std::sync::Arc;
+
 use crate::config::{Configuration, ExperimentConfig};
 use crate::coordinator::{ConsolidationSim, RunResult};
 use crate::trace::csv::Table;
 use crate::trace::hpc_synth;
 use crate::workload::Job;
 
-use super::fig5;
+use super::{fig5, parallel};
 
 /// The paper's DC sweep sizes.
 pub const PAPER_SIZES: [u64; 6] = [200, 190, 180, 170, 160, 150];
 
-/// Build the shared inputs for one run: the HPC job trace and the WS
-/// node-demand series (autoscaler output, capped at the WS ceiling the
-/// configuration allows).
-pub fn build_inputs(cfg: &ExperimentConfig) -> (Vec<Job>, Vec<u64>) {
-    let jobs = hpc_synth::generate(&cfg.hpc);
-    let ws_cap = match cfg.configuration {
+/// The WS autoscaler ceiling a configuration allows.
+fn ws_cap(cfg: &ExperimentConfig) -> u64 {
+    match cfg.configuration {
         Configuration::Static => cfg.ws_nodes,
         Configuration::Dynamic => cfg.total_nodes,
-    };
-    let demand = fig5::demand_series(&cfg.web, ws_cap);
+    }
+}
+
+/// Build the shared inputs for one run: the HPC job trace and the WS
+/// node-demand series (autoscaler output, capped at the WS ceiling the
+/// configuration allows). Returned as shared slices so callers replaying
+/// the same traces against many configurations clone an `Arc`, not the
+/// data.
+pub fn build_inputs(cfg: &ExperimentConfig) -> (Arc<[Job]>, Arc<[u64]>) {
+    let jobs: Arc<[Job]> = hpc_synth::generate(&cfg.hpc).into();
+    let demand: Arc<[u64]> = fig5::demand_series(&cfg.web, ws_cap(cfg)).into();
     (jobs, demand)
 }
 
@@ -38,41 +46,48 @@ pub fn run_one(cfg: ExperimentConfig) -> RunResult {
 /// Jobs and the WS demand series are identical across runs (same seeds),
 /// exactly like replaying the same traces against each configuration.
 ///
+/// Runs execute across `std::thread::scope` workers (`base.workers`; 0 =
+/// one per core) pulling configurations from a shared queue; results come
+/// back in configuration order, so the tables are bit-identical to a
+/// serial sweep — each run is an independent deterministic simulation over
+/// the shared traces.
+///
 /// Perf note (EXPERIMENTS.md §Perf): trace generation dominates a single
 /// run (~8 ms of the ~9 ms), so the sweep generates each distinct trace
-/// once and replays it — the demand series depends only on the autoscaler
-/// cap, which is identical across configurations whenever the cap exceeds
-/// the calibrated 64-instance peak.
+/// once and shares it behind an `Arc` — the demand series depends only on
+/// the autoscaler cap, which is identical across configurations whenever
+/// the cap exceeds the calibrated 64-instance peak.
 pub fn sweep(base: &ExperimentConfig, sizes: &[u64]) -> Vec<RunResult> {
-    let mut results = Vec::with_capacity(sizes.len() + 1);
-    let jobs = hpc_synth::generate(&base.hpc);
+    // one immutable generated trace, shared by every run
+    let jobs: Arc<[Job]> = hpc_synth::generate(&base.hpc).into();
     // The autoscaler trajectory only depends on the cap when the cap binds;
     // compute the uncapped series once and reuse it for every cap above
     // its peak (all the paper's sizes — the calibrated peak is 64).
-    let uncapped = fig5::demand_series(&base.web, u64::MAX);
+    let uncapped: Arc<[u64]> = fig5::demand_series(&base.web, u64::MAX).into();
     let uncapped_peak = uncapped.iter().copied().max().unwrap_or(0);
-    let demand_for = |cap: u64, web: &crate::trace::web_synth::WebTraceConfig| {
-        if cap >= uncapped_peak {
-            uncapped.clone()
-        } else {
-            fig5::demand_series(web, cap)
-        }
-    };
 
+    let mut cfgs = Vec::with_capacity(sizes.len() + 1);
     let mut sc = base.clone();
     sc.configuration = Configuration::Static;
     sc.total_nodes = sc.st_nodes + sc.ws_nodes;
-    let d = demand_for(sc.ws_nodes, &sc.web);
-    results.push(ConsolidationSim::new(sc, jobs.clone(), d).run());
-
+    cfgs.push(sc);
     for &n in sizes {
         let mut dc = base.clone();
         dc.configuration = Configuration::Dynamic;
         dc.total_nodes = n;
-        let d = demand_for(n, &dc.web);
-        results.push(ConsolidationSim::new(dc, jobs.clone(), d).run());
+        cfgs.push(dc);
     }
-    results
+
+    parallel::parallel_map(cfgs.len(), base.workers, |i| {
+        let cfg = cfgs[i].clone();
+        let cap = ws_cap(&cfg);
+        let demand: Arc<[u64]> = if cap >= uncapped_peak {
+            uncapped.clone()
+        } else {
+            fig5::demand_series(&cfg.web, cap).into()
+        };
+        ConsolidationSim::new(cfg, jobs.clone(), demand).run()
+    })
 }
 
 /// Fig. 7 table: completed jobs + average turnaround per cluster size.
@@ -180,6 +195,29 @@ mod tests {
                 "{}: WS denied nodes",
                 r.label
             );
+        }
+    }
+
+    /// Parallel sweeps must produce tables bit-identical to serial ones:
+    /// same runs, same order, same numbers.
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        let mut serial = fast_cfg();
+        serial.workers = 1;
+        let mut par = fast_cfg();
+        par.workers = 4;
+        let a = sweep(&serial, &[180, 160, 150]);
+        let b = sweep(&par, &[180, 160, 150]);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.cluster_nodes, y.cluster_nodes);
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.killed, y.killed);
+            assert_eq!(x.in_flight, y.in_flight);
+            assert_eq!(x.avg_turnaround.to_bits(), y.avg_turnaround.to_bits());
+            assert_eq!(x.ws_shortage_node_secs, y.ws_shortage_node_secs);
+            assert_eq!(x.events, y.events);
         }
     }
 

@@ -5,5 +5,6 @@
 pub mod ablations;
 pub mod consolidation;
 pub mod fig5;
+pub mod parallel;
 pub mod report;
 pub mod sensitivity;

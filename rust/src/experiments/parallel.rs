@@ -1,0 +1,87 @@
+//! Scoped worker pool for experiment fan-out.
+//!
+//! Every sweep in this crate is embarrassingly parallel: independent,
+//! deterministic simulations over shared immutable traces. [`parallel_map`]
+//! runs `f(0)..f(n-1)` across `std::thread::scope` workers pulling indices
+//! from a shared counter (dynamic load balance — runs differ widely in
+//! cost across cluster sizes) and returns results **in input order**, so
+//! parallel sweeps produce tables bit-identical to serial ones.
+//!
+//! The worker count comes from `ExperimentConfig::workers` (0 = one per
+//! available core); grids that parallelize an outer axis set the inner
+//! sweep's `workers` to 1 to avoid multiplicative thread fan-out.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a configured worker count: `0` means one worker per available
+/// core; the result is clamped to `[1, items]`.
+pub fn effective_workers(configured: usize, items: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let w = if configured == 0 { auto } else { configured };
+    w.clamp(1, items.max(1))
+}
+
+/// Map `f` over `0..n` across scoped worker threads; results come back in
+/// input order. With one effective worker (or one item) this degrades to a
+/// plain serial loop — no threads, identical results either way.
+pub fn parallel_map<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = effective_workers(workers, n);
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker dropped a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let got = parallel_map(64, 4, |i| i * i);
+        assert_eq!(got, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let f = |i: usize| (i as u64).wrapping_mul(0x9E3779B97F4A7C15) % 1000;
+        assert_eq!(parallel_map(100, 1, f), parallel_map(100, 8, f));
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn effective_workers_clamps() {
+        assert_eq!(effective_workers(3, 100), 3);
+        assert_eq!(effective_workers(8, 2), 2);
+        assert_eq!(effective_workers(5, 0), 1);
+        assert!(effective_workers(0, 100) >= 1);
+    }
+}

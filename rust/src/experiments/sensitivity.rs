@@ -8,7 +8,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::RunResult;
 use crate::util::stats::OnlineStats;
 
-use super::consolidation;
+use super::{consolidation, parallel};
 
 /// Outcome of one seed: does DC-`size` beat SC on both §III-A benefits?
 #[derive(Debug, Clone)]
@@ -22,28 +22,30 @@ pub struct SeedOutcome {
     pub wins_both: bool,
 }
 
-/// Run the SC-vs-DC comparison across `seeds` at a fixed DC size.
+/// Run the SC-vs-DC comparison across `seeds` at a fixed DC size. Seeds
+/// fan out across worker threads (`base.workers`; 0 = one per core); each
+/// seed's inner sweep runs serially so the grid is the only parallel axis.
+/// Outcomes come back in seed order.
 pub fn across_seeds(base: &ExperimentConfig, dc_size: u64, seeds: &[u64]) -> Vec<SeedOutcome> {
-    seeds
-        .iter()
-        .map(|&seed| {
-            let mut cfg = base.clone();
-            cfg.hpc.seed = seed;
-            cfg.web.seed = seed ^ 0x77;
-            let results = consolidation::sweep(&cfg, &[dc_size]);
-            let (sc, dc) = (&results[0], &results[1]);
-            SeedOutcome {
-                seed,
-                sc_completed: sc.completed,
-                dc_completed: dc.completed,
-                sc_turnaround: sc.avg_turnaround,
-                dc_turnaround: dc.avg_turnaround,
-                dc_killed: dc.killed,
-                wins_both: dc.completed >= sc.completed
-                    && dc.avg_turnaround <= sc.avg_turnaround,
-            }
-        })
-        .collect()
+    parallel::parallel_map(seeds.len(), base.workers, |i| {
+        let seed = seeds[i];
+        let mut cfg = base.clone();
+        cfg.workers = 1;
+        cfg.hpc.seed = seed;
+        cfg.web.seed = seed ^ 0x77;
+        let results = consolidation::sweep(&cfg, &[dc_size]);
+        let (sc, dc) = (&results[0], &results[1]);
+        SeedOutcome {
+            seed,
+            sc_completed: sc.completed,
+            dc_completed: dc.completed,
+            sc_turnaround: sc.avg_turnaround,
+            dc_turnaround: dc.avg_turnaround,
+            dc_killed: dc.killed,
+            wins_both: dc.completed >= sc.completed
+                && dc.avg_turnaround <= sc.avg_turnaround,
+        }
+    })
 }
 
 /// Aggregate: win rate and mean deltas.
@@ -74,23 +76,23 @@ pub fn aggregate(outcomes: &[SeedOutcome]) -> Sensitivity {
 
 /// Load-band sweep: the headline as a function of the HPC offered load
 /// (the least-certain calibration input). Returns (load, RunResult-SC,
-/// RunResult-DC).
+/// RunResult-DC) in load order; loads fan out across worker threads like
+/// [`across_seeds`].
 pub fn across_loads(
     base: &ExperimentConfig,
     dc_size: u64,
     loads: &[f64],
 ) -> Vec<(f64, RunResult, RunResult)> {
-    loads
-        .iter()
-        .map(|&load| {
-            let mut cfg = base.clone();
-            cfg.hpc.target_load = load;
-            let mut results = consolidation::sweep(&cfg, &[dc_size]);
-            let dc = results.pop().unwrap();
-            let sc = results.pop().unwrap();
-            (load, sc, dc)
-        })
-        .collect()
+    parallel::parallel_map(loads.len(), base.workers, |i| {
+        let load = loads[i];
+        let mut cfg = base.clone();
+        cfg.workers = 1;
+        cfg.hpc.target_load = load;
+        let mut results = consolidation::sweep(&cfg, &[dc_size]);
+        let dc = results.pop().unwrap();
+        let sc = results.pop().unwrap();
+        (load, sc, dc)
+    })
 }
 
 #[cfg(test)]

@@ -42,6 +42,7 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.web.seed = seed ^ 0x77;
     }
     cfg.hpc.target_load = args.get_f64("load", cfg.hpc.target_load)?;
+    cfg.workers = args.get_u64("workers", cfg.workers as u64)? as usize;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -83,7 +84,7 @@ sense     headline sensitivity across seeds and load band (--seeds N)\n  \
 serve     realtime coordinator on a live trace (--predictive for PJRT)\n  \
 tracegen  emit a synthetic trace (--kind hpc|web)\n  \
 validate  parse + validate a config file\n\
-common flags: --config FILE --seed N --load F --verbose";
+common flags: --config FILE --seed N --load F --workers N (0 = all cores) --verbose";
 
 fn cmd_fig5(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;

@@ -1,8 +1,19 @@
-//! The event heap and dispatch loop.
+//! The event queue abstraction and dispatch loop.
+//!
+//! The engine is generic over its queue: the default is the zero-allocation
+//! [`TimingWheel`] (see `sim/wheel.rs`); [`HeapQueue`] is the classic
+//! `BinaryHeap` kept as the reference implementation — the equivalence
+//! property test in `tests/properties.rs` holds the two to bit-identical
+//! `(time, seq)` delivery order.
+//!
+//! Dispatch reuses one per-engine scratch buffer for handler follow-ups
+//! (the `Schedule` handle), so the steady-state hot loop performs no heap
+//! allocation per event.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use super::wheel::TimingWheel;
 use super::SimTime;
 
 /// Handle used by handlers to schedule further events.
@@ -36,10 +47,12 @@ pub trait EventHandler<E> {
     fn handle(&mut self, ev: E, sched: &mut Schedule<E>);
 }
 
-struct Entry<E> {
-    time: SimTime,
-    seq: u64,
-    ev: E,
+/// A pending event: ordered by `(time, seq)` so equal-timestamp delivery
+/// is FIFO in schedule order.
+pub(crate) struct Entry<E> {
+    pub(crate) time: SimTime,
+    pub(crate) seq: u64,
+    pub(crate) ev: E,
 }
 
 impl<E> PartialEq for Entry<E> {
@@ -62,13 +75,71 @@ impl<E> Ord for Entry<E> {
     }
 }
 
-/// The discrete-event engine.
-pub struct Engine<E> {
+/// Priority queue of `(time, seq, event)` triples delivering in ascending
+/// `(time, seq)` order. `seq` is assigned by the engine in schedule order,
+/// which makes equal-timestamp delivery FIFO — every implementation must
+/// preserve that order exactly (the determinism contract the figure sweeps
+/// and the property tests rely on).
+pub trait EventQueue<E> {
+    /// Insert an event. `time` may be anything (the engine clamps to `now`
+    /// before calling); `seq` is strictly increasing across pushes.
+    fn push(&mut self, time: SimTime, seq: u64, ev: E);
+    /// Time of the next event, if any. May advance internal cursors but
+    /// must not remove events.
+    fn next_time(&mut self) -> Option<SimTime>;
+    /// Remove and return the next event in `(time, seq)` order.
+    fn pop(&mut self) -> Option<(SimTime, E)>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The reference queue: a plain binary heap over [`Entry`]. O(log n) per
+/// operation and one heap node per event — kept as the behavioral oracle
+/// for the timing wheel and for workloads with pathological time ranges.
+pub struct HeapQueue<E> {
     heap: BinaryHeap<Reverse<Entry<E>>>,
+}
+
+impl<E> Default for HeapQueue<E> {
+    fn default() -> Self {
+        Self { heap: BinaryHeap::new() }
+    }
+}
+
+impl<E> EventQueue<E> for HeapQueue<E> {
+    fn push(&mut self, time: SimTime, seq: u64, ev: E) {
+        self.heap.push(Reverse(Entry { time, seq, ev }));
+    }
+
+    fn next_time(&mut self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|Reverse(e)| (e.time, e.ev))
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// The discrete-event engine. `Engine<E>` is wheel-backed; use
+/// [`ReferenceEngine`] for the heap-backed oracle.
+pub struct Engine<E, Q: EventQueue<E> = TimingWheel<E>> {
+    queue: Q,
     now: SimTime,
     seq: u64,
     processed: u64,
+    /// Scratch buffer threaded through `Schedule` on every dispatch so the
+    /// hot loop never allocates.
+    scratch: Vec<(SimTime, E)>,
 }
+
+/// Heap-backed engine, used as the determinism oracle in property tests.
+pub type ReferenceEngine<E> = Engine<E, HeapQueue<E>>;
 
 impl<E> Default for Engine<E> {
     fn default() -> Self {
@@ -77,8 +148,23 @@ impl<E> Default for Engine<E> {
 }
 
 impl<E> Engine<E> {
+    /// A timing-wheel-backed engine (the default, and the fast path).
     pub fn new() -> Self {
-        Self { heap: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
+        Self::with_queue(TimingWheel::default())
+    }
+}
+
+impl<E> Engine<E, HeapQueue<E>> {
+    /// A heap-backed engine with identical observable behavior.
+    pub fn new_reference() -> Self {
+        Self::with_queue(HeapQueue::default())
+    }
+}
+
+impl<E, Q: EventQueue<E>> Engine<E, Q> {
+    /// Build an engine over an explicit queue implementation.
+    pub fn with_queue(queue: Q) -> Self {
+        Self { queue, now: 0, seq: 0, processed: 0, scratch: Vec::new() }
     }
 
     pub fn now(&self) -> SimTime {
@@ -91,38 +177,44 @@ impl<E> Engine<E> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.queue.is_empty()
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.queue.len()
     }
 
-    /// Seed an event at absolute time `at`.
+    /// Seed an event at absolute time `at`. Times in the past are clamped
+    /// to `now` — the one documented behavior in every build profile
+    /// (previously debug builds asserted while release silently clamped;
+    /// the clamp matches [`Schedule::at`]).
     pub fn schedule(&mut self, at: SimTime, ev: E) {
-        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
         self.seq += 1;
-        self.heap.push(Reverse(Entry { time: at.max(self.now), seq: self.seq, ev }));
+        self.queue.push(at.max(self.now), self.seq, ev);
     }
 
     /// Run until the queue drains or the clock passes `horizon`.
     /// Events scheduled exactly at `horizon` still run; later ones do not.
     pub fn run_until<H: EventHandler<E>>(&mut self, handler: &mut H, horizon: SimTime) {
-        while let Some(Reverse(head)) = self.heap.peek() {
-            if head.time > horizon {
+        let mut pending = std::mem::take(&mut self.scratch);
+        while let Some(next) = self.queue.next_time() {
+            if next > horizon {
                 break;
             }
-            let Reverse(entry) = self.heap.pop().unwrap();
-            debug_assert!(entry.time >= self.now, "time went backwards");
-            self.now = entry.time;
+            let (t, ev) = self.queue.pop().expect("next_time reported an event");
+            debug_assert!(t >= self.now, "time went backwards");
+            self.now = t;
             self.processed += 1;
-            let mut sched = Schedule { now: self.now, pending: Vec::new() };
-            handler.handle(entry.ev, &mut sched);
-            for (t, ev) in sched.pending {
+            let mut sched = Schedule { now: t, pending };
+            handler.handle(ev, &mut sched);
+            pending = sched.pending;
+            // drain keeps the buffer's capacity for the next dispatch
+            for (at, follow) in pending.drain(..) {
                 self.seq += 1;
-                self.heap.push(Reverse(Entry { time: t, seq: self.seq, ev }));
+                self.queue.push(at, self.seq, follow);
             }
         }
+        self.scratch = pending;
         // Clock lands on the horizon so post-run metrics read a full window
         // (not for the unbounded `run`, which ends at the last event).
         if horizon != SimTime::MAX && self.now < horizon {
@@ -222,5 +314,41 @@ mod tests {
         let mut rec = Recorder { seen: vec![] };
         eng.run_until(&mut rec, 50);
         assert_eq!(rec.seen.len(), 1);
+    }
+
+    /// Regression for the old debug/release divergence: `schedule` into the
+    /// past must clamp to `now` in every build, not assert in debug.
+    #[test]
+    fn past_scheduling_clamps_to_now_in_all_builds() {
+        let mut eng = Engine::new();
+        eng.schedule(50, Ev::Ping(1));
+        let mut rec = Recorder { seen: vec![] };
+        eng.run(&mut rec);
+        assert_eq!(eng.now(), 50);
+        eng.schedule(10, Ev::Ping(2)); // in the past — clamps, never panics
+        eng.run(&mut rec);
+        assert_eq!(rec.seen.last().unwrap(), &(50, Ev::Ping(2)));
+        assert_eq!(eng.processed(), 2);
+    }
+
+    /// The heap-backed oracle behaves identically on the basics.
+    #[test]
+    fn reference_engine_matches_on_basics() {
+        let mut eng: ReferenceEngine<Ev> = Engine::new_reference();
+        eng.schedule(0, Ev::Chain(5));
+        for i in 0..10 {
+            eng.schedule(25, Ev::Ping(i));
+        }
+        let mut rec = Recorder { seen: vec![] };
+        eng.run_until(&mut rec, 40);
+        assert_eq!(eng.now(), 40);
+        // chain events at 0,10,20 then the ping storm at 25, then 30, 40
+        let times: Vec<SimTime> = rec.seen.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times[..3], [0, 10, 20]);
+        assert!(times[3..13].iter().all(|&t| t == 25));
+        assert_eq!(times[13..], [30, 40]);
+        eng.schedule(5, Ev::Ping(99)); // past: clamps to 40
+        eng.run(&mut rec);
+        assert_eq!(rec.seen.last().unwrap(), &(40, Ev::Ping(99)));
     }
 }

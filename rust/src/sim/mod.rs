@@ -2,14 +2,25 @@
 //!
 //! The paper replays two-week traces at 100× wall-clock speedup; we go one
 //! step further and simulate in virtual time (events jump the clock), which
-//! is exact and runs the whole evaluation in seconds. The engine is a
-//! classic event-heap design: `(time, seq, event)` ordered by time with a
-//! monotonically increasing sequence number to make same-time ordering
-//! deterministic (FIFO among equal timestamps).
+//! is exact and runs the whole evaluation in seconds. Events are `(time,
+//! seq, event)` triples ordered by time with a monotonically increasing
+//! sequence number making same-time ordering deterministic (FIFO among
+//! equal timestamps).
+//!
+//! Two queue implementations sit behind the same [`Engine`] API:
+//! * [`TimingWheel`] (default) — a bucketed calendar queue with an
+//!   overflow heap for far-future events: O(1) amortized per event and
+//!   allocation-free in steady state. This is the hot path for every
+//!   figure, ablation, and sensitivity sweep.
+//! * [`HeapQueue`] (via [`ReferenceEngine`]) — the classic binary heap,
+//!   kept as the behavioral oracle; `tests/properties.rs` checks the two
+//!   deliver bit-identical sequences over randomized schedules.
 
 mod engine;
+mod wheel;
 
-pub use engine::{Engine, EventHandler, Schedule};
+pub use engine::{Engine, EventHandler, EventQueue, HeapQueue, ReferenceEngine, Schedule};
+pub use wheel::TimingWheel;
 
 /// Simulation time in whole seconds since the trace epoch.
 pub type SimTime = u64;

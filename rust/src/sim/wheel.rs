@@ -1,0 +1,314 @@
+//! Bucketed calendar queue (a one-level timing wheel with an overflow
+//! heap) — the default event queue behind [`crate::sim::Engine`].
+//!
+//! Layout: a window of [`WHEEL_SLOTS`] one-second slots starting at
+//! `start`; slot `i` holds exactly the events at time `start + i`, in
+//! insertion order. Because the engine assigns strictly increasing `seq`
+//! numbers and every path below appends in `seq` order, a slot's insertion
+//! order *is* `(time, seq)` order — same-timestamp delivery stays FIFO
+//! bit-for-bit with the reference heap (`tests/properties.rs` proves the
+//! equivalence over randomized schedules).
+//!
+//! Events beyond the window land in an overflow `BinaryHeap`; when the
+//! window drains, the wheel jumps straight to the earliest overflow time
+//! and migrates everything that now fits (heap pop order is `(time, seq)`,
+//! so migrated events append in order ahead of any later direct pushes —
+//! their seqs are necessarily smaller). An idle jump can leave `start`
+//! ahead of the engine clock; events pushed into that gap afterwards are
+//! routed back through the overflow heap ("stragglers") and delivered
+//! before anything in the window — they are strictly earlier than `start`.
+//!
+//! Cost model: O(1) push/pop amortized, no allocation in steady state
+//! (slot vectors and the active batch recycle their capacity), one bitmap
+//! word-scan per empty region instead of per-event heap rebalancing, and
+//! same-timestamp storms drain as one batch.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::engine::{Entry, EventQueue};
+use super::SimTime;
+
+/// One-second slots per window. 4096 s (~68 min) covers the WS sampling
+/// cadence and most inter-event gaps of the two-week traces; anything
+/// farther takes one extra trip through the overflow heap.
+const WHEEL_SLOTS: usize = 4096;
+const WORDS: usize = WHEEL_SLOTS / 64;
+
+/// The timing wheel. See the module docs for the invariants.
+pub struct TimingWheel<E> {
+    /// `slots[i]` holds the events at time `start + i`, in seq order.
+    slots: Vec<Vec<E>>,
+    /// Occupancy bitmap over `slots` (bit i set ⇔ slot i non-empty).
+    bits: [u64; WORDS],
+    /// Simulation time of slot 0.
+    start: SimTime,
+    /// Next slot index to inspect; only ever moves forward except when a
+    /// push lands behind it (the skipped slots are provably empty).
+    cursor: usize,
+    /// Batch being drained, reversed so `pop` takes from the back in FIFO
+    /// order without shifting.
+    active: Vec<E>,
+    active_time: SimTime,
+    /// Far-future events and post-jump stragglers, in `(time, seq)` order.
+    overflow: BinaryHeap<Reverse<Entry<E>>>,
+    len: usize,
+}
+
+impl<E> Default for TimingWheel<E> {
+    fn default() -> Self {
+        Self {
+            slots: std::iter::repeat_with(Vec::new).take(WHEEL_SLOTS).collect(),
+            bits: [0; WORDS],
+            start: 0,
+            cursor: 0,
+            active: Vec::new(),
+            active_time: 0,
+            overflow: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+}
+
+impl<E> TimingWheel<E> {
+    #[inline]
+    fn set_bit(&mut self, i: usize) {
+        self.bits[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    fn clear_bit(&mut self, i: usize) {
+        self.bits[i / 64] &= !(1 << (i % 64));
+    }
+
+    /// First occupied slot index at or after `from`, via the bitmap.
+    fn scan_from(&self, from: usize) -> Option<usize> {
+        if from >= WHEEL_SLOTS {
+            return None;
+        }
+        let mut w = from / 64;
+        let mut word = self.bits[w] & (!0u64 << (from % 64));
+        loop {
+            if word != 0 {
+                return Some(w * 64 + word.trailing_zeros() as usize);
+            }
+            w += 1;
+            if w == WORDS {
+                return None;
+            }
+            word = self.bits[w];
+        }
+    }
+}
+
+impl<E> EventQueue<E> for TimingWheel<E> {
+    fn push(&mut self, time: SimTime, seq: u64, ev: E) {
+        self.len += 1;
+        if time < self.start {
+            // the window already jumped past `time` (idle jump between
+            // runs); deliver through the overflow heap, which next_time
+            // checks before the window
+            self.overflow.push(Reverse(Entry { time, seq, ev }));
+            return;
+        }
+        let offset = time - self.start;
+        if offset >= WHEEL_SLOTS as u64 {
+            self.overflow.push(Reverse(Entry { time, seq, ev }));
+            return;
+        }
+        let idx = offset as usize;
+        self.slots[idx].push(ev);
+        self.set_bit(idx);
+        if idx < self.cursor {
+            // every slot in [idx, cursor) was scanned empty — rewinding
+            // only re-scans empties, it cannot reorder
+            self.cursor = idx;
+        }
+    }
+
+    fn next_time(&mut self) -> Option<SimTime> {
+        loop {
+            if !self.active.is_empty() {
+                return Some(self.active_time);
+            }
+            // stragglers are strictly earlier than everything in the window
+            if let Some(Reverse(e)) = self.overflow.peek() {
+                if e.time < self.start {
+                    return Some(e.time);
+                }
+            }
+            if let Some(idx) = self.scan_from(self.cursor) {
+                self.cursor = idx;
+                return Some(self.start + idx as u64);
+            }
+            // window exhausted: jump to the earliest overflow event and
+            // migrate everything that now fits
+            let head_time = match self.overflow.peek() {
+                Some(Reverse(e)) => e.time,
+                None => return None,
+            };
+            self.start = head_time;
+            self.cursor = 0;
+            while let Some(Reverse(e)) = self.overflow.peek() {
+                // heap pops ascending from the new `start`, so the offset
+                // cannot underflow; comparing offsets (not `start + W`)
+                // also keeps times near `SimTime::MAX` deliverable
+                if e.time - self.start >= WHEEL_SLOTS as u64 {
+                    break;
+                }
+                let Reverse(e) = self.overflow.pop().unwrap();
+                let idx = (e.time - self.start) as usize;
+                self.slots[idx].push(e.ev);
+                self.set_bit(idx);
+            }
+            // loop: the scan now finds slot 0 (non-empty by construction)
+        }
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, E)> {
+        loop {
+            if let Some(ev) = self.active.pop() {
+                self.len -= 1;
+                return Some((self.active_time, ev));
+            }
+            let t = self.next_time()?;
+            if let Some(Reverse(e)) = self.overflow.peek() {
+                if e.time < self.start {
+                    let Reverse(e) = self.overflow.pop().unwrap();
+                    self.len -= 1;
+                    return Some((e.time, e.ev));
+                }
+            }
+            // cursor sits on the non-empty slot for `t`: swap the whole
+            // slot into the active batch (batch-drain; the swap hands the
+            // slot the batch's old empty-but-allocated vector back)
+            std::mem::swap(&mut self.slots[self.cursor], &mut self.active);
+            self.active.reverse();
+            self.active_time = t;
+            self.clear_bit(self.cursor);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(w: &mut TimingWheel<&'static str>) -> Vec<(SimTime, &'static str)> {
+        let mut out = Vec::new();
+        while let Some(x) = w.pop() {
+            out.push(x);
+        }
+        out
+    }
+
+    #[test]
+    fn orders_within_window_and_fifo_on_ties() {
+        let mut w = TimingWheel::default();
+        w.push(20, 1, "a");
+        w.push(10, 2, "b");
+        w.push(10, 3, "c");
+        w.push(0, 4, "d");
+        assert_eq!(w.len(), 4);
+        assert_eq!(drain(&mut w), vec![(0, "d"), (10, "b"), (10, "c"), (20, "a")]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn far_future_overflows_and_migrates() {
+        let mut w = TimingWheel::default();
+        w.push(10, 1, "near");
+        w.push(1_000_000, 2, "far");
+        assert_eq!(w.pop(), Some((10, "near")));
+        // still beyond the original window: overflow again
+        w.push(500_000, 3, "mid");
+        assert_eq!(w.pop(), Some((500_000, "mid")));
+        assert_eq!(w.pop(), Some((1_000_000, "far")));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn overflow_and_direct_pushes_interleave_fifo_on_equal_times() {
+        let mut w = TimingWheel::default();
+        w.push(5000, 1, "first"); // overflow (window is [0, 4096))
+        assert_eq!(w.next_time(), Some(5000)); // jump + migrate
+        w.push(5000, 2, "second"); // direct push into the migrated slot
+        assert_eq!(drain(&mut w), vec![(5000, "first"), (5000, "second")]);
+    }
+
+    #[test]
+    fn straggler_behind_a_jumped_window_is_delivered_first() {
+        let mut w = TimingWheel::default();
+        w.push(1_000_000, 1, "far");
+        assert_eq!(w.next_time(), Some(1_000_000)); // window jumped
+        w.push(5, 2, "late");
+        w.push(7, 3, "later");
+        assert_eq!(
+            drain(&mut w),
+            vec![(5, "late"), (7, "later"), (1_000_000, "far")]
+        );
+    }
+
+    #[test]
+    fn push_behind_cursor_rewinds() {
+        let mut w = TimingWheel::default();
+        w.push(100, 1, "b");
+        assert_eq!(w.next_time(), Some(100)); // cursor advanced to 100
+        w.push(40, 2, "a");
+        assert_eq!(drain(&mut w), vec![(40, "a"), (100, "b")]);
+    }
+
+    #[test]
+    fn same_time_push_during_batch_drain_runs_after_batch() {
+        let mut w = TimingWheel::default();
+        w.push(10, 1, "a");
+        w.push(10, 2, "b");
+        assert_eq!(w.pop(), Some((10, "a"))); // batch active
+        w.push(10, 3, "c"); // same timestamp, mid-drain
+        assert_eq!(w.pop(), Some((10, "b")));
+        assert_eq!(w.pop(), Some((10, "c")));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn window_boundary_is_exact() {
+        let mut w = TimingWheel::default();
+        w.push(WHEEL_SLOTS as u64 - 1, 1, "in"); // last slot of the window
+        w.push(WHEEL_SLOTS as u64, 2, "out"); // first overflow time
+        assert_eq!(
+            drain(&mut w),
+            vec![(WHEEL_SLOTS as u64 - 1, "in"), (WHEEL_SLOTS as u64, "out")]
+        );
+    }
+
+    #[test]
+    fn delivers_events_at_time_max() {
+        // regression: the window jump must not strand events whose slot
+        // offset computation would saturate at SimTime::MAX
+        let mut w = TimingWheel::default();
+        w.push(10, 1, "near");
+        w.push(u64::MAX, 2, "end-of-time");
+        assert_eq!(w.pop(), Some((10, "near")));
+        assert_eq!(w.pop(), Some((u64::MAX, "end-of-time")));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn len_tracks_across_all_paths() {
+        let mut w = TimingWheel::default();
+        w.push(1, 1, "a");
+        w.push(100_000, 2, "b");
+        assert_eq!(w.len(), 2);
+        w.pop();
+        assert_eq!(w.len(), 1);
+        w.next_time(); // jump
+        w.push(50, 3, "straggler");
+        assert_eq!(w.len(), 2);
+        drain(&mut w);
+        assert_eq!(w.len(), 0);
+    }
+}

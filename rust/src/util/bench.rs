@@ -1,9 +1,16 @@
 //! Micro-bench harness shared by the `benches/` targets (criterion is not
 //! reachable offline). Measures wall time across warmup + timed iterations
 //! and prints mean / p50 / p95 per iteration plus derived throughput.
+//!
+//! Every result carries its work-unit count, so suites can emit a
+//! machine-readable JSON report ([`BenchReport`], written as
+//! `BENCH_<suite>.json`) with ns/unit and units/sec — the repo's
+//! perf-trajectory record (ROADMAP §Perf). CI runs the suites with
+//! `PHOENIX_BENCH_QUICK=1` (or `-- --quick`) for a short smoke pass.
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::percentile;
 
 /// One benchmark result.
@@ -14,11 +21,46 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    /// Work tokens summed over the timed iterations (e.g. events
+    /// processed); 0 when the closure reports no unit of work.
+    pub work: u64,
 }
 
 impl BenchResult {
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
+    }
+
+    /// Mean nanoseconds per unit of work (0.0 when no work was reported).
+    pub fn ns_per_unit(&self) -> f64 {
+        if self.work > 0 {
+            self.mean_ns * self.iters as f64 / self.work as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Work units per second (0.0 when no work was reported).
+    pub fn units_per_sec(&self) -> f64 {
+        let ns = self.ns_per_unit();
+        if ns > 0.0 {
+            1e9 / ns
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+            ("work_units", Json::num(self.work as f64)),
+            ("ns_per_unit", Json::num(self.ns_per_unit())),
+            ("units_per_sec", Json::num(self.units_per_sec())),
+        ])
     }
 }
 
@@ -47,13 +89,10 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> u64
         mean_ns,
         p50_ns: percentile(&samples, 0.5),
         p95_ns: percentile(&samples, 0.95),
+        work,
     };
     let per_work = if work > 0 {
-        format!(
-            "  ({:.1} ns/unit over {} units)",
-            mean_ns * iters as f64 / work as f64,
-            work
-        )
+        format!("  ({:.1} ns/unit over {} units)", result.ns_per_unit(), work)
     } else {
         String::new()
     };
@@ -66,6 +105,60 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> u64
         per_work
     );
     result
+}
+
+/// Machine-readable report for one bench suite; [`BenchReport::write`]
+/// emits `BENCH_<suite>.json` in the working directory (override the path
+/// with `PHOENIX_BENCH_OUT`).
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub suite: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchReport {
+    pub fn new(suite: &str) -> Self {
+        Self { suite: suite.to_string(), results: Vec::new() }
+    }
+
+    /// Record one result (chainable with the return value of [`bench`]).
+    pub fn record(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::str(&self.suite)),
+            ("schema_version", Json::num(1.0)),
+            ("quick", Json::Bool(quick())),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn write_to(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.json()))
+    }
+
+    /// Write to `BENCH_<suite>.json` (or `PHOENIX_BENCH_OUT`); returns the
+    /// path written.
+    pub fn write(&self) -> std::io::Result<String> {
+        let path = std::env::var("PHOENIX_BENCH_OUT")
+            .unwrap_or_else(|_| format!("BENCH_{}.json", self.suite));
+        self.write_to(&path)?;
+        Ok(path)
+    }
+}
+
+/// True when the caller asked for a short smoke run: `PHOENIX_BENCH_QUICK`
+/// set (non-"0"), or an explicit `--quick` CLI argument (CI uses this).
+/// Only the `--`-prefixed form counts — a bare positional "quick" (e.g. a
+/// bench filter) must not silently shrink the recorded iteration counts.
+pub fn quick() -> bool {
+    std::env::var("PHOENIX_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick")
 }
 
 /// Human duration formatting.
@@ -102,6 +195,9 @@ mod tests {
         assert_eq!(r.iters, 5);
         assert!(r.mean_ns > 0.0);
         assert!(r.p95_ns >= r.p50_ns * 0.5);
+        assert!(r.work > 0);
+        assert!(r.ns_per_unit() > 0.0);
+        assert!(r.units_per_sec() > 0.0);
     }
 
     #[test]
@@ -110,5 +206,39 @@ mod tests {
         assert!(fmt_ns(5_000.0).ends_with("µs"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let mut rep = BenchReport::new("selftest");
+        rep.record(BenchResult {
+            name: "probe".into(),
+            iters: 10,
+            mean_ns: 1500.0,
+            p50_ns: 1400.0,
+            p95_ns: 2000.0,
+            work: 3000,
+        });
+        let doc = Json::parse(&rep.json().to_string()).unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("selftest"));
+        let rs = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("probe"));
+        // mean 1500 ns over 10 iters and 3000 units → 5 ns/unit
+        assert_eq!(rs[0].get("ns_per_unit").unwrap().as_f64(), Some(5.0));
+        assert!(rs[0].get("units_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_writes_valid_json_file() {
+        let dir = std::env::temp_dir().join("phoenix_bench_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_selftest.json");
+        let mut rep = BenchReport::new("selftest");
+        rep.record(bench("tiny", 0, 2, || 1));
+        rep.write_to(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("results").unwrap().as_arr().unwrap().len(), 1);
     }
 }

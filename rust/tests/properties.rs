@@ -207,6 +207,93 @@ fn prop_consolidation_accounting_closes() {
     });
 }
 
+/// Determinism contract of the timing-wheel engine: over randomized
+/// schedules — same-timestamp storms, chained follow-ups that cross the
+/// wheel window into the overflow heap, horizon stops, and post-horizon
+/// past-time scheduling — the wheel and the reference `BinaryHeap` engine
+/// deliver bit-identical `(time, event)` sequences and agree on `now`,
+/// `processed`, and queue length.
+#[test]
+fn prop_wheel_matches_reference_heap() {
+    use phoenix_cloud::sim::{Engine, EventHandler, EventQueue, ReferenceEngine, Schedule};
+    use phoenix_cloud::util::rng::Rng;
+
+    struct Recorder {
+        seen: Vec<(u64, u32)>,
+        rng: Rng,
+    }
+    impl EventHandler<u32> for Recorder {
+        fn handle(&mut self, ev: u32, sched: &mut Schedule<u32>) {
+            self.seen.push((sched.now(), ev));
+            // Deterministic follow-ups: both engines deliver in the same
+            // order (that's the property), so the rng streams stay aligned.
+            if self.rng.chance(0.3) {
+                // delays up to 6000 s cross the 4096-slot wheel window
+                let delay = self.rng.range_u64(0, 6000);
+                sched.after(delay, ev.wrapping_add(1));
+            }
+        }
+    }
+
+    fn drive<Q: EventQueue<u32>>(
+        eng: &mut Engine<u32, Q>,
+        handler_seed: u64,
+        seeds: &[(u64, u32)],
+        h1: u64,
+        late: &[(u64, u32)],
+    ) -> (Vec<(u64, u32)>, u64, u64, usize) {
+        let mut rec = Recorder { seen: Vec::new(), rng: Rng::new(handler_seed) };
+        for &(t, id) in seeds {
+            eng.schedule(t, id);
+        }
+        eng.run_until(&mut rec, h1);
+        let len_at_horizon = eng.len();
+        for &(t, id) in late {
+            // may be in the past relative to `now` — clamps identically
+            eng.schedule(t, id);
+        }
+        eng.run(&mut rec);
+        (rec.seen, eng.now(), eng.processed(), len_at_horizon)
+    }
+
+    check("wheel-vs-heap", 80, |g| {
+        let n = g.usize_in(1, 150);
+        let seeds: Vec<(u64, u32)> = (0..n)
+            .map(|i| {
+                // mix of near, same-timestamp (t=7 storm) and far-future times
+                let t = match g.usize_in(0, 3) {
+                    0 => 7,
+                    1 => g.u64_in(0, 100),
+                    2 => g.u64_in(0, 5_000),
+                    _ => g.u64_in(4_000, 60_000), // beyond the wheel window
+                };
+                (t, i as u32)
+            })
+            .collect();
+        let h1 = g.u64_in(0, 70_000);
+        let late: Vec<(u64, u32)> =
+            (0..g.usize_in(0, 8)).map(|i| (g.u64_in(0, 90_000), 100_000 + i as u32)).collect();
+        let hseed = g.u64_in(1, u64::MAX - 1);
+
+        let mut wheel: Engine<u32> = Engine::new();
+        let got = drive(&mut wheel, hseed, &seeds, h1, &late);
+        let mut heap: ReferenceEngine<u32> = Engine::new_reference();
+        let want = drive(&mut heap, hseed, &seeds, h1, &late);
+
+        prop_assert!(
+            got.0 == want.0,
+            "delivery diverged at index {}: wheel {:?} heap {:?}",
+            got.0.iter().zip(&want.0).position(|(a, b)| a != b).unwrap_or(want.0.len().min(got.0.len())),
+            got.0.iter().zip(&want.0).find(|(a, b)| a != b).map(|(a, _)| a),
+            got.0.iter().zip(&want.0).find(|(a, b)| a != b).map(|(_, b)| b)
+        );
+        prop_assert!(got.1 == want.1, "now: wheel {} heap {}", got.1, want.1);
+        prop_assert!(got.2 == want.2, "processed: wheel {} heap {}", got.2, want.2);
+        prop_assert!(got.3 == want.3, "len at horizon: wheel {} heap {}", got.3, want.3);
+        Ok(())
+    });
+}
+
 /// The sim engine delivers every event exactly once in time order, under
 /// random schedules (including same-timestamp storms).
 #[test]
