@@ -1,4 +1,4 @@
-//! Ablation benches over the design choices DESIGN.md §4 calls out:
+//! Ablation benches over the design choices ARCHITECTURE.md calls out:
 //! kill order, scheduler, provisioning policy, and autoscaler. Each
 //! prints the quality metrics alongside the timing so the trade-off the
 //! paper's choice makes is visible in one table.

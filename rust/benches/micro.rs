@@ -24,9 +24,10 @@
 
 use std::collections::BTreeMap;
 
-use phoenix_cloud::cluster::{Ledger, Owner};
+use phoenix_cloud::cluster::{DeptId, Ledger};
 use phoenix_cloud::config::{ExperimentConfig, KillOrder, SchedulerKind};
-use phoenix_cloud::experiments::consolidation;
+use phoenix_cloud::experiments::{consolidation, scale};
+use phoenix_cloud::provision::PolicySpec;
 use phoenix_cloud::runtime::ForecastEngine;
 use phoenix_cloud::sim::{Engine, EventHandler, Schedule};
 use phoenix_cloud::stcms::kill::pick_victims;
@@ -77,11 +78,11 @@ fn main() {
 
     section("cluster ledger");
     rep.record(bench("1M transfers", 1, iters(10), || {
-        let mut l = Ledger::new(208);
+        let mut l = Ledger::new(208, 2);
         for i in 0..1_000_000u64 {
             let n = i % 32;
-            let _ = l.transfer(Owner::Free, Owner::St, n);
-            let _ = l.transfer(Owner::St, Owner::Free, n);
+            let _ = l.grant(DeptId::ST, n);
+            let _ = l.release(DeptId::ST, n);
         }
         1_000_000
     }));
@@ -174,6 +175,18 @@ fn main() {
         "parallel sweep speedup: {:.2}x over serial (identical tables verified)",
         serial / par.max(1e-9)
     );
+
+    section("economies-of-scale sweep (K consolidated vs dedicated, two-week traces)");
+    let scale_cfg = ExperimentConfig::default();
+    rep.record(bench("scale sweep K=2..4", 0, iters(3).max(2), || {
+        let cells = scale::scale_sweep(
+            &scale_cfg,
+            &[2, 3, 4],
+            PolicySpec::Cooperative,
+            scale::default_ratio(&scale_cfg),
+        );
+        cells.iter().map(|c| c.consolidated.events).sum()
+    }));
 
     if ForecastEngine::artifacts_present("artifacts") {
         section("PJRT forecaster (the predictive-autoscaler hot path)");

@@ -1,58 +1,91 @@
 //! Cluster substrate: the shared node pool and its allocation ledger.
 //!
-//! The paper's resource unit is a *node* (§III-D equates one Web-service VM
-//! with one node when sizing clusters; `vms_per_node` stays configurable in
-//! [`crate::config`]). The ledger tracks which owner (ST CMS, WS CMS, or
-//! free) holds each node and enforces conservation invariants in debug
-//! builds: nodes are never double-allocated and never lost.
+//! Reproduces the resource model of §II-B/§III-D of the paper: the
+//! resource unit is a *node* (§III-D equates one Web-service VM with one
+//! node when sizing clusters; `vms_per_node` stays configurable in
+//! [`crate::config`]). Where the paper fixes exactly two departments —
+//! scientific computing (ST) and Web service (WS) — this ledger tracks an
+//! arbitrary number of departments, the generalization described in the
+//! follow-up work (arXiv:1006.1401, arXiv:1004.1276): K departments with
+//! heterogeneous load sharing one pool. Each department is addressed by a
+//! dense [`DeptId`]; the classic two-department wiring uses the
+//! conventional ids [`DeptId::ST`] (0) and [`DeptId::WS`] (1).
+//!
+//! The ledger enforces conservation invariants after every move: nodes are
+//! never double-allocated and never lost (`free + Σ held == total`).
 
 use std::fmt;
 
-/// Who currently holds a block of nodes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Owner {
-    /// Held by the Resource Provision Service (idle).
-    Free,
-    /// Provisioned to the scientific-computing CMS (ST Server).
-    St,
-    /// Provisioned to the Web-service CMS (WS Server).
-    Ws,
+/// Dense department identifier (index into the ledger's holdings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeptId(pub u16);
+
+impl DeptId {
+    /// Conventional id of the scientific-computing department in the
+    /// paper's two-department configuration.
+    pub const ST: DeptId = DeptId(0);
+    /// Conventional id of the Web-service department in the paper's
+    /// two-department configuration.
+    pub const WS: DeptId = DeptId(1);
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
 }
 
-impl fmt::Display for Owner {
+impl fmt::Display for DeptId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "dept{}", self.0)
+    }
+}
+
+/// What a department runs — the property the provisioning policies key on
+/// (§II-B): batch departments soak idle nodes and surrender them on force;
+/// service departments issue urgent, demand-driven claims.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeptKind {
+    /// Throughput-oriented batch computing (the paper's ST: OpenPBS-like).
+    Batch,
+    /// Latency-oriented interactive serving (the paper's WS: Oceano-like).
+    Service,
+}
+
+impl DeptKind {
+    pub fn name(&self) -> &'static str {
         match self {
-            Owner::Free => write!(f, "free"),
-            Owner::St => write!(f, "ST"),
-            Owner::Ws => write!(f, "WS"),
+            DeptKind::Batch => "batch",
+            DeptKind::Service => "service",
         }
     }
 }
 
-/// Allocation ledger over a fixed pool of `total` identical nodes.
+/// Allocation ledger over a fixed pool of `total` identical nodes shared
+/// by `num_depts` departments.
 ///
 /// Node identity is immaterial to the policies (any node serves any
 /// purpose once the Web-service stack is pre-deployed, per §III-D), so the
-/// ledger tracks *counts*, which keeps every operation O(1). The
-/// invariant `free + st + ws == total` is checked after every transfer.
+/// ledger tracks *counts*, which keeps every operation O(1). The invariant
+/// `free + Σ held == total` is checked after every move.
 #[derive(Debug, Clone)]
 pub struct Ledger {
     total: u64,
     free: u64,
-    st: u64,
-    ws: u64,
+    held: Vec<u64>,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum LedgerError {
-    #[error("insufficient nodes: requested {requested} from {owner} holding {held}")]
-    Insufficient { owner: &'static str, requested: u64, held: u64 },
+    #[error("insufficient nodes: requested {requested} from {holder} holding {held}")]
+    Insufficient { holder: String, requested: u64, held: u64 },
+    #[error("unknown department {0}")]
+    UnknownDept(DeptId),
 }
 
 impl Ledger {
     /// All nodes start free (held by the provision service).
-    pub fn new(total: u64) -> Self {
-        Self { total, free: total, st: 0, ws: 0 }
+    pub fn new(total: u64, num_depts: usize) -> Self {
+        Self { total, free: total, held: vec![0; num_depts] }
     }
 
     pub fn total(&self) -> u64 {
@@ -63,60 +96,92 @@ impl Ledger {
         self.free
     }
 
-    pub fn held(&self, owner: Owner) -> u64 {
-        match owner {
-            Owner::Free => self.free,
-            Owner::St => self.st,
-            Owner::Ws => self.ws,
-        }
+    pub fn num_depts(&self) -> usize {
+        self.held.len()
     }
 
-    fn slot(&mut self, owner: Owner) -> &mut u64 {
-        match owner {
-            Owner::Free => &mut self.free,
-            Owner::St => &mut self.st,
-            Owner::Ws => &mut self.ws,
-        }
+    /// Nodes currently provisioned to `dept` (0 for unknown departments —
+    /// callers that need the distinction use [`Ledger::grant`] etc., which
+    /// report `UnknownDept`).
+    pub fn held(&self, dept: DeptId) -> u64 {
+        self.held.get(dept.index()).copied().unwrap_or(0)
     }
 
-    /// Move `n` nodes `from` → `to`. Fails (without mutating) if `from`
-    /// holds fewer than `n`.
-    pub fn transfer(&mut self, from: Owner, to: Owner, n: u64) -> Result<(), LedgerError> {
-        let held = self.held(from);
-        if held < n {
+    fn slot(&mut self, dept: DeptId) -> Result<&mut u64, LedgerError> {
+        self.held
+            .get_mut(dept.index())
+            .ok_or(LedgerError::UnknownDept(dept))
+    }
+
+    /// Move `n` nodes free → `dept`. Fails (without mutating) on overdraw.
+    pub fn grant(&mut self, dept: DeptId, n: u64) -> Result<(), LedgerError> {
+        if self.free < n {
             return Err(LedgerError::Insufficient {
-                owner: match from {
-                    Owner::Free => "free",
-                    Owner::St => "ST",
-                    Owner::Ws => "WS",
-                },
+                holder: "free".to_string(),
                 requested: n,
-                held,
+                held: self.free,
             });
         }
-        *self.slot(from) -= n;
-        *self.slot(to) += n;
+        *self.slot(dept)? += n;
+        self.free -= n;
         self.check();
         Ok(())
     }
 
-    /// Conservation invariant; cheap enough to run unconditionally.
+    /// Move `n` nodes `dept` → free. Fails (without mutating) on overdraw.
+    pub fn release(&mut self, dept: DeptId, n: u64) -> Result<(), LedgerError> {
+        let slot = self.slot(dept)?;
+        if *slot < n {
+            return Err(LedgerError::Insufficient {
+                holder: dept.to_string(),
+                requested: n,
+                held: *slot,
+            });
+        }
+        *slot -= n;
+        self.free += n;
+        self.check();
+        Ok(())
+    }
+
+    /// Move `n` nodes directly `from` → `to` (a forced return lands here:
+    /// the nodes never pass through the free pool). Fails (without
+    /// mutating) if `from` holds fewer than `n`.
+    pub fn transfer(&mut self, from: DeptId, to: DeptId, n: u64) -> Result<(), LedgerError> {
+        // validate both slots before mutating either
+        if self.held.get(to.index()).is_none() {
+            return Err(LedgerError::UnknownDept(to));
+        }
+        let held = *self.slot(from)?;
+        if held < n {
+            return Err(LedgerError::Insufficient {
+                holder: from.to_string(),
+                requested: n,
+                held,
+            });
+        }
+        self.held[from.index()] -= n;
+        self.held[to.index()] += n;
+        self.check();
+        Ok(())
+    }
+
+    /// Conservation invariant; cheap enough to run after every move.
     #[inline]
     fn check(&self) {
         debug_assert_eq!(
-            self.free + self.st + self.ws,
+            self.free + self.held.iter().sum::<u64>(),
             self.total,
-            "ledger leaked nodes: free={} st={} ws={} total={}",
+            "ledger leaked nodes: free={} held={:?} total={}",
             self.free,
-            self.st,
-            self.ws,
+            self.held,
             self.total
         );
     }
 
-    /// Snapshot as (free, st, ws) for metrics sampling.
-    pub fn snapshot(&self) -> (u64, u64, u64) {
-        (self.free, self.st, self.ws)
+    /// Snapshot as (free, per-department holdings) for metrics sampling.
+    pub fn snapshot(&self) -> (u64, Vec<u64>) {
+        (self.free, self.held.clone())
     }
 }
 
@@ -126,35 +191,72 @@ mod tests {
 
     #[test]
     fn starts_all_free() {
-        let l = Ledger::new(208);
+        let l = Ledger::new(208, 2);
         assert_eq!(l.free(), 208);
-        assert_eq!(l.held(Owner::St), 0);
-        assert_eq!(l.held(Owner::Ws), 0);
+        assert_eq!(l.held(DeptId::ST), 0);
+        assert_eq!(l.held(DeptId::WS), 0);
+        assert_eq!(l.num_depts(), 2);
     }
 
     #[test]
-    fn transfer_moves_counts() {
-        let mut l = Ledger::new(100);
-        l.transfer(Owner::Free, Owner::St, 60).unwrap();
-        l.transfer(Owner::Free, Owner::Ws, 10).unwrap();
-        l.transfer(Owner::St, Owner::Ws, 5).unwrap();
-        assert_eq!(l.snapshot(), (30, 55, 15));
+    fn grant_release_transfer_move_counts() {
+        let mut l = Ledger::new(100, 3);
+        l.grant(DeptId(0), 60).unwrap();
+        l.grant(DeptId(2), 10).unwrap();
+        l.transfer(DeptId(0), DeptId(1), 5).unwrap();
+        l.release(DeptId(2), 4).unwrap();
+        assert_eq!(l.snapshot(), (34, vec![55, 5, 6]));
+        assert_eq!(l.total(), 100);
     }
 
     #[test]
     fn refuses_overdraw_without_mutating() {
-        let mut l = Ledger::new(10);
-        l.transfer(Owner::Free, Owner::St, 10).unwrap();
+        let mut l = Ledger::new(10, 2);
+        l.grant(DeptId::ST, 10).unwrap();
         let before = l.snapshot();
-        let err = l.transfer(Owner::Free, Owner::Ws, 1).unwrap_err();
+        let err = l.grant(DeptId::WS, 1).unwrap_err();
         assert!(matches!(err, LedgerError::Insufficient { requested: 1, held: 0, .. }));
+        let err = l.release(DeptId::WS, 1).unwrap_err();
+        assert!(matches!(err, LedgerError::Insufficient { .. }));
+        let err = l.transfer(DeptId::WS, DeptId::ST, 1).unwrap_err();
+        assert!(matches!(err, LedgerError::Insufficient { .. }));
         assert_eq!(l.snapshot(), before);
     }
 
     #[test]
-    fn zero_transfer_is_noop() {
-        let mut l = Ledger::new(5);
-        l.transfer(Owner::Free, Owner::Ws, 0).unwrap();
-        assert_eq!(l.snapshot(), (5, 0, 0));
+    fn unknown_department_is_an_error() {
+        let mut l = Ledger::new(10, 2);
+        assert_eq!(l.grant(DeptId(7), 1), Err(LedgerError::UnknownDept(DeptId(7))));
+        assert_eq!(l.held(DeptId(7)), 0);
+        l.grant(DeptId(0), 5).unwrap();
+        assert_eq!(
+            l.transfer(DeptId(0), DeptId(9), 1),
+            Err(LedgerError::UnknownDept(DeptId(9)))
+        );
+        assert_eq!(l.snapshot(), (5, vec![5, 0]));
+    }
+
+    #[test]
+    fn zero_moves_are_noops() {
+        let mut l = Ledger::new(5, 4);
+        l.grant(DeptId(3), 0).unwrap();
+        l.release(DeptId(3), 0).unwrap();
+        l.transfer(DeptId(0), DeptId(3), 0).unwrap();
+        assert_eq!(l.snapshot(), (5, vec![0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn many_departments_conserve() {
+        let mut l = Ledger::new(1000, 8);
+        for d in 0..8u16 {
+            l.grant(DeptId(d), 100).unwrap();
+        }
+        assert_eq!(l.free(), 200);
+        for d in 1..8u16 {
+            l.transfer(DeptId(d), DeptId(0), 50).unwrap();
+        }
+        assert_eq!(l.held(DeptId(0)), 100 + 7 * 50);
+        let (free, held) = l.snapshot();
+        assert_eq!(free + held.iter().sum::<u64>(), 1000);
     }
 }

@@ -1,10 +1,18 @@
 //! Typed configuration for the whole system, loadable from the TOML-subset
-//! parser ([`crate::util::toml`]) with defaults matching the paper's
-//! evaluation setup. Every field is validated; errors name the offending
-//! key.
+//! parser ([`crate::util::toml`]) with defaults matching the paper's §III
+//! evaluation setup (144+64 nodes, two-week traces, 20 s sampling). Every
+//! field is validated; errors name the offending key.
+//!
+//! Beyond the paper's fixed ST+WS pair, a config may declare any number of
+//! departments via a `[[department]]` array (name, workload kind, priority
+//! tier, quota, trace seed) plus a `[policy]` section choosing the
+//! provisioning policy — the K-department generalization of
+//! arXiv:1006.1401. See `configs/departments.toml` for a worked example.
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::DeptKind;
+use crate::provision::policy::{DeptProfile, PolicySpec};
 use crate::trace::hpc_synth::HpcTraceConfig;
 use crate::trace::web_synth::WebTraceConfig;
 use crate::util::json::Json;
@@ -89,6 +97,37 @@ pub enum AutoscalerKind {
     Predictive,
 }
 
+/// One department of an N-department configuration (`[[department]]` in
+/// TOML): who it is, what it runs, how it ranks, and how its traces seed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeptSpec {
+    pub name: String,
+    pub kind: DeptKind,
+    /// Priority tier (lower = higher priority; used by the tiered policy).
+    pub tier: u8,
+    /// Partition size (static policy), claim cap (proportional policy),
+    /// and dedicated-cluster size in the economies-of-scale comparison.
+    pub quota: u64,
+    /// Trace seed override (None = derived from the base seed and the
+    /// department index).
+    pub seed: Option<u64>,
+}
+
+impl DeptSpec {
+    /// The policy-facing profile for this department at ledger index `id`.
+    pub fn profile(&self, id: crate::cluster::DeptId) -> DeptProfile {
+        DeptProfile { id, kind: self.kind, tier: self.tier, quota: self.quota }
+    }
+}
+
+fn parse_dept_kind(s: &str) -> Result<DeptKind> {
+    Ok(match s {
+        "batch" | "hpc" | "st" => DeptKind::Batch,
+        "service" | "web" | "ws" => DeptKind::Service,
+        _ => bail!("unknown department kind '{s}' (batch|service)"),
+    })
+}
+
 /// Everything one consolidation run needs.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -111,6 +150,13 @@ pub struct ExperimentConfig {
     pub workers: usize,
     pub hpc: HpcTraceConfig,
     pub web: WebTraceConfig,
+    /// N-department roster (`[[department]]`). Empty = the paper's
+    /// implicit ST+WS pair.
+    pub departments: Vec<DeptSpec>,
+    /// Provisioning policy for N-department runs (`[policy]`). None = the
+    /// policy implied by `configuration` (cooperative for dynamic, static
+    /// partition for static).
+    pub policy: Option<PolicySpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -128,6 +174,8 @@ impl Default for ExperimentConfig {
             workers: 0,
             hpc: HpcTraceConfig::default(),
             web: WebTraceConfig::default(),
+            departments: Vec::new(),
+            policy: None,
         }
     }
 }
@@ -180,6 +228,29 @@ impl ExperimentConfig {
         if self.web.instance_capacity_rps <= 0.0 {
             bail!("web.instance_capacity_rps must be positive");
         }
+        if !self.departments.is_empty() {
+            for (i, d) in self.departments.iter().enumerate() {
+                if d.name.is_empty() {
+                    bail!("department {i} has an empty name");
+                }
+                if d.quota == 0 {
+                    bail!("department '{}' needs quota > 0", d.name);
+                }
+                if self.departments[..i].iter().any(|e| e.name == d.name) {
+                    bail!("duplicate department name '{}'", d.name);
+                }
+            }
+            if !self.departments.iter().any(|d| d.kind == DeptKind::Batch) {
+                bail!("at least one batch department required (nothing to consolidate)");
+            }
+        } else if self.policy.is_some() {
+            bail!("[policy] given but no [[department]] roster");
+        }
+        if let Some(PolicySpec::Lease { secs }) = self.policy {
+            if secs == 0 {
+                bail!("policy.lease_secs must be positive");
+            }
+        }
         Ok(())
     }
 
@@ -231,6 +302,43 @@ impl ExperimentConfig {
             if let Some(n) = x.get("workers").and_then(Json::as_u64) {
                 self.workers = n as usize;
             }
+        }
+        if let Some(arr) = doc.get("department").and_then(Json::as_arr) {
+            let mut depts = Vec::with_capacity(arr.len());
+            for (i, d) in arr.iter().enumerate() {
+                let name = d
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("[[department]] #{i} missing 'name'"))?
+                    .to_string();
+                let kind = parse_dept_kind(
+                    d.get("kind")
+                        .and_then(Json::as_str)
+                        .with_context(|| format!("department '{name}' missing 'kind'"))?,
+                )?;
+                let tier_raw = d.get("tier").and_then(Json::as_u64).unwrap_or(match kind {
+                    DeptKind::Service => 0,
+                    DeptKind::Batch => 1,
+                });
+                let tier = u8::try_from(tier_raw).map_err(|_| {
+                    anyhow::anyhow!("department '{name}': tier {tier_raw} exceeds 255")
+                })?;
+                let quota = d.get("quota").and_then(Json::as_u64).unwrap_or(match kind {
+                    DeptKind::Batch => self.st_nodes,
+                    DeptKind::Service => self.ws_nodes,
+                });
+                let seed = d.get("seed").and_then(Json::as_u64);
+                depts.push(DeptSpec { name, kind, tier, quota, seed });
+            }
+            self.departments = depts;
+        }
+        if let Some(p) = doc.get("policy") {
+            let kind = p
+                .get("kind")
+                .and_then(Json::as_str)
+                .context("[policy] missing 'kind'")?;
+            let lease_secs = p.get("lease_secs").and_then(Json::as_u64).unwrap_or(3600);
+            self.policy = Some(PolicySpec::parse(kind, lease_secs)?);
         }
         if let Some(h) = doc.get("hpc") {
             if let Some(n) = h.get("num_jobs").and_then(Json::as_u64) {
@@ -322,6 +430,73 @@ mod tests {
         assert!(cfg.apply_toml(&doc).is_err());
         assert!(SchedulerKind::parse("lottery").is_err());
         assert!(KillOrder::parse("random").is_err());
+    }
+
+    #[test]
+    fn department_array_and_policy_overlay() {
+        let doc = crate::util::toml::parse(
+            "[policy]\nkind = \"lease\"\nlease_secs = 600\n\n\
+             [[department]]\nname = \"physics\"\nkind = \"batch\"\nquota = 100\n\n\
+             [[department]]\nname = \"biology\"\nkind = \"batch\"\ntier = 2\nseed = 9\n\n\
+             [[department]]\nname = \"portal\"\nkind = \"service\"\nquota = 32\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.policy, Some(PolicySpec::Lease { secs: 600 }));
+        assert_eq!(cfg.departments.len(), 3);
+        let d = &cfg.departments[0];
+        assert_eq!((d.name.as_str(), d.kind, d.tier, d.quota), ("physics", DeptKind::Batch, 1, 100));
+        assert_eq!(cfg.departments[1].quota, cfg.st_nodes, "batch quota defaults to st_nodes");
+        assert_eq!(cfg.departments[1].seed, Some(9));
+        assert_eq!(cfg.departments[2].kind, DeptKind::Service);
+        assert_eq!(cfg.departments[2].tier, 0, "service tier defaults to 0");
+        // profiles carry the ledger ids
+        let p = cfg.departments[2].profile(crate::cluster::DeptId(2));
+        assert_eq!(p.quota, 32);
+    }
+
+    #[test]
+    fn department_roster_is_validated() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = Some(PolicySpec::Cooperative);
+        assert!(cfg.validate().is_err(), "policy without departments");
+        cfg.departments = vec![DeptSpec {
+            name: "web".into(),
+            kind: DeptKind::Service,
+            tier: 0,
+            quota: 64,
+            seed: None,
+        }];
+        assert!(cfg.validate().is_err(), "no batch department");
+        cfg.departments.push(DeptSpec {
+            name: "web".into(),
+            kind: DeptKind::Batch,
+            tier: 1,
+            quota: 144,
+            seed: None,
+        });
+        assert!(cfg.validate().is_err(), "duplicate names");
+        cfg.departments[1].name = "hpc".into();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_department_kind_or_policy_rejected() {
+        let doc = crate::util::toml::parse(
+            "[[department]]\nname = \"x\"\nkind = \"quantum\"\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::default().apply_toml(&doc).is_err());
+        let doc = crate::util::toml::parse("[policy]\nkind = \"lottery\"\n").unwrap();
+        assert!(ExperimentConfig::default().apply_toml(&doc).is_err());
+        // tier must fit u8 — no silent modulo-256 wrap into top priority
+        let doc = crate::util::toml::parse(
+            "[[department]]\nname = \"x\"\nkind = \"batch\"\ntier = 256\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::default().apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -11,8 +11,9 @@ use std::cell::Cell;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
+use crate::cluster::DeptId;
 use crate::config::ExperimentConfig;
-use crate::provision::{PolicyKind, Rps};
+use crate::provision::{two_dept_profiles, PolicySpec, Rps};
 use crate::services::{Bus, Ctx, Msg, Service, ServiceId};
 use crate::stcms::StServer;
 use crate::trace::web_synth::RateSeries;
@@ -49,23 +50,30 @@ impl Service for RpsSvc {
     fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
         match msg {
             Msg::WsClaim { nodes } => {
-                let d = self.rps.ws_request(nodes);
+                let d = self.rps.request(DeptId::WS, nodes, ctx.now());
                 if d.from_free > 0 {
                     ctx.send(self.ws, Msg::WsGrant { nodes: d.from_free });
                 }
-                if d.force_from_st > 0 {
-                    ctx.send(self.st, Msg::ForceReturn { nodes: d.force_from_st });
+                let force = d.force_total();
+                if force > 0 {
+                    // two-department wiring: every victim is the ST CMS
+                    ctx.send(self.st, Msg::ForceReturn { nodes: force });
                 }
             }
             Msg::WsRelease { nodes } => {
-                self.rps.ws_release(nodes);
-                let grant = self.rps.provision_idle_to_st();
-                if grant > 0 {
-                    ctx.send(self.st, Msg::StGrant { nodes: grant });
+                self.rps.release(DeptId::WS, nodes, ctx.now());
+                let granted: u64 = self
+                    .rps
+                    .provision_idle(&[DeptId::ST], ctx.now())
+                    .iter()
+                    .map(|&(_, n)| n)
+                    .sum();
+                if granted > 0 {
+                    ctx.send(self.st, Msg::StGrant { nodes: granted });
                 }
             }
             Msg::StReleased { nodes, .. } => {
-                self.rps.complete_force(nodes);
+                self.rps.complete_force(DeptId::ST, DeptId::WS, nodes, ctx.now());
                 ctx.send(self.ws, Msg::WsGrant { nodes });
             }
             _ => {}
@@ -202,8 +210,9 @@ pub fn serve(
     let rps_id = 0;
     let st_id = 1;
     let ws_id = 2;
-    let mut rps = Rps::new(total, PolicyKind::Cooperative);
-    let (_, st0) = rps.bootstrap(0);
+    let policy = PolicySpec::Cooperative.build(&two_dept_profiles(cfg.st_nodes, cfg.ws_nodes));
+    let mut rps = Rps::new(total, 2, policy);
+    let st0: u64 = rps.provision_idle(&[DeptId::ST], 0).iter().map(|&(_, n)| n).sum();
     let cap = cfg.web.instance_capacity_rps;
 
     let shared = Rc::new(Shared::default());

@@ -1,4 +1,4 @@
-//! Ablations over the design choices DESIGN.md §4 calls out: kill order,
+//! Ablations over the design choices ARCHITECTURE.md calls out: kill order,
 //! scheduler, provisioning policy, and autoscaler. Each returns the same
 //! RunResult rows as the figure sweeps so the report writer is shared.
 

@@ -1,10 +1,14 @@
-//! Experiment harnesses: one module per paper figure, plus ablations over
-//! the design choices and the report writers. See DESIGN.md §4 for the
-//! experiment index.
+//! Experiment harnesses reproducing the paper's §III evaluation: one
+//! module per figure (Fig. 5 autoscaler consumption, Fig. 7/8
+//! consolidation sweep), plus ablations over the design choices, the
+//! seed/load sensitivity grids, the K-department economies-of-scale sweep
+//! ([`scale`], from the arXiv:1006.1401 / arXiv:1004.1276 follow-ups),
+//! and the report writers. See EXPERIMENTS.md for the figure↔command map.
 
 pub mod ablations;
 pub mod consolidation;
 pub mod fig5;
 pub mod parallel;
 pub mod report;
+pub mod scale;
 pub mod sensitivity;

@@ -51,6 +51,31 @@ pub fn sweep_text(results: &[RunResult]) -> String {
     out
 }
 
+/// Aligned text table for the economies-of-scale sweep.
+pub fn scale_text(cells: &[super::scale::ScaleCell]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<4} {:>10} {:>12} {:>7} {:>10} {:>10} {:>10} {:>10} {:>7}\n",
+        "K", "ded-nodes", "con-nodes", "cost%", "ded-compl", "con-compl", "ded-ta(s)",
+        "con-ta(s)", "killed"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<4} {:>10} {:>12} {:>7.1} {:>10} {:>10} {:>10.0} {:>10.0} {:>7}\n",
+            c.k,
+            c.dedicated_nodes,
+            c.consolidated_nodes,
+            c.cost_ratio() * 100.0,
+            c.dedicated_completed,
+            c.consolidated_completed,
+            c.dedicated_turnaround,
+            c.consolidated_turnaround,
+            c.consolidated_killed,
+        ));
+    }
+    out
+}
+
 /// Ensure `out/` exists and save a table.
 pub fn save_table(t: &Table, name: &str) -> anyhow::Result<String> {
     std::fs::create_dir_all("out")?;
@@ -80,6 +105,7 @@ mod tests {
             st_busy_mean: 120.0,
             events: 9999,
             registry: Registry::new(),
+            per_dept: Vec::new(),
         }
     }
 

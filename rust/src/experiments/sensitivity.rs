@@ -1,5 +1,5 @@
 //! Sensitivity analysis: because our traces are synthetic substitutes
-//! (DESIGN.md §6), the headline claim must hold across seeds and across a
+//! (ARCHITECTURE.md), the headline claim must hold across seeds and across a
 //! band of load calibrations — otherwise the reproduction would hinge on
 //! one lucky draw. `phoenixd sense` and `benches/ablations.rs` drive this;
 //! EXPERIMENTS.md reports the aggregate.

@@ -4,18 +4,22 @@
 //! Computing Loads on Shared Cluster System for Large Organization"* (2009).
 //!
 //! Architecture (three layers, Python never on the request path):
-//! * **L3 (this crate)** — the paper's coordination contribution: the
-//!   common service framework, the Resource Provision Service and its
-//!   cooperative policy, ST CMS (batch scheduling), WS CMS (autoscaling +
-//!   load balancing), plus every substrate they need (event simulator,
-//!   cluster ledger, trace generators, metrics, config, CLI).
+//! * **L3 (this crate)** — the paper's coordination contribution,
+//!   generalized from two departments to N: the common service framework,
+//!   the Resource Provision Service with pluggable
+//!   [`provision::ProvisionPolicy`] implementations (cooperative, static,
+//!   proportional, lease-based, tiered), per-department batch CMSes
+//!   (scheduling) and service CMSes (autoscaling + load balancing), plus
+//!   every substrate they need (event simulator, N-department cluster
+//!   ledger, trace generators, metrics, config, CLI).
 //! * **L2/L1 (python/, build-time)** — the predictive-autoscaler forecaster
 //!   (JAX) over a Pallas window-statistics kernel, AOT-lowered to HLO text.
 //! * **runtime** — loads `artifacts/*.hlo.txt` via the PJRT CPU client and
 //!   executes them from the WS-CMS scaling loop.
 //!
-//! See DESIGN.md for the system inventory and the experiment index
-//! (Fig. 5 / Fig. 7 / Fig. 8), and EXPERIMENTS.md for paper-vs-measured.
+//! See ARCHITECTURE.md for the module map and determinism guarantees, and
+//! EXPERIMENTS.md for the figure↔command index (Fig. 5 / Fig. 7 / Fig. 8 /
+//! economies-of-scale) and the perf record.
 
 pub mod cluster;
 pub mod config;

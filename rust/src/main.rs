@@ -5,6 +5,8 @@
 //! phoenixd fig7   [--sizes 200,190,180,170,160,150] [--load 0.85]
 //! phoenixd fig8   [--sizes ...]
 //! phoenixd sweep  [--sizes ...]            # fig7 + fig8 + headline
+//! phoenixd scale  [--kmax 8] [--ratio 0.769] [--policy cooperative|lease|tiered|...]
+//! phoenixd depts  --config FILE            # run a [[department]] roster
 //! phoenixd ablate [--what kill|sched|scaler]
 //! phoenixd serve  [--nodes 160] [--secs 3600] [--speedup 100] [--predictive]
 //! phoenixd tracegen --kind hpc|web --out FILE
@@ -13,9 +15,11 @@
 
 use anyhow::{bail, Result};
 
+use phoenix_cloud::cluster::DeptKind;
 use phoenix_cloud::config::ExperimentConfig;
 use phoenix_cloud::coordinator::realtime::{self, ScalerFn};
-use phoenix_cloud::experiments::{ablations, consolidation, fig5, report, sensitivity};
+use phoenix_cloud::experiments::{ablations, consolidation, fig5, report, scale, sensitivity};
+use phoenix_cloud::provision::PolicySpec;
 use phoenix_cloud::runtime::ForecastEngine;
 use phoenix_cloud::trace::{hpc_synth, swf, web_synth, worldcup};
 use phoenix_cloud::util::cli::Args;
@@ -56,6 +60,8 @@ fn run(argv: &[String]) -> Result<()> {
         Some("fig7") | Some("fig8") | Some("sweep") => {
             cmd_sweep(&args, args.subcommand.as_deref().unwrap())
         }
+        Some("scale") => cmd_scale(&args),
+        Some("depts") => cmd_depts(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("sense") => cmd_sense(&args),
         Some("serve") => cmd_serve(&args),
@@ -79,6 +85,8 @@ fig5      Web-service resource consumption over two weeks (paper Fig. 5)\n  \
 fig7      completed jobs + turnaround vs cluster size (paper Fig. 7)\n  \
 fig8      killed jobs vs cluster size (paper Fig. 8)\n  \
 sweep     fig7 + fig8 + the headline consolidation claim\n  \
+scale     economies-of-scale: K consolidated vs K dedicated, K=2..kmax\n  \
+depts     run the config's [[department]] roster on one shared cluster\n  \
 ablate    design ablations (--what kill|sched|scaler)\n  \
 sense     headline sensitivity across seeds and load band (--seeds N)\n  \
 serve     realtime coordinator on a live trace (--predictive for PJRT)\n  \
@@ -218,6 +226,88 @@ fn cmd_sweep(args: &Args, which: &str) -> Result<()> {
                 None => println!("headline: no DC size beat SC on both benefits"),
             }
         }
+    }
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let kmax = (args.get_u64("kmax", 8)? as usize).max(2);
+    let ratio = args.get_f64("ratio", scale::default_ratio(&cfg))?;
+    if !(ratio > 0.0 && ratio <= 1.0) {
+        bail!("--ratio must be in (0, 1], got {ratio}");
+    }
+    let lease_secs = args.get_u64("lease-secs", 3600)?;
+    if lease_secs == 0 {
+        bail!("--lease-secs must be positive");
+    }
+    let policy = PolicySpec::parse(args.get_or("policy", "cooperative"), lease_secs)?;
+    let ks: Vec<usize> = (2..=kmax).collect();
+    println!(
+        "economies of scale: K consolidated departments ({} policy, cluster = \
+         {:.1} % of dedicated) vs K dedicated clusters, K = 2..{kmax}…",
+        policy.name(),
+        ratio * 100.0
+    );
+    let cells = scale::scale_sweep(&cfg, &ks, policy, ratio);
+    print!("{}", report::scale_text(&cells));
+    let path = report::save_table(&scale::scale_table(&cells), "scale")?;
+    println!("table written: {path}");
+    let wins = cells.iter().filter(|c| c.wins_both()).count();
+    println!(
+        "consolidation preserves both benefits in {wins}/{} K-columns at {:.1} % of \
+         the dedicated cost",
+        cells.len(),
+        ratio * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_depts(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    if cfg.departments.is_empty() {
+        bail!(
+            "the depts subcommand needs a --config with [[department]] entries \
+             (see configs/departments.toml)"
+        );
+    }
+    let policy = cfg.policy.unwrap_or(PolicySpec::Cooperative);
+    println!(
+        "running {} departments on one {}-node cluster under the {} policy…",
+        cfg.departments.len(),
+        cfg.total_nodes,
+        policy.name()
+    );
+    let res = scale::run_departments(&cfg)?;
+    println!(
+        "{:<12} {:>8} {:>10} {:>7} {:>14} {:>13} {:>9}",
+        "department", "kind", "completed", "killed", "turnaround(s)", "shortage", "holding"
+    );
+    for d in &res.per_dept {
+        println!(
+            "{:<12} {:>8} {:>10} {:>7} {:>14.0} {:>13} {:>9}",
+            d.name,
+            d.kind.name(),
+            d.completed,
+            d.killed,
+            d.avg_turnaround,
+            d.shortage_node_secs,
+            d.holding_end
+        );
+    }
+    println!(
+        "\ntotal: {} completed, {} killed, {} in flight, {} force returns, {} events",
+        res.completed, res.killed, res.in_flight, res.force_returns, res.events
+    );
+    let starved = res
+        .per_dept
+        .iter()
+        .filter(|d| d.kind == DeptKind::Service && d.shortage_node_secs > 0)
+        .count();
+    if starved == 0 {
+        println!("every service department stayed whole (0 node·s shortage)");
+    } else {
+        println!("WARNING: {starved} service department(s) saw unmet demand");
     }
     Ok(())
 }

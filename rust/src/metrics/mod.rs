@@ -1,5 +1,8 @@
 //! Metrics: counters, gauges, and time series, collected per run and
-//! rendered into the experiment reports. Lightweight by design — the
+//! rendered into the experiment reports — the measurement substrate for
+//! the paper's §III-A benefit metrics (completed jobs, turnaround,
+//! per-department resource shares) and the Fig. 5–8 series.
+//! Lightweight by design — the
 //! simulator samples the ledger on every provisioning decision, so pushes
 //! must be cheap (Vec push, no locking; the simulator is single-threaded
 //! and the realtime coordinator keeps a registry per worker).

@@ -1,18 +1,26 @@
 //! The Resource Provision Service (RPS) — the common service framework's
-//! proxy for the whole organization (§II-B): it owns the ledger and decides
-//! when to provision how many nodes to which CMS, under a pluggable policy.
+//! proxy for the whole organization (§II-B): it owns the ledger and
+//! decides when to provision how many nodes to which CMS, under a
+//! pluggable [`ProvisionPolicy`]. Where the paper's RPS arbitrates between
+//! exactly two departments, this one serves N (arXiv:1006.1401): every
+//! request, release, idle grant, and lease expiration is keyed by
+//! [`DeptId`].
 
 pub mod policy;
 
-use crate::cluster::{Ledger, Owner};
+use crate::cluster::{DeptId, Ledger};
+use crate::sim::SimTime;
 
-pub use self::policy::{PolicyKind, ProvisionDecision};
+pub use self::policy::{
+    two_dept_profiles, Cooperative, DeptProfile, LeaseBased, PolicySpec, ProportionalShare,
+    ProvisionDecision, ProvisionPolicy, StaticPartition, TieredCooperative,
+};
 
 /// The RPS: ledger + policy.
 #[derive(Debug)]
 pub struct Rps {
     ledger: Ledger,
-    policy: PolicyKind,
+    policy: Box<dyn ProvisionPolicy>,
     /// Forced-return events issued (metrics).
     pub force_returns: u64,
     /// Nodes moved by forced returns (metrics).
@@ -20,118 +28,208 @@ pub struct Rps {
 }
 
 impl Rps {
-    pub fn new(total_nodes: u64, policy: PolicyKind) -> Self {
-        Self { ledger: Ledger::new(total_nodes), policy, force_returns: 0, forced_nodes: 0 }
+    pub fn new(total_nodes: u64, num_depts: usize, policy: Box<dyn ProvisionPolicy>) -> Self {
+        Self {
+            ledger: Ledger::new(total_nodes, num_depts),
+            policy,
+            force_returns: 0,
+            forced_nodes: 0,
+        }
     }
 
     pub fn ledger(&self) -> &Ledger {
         &self.ledger
     }
 
-    pub fn policy(&self) -> PolicyKind {
-        self.policy
+    pub fn policy_name(&self) -> &str {
+        self.policy.name()
     }
 
-    /// WS claims `need` more nodes (urgent). The policy decides how much
-    /// comes from the free pool and how much must be forced out of ST; the
-    /// driver performs the ST-side kills then calls [`Rps::complete_force`].
-    pub fn ws_request(&mut self, need: u64) -> ProvisionDecision {
-        let d = self.policy.on_ws_request(&self.ledger, need);
+    /// Department `dept` claims `need` more nodes (urgent). The policy
+    /// decides how much comes from the free pool and how much must be
+    /// forced out of which departments; the free-pool part is applied
+    /// here, the forced part after the driver performs the victim-side
+    /// kills and calls [`Rps::complete_force`].
+    pub fn request(&mut self, dept: DeptId, need: u64, now: SimTime) -> ProvisionDecision {
+        let d = self.policy.on_request(dept, need, &self.ledger, now);
         if d.from_free > 0 {
             self.ledger
-                .transfer(Owner::Free, Owner::Ws, d.from_free)
+                .grant(dept, d.from_free)
                 .expect("policy over-granted free nodes");
         }
-        if d.force_from_st > 0 {
+        if !d.force.is_empty() {
             self.force_returns += 1;
-            self.forced_nodes += d.force_from_st;
+            self.forced_nodes += d.force_total();
         }
         d
     }
 
-    /// Finish a forced return after ST released the nodes.
-    pub fn complete_force(&mut self, n: u64) {
+    /// Finish a forced return after `from` released the nodes. Lease
+    /// policies drop the forced nodes from their lease book here.
+    pub fn complete_force(&mut self, from: DeptId, to: DeptId, n: u64, now: SimTime) {
         self.ledger
-            .transfer(Owner::St, Owner::Ws, n)
-            .expect("forced transfer exceeded ST holding");
+            .transfer(from, to, n)
+            .expect("forced transfer exceeded the victim's holding");
+        self.policy.on_force(from, n, now);
     }
 
-    /// WS released `n` idle nodes.
-    pub fn ws_release(&mut self, n: u64) {
+    /// Department `dept` released `n` idle nodes.
+    pub fn release(&mut self, dept: DeptId, n: u64, now: SimTime) {
         self.ledger
-            .transfer(Owner::Ws, Owner::Free, n)
-            .expect("WS released more than it held");
+            .release(dept, n)
+            .expect("department released more than it held");
+        self.policy.on_release(dept, n, now);
     }
 
-    /// Provision idle resources to ST per the policy ("if there are idle
-    /// resources, provision all of them to ST Server"). Returns the grant.
-    pub fn provision_idle_to_st(&mut self) -> u64 {
-        let grant = self.policy.idle_grant_to_st(&self.ledger);
+    /// Provision idle resources per the policy ("if there are idle
+    /// resources, provision all of them to ST Server", generalized to the
+    /// eligible batch departments). Applies and returns the grants.
+    pub fn provision_idle(
+        &mut self,
+        eligible: &[DeptId],
+        now: SimTime,
+    ) -> Vec<(DeptId, u64)> {
+        let grants = self.policy.idle_grants(&self.ledger, eligible, now);
+        for &(d, n) in &grants {
+            self.ledger.grant(d, n).expect("idle grant exceeded free pool");
+        }
+        grants
+    }
+
+    /// Grant up to `n` nodes straight from the free pool to `dept`
+    /// (cluster-boot path). Returns the amount actually granted.
+    pub fn bootstrap_grant(&mut self, dept: DeptId, n: u64) -> u64 {
+        let grant = n.min(self.ledger.free());
         if grant > 0 {
-            self.ledger
-                .transfer(Owner::Free, Owner::St, grant)
-                .expect("idle grant exceeded free pool");
+            self.ledger.grant(dept, grant).expect("bootstrap grant overdraw");
         }
         grant
     }
 
-    /// Initial split at cluster boot.
-    pub fn bootstrap(&mut self, ws_initial: u64) -> (u64, u64) {
-        let ws = ws_initial.min(self.ledger.free());
-        if ws > 0 {
-            self.ledger.transfer(Owner::Free, Owner::Ws, ws).unwrap();
+    /// Leases that expired by `now`: the driver reclaims what it can (idle
+    /// nodes) via [`Rps::lease_return`].
+    pub fn lease_expirations(&mut self, now: SimTime) -> Vec<(DeptId, u64)> {
+        self.policy.expired(now)
+    }
+
+    /// Settle one expired lease: `returned` nodes go back to the free
+    /// pool, `renewed` nodes stay with the department for another term.
+    pub fn lease_return(&mut self, dept: DeptId, returned: u64, renewed: u64, now: SimTime) {
+        if returned > 0 {
+            self.ledger
+                .release(dept, returned)
+                .expect("lease returned more than the department held");
         }
-        let st = self.provision_idle_to_st();
-        (ws, st)
+        if renewed > 0 {
+            self.policy.renewed(dept, renewed, now);
+        }
+    }
+
+    /// Earliest pending lease expiry, if the policy leases at all.
+    pub fn next_expiry(&self) -> Option<SimTime> {
+        self.policy.next_expiry()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::DeptKind;
+
+    fn coop(total: u64) -> Rps {
+        let profiles = two_dept_profiles(144, 64);
+        Rps::new(total, 2, PolicySpec::Cooperative.build(&profiles))
+    }
 
     #[test]
-    fn bootstrap_grants_everything() {
-        let mut rps = Rps::new(160, PolicyKind::Cooperative);
-        let (ws, st) = rps.bootstrap(1);
+    fn bootstrap_then_idle_grants_everything() {
+        let mut rps = coop(160);
+        let ws = rps.bootstrap_grant(DeptId::WS, 1);
         assert_eq!(ws, 1);
-        assert_eq!(st, 159);
+        let grants = rps.provision_idle(&[DeptId::ST], 0);
+        assert_eq!(grants, vec![(DeptId::ST, 159)]);
         assert_eq!(rps.ledger().free(), 0);
     }
 
     #[test]
-    fn ws_request_from_free_then_force() {
-        let mut rps = Rps::new(100, PolicyKind::Cooperative);
-        rps.bootstrap(0); // all 100 to ST
-        let d = rps.ws_request(30);
+    fn request_from_free_then_force() {
+        let mut rps = coop(100);
+        rps.provision_idle(&[DeptId::ST], 0); // all 100 to ST
+        let d = rps.request(DeptId::WS, 30, 0);
         assert_eq!(d.from_free, 0);
-        assert_eq!(d.force_from_st, 30);
-        rps.complete_force(30);
-        assert_eq!(rps.ledger().held(crate::cluster::Owner::Ws), 30);
+        assert_eq!(d.force, vec![(DeptId::ST, 30)]);
+        rps.complete_force(DeptId::ST, DeptId::WS, 30, 0);
+        assert_eq!(rps.ledger().held(DeptId::WS), 30);
         assert_eq!(rps.force_returns, 1);
         assert_eq!(rps.forced_nodes, 30);
     }
 
     #[test]
-    fn ws_release_then_idle_to_st() {
-        let mut rps = Rps::new(100, PolicyKind::Cooperative);
-        rps.bootstrap(40);
-        rps.ws_release(10);
+    fn release_then_idle_back_to_batch() {
+        let mut rps = coop(100);
+        rps.bootstrap_grant(DeptId::WS, 40);
+        rps.provision_idle(&[DeptId::ST], 0);
+        rps.release(DeptId::WS, 10, 50);
         assert_eq!(rps.ledger().free(), 10);
-        let grant = rps.provision_idle_to_st();
-        assert_eq!(grant, 10);
+        let grants = rps.provision_idle(&[DeptId::ST], 50);
+        assert_eq!(grants, vec![(DeptId::ST, 10)]);
         assert_eq!(rps.ledger().free(), 0);
     }
 
     #[test]
     fn static_policy_never_forces() {
-        let mut rps = Rps::new(208, PolicyKind::StaticPartition { st: 144, ws: 64 });
-        rps.bootstrap(64);
-        assert_eq!(rps.ledger().held(crate::cluster::Owner::St), 144);
+        let profiles = two_dept_profiles(144, 64);
+        let mut rps = Rps::new(208, 2, PolicySpec::StaticPartition.build(&profiles));
+        rps.bootstrap_grant(DeptId::WS, 64);
+        rps.provision_idle(&[DeptId::ST], 0);
+        assert_eq!(rps.ledger().held(DeptId::ST), 144);
         // WS asks beyond its partition: nothing from free, nothing forced
-        let d = rps.ws_request(10);
+        let d = rps.request(DeptId::WS, 10, 0);
         assert_eq!(d.from_free, 0);
-        assert_eq!(d.force_from_st, 0);
+        assert!(d.force.is_empty());
         assert!(d.denied > 0);
+    }
+
+    #[test]
+    fn lease_cycle_through_the_rps() {
+        let profiles = two_dept_profiles(144, 64);
+        let mut rps = Rps::new(50, 2, PolicySpec::Lease { secs: 100 }.build(&profiles));
+        rps.provision_idle(&[DeptId::ST], 0);
+        assert_eq!(rps.ledger().held(DeptId::ST), 50);
+        assert_eq!(rps.next_expiry(), Some(100));
+        let exp = rps.lease_expirations(100);
+        assert_eq!(exp, vec![(DeptId::ST, 50)]);
+        // driver found 20 idle: they return; 30 busy renew
+        rps.lease_return(DeptId::ST, 20, 30, 100);
+        assert_eq!(rps.ledger().free(), 20);
+        assert_eq!(rps.ledger().held(DeptId::ST), 30);
+        assert_eq!(rps.next_expiry(), Some(200));
+    }
+
+    #[test]
+    fn many_departments_route_independently() {
+        // 3 batch + 2 service departments on one 300-node cluster
+        let profiles: Vec<DeptProfile> = (0..5u16)
+            .map(|i| DeptProfile {
+                id: DeptId(i),
+                kind: if i < 3 { DeptKind::Batch } else { DeptKind::Service },
+                tier: u8::from(i >= 3),
+                quota: 60,
+            })
+            .collect();
+        let mut rps = Rps::new(300, 5, PolicySpec::Cooperative.build(&profiles));
+        let batch: Vec<DeptId> = (0..3).map(DeptId).collect();
+        let grants = rps.provision_idle(&batch, 0);
+        assert_eq!(grants.iter().map(|&(_, n)| n).sum::<u64>(), 300);
+        // a service dept claims 50: forced off the largest batch holder
+        let d = rps.request(DeptId(4), 50, 10);
+        assert_eq!(d.from_free, 0);
+        assert_eq!(d.force_total(), 50);
+        for &(victim, n) in &d.force {
+            rps.complete_force(victim, DeptId(4), n, 10);
+        }
+        assert_eq!(rps.ledger().held(DeptId(4)), 50);
+        let (free, held) = rps.ledger().snapshot();
+        assert_eq!(free + held.iter().sum::<u64>(), 300);
     }
 }

@@ -1,141 +1,937 @@
-//! Resource provisioning policies (§II-B) plus baselines for ablation.
+//! Resource provisioning policies (§II-B) for N departments.
+//!
+//! The paper evaluates one cooperative policy over exactly two
+//! departments; this module generalizes it into an object-safe
+//! [`ProvisionPolicy`] trait over any number of departments (the
+//! K-department setting of arXiv:1006.1401 / arXiv:1004.1276) and ships
+//! five implementations:
+//!
+//! * [`Cooperative`] — the paper's policy: service departments have
+//!   absolute priority, all idle nodes flow to the batch departments,
+//!   urgent service claims force batch returns.
+//! * [`StaticPartition`] — hard per-department quotas, no flow between
+//!   departments (models K dedicated clusters).
+//! * [`ProportionalShare`] — each service department may claim only up to
+//!   its cap; the rest is protected for batch work.
+//! * [`LeaseBased`] — cooperative flow, but idle grants to batch
+//!   departments carry a lease (arXiv:1006.1401's lease-style resizing):
+//!   at expiry, idle leased nodes return to the free pool (busy ones
+//!   renew), so urgent service claims can often be served without kills.
+//! * [`TieredCooperative`] — departments are ranked into priority tiers;
+//!   force-reclaims cascade down the tier order (a requester may only
+//!   reclaim from strictly lower-priority departments).
+//!
+//! # Implementing a custom policy
+//!
+//! ```
+//! use phoenix_cloud::cluster::{DeptId, Ledger};
+//! use phoenix_cloud::provision::{ProvisionDecision, ProvisionPolicy};
+//! use phoenix_cloud::sim::SimTime;
+//!
+//! /// Grants from the free pool only — never forces, never denies less.
+//! #[derive(Debug)]
+//! struct FreeOnly;
+//!
+//! impl ProvisionPolicy for FreeOnly {
+//!     fn name(&self) -> &str {
+//!         "free-only"
+//!     }
+//!
+//!     fn on_request(
+//!         &mut self,
+//!         _dept: DeptId,
+//!         need: u64,
+//!         ledger: &Ledger,
+//!         _now: SimTime,
+//!     ) -> ProvisionDecision {
+//!         let from_free = need.min(ledger.free());
+//!         ProvisionDecision { from_free, force: Vec::new(), denied: need - from_free }
+//!     }
+//!
+//!     fn idle_grants(
+//!         &mut self,
+//!         _ledger: &Ledger,
+//!         _eligible: &[DeptId],
+//!         _now: SimTime,
+//!     ) -> Vec<(DeptId, u64)> {
+//!         Vec::new() // hoard the free pool for future requests
+//!     }
+//! }
+//!
+//! let mut policy = FreeOnly;
+//! let mut ledger = Ledger::new(10, 2);
+//! ledger.grant(DeptId::ST, 8).unwrap(); // 2 left free
+//! let d = policy.on_request(DeptId::WS, 5, &ledger, 0);
+//! assert_eq!((d.from_free, d.denied), (2, 3));
+//! assert!(d.force.is_empty());
+//! ```
 
-use crate::cluster::Ledger;
+use std::collections::BTreeMap;
+use std::fmt;
 
-/// What the policy decided for a WS request of `need` nodes.
+use crate::cluster::{DeptId, DeptKind, Ledger};
+use crate::sim::SimTime;
+
+/// Static facts a policy knows about one department (from the
+/// `[[department]]` config): identity, workload kind, priority tier, and
+/// quota (partition size under [`StaticPartition`], claim cap under
+/// [`ProportionalShare`], dedicated-cluster size in the scale sweep).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeptProfile {
+    pub id: DeptId,
+    pub kind: DeptKind,
+    /// Priority tier: lower = higher priority ([`TieredCooperative`]).
+    pub tier: u8,
+    pub quota: u64,
+}
+
+/// What the policy decided for a request of `need` nodes.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ProvisionDecision {
     /// Granted straight from the free pool (applied by the RPS).
     pub from_free: u64,
-    /// To be forcibly returned by ST (the driver kills jobs, then calls
-    /// `complete_force`).
-    pub force_from_st: u64,
-    /// Demand the policy refused (only the non-cooperative baselines).
+    /// Per-department forced returns, in kill order: the driver kills jobs
+    /// in each named department, then calls `Rps::complete_force`.
+    pub force: Vec<(DeptId, u64)>,
+    /// Demand the policy refused.
     pub denied: u64,
 }
 
-/// Provisioning policy selection.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PolicyKind {
-    /// The paper's cooperative policy: WS has absolute priority; all idle
-    /// nodes flow to ST; urgent WS claims force ST returns.
-    Cooperative,
-    /// The static baseline: hard partition, no flow between departments
-    /// (models the two dedicated clusters of the SC configuration).
-    StaticPartition { st: u64, ws: u64 },
-    /// Ablation: WS may claim only up to a share of the cluster; the rest
-    /// is protected for ST (quantifies what WS priority costs ST).
-    ProportionalShare { ws_cap: u64 },
-}
-
-impl PolicyKind {
-    /// Decide a WS request of `need` more nodes given the current ledger.
-    pub fn on_ws_request(&self, ledger: &Ledger, need: u64) -> ProvisionDecision {
-        match *self {
-            PolicyKind::Cooperative => {
-                let from_free = need.min(ledger.free());
-                let shortfall = need - from_free;
-                let force_from_st = shortfall.min(ledger.held(crate::cluster::Owner::St));
-                ProvisionDecision {
-                    from_free,
-                    force_from_st,
-                    denied: shortfall - force_from_st,
-                }
-            }
-            PolicyKind::StaticPartition { ws, .. } => {
-                let held = ledger.held(crate::cluster::Owner::Ws);
-                let allowed = ws.saturating_sub(held);
-                let grant = need.min(allowed).min(ledger.free());
-                ProvisionDecision { from_free: grant, force_from_st: 0, denied: need - grant }
-            }
-            PolicyKind::ProportionalShare { ws_cap } => {
-                let held = ledger.held(crate::cluster::Owner::Ws);
-                let allowed = ws_cap.saturating_sub(held).min(need);
-                let from_free = allowed.min(ledger.free());
-                let shortfall = allowed - from_free;
-                let force_from_st = shortfall.min(ledger.held(crate::cluster::Owner::St));
-                ProvisionDecision {
-                    from_free,
-                    force_from_st,
-                    denied: need - from_free - force_from_st,
-                }
-            }
-        }
+impl ProvisionDecision {
+    fn none(denied: u64) -> Self {
+        Self { from_free: 0, force: Vec::new(), denied }
     }
 
-    /// How much of the free pool goes to ST right now.
-    pub fn idle_grant_to_st(&self, ledger: &Ledger) -> u64 {
-        match *self {
-            // "if there are idle resources … provision all idle to ST"
-            PolicyKind::Cooperative | PolicyKind::ProportionalShare { .. } => ledger.free(),
-            PolicyKind::StaticPartition { st, .. } => {
-                let held = ledger.held(crate::cluster::Owner::St);
-                st.saturating_sub(held).min(ledger.free())
-            }
-        }
+    /// Total nodes to be forcibly reclaimed across departments.
+    pub fn force_total(&self) -> u64 {
+        self.force.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Total nodes the requester will receive.
+    pub fn granted(&self) -> u64 {
+        self.from_free + self.force_total()
+    }
+}
+
+/// An object-safe provisioning policy over an N-department ledger.
+///
+/// The Resource Provision Service consults the policy; the policy never
+/// mutates the ledger itself. Every implementation must conserve nodes:
+/// `from_free + force_total + denied == need`, `from_free ≤ ledger.free()`,
+/// and each forced amount must not exceed the victim's holdings (the
+/// property suite in `tests/properties.rs` enforces this for every
+/// built-in policy).
+pub trait ProvisionPolicy: fmt::Debug + Send {
+    /// Short policy name for reports and CLI output.
+    fn name(&self) -> &str;
+
+    /// Department `dept` urgently requests `need` more nodes.
+    fn on_request(
+        &mut self,
+        dept: DeptId,
+        need: u64,
+        ledger: &Ledger,
+        now: SimTime,
+    ) -> ProvisionDecision;
+
+    /// Distribute the free pool across the `eligible` departments
+    /// (normally every batch department; the driver narrows the set when
+    /// only specific departments have queued demand). Entries must sum to
+    /// at most `ledger.free()`.
+    fn idle_grants(
+        &mut self,
+        ledger: &Ledger,
+        eligible: &[DeptId],
+        now: SimTime,
+    ) -> Vec<(DeptId, u64)>;
+
+    /// A department returned `n` nodes to the free pool (bookkeeping hook).
+    fn on_release(&mut self, _dept: DeptId, _n: u64, _now: SimTime) {}
+
+    /// `n` nodes were forcibly reclaimed from `victim` (bookkeeping hook —
+    /// lease policies drop the forced nodes from their lease book so stale
+    /// entries don't reclaim newer grants early or renew phantom nodes).
+    fn on_force(&mut self, _victim: DeptId, _n: u64, _now: SimTime) {}
+
+    /// Grants whose lease expired by `now`: (department, nodes) the RPS
+    /// should try to pull back. The driver caps each reclaim by the
+    /// department's idle nodes and reports the remainder through
+    /// [`ProvisionPolicy::renewed`]. Default: nothing expires.
+    fn expired(&mut self, _now: SimTime) -> Vec<(DeptId, u64)> {
+        Vec::new()
+    }
+
+    /// `n` nodes of an expired lease stayed busy and renew for another
+    /// term. Default: no-op.
+    fn renewed(&mut self, _dept: DeptId, _n: u64, _now: SimTime) {}
+
+    /// Earliest future time at which [`ProvisionPolicy::expired`] may
+    /// return nodes (drives the simulator's lease-tick events).
+    fn next_expiry(&self) -> Option<SimTime> {
+        None
+    }
+}
+
+/// Declarative policy selection — the parsed form of the `[policy]` config
+/// section, turned into a live policy with [`PolicySpec::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicySpec {
+    Cooperative,
+    StaticPartition,
+    ProportionalShare,
+    Lease {
+        /// Lease term in seconds.
+        secs: u64,
+    },
+    Tiered,
+}
+
+impl PolicySpec {
+    /// Parse a policy name; `lease_secs` supplies the term for `lease`.
+    pub fn parse(s: &str, lease_secs: u64) -> anyhow::Result<Self> {
+        Ok(match s {
+            "cooperative" | "coop" => PolicySpec::Cooperative,
+            "static" => PolicySpec::StaticPartition,
+            "proportional" => PolicySpec::ProportionalShare,
+            "lease" => PolicySpec::Lease { secs: lease_secs },
+            "tiered" => PolicySpec::Tiered,
+            _ => anyhow::bail!(
+                "unknown policy '{s}' (cooperative|static|proportional|lease|tiered)"
+            ),
+        })
     }
 
     pub fn name(&self) -> &'static str {
         match self {
-            PolicyKind::Cooperative => "cooperative",
-            PolicyKind::StaticPartition { .. } => "static",
-            PolicyKind::ProportionalShare { .. } => "proportional",
+            PolicySpec::Cooperative => "cooperative",
+            PolicySpec::StaticPartition => "static",
+            PolicySpec::ProportionalShare => "proportional",
+            PolicySpec::Lease { .. } => "lease",
+            PolicySpec::Tiered => "tiered",
         }
     }
+
+    /// Instantiate the policy over the given department profiles.
+    pub fn build(&self, depts: &[DeptProfile]) -> Box<dyn ProvisionPolicy> {
+        match *self {
+            PolicySpec::Cooperative => Box::new(Cooperative::new(depts.to_vec())),
+            PolicySpec::StaticPartition => Box::new(StaticPartition::new(depts.to_vec())),
+            PolicySpec::ProportionalShare => {
+                Box::new(ProportionalShare::new(depts.to_vec()))
+            }
+            PolicySpec::Lease { secs } => Box::new(LeaseBased::new(depts.to_vec(), secs)),
+            PolicySpec::Tiered => Box::new(TieredCooperative::new(depts.to_vec())),
+        }
+    }
+}
+
+// ---- shared helpers ---------------------------------------------------------
+
+/// Force `shortfall` nodes out of `victims` (largest holdings first, ties
+/// to the lower id — deterministic). Returns the per-department reclaim
+/// list and the unmet remainder.
+fn force_by_holdings(
+    ledger: &Ledger,
+    victims: &mut [&DeptProfile],
+    mut shortfall: u64,
+) -> (Vec<(DeptId, u64)>, u64) {
+    victims.sort_by_key(|p| (std::cmp::Reverse(ledger.held(p.id)), p.id));
+    let mut force = Vec::new();
+    for p in victims.iter() {
+        if shortfall == 0 {
+            break;
+        }
+        let take = shortfall.min(ledger.held(p.id));
+        if take > 0 {
+            force.push((p.id, take));
+            shortfall -= take;
+        }
+    }
+    (force, shortfall)
+}
+
+/// Split `free` evenly across `eligible` (remainder to the earliest ids in
+/// the given order); zero shares are dropped.
+fn split_even(free: u64, eligible: &[DeptId]) -> Vec<(DeptId, u64)> {
+    if free == 0 || eligible.is_empty() {
+        return Vec::new();
+    }
+    let n = eligible.len() as u64;
+    let share = free / n;
+    let rem = free % n;
+    eligible
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| (d, share + u64::from((i as u64) < rem)))
+        .filter(|&(_, n)| n > 0)
+        .collect()
+}
+
+fn batch_profiles<'a>(depts: &'a [DeptProfile]) -> Vec<&'a DeptProfile> {
+    depts.iter().filter(|p| p.kind == DeptKind::Batch).collect()
+}
+
+fn profile(depts: &[DeptProfile], id: DeptId) -> Option<&DeptProfile> {
+    depts.iter().find(|p| p.id == id)
+}
+
+/// The §II-B cooperative request flow shared by [`Cooperative`] and
+/// [`LeaseBased`]: free pool first; a *service* requester then forces the
+/// shortfall out of the batch departments (largest holdings first); batch
+/// requesters never force.
+fn cooperative_decision(
+    depts: &[DeptProfile],
+    dept: DeptId,
+    need: u64,
+    ledger: &Ledger,
+) -> ProvisionDecision {
+    let from_free = need.min(ledger.free());
+    let shortfall = need - from_free;
+    let requester_kind = profile(depts, dept).map(|p| p.kind);
+    if shortfall == 0 || requester_kind != Some(DeptKind::Service) {
+        // batch departments wait for idle capacity; they never force
+        return ProvisionDecision { from_free, force: Vec::new(), denied: shortfall };
+    }
+    let mut victims: Vec<&DeptProfile> =
+        batch_profiles(depts).into_iter().filter(|p| p.id != dept).collect();
+    let (force, denied) = force_by_holdings(ledger, &mut victims, shortfall);
+    ProvisionDecision { from_free, force, denied }
+}
+
+// ---- the paper's cooperative policy (§II-B), N departments ------------------
+
+/// Service departments have absolute priority; all idle nodes flow to the
+/// batch departments (split evenly when there are several); urgent service
+/// claims force batch returns, largest batch holdings first.
+#[derive(Debug)]
+pub struct Cooperative {
+    depts: Vec<DeptProfile>,
+}
+
+impl Cooperative {
+    pub fn new(depts: Vec<DeptProfile>) -> Self {
+        Self { depts }
+    }
+}
+
+impl ProvisionPolicy for Cooperative {
+    fn name(&self) -> &str {
+        "cooperative"
+    }
+
+    fn on_request(
+        &mut self,
+        dept: DeptId,
+        need: u64,
+        ledger: &Ledger,
+        _now: SimTime,
+    ) -> ProvisionDecision {
+        cooperative_decision(&self.depts, dept, need, ledger)
+    }
+
+    fn idle_grants(
+        &mut self,
+        ledger: &Ledger,
+        eligible: &[DeptId],
+        _now: SimTime,
+    ) -> Vec<(DeptId, u64)> {
+        // "if there are idle resources … provision all of them to ST"
+        split_even(ledger.free(), eligible)
+    }
+}
+
+// ---- static partition (the SC baseline), N departments ----------------------
+
+/// Hard quotas: each department may hold at most its quota and nothing
+/// flows between departments — K dedicated clusters sharing a chassis.
+#[derive(Debug)]
+pub struct StaticPartition {
+    depts: Vec<DeptProfile>,
+}
+
+impl StaticPartition {
+    pub fn new(depts: Vec<DeptProfile>) -> Self {
+        Self { depts }
+    }
+
+    fn headroom(&self, dept: DeptId, ledger: &Ledger) -> u64 {
+        profile(&self.depts, dept)
+            .map(|p| p.quota.saturating_sub(ledger.held(dept)))
+            .unwrap_or(0)
+    }
+}
+
+impl ProvisionPolicy for StaticPartition {
+    fn name(&self) -> &str {
+        "static"
+    }
+
+    fn on_request(
+        &mut self,
+        dept: DeptId,
+        need: u64,
+        ledger: &Ledger,
+        _now: SimTime,
+    ) -> ProvisionDecision {
+        let grant = need.min(self.headroom(dept, ledger)).min(ledger.free());
+        ProvisionDecision { from_free: grant, force: Vec::new(), denied: need - grant }
+    }
+
+    fn idle_grants(
+        &mut self,
+        ledger: &Ledger,
+        eligible: &[DeptId],
+        _now: SimTime,
+    ) -> Vec<(DeptId, u64)> {
+        let mut remaining = ledger.free();
+        let mut out = Vec::new();
+        for &d in eligible {
+            if remaining == 0 {
+                break;
+            }
+            let give = self.headroom(d, ledger).min(remaining);
+            if give > 0 {
+                remaining -= give;
+                out.push((d, give));
+            }
+        }
+        out
+    }
+}
+
+// ---- proportional share (ablation), N departments ---------------------------
+
+/// Service departments may claim only up to their quota (cap); the rest of
+/// the cluster is protected for batch work. Quantifies what absolute
+/// service priority costs the batch departments.
+#[derive(Debug)]
+pub struct ProportionalShare {
+    depts: Vec<DeptProfile>,
+}
+
+impl ProportionalShare {
+    pub fn new(depts: Vec<DeptProfile>) -> Self {
+        Self { depts }
+    }
+}
+
+impl ProvisionPolicy for ProportionalShare {
+    fn name(&self) -> &str {
+        "proportional"
+    }
+
+    fn on_request(
+        &mut self,
+        dept: DeptId,
+        need: u64,
+        ledger: &Ledger,
+        _now: SimTime,
+    ) -> ProvisionDecision {
+        let Some(p) = profile(&self.depts, dept) else {
+            return ProvisionDecision::none(need);
+        };
+        let allowed = p.quota.saturating_sub(ledger.held(dept)).min(need);
+        let from_free = allowed.min(ledger.free());
+        let shortfall = allowed - from_free;
+        let (force, unmet) = if p.kind == DeptKind::Service && shortfall > 0 {
+            let mut victims: Vec<&DeptProfile> = batch_profiles(&self.depts)
+                .into_iter()
+                .filter(|v| v.id != dept)
+                .collect();
+            force_by_holdings(ledger, &mut victims, shortfall)
+        } else {
+            (Vec::new(), shortfall)
+        };
+        let denied = (need - allowed) + unmet;
+        ProvisionDecision { from_free, force, denied }
+    }
+
+    fn idle_grants(
+        &mut self,
+        ledger: &Ledger,
+        eligible: &[DeptId],
+        _now: SimTime,
+    ) -> Vec<(DeptId, u64)> {
+        split_even(ledger.free(), eligible)
+    }
+}
+
+// ---- lease-based cooperative (arXiv:1006.1401) ------------------------------
+
+/// Cooperative flow with lease-style resizing: every idle grant to a batch
+/// department expires after `lease` seconds. At expiry the driver returns
+/// the department's *idle* leased nodes to the free pool (busy nodes renew
+/// for another term), so the free pool periodically recovers capacity and
+/// urgent service claims can often be served without killing jobs.
+#[derive(Debug)]
+pub struct LeaseBased {
+    depts: Vec<DeptProfile>,
+    lease: u64,
+    /// Outstanding leases: expiry → per-department leased node counts.
+    leases: BTreeMap<SimTime, BTreeMap<DeptId, u64>>,
+}
+
+impl LeaseBased {
+    pub fn new(depts: Vec<DeptProfile>, lease: u64) -> Self {
+        assert!(lease > 0, "lease term must be positive");
+        Self { depts, lease, leases: BTreeMap::new() }
+    }
+
+    pub fn lease_secs(&self) -> u64 {
+        self.lease
+    }
+
+    fn record(&mut self, dept: DeptId, n: u64, now: SimTime) {
+        if n > 0 {
+            *self
+                .leases
+                .entry(now + self.lease)
+                .or_default()
+                .entry(dept)
+                .or_insert(0) += n;
+        }
+    }
+
+    /// Drop `n` of `dept`'s leased nodes from the book, earliest expiry
+    /// first (forced-away nodes no longer belong to the department, so
+    /// their lease entries must not fire later).
+    fn drop_leased(&mut self, dept: DeptId, mut n: u64) {
+        let expiries: Vec<SimTime> = self.leases.keys().copied().collect();
+        for t in expiries {
+            if n == 0 {
+                break;
+            }
+            let Some(per_dept) = self.leases.get_mut(&t) else { continue };
+            if let Some(held) = per_dept.get_mut(&dept) {
+                let take = n.min(*held);
+                *held -= take;
+                n -= take;
+                if *held == 0 {
+                    per_dept.remove(&dept);
+                }
+            }
+            if per_dept.is_empty() {
+                self.leases.remove(&t);
+            }
+        }
+    }
+}
+
+impl ProvisionPolicy for LeaseBased {
+    fn name(&self) -> &str {
+        "lease"
+    }
+
+    fn on_request(
+        &mut self,
+        dept: DeptId,
+        need: u64,
+        ledger: &Ledger,
+        now: SimTime,
+    ) -> ProvisionDecision {
+        // same flow as Cooperative, plus a lease on any batch-side grant
+        let d = cooperative_decision(&self.depts, dept, need, ledger);
+        if profile(&self.depts, dept).map(|p| p.kind) == Some(DeptKind::Batch) {
+            self.record(dept, d.from_free, now);
+        }
+        d
+    }
+
+    fn idle_grants(
+        &mut self,
+        ledger: &Ledger,
+        eligible: &[DeptId],
+        now: SimTime,
+    ) -> Vec<(DeptId, u64)> {
+        let grants = split_even(ledger.free(), eligible);
+        for &(d, n) in &grants {
+            self.record(d, n, now);
+        }
+        grants
+    }
+
+    fn expired(&mut self, now: SimTime) -> Vec<(DeptId, u64)> {
+        let due: Vec<SimTime> = self.leases.range(..=now).map(|(&t, _)| t).collect();
+        let mut total: BTreeMap<DeptId, u64> = BTreeMap::new();
+        for t in due {
+            if let Some(per_dept) = self.leases.remove(&t) {
+                for (d, n) in per_dept {
+                    *total.entry(d).or_insert(0) += n;
+                }
+            }
+        }
+        total.into_iter().collect()
+    }
+
+    fn renewed(&mut self, dept: DeptId, n: u64, now: SimTime) {
+        self.record(dept, n, now);
+    }
+
+    fn on_force(&mut self, victim: DeptId, n: u64, _now: SimTime) {
+        self.drop_leased(victim, n);
+    }
+
+    fn next_expiry(&self) -> Option<SimTime> {
+        self.leases.keys().next().copied()
+    }
+}
+
+// ---- priority-tiered cooperative --------------------------------------------
+
+/// Cooperative flow with ranked departments: a requester may force-reclaim
+/// only from *strictly lower-priority* departments (tier number greater
+/// than its own), and the reclaim cascades from the bottom tier upward.
+/// Within a tier, largest holdings go first (ties to the lower id).
+#[derive(Debug)]
+pub struct TieredCooperative {
+    depts: Vec<DeptProfile>,
+}
+
+impl TieredCooperative {
+    pub fn new(depts: Vec<DeptProfile>) -> Self {
+        Self { depts }
+    }
+}
+
+impl ProvisionPolicy for TieredCooperative {
+    fn name(&self) -> &str {
+        "tiered"
+    }
+
+    fn on_request(
+        &mut self,
+        dept: DeptId,
+        need: u64,
+        ledger: &Ledger,
+        _now: SimTime,
+    ) -> ProvisionDecision {
+        let from_free = need.min(ledger.free());
+        let mut shortfall = need - from_free;
+        let Some(requester) = profile(&self.depts, dept) else {
+            return ProvisionDecision { from_free, force: Vec::new(), denied: shortfall };
+        };
+        if shortfall == 0 {
+            return ProvisionDecision { from_free, force: Vec::new(), denied: 0 };
+        }
+        // cascade down the tiers: bottom (largest tier value) first
+        let mut victims: Vec<&DeptProfile> = self
+            .depts
+            .iter()
+            .filter(|p| p.kind == DeptKind::Batch && p.tier > requester.tier && p.id != dept)
+            .collect();
+        victims.sort_by_key(|p| {
+            (std::cmp::Reverse(p.tier), std::cmp::Reverse(ledger.held(p.id)), p.id)
+        });
+        let mut force = Vec::new();
+        for p in victims {
+            if shortfall == 0 {
+                break;
+            }
+            let take = shortfall.min(ledger.held(p.id));
+            if take > 0 {
+                force.push((p.id, take));
+                shortfall -= take;
+            }
+        }
+        ProvisionDecision { from_free, force, denied: shortfall }
+    }
+
+    fn idle_grants(
+        &mut self,
+        ledger: &Ledger,
+        eligible: &[DeptId],
+        _now: SimTime,
+    ) -> Vec<(DeptId, u64)> {
+        // idle capacity favors higher-priority batch departments: fill the
+        // top tier evenly, then the next, and so on
+        let mut remaining = ledger.free();
+        let mut out: Vec<(DeptId, u64)> = Vec::new();
+        let mut by_tier: Vec<(u8, DeptId)> = eligible
+            .iter()
+            .map(|&d| (profile(&self.depts, d).map(|p| p.tier).unwrap_or(u8::MAX), d))
+            .collect();
+        by_tier.sort();
+        let mut i = 0;
+        while i < by_tier.len() && remaining > 0 {
+            let tier = by_tier[i].0;
+            let group: Vec<DeptId> = by_tier[i..]
+                .iter()
+                .take_while(|&&(t, _)| t == tier)
+                .map(|&(_, d)| d)
+                .collect();
+            i += group.len();
+            for (d, n) in split_even(remaining, &group) {
+                remaining -= n;
+                out.push((d, n));
+            }
+        }
+        out
+    }
+}
+
+// ---- convenience constructors -----------------------------------------------
+
+/// The paper's two-department profile set: ST (batch, id 0) + WS (service,
+/// id 1) with the given quotas (partition sizes / caps).
+pub fn two_dept_profiles(st_quota: u64, ws_quota: u64) -> Vec<DeptProfile> {
+    vec![
+        DeptProfile { id: DeptId::ST, kind: DeptKind::Batch, tier: 1, quota: st_quota },
+        DeptProfile { id: DeptId::WS, kind: DeptKind::Service, tier: 0, quota: ws_quota },
+    ]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::Owner;
 
     fn ledger(free: u64, st: u64, ws: u64) -> Ledger {
-        let mut l = Ledger::new(free + st + ws);
-        l.transfer(Owner::Free, Owner::St, st).unwrap();
-        l.transfer(Owner::Free, Owner::Ws, ws).unwrap();
+        let mut l = Ledger::new(free + st + ws, 2);
+        l.grant(DeptId::ST, st).unwrap();
+        l.grant(DeptId::WS, ws).unwrap();
         l
     }
 
     #[test]
     fn cooperative_prefers_free_then_forces() {
         let l = ledger(10, 50, 5);
-        let d = PolicyKind::Cooperative.on_ws_request(&l, 25);
-        assert_eq!(d, ProvisionDecision { from_free: 10, force_from_st: 15, denied: 0 });
+        let mut p = Cooperative::new(two_dept_profiles(144, 64));
+        let d = p.on_request(DeptId::WS, 25, &l, 0);
+        assert_eq!(d.from_free, 10);
+        assert_eq!(d.force, vec![(DeptId::ST, 15)]);
+        assert_eq!(d.denied, 0);
     }
 
     #[test]
     fn cooperative_denies_only_when_cluster_exhausted() {
         let l = ledger(0, 10, 5);
-        let d = PolicyKind::Cooperative.on_ws_request(&l, 25);
-        assert_eq!(d.force_from_st, 10);
+        let mut p = Cooperative::new(two_dept_profiles(144, 64));
+        let d = p.on_request(DeptId::WS, 25, &l, 0);
+        assert_eq!(d.force_total(), 10);
         assert_eq!(d.denied, 15);
     }
 
     #[test]
-    fn cooperative_gives_all_idle_to_st() {
+    fn cooperative_gives_all_idle_to_single_batch_dept() {
         let l = ledger(42, 0, 0);
-        assert_eq!(PolicyKind::Cooperative.idle_grant_to_st(&l), 42);
+        let mut p = Cooperative::new(two_dept_profiles(144, 64));
+        assert_eq!(p.idle_grants(&l, &[DeptId::ST], 0), vec![(DeptId::ST, 42)]);
+    }
+
+    #[test]
+    fn cooperative_splits_idle_across_batch_depts() {
+        let mut l = Ledger::new(10, 3);
+        l.grant(DeptId(2), 3).unwrap(); // 7 free
+        let depts = vec![
+            DeptProfile { id: DeptId(0), kind: DeptKind::Batch, tier: 1, quota: 100 },
+            DeptProfile { id: DeptId(1), kind: DeptKind::Batch, tier: 1, quota: 100 },
+            DeptProfile { id: DeptId(2), kind: DeptKind::Service, tier: 0, quota: 100 },
+        ];
+        let mut p = Cooperative::new(depts);
+        let grants = p.idle_grants(&l, &[DeptId(0), DeptId(1)], 0);
+        assert_eq!(grants, vec![(DeptId(0), 4), (DeptId(1), 3)]);
+    }
+
+    #[test]
+    fn cooperative_forces_largest_batch_holder_first() {
+        let mut l = Ledger::new(30, 3);
+        l.grant(DeptId(0), 10).unwrap();
+        l.grant(DeptId(1), 20).unwrap();
+        let depts = vec![
+            DeptProfile { id: DeptId(0), kind: DeptKind::Batch, tier: 1, quota: 100 },
+            DeptProfile { id: DeptId(1), kind: DeptKind::Batch, tier: 1, quota: 100 },
+            DeptProfile { id: DeptId(2), kind: DeptKind::Service, tier: 0, quota: 100 },
+        ];
+        let mut p = Cooperative::new(depts);
+        let d = p.on_request(DeptId(2), 25, &l, 0);
+        assert_eq!(d.from_free, 0);
+        assert_eq!(d.force, vec![(DeptId(1), 20), (DeptId(0), 5)]);
+        assert_eq!(d.denied, 0);
+    }
+
+    #[test]
+    fn batch_requester_never_forces() {
+        let l = ledger(2, 0, 30);
+        let mut p = Cooperative::new(two_dept_profiles(144, 64));
+        let d = p.on_request(DeptId::ST, 10, &l, 0);
+        assert_eq!(d.from_free, 2);
+        assert!(d.force.is_empty());
+        assert_eq!(d.denied, 8);
     }
 
     #[test]
     fn static_partition_caps_both_sides() {
-        let p = PolicyKind::StaticPartition { st: 144, ws: 64 };
+        let p_depts = two_dept_profiles(144, 64);
+        let mut p = StaticPartition::new(p_depts);
         let l = ledger(144 + 14, 0, 50); // ws holds 50 of its 64
-        let d = p.on_ws_request(&l, 30);
+        let d = p.on_request(DeptId::WS, 30, &l, 0);
         assert_eq!(d.from_free, 14);
-        assert_eq!(d.force_from_st, 0);
+        assert!(d.force.is_empty());
         assert_eq!(d.denied, 16);
         // ST fills only to its partition
-        assert_eq!(p.idle_grant_to_st(&ledger(200, 100, 0)), 44);
+        let l2 = ledger(200, 100, 0);
+        assert_eq!(p.idle_grants(&l2, &[DeptId::ST], 0), vec![(DeptId::ST, 44)]);
     }
 
     #[test]
-    fn proportional_share_caps_ws() {
-        let p = PolicyKind::ProportionalShare { ws_cap: 40 };
+    fn proportional_share_caps_service() {
+        let mut depts = two_dept_profiles(144, 40);
+        depts[0].quota = u64::MAX; // batch uncapped
+        let mut p = ProportionalShare::new(depts);
         let l = ledger(0, 100, 30);
-        let d = p.on_ws_request(&l, 30);
+        let d = p.on_request(DeptId::WS, 30, &l, 0);
         assert_eq!(d.from_free, 0);
-        assert_eq!(d.force_from_st, 10); // only up to the 40-node cap
+        assert_eq!(d.force, vec![(DeptId::ST, 10)]); // only up to the 40-node cap
         assert_eq!(d.denied, 20);
+    }
+
+    #[test]
+    fn lease_records_and_expires_grants() {
+        let mut p = LeaseBased::new(two_dept_profiles(144, 64), 100);
+        let l = ledger(50, 0, 0);
+        let grants = p.idle_grants(&l, &[DeptId::ST], 10);
+        assert_eq!(grants, vec![(DeptId::ST, 50)]);
+        assert_eq!(p.next_expiry(), Some(110));
+        assert!(p.expired(109).is_empty());
+        assert_eq!(p.expired(110), vec![(DeptId::ST, 50)]);
+        assert_eq!(p.next_expiry(), None);
+        // busy nodes renew for another term
+        p.renewed(DeptId::ST, 30, 110);
+        assert_eq!(p.next_expiry(), Some(210));
+        assert_eq!(p.expired(500), vec![(DeptId::ST, 30)]);
+    }
+
+    #[test]
+    fn lease_requests_force_like_cooperative() {
+        let mut p = LeaseBased::new(two_dept_profiles(144, 64), 100);
+        let l = ledger(4, 20, 0);
+        let d = p.on_request(DeptId::WS, 10, &l, 0);
+        assert_eq!(d.from_free, 4);
+        assert_eq!(d.force, vec![(DeptId::ST, 6)]);
+        assert_eq!(d.denied, 0);
+    }
+
+    #[test]
+    fn forced_nodes_leave_the_lease_book() {
+        let mut p = LeaseBased::new(two_dept_profiles(144, 64), 100);
+        let l = ledger(10, 0, 0);
+        p.idle_grants(&l, &[DeptId::ST], 0); // 10 leased, expiry 100
+        // a service spike forces all 10 away before the lease ends
+        p.on_force(DeptId::ST, 10, 50);
+        assert_eq!(p.next_expiry(), None, "stale lease survived the force");
+        assert!(p.expired(1000).is_empty());
+        // partial force drops from the earliest expiry first
+        let l2 = ledger(6, 0, 0);
+        p.idle_grants(&l2, &[DeptId::ST], 200); // expiry 300
+        let l3 = ledger(4, 6, 0);
+        p.idle_grants(&l3, &[DeptId::ST], 250); // expiry 350
+        p.on_force(DeptId::ST, 7, 260); // kills the 6 at 300 + 1 of the 4
+        assert_eq!(p.next_expiry(), Some(350));
+        assert_eq!(p.expired(350), vec![(DeptId::ST, 3)]);
+    }
+
+    #[test]
+    fn lease_aggregates_same_expiry() {
+        let mut p = LeaseBased::new(two_dept_profiles(144, 64), 60);
+        let l = ledger(10, 0, 0);
+        p.idle_grants(&l, &[DeptId::ST], 0);
+        let l2 = ledger(5, 10, 0);
+        p.idle_grants(&l2, &[DeptId::ST], 0);
+        assert_eq!(p.expired(60), vec![(DeptId::ST, 15)]);
+    }
+
+    fn tiered_depts() -> Vec<DeptProfile> {
+        vec![
+            DeptProfile { id: DeptId(0), kind: DeptKind::Service, tier: 0, quota: 100 },
+            DeptProfile { id: DeptId(1), kind: DeptKind::Batch, tier: 1, quota: 100 },
+            DeptProfile { id: DeptId(2), kind: DeptKind::Batch, tier: 2, quota: 100 },
+        ]
+    }
+
+    #[test]
+    fn tiered_cascades_down_from_the_bottom_tier() {
+        let mut l = Ledger::new(25, 3);
+        l.grant(DeptId(1), 15).unwrap();
+        l.grant(DeptId(2), 10).unwrap();
+        let mut p = TieredCooperative::new(tiered_depts());
+        // top-tier service dept reclaims tier 2 fully before touching tier 1
+        let d = p.on_request(DeptId(0), 18, &l, 0);
+        assert_eq!(d.from_free, 0);
+        assert_eq!(d.force, vec![(DeptId(2), 10), (DeptId(1), 8)]);
+        assert_eq!(d.denied, 0);
+    }
+
+    #[test]
+    fn tiered_never_reclaims_upward_or_sideways() {
+        let mut l = Ledger::new(30, 3);
+        l.grant(DeptId(1), 15).unwrap();
+        l.grant(DeptId(2), 15).unwrap();
+        let mut p = TieredCooperative::new(tiered_depts());
+        // the tier-2 batch dept outranks nobody: nothing to force
+        let d = p.on_request(DeptId(2), 10, &l, 0);
+        assert!(d.force.is_empty());
+        assert_eq!(d.denied, 10);
+        // the tier-1 batch dept may only reclaim from tier 2
+        let d = p.on_request(DeptId(1), 20, &l, 0);
+        assert_eq!(d.force, vec![(DeptId(2), 15)]);
+        assert_eq!(d.denied, 5);
+    }
+
+    #[test]
+    fn tiered_idle_fills_top_tier_first() {
+        let l = {
+            let mut l = Ledger::new(10, 3);
+            l.grant(DeptId(0), 0).unwrap();
+            l
+        };
+        let mut p = TieredCooperative::new(tiered_depts());
+        let grants = p.idle_grants(&l, &[DeptId(1), DeptId(2)], 0);
+        // tier 1 takes everything before tier 2 sees any
+        assert_eq!(grants, vec![(DeptId(1), 10)]);
+    }
+
+    #[test]
+    fn spec_parses_and_builds_every_policy() {
+        let depts = two_dept_profiles(144, 64);
+        for (name, expect) in [
+            ("cooperative", PolicySpec::Cooperative),
+            ("static", PolicySpec::StaticPartition),
+            ("proportional", PolicySpec::ProportionalShare),
+            ("lease", PolicySpec::Lease { secs: 300 }),
+            ("tiered", PolicySpec::Tiered),
+        ] {
+            let spec = PolicySpec::parse(name, 300).unwrap();
+            assert_eq!(spec, expect);
+            assert_eq!(spec.name(), name);
+            let built = spec.build(&depts);
+            assert_eq!(built.name(), name);
+        }
+        assert!(PolicySpec::parse("lottery", 300).is_err());
+    }
+
+    #[test]
+    fn decisions_conserve_nodes() {
+        let l = ledger(7, 20, 3);
+        for spec in [
+            PolicySpec::Cooperative,
+            PolicySpec::StaticPartition,
+            PolicySpec::ProportionalShare,
+            PolicySpec::Lease { secs: 60 },
+            PolicySpec::Tiered,
+        ] {
+            let mut p = spec.build(&two_dept_profiles(144, 64));
+            for need in [0, 1, 9, 35, 200] {
+                let d = p.on_request(DeptId::WS, need, &l, 5);
+                assert_eq!(
+                    d.from_free + d.force_total() + d.denied,
+                    need,
+                    "{}: need {need} not conserved: {d:?}",
+                    p.name()
+                );
+                assert!(d.from_free <= l.free());
+                for &(v, n) in &d.force {
+                    assert!(n <= l.held(v), "{}: over-forced {v}", p.name());
+                }
+            }
+        }
     }
 }

@@ -1,5 +1,6 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
-//! once by `make artifacts`) and executes them from the Rust hot path.
+//! once by `make artifacts`) and executes them from the Rust hot path —
+//! the predictive extension of the paper's §III-C reactive autoscaler.
 //! Python is never on the request path — this module is the only bridge to
 //! the L1/L2 compute.
 //!

@@ -1,6 +1,7 @@
 //! Discrete-event simulation engine.
 //!
-//! The paper replays two-week traces at 100× wall-clock speedup; we go one
+//! The paper's §III-D evaluation replays two-week traces at 100×
+//! wall-clock speedup; we go one
 //! step further and simulate in virtual time (events jump the clock), which
 //! is exact and runs the whole evaluation in seconds. Events are `(time,
 //! seq, event)` triples ordered by time with a monotonically increasing

@@ -16,6 +16,7 @@ pub mod scheduler;
 
 use std::collections::BTreeMap;
 
+use crate::cluster::DeptId;
 use crate::config::{KillOrder, SchedulerKind};
 use crate::sim::SimTime;
 use crate::workload::{Job, JobOutcome, JobState};
@@ -34,6 +35,8 @@ pub struct Started {
 /// The ST Server.
 #[derive(Debug)]
 pub struct StServer {
+    /// Which department this CMS serves (ledger address for RPS traffic).
+    dept: DeptId,
     /// Nodes currently provisioned to ST by the RPS.
     pool: u64,
     /// Nodes of `pool` occupied by running jobs.
@@ -47,8 +50,16 @@ pub struct StServer {
 }
 
 impl StServer {
+    /// A batch CMS for the paper's conventional ST department.
     pub fn new(scheduler: SchedulerKind, kill_order: KillOrder) -> Self {
+        Self::for_dept(DeptId::ST, scheduler, kill_order)
+    }
+
+    /// A batch CMS serving an arbitrary department of the N-department
+    /// configuration.
+    pub fn for_dept(dept: DeptId, scheduler: SchedulerKind, kill_order: KillOrder) -> Self {
         Self {
+            dept,
             pool: 0,
             busy: 0,
             queue: JobQueue::new(),
@@ -57,6 +68,11 @@ impl StServer {
             kill_order,
             outcomes: Vec::new(),
         }
+    }
+
+    /// The department this CMS manages resources for.
+    pub fn dept(&self) -> DeptId {
+        self.dept
     }
 
     pub fn pool(&self) -> u64 {

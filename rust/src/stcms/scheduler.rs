@@ -2,7 +2,7 @@
 //!
 //! The paper evaluates **First-Fit** (§III-D: "Scheduler is specified with
 //! the First-Fit scheduling policy"). FCFS and EASY backfilling are
-//! implemented as ablation baselines (DESIGN.md §4).
+//! implemented as ablation baselines (ARCHITECTURE.md).
 
 use std::collections::BTreeMap;
 

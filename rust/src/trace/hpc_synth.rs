@@ -1,7 +1,7 @@
 //! Synthetic SDSC-BLUE-like HPC trace generator.
 //!
 //! The real log is unreachable offline, so we generate a statistically
-//! matched substitute (DESIGN.md §6): the paper states the two-week slice
+//! matched substitute (ARCHITECTURE.md): the paper states the two-week slice
 //! holds **2672 jobs** submitted to a **144-node** machine, heavy enough
 //! that extra nodes translate into more completions (queueing exists).
 //!
@@ -81,7 +81,7 @@ fn rate_envelope(t: u64) -> f64 {
 /// "node jobs" are rare and the bulk of the mix is 2–32 nodes; the giant
 /// tail is kept light because first-fit starves giants behind small jobs,
 /// which concentrates the backlog in a handful of jobs and destroys the
-/// *count*-based Fig.-7 dynamics (see DESIGN.md §6 calibration notes).
+/// *count*-based Fig.-7 dynamics (see ARCHITECTURE.md trace substitutions).
 fn draw_size(rng: &mut Rng, max: u64) -> u64 {
     const SIZES: [u64; 9] = [1, 2, 4, 8, 16, 32, 64, 128, u64::MAX /* full */];
     const WEIGHTS: [f64; 9] = [1.0, 2.0, 8.0, 22.0, 30.0, 24.0, 8.0, 1.0, 0.3];

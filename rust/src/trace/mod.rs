@@ -1,7 +1,7 @@
-//! Trace substrates.
+//! Trace substrates for the paper's §III-B workloads.
 //!
 //! The paper evaluates on two real traces we cannot fetch in this offline
-//! environment (see DESIGN.md §6 substitutions):
+//! environment (see ARCHITECTURE.md on substitutions):
 //!
 //! * **SDSC BLUE** (2 weeks from 2000-04-25; 144-node machine; 2672 jobs
 //!   submitted) — we provide a full Standard Workload Format parser

@@ -4,7 +4,7 @@
 //! 1998-06-07) by 2.22 and reports a *high peak-to-normal ratio*; the
 //! Fig.-5 autoscaler then peaks at 64 VM instances. The log itself is
 //! unreachable offline, so we generate a rate series with the same
-//! structure (DESIGN.md §6):
+//! structure (ARCHITECTURE.md):
 //!
 //! * diurnal base traffic (overnight troughs),
 //! * scheduled **match events** — 1–3 per day (the group stage ran several

@@ -1,7 +1,9 @@
 //! Foundation utilities built from scratch (this environment has no network,
 //! so no external crates beyond `xla`/`anyhow`/`thiserror`/`log`): PRNG +
 //! distributions, JSON, a TOML-subset config parser, CLI parsing, logging,
-//! descriptive statistics, and a seeded property-testing harness.
+//! descriptive statistics, and a seeded property-testing harness. These
+//! reproduce no section of the paper themselves; they are the substrate
+//! the §III experiment layer stands on.
 
 pub mod bench;
 pub mod cli;

@@ -1,13 +1,15 @@
 //! TOML-subset parser for config files (`configs/*.toml`).
 //!
 //! Supported (all the config system needs): `[table]` / `[a.b]` headers,
-//! `key = value` with strings, integers, floats, booleans, and homogeneous
-//! arrays; `#` comments; bare or quoted keys. Not supported (rejected with
-//! an error, never silently misparsed): inline tables, array-of-tables
-//! (`[[x]]`), multiline strings, datetimes.
+//! array-of-tables (`[[department]]` — each header appends a fresh table
+//! to the named array, as the N-department configs use), `key = value`
+//! with strings, integers, floats, booleans, and homogeneous arrays; `#`
+//! comments; bare or quoted keys. Not supported (rejected with an error,
+//! never silently misparsed): inline tables, multiline strings, datetimes.
 //!
 //! Values land in the same [`Json`] model so config plumbing and report
-//! plumbing share accessors.
+//! plumbing share accessors; an array-of-tables becomes a `Json::Arr` of
+//! `Json::Obj`.
 
 use std::collections::BTreeMap;
 
@@ -33,8 +35,25 @@ pub fn parse(src: &str) -> Result<Json, TomlError> {
         let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
 
         if let Some(rest) = line.strip_prefix("[[") {
-            let _ = rest;
-            return Err(err("array-of-tables [[..]] is not supported"));
+            let inner = rest
+                .strip_suffix("]]")
+                .ok_or_else(|| err("unterminated array-of-tables header"))?;
+            let path: Vec<String> = inner.split('.').map(|p| unquote_key(p.trim())).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty table-name component"));
+            }
+            // navigate to the parent, then append a fresh table to the array
+            let (last, parent_path) = path.split_last().expect("non-empty path");
+            let parent = ensure_table(&mut root, parent_path).map_err(|m| err(&m))?;
+            let entry = parent
+                .entry(last.clone())
+                .or_insert_with(|| Json::Arr(Vec::new()));
+            match entry {
+                Json::Arr(items) => items.push(Json::Obj(BTreeMap::new())),
+                _ => return Err(err(&format!("'{last}' is both a value and an array of tables"))),
+            }
+            current_path = path;
+            continue;
         }
         if let Some(rest) = line.strip_prefix('[') {
             let inner = rest.strip_suffix(']').ok_or_else(|| err("unterminated table header"))?;
@@ -42,8 +61,20 @@ pub fn parse(src: &str) -> Result<Json, TomlError> {
             if path.iter().any(|p| p.is_empty()) {
                 return Err(err("empty table-name component"));
             }
-            // materialize the table
-            ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+            // materialize the table; intermediate components may pass
+            // through an array-of-tables (last element), but the *named*
+            // table itself must not be one — that needs a [[..]] header
+            let (last, parent_path) = path.split_last().expect("non-empty path");
+            let parent = ensure_table(&mut root, parent_path).map_err(|m| err(&m))?;
+            match parent.entry(last.clone()).or_insert_with(|| Json::Obj(BTreeMap::new())) {
+                Json::Obj(_) => {}
+                Json::Arr(_) => {
+                    return Err(err(&format!(
+                        "'{last}' is an array of tables; use [[{last}]] to append"
+                    )))
+                }
+                _ => return Err(err(&format!("'{last}' is both a value and a table"))),
+            }
             current_path = path;
             continue;
         }
@@ -92,6 +123,10 @@ fn unquote_key(k: &str) -> String {
     }
 }
 
+/// Walk `path` from `root`, materializing tables as needed. A component
+/// that resolves to an array-of-tables descends into its *last* element —
+/// that is how `key = value` lines following a `[[x]]` header land in the
+/// freshly appended table.
 fn ensure_table<'a>(
     root: &'a mut BTreeMap<String, Json>,
     path: &[String],
@@ -103,6 +138,10 @@ fn ensure_table<'a>(
             .or_insert_with(|| Json::Obj(BTreeMap::new()));
         match entry {
             Json::Obj(m) => cur = m,
+            Json::Arr(items) => match items.last_mut() {
+                Some(Json::Obj(m)) => cur = m,
+                _ => return Err(format!("array '{part}' holds no table to extend")),
+            },
             _ => return Err(format!("'{part}' is both a value and a table")),
         }
     }
@@ -249,11 +288,38 @@ mod tests {
 
     #[test]
     fn rejects_unsupported_and_garbage() {
-        assert!(parse("[[x]]\n").is_err());
         assert!(parse("x = {a=1}\n").is_err());
         assert!(parse("x 1\n").is_err());
         assert!(parse("x = \n").is_err());
         assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("[[x\n").is_err());
+        // a plain value cannot later become an array of tables
+        assert!(parse("x = 1\n[[x]]\n").is_err());
+        // a plain [x] header cannot reopen an array of tables
+        assert!(parse("[[x]]\nn = 1\n[x]\nm = 2\n").is_err());
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let src = "total = 208\n\n[[department]]\nname = \"st\"\nkind = \"batch\"\n\n\
+                   [[department]]\nname = \"ws\"\nkind = \"service\"\ntier = 1\n";
+        let v = parse(src).unwrap();
+        let depts = v.get("department").unwrap().as_arr().unwrap();
+        assert_eq!(depts.len(), 2);
+        assert_eq!(depts[0].get("name").unwrap().as_str(), Some("st"));
+        assert_eq!(depts[1].get("kind").unwrap().as_str(), Some("service"));
+        assert_eq!(depts[1].get("tier").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("total").unwrap().as_u64(), Some(208));
+    }
+
+    #[test]
+    fn array_of_tables_keys_stay_per_element() {
+        // a duplicate key is fine across elements, an error within one
+        let ok = parse("[[d]]\nn = 1\n[[d]]\nn = 2\n").unwrap();
+        let arr = ok.get("d").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].get("n").unwrap().as_u64(), Some(1));
+        assert_eq!(arr[1].get("n").unwrap().as_u64(), Some(2));
+        assert!(parse("[[d]]\nn = 1\nn = 2\n").is_err());
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Workload models: HPC batch jobs (ST CMS) and Web requests / service
-//! instances (WS CMS).
+//! Workload models for the paper's two load classes (§II-A): HPC batch
+//! jobs (ST CMS, SWF-style records) and Web requests / service instances
+//! (WS CMS). In the N-department generalization every batch department
+//! replays a [`Job`] trace and every service department a request stream.
 
 use crate::sim::SimTime;
 

@@ -13,6 +13,7 @@ pub mod loadgen;
 pub mod lvs;
 pub mod serving;
 
+use crate::cluster::DeptId;
 use crate::sim::SimTime;
 
 /// WS Server state for the consolidation simulation: tracks the instance
@@ -21,6 +22,8 @@ use crate::sim::SimTime;
 /// "enough resources to the Web service department" claim.
 #[derive(Debug)]
 pub struct WsServer {
+    /// Which department this CMS serves (ledger address for RPS traffic).
+    dept: DeptId,
     /// Nodes currently provisioned by the RPS.
     holding: u64,
     /// Current demand target (instances ≙ nodes, §III-D).
@@ -33,8 +36,27 @@ pub struct WsServer {
 }
 
 impl WsServer {
+    /// A service CMS for the paper's conventional WS department.
     pub fn new() -> Self {
-        Self { holding: 0, demand: 0, shortage_node_secs: 0, shortage_samples: 0, last_change: 0 }
+        Self::for_dept(DeptId::WS)
+    }
+
+    /// A service CMS serving an arbitrary department of the N-department
+    /// configuration.
+    pub fn for_dept(dept: DeptId) -> Self {
+        Self {
+            dept,
+            holding: 0,
+            demand: 0,
+            shortage_node_secs: 0,
+            shortage_samples: 0,
+            last_change: 0,
+        }
+    }
+
+    /// The department this CMS manages resources for.
+    pub fn dept(&self) -> DeptId {
+        self.dept
     }
 
     pub fn holding(&self) -> u64 {

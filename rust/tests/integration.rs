@@ -114,6 +114,72 @@ fn config_file_drives_the_simulation() {
     assert!(r.completed > 0);
 }
 
+/// The N-department path end to end, exactly as `phoenixd depts` runs it:
+/// a `[[department]]` TOML roster (K = 3, lease policy) drives one shared
+/// cluster, every service department stays whole, and the per-department
+/// breakdown closes against the aggregate.
+#[test]
+fn department_config_drives_a_k3_lease_run() {
+    use phoenix_cloud::experiments::scale;
+
+    let dir = std::env::temp_dir().join("phoenix_it_depts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("departments.toml");
+    std::fs::write(
+        &path,
+        "configuration = \"dynamic\"\nhorizon = 86_400\n\n\
+         [cluster]\ntotal_nodes = 260\n\n\
+         [hpc]\nnum_jobs = 250\n\n\
+         [policy]\nkind = \"lease\"\nlease_secs = 1800\n\n\
+         [[department]]\nname = \"physics\"\nkind = \"batch\"\nquota = 144\n\n\
+         [[department]]\nname = \"genomics\"\nkind = \"batch\"\nquota = 100\ntier = 2\nseed = 42\n\n\
+         [[department]]\nname = \"portal\"\nkind = \"service\"\nquota = 64\n",
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.departments.len(), 3);
+    let res = scale::run_departments(&cfg).unwrap();
+    assert_eq!(res.label, "K3-lease");
+    assert_eq!(res.per_dept.len(), 3);
+    assert_eq!(res.submitted, 500, "two batch depts × 250 jobs");
+    assert!(res.completed > 0);
+    assert_eq!(res.ws_shortage_node_secs, 0, "{res:?}");
+    assert_eq!(
+        res.per_dept.iter().map(|d| d.completed).sum::<u64>(),
+        res.completed
+    );
+    assert_eq!(
+        res.completed as usize + res.killed as usize + res.in_flight,
+        res.submitted,
+        "job accounting must close"
+    );
+}
+
+/// The economies-of-scale sweep emits a consolidated-vs-dedicated row for
+/// every K and the table export matches the cells.
+#[test]
+fn scale_sweep_consolidated_vs_dedicated_rows() {
+    use phoenix_cloud::experiments::scale;
+    use phoenix_cloud::provision::PolicySpec;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.horizon = DAY;
+    cfg.hpc.horizon = DAY;
+    cfg.web.horizon = DAY;
+    cfg.hpc.num_jobs = 200;
+    let ks = [2, 3, 4, 5];
+    let cells = scale::scale_sweep(&cfg, &ks, PolicySpec::Cooperative, 0.8);
+    assert_eq!(cells.len(), ks.len());
+    for (c, &k) in cells.iter().zip(&ks) {
+        assert_eq!(c.k, k);
+        assert!(c.cost_ratio() < 1.0);
+        assert_eq!(c.consolidated_shortage, 0);
+    }
+    let t = scale::scale_table(&cells);
+    assert_eq!(t.rows.len(), ks.len());
+    assert_eq!(t.col("consolidated_completed").unwrap()[0], cells[0].consolidated_completed as f64);
+}
+
 #[test]
 fn report_tables_consistent_with_runs() {
     let mut cfg = ExperimentConfig::default();

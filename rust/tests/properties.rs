@@ -3,33 +3,138 @@
 //! available offline). Each property runs hundreds of randomized cases;
 //! failures print a `PHOENIX_PROP_SEED` that reproduces them exactly.
 
-use phoenix_cloud::cluster::{Ledger, Owner};
+use phoenix_cloud::cluster::{DeptId, DeptKind, Ledger};
 use phoenix_cloud::config::{ExperimentConfig, KillOrder, SchedulerKind};
 use phoenix_cloud::coordinator::ConsolidationSim;
 use phoenix_cloud::prop_assert;
+use phoenix_cloud::provision::{DeptProfile, PolicySpec};
 use phoenix_cloud::util::prop::{check, Gen};
 use phoenix_cloud::workload::{Job, JobState};
 use phoenix_cloud::wscms::autoscaler::Reactive;
 use phoenix_cloud::stcms::StServer;
 
-/// Ledger conservation: any sequence of transfers keeps free+st+ws ==
-/// total, and failed transfers never mutate.
+/// Ledger conservation over N departments: any sequence of grants,
+/// releases, and transfers keeps `free + Σ held == total`, and failed
+/// moves never mutate.
 #[test]
 fn prop_ledger_conserves_nodes() {
     check("ledger-conservation", 300, |g: &mut Gen| {
         let total = g.u64_in(1, 500);
-        let mut ledger = Ledger::new(total);
+        let k = g.usize_in(1, 8);
+        let mut ledger = Ledger::new(total, k);
         for _ in 0..g.usize_in(1, 60) {
-            let owners = [Owner::Free, Owner::St, Owner::Ws];
-            let from = *g.pick(&owners);
-            let to = *g.pick(&owners);
+            // ids up to k+1: out-of-range departments must error cleanly
+            let from = DeptId(g.usize_in(0, k + 1) as u16);
+            let to = DeptId(g.usize_in(0, k + 1) as u16);
             let n = g.u64_in(0, total + 10);
             let before = ledger.snapshot();
-            let ok = ledger.transfer(from, to, n).is_ok();
-            let (f, s, w) = ledger.snapshot();
-            prop_assert!(f + s + w == total, "leak: {f}+{s}+{w} != {total}");
+            let ok = match g.usize_in(0, 2) {
+                0 => ledger.grant(to, n).is_ok(),
+                1 => ledger.release(from, n).is_ok(),
+                _ => ledger.transfer(from, to, n).is_ok(),
+            };
+            let (free, held) = ledger.snapshot();
+            prop_assert!(
+                free + held.iter().sum::<u64>() == total,
+                "leak: {free}+{held:?} != {total}"
+            );
             if !ok {
-                prop_assert!(ledger.snapshot() == before, "failed transfer mutated");
+                prop_assert!(ledger.snapshot() == before, "failed move mutated");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every built-in [`phoenix_cloud::provision::ProvisionPolicy`] conserves
+/// nodes on randomized N-department ledgers:
+/// `from_free + force_total + denied == need`, the free-pool grant never
+/// exceeds the free pool, each forced amount never exceeds the victim's
+/// holdings (so grants never exceed free + reclaimable), victims are
+/// distinct and never the requester, and idle grants never exceed the free
+/// pool.
+#[test]
+fn prop_policies_conserve_nodes() {
+    check("policy-conservation", 300, |g: &mut Gen| {
+        let k = g.usize_in(2, 8);
+        let profiles: Vec<DeptProfile> = (0..k)
+            .map(|i| DeptProfile {
+                id: DeptId(i as u16),
+                kind: if g.bool() { DeptKind::Batch } else { DeptKind::Service },
+                tier: g.u64_in(0, 3) as u8,
+                quota: g.u64_in(1, 300),
+            })
+            .collect();
+        // random ledger state over those departments
+        let total = g.u64_in(k as u64, 2000);
+        let mut ledger = Ledger::new(total, k);
+        for i in 0..k {
+            let n = g.u64_in(0, ledger.free());
+            ledger.grant(DeptId(i as u16), n).unwrap();
+        }
+        let spec = *g.pick(&[
+            PolicySpec::Cooperative,
+            PolicySpec::StaticPartition,
+            PolicySpec::ProportionalShare,
+            PolicySpec::Lease { secs: 60 },
+            PolicySpec::Tiered,
+        ]);
+        let mut policy = spec.build(&profiles);
+        let now = g.u64_in(0, 100_000);
+
+        for _ in 0..g.usize_in(1, 20) {
+            let dept = DeptId(g.usize_in(0, k - 1) as u16);
+            let need = g.u64_in(0, total + 50);
+            let d = policy.on_request(dept, need, &ledger, now);
+            prop_assert!(
+                d.from_free + d.force_total() + d.denied == need,
+                "{}: need {need} split into {} + {} + {}",
+                policy.name(),
+                d.from_free,
+                d.force_total(),
+                d.denied
+            );
+            prop_assert!(
+                d.from_free <= ledger.free(),
+                "{}: granted {} from a free pool of {}",
+                policy.name(),
+                d.from_free,
+                ledger.free()
+            );
+            let mut seen = std::collections::BTreeSet::new();
+            for &(victim, n) in &d.force {
+                prop_assert!(victim != dept, "{}: forced the requester", policy.name());
+                prop_assert!(seen.insert(victim), "{}: duplicate victim", policy.name());
+                prop_assert!(
+                    n <= ledger.held(victim),
+                    "{}: forced {n} from {victim} holding {}",
+                    policy.name(),
+                    ledger.held(victim)
+                );
+            }
+
+            // idle grants must fit in the free pool
+            let eligible: Vec<DeptId> = profiles
+                .iter()
+                .filter(|p| p.kind == DeptKind::Batch)
+                .map(|p| p.id)
+                .collect();
+            let grants = policy.idle_grants(&ledger, &eligible, now);
+            let granted: u64 = grants.iter().map(|&(_, n)| n).sum();
+            prop_assert!(
+                granted <= ledger.free(),
+                "{}: idle-granted {granted} of {}",
+                policy.name(),
+                ledger.free()
+            );
+            for (d2, n) in grants {
+                prop_assert!(n > 0, "{}: zero-node idle grant", policy.name());
+                prop_assert!(eligible.contains(&d2), "{}: grant to ineligible", policy.name());
+            }
+
+            // lease policies: expiry streams stay per-department sane
+            for (d2, n) in policy.expired(now + g.u64_in(0, 200)) {
+                prop_assert!(n > 0, "empty expiry for {d2}");
             }
         }
         Ok(())
