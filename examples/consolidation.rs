@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     println!("WS trace : autoscaled WorldCup-like demand, peak 64 instances\n");
 
     let t0 = std::time::Instant::now();
-    let results = consolidation::sweep(&base, &sizes);
+    let results = consolidation::sweep(&base, &sizes)?;
     println!("{}", report::sweep_text(&results));
     println!(
         "sweep wall time: {:.2?} (virtual-time simulation of {} two-week runs)",

@@ -16,7 +16,7 @@ fn main() {
     let base = ExperimentConfig::default();
 
     println!("Phoenix Cloud quickstart — SC (208 dedicated) vs DC-160 (shared)\n");
-    let results = consolidation::sweep(&base, &[160]);
+    let results = consolidation::sweep(&base, &[160]).expect("sweep failed");
     print!("{}", report::sweep_text(&results));
 
     let sc = &results[0];

@@ -13,14 +13,14 @@ fn main() {
     let base = ExperimentConfig::dynamic(160);
 
     section("kill-order ablation at DC-160 (paper: min-size, shortest-elapsed)");
-    let rows = bench_once("kill_orders", || ablations::kill_orders(&base));
+    let rows = bench_once("kill_orders", || ablations::kill_orders(&base).expect("ablation"));
     println!("{:<12} {:>9} {:>10} {:>14}", "order", "killed", "completed", "turnaround(s)");
     for (name, r) in &rows {
         println!("{:<12} {:>9} {:>10} {:>14.0}", name, r.killed, r.completed, r.avg_turnaround);
     }
 
     section("scheduler ablation at DC-160 (paper: first-fit)");
-    let rows = bench_once("schedulers", || ablations::schedulers(&base));
+    let rows = bench_once("schedulers", || ablations::schedulers(&base).expect("ablation"));
     println!("{:<12} {:>9} {:>10} {:>14}", "scheduler", "killed", "completed", "turnaround(s)");
     for (name, r) in &rows {
         println!("{:<12} {:>9} {:>10} {:>14.0}", name, r.killed, r.completed, r.avg_turnaround);

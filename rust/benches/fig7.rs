@@ -13,16 +13,17 @@ fn main() {
 
     let base = ExperimentConfig::default();
     bench("single DC-160 run (2672 jobs, two weeks)", 1, 10, || {
-        consolidation::run_one(ExperimentConfig::dynamic(160)).events
+        consolidation::run_one(ExperimentConfig::dynamic(160)).expect("run").events
     });
     bench("full sweep (SC + 6 DC sizes)", 1, 5, || {
         consolidation::sweep(&base, &consolidation::PAPER_SIZES)
+            .expect("sweep")
             .iter()
             .map(|r| r.events)
             .sum()
     });
 
-    let results = consolidation::sweep(&base, &consolidation::PAPER_SIZES);
+    let results = consolidation::sweep(&base, &consolidation::PAPER_SIZES).expect("sweep");
     println!("\n{}", report::sweep_text(&results));
     match consolidation::headline(&results) {
         Some((n, ratio)) => {

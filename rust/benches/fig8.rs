@@ -12,11 +12,11 @@ fn main() {
     section("Fig 8 — killed jobs vs cluster size");
 
     bench("DC-150 run (max kill pressure)", 1, 10, || {
-        consolidation::run_one(ExperimentConfig::dynamic(150)).killed
+        consolidation::run_one(ExperimentConfig::dynamic(150)).expect("run").killed
     });
 
     let base = ExperimentConfig::default();
-    let results = consolidation::sweep(&base, &consolidation::PAPER_SIZES);
+    let results = consolidation::sweep(&base, &consolidation::PAPER_SIZES).expect("sweep");
     println!("\ncluster_nodes killed_jobs");
     for r in &results {
         println!("{:>13} {:>11}", r.cluster_nodes, r.killed);

@@ -25,7 +25,8 @@
 use std::collections::BTreeMap;
 
 use phoenix_cloud::cluster::{DeptId, Ledger};
-use phoenix_cloud::config::{ExperimentConfig, KillOrder, SchedulerKind};
+use phoenix_cloud::config::{ExperimentConfig, KillOrder, RosterMix, SchedulerKind};
+use phoenix_cloud::experiments::matrix::{self, MatrixAxes, PolicyAxis};
 use phoenix_cloud::experiments::{consolidation, scale};
 use phoenix_cloud::provision::PolicySpec;
 use phoenix_cloud::runtime::ForecastEngine;
@@ -184,8 +185,40 @@ fn main() {
             &[2, 3, 4],
             PolicySpec::Cooperative,
             scale::default_ratio(&scale_cfg),
-        );
+        )
+        .expect("scale sweep");
         cells.iter().map(|c| c.consolidated.events).sum()
+    }));
+
+    section("scenario matrix (roster × policy × size grid, two-week traces)");
+    let matrix_cfg = ExperimentConfig::default();
+    let matrix_axes = MatrixAxes {
+        ks: vec![2, 3],
+        mixes: vec![RosterMix::Alternating],
+        policies: vec![
+            PolicyAxis::Base(PolicySpec::Cooperative),
+            PolicyAxis::Base(PolicySpec::Lease { secs: 3600 }),
+        ],
+        loads: vec![matrix_cfg.hpc.target_load],
+        size_fracs: matrix::default_size_fracs(&matrix_cfg, true),
+        quick: true,
+    };
+    {
+        // determinism gate: the parallel matrix must match the serial one
+        let mut serial_cfg = matrix_cfg.clone();
+        serial_cfg.workers = 1;
+        let serial_cells =
+            matrix::run_matrix(&serial_cfg, &matrix_axes).expect("serial matrix");
+        let par_cells = matrix::run_matrix(&matrix_cfg, &matrix_axes).expect("parallel matrix");
+        assert_eq!(
+            matrix::matrix_json(&serial_cells, true).to_string(),
+            matrix::matrix_json(&par_cells, true).to_string(),
+            "parallel matrix diverged from serial"
+        );
+    }
+    rep.record(bench("matrix grid K=2..3", 0, iters(3).max(2), || {
+        let cells = matrix::run_matrix(&matrix_cfg, &matrix_axes).expect("matrix");
+        cells.iter().flat_map(|c| c.runs.iter().map(|r| r.events)).sum()
     }));
 
     if ForecastEngine::artifacts_present("artifacts") {
@@ -218,6 +251,7 @@ fn main() {
 fn rep_bench_sweep(rep: &mut BenchReport, name: &str, cfg: &ExperimentConfig) -> f64 {
     let r = bench(name, 0, iters(3).max(2), || {
         consolidation::sweep(cfg, &consolidation::PAPER_SIZES)
+            .expect("sweep")
             .iter()
             .map(|r| r.events)
             .sum()
@@ -229,6 +263,7 @@ fn rep_bench_sweep(rep: &mut BenchReport, name: &str, cfg: &ExperimentConfig) ->
         std::sync::OnceLock::new();
     let table: Vec<(String, u64, u64, u64, u64)> =
         consolidation::sweep(cfg, &consolidation::PAPER_SIZES)
+            .expect("sweep")
             .iter()
             .map(|r| {
                 (r.label.clone(), r.completed, r.killed, r.avg_turnaround.to_bits(), r.events)

@@ -12,6 +12,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::DeptKind;
+use crate::provision::mixed::{PolicyChoice, TierRule};
 use crate::provision::policy::{DeptProfile, PolicySpec};
 use crate::trace::hpc_synth::HpcTraceConfig;
 use crate::trace::web_synth::WebTraceConfig;
@@ -128,6 +129,145 @@ fn parse_dept_kind(s: &str) -> Result<DeptKind> {
     })
 }
 
+/// Roster shape of a generated K-department organization: how the K
+/// departments divide into batch and service work. Every shape is
+/// prefix-stable (the first k departments of a K-department roster equal
+/// the k-department roster), which lets sweeps share generated traces
+/// across K columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RosterMix {
+    /// The paper's shape, generalized: departments alternate batch and
+    /// service (st0, ws0, st1, ws1, …) — K = 2 is exactly the ST+WS pair.
+    Alternating,
+    /// One batch anchor plus K−1 service departments (portal-heavy
+    /// organizations; stresses urgent-claim arbitration).
+    ServiceHeavy,
+    /// One service department plus K−1 batch departments spread over
+    /// priority tiers 1–3 (compute-heavy organizations; stresses the
+    /// tiered and mixed policies).
+    BatchHeavy,
+}
+
+impl RosterMix {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "alternating" | "paper" => RosterMix::Alternating,
+            "service-heavy" => RosterMix::ServiceHeavy,
+            "batch-heavy" => RosterMix::BatchHeavy,
+            _ => bail!("unknown roster mix '{s}' (alternating|service-heavy|batch-heavy)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RosterMix::Alternating => "alternating",
+            RosterMix::ServiceHeavy => "service-heavy",
+            RosterMix::BatchHeavy => "batch-heavy",
+        }
+    }
+
+    /// Build the K-department roster of this shape, quotas from the base
+    /// config (batch = `st_nodes`, service = `ws_nodes`), seeds derived
+    /// per kind-ordinal downstream (None here).
+    pub fn departments(&self, k: usize, base: &ExperimentConfig) -> Vec<DeptSpec> {
+        let batch = |ord: usize, tier: u8| DeptSpec {
+            name: format!("st{ord}"),
+            kind: DeptKind::Batch,
+            tier,
+            quota: base.st_nodes,
+            seed: None,
+        };
+        let service = |ord: usize| DeptSpec {
+            name: format!("ws{ord}"),
+            kind: DeptKind::Service,
+            tier: 0,
+            quota: base.ws_nodes,
+            seed: None,
+        };
+        (0..k)
+            .map(|i| match self {
+                RosterMix::Alternating => {
+                    if i % 2 == 0 {
+                        batch(i / 2, 1)
+                    } else {
+                        service(i / 2)
+                    }
+                }
+                RosterMix::ServiceHeavy => {
+                    if i == 0 {
+                        batch(0, 1)
+                    } else {
+                        service(i - 1)
+                    }
+                }
+                RosterMix::BatchHeavy => {
+                    if i == 0 {
+                        service(0)
+                    } else {
+                        batch(i - 1, 1 + ((i - 1) % 3) as u8)
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// One declared cell of the scenario matrix (`[[scenario]]` in TOML):
+/// a roster shape and size, a provisioning policy, and optional load /
+/// cluster-size overrides. `experiments::matrix` runs these instead of
+/// its default grid when a config declares any.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Number of departments.
+    pub k: usize,
+    pub mix: RosterMix,
+    /// Policy name: cooperative|static|proportional|lease|tiered|mixed.
+    pub policy_kind: String,
+    /// Lease term fed to lease-bearing policies (`lease` and `mixed`).
+    pub lease_secs: u64,
+    /// HPC offered-load override (None = the base config's calibration).
+    pub load: Option<f64>,
+    /// Single consolidated-cluster fraction override in (0, 1]; None runs
+    /// the matrix's standard descending size grid.
+    pub frac: Option<f64>,
+}
+
+pub(crate) const SCENARIO_POLICY_KINDS: [&str; 6] =
+    ["cooperative", "static", "proportional", "lease", "tiered", "mixed"];
+
+// Typed optional accessors for overlay tables: `None` only when the key is
+// absent — a present-but-mistyped value is an error, never a silent
+// fall-back to the default.
+fn typed_str<'a>(t: &'a Json, key: &str, ctx: &str) -> Result<Option<&'a str>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{ctx}: '{key}' must be a string, got {v}")),
+    }
+}
+
+fn typed_u64(t: &Json, key: &str, ctx: &str) -> Result<Option<u64>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+            anyhow::anyhow!("{ctx}: '{key}' must be a non-negative integer, got {v}")
+        }),
+    }
+}
+
+fn typed_f64(t: &Json, key: &str, ctx: &str) -> Result<Option<f64>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{ctx}: '{key}' must be a number, got {v}")),
+    }
+}
+
 /// Everything one consolidation run needs.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -153,10 +293,14 @@ pub struct ExperimentConfig {
     /// N-department roster (`[[department]]`). Empty = the paper's
     /// implicit ST+WS pair.
     pub departments: Vec<DeptSpec>,
-    /// Provisioning policy for N-department runs (`[policy]`). None = the
-    /// policy implied by `configuration` (cooperative for dynamic, static
-    /// partition for static).
-    pub policy: Option<PolicySpec>,
+    /// Provisioning policy for N-department runs (`[policy]`): a base
+    /// policy or a per-tier mix. None = the policy implied by
+    /// `configuration` (cooperative for dynamic, static partition for
+    /// static).
+    pub policy: Option<PolicyChoice>,
+    /// Declared scenario-matrix cells (`[[scenario]]`); empty = the
+    /// matrix command's built-in grid.
+    pub scenarios: Vec<ScenarioSpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -176,6 +320,7 @@ impl Default for ExperimentConfig {
             web: WebTraceConfig::default(),
             departments: Vec::new(),
             policy: None,
+            scenarios: Vec::new(),
         }
     }
 }
@@ -246,9 +391,35 @@ impl ExperimentConfig {
         } else if self.policy.is_some() {
             bail!("[policy] given but no [[department]] roster");
         }
-        if let Some(PolicySpec::Lease { secs }) = self.policy {
-            if secs == 0 {
+        if let Some(choice) = &self.policy {
+            if choice.lease_terms().iter().any(|&secs| secs == 0) {
                 bail!("policy.lease_secs must be positive");
+            }
+        }
+        for (i, s) in self.scenarios.iter().enumerate() {
+            let label = if s.name.is_empty() { format!("#{i}") } else { s.name.clone() };
+            if s.k == 0 || s.k > 64 {
+                bail!("scenario {label}: k must be in 1..=64, got {}", s.k);
+            }
+            if s.policy_kind != "mixed" && PolicySpec::parse(&s.policy_kind, 1).is_err() {
+                bail!(
+                    "scenario {label}: unknown policy '{}' ({})",
+                    s.policy_kind,
+                    SCENARIO_POLICY_KINDS.join("|")
+                );
+            }
+            if s.lease_secs == 0 {
+                bail!("scenario {label}: lease_secs must be positive");
+            }
+            if let Some(load) = s.load {
+                if !load.is_finite() || load <= 0.0 {
+                    bail!("scenario {label}: load must be positive and finite");
+                }
+            }
+            if let Some(frac) = s.frac {
+                if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
+                    bail!("scenario {label}: frac must be in (0, 1], got {frac}");
+                }
             }
         }
         Ok(())
@@ -338,7 +509,60 @@ impl ExperimentConfig {
                 .and_then(Json::as_str)
                 .context("[policy] missing 'kind'")?;
             let lease_secs = p.get("lease_secs").and_then(Json::as_u64).unwrap_or(3600);
-            self.policy = Some(PolicySpec::parse(kind, lease_secs)?);
+            self.policy = Some(if kind == "mixed" {
+                let default = PolicySpec::parse(
+                    p.get("default").and_then(Json::as_str).unwrap_or("cooperative"),
+                    lease_secs,
+                )?;
+                let mut rules = Vec::new();
+                for (i, r) in p.get("tier").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate()
+                {
+                    let tier_raw = r
+                        .get("tier")
+                        .and_then(Json::as_u64)
+                        .with_context(|| format!("[[policy.tier]] #{i} missing 'tier'"))?;
+                    let tier = u8::try_from(tier_raw).map_err(|_| {
+                        anyhow::anyhow!("[[policy.tier]] #{i}: tier {tier_raw} exceeds 255")
+                    })?;
+                    let rule_kind = r
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .with_context(|| format!("[[policy.tier]] #{i} missing 'kind'"))?;
+                    if rule_kind == "mixed" {
+                        bail!("[[policy.tier]] #{i}: mixes cannot nest");
+                    }
+                    let rule_lease =
+                        r.get("lease_secs").and_then(Json::as_u64).unwrap_or(lease_secs);
+                    rules.push(TierRule { tier, spec: PolicySpec::parse(rule_kind, rule_lease)? });
+                }
+                if rules.is_empty() {
+                    bail!("[policy] kind = \"mixed\" needs at least one [[policy.tier]] rule");
+                }
+                PolicyChoice::Mixed { default, rules }
+            } else {
+                PolicyChoice::Base(PolicySpec::parse(kind, lease_secs)?)
+            });
+        }
+        if let Some(arr) = doc.get("scenario").and_then(Json::as_arr) {
+            let mut scenarios = Vec::with_capacity(arr.len());
+            for (i, s) in arr.iter().enumerate() {
+                let ctx = format!("[[scenario]] #{i}");
+                let name = typed_str(s, "name", &ctx)?
+                    .map(str::to_string)
+                    .unwrap_or_else(|| format!("scenario{i}"));
+                let ctx = format!("[[scenario]] '{name}'");
+                let k = typed_u64(s, "k", &ctx)?
+                    .with_context(|| format!("{ctx}: missing 'k'"))?
+                    as usize;
+                let mix = RosterMix::parse(typed_str(s, "mix", &ctx)?.unwrap_or("alternating"))?;
+                let policy_kind =
+                    typed_str(s, "policy", &ctx)?.unwrap_or("cooperative").to_string();
+                let lease_secs = typed_u64(s, "lease_secs", &ctx)?.unwrap_or(3600);
+                let load = typed_f64(s, "load", &ctx)?;
+                let frac = typed_f64(s, "frac", &ctx)?;
+                scenarios.push(ScenarioSpec { name, k, mix, policy_kind, lease_secs, load, frac });
+            }
+            self.scenarios = scenarios;
         }
         if let Some(h) = doc.get("hpc") {
             if let Some(n) = h.get("num_jobs").and_then(Json::as_u64) {
@@ -444,7 +668,7 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.apply_toml(&doc).unwrap();
         cfg.validate().unwrap();
-        assert_eq!(cfg.policy, Some(PolicySpec::Lease { secs: 600 }));
+        assert_eq!(cfg.policy, Some(PolicyChoice::Base(PolicySpec::Lease { secs: 600 })));
         assert_eq!(cfg.departments.len(), 3);
         let d = &cfg.departments[0];
         assert_eq!((d.name.as_str(), d.kind, d.tier, d.quota), ("physics", DeptKind::Batch, 1, 100));
@@ -458,9 +682,113 @@ mod tests {
     }
 
     #[test]
+    fn mixed_policy_overlay_parses_tier_rules() {
+        let doc = crate::util::toml::parse(
+            "[policy]\nkind = \"mixed\"\ndefault = \"cooperative\"\nlease_secs = 900\n\n\
+             [[policy.tier]]\ntier = 2\nkind = \"lease\"\nlease_secs = 600\n\n\
+             [[policy.tier]]\ntier = 3\nkind = \"static\"\n\n\
+             [[department]]\nname = \"hpc\"\nkind = \"batch\"\ntier = 2\n\n\
+             [[department]]\nname = \"web\"\nkind = \"service\"\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        let Some(PolicyChoice::Mixed { default, rules }) = cfg.policy.clone() else {
+            panic!("expected a mixed policy, got {:?}", cfg.policy);
+        };
+        assert_eq!(default, PolicySpec::Cooperative);
+        assert_eq!(
+            rules,
+            vec![
+                TierRule { tier: 2, spec: PolicySpec::Lease { secs: 600 } },
+                TierRule { tier: 3, spec: PolicySpec::StaticPartition },
+            ]
+        );
+        assert_eq!(cfg.policy.as_ref().unwrap().lease_terms(), vec![600]);
+        // a mixed policy without rules, or with a nested mix, is rejected
+        let doc = crate::util::toml::parse("[policy]\nkind = \"mixed\"\n").unwrap();
+        assert!(ExperimentConfig::default().apply_toml(&doc).is_err());
+        let doc = crate::util::toml::parse(
+            "[policy]\nkind = \"mixed\"\n[[policy.tier]]\ntier = 1\nkind = \"mixed\"\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn scenario_overlay_parses_and_validates() {
+        let doc = crate::util::toml::parse(
+            "[[scenario]]\nname = \"k6-lease\"\nk = 6\nmix = \"service-heavy\"\n\
+             policy = \"lease\"\nlease_secs = 600\nload = 0.9\nfrac = 0.8\n\n\
+             [[scenario]]\nk = 3\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.scenarios.len(), 2);
+        let s = &cfg.scenarios[0];
+        assert_eq!(s.name, "k6-lease");
+        assert_eq!((s.k, s.mix), (6, RosterMix::ServiceHeavy));
+        assert_eq!((s.policy_kind.as_str(), s.lease_secs), ("lease", 600));
+        assert_eq!((s.load, s.frac), (Some(0.9), Some(0.8)));
+        // defaults for the sparse second scenario
+        let s = &cfg.scenarios[1];
+        assert_eq!(s.name, "scenario1");
+        assert_eq!((s.mix, s.policy_kind.as_str()), (RosterMix::Alternating, "cooperative"));
+        assert_eq!((s.load, s.frac), (None, None));
+        // mistyped scenario fields error instead of silently defaulting
+        for bad in [
+            "[[scenario]]\nk = 2\nlease_secs = -60\n",
+            "[[scenario]]\nk = 2\npolicy = 3\n",
+            "[[scenario]]\nk = 2\nmix = 5\n",
+            "[[scenario]]\nk = 2\nload = \"high\"\n",
+            "[[scenario]]\nk = 2\nfrac = \"0.8\"\n",
+            "[[scenario]]\nname = 7\nk = 2\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+        // bad scenarios are rejected by validate
+        cfg.scenarios[1].policy_kind = "lottery".into();
+        assert!(cfg.validate().is_err());
+        cfg.scenarios[1].policy_kind = "mixed".into();
+        cfg.scenarios[1].frac = Some(1.5);
+        assert!(cfg.validate().is_err());
+        cfg.scenarios[1].frac = None;
+        cfg.scenarios[1].k = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn roster_mixes_are_prefix_stable_and_anchored() {
+        let base = ExperimentConfig::default();
+        for mix in [RosterMix::Alternating, RosterMix::ServiceHeavy, RosterMix::BatchHeavy] {
+            let big = mix.departments(9, &base);
+            let small = mix.departments(4, &base);
+            assert_eq!(&big[..4], &small[..], "{} not prefix-stable", mix.name());
+            assert!(big.iter().any(|d| d.kind == DeptKind::Batch), "{}", mix.name());
+            assert_eq!(RosterMix::parse(mix.name()).unwrap(), mix);
+        }
+        // alternating K=2 is exactly the paper's ST+WS pair
+        let pair = RosterMix::Alternating.departments(2, &base);
+        assert_eq!(pair[0].name, "st0");
+        assert_eq!((pair[0].kind, pair[0].quota), (DeptKind::Batch, base.st_nodes));
+        assert_eq!(pair[1].name, "ws0");
+        assert_eq!((pair[1].kind, pair[1].quota), (DeptKind::Service, base.ws_nodes));
+        // batch-heavy spreads its batch departments over tiers 1..=3
+        let bh = RosterMix::BatchHeavy.departments(8, &base);
+        let tiers: std::collections::BTreeSet<u8> =
+            bh.iter().filter(|d| d.kind == DeptKind::Batch).map(|d| d.tier).collect();
+        assert_eq!(tiers.into_iter().collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(RosterMix::parse("zigzag").is_err());
+    }
+
+    #[test]
     fn department_roster_is_validated() {
         let mut cfg = ExperimentConfig::default();
-        cfg.policy = Some(PolicySpec::Cooperative);
+        cfg.policy = Some(PolicyChoice::Base(PolicySpec::Cooperative));
         assert!(cfg.validate().is_err(), "policy without departments");
         cfg.departments = vec![DeptSpec {
             name: "web".into(),

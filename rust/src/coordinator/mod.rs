@@ -25,6 +25,30 @@ use crate::stcms::StServer;
 use crate::workload::{Job, JobState};
 use crate::wscms::{WsAction, WsServer};
 
+/// A coordination-layer failure that aborts the run.
+///
+/// The only currently possible failure is a *mis-kinded roster*: the
+/// provisioning policy's department profiles and the simulation's actual
+/// department workloads disagree (e.g. the policy believes `dept2` is a
+/// batch department and grants it idle capacity, but its workload is a
+/// service demand series). The seed code `panic!`ed at the routing site;
+/// now the run stops cleanly and the error propagates — typed, through
+/// `anyhow` — all the way to the `phoenixd` CLI.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SimError {
+    #[error(
+        "mis-kinded roster: {dept} ('{name}') runs a {actual} workload, but the \
+         provisioning policy routed a {expected}-side operation to it — each \
+         [[department]] kind must match the policy's department profiles"
+    )]
+    KindMismatch {
+        dept: DeptId,
+        name: String,
+        actual: &'static str,
+        expected: &'static str,
+    },
+}
+
 /// Events of the consolidation simulation.
 #[derive(Debug, Clone)]
 enum Ev {
@@ -107,6 +131,11 @@ pub enum DeptWorkload {
 struct Dept {
     name: String,
     body: DeptBody,
+    /// Metric-series keys, precomputed so the per-event sampling hot path
+    /// (`sample_pools`) never allocates (PR-1's zero-allocation contract).
+    busy_key: String,
+    pool_key: String,
+    holding_key: String,
 }
 
 enum DeptBody {
@@ -136,6 +165,9 @@ pub struct ConsolidationSim {
     registry: Registry,
     /// Earliest `LeaseTick` currently scheduled (dedupes tick events).
     lease_tick_at: Option<SimTime>,
+    /// First routing failure; set by the dispatch handler, checked by
+    /// [`ConsolidationSim::run`] (subsequent events are skipped).
+    error: Option<SimError>,
 }
 
 impl ConsolidationSim {
@@ -195,11 +227,25 @@ impl ConsolidationSim {
                         DeptBody::Service { demand, server: WsServer::for_dept(id) }
                     }
                 };
-                Dept { name: inp.name, body }
+                Dept {
+                    busy_key: format!("{}.busy", inp.name),
+                    pool_key: format!("{}.pool", inp.name),
+                    holding_key: format!("{}.holding", inp.name),
+                    name: inp.name,
+                    body,
+                }
             })
             .collect();
         let rps = Rps::new(total_nodes, depts.len(), policy);
-        Self { cfg, label, depts, rps, registry: Registry::new(), lease_tick_at: None }
+        Self {
+            cfg,
+            label,
+            depts,
+            rps,
+            registry: Registry::new(),
+            lease_tick_at: None,
+            error: None,
+        }
     }
 
     fn batch_ids(&self) -> Vec<DeptId> {
@@ -211,22 +257,44 @@ impl ConsolidationSim {
             .collect()
     }
 
-    fn batch_server(&mut self, dept: DeptId) -> &mut StServer {
+    /// The routing failure for an operation that expected `dept` to be of
+    /// kind `expected` (see [`SimError::KindMismatch`]).
+    fn kind_err(&self, dept: DeptId, expected: DeptKind) -> SimError {
+        let (name, actual) = self
+            .depts
+            .get(dept.index())
+            .map(|d| (d.name.clone(), d.kind().name()))
+            .unwrap_or_else(|| ("<unknown>".to_string(), "missing"));
+        SimError::KindMismatch { dept, name, actual, expected: expected.name() }
+    }
+
+    fn batch_server(&mut self, dept: DeptId) -> Result<&mut StServer, SimError> {
+        if !matches!(self.depts.get(dept.index()).map(Dept::kind), Some(DeptKind::Batch)) {
+            return Err(self.kind_err(dept, DeptKind::Batch));
+        }
         match &mut self.depts[dept.index()].body {
-            DeptBody::Batch { server, .. } => server,
-            DeptBody::Service { .. } => panic!("{dept} is not a batch department"),
+            DeptBody::Batch { server, .. } => Ok(server),
+            DeptBody::Service { .. } => unreachable!("kind checked above"),
         }
     }
 
-    fn service_server(&mut self, dept: DeptId) -> &mut WsServer {
+    fn service_server(&mut self, dept: DeptId) -> Result<&mut WsServer, SimError> {
+        if !matches!(self.depts.get(dept.index()).map(Dept::kind), Some(DeptKind::Service)) {
+            return Err(self.kind_err(dept, DeptKind::Service));
+        }
         match &mut self.depts[dept.index()].body {
-            DeptBody::Service { server, .. } => server,
-            DeptBody::Batch { .. } => panic!("{dept} is not a service department"),
+            DeptBody::Service { server, .. } => Ok(server),
+            DeptBody::Batch { .. } => unreachable!("kind checked above"),
         }
     }
 
     /// Run to the horizon and collect the figure metrics.
-    pub fn run(mut self) -> RunResult {
+    ///
+    /// Fails — with a typed [`SimError`] inside the `anyhow` chain — when
+    /// the provisioning policy's profiles disagree with the departments'
+    /// actual workloads (a mis-kinded roster); the seed code panicked
+    /// here instead.
+    pub fn run(mut self) -> anyhow::Result<RunResult> {
         let mut engine: Engine<Ev> = Engine::new();
 
         // boot: each service department gets its first-sample demand, the
@@ -238,13 +306,13 @@ impl ConsolidationSim {
                 DeptBody::Batch { .. } => continue,
             };
             let granted = self.rps.bootstrap_grant(id, d0);
-            let server = self.service_server(id);
+            let server = self.service_server(id)?;
             server.grant(granted);
             server.set_demand(d0, 0);
         }
         let batch = self.batch_ids();
         for (d, n) in self.rps.provision_idle(&batch, 0) {
-            self.batch_server(d).grant(n);
+            self.batch_server(d)?.grant(n);
         }
         if let Some(t) = self.rps.next_expiry() {
             engine.schedule(t, Ev::LeaseTick);
@@ -282,18 +350,21 @@ impl ConsolidationSim {
         let horizon = self.cfg.horizon;
         let mut handler = Handler { sim: &mut self };
         engine.run_until(&mut handler, horizon);
+        if let Some(e) = self.error.take() {
+            return Err(e.into());
+        }
         let events = engine.processed();
         let now = engine.now();
         // close out service shortage accounting at the horizon
         for i in 0..self.depts.len() {
             if matches!(self.depts[i].body, DeptBody::Service { .. }) {
-                let server = self.service_server(DeptId(i as u16));
+                let server = self.service_server(DeptId(i as u16))?;
                 let d = server.demand();
                 server.set_demand(d, now);
             }
         }
 
-        self.finish(events)
+        Ok(self.finish(events))
     }
 
     fn finish(mut self, events: u64) -> RunResult {
@@ -328,7 +399,7 @@ impl ConsolidationSim {
                     st_busy_mean += self
                         .registry
                         .series
-                        .get(&format!("{}.busy", dept.name))
+                        .get(&dept.busy_key)
                         .map(|s| s.time_weighted_mean(self.cfg.horizon))
                         .unwrap_or(0.0);
                     per_dept.push(DeptSummary {
@@ -388,28 +459,41 @@ impl ConsolidationSim {
 
     // ---- event bodies ------------------------------------------------------
 
-    fn on_submit(&mut self, dept: DeptId, idx: usize, now: SimTime, sched: &mut Schedule<Ev>) {
+    fn on_submit(
+        &mut self,
+        dept: DeptId,
+        idx: usize,
+        now: SimTime,
+        sched: &mut Schedule<Ev>,
+    ) -> Result<(), SimError> {
         let job = match &self.depts[dept.index()].body {
             DeptBody::Batch { jobs, .. } => jobs[idx].clone(),
-            DeptBody::Service { .. } => unreachable!("submit routed to a service dept"),
+            DeptBody::Service { .. } => return Err(self.kind_err(dept, DeptKind::Batch)),
         };
-        self.batch_server(dept).submit(job);
+        self.batch_server(dept)?.submit(job);
         // lease-based policies leave expired capacity in the free pool;
         // offer it to the department that now has demand (a no-op under
         // the paper's policies, whose free pool is always drained)
         if self.rps.ledger().free() > 0 {
             for (d, n) in self.rps.provision_idle(&[dept], now) {
-                self.batch_server(d).grant(n);
+                self.batch_server(d)?.grant(n);
             }
             self.schedule_lease_tick(sched, now);
         }
-        self.run_scheduler(dept, now, sched);
+        self.run_scheduler(dept, now, sched)
     }
 
-    fn on_finish(&mut self, dept: DeptId, job_id: u64, now: SimTime, sched: &mut Schedule<Ev>) {
-        if self.batch_server(dept).finish(job_id, now) {
-            self.run_scheduler(dept, now, sched);
+    fn on_finish(
+        &mut self,
+        dept: DeptId,
+        job_id: u64,
+        now: SimTime,
+        sched: &mut Schedule<Ev>,
+    ) -> Result<(), SimError> {
+        if self.batch_server(dept)?.finish(job_id, now) {
+            self.run_scheduler(dept, now, sched)?;
         }
+        Ok(())
     }
 
     fn on_ws_demand(
@@ -418,15 +502,15 @@ impl ConsolidationSim {
         sample: usize,
         now: SimTime,
         sched: &mut Schedule<Ev>,
-    ) {
+    ) -> Result<(), SimError> {
         let target = match &self.depts[dept.index()].body {
             DeptBody::Service { demand, .. } => demand[sample],
-            DeptBody::Batch { .. } => unreachable!("demand routed to a batch dept"),
+            DeptBody::Batch { .. } => return Err(self.kind_err(dept, DeptKind::Service)),
         };
-        match self.service_server(dept).set_demand(target, now) {
+        match self.service_server(dept)?.set_demand(target, now) {
             WsAction::None => {}
             WsAction::Release(n) => {
-                self.service_server(dept).release(n);
+                self.service_server(dept)?.release(n);
                 self.rps.release(dept, n, now);
                 // idle flows to the batch departments immediately
                 // (cooperative) or up to their partitions (static)
@@ -434,8 +518,8 @@ impl ConsolidationSim {
                 let grants = self.rps.provision_idle(&batch, now);
                 for (d, n) in grants {
                     if n > 0 {
-                        self.batch_server(d).grant(n);
-                        self.run_scheduler(d, now, sched);
+                        self.batch_server(d)?.grant(n);
+                        self.run_scheduler(d, now, sched)?;
                     }
                 }
                 self.schedule_lease_tick(sched, now);
@@ -443,11 +527,11 @@ impl ConsolidationSim {
             WsAction::Request(n) => {
                 let d = self.rps.request(dept, n, now);
                 if d.from_free > 0 {
-                    self.service_server(dept).grant(d.from_free);
+                    self.service_server(dept)?.grant(d.from_free);
                 }
                 let force_total = d.force_total();
                 for &(victim, m) in &d.force {
-                    let killed = self.batch_server(victim).force_return(m, now);
+                    let killed = self.batch_server(victim)?.force_return(m, now);
                     self.registry.counter("force.kills").add(killed.len() as u64);
                     self.rps.complete_force(victim, dept, m, now);
                 }
@@ -466,23 +550,25 @@ impl ConsolidationSim {
             }
         }
         self.sample_pools(now);
+        Ok(())
     }
 
-    fn on_grant_arrive(&mut self, dept: DeptId, nodes: u64, now: SimTime) {
-        self.service_server(dept).grant(nodes);
+    fn on_grant_arrive(&mut self, dept: DeptId, nodes: u64, now: SimTime) -> Result<(), SimError> {
+        self.service_server(dept)?.grant(nodes);
         self.sample_pools(now);
+        Ok(())
     }
 
-    fn on_lease_tick(&mut self, now: SimTime, sched: &mut Schedule<Ev>) {
+    fn on_lease_tick(&mut self, now: SimTime, sched: &mut Schedule<Ev>) -> Result<(), SimError> {
         self.lease_tick_at = None;
         for (d, n) in self.rps.lease_expirations(now) {
             let (idle, busy) = {
-                let server = self.batch_server(d);
+                let server = self.batch_server(d)?;
                 (server.idle(), server.pool() - server.idle())
             };
             let returned = n.min(idle);
             if returned > 0 {
-                let killed = self.batch_server(d).force_return(returned, now);
+                let killed = self.batch_server(d)?.force_return(returned, now);
                 debug_assert!(killed.is_empty(), "lease reclaim must only take idle nodes");
             }
             // renew only what the department demonstrably still runs on —
@@ -493,27 +579,29 @@ impl ConsolidationSim {
         // re-grant reclaimed capacity only to departments with queued work;
         // the rest stays free for urgent service claims
         if self.rps.ledger().free() > 0 {
-            let wanting: Vec<DeptId> = self
-                .batch_ids()
-                .into_iter()
-                .filter(|&d| self.batch_server(d).queued() > 0)
-                .collect();
+            let mut wanting = Vec::new();
+            for d in self.batch_ids() {
+                if self.batch_server(d)?.queued() > 0 {
+                    wanting.push(d);
+                }
+            }
             if !wanting.is_empty() {
                 for (d, n) in self.rps.provision_idle(&wanting, now) {
-                    self.batch_server(d).grant(n);
-                    self.run_scheduler(d, now, sched);
+                    self.batch_server(d)?.grant(n);
+                    self.run_scheduler(d, now, sched)?;
                 }
             }
         }
         self.schedule_lease_tick(sched, now);
         self.sample_pools(now);
+        Ok(())
     }
 
     /// Keep exactly one pending `LeaseTick` at the earliest known expiry.
     fn schedule_lease_tick(&mut self, sched: &mut Schedule<Ev>, now: SimTime) {
         if let Some(t) = self.rps.next_expiry() {
             let t = t.max(now);
-            if self.lease_tick_at.map_or(true, |s| t < s) {
+            if self.lease_tick_at.is_none_or(|s| t < s) {
                 sched.at(t, Ev::LeaseTick);
                 self.lease_tick_at = Some(t);
             }
@@ -522,11 +610,17 @@ impl ConsolidationSim {
 
     /// Run one department's batch scheduler and schedule completions for
     /// started jobs.
-    fn run_scheduler(&mut self, dept: DeptId, now: SimTime, sched: &mut Schedule<Ev>) {
-        for started in self.batch_server(dept).schedule(now) {
+    fn run_scheduler(
+        &mut self,
+        dept: DeptId,
+        now: SimTime,
+        sched: &mut Schedule<Ev>,
+    ) -> Result<(), SimError> {
+        for started in self.batch_server(dept)?.schedule(now) {
             sched.at(started.finish_at, Ev::Finish { dept: dept.0, job_id: started.job_id });
         }
         self.sample_pools(now);
+        Ok(())
     }
 
     fn sample_pools(&mut self, now: SimTime) {
@@ -534,14 +628,12 @@ impl ConsolidationSim {
             match &dept.body {
                 DeptBody::Batch { server, .. } => {
                     let busy = (server.pool() - server.idle()) as f64;
-                    self.registry.series(&format!("{}.busy", dept.name)).push(now, busy);
-                    self.registry
-                        .series(&format!("{}.pool", dept.name))
-                        .push(now, server.pool() as f64);
+                    self.registry.series(&dept.busy_key).push(now, busy);
+                    self.registry.series(&dept.pool_key).push(now, server.pool() as f64);
                 }
                 DeptBody::Service { server, .. } => {
                     self.registry
-                        .series(&format!("{}.holding", dept.name))
+                        .series(&dept.holding_key)
                         .push(now, server.holding() as f64);
                 }
             }
@@ -555,8 +647,11 @@ struct Handler<'a> {
 
 impl EventHandler<Ev> for Handler<'_> {
     fn handle(&mut self, ev: Ev, sched: &mut Schedule<Ev>) {
+        if self.sim.error.is_some() {
+            return; // a routing failure already aborted the run
+        }
         let now = sched.now();
-        match ev {
+        let result = match ev {
             Ev::Submit { dept, idx } => self.sim.on_submit(DeptId(dept), idx, now, sched),
             Ev::Finish { dept, job_id } => {
                 self.sim.on_finish(DeptId(dept), job_id, now, sched)
@@ -568,6 +663,9 @@ impl EventHandler<Ev> for Handler<'_> {
                 self.sim.on_grant_arrive(DeptId(dept), nodes, now)
             }
             Ev::LeaseTick => self.sim.on_lease_tick(now, sched),
+        };
+        if let Err(e) = result {
+            self.sim.error = Some(e);
         }
     }
 }
@@ -608,7 +706,7 @@ mod tests {
     fn all_jobs_complete_with_flat_ws_demand() {
         let cfg = tiny_cfg(16);
         let ws_demand = vec![1u64; 100];
-        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run();
+        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run().unwrap();
         assert_eq!(res.completed, 4);
         assert_eq!(res.killed, 0);
         assert_eq!(res.in_flight, 0);
@@ -629,7 +727,7 @@ mod tests {
         for d in ws_demand.iter_mut().skip(2) {
             *d = 8;
         }
-        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run();
+        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run().unwrap();
         assert!(res.killed > 0, "spike must kill jobs: {res:?}");
         assert!(res.force_returns > 0);
         // WS always satisfied (within a sample period) under cooperation
@@ -644,7 +742,7 @@ mod tests {
         cfg.ws_nodes = 8;
         let mut ws_demand = vec![1u64; 100];
         ws_demand[50] = 8;
-        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run();
+        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run().unwrap();
         assert_eq!(res.killed, 0);
         assert_eq!(res.force_returns, 0);
         assert_eq!(res.completed, 4);
@@ -654,7 +752,7 @@ mod tests {
     fn smaller_cluster_worse_or_equal_completion() {
         let mk = |total| {
             let cfg = tiny_cfg(total);
-            ConsolidationSim::new(cfg, tiny_jobs(), vec![1u64; 100]).run()
+            ConsolidationSim::new(cfg, tiny_jobs(), vec![1u64; 100]).run().unwrap()
         };
         let big = mk(16);
         let small = mk(6);
@@ -670,7 +768,7 @@ mod tests {
         for d in ws_demand.iter_mut().skip(2) {
             *d = 1;
         }
-        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run();
+        let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run().unwrap();
         assert_eq!(res.completed, 4);
         // ST pool must have grown after the release
         let pool_max = res.registry.series["st.pool"].max();
@@ -726,7 +824,7 @@ mod tests {
             four_dept_inputs(),
             policy,
         )
-        .run();
+        .run().unwrap();
         assert_eq!(res.label, "coop-4");
         assert_eq!(res.per_dept.len(), 4);
         assert_eq!(res.submitted, 8);
@@ -751,7 +849,7 @@ mod tests {
             four_dept_inputs(),
             policy,
         )
-        .run();
+        .run().unwrap();
         assert_eq!(res.completed, 8, "{res:?}");
         assert_eq!(res.ws_shortage_node_secs, 0);
         // after the last job (t≈610) every lease expires; the freed nodes
@@ -764,6 +862,44 @@ mod tests {
             .map(|d| d.holding_end)
             .sum();
         assert!(held_batch < 29, "leases never expired: {res:?}");
+    }
+
+    /// Regression for the seed's `panic!`s in `batch_server` /
+    /// `service_server`: a mis-kinded roster — the policy's profiles call
+    /// dept0 batch, but its workload is a service demand series — must
+    /// fail with a typed [`SimError`], not a panic.
+    #[test]
+    fn mis_kinded_roster_fails_cleanly() {
+        let cfg = tiny_cfg(8);
+        // The policy's profiles call dept1 a batch department…
+        let profiles = vec![
+            DeptProfile { id: DeptId(0), kind: DeptKind::Service, tier: 0, quota: 8 },
+            DeptProfile { id: DeptId(1), kind: DeptKind::Batch, tier: 1, quota: 8 },
+        ];
+        // …but its workload is a service demand series. When dept0 spikes,
+        // the cooperative policy force-reclaims from its "batch" victim
+        // dept1, and the kill request cannot route to a service body.
+        let mut spike = vec![1u64; 100];
+        for d in spike.iter_mut().skip(2) {
+            *d = 8;
+        }
+        let inputs = vec![
+            DeptInput { name: "web".into(), workload: DeptWorkload::Service(spike.into()) },
+            DeptInput {
+                name: "mislabeled".into(),
+                workload: DeptWorkload::Service(vec![1u64; 100].into()),
+            },
+        ];
+        let policy = PolicySpec::Cooperative.build(&profiles);
+        let err = ConsolidationSim::with_departments(cfg, "bad".to_string(), 8, inputs, policy)
+            .run()
+            .expect_err("mis-kinded roster must not run");
+        let sim_err = err.downcast_ref::<SimError>().expect("typed SimError in the chain");
+        assert!(
+            matches!(sim_err, SimError::KindMismatch { dept, .. } if *dept == DeptId(1)),
+            "{sim_err:?}"
+        );
+        assert!(err.to_string().contains("mis-kinded roster"), "{err:#}");
     }
 
     #[test]
@@ -807,7 +943,7 @@ mod tests {
         let policy = PolicySpec::Tiered.build(&profiles);
         let res =
             ConsolidationSim::with_departments(cfg, "tiered-3".to_string(), 12, inputs, policy)
-                .run();
+                .run().unwrap();
         assert_eq!(res.ws_shortage_node_secs, 0, "{res:?}");
         let gold = &res.per_dept[0];
         let bronze = &res.per_dept[1];

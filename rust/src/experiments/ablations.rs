@@ -2,6 +2,8 @@
 //! scheduler, provisioning policy, and autoscaler. Each returns the same
 //! RunResult rows as the figure sweeps so the report writer is shared.
 
+use anyhow::Result;
+
 use crate::config::{ExperimentConfig, KillOrder, SchedulerKind};
 use crate::coordinator::{ConsolidationSim, RunResult};
 use crate::runtime::reference_forecast;
@@ -14,7 +16,7 @@ use super::parallel;
 /// Kill-order ablation at a fixed cluster size. Variants share one
 /// generated trace (kill order doesn't change the inputs) and run across
 /// worker threads; results come back in variant order.
-pub fn kill_orders(base: &ExperimentConfig) -> Vec<(&'static str, RunResult)> {
+pub fn kill_orders(base: &ExperimentConfig) -> Result<Vec<(&'static str, RunResult)>> {
     let orders = [
         KillOrder::MinSizeShortestElapsed,
         KillOrder::MaxSizeFirst,
@@ -24,20 +26,26 @@ pub fn kill_orders(base: &ExperimentConfig) -> Vec<(&'static str, RunResult)> {
     parallel::parallel_map(orders.len(), base.workers, |i| {
         let mut cfg = base.clone();
         cfg.kill_order = orders[i];
-        (orders[i].name(), ConsolidationSim::new(cfg, jobs.clone(), demand.clone()).run())
+        let run = ConsolidationSim::new(cfg, jobs.clone(), demand.clone()).run()?;
+        Ok((orders[i].name(), run))
     })
+    .into_iter()
+    .collect()
 }
 
 /// Scheduler ablation at a fixed cluster size; same fan-out and trace
 /// sharing as [`kill_orders`].
-pub fn schedulers(base: &ExperimentConfig) -> Vec<(&'static str, RunResult)> {
+pub fn schedulers(base: &ExperimentConfig) -> Result<Vec<(&'static str, RunResult)>> {
     let kinds = [SchedulerKind::FirstFit, SchedulerKind::Fcfs, SchedulerKind::EasyBackfill];
     let (jobs, demand) = build_inputs(base);
     parallel::parallel_map(kinds.len(), base.workers, |i| {
         let mut cfg = base.clone();
         cfg.scheduler = kinds[i];
-        (kinds[i].name(), ConsolidationSim::new(cfg, jobs.clone(), demand.clone()).run())
+        let run = ConsolidationSim::new(cfg, jobs.clone(), demand.clone()).run()?;
+        Ok((kinds[i].name(), run))
     })
+    .into_iter()
+    .collect()
 }
 
 /// Autoscaler comparison on the Fig.-5 trace: reactive (paper) vs
@@ -128,7 +136,7 @@ mod tests {
 
     #[test]
     fn kill_order_changes_kill_count_not_ws_service() {
-        let rows = kill_orders(&fast_cfg());
+        let rows = kill_orders(&fast_cfg()).unwrap();
         assert_eq!(rows.len(), 3);
         for (name, r) in &rows {
             assert_eq!(r.ws_shortage_node_secs, 0, "{name} starved WS");
@@ -141,7 +149,7 @@ mod tests {
 
     #[test]
     fn first_fit_completes_at_least_fcfs() {
-        let rows = schedulers(&fast_cfg());
+        let rows = schedulers(&fast_cfg()).unwrap();
         let ff = rows.iter().find(|(n, _)| *n == "first-fit").unwrap().1.completed;
         let fcfs = rows.iter().find(|(n, _)| *n == "fcfs").unwrap().1.completed;
         assert!(ff >= fcfs, "first-fit {ff} < fcfs {fcfs}");

@@ -5,6 +5,8 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::config::{Configuration, ExperimentConfig};
 use crate::coordinator::{ConsolidationSim, RunResult};
 use crate::trace::csv::Table;
@@ -36,8 +38,8 @@ pub fn build_inputs(cfg: &ExperimentConfig) -> (Arc<[Job]>, Arc<[u64]>) {
 }
 
 /// Run one configuration end to end.
-pub fn run_one(cfg: ExperimentConfig) -> RunResult {
-    cfg.validate().expect("invalid experiment config");
+pub fn run_one(cfg: ExperimentConfig) -> Result<RunResult> {
+    cfg.validate()?;
     let (jobs, demand) = build_inputs(&cfg);
     ConsolidationSim::new(cfg, jobs, demand).run()
 }
@@ -57,7 +59,7 @@ pub fn run_one(cfg: ExperimentConfig) -> RunResult {
 /// once and shares it behind an `Arc` — the demand series depends only on
 /// the autoscaler cap, which is identical across configurations whenever
 /// the cap exceeds the calibrated 64-instance peak.
-pub fn sweep(base: &ExperimentConfig, sizes: &[u64]) -> Vec<RunResult> {
+pub fn sweep(base: &ExperimentConfig, sizes: &[u64]) -> Result<Vec<RunResult>> {
     // one immutable generated trace, shared by every run
     let jobs: Arc<[Job]> = hpc_synth::generate(&base.hpc).into();
     // The autoscaler trajectory only depends on the cap when the cap binds;
@@ -88,6 +90,8 @@ pub fn sweep(base: &ExperimentConfig, sizes: &[u64]) -> Vec<RunResult> {
         };
         ConsolidationSim::new(cfg, jobs.clone(), demand).run()
     })
+    .into_iter()
+    .collect()
 }
 
 /// Fig. 7 table: completed jobs + average turnaround per cluster size.
@@ -153,7 +157,7 @@ mod tests {
         // the paper's §III-D headline claim, on the full two-week traces
         // (the virtual-time simulator covers the full config in ~50 ms)
         let cfg = ExperimentConfig::default();
-        let results = sweep(&cfg, &[160]);
+        let results = sweep(&cfg, &[160]).unwrap();
         let sc = &results[0];
         let dc = &results[1];
         assert!(
@@ -177,7 +181,7 @@ mod tests {
     fn fast_config_is_directionally_consistent() {
         // scaled-down sanity: turnaround benefit holds even on 2-day runs
         let cfg = fast_cfg();
-        let results = sweep(&cfg, &[160]);
+        let results = sweep(&cfg, &[160]).unwrap();
         let (sc, dc) = (&results[0], &results[1]);
         assert!(dc.avg_turnaround <= sc.avg_turnaround);
         // completions stay within 2 % of SC on the short horizon
@@ -187,7 +191,7 @@ mod tests {
     #[test]
     fn ws_never_starved_under_cooperation() {
         let cfg = fast_cfg();
-        let results = sweep(&cfg, &[160, 150]);
+        let results = sweep(&cfg, &[160, 150]).unwrap();
         for r in &results {
             assert_eq!(
                 r.registry.counter_value("ws.denied"),
@@ -206,8 +210,8 @@ mod tests {
         serial.workers = 1;
         let mut par = fast_cfg();
         par.workers = 4;
-        let a = sweep(&serial, &[180, 160, 150]);
-        let b = sweep(&par, &[180, 160, 150]);
+        let a = sweep(&serial, &[180, 160, 150]).unwrap();
+        let b = sweep(&par, &[180, 160, 150]).unwrap();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.label, y.label);
@@ -224,7 +228,7 @@ mod tests {
     #[test]
     fn tables_align_with_results() {
         let cfg = fast_cfg();
-        let results = sweep(&cfg, &[180]);
+        let results = sweep(&cfg, &[180]).unwrap();
         let t7 = fig7_table(&results);
         let t8 = fig8_table(&results);
         assert_eq!(t7.rows.len(), 2);

@@ -1,0 +1,873 @@
+//! **Scenario-matrix engine** — the systematic exploration layer over the
+//! N-department core.
+//!
+//! The paper evaluates one roster (ST+WS) under one policy at six cluster
+//! sizes; the follow-up work (arXiv:1006.1401, arXiv:1004.1276) shows the
+//! interesting behavior lives in the *space* of rosters, policies, and
+//! lease terms. This module composes that space declaratively:
+//!
+//! * **roster shape** — K = 2..16 departments in any
+//!   [`RosterMix`] (alternating / service-heavy / batch-heavy);
+//! * **policy** — every base [`PolicySpec`] plus the per-tier
+//!   [`crate::provision::MixedPolicy`] combinator ([`PolicyAxis`]);
+//! * **lease term** — a sensitivity grid over `lease_secs` for the
+//!   lease-bearing policies;
+//! * **load level** — the HPC offered-load calibration;
+//! * **cluster size** — a descending fraction scan of the dedicated
+//!   cost, from which each cell's **required cluster size** is read: the
+//!   smallest cluster that keeps every service department whole (zero
+//!   SLO violation) without losing batch completions versus the
+//!   full-cost cluster.
+//!
+//! Every (roster × policy × lease × load) cell fans its size scan out
+//! through [`super::parallel`]; results reduce — in deterministic plan
+//! order, so parallel tables are bit-identical to serial ones — into
+//! per-cell summaries with `RunResult::per_dept` breakdowns, exported as
+//! CSV (`out/matrix.csv`) and JSON (`out/matrix.json`). The K = 2
+//! alternating cooperative cell at the paper's 76.9 % cost fraction
+//! replays the Fig. 7/8 DC run bit for bit ([`verify_anchor`], also
+//! regression-tested below).
+//!
+//! Configs may pin cells explicitly with `[[scenario]]` tables
+//! ([`ScenarioSpec`]); `phoenixd matrix` then runs those instead of the
+//! built-in grid. `phoenixd matrix --kmax 16 --quick` is the CI smoke
+//! grid.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::DeptKind;
+use crate::config::{DeptSpec, ExperimentConfig, RosterMix, ScenarioSpec};
+use crate::coordinator::{DeptSummary, RunResult};
+use crate::provision::{PolicyChoice, PolicySpec, TierRule};
+use crate::util::json::Json;
+
+use super::{consolidation, parallel, scale};
+
+/// One point on the policy axis: a base policy, or the canonical per-tier
+/// mix (bottom batch tier on a lease, everything else cooperative — the
+/// premium-tiers-keep-priority arrangement arXiv:1006.1401 motivates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyAxis {
+    Base(PolicySpec),
+    Mixed { lease_secs: u64 },
+}
+
+impl PolicyAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyAxis::Base(spec) => spec.name(),
+            PolicyAxis::Mixed { .. } => "mixed",
+        }
+    }
+
+    /// The lease term this axis point sweeps (0 = not lease-bearing).
+    pub fn lease_secs(&self) -> u64 {
+        match self {
+            PolicyAxis::Base(PolicySpec::Lease { secs }) => *secs,
+            PolicyAxis::Mixed { lease_secs } => *lease_secs,
+            PolicyAxis::Base(_) => 0,
+        }
+    }
+
+    /// Parse a scenario's policy kind.
+    pub fn parse(kind: &str, lease_secs: u64) -> Result<Self> {
+        Ok(if kind == "mixed" {
+            PolicyAxis::Mixed { lease_secs }
+        } else {
+            PolicyAxis::Base(PolicySpec::parse(kind, lease_secs)?)
+        })
+    }
+
+    /// Resolve to a buildable [`PolicyChoice`] over a concrete roster.
+    fn choice(&self, specs: &[DeptSpec]) -> PolicyChoice {
+        match self {
+            PolicyAxis::Base(spec) => PolicyChoice::Base(*spec),
+            PolicyAxis::Mixed { lease_secs } => {
+                let bottom = specs
+                    .iter()
+                    .filter(|d| d.kind == DeptKind::Batch)
+                    .map(|d| d.tier)
+                    .max()
+                    .unwrap_or(1);
+                PolicyChoice::Mixed {
+                    default: PolicySpec::Cooperative,
+                    rules: vec![TierRule {
+                        tier: bottom,
+                        spec: PolicySpec::Lease { secs: *lease_secs },
+                    }],
+                }
+            }
+        }
+    }
+}
+
+/// The declarative grid `run_matrix` expands.
+#[derive(Debug, Clone)]
+pub struct MatrixAxes {
+    pub ks: Vec<usize>,
+    pub mixes: Vec<RosterMix>,
+    pub policies: Vec<PolicyAxis>,
+    /// HPC offered-load levels.
+    pub loads: Vec<f64>,
+    /// Descending candidate cluster sizes as fractions of the dedicated
+    /// cost; the first entry anchors the completion gate.
+    pub size_fracs: Vec<f64>,
+    /// Recorded in the JSON table so readers know the grid's scale.
+    pub quick: bool,
+}
+
+/// Sort descending and drop bit-identical duplicates.
+fn desc_dedup(mut fracs: Vec<f64>) -> Vec<f64> {
+    fracs.sort_by(|a, b| b.partial_cmp(a).expect("finite fractions"));
+    fracs.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    fracs
+}
+
+/// The standard size scan: full cost down past the paper's 76.9 %.
+pub fn default_size_fracs(base: &ExperimentConfig, quick: bool) -> Vec<f64> {
+    let paper = scale::default_ratio(base);
+    if quick {
+        desc_dedup(vec![1.0, paper])
+    } else {
+        desc_dedup(vec![1.0, 0.9, 0.85, 0.8, paper, 0.7])
+    }
+}
+
+impl MatrixAxes {
+    /// The full grid up to `kmax` departments: the standard K ladder
+    /// capped at `kmax`, with `kmax` itself always included (so `--kmax`
+    /// means what it says even off the ladder).
+    pub fn full(base: &ExperimentConfig, kmax: usize) -> Self {
+        let kmax = kmax.max(2);
+        let mut ks: Vec<usize> =
+            [2usize, 3, 4, 6, 8, 12, 16].iter().copied().filter(|&k| k <= kmax).collect();
+        if ks.last() != Some(&kmax) {
+            ks.push(kmax);
+        }
+        let mut policies = vec![
+            PolicyAxis::Base(PolicySpec::Cooperative),
+            PolicyAxis::Base(PolicySpec::StaticPartition),
+            PolicyAxis::Base(PolicySpec::ProportionalShare),
+            PolicyAxis::Base(PolicySpec::Tiered),
+        ];
+        // lease-term sensitivity grid (10 min / 1 h / 4 h)
+        for secs in [600, 3600, 14_400] {
+            policies.push(PolicyAxis::Base(PolicySpec::Lease { secs }));
+        }
+        policies.push(PolicyAxis::Mixed { lease_secs: 3600 });
+        Self {
+            ks,
+            mixes: vec![RosterMix::Alternating, RosterMix::ServiceHeavy, RosterMix::BatchHeavy],
+            policies,
+            loads: vec![base.hpc.target_load],
+            size_fracs: default_size_fracs(base, false),
+            quick: false,
+        }
+    }
+
+    /// The CI smoke grid: still spans roster shape × policy × lease term
+    /// up to `kmax`, but with two roster shapes, one lease term, and a
+    /// two-point size scan.
+    pub fn quick(base: &ExperimentConfig, kmax: usize) -> Self {
+        let kmax = kmax.max(2);
+        let mut ks = vec![2, 4.min(kmax), kmax];
+        ks.sort_unstable();
+        ks.dedup();
+        Self {
+            ks,
+            mixes: vec![RosterMix::Alternating, RosterMix::ServiceHeavy],
+            policies: vec![
+                PolicyAxis::Base(PolicySpec::Cooperative),
+                PolicyAxis::Base(PolicySpec::StaticPartition),
+                PolicyAxis::Base(PolicySpec::ProportionalShare),
+                PolicyAxis::Base(PolicySpec::Tiered),
+                PolicyAxis::Base(PolicySpec::Lease { secs: 3600 }),
+                PolicyAxis::Mixed { lease_secs: 3600 },
+            ],
+            loads: vec![base.hpc.target_load],
+            size_fracs: default_size_fracs(base, true),
+            quick: true,
+        }
+    }
+
+    /// Total simulations the grid will run (before same-size dedup).
+    pub fn planned_runs(&self) -> usize {
+        self.ks.len()
+            * self.mixes.len()
+            * self.policies.len()
+            * self.loads.len()
+            * self.size_fracs.len()
+    }
+}
+
+/// One simulated size of a cell's scan.
+#[derive(Debug, Clone)]
+pub struct CellRun {
+    pub nodes: u64,
+    pub frac: f64,
+    pub completed: u64,
+    pub killed: u64,
+    pub in_flight: usize,
+    /// Summed unmet service demand (node·s) — the SLO-violation measure.
+    pub shortage_node_secs: u64,
+    /// Service departments with any unmet demand.
+    pub slo_violating_depts: usize,
+    pub force_returns: u64,
+    pub avg_turnaround: f64,
+    pub events: u64,
+}
+
+impl CellRun {
+    fn from_result(nodes: u64, frac: f64, r: &RunResult) -> Self {
+        Self {
+            nodes,
+            frac,
+            completed: r.completed,
+            killed: r.killed,
+            in_flight: r.in_flight,
+            shortage_node_secs: r.ws_shortage_node_secs,
+            slo_violating_depts: r
+                .per_dept
+                .iter()
+                .filter(|d| d.kind == DeptKind::Service && d.shortage_node_secs > 0)
+                .count(),
+            force_returns: r.force_returns,
+            avg_turnaround: r.avg_turnaround,
+            events: r.events,
+        }
+    }
+}
+
+/// One reduced (roster × policy × lease × load) cell.
+#[derive(Debug, Clone)]
+pub struct MatrixCell {
+    pub name: String,
+    pub k: usize,
+    pub mix: RosterMix,
+    pub policy: String,
+    /// 0 when the policy carries no lease.
+    pub lease_secs: u64,
+    pub load: f64,
+    /// Σ department quotas — the K-dedicated-clusters cost.
+    pub dedicated_nodes: u64,
+    /// The size scan, descending.
+    pub runs: Vec<CellRun>,
+    /// Smallest scanned size with zero SLO violation and no completion
+    /// loss versus the full-cost run; None when no scanned size passes.
+    pub required_nodes: Option<u64>,
+    /// Per-department breakdown at the decisive run.
+    pub per_dept: Vec<DeptSummary>,
+}
+
+impl MatrixCell {
+    pub fn required_frac(&self) -> Option<f64> {
+        let req = self.required_nodes?;
+        self.runs.iter().find(|r| r.nodes == req).map(|r| r.frac)
+    }
+
+    /// The run the cell reports: at `required_nodes`, else the smallest
+    /// scanned size (the cell's failure mode is then visible in it).
+    pub fn decisive(&self) -> &CellRun {
+        match self.required_nodes {
+            Some(req) => self
+                .runs
+                .iter()
+                .find(|r| r.nodes == req)
+                .expect("required size comes from the scan"),
+            None => self.runs.last().expect("a cell always scans at least one size"),
+        }
+    }
+}
+
+/// Internal plan unit: one cell over one prepared roster.
+struct CellPlan {
+    name: String,
+    roster: usize,
+    k: usize,
+    policy: PolicyAxis,
+    fracs: Vec<f64>,
+}
+
+/// A prepared roster: the base config at its load level, the (prefix-
+/// stable) department specs, and their shared traces.
+struct Roster {
+    mix: RosterMix,
+    load: f64,
+    base: ExperimentConfig,
+    specs: Vec<DeptSpec>,
+    traces: scale::DeptTraces,
+}
+
+fn prepare_roster(base: &ExperimentConfig, mix: RosterMix, load: f64, kmax: usize) -> Roster {
+    let mut b = base.clone();
+    b.hpc.target_load = load;
+    let specs = mix.departments(kmax, &b);
+    let traces = scale::build_traces(&specs, &b);
+    Roster { mix, load, base: b, specs, traces }
+}
+
+/// Run the planned cells; the flattened run plan fans out across
+/// `workers` threads and reduces in plan order (bit-identical to serial).
+fn run_cells(rosters: &[Roster], cells: &[CellPlan], workers: usize) -> Result<Vec<MatrixCell>> {
+    // flatten: (cell, nodes, frac), cell-major, sizes descending, same-size
+    // duplicates dropped (tiny rosters can collapse adjacent fractions).
+    // Fracs are re-sorted here so the descending invariant — the first run
+    // is the full-cost completion-gate baseline, the last the smallest —
+    // holds for caller-supplied [[scenario]] fractions too.
+    let mut plan: Vec<(usize, u64, f64)> = Vec::new();
+    for (ci, c) in cells.iter().enumerate() {
+        if c.fracs.is_empty() {
+            bail!("cell '{}' has no cluster sizes to scan", c.name);
+        }
+        let dedicated: u64 = rosters[c.roster].specs[..c.k].iter().map(|s| s.quota).sum();
+        let mut seen = BTreeSet::new();
+        for frac in desc_dedup(c.fracs.clone()) {
+            let nodes = ((frac * dedicated as f64).round() as u64).max(1);
+            if seen.insert(nodes) {
+                plan.push((ci, nodes, frac));
+            }
+        }
+    }
+
+    let results: Vec<RunResult> = parallel::parallel_map(plan.len(), workers, |i| {
+        let (ci, nodes, _) = plan[i];
+        let c = &cells[ci];
+        let r = &rosters[c.roster];
+        let policy = c.policy.choice(&r.specs[..c.k]);
+        scale::run_roster(&r.base, &r.specs[..c.k], &r.traces, nodes, &policy)
+    })
+    .into_iter()
+    .collect::<Result<_>>()?;
+
+    let mut out = Vec::with_capacity(cells.len());
+    let mut cursor = 0usize;
+    for (ci, c) in cells.iter().enumerate() {
+        let roster = &rosters[c.roster];
+        let dedicated: u64 = roster.specs[..c.k].iter().map(|s| s.quota).sum();
+        let start = cursor;
+        while cursor < plan.len() && plan[cursor].0 == ci {
+            cursor += 1;
+        }
+        let runs: Vec<CellRun> = (start..cursor)
+            .map(|i| CellRun::from_result(plan[i].1, plan[i].2, &results[i]))
+            .collect();
+        // the full-cost (largest) run gates completions: smaller clusters
+        // must not lose batch work the dedicated-cost cluster finished
+        let baseline = runs.first().expect("non-empty size scan").completed;
+        let required_nodes = runs
+            .iter()
+            .filter(|r| r.shortage_node_secs == 0 && r.completed >= baseline)
+            .map(|r| r.nodes)
+            .min();
+        let decisive_idx = match required_nodes {
+            Some(req) => start + runs.iter().position(|r| r.nodes == req).expect("from scan"),
+            None => cursor - 1,
+        };
+        out.push(MatrixCell {
+            name: c.name.clone(),
+            k: c.k,
+            mix: roster.mix,
+            policy: c.policy.name().to_string(),
+            lease_secs: c.policy.lease_secs(),
+            load: roster.load,
+            dedicated_nodes: dedicated,
+            runs,
+            required_nodes,
+            per_dept: results[decisive_idx].per_dept.clone(),
+        });
+    }
+    Ok(out)
+}
+
+/// Expand and run the full grid.
+pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<MatrixCell>> {
+    if axes.ks.is_empty() || axes.mixes.is_empty() || axes.policies.is_empty() {
+        bail!("empty matrix axes");
+    }
+    if axes.size_fracs.is_empty() || axes.loads.is_empty() {
+        bail!("matrix needs at least one size fraction and one load level");
+    }
+    let kmax = axes.ks.iter().copied().max().unwrap_or(2);
+    let mut rosters = Vec::new();
+    let mut cells = Vec::new();
+    for &mix in &axes.mixes {
+        for &load in &axes.loads {
+            let ri = rosters.len();
+            rosters.push(prepare_roster(base, mix, load, kmax));
+            for &k in &axes.ks {
+                for &policy in &axes.policies {
+                    let lease = policy.lease_secs();
+                    let name = if lease > 0 {
+                        format!("k{k}-{}-{}{}", mix.name(), policy.name(), lease)
+                    } else {
+                        format!("k{k}-{}-{}", mix.name(), policy.name())
+                    };
+                    cells.push(CellPlan {
+                        name,
+                        roster: ri,
+                        k,
+                        policy,
+                        fracs: axes.size_fracs.clone(),
+                    });
+                }
+            }
+        }
+    }
+    run_cells(&rosters, &cells, base.workers)
+}
+
+/// Run a config's declared `[[scenario]]` cells instead of the grid.
+/// Scenarios sharing a (mix, load) pair share one prepared roster — the
+/// shapes are prefix-stable, so the largest requested K's traces serve
+/// every smaller sibling, exactly as in [`run_matrix`].
+pub fn run_scenarios(
+    base: &ExperimentConfig,
+    scenarios: &[ScenarioSpec],
+    size_fracs: &[f64],
+) -> Result<Vec<MatrixCell>> {
+    if scenarios.is_empty() {
+        bail!("no [[scenario]] entries in the config");
+    }
+    let load_of = |s: &ScenarioSpec| s.load.unwrap_or(base.hpc.target_load);
+    // widest K per (mix, load) group, so one roster covers the group
+    let mut kmax_by_key: BTreeMap<(&str, u64), usize> = BTreeMap::new();
+    for s in scenarios {
+        let key = (s.mix.name(), load_of(s).to_bits());
+        let k = kmax_by_key.entry(key).or_insert(0);
+        *k = (*k).max(s.k);
+    }
+    let mut rosters = Vec::new();
+    let mut roster_by_key: BTreeMap<(&str, u64), usize> = BTreeMap::new();
+    let mut cells = Vec::new();
+    for s in scenarios {
+        let policy = PolicyAxis::parse(&s.policy_kind, s.lease_secs)
+            .with_context(|| format!("scenario '{}'", s.name))?;
+        let load = load_of(s);
+        let key = (s.mix.name(), load.to_bits());
+        let roster = *roster_by_key.entry(key).or_insert_with(|| {
+            rosters.push(prepare_roster(base, s.mix, load, kmax_by_key[&key]));
+            rosters.len() - 1
+        });
+        let fracs = match s.frac {
+            Some(f) => vec![f],
+            None => size_fracs.to_vec(),
+        };
+        cells.push(CellPlan { name: s.name.clone(), roster, k: s.k, policy, fracs });
+    }
+    run_cells(&rosters, &cells, base.workers)
+}
+
+/// Pin the K = 2 alternating cooperative cell to the Fig. 7/8 regression
+/// anchor: its run at `base.total_nodes` must equal the DC run of
+/// [`consolidation::sweep`] bit for bit. Returns `Ok(false)` when the
+/// grid holds no such cell (scenario configs may not), `Err` on any
+/// numeric divergence.
+pub fn verify_anchor(base: &ExperimentConfig, cells: &[MatrixCell]) -> Result<bool> {
+    let Some(cell) = cells.iter().find(|c| {
+        c.k == 2
+            && c.mix == RosterMix::Alternating
+            && c.policy == "cooperative"
+            && c.load.to_bits() == base.hpc.target_load.to_bits()
+    }) else {
+        return Ok(false);
+    };
+    let Some(run) = cell.runs.iter().find(|r| r.nodes == base.total_nodes) else {
+        return Ok(false);
+    };
+    let sweep = consolidation::sweep(base, &[base.total_nodes])?;
+    let dc = &sweep[1];
+    let same = run.completed == dc.completed
+        && run.killed == dc.killed
+        && run.in_flight == dc.in_flight
+        && run.shortage_node_secs == dc.ws_shortage_node_secs
+        && run.force_returns == dc.force_returns
+        && run.events == dc.events
+        && run.avg_turnaround.to_bits() == dc.avg_turnaround.to_bits();
+    if !same {
+        bail!(
+            "matrix K=2 cooperative cell diverged from the fig7/fig8 anchor at {} nodes: \
+             matrix ({}, {}, {}, {}) vs sweep ({}, {}, {}, {})",
+            base.total_nodes,
+            run.completed,
+            run.killed,
+            run.events,
+            run.avg_turnaround,
+            dc.completed,
+            dc.killed,
+            dc.events,
+            dc.avg_turnaround,
+        );
+    }
+    Ok(true)
+}
+
+// ---- exports ----------------------------------------------------------------
+
+fn dept_json(d: &DeptSummary) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&d.name)),
+        ("kind", Json::str(d.kind.name())),
+        ("completed", Json::num(d.completed as f64)),
+        ("killed", Json::num(d.killed as f64)),
+        ("in_flight", Json::num(d.in_flight as f64)),
+        ("avg_turnaround_s", Json::num(d.avg_turnaround)),
+        ("shortage_node_secs", Json::num(d.shortage_node_secs as f64)),
+        ("holding_end", Json::num(d.holding_end as f64)),
+    ])
+}
+
+fn run_json(r: &CellRun) -> Json {
+    Json::obj(vec![
+        ("nodes", Json::num(r.nodes as f64)),
+        ("frac", Json::num(r.frac)),
+        ("completed", Json::num(r.completed as f64)),
+        ("killed", Json::num(r.killed as f64)),
+        ("in_flight", Json::num(r.in_flight as f64)),
+        ("shortage_node_secs", Json::num(r.shortage_node_secs as f64)),
+        ("slo_violating_depts", Json::num(r.slo_violating_depts as f64)),
+        ("force_returns", Json::num(r.force_returns as f64)),
+        ("avg_turnaround_s", Json::num(r.avg_turnaround)),
+        ("events", Json::num(r.events as f64)),
+    ])
+}
+
+fn cell_json(c: &MatrixCell) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&c.name)),
+        ("k", Json::num(c.k as f64)),
+        ("mix", Json::str(c.mix.name())),
+        ("policy", Json::str(&c.policy)),
+        ("lease_secs", Json::num(c.lease_secs as f64)),
+        ("load", Json::num(c.load)),
+        ("dedicated_nodes", Json::num(c.dedicated_nodes as f64)),
+        (
+            "required_nodes",
+            c.required_nodes.map(|n| Json::num(n as f64)).unwrap_or(Json::Null),
+        ),
+        ("required_frac", c.required_frac().map(Json::num).unwrap_or(Json::Null)),
+        ("runs", Json::Arr(c.runs.iter().map(run_json).collect())),
+        ("per_dept", Json::Arr(c.per_dept.iter().map(dept_json).collect())),
+    ])
+}
+
+/// The machine-readable table (`out/matrix.json`): schema version 1.
+pub fn matrix_json(cells: &[MatrixCell], quick: bool) -> Json {
+    Json::obj(vec![
+        ("suite", Json::str("matrix")),
+        ("schema_version", Json::num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
+    ])
+}
+
+/// RFC-4180-quote a CSV field when it holds a delimiter, quote, or
+/// newline (scenario names are user-supplied free text).
+fn csv_field(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// One CSV row per cell, decisive-run metrics (`out/matrix.csv`). The
+/// cell axes are textual, so this writer is local rather than the numeric
+/// [`crate::trace::csv::Table`].
+pub fn matrix_csv(cells: &[MatrixCell]) -> String {
+    let mut out = String::from(
+        "name,k,mix,policy,lease_secs,load,dedicated_nodes,required_nodes,required_frac,\
+         completed,killed,in_flight,shortage_node_secs,slo_violating_depts,force_returns,\
+         avg_turnaround_s,events\n",
+    );
+    for c in cells {
+        let d = c.decisive();
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.1},{}\n",
+            csv_field(&c.name),
+            c.k,
+            c.mix.name(),
+            c.policy,
+            c.lease_secs,
+            c.load,
+            c.dedicated_nodes,
+            c.required_nodes.map(|n| n.to_string()).unwrap_or_default(),
+            c.required_frac().map(|f| format!("{f:.4}")).unwrap_or_default(),
+            d.completed,
+            d.killed,
+            d.in_flight,
+            d.shortage_node_secs,
+            d.slo_violating_depts,
+            d.force_returns,
+            d.avg_turnaround,
+            d.events,
+        ));
+    }
+    out
+}
+
+/// Aligned text table for the CLI.
+pub fn matrix_text(cells: &[MatrixCell]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<34} {:>3} {:>14} {:>7} {:>6} {:>9} {:>9} {:>6} {:>10} {:>7} {:>9}\n",
+        "cell", "K", "policy", "lease", "load", "dedicated", "required", "cost%", "completed",
+        "killed", "slo-short"
+    ));
+    for c in cells {
+        let d = c.decisive();
+        out.push_str(&format!(
+            "{:<34} {:>3} {:>14} {:>7} {:>6.2} {:>9} {:>9} {:>6} {:>10} {:>7} {:>9}\n",
+            c.name,
+            c.k,
+            c.policy,
+            if c.lease_secs > 0 { c.lease_secs.to_string() } else { "-".to_string() },
+            c.load,
+            c.dedicated_nodes,
+            c.required_nodes.map(|n| n.to_string()).unwrap_or_else(|| "none".to_string()),
+            c.required_frac()
+                .map(|f| format!("{:.1}", f * 100.0))
+                .unwrap_or_else(|| "-".to_string()),
+            d.completed,
+            d.killed,
+            d.shortage_node_secs,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timefmt::DAY;
+
+    fn fast_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.horizon = DAY;
+        cfg.hpc.horizon = DAY;
+        cfg.web.horizon = DAY;
+        cfg.hpc.num_jobs = 150;
+        cfg
+    }
+
+    fn small_axes(base: &ExperimentConfig) -> MatrixAxes {
+        MatrixAxes {
+            ks: vec![2, 3],
+            mixes: vec![RosterMix::Alternating, RosterMix::ServiceHeavy],
+            policies: vec![
+                PolicyAxis::Base(PolicySpec::Cooperative),
+                PolicyAxis::Base(PolicySpec::Lease { secs: 1800 }),
+                PolicyAxis::Mixed { lease_secs: 1800 },
+            ],
+            loads: vec![base.hpc.target_load],
+            size_fracs: vec![1.0, 0.8],
+            quick: true,
+        }
+    }
+
+    /// The acceptance gate: parallel matrix tables are bit-identical to
+    /// serial ones (same cells, same runs, same numbers).
+    #[test]
+    fn parallel_matrix_is_bit_identical_to_serial() {
+        let mut serial = fast_cfg();
+        serial.workers = 1;
+        let mut par = fast_cfg();
+        par.workers = 4;
+        let a = run_matrix(&serial, &small_axes(&serial)).unwrap();
+        let b = run_matrix(&par, &small_axes(&par)).unwrap();
+        assert_eq!(
+            matrix_json(&a, true).to_string(),
+            matrix_json(&b, true).to_string(),
+            "parallel matrix diverged from serial"
+        );
+        assert_eq!(matrix_csv(&a), matrix_csv(&b));
+    }
+
+    /// The acceptance regression: the K = 2 alternating cooperative cell
+    /// at the paper's cost fraction replays the Fig. 7/8 DC run bit for
+    /// bit (chained through `scale`'s own anchor test to the paper runs).
+    #[test]
+    fn k2_cooperative_cell_matches_fig7_fig8_anchor() {
+        let base = ExperimentConfig::default();
+        let axes = MatrixAxes {
+            ks: vec![2],
+            mixes: vec![RosterMix::Alternating],
+            policies: vec![PolicyAxis::Base(PolicySpec::Cooperative)],
+            loads: vec![base.hpc.target_load],
+            size_fracs: default_size_fracs(&base, true),
+            quick: true,
+        };
+        let cells = run_matrix(&base, &axes).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert!(verify_anchor(&base, &cells).unwrap(), "anchor cell missing from the grid");
+    }
+
+    #[test]
+    fn cells_scan_descending_and_reduce_consistently() {
+        let cfg = fast_cfg();
+        let cells = run_matrix(&cfg, &small_axes(&cfg)).unwrap();
+        assert_eq!(cells.len(), 2 * 2 * 3, "ks × mixes × policies");
+        for c in &cells {
+            assert!(!c.runs.is_empty());
+            assert!(
+                c.runs.windows(2).all(|w| w[0].nodes > w[1].nodes),
+                "{}: sizes not strictly descending",
+                c.name
+            );
+            assert_eq!(c.per_dept.len(), c.k, "{}", c.name);
+            if let Some(req) = c.required_nodes {
+                let run = c.runs.iter().find(|r| r.nodes == req).unwrap();
+                assert_eq!(run.shortage_node_secs, 0, "{}", c.name);
+                assert_eq!(c.decisive().nodes, req);
+            }
+            // the decisive per-dept breakdown closes against the aggregate
+            assert_eq!(
+                c.per_dept.iter().map(|d| d.completed).sum::<u64>(),
+                c.decisive().completed,
+                "{}",
+                c.name
+            );
+        }
+        // cooperative cells keep every service department whole at every
+        // scanned size (WS priority is absolute)
+        for c in cells.iter().filter(|c| c.policy == "cooperative") {
+            assert!(c.runs.iter().all(|r| r.shortage_node_secs == 0), "{}", c.name);
+            assert!(c.required_nodes.is_some(), "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn scenarios_run_in_place_of_the_grid() {
+        let cfg = fast_cfg();
+        let scenarios = vec![
+            ScenarioSpec {
+                name: "paper-pair".into(),
+                k: 2,
+                mix: RosterMix::Alternating,
+                policy_kind: "cooperative".into(),
+                lease_secs: 3600,
+                load: None,
+                frac: Some(0.8),
+            },
+            ScenarioSpec {
+                name: "portal-farm".into(),
+                k: 4,
+                mix: RosterMix::ServiceHeavy,
+                policy_kind: "mixed".into(),
+                lease_secs: 900,
+                load: Some(0.9),
+                frac: None,
+            },
+        ];
+        // ascending caller-supplied fracs are normalized to the descending
+        // scan order (the first run is the completion-gate baseline)
+        let cells = run_scenarios(&cfg, &scenarios, &[0.8, 1.0]).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].name, "paper-pair");
+        assert_eq!(cells[0].runs.len(), 1, "explicit frac pins a single size");
+        assert!(
+            cells[1].runs.windows(2).all(|w| w[0].nodes > w[1].nodes),
+            "scenario size scan must be normalized descending"
+        );
+        assert!((cells[1].runs[0].frac - 1.0).abs() < 1e-12);
+        assert_eq!(cells[1].policy, "mixed");
+        assert_eq!(cells[1].lease_secs, 900);
+        assert_eq!(cells[1].k, 4);
+        assert_eq!(cells[1].per_dept.len(), 4);
+        assert!((cells[1].load - 0.9).abs() < 1e-12);
+        assert!(run_scenarios(&cfg, &[], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn json_table_has_the_ci_schema() {
+        let cfg = fast_cfg();
+        let mut axes = small_axes(&cfg);
+        axes.ks = vec![2];
+        axes.mixes = vec![RosterMix::Alternating];
+        let cells = run_matrix(&cfg, &axes).unwrap();
+        let doc = Json::parse(&matrix_json(&cells, true).to_string()).unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("matrix"));
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(1));
+        assert_eq!(doc.get("quick").unwrap().as_bool(), Some(true));
+        let cells_j = doc.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells_j.len(), cells.len());
+        for c in cells_j {
+            for key in [
+                "name",
+                "k",
+                "mix",
+                "policy",
+                "lease_secs",
+                "load",
+                "dedicated_nodes",
+                "required_nodes",
+                "required_frac",
+                "runs",
+                "per_dept",
+            ] {
+                assert!(c.get(key).is_some(), "cell missing {key}");
+            }
+            for r in c.get("runs").unwrap().as_arr().unwrap() {
+                for key in ["nodes", "frac", "completed", "killed", "shortage_node_secs"] {
+                    assert!(r.get(key).is_some(), "run missing {key}");
+                }
+            }
+        }
+        // CSV: header + one row per cell
+        let csv = matrix_csv(&cells);
+        assert_eq!(csv.lines().count(), 1 + cells.len());
+        assert!(csv.starts_with("name,k,mix,policy,lease_secs,load,"));
+        // user-supplied scenario names with delimiters are RFC-4180-quoted
+        assert_eq!(csv_field("k6, portal"), "\"k6, portal\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_field("plain-name"), "plain-name");
+        // text table renders every cell
+        let text = matrix_text(&cells);
+        assert!(text.contains("required"));
+        assert_eq!(text.lines().count(), 1 + cells.len());
+    }
+
+    #[test]
+    fn axes_constructors_respect_kmax() {
+        let base = ExperimentConfig::default();
+        let full = MatrixAxes::full(&base, 16);
+        assert_eq!(full.ks, vec![2, 3, 4, 6, 8, 12, 16]);
+        // an off-ladder kmax is still simulated, not silently dropped
+        assert_eq!(MatrixAxes::full(&base, 10).ks, vec![2, 3, 4, 6, 8, 10]);
+        assert_eq!(MatrixAxes::full(&base, 2).ks, vec![2]);
+        assert!(full.policies.len() >= 8, "base + lease grid + mixed");
+        assert!(full.planned_runs() > 0);
+        let quick = MatrixAxes::quick(&base, 16);
+        assert_eq!(quick.ks, vec![2, 4, 16]);
+        assert!(quick.quick);
+        assert_eq!(quick.size_fracs.len(), 2);
+        let tiny = MatrixAxes::quick(&base, 2);
+        assert_eq!(tiny.ks, vec![2]);
+        // the paper's ratio is always on the scan so the anchor exists
+        let paper = scale::default_ratio(&base);
+        assert!(quick.size_fracs.iter().any(|f| f.to_bits() == paper.to_bits()));
+        assert!(full.size_fracs.iter().any(|f| f.to_bits() == paper.to_bits()));
+    }
+
+    #[test]
+    fn policy_axis_parses_and_resolves() {
+        let base = ExperimentConfig::default();
+        let specs = RosterMix::BatchHeavy.departments(5, &base);
+        let mixed = PolicyAxis::parse("mixed", 600).unwrap();
+        assert_eq!(mixed.name(), "mixed");
+        assert_eq!(mixed.lease_secs(), 600);
+        let PolicyChoice::Mixed { default, rules } = mixed.choice(&specs) else {
+            panic!("expected mixed");
+        };
+        assert_eq!(default, PolicySpec::Cooperative);
+        // the rule targets the bottom batch tier of the roster
+        let bottom =
+            specs.iter().filter(|d| d.kind == DeptKind::Batch).map(|d| d.tier).max().unwrap();
+        assert_eq!(rules, vec![TierRule { tier: bottom, spec: PolicySpec::Lease { secs: 600 } }]);
+        let lease = PolicyAxis::parse("lease", 900).unwrap();
+        assert_eq!(lease.lease_secs(), 900);
+        assert_eq!(PolicyAxis::parse("cooperative", 1).unwrap().lease_secs(), 0);
+        assert!(PolicyAxis::parse("lottery", 1).is_err());
+    }
+}

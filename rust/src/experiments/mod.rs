@@ -3,11 +3,14 @@
 //! consolidation sweep), plus ablations over the design choices, the
 //! seed/load sensitivity grids, the K-department economies-of-scale sweep
 //! ([`scale`], from the arXiv:1006.1401 / arXiv:1004.1276 follow-ups),
-//! and the report writers. See EXPERIMENTS.md for the figure↔command map.
+//! the scenario-matrix engine ([`matrix`]: roster shape × policy × lease
+//! term × load × cluster size), and the report writers. See
+//! EXPERIMENTS.md for the figure↔command map.
 
 pub mod ablations;
 pub mod consolidation;
 pub mod fig5;
+pub mod matrix;
 pub mod parallel;
 pub mod report;
 pub mod scale;

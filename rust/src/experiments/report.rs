@@ -5,7 +5,7 @@ use crate::coordinator::RunResult;
 use crate::trace::csv::Table;
 
 /// Markdown table over the sweep results (the Fig. 7 + Fig. 8 columns the
-//  paper reports, side by side).
+/// paper reports, side by side).
 pub fn sweep_markdown(results: &[RunResult]) -> String {
     let mut out = String::new();
     out.push_str(

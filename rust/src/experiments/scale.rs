@@ -18,9 +18,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::cluster::{DeptId, DeptKind};
-use crate::config::{DeptSpec, ExperimentConfig};
+use crate::config::{DeptSpec, ExperimentConfig, RosterMix};
 use crate::coordinator::{ConsolidationSim, DeptInput, DeptWorkload, RunResult};
-use crate::provision::{DeptProfile, PolicySpec};
+use crate::provision::{DeptProfile, PolicyChoice, PolicySpec};
 use crate::trace::csv::Table;
 use crate::trace::hpc_synth;
 use crate::trace::web_synth::WebTraceConfig;
@@ -71,20 +71,11 @@ pub fn default_ratio(base: &ExperimentConfig) -> f64 {
 
 /// Default K-department roster: departments alternate batch ("st0",
 /// "st1", …, quota = `st_nodes`) and service ("ws0", …, quota =
-/// `ws_nodes`), so K = 2 is exactly the paper's ST+WS pair.
+/// `ws_nodes`), so K = 2 is exactly the paper's ST+WS pair. (The other
+/// roster shapes the scenario matrix sweeps live on
+/// [`RosterMix`].)
 pub fn default_departments(k: usize, base: &ExperimentConfig) -> Vec<DeptSpec> {
-    (0..k)
-        .map(|i| {
-            let batch = i % 2 == 0;
-            DeptSpec {
-                name: format!("{}{}", if batch { "st" } else { "ws" }, i / 2),
-                kind: if batch { DeptKind::Batch } else { DeptKind::Service },
-                tier: u8::from(batch),
-                quota: if batch { base.st_nodes } else { base.ws_nodes },
-                seed: None,
-            }
-        })
-        .collect()
+    RosterMix::Alternating.departments(k, base)
 }
 
 /// Derive the trace seed for the `ordinal`-th department of a kind:
@@ -94,17 +85,21 @@ fn derive_seed(base_seed: u64, ordinal: u64) -> u64 {
     base_seed ^ ordinal.wrapping_mul(0x9E3779B97F4A7C15)
 }
 
+/// One service department's shared trace: the uncapped demand series, its
+/// peak, and the seeded web config (to regenerate when a cap binds).
+pub(crate) type ServiceTrace = (Arc<[u64]>, u64, WebTraceConfig);
+
 /// Per-department shared traces (generated once, `Arc`-shared across every
-/// run that replays the department).
-struct DeptTraces {
+/// run that replays the department). Shared with the scenario-matrix
+/// engine (`super::matrix`), which sweeps the same rosters.
+pub(crate) struct DeptTraces {
     /// Batch departments: the job trace.
     jobs: Vec<Option<Arc<[Job]>>>,
-    /// Service departments: the uncapped demand series, its peak, and the
-    /// seeded web config (to regenerate when a cap actually binds).
-    demand: Vec<Option<(Arc<[u64]>, u64, WebTraceConfig)>>,
+    /// Service departments: see [`ServiceTrace`].
+    demand: Vec<Option<ServiceTrace>>,
 }
 
-fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> DeptTraces {
+pub(crate) fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> DeptTraces {
     let mut jobs = vec![None; specs.len()];
     let mut demand = vec![None; specs.len()];
     let mut batch_ord = 0u64;
@@ -133,7 +128,7 @@ fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> DeptTraces {
 /// One department's input for a run whose service cap is `cap`: the
 /// uncapped series is reused whenever the cap doesn't bind (it never does
 /// at the calibrated 64-instance peak), mirroring the Fig. 7/8 sweep.
-fn dept_input(spec: &DeptSpec, traces: &DeptTraces, idx: usize, cap: u64) -> DeptInput {
+pub(crate) fn dept_input(spec: &DeptSpec, traces: &DeptTraces, idx: usize, cap: u64) -> DeptInput {
     let workload = match spec.kind {
         DeptKind::Batch => {
             DeptWorkload::Batch(traces.jobs[idx].as_ref().expect("batch trace").clone())
@@ -153,15 +148,17 @@ fn dept_input(spec: &DeptSpec, traces: &DeptTraces, idx: usize, cap: u64) -> Dep
     DeptInput { name: spec.name.clone(), workload }
 }
 
-/// Run the consolidated configuration: every department in `specs` on one
-/// `total_nodes` cluster under `policy`.
-fn run_consolidated(
+/// Run every department in `specs` on one consolidated `total_nodes`
+/// cluster under `policy` (base policy or per-tier mix). Shared by the
+/// economies-of-scale sweep and the scenario matrix: a matrix cell and a
+/// scale column built from the same roster replay bit-identical runs.
+pub(crate) fn run_roster(
     base: &ExperimentConfig,
     specs: &[DeptSpec],
     traces: &DeptTraces,
     total_nodes: u64,
-    policy: PolicySpec,
-) -> RunResult {
+    policy: &PolicyChoice,
+) -> Result<RunResult> {
     let profiles: Vec<DeptProfile> = specs
         .iter()
         .enumerate()
@@ -179,13 +176,25 @@ fn run_consolidated(
         .run()
 }
 
+/// Run the consolidated configuration under a base policy (the scale
+/// sweep's axis; the matrix drives [`run_roster`] directly).
+fn run_consolidated(
+    base: &ExperimentConfig,
+    specs: &[DeptSpec],
+    traces: &DeptTraces,
+    total_nodes: u64,
+    policy: PolicySpec,
+) -> Result<RunResult> {
+    run_roster(base, specs, traces, total_nodes, &PolicyChoice::Base(policy))
+}
+
 /// Run one department on its own dedicated cluster of `quota` nodes.
 fn run_dedicated(
     base: &ExperimentConfig,
     spec: &DeptSpec,
     traces: &DeptTraces,
     idx: usize,
-) -> RunResult {
+) -> Result<RunResult> {
     let profile = spec.profile(DeptId(0));
     let inputs = vec![dept_input(spec, traces, idx, spec.quota)];
     let mut cfg = base.clone();
@@ -213,7 +222,7 @@ pub fn scale_sweep(
     ks: &[usize],
     policy: PolicySpec,
     ratio: f64,
-) -> Vec<ScaleCell> {
+) -> Result<Vec<ScaleCell>> {
     assert!(ratio > 0.0 && ratio <= 1.0, "ratio must be in (0, 1]");
     let kmax = ks.iter().copied().max().unwrap_or(2).max(2);
     let specs = default_departments(kmax, base);
@@ -233,15 +242,18 @@ pub fn scale_sweep(
     let consolidated_nodes =
         |k: usize| -> u64 { (ratio * dedicated_total(k) as f64).round() as u64 };
 
-    let results = parallel::parallel_map(plan.len(), base.workers, |i| match plan[i] {
-        Planned::Dedicated(d) => run_dedicated(base, &specs[d], &traces, d),
-        Planned::Consolidated(k) => {
-            run_consolidated(base, &specs[..k], &traces, consolidated_nodes(k), policy)
-        }
-    });
+    let results: Vec<RunResult> =
+        parallel::parallel_map(plan.len(), base.workers, |i| match plan[i] {
+            Planned::Dedicated(d) => run_dedicated(base, &specs[d], &traces, d),
+            Planned::Consolidated(k) => {
+                run_consolidated(base, &specs[..k], &traces, consolidated_nodes(k), policy)
+            }
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
     let (dedicated, consolidated) = results.split_at(kmax);
 
-    ks.iter()
+    Ok(ks.iter()
         .zip(consolidated)
         .map(|(&k, con)| {
             let ded = &dedicated[..k];
@@ -265,20 +277,21 @@ pub fn scale_sweep(
                 consolidated: con.clone(),
             }
         })
-        .collect()
+        .collect())
 }
 
 /// Run the `[[department]]` roster of a config on one consolidated
-/// cluster of `cfg.total_nodes` under `cfg.policy` (default cooperative).
-/// This is what `phoenixd depts` executes.
+/// cluster of `cfg.total_nodes` under `cfg.policy` (default cooperative;
+/// per-tier mixes supported). This is what `phoenixd depts` executes.
 pub fn run_departments(cfg: &ExperimentConfig) -> Result<RunResult> {
     if cfg.departments.is_empty() {
         bail!("no [[department]] entries in the config (see configs/departments.toml)");
     }
     cfg.validate()?;
     let traces = build_traces(&cfg.departments, cfg);
-    let policy = cfg.policy.unwrap_or(PolicySpec::Cooperative);
-    Ok(run_consolidated(cfg, &cfg.departments, &traces, cfg.total_nodes, policy))
+    let policy =
+        cfg.policy.clone().unwrap_or(PolicyChoice::Base(PolicySpec::Cooperative));
+    run_roster(cfg, &cfg.departments, &traces, cfg.total_nodes, &policy)
 }
 
 /// CSV export of the sweep.
@@ -331,9 +344,10 @@ mod tests {
     fn k2_cooperative_cell_is_bit_identical_to_fig7_fig8() {
         let base = ExperimentConfig::default();
         let cells =
-            scale_sweep(&base, &[2], PolicySpec::Cooperative, default_ratio(&base));
+            scale_sweep(&base, &[2], PolicySpec::Cooperative, default_ratio(&base)).unwrap();
         let con = &cells[0].consolidated;
-        let dc = &consolidation::sweep(&base, &[base.total_nodes])[1];
+        let sweep = consolidation::sweep(&base, &[base.total_nodes]).unwrap();
+        let dc = &sweep[1];
         assert_eq!(cells[0].consolidated_nodes, base.total_nodes);
         assert_eq!(con.completed, dc.completed);
         assert_eq!(con.killed, dc.killed);
@@ -355,7 +369,7 @@ mod tests {
     #[test]
     fn sweep_covers_requested_ks_and_conserves() {
         let cfg = fast_cfg();
-        let cells = scale_sweep(&cfg, &[2, 3, 4], PolicySpec::Cooperative, 0.8);
+        let cells = scale_sweep(&cfg, &[2, 3, 4], PolicySpec::Cooperative, 0.8).unwrap();
         assert_eq!(cells.len(), 3);
         for c in &cells {
             assert_eq!(c.consolidated.per_dept.len(), c.k);
@@ -380,7 +394,7 @@ mod tests {
     fn new_policies_drive_the_consolidated_run() {
         let cfg = fast_cfg();
         for policy in [PolicySpec::Lease { secs: 3600 }, PolicySpec::Tiered] {
-            let cells = scale_sweep(&cfg, &[3], policy, 0.8);
+            let cells = scale_sweep(&cfg, &[3], policy, 0.8).unwrap();
             let con = &cells[0].consolidated;
             assert!(con.completed > 0, "{:?} completed nothing", policy);
             assert_eq!(
@@ -393,7 +407,7 @@ mod tests {
     #[test]
     fn dedicated_runs_are_shared_across_k_columns() {
         let cfg = fast_cfg();
-        let cells = scale_sweep(&cfg, &[2, 4], PolicySpec::Cooperative, 0.8);
+        let cells = scale_sweep(&cfg, &[2, 4], PolicySpec::Cooperative, 0.8).unwrap();
         // K=4's dedicated aggregate includes K=2's exactly
         assert!(cells[1].dedicated_completed >= cells[0].dedicated_completed);
         assert_eq!(cells[0].dedicated_nodes, cfg.st_nodes + cfg.ws_nodes);
@@ -409,7 +423,7 @@ mod tests {
     #[test]
     fn table_matches_cells() {
         let cfg = fast_cfg();
-        let cells = scale_sweep(&cfg, &[2, 3], PolicySpec::Cooperative, 0.8);
+        let cells = scale_sweep(&cfg, &[2, 3], PolicySpec::Cooperative, 0.8).unwrap();
         let t = scale_table(&cells);
         assert_eq!(t.rows.len(), 2);
         assert_eq!(t.rows[0][0], 2.0);

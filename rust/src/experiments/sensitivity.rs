@@ -4,6 +4,8 @@
 //! one lucky draw. `phoenixd sense` and `benches/ablations.rs` drive this;
 //! EXPERIMENTS.md reports the aggregate.
 
+use anyhow::Result;
+
 use crate::config::ExperimentConfig;
 use crate::coordinator::RunResult;
 use crate::util::stats::OnlineStats;
@@ -26,16 +28,20 @@ pub struct SeedOutcome {
 /// fan out across worker threads (`base.workers`; 0 = one per core); each
 /// seed's inner sweep runs serially so the grid is the only parallel axis.
 /// Outcomes come back in seed order.
-pub fn across_seeds(base: &ExperimentConfig, dc_size: u64, seeds: &[u64]) -> Vec<SeedOutcome> {
+pub fn across_seeds(
+    base: &ExperimentConfig,
+    dc_size: u64,
+    seeds: &[u64],
+) -> Result<Vec<SeedOutcome>> {
     parallel::parallel_map(seeds.len(), base.workers, |i| {
         let seed = seeds[i];
         let mut cfg = base.clone();
         cfg.workers = 1;
         cfg.hpc.seed = seed;
         cfg.web.seed = seed ^ 0x77;
-        let results = consolidation::sweep(&cfg, &[dc_size]);
+        let results = consolidation::sweep(&cfg, &[dc_size])?;
         let (sc, dc) = (&results[0], &results[1]);
-        SeedOutcome {
+        Ok(SeedOutcome {
             seed,
             sc_completed: sc.completed,
             dc_completed: dc.completed,
@@ -44,8 +50,10 @@ pub fn across_seeds(base: &ExperimentConfig, dc_size: u64, seeds: &[u64]) -> Vec
             dc_killed: dc.killed,
             wins_both: dc.completed >= sc.completed
                 && dc.avg_turnaround <= sc.avg_turnaround,
-        }
+        })
     })
+    .into_iter()
+    .collect()
 }
 
 /// Aggregate: win rate and mean deltas.
@@ -82,17 +90,19 @@ pub fn across_loads(
     base: &ExperimentConfig,
     dc_size: u64,
     loads: &[f64],
-) -> Vec<(f64, RunResult, RunResult)> {
+) -> Result<Vec<(f64, RunResult, RunResult)>> {
     parallel::parallel_map(loads.len(), base.workers, |i| {
         let load = loads[i];
         let mut cfg = base.clone();
         cfg.workers = 1;
         cfg.hpc.target_load = load;
-        let mut results = consolidation::sweep(&cfg, &[dc_size]);
-        let dc = results.pop().unwrap();
-        let sc = results.pop().unwrap();
-        (load, sc, dc)
+        let mut results = consolidation::sweep(&cfg, &[dc_size])?;
+        let dc = results.pop().expect("sweep returns SC + DC");
+        let sc = results.pop().expect("sweep returns SC + DC");
+        Ok((load, sc, dc))
     })
+    .into_iter()
+    .collect()
 }
 
 #[cfg(test)]
@@ -111,7 +121,7 @@ mod tests {
 
     #[test]
     fn seed_sweep_aggregates() {
-        let outs = across_seeds(&fast(), 160, &[1, 2, 3]);
+        let outs = across_seeds(&fast(), 160, &[1, 2, 3]).unwrap();
         assert_eq!(outs.len(), 3);
         let agg = aggregate(&outs);
         assert_eq!(agg.runs, 3);
@@ -121,7 +131,7 @@ mod tests {
 
     #[test]
     fn load_band_orders_backlog() {
-        let rows = across_loads(&fast(), 160, &[0.7, 1.2]);
+        let rows = across_loads(&fast(), 160, &[0.7, 1.2]).unwrap();
         // heavier load leaves SC with no fewer unfinished jobs
         assert!(rows[1].1.in_flight >= rows[0].1.in_flight);
     }
@@ -135,7 +145,7 @@ mod tests {
         let base = ExperimentConfig::default();
         let seeds = [20000425u64, 7, 1234];
 
-        let at_180 = aggregate(&across_seeds(&base, 180, &seeds));
+        let at_180 = aggregate(&across_seeds(&base, 180, &seeds).unwrap());
         assert!(
             at_180.wins * 2 > at_180.runs,
             "DC-180 won only {}/{} seeds",
@@ -143,7 +153,7 @@ mod tests {
             at_180.runs
         );
 
-        let at_160 = across_seeds(&base, 160, &seeds);
+        let at_160 = across_seeds(&base, 160, &seeds).unwrap();
         // turnaround (end-user benefit) is the robust half of the claim
         let ta_wins = at_160.iter().filter(|o| o.dc_turnaround <= o.sc_turnaround).count();
         assert!(ta_wins * 2 > seeds.len(), "turnaround won only {ta_wins}/{}", seeds.len());

@@ -8,7 +8,8 @@
 //!   generalized from two departments to N: the common service framework,
 //!   the Resource Provision Service with pluggable
 //!   [`provision::ProvisionPolicy`] implementations (cooperative, static,
-//!   proportional, lease-based, tiered), per-department batch CMSes
+//!   proportional, lease-based, tiered, plus the per-tier
+//!   [`provision::MixedPolicy`] combinator), per-department batch CMSes
 //!   (scheduling) and service CMSes (autoscaling + load balancing), plus
 //!   every substrate they need (event simulator, N-department cluster
 //!   ledger, trace generators, metrics, config, CLI).

@@ -6,6 +6,7 @@
 //! phoenixd fig8   [--sizes ...]
 //! phoenixd sweep  [--sizes ...]            # fig7 + fig8 + headline
 //! phoenixd scale  [--kmax 8] [--ratio 0.769] [--policy cooperative|lease|tiered|...]
+//! phoenixd matrix [--kmax 16] [--quick]    # roster × policy × lease × load grid
 //! phoenixd depts  --config FILE            # run a [[department]] roster
 //! phoenixd ablate [--what kill|sched|scaler]
 //! phoenixd serve  [--nodes 160] [--secs 3600] [--speedup 100] [--predictive]
@@ -18,8 +19,10 @@ use anyhow::{bail, Result};
 use phoenix_cloud::cluster::DeptKind;
 use phoenix_cloud::config::ExperimentConfig;
 use phoenix_cloud::coordinator::realtime::{self, ScalerFn};
-use phoenix_cloud::experiments::{ablations, consolidation, fig5, report, scale, sensitivity};
-use phoenix_cloud::provision::PolicySpec;
+use phoenix_cloud::experiments::{
+    ablations, consolidation, fig5, matrix, report, scale, sensitivity,
+};
+use phoenix_cloud::provision::{PolicyChoice, PolicySpec};
 use phoenix_cloud::runtime::ForecastEngine;
 use phoenix_cloud::trace::{hpc_synth, swf, web_synth, worldcup};
 use phoenix_cloud::util::cli::Args;
@@ -52,7 +55,7 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["verbose", "predictive", "help"])?;
+    let args = Args::parse(argv, &["verbose", "predictive", "help", "quick"])?;
     logger::init(if args.has("verbose") { "debug" } else { "info" });
 
     match args.subcommand.as_deref() {
@@ -61,6 +64,7 @@ fn run(argv: &[String]) -> Result<()> {
             cmd_sweep(&args, args.subcommand.as_deref().unwrap())
         }
         Some("scale") => cmd_scale(&args),
+        Some("matrix") => cmd_matrix(&args),
         Some("depts") => cmd_depts(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("sense") => cmd_sense(&args),
@@ -86,6 +90,8 @@ fig7      completed jobs + turnaround vs cluster size (paper Fig. 7)\n  \
 fig8      killed jobs vs cluster size (paper Fig. 8)\n  \
 sweep     fig7 + fig8 + the headline consolidation claim\n  \
 scale     economies-of-scale: K consolidated vs K dedicated, K=2..kmax\n  \
+matrix    scenario matrix: roster shape x policy x lease term x load x size\n  \
+          (--kmax N --quick; [[scenario]] configs override the grid)\n  \
 depts     run the config's [[department]] roster on one shared cluster\n  \
 ablate    design ablations (--what kill|sched|scaler)\n  \
 sense     headline sensitivity across seeds and load band (--seeds N)\n  \
@@ -148,7 +154,7 @@ fn cmd_sense(args: &Args) -> Result<()> {
     let n_seeds = args.get_u64("seeds", 5)? as usize;
     let seeds: Vec<u64> = (0..n_seeds as u64).map(|i| cfg.hpc.seed ^ (i * 7919)).collect();
     println!("headline sensitivity: DC-{dc_size} vs SC-208 across {n_seeds} seeds…");
-    let outs = sensitivity::across_seeds(&cfg, dc_size, &seeds);
+    let outs = sensitivity::across_seeds(&cfg, dc_size, &seeds)?;
     println!(
         "{:<12} {:>9} {:>9} {:>11} {:>11} {:>7} {:>6}",
         "seed", "SC-compl", "DC-compl", "SC-ta(s)", "DC-ta(s)", "killed", "wins"
@@ -176,7 +182,7 @@ fn cmd_sense(args: &Args) -> Result<()> {
     let loads = [0.95, 1.0, 1.05, 1.07, 1.1, 1.15];
     println!("\nload band (seed {}):", cfg.hpc.seed);
     println!("{:<7} {:>9} {:>9} {:>8} {:>12}", "load", "SC-compl", "DC-compl", "killed", "DC/SC-ta");
-    for (load, sc, dc) in sensitivity::across_loads(&cfg, dc_size, &loads) {
+    for (load, sc, dc) in sensitivity::across_loads(&cfg, dc_size, &loads)? {
         println!(
             "{:<7} {:>9} {:>9} {:>8} {:>12.2}",
             load,
@@ -192,7 +198,7 @@ fn cmd_sense(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args, which: &str) -> Result<()> {
     let cfg = base_config(args)?;
     let sizes = args.get_u64_list("sizes", &consolidation::PAPER_SIZES)?;
-    let results = consolidation::sweep(&cfg, &sizes);
+    let results = consolidation::sweep(&cfg, &sizes)?;
     match which {
         "fig7" => {
             println!("Fig 7 — completed jobs & avg turnaround vs cluster size");
@@ -234,7 +240,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
     let kmax = (args.get_u64("kmax", 8)? as usize).max(2);
     let ratio = args.get_f64("ratio", scale::default_ratio(&cfg))?;
-    if !(ratio > 0.0 && ratio <= 1.0) {
+    if !ratio.is_finite() || ratio <= 0.0 || ratio > 1.0 {
         bail!("--ratio must be in (0, 1], got {ratio}");
     }
     let lease_secs = args.get_u64("lease-secs", 3600)?;
@@ -249,7 +255,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
         policy.name(),
         ratio * 100.0
     );
-    let cells = scale::scale_sweep(&cfg, &ks, policy, ratio);
+    let cells = scale::scale_sweep(&cfg, &ks, policy, ratio)?;
     print!("{}", report::scale_text(&cells));
     let path = report::save_table(&scale::scale_table(&cells), "scale")?;
     println!("table written: {path}");
@@ -263,6 +269,59 @@ fn cmd_scale(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `phoenixd matrix`: the scenario-matrix sweep (tentpole of the
+/// N-department exploration layer). A config with `[[scenario]]` entries
+/// runs exactly those cells; otherwise the built-in grid up to `--kmax`
+/// runs (`--quick` for the CI smoke variant). Writes `out/matrix.csv` +
+/// `out/matrix.json` and pins the K=2 cooperative cell to the fig7/fig8
+/// anchor when the grid contains it.
+fn cmd_matrix(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let kmax = (args.get_u64("kmax", 8)? as usize).clamp(2, 64);
+    let quick = args.has("quick");
+    let cells = if cfg.scenarios.is_empty() {
+        let axes = if quick {
+            matrix::MatrixAxes::quick(&cfg, kmax)
+        } else {
+            matrix::MatrixAxes::full(&cfg, kmax)
+        };
+        println!(
+            "scenario matrix: {} rosters × {} Ks × {} policies × {} sizes ({} runs{})…",
+            axes.mixes.len(),
+            axes.ks.len(),
+            axes.policies.len(),
+            axes.size_fracs.len(),
+            axes.planned_runs(),
+            if quick { ", quick grid" } else { "" },
+        );
+        matrix::run_matrix(&cfg, &axes)?
+    } else {
+        println!("scenario matrix: {} [[scenario]] cells from the config…", cfg.scenarios.len());
+        matrix::run_scenarios(&cfg, &cfg.scenarios, &matrix::default_size_fracs(&cfg, quick))?
+    };
+    print!("{}", matrix::matrix_text(&cells));
+    std::fs::create_dir_all("out")?;
+    let json = matrix::matrix_json(&cells, quick);
+    std::fs::write("out/matrix.json", format!("{json}\n"))?;
+    std::fs::write("out/matrix.csv", matrix::matrix_csv(&cells))?;
+    println!("tables written: out/matrix.csv, out/matrix.json");
+    if matrix::verify_anchor(&cfg, &cells)? {
+        println!(
+            "anchor OK: K=2 cooperative cell at {} nodes is bit-identical to the \
+             fig7/fig8 DC run",
+            cfg.total_nodes
+        );
+    }
+    let unmet = cells.iter().filter(|c| c.required_nodes.is_none()).count();
+    println!(
+        "{}/{} cells met the SLO gate within the scanned sizes{}",
+        cells.len() - unmet,
+        cells.len(),
+        if unmet > 0 { " (see shortage columns for the rest)" } else { "" }
+    );
+    Ok(())
+}
+
 fn cmd_depts(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
     if cfg.departments.is_empty() {
@@ -271,7 +330,8 @@ fn cmd_depts(args: &Args) -> Result<()> {
              (see configs/departments.toml)"
         );
     }
-    let policy = cfg.policy.unwrap_or(PolicySpec::Cooperative);
+    let policy =
+        cfg.policy.clone().unwrap_or(PolicyChoice::Base(PolicySpec::Cooperative));
     println!(
         "running {} departments on one {}-node cluster under the {} policy…",
         cfg.departments.len(),
@@ -322,7 +382,7 @@ fn cmd_ablate(args: &Args) -> Result<()> {
     match args.get_or("what", "kill") {
         "kill" => {
             println!("kill-order ablation at DC-{}", cfg.total_nodes);
-            for (name, r) in ablations::kill_orders(&cfg) {
+            for (name, r) in ablations::kill_orders(&cfg)? {
                 println!(
                     "  {:<10} killed={:<5} completed={:<5} turnaround={:.0}s",
                     name, r.killed, r.completed, r.avg_turnaround
@@ -331,7 +391,7 @@ fn cmd_ablate(args: &Args) -> Result<()> {
         }
         "sched" => {
             println!("scheduler ablation at DC-{}", cfg.total_nodes);
-            for (name, r) in ablations::schedulers(&cfg) {
+            for (name, r) in ablations::schedulers(&cfg)? {
                 println!(
                     "  {:<10} completed={:<5} turnaround={:.0}s killed={}",
                     name, r.completed, r.avg_turnaround, r.killed
@@ -409,7 +469,7 @@ fn cmd_tracegen(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
     let out = args.get_or("out", "out/trace.txt").to_string();
     std::fs::create_dir_all(
-        std::path::Path::new(&out).parent().unwrap_or(std::path::Path::new(".")),
+        std::path::Path::new(&out).parent().unwrap_or_else(|| std::path::Path::new(".")),
     )?;
     match args.get_or("kind", "hpc") {
         "hpc" => {

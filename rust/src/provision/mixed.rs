@@ -1,0 +1,329 @@
+//! Per-tier policy mixes: one organization, different provisioning
+//! contracts per priority tier.
+//!
+//! The follow-up studies (arXiv:1006.1401 §IV, arXiv:1004.1276) observe
+//! that a large organization rarely runs *one* provisioning contract:
+//! premium departments keep cooperative priority while bulk batch tiers
+//! accept lease-style resizing. [`MixedPolicy`] composes the base
+//! [`ProvisionPolicy`] implementations along the tier axis: every
+//! department is routed — by its profile's `tier` — to one sub-policy,
+//! and the combinator merges their decisions while preserving the node
+//! conservation contract (`from_free + force_total + denied == need`,
+//! grants never exceed the free pool; property-tested alongside the base
+//! policies in `tests/properties.rs`).
+//!
+//! Routing rules:
+//! * `on_request` / `on_release` / `on_force` / `renewed` go to the
+//!   sub-policy owning the department's tier.
+//! * `idle_grants` partitions the eligible departments by owning
+//!   sub-policy and consults the partitions in **priority order** — the
+//!   sub-policy owning the highest-priority (lowest-tier) eligible
+//!   department goes first — so premium tiers see idle capacity before
+//!   lower, typically leased, tiers; the combined grant list is clamped
+//!   so the total never exceeds the free pool. A clamped lease-based
+//!   sub-policy may book slightly more than was actually granted; the
+//!   driver already treats lease books as advisory (reclaims are capped
+//!   by the department's idle nodes, renewals by its busy nodes), so
+//!   stale entries expire harmlessly.
+//! * `expired` / `next_expiry` merge across every sub-policy.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{DeptId, Ledger};
+use crate::sim::SimTime;
+
+use super::policy::{DeptProfile, PolicySpec, ProvisionDecision, ProvisionPolicy};
+
+/// One rule of a mixed policy: departments on `tier` follow `spec`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierRule {
+    pub tier: u8,
+    pub spec: PolicySpec,
+}
+
+/// Declarative policy selection covering both the base policies and the
+/// per-tier mixes — the parsed form of the `[policy]` config section
+/// (`kind = "mixed"` adds `[[policy.tier]]` rules).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PolicyChoice {
+    /// One base policy for every department.
+    Base(PolicySpec),
+    /// Per-tier rules over a default base policy.
+    Mixed {
+        default: PolicySpec,
+        rules: Vec<TierRule>,
+    },
+}
+
+impl PolicyChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyChoice::Base(spec) => spec.name(),
+            PolicyChoice::Mixed { .. } => "mixed",
+        }
+    }
+
+    /// Instantiate over the given department profiles.
+    pub fn build(&self, depts: &[DeptProfile]) -> Box<dyn ProvisionPolicy> {
+        match self {
+            PolicyChoice::Base(spec) => spec.build(depts),
+            PolicyChoice::Mixed { default, rules } => {
+                Box::new(MixedPolicy::new(depts.to_vec(), rules.clone(), *default))
+            }
+        }
+    }
+
+    /// Every lease term this choice carries (validation helper).
+    pub fn lease_terms(&self) -> Vec<u64> {
+        let term = |spec: &PolicySpec| match spec {
+            PolicySpec::Lease { secs } => Some(*secs),
+            _ => None,
+        };
+        match self {
+            PolicyChoice::Base(spec) => term(spec).into_iter().collect(),
+            PolicyChoice::Mixed { default, rules } => term(default)
+                .into_iter()
+                .chain(rules.iter().filter_map(|r| term(&r.spec)))
+                .collect(),
+        }
+    }
+}
+
+/// The per-tier combinator. Each sub-policy is built over the *full*
+/// profile roster (so a cooperative service tier may still force-reclaim
+/// from any batch department, whatever contract the victim's tier runs);
+/// only the *routing* of requests, releases, and bookkeeping is per tier.
+#[derive(Debug)]
+pub struct MixedPolicy {
+    depts: Vec<DeptProfile>,
+    /// Sub-policies, rule order first, the default last.
+    subs: Vec<Box<dyn ProvisionPolicy>>,
+    /// tier → index into `subs`; unlisted tiers use the default (last).
+    routes: BTreeMap<u8, usize>,
+}
+
+impl MixedPolicy {
+    pub fn new(depts: Vec<DeptProfile>, rules: Vec<TierRule>, default: PolicySpec) -> Self {
+        let mut subs: Vec<Box<dyn ProvisionPolicy>> = Vec::with_capacity(rules.len() + 1);
+        let mut routes = BTreeMap::new();
+        for rule in &rules {
+            // later rules override earlier ones for the same tier
+            routes.insert(rule.tier, subs.len());
+            subs.push(rule.spec.build(&depts));
+        }
+        subs.push(default.build(&depts));
+        Self { depts, subs, routes }
+    }
+
+    /// Which sub-policy owns `dept` (default for unknown departments).
+    fn route(&self, dept: DeptId) -> usize {
+        let default = self.subs.len() - 1;
+        self.depts
+            .iter()
+            .find(|p| p.id == dept)
+            .and_then(|p| self.routes.get(&p.tier).copied())
+            .unwrap_or(default)
+    }
+}
+
+impl ProvisionPolicy for MixedPolicy {
+    fn name(&self) -> &str {
+        "mixed"
+    }
+
+    fn on_request(
+        &mut self,
+        dept: DeptId,
+        need: u64,
+        ledger: &Ledger,
+        now: SimTime,
+    ) -> ProvisionDecision {
+        let sub = self.route(dept);
+        self.subs[sub].on_request(dept, need, ledger, now)
+    }
+
+    fn idle_grants(
+        &mut self,
+        ledger: &Ledger,
+        eligible: &[DeptId],
+        now: SimTime,
+    ) -> Vec<(DeptId, u64)> {
+        let mut remaining = ledger.free();
+        let mut out = Vec::new();
+        let owners: Vec<usize> = eligible.iter().map(|&d| self.route(d)).collect();
+        // visit each sub-policy's partition in priority order: the one
+        // owning the highest-priority (lowest-tier) eligible department
+        // first, ties to the earlier rule — premium tiers must not be
+        // starved by a lower, leased tier draining the pool first
+        let tier_of = |d: DeptId| {
+            self.depts.iter().find(|p| p.id == d).map(|p| p.tier).unwrap_or(u8::MAX)
+        };
+        let mut order: Vec<(u8, usize)> = Vec::new();
+        for (&d, &o) in eligible.iter().zip(&owners) {
+            let t = tier_of(d);
+            match order.iter_mut().find(|&&mut (_, sub)| sub == o) {
+                Some(entry) => entry.0 = entry.0.min(t),
+                None => order.push((t, o)),
+            }
+        }
+        order.sort_by_key(|&(t, sub)| (t, sub));
+        for (_, sub) in order {
+            if remaining == 0 {
+                break;
+            }
+            let mine: Vec<DeptId> = eligible
+                .iter()
+                .zip(&owners)
+                .filter(|&(_, &o)| o == sub)
+                .map(|(&d, _)| d)
+                .collect();
+            for (d, n) in self.subs[sub].idle_grants(ledger, &mine, now) {
+                let n = n.min(remaining);
+                if n > 0 {
+                    remaining -= n;
+                    out.push((d, n));
+                }
+            }
+        }
+        out
+    }
+
+    fn on_release(&mut self, dept: DeptId, n: u64, now: SimTime) {
+        let sub = self.route(dept);
+        self.subs[sub].on_release(dept, n, now);
+    }
+
+    fn on_force(&mut self, victim: DeptId, n: u64, now: SimTime) {
+        let sub = self.route(victim);
+        self.subs[sub].on_force(victim, n, now);
+    }
+
+    fn expired(&mut self, now: SimTime) -> Vec<(DeptId, u64)> {
+        let mut total: BTreeMap<DeptId, u64> = BTreeMap::new();
+        for sub in &mut self.subs {
+            for (d, n) in sub.expired(now) {
+                *total.entry(d).or_insert(0) += n;
+            }
+        }
+        total.into_iter().collect()
+    }
+
+    fn renewed(&mut self, dept: DeptId, n: u64, now: SimTime) {
+        let sub = self.route(dept);
+        self.subs[sub].renewed(dept, n, now);
+    }
+
+    fn next_expiry(&self) -> Option<SimTime> {
+        self.subs.iter().filter_map(|s| s.next_expiry()).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeptKind;
+
+    /// service tier 0 + batch tiers 1 and 2.
+    fn three_tier_depts() -> Vec<DeptProfile> {
+        vec![
+            DeptProfile { id: DeptId(0), kind: DeptKind::Service, tier: 0, quota: 64 },
+            DeptProfile { id: DeptId(1), kind: DeptKind::Batch, tier: 1, quota: 100 },
+            DeptProfile { id: DeptId(2), kind: DeptKind::Batch, tier: 2, quota: 100 },
+        ]
+    }
+
+    fn mixed_lease_bottom() -> MixedPolicy {
+        MixedPolicy::new(
+            three_tier_depts(),
+            vec![TierRule { tier: 2, spec: PolicySpec::Lease { secs: 100 } }],
+            PolicySpec::Cooperative,
+        )
+    }
+
+    #[test]
+    fn routes_by_tier_and_defaults() {
+        let p = mixed_lease_bottom();
+        assert_eq!(p.route(DeptId(2)), 0, "tier-2 rule");
+        assert_eq!(p.route(DeptId(0)), 1, "tier 0 falls to the default");
+        assert_eq!(p.route(DeptId(1)), 1);
+        assert_eq!(p.route(DeptId(9)), 1, "unknown departments use the default");
+        assert_eq!(p.name(), "mixed");
+    }
+
+    #[test]
+    fn leased_tier_books_grants_and_cooperative_tier_does_not() {
+        let mut p = mixed_lease_bottom();
+        let mut l = Ledger::new(40, 3);
+        l.grant(DeptId(0), 10).unwrap(); // 30 free
+        // only the tier-2 department is eligible: its grant carries a lease
+        let grants = p.idle_grants(&l, &[DeptId(2)], 0);
+        assert_eq!(grants, vec![(DeptId(2), 30)]);
+        assert_eq!(p.next_expiry(), Some(100));
+        assert_eq!(p.expired(100), vec![(DeptId(2), 30)]);
+        // the tier-1 (cooperative) department books nothing
+        let grants = p.idle_grants(&l, &[DeptId(1)], 0);
+        assert_eq!(grants, vec![(DeptId(1), 30)]);
+        assert_eq!(p.next_expiry(), None);
+    }
+
+    #[test]
+    fn combined_idle_grants_never_exceed_free_pool_and_favor_premium_tiers() {
+        let mut p = mixed_lease_bottom();
+        let mut l = Ledger::new(20, 3);
+        l.grant(DeptId(0), 5).unwrap(); // 15 free
+        // both batch departments eligible, owned by different sub-policies:
+        // each sub would grant the whole pool to its subset; the combinator
+        // must clamp the union to 15 — and the premium (tier-1, default
+        // cooperative) department is served before the leased bottom tier
+        let grants = p.idle_grants(&l, &[DeptId(1), DeptId(2)], 0);
+        let total: u64 = grants.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 15, "{grants:?}");
+        assert_eq!(grants, vec![(DeptId(1), 15)], "premium tier must be served first");
+        assert_eq!(p.next_expiry(), None, "nothing reached the leased tier");
+    }
+
+    #[test]
+    fn requests_follow_the_owning_tier_contract() {
+        let mut p = mixed_lease_bottom();
+        let mut l = Ledger::new(30, 3);
+        l.grant(DeptId(1), 20).unwrap();
+        l.grant(DeptId(2), 10).unwrap();
+        // the service department routes to cooperative: free pool (0) then
+        // force from the batch departments, largest holdings first
+        let d = p.on_request(DeptId(0), 25, &l, 5);
+        assert_eq!(d.from_free, 0);
+        assert_eq!(d.force, vec![(DeptId(1), 20), (DeptId(2), 5)]);
+        assert_eq!(d.denied, 0);
+        // forcing the leased tier drops its book entries
+        p.idle_grants(&Ledger::new(8, 3), &[DeptId(2)], 10);
+        p.on_force(DeptId(2), 8, 20);
+        assert_eq!(p.next_expiry(), None, "stale lease survived the force");
+    }
+
+    #[test]
+    fn renewals_route_to_the_leasing_sub_policy() {
+        let mut p = mixed_lease_bottom();
+        let l = Ledger::new(12, 3);
+        p.idle_grants(&l, &[DeptId(2)], 0); // leased until 100
+        assert_eq!(p.expired(100), vec![(DeptId(2), 12)]);
+        p.renewed(DeptId(2), 7, 100);
+        assert_eq!(p.next_expiry(), Some(200));
+        assert_eq!(p.expired(200), vec![(DeptId(2), 7)]);
+    }
+
+    #[test]
+    fn choice_builds_base_and_mixed() {
+        let depts = three_tier_depts();
+        let base = PolicyChoice::Base(PolicySpec::Tiered);
+        assert_eq!(base.name(), "tiered");
+        assert_eq!(base.build(&depts).name(), "tiered");
+        let mixed = PolicyChoice::Mixed {
+            default: PolicySpec::Cooperative,
+            rules: vec![TierRule { tier: 2, spec: PolicySpec::Lease { secs: 60 } }],
+        };
+        assert_eq!(mixed.name(), "mixed");
+        assert_eq!(mixed.build(&depts).name(), "mixed");
+        assert_eq!(mixed.lease_terms(), vec![60]);
+        assert!(base.lease_terms().is_empty());
+    }
+}

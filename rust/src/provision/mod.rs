@@ -6,11 +6,13 @@
 //! request, release, idle grant, and lease expiration is keyed by
 //! [`DeptId`].
 
+pub mod mixed;
 pub mod policy;
 
 use crate::cluster::{DeptId, Ledger};
 use crate::sim::SimTime;
 
+pub use self::mixed::{MixedPolicy, PolicyChoice, TierRule};
 pub use self::policy::{
     two_dept_profiles, Cooperative, DeptProfile, LeaseBased, PolicySpec, ProportionalShare,
     ProvisionDecision, ProvisionPolicy, StaticPartition, TieredCooperative,

@@ -21,6 +21,9 @@
 //!   force-reclaims cascade down the tier order (a requester may only
 //!   reclaim from strictly lower-priority departments).
 //!
+//! Per-tier *mixes* of these policies live in the sibling
+//! [`crate::provision::mixed`] module ([`crate::provision::MixedPolicy`]).
+//!
 //! # Implementing a custom policy
 //!
 //! ```
@@ -267,7 +270,7 @@ fn split_even(free: u64, eligible: &[DeptId]) -> Vec<(DeptId, u64)> {
         .collect()
 }
 
-fn batch_profiles<'a>(depts: &'a [DeptProfile]) -> Vec<&'a DeptProfile> {
+fn batch_profiles(depts: &[DeptProfile]) -> Vec<&DeptProfile> {
     depts.iter().filter(|p| p.kind == DeptKind::Batch).collect()
 }
 
@@ -463,6 +466,15 @@ impl ProvisionPolicy for ProportionalShare {
 /// the department's *idle* leased nodes to the free pool (busy nodes renew
 /// for another term), so the free pool periodically recovers capacity and
 /// urgent service claims can often be served without killing jobs.
+///
+/// A zero-second term is a degenerate but well-defined edge (the
+/// lease-term sensitivity grid in `experiments::matrix` sweeps toward it):
+/// no node can be held on a lease of zero length, so every would-be leased
+/// grant is *refused* — idle grants return empty, batch-side requests are
+/// denied in full — rather than handed out untracked. Nothing is ever
+/// recorded in the lease book, so nothing can leak (property-tested by
+/// `prop_lease_zero_term_rejects_and_never_leaks`). Service-side requests
+/// are unaffected: service holdings are never leased.
 #[derive(Debug)]
 pub struct LeaseBased {
     depts: Vec<DeptProfile>,
@@ -473,7 +485,6 @@ pub struct LeaseBased {
 
 impl LeaseBased {
     pub fn new(depts: Vec<DeptProfile>, lease: u64) -> Self {
-        assert!(lease > 0, "lease term must be positive");
         Self { depts, lease, leases: BTreeMap::new() }
     }
 
@@ -529,9 +540,16 @@ impl ProvisionPolicy for LeaseBased {
         ledger: &Ledger,
         now: SimTime,
     ) -> ProvisionDecision {
+        let batch_requester =
+            profile(&self.depts, dept).is_some_and(|p| p.kind == DeptKind::Batch);
+        if self.lease == 0 && batch_requester {
+            // a zero-length lease cannot hold any node: refuse instead of
+            // granting capacity the lease book could never reclaim
+            return ProvisionDecision::none(need);
+        }
         // same flow as Cooperative, plus a lease on any batch-side grant
         let d = cooperative_decision(&self.depts, dept, need, ledger);
-        if profile(&self.depts, dept).map(|p| p.kind) == Some(DeptKind::Batch) {
+        if batch_requester {
             self.record(dept, d.from_free, now);
         }
         d
@@ -543,6 +561,9 @@ impl ProvisionPolicy for LeaseBased {
         eligible: &[DeptId],
         now: SimTime,
     ) -> Vec<(DeptId, u64)> {
+        if self.lease == 0 {
+            return Vec::new(); // see the zero-term note on [`LeaseBased`]
+        }
         let grants = split_even(ledger.free(), eligible);
         for &(d, n) in &grants {
             self.record(d, n, now);
@@ -642,30 +663,24 @@ impl ProvisionPolicy for TieredCooperative {
         eligible: &[DeptId],
         _now: SimTime,
     ) -> Vec<(DeptId, u64)> {
-        // idle capacity favors higher-priority batch departments: fill the
-        // top tier evenly, then the next, and so on
-        let mut remaining = ledger.free();
-        let mut out: Vec<(DeptId, u64)> = Vec::new();
+        // idle capacity favors higher-priority batch departments: the
+        // highest-priority (lowest-tier) eligible group splits the whole
+        // pool evenly; lower tiers see idle capacity only when no
+        // higher-priority department is eligible for it
         let mut by_tier: Vec<(u8, DeptId)> = eligible
             .iter()
             .map(|&d| (profile(&self.depts, d).map(|p| p.tier).unwrap_or(u8::MAX), d))
             .collect();
         by_tier.sort();
-        let mut i = 0;
-        while i < by_tier.len() && remaining > 0 {
-            let tier = by_tier[i].0;
-            let group: Vec<DeptId> = by_tier[i..]
-                .iter()
-                .take_while(|&&(t, _)| t == tier)
-                .map(|&(_, d)| d)
-                .collect();
-            i += group.len();
-            for (d, n) in split_even(remaining, &group) {
-                remaining -= n;
-                out.push((d, n));
-            }
-        }
-        out
+        let Some(&(top, _)) = by_tier.first() else {
+            return Vec::new();
+        };
+        let group: Vec<DeptId> = by_tier
+            .iter()
+            .take_while(|&&(t, _)| t == top)
+            .map(|&(_, d)| d)
+            .collect();
+        split_even(ledger.free(), &group)
     }
 }
 

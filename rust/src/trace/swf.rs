@@ -12,92 +12,129 @@
 //! 13 group id         14 executable     15 queue         16 partition
 //! 17 preceding job    18 think time
 //! ```
+//!
+//! Parsing is **strict**: the integer fields the simulator consumes must
+//! be integers (the seed parsed them through `f64` and cast with `as
+//! i64`, silently truncating `2.7` to 2 and saturating overflows), and a
+//! malformed field fails with the line number and field name. The SWF
+//! spec's `-1` sentinel ("unknown / not collected") is decoded
+//! explicitly into `None` for the fields where the spec allows it —
+//! unknown durations and counts never flow into the simulator as
+//! negative or wrapped values.
 
 use anyhow::{bail, Context, Result};
 
 use crate::workload::Job;
 
-/// One raw SWF record (fields we keep).
-#[derive(Debug, Clone, PartialEq)]
+/// One raw SWF record (fields we keep). `None` = the archive's `-1`
+/// sentinel (unknown), per the SWF spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SwfRecord {
     pub job_id: u64,
-    pub submit: i64,
-    pub wait: i64,
-    pub runtime: i64,
-    pub alloc_procs: i64,
-    pub req_procs: i64,
-    pub req_time: i64,
-    pub status: i64,
+    /// Submission time, seconds from the log epoch.
+    pub submit: u64,
+    /// Wait time in the queue (unknown in many archives).
+    pub wait: Option<u64>,
+    /// Actual runtime; unknown/cancelled entries carry `None`.
+    pub runtime: Option<u64>,
+    pub alloc_procs: Option<u64>,
+    pub req_procs: Option<u64>,
+    pub req_time: Option<u64>,
+    /// SWF status code (1 = completed; unknown allowed).
+    pub status: Option<i64>,
 }
 
-/// Parse SWF text. Records with non-positive runtime or no processor count
-/// are dropped (cancelled entries), matching standard archive practice.
+/// Parse one whitespace-split SWF field strictly: an integer, with `-1`
+/// (and only `-1`) decoding to `None`.
+fn sentinel_field(raw: &str, lineno: usize, field: usize, name: &str) -> Result<Option<u64>> {
+    let v: i64 = raw.parse().map_err(|_| {
+        anyhow::anyhow!(
+            "swf line {lineno}: field {field} ({name}): expected an integer, got '{raw}'"
+        )
+    })?;
+    match v {
+        -1 => Ok(None),
+        v if v < 0 => bail!(
+            "swf line {lineno}: field {field} ({name}): negative value {v} \
+             (only the -1 unknown-sentinel is allowed)"
+        ),
+        v => Ok(Some(v as u64)),
+    }
+}
+
+/// Parse SWF text strictly. Comment (`;`) and blank lines are skipped;
+/// every other line must carry at least 11 fields whose consumed columns
+/// parse as integers (see the module docs for the sentinel rules).
 pub fn parse(text: &str) -> Result<Vec<SwfRecord>> {
     let mut out = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
+    for (idx, line) in text.lines().enumerate() {
+        let lineno = idx + 1;
         let line = line.trim();
         if line.is_empty() || line.starts_with(';') {
             continue;
         }
         let fields: Vec<&str> = line.split_whitespace().collect();
         if fields.len() < 11 {
-            bail!("swf line {}: expected >=11 fields, got {}", lineno + 1, fields.len());
+            bail!("swf line {lineno}: expected >=11 fields, got {}", fields.len());
         }
-        let f = |i: usize| -> Result<i64> {
-            fields[i]
-                .parse::<f64>()
-                .map(|v| v as i64)
-                .with_context(|| format!("swf line {}: field {}", lineno + 1, i + 1))
-        };
-        let rec = SwfRecord {
-            job_id: f(0)? as u64,
-            submit: f(1)?,
-            wait: f(2)?,
-            runtime: f(3)?,
-            alloc_procs: f(4)?,
-            req_procs: f(7)?,
-            req_time: f(8)?,
-            status: f(10)?,
-        };
-        out.push(rec);
+        let f = |i: usize, name: &str| sentinel_field(fields[i], lineno, i + 1, name);
+        let job_id = f(0, "job number")?
+            .with_context(|| format!("swf line {lineno}: job number cannot be unknown"))?;
+        let submit = f(1, "submit time")?
+            .with_context(|| format!("swf line {lineno}: submit time cannot be unknown"))?;
+        let status = f(10, "status")?.map(|v| v as i64);
+        out.push(SwfRecord {
+            job_id,
+            submit,
+            wait: f(2, "wait time")?,
+            runtime: f(3, "run time")?,
+            alloc_procs: f(4, "allocated processors")?,
+            req_procs: f(7, "requested processors")?,
+            req_time: f(8, "requested time")?,
+            status,
+        });
     }
     Ok(out)
 }
 
 /// Convert SWF records to simulator [`Job`]s.
 ///
+/// * records with an unknown or zero runtime are dropped (cancelled /
+///   never-ran entries, matching standard archive practice) — explicitly,
+///   via the `None` sentinel, never as a negative duration;
 /// * `procs_per_node`: SDSC BLUE logs processors (8 per node on Blue
-///   Horizon); the paper's unit is nodes, so sizes are divided (ceil).
+///   Horizon); the paper's unit is nodes, so sizes are divided (ceil);
 /// * `window`: keep only jobs submitted in `[start, start+len)`, re-based
 ///   to 0 — the paper uses a two-week slice.
 pub fn to_jobs(
     records: &[SwfRecord],
     procs_per_node: u64,
-    window: Option<(i64, i64)>,
+    window: Option<(u64, u64)>,
 ) -> Vec<Job> {
     let mut jobs = Vec::new();
     for r in records {
-        if r.runtime <= 0 {
-            continue;
-        }
-        let procs = if r.alloc_procs > 0 { r.alloc_procs } else { r.req_procs };
-        if procs <= 0 {
-            continue;
-        }
+        let Some(runtime) = r.runtime.filter(|&rt| rt > 0) else {
+            continue; // unknown (-1) or zero runtime: nothing to simulate
+        };
+        // prefer the allocation the log observed; fall back to the request
+        let procs = match (r.alloc_procs.filter(|&p| p > 0), r.req_procs.filter(|&p| p > 0)) {
+            (Some(p), _) => p,
+            (None, Some(p)) => p,
+            (None, None) => continue, // no processor count at all
+        };
         if let Some((start, len)) = window {
-            if r.submit < start || r.submit >= start + len {
+            if r.submit < start || r.submit >= start.saturating_add(len) {
                 continue;
             }
         }
         let base = window.map(|(s, _)| s).unwrap_or(0);
-        let size = (procs as u64).div_ceil(procs_per_node);
-        let runtime = r.runtime as u64;
         jobs.push(Job {
             id: r.job_id,
-            submit: (r.submit - base).max(0) as u64,
-            size,
+            submit: r.submit - base,
+            size: procs.div_ceil(procs_per_node),
             runtime,
-            requested: if r.req_time > 0 { r.req_time as u64 } else { runtime },
+            // unknown requested time: assume the job ran to its limit
+            requested: r.req_time.filter(|&t| t > 0).unwrap_or(runtime),
         });
     }
     jobs.sort_by_key(|j| (j.submit, j.id));
@@ -124,7 +161,7 @@ pub fn write(jobs: &[Job], procs_per_node: u64) -> String {
 }
 
 /// Load and convert a `.swf` file.
-pub fn load_file(path: &str, procs_per_node: u64, window: Option<(i64, i64)>) -> Result<Vec<Job>> {
+pub fn load_file(path: &str, procs_per_node: u64, window: Option<(u64, u64)>) -> Result<Vec<Job>> {
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let recs = parse(&text)?;
     Ok(to_jobs(&recs, procs_per_node, window))
@@ -148,18 +185,30 @@ mod tests {
         let recs = parse(SAMPLE).unwrap();
         assert_eq!(recs.len(), 4);
         assert_eq!(recs[0].job_id, 1);
-        assert_eq!(recs[1].alloc_procs, 16);
+        assert_eq!(recs[1].alloc_procs, Some(16));
+        // the -1 sentinel decodes to None, not a negative duration
+        assert_eq!(recs[2].runtime, None);
+        assert_eq!(recs[0].wait, Some(5));
     }
 
     #[test]
     fn to_jobs_converts_and_filters() {
         let recs = parse(SAMPLE).unwrap();
         let jobs = to_jobs(&recs, 8, None);
-        // job 3 (runtime -1) and job 4 (0 procs) dropped
+        // job 3 (unknown runtime) and job 4 (0 procs) dropped
         assert_eq!(jobs.len(), 2);
         assert_eq!(jobs[0].size, 1); // 8 procs / 8 per node
         assert_eq!(jobs[1].size, 2);
         assert_eq!(jobs[0].requested, 120);
+    }
+
+    #[test]
+    fn unknown_requested_time_falls_back_to_runtime() {
+        let recs =
+            parse("7 5 -1 300 4 -1 -1 4 -1 -1 1 -1 -1 -1 -1 -1 -1 -1\n").unwrap();
+        assert_eq!(recs[0].req_time, None);
+        let jobs = to_jobs(&recs, 1, None);
+        assert_eq!(jobs[0].requested, 300);
     }
 
     #[test]
@@ -183,5 +232,45 @@ mod tests {
     #[test]
     fn rejects_short_lines() {
         assert!(parse("1 2 3\n").is_err());
+    }
+
+    /// The seed parsed through `f64` + `as i64`: "2.7" silently became 2
+    /// and "1e300" saturated. Strict parsing rejects both, naming the
+    /// line and field.
+    #[test]
+    fn rejects_non_integer_fields_with_line_and_field() {
+        let bad = "; header\n1 10 0 2.7 8 -1 -1 8 120 -1 1\n";
+        let err = parse(bad).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("field 4 (run time)"), "{err}");
+        assert!(err.contains("'2.7'"), "{err}");
+        let overflow = "1 10 0 1e300 8 -1 -1 8 120 -1 1\n";
+        assert!(parse(overflow).is_err());
+        let garbage = "1 10 0 abc 8 -1 -1 8 120 -1 1\n";
+        assert!(parse(garbage).is_err());
+    }
+
+    /// `-1` is the only negative the spec allows; `-2` is corruption, and
+    /// unknown job ids / submit times are unusable.
+    #[test]
+    fn rejects_malformed_sentinels() {
+        let neg = "1 10 0 -2 8 -1 -1 8 120 -1 1\n";
+        let err = parse(neg).unwrap_err().to_string();
+        assert!(err.contains("-1 unknown-sentinel"), "{err}");
+        let unknown_id = "-1 10 0 50 8 -1 -1 8 120 -1 1\n";
+        assert!(parse(unknown_id).unwrap_err().to_string().contains("job number"));
+        let unknown_submit = "1 -1 0 50 8 -1 -1 8 120 -1 1\n";
+        assert!(parse(unknown_submit).unwrap_err().to_string().contains("submit time"));
+        // status obeys the same sentinel rule: -1 unknown, other negatives bail
+        let bad_status = "1 10 0 50 8 -1 -1 8 120 -1 -2\n";
+        assert!(parse(bad_status).unwrap_err().to_string().contains("status"));
+    }
+
+    #[test]
+    fn unknown_status_is_explicit() {
+        let recs = parse("1 10 0 50 8 -1 -1 8 120 -1 -1\n").unwrap();
+        assert_eq!(recs[0].status, None);
+        let recs = parse("1 10 0 50 8 -1 -1 8 120 -1 1\n").unwrap();
+        assert_eq!(recs[0].status, Some(1));
     }
 }

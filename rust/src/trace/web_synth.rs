@@ -62,7 +62,7 @@ impl RateSeries {
     /// Rate at absolute time `t` (step function).
     pub fn at(&self, t: u64) -> f64 {
         let idx = (t / self.sample_period) as usize;
-        *self.rates.get(idx).unwrap_or(self.rates.last().unwrap_or(&0.0))
+        self.rates.get(idx).or_else(|| self.rates.last()).copied().unwrap_or(0.0)
     }
 
     pub fn len_secs(&self) -> u64 {
@@ -98,7 +98,7 @@ fn diurnal(t: u64) -> f64 {
 fn match_shape(dt_secs: i64) -> f64 {
     let ramp = 30 * MINUTE as i64;
     let hold = 105 * MINUTE as i64;
-    if dt_secs < -ramp || dt_secs > hold + 4 * 3600 {
+    if !(-ramp..=hold + 4 * 3600).contains(&dt_secs) {
         0.0
     } else if dt_secs < 0 {
         1.0 + dt_secs as f64 / ramp as f64 // rising edge

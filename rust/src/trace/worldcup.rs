@@ -108,7 +108,7 @@ pub fn load_dir(dir: &str, sample_period: u64, scale: f64) -> Result<RateSeries>
         .with_context(|| format!("reading {dir}"))?
         .filter_map(|e| e.ok())
         .map(|e| e.path())
-        .filter(|p| p.file_name().map(|n| n.to_string_lossy().starts_with("wc_day")) == Some(true))
+        .filter(|p| p.file_name().is_some_and(|n| n.to_string_lossy().starts_with("wc_day")))
         .collect();
     if paths.is_empty() {
         bail!("no wc_day* files in {dir}");

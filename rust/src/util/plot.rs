@@ -58,12 +58,12 @@ pub fn line_chart(points: &[(f64, f64)], width: usize, height: usize, title: &st
         out.push_str(&row.iter().collect::<String>());
         out.push('\n');
     }
+    let xlabel = format!("{xmin:.0} … {xmax:.0}");
     out.push_str(&format!(
-        "{:>9}└{}\n{:>10}{:<width$}\n",
+        "{:>9}└{}\n{:>10}{xlabel:<width$}\n",
         "",
         "─".repeat(width),
         "",
-        format!("{xmin:.0} … {xmax:.0}"),
     ));
     out
 }

@@ -80,12 +80,10 @@ impl WsServer {
         }
         self.last_change = now;
         self.demand = demand;
-        if self.holding > demand {
-            WsAction::Release(self.holding - demand)
-        } else if self.holding < demand {
-            WsAction::Request(demand - self.holding)
-        } else {
-            WsAction::None
+        match self.holding.cmp(&demand) {
+            std::cmp::Ordering::Greater => WsAction::Release(self.holding - demand),
+            std::cmp::Ordering::Less => WsAction::Request(demand - self.holding),
+            std::cmp::Ordering::Equal => WsAction::None,
         }
     }
 

@@ -17,7 +17,7 @@ use phoenix_cloud::wscms::autoscaler::Reactive;
 #[test]
 fn paper_sweep_reproduces_figure_shapes() {
     let base = ExperimentConfig::default();
-    let results = consolidation::sweep(&base, &consolidation::PAPER_SIZES);
+    let results = consolidation::sweep(&base, &consolidation::PAPER_SIZES).unwrap();
     assert_eq!(results.len(), 7);
     let sc = &results[0];
 
@@ -109,7 +109,7 @@ fn config_file_drives_the_simulation() {
     let cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
     assert_eq!(cfg.total_nodes, 170);
     assert_eq!(cfg.horizon, 86_400);
-    let r = consolidation::run_one(cfg);
+    let r = consolidation::run_one(cfg).unwrap();
     assert_eq!(r.submitted, 150);
     assert!(r.completed > 0);
 }
@@ -155,6 +155,58 @@ fn department_config_drives_a_k3_lease_run() {
     );
 }
 
+/// The shipped scenario config parses, validates, and names runnable
+/// cells (the cells themselves are exercised on fast configs in the
+/// matrix unit tests; `phoenixd matrix --config` is the CLI path).
+#[test]
+fn shipped_scenario_config_parses_and_validates() {
+    let cfg = ExperimentConfig::from_file("configs/scenarios.toml").unwrap();
+    assert_eq!(cfg.scenarios.len(), 4);
+    let names: Vec<&str> = cfg.scenarios.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, vec!["paper-pair", "portal-farm", "hpc-shop-short-lease", "tiered-80pct"]);
+    assert_eq!(cfg.scenarios[1].policy_kind, "mixed");
+    assert_eq!(cfg.scenarios[2].lease_secs, 600);
+    assert_eq!(cfg.scenarios[3].frac, Some(0.8));
+    // the shipped departments roster still parses too
+    let cfg = ExperimentConfig::from_file("configs/departments.toml").unwrap();
+    assert_eq!(cfg.departments.len(), 4);
+}
+
+/// A `[[scenario]]` config drives the matrix end to end, exactly as
+/// `phoenixd matrix --config` runs it: declared cells replace the grid,
+/// and their tables carry the per-department breakdown.
+#[test]
+fn scenario_config_drives_the_matrix() {
+    use phoenix_cloud::experiments::matrix;
+
+    let dir = std::env::temp_dir().join("phoenix_it_matrix");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scenarios.toml");
+    std::fs::write(
+        &path,
+        "horizon = 86_400\n\n[hpc]\nnum_jobs = 150\n\n\
+         [[scenario]]\nname = \"pair\"\nk = 2\npolicy = \"cooperative\"\nfrac = 0.8\n\n\
+         [[scenario]]\nname = \"farm\"\nk = 3\nmix = \"service-heavy\"\npolicy = \"mixed\"\n\
+         lease_secs = 900\n",
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.scenarios.len(), 2);
+    let cells = matrix::run_scenarios(&cfg, &cfg.scenarios, &[1.0, 0.8]).unwrap();
+    assert_eq!(cells.len(), 2);
+    assert_eq!(cells[0].name, "pair");
+    assert_eq!(cells[0].runs.len(), 1, "frac pins one size");
+    assert_eq!(cells[1].per_dept.len(), 3);
+    assert_eq!(cells[1].policy, "mixed");
+    for c in &cells {
+        assert!(c.runs.iter().all(|r| r.events > 0), "{}", c.name);
+    }
+    // the JSON table the CLI writes round-trips through the parser
+    let json = matrix::matrix_json(&cells, false).to_string();
+    let doc = phoenix_cloud::util::json::Json::parse(&json).unwrap();
+    assert_eq!(doc.get("cells").unwrap().as_arr().unwrap().len(), 2);
+}
+
 /// The economies-of-scale sweep emits a consolidated-vs-dedicated row for
 /// every K and the table export matches the cells.
 #[test]
@@ -168,7 +220,7 @@ fn scale_sweep_consolidated_vs_dedicated_rows() {
     cfg.web.horizon = DAY;
     cfg.hpc.num_jobs = 200;
     let ks = [2, 3, 4, 5];
-    let cells = scale::scale_sweep(&cfg, &ks, PolicySpec::Cooperative, 0.8);
+    let cells = scale::scale_sweep(&cfg, &ks, PolicySpec::Cooperative, 0.8).unwrap();
     assert_eq!(cells.len(), ks.len());
     for (c, &k) in cells.iter().zip(&ks) {
         assert_eq!(c.k, k);
@@ -187,7 +239,7 @@ fn report_tables_consistent_with_runs() {
     cfg.hpc.horizon = DAY;
     cfg.web.horizon = DAY;
     cfg.hpc.num_jobs = 200;
-    let results = consolidation::sweep(&cfg, &[180, 160]);
+    let results = consolidation::sweep(&cfg, &[180, 160]).unwrap();
     let t7 = consolidation::fig7_table(&results);
     let t8 = consolidation::fig8_table(&results);
     assert_eq!(t7.rows.len(), 3);

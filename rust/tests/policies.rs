@@ -39,7 +39,7 @@ fn ws_priority_is_absolute_under_cooperation() {
     for d in demand.iter_mut().skip(10) {
         *d = 30;
     }
-    let res = ConsolidationSim::new(cfg, jobs, demand).run();
+    let res = ConsolidationSim::new(cfg, jobs, demand).run().unwrap();
     assert!(res.killed > 0, "saturated ST must kill for the spike");
     assert_eq!(res.ws_shortage_node_secs, 0, "WS must be made whole");
     assert_eq!(res.registry.counter_value("ws.denied"), 0);
@@ -59,7 +59,7 @@ fn static_partition_denies_instead_of_killing() {
     for d in demand.iter_mut().skip(10) {
         *d = 30; // beyond the 10-node partition
     }
-    let res = ConsolidationSim::new(cfg, jobs, demand).run();
+    let res = ConsolidationSim::new(cfg, jobs, demand).run().unwrap();
     assert_eq!(res.killed, 0);
     assert!(res.registry.counter_value("ws.denied") > 0);
     assert!(res.ws_shortage_node_secs > 0, "the partition cannot serve the spike");
@@ -73,7 +73,7 @@ fn kill_orders_trade_kill_count_against_lost_work() {
     base.hpc.num_jobs = 300;
     base.hpc.horizon = 30_000;
     base.web.horizon = 30_000;
-    let rows = ablations::kill_orders(&base);
+    let rows = ablations::kill_orders(&base).unwrap();
     let get = |name: &str| rows.iter().find(|(n, _)| *n == name).map(|(_, r)| r).unwrap();
     let paper = get("paper");
     let max_size = get("max-size");
@@ -94,7 +94,7 @@ fn scheduler_ablation_orders_as_expected() {
     base.hpc.num_jobs = 500;
     base.hpc.horizon = base.horizon;
     base.web.horizon = base.horizon;
-    let rows = ablations::schedulers(&base);
+    let rows = ablations::schedulers(&base).unwrap();
     let get = |name: &str| rows.iter().find(|(n, _)| *n == name).map(|(_, r)| r).unwrap();
     assert!(get("first-fit").completed >= get("fcfs").completed);
     assert!(get("easy").completed >= get("fcfs").completed);
@@ -109,7 +109,7 @@ fn runs_are_deterministic() {
         cfg.hpc.num_jobs = 300;
         cfg.hpc.horizon = DAY;
         cfg.web.horizon = DAY;
-        phoenix_cloud::experiments::consolidation::run_one(cfg)
+        phoenix_cloud::experiments::consolidation::run_one(cfg).unwrap()
     };
     let a = mk();
     let b = mk();
@@ -145,7 +145,7 @@ fn minimum_viable_dynamic_cluster() {
     for d in demand.iter_mut().skip(100).take(50) {
         *d = 64; // full-cluster WS peak
     }
-    let res = ConsolidationSim::new(cfg, jobs, demand).run();
+    let res = ConsolidationSim::new(cfg, jobs, demand).run().unwrap();
     assert_eq!(res.ws_shortage_node_secs, 0);
     assert_eq!(res.registry.counter_value("ws.denied"), 0);
 }

@@ -5,9 +5,12 @@
 
 use phoenix_cloud::cluster::{DeptId, DeptKind, Ledger};
 use phoenix_cloud::config::{ExperimentConfig, KillOrder, SchedulerKind};
-use phoenix_cloud::coordinator::ConsolidationSim;
+use phoenix_cloud::coordinator::{ConsolidationSim, DeptInput, DeptWorkload};
 use phoenix_cloud::prop_assert;
-use phoenix_cloud::provision::{DeptProfile, PolicySpec};
+use phoenix_cloud::provision::{
+    DeptProfile, LeaseBased, PolicyChoice, PolicySpec, ProvisionPolicy, TieredCooperative,
+    TierRule,
+};
 use phoenix_cloud::util::prop::{check, Gen};
 use phoenix_cloud::workload::{Job, JobState};
 use phoenix_cloud::wscms::autoscaler::Reactive;
@@ -72,14 +75,29 @@ fn prop_policies_conserve_nodes() {
             let n = g.u64_in(0, ledger.free());
             ledger.grant(DeptId(i as u16), n).unwrap();
         }
-        let spec = *g.pick(&[
-            PolicySpec::Cooperative,
-            PolicySpec::StaticPartition,
-            PolicySpec::ProportionalShare,
-            PolicySpec::Lease { secs: 60 },
-            PolicySpec::Tiered,
-        ]);
-        let mut policy = spec.build(&profiles);
+        // every base policy, plus the per-tier mixed combinator with a
+        // randomized rule set — mixes must conserve exactly like bases
+        let choice = if g.usize_in(0, 5) == 5 {
+            let rules = g.vec_of(1, 3, |g| TierRule {
+                tier: g.u64_in(0, 3) as u8,
+                spec: *g.pick(&[
+                    PolicySpec::Cooperative,
+                    PolicySpec::StaticPartition,
+                    PolicySpec::Lease { secs: 60 },
+                    PolicySpec::Tiered,
+                ]),
+            });
+            PolicyChoice::Mixed { default: PolicySpec::Cooperative, rules }
+        } else {
+            PolicyChoice::Base(*g.pick(&[
+                PolicySpec::Cooperative,
+                PolicySpec::StaticPartition,
+                PolicySpec::ProportionalShare,
+                PolicySpec::Lease { secs: 60 },
+                PolicySpec::Tiered,
+            ]))
+        };
+        let mut policy = choice.build(&profiles);
         let now = g.u64_in(0, 100_000);
 
         for _ in 0..g.usize_in(1, 20) {
@@ -296,7 +314,9 @@ fn prop_consolidation_accounting_closes() {
             demand.push(d);
         }
         let submitted = jobs.len();
-        let res = ConsolidationSim::new(cfg, jobs, demand).run();
+        let res = ConsolidationSim::new(cfg, jobs, demand)
+            .run()
+            .map_err(|e| format!("two-department run failed: {e}"))?;
         prop_assert!(
             res.completed as usize + res.killed as usize + res.in_flight == submitted,
             "accounting leak: {} + {} + {} != {submitted}",
@@ -395,6 +415,178 @@ fn prop_wheel_matches_reference_heap() {
         prop_assert!(got.1 == want.1, "now: wheel {} heap {}", got.1, want.1);
         prop_assert!(got.2 == want.2, "processed: wheel {} heap {}", got.2, want.2);
         prop_assert!(got.3 == want.3, "len at horizon: wheel {} heap {}", got.3, want.3);
+        Ok(())
+    });
+}
+
+/// Matrix edge case: a **zero-second lease term** must never leak nodes.
+/// With `lease_secs = 0` no node can be held for any positive time, so
+/// the policy refuses every would-be leased grant (idle grants come back
+/// empty, batch-side requests are denied in full), books nothing, and
+/// never reports an expiry — while still conserving every request split.
+#[test]
+fn prop_lease_zero_term_rejects_and_never_leaks() {
+    check("lease-zero-term", 300, |g: &mut Gen| {
+        let k = g.usize_in(2, 6);
+        let profiles: Vec<DeptProfile> = (0..k)
+            .map(|i| DeptProfile {
+                id: DeptId(i as u16),
+                kind: if i % 2 == 0 { DeptKind::Batch } else { DeptKind::Service },
+                tier: g.u64_in(0, 3) as u8,
+                quota: g.u64_in(1, 200),
+            })
+            .collect();
+        let total = g.u64_in(k as u64, 1000);
+        let mut ledger = Ledger::new(total, k);
+        for i in 0..k {
+            let n = g.u64_in(0, ledger.free());
+            ledger.grant(DeptId(i as u16), n).unwrap();
+        }
+        let mut policy = LeaseBased::new(profiles.clone(), 0);
+        let eligible: Vec<DeptId> =
+            profiles.iter().filter(|p| p.kind == DeptKind::Batch).map(|p| p.id).collect();
+        for _ in 0..g.usize_in(1, 20) {
+            let now = g.u64_in(0, 100_000);
+            prop_assert!(
+                policy.idle_grants(&ledger, &eligible, now).is_empty(),
+                "zero-term lease handed out idle capacity"
+            );
+            let dept = DeptId(g.usize_in(0, k - 1) as u16);
+            let need = g.u64_in(0, total + 10);
+            let d = policy.on_request(dept, need, &ledger, now);
+            prop_assert!(
+                d.from_free + d.force_total() + d.denied == need,
+                "zero-term lease broke conservation"
+            );
+            let batch = profiles[dept.index()].kind == DeptKind::Batch;
+            if batch {
+                prop_assert!(
+                    d.from_free == 0 && d.force.is_empty() && d.denied == need,
+                    "zero-term lease granted a batch department {} nodes",
+                    d.granted()
+                );
+            }
+            prop_assert!(policy.expired(now + g.u64_in(0, 10_000)).is_empty(), "phantom expiry");
+            prop_assert!(policy.next_expiry().is_none(), "zero-term lease booked a lease");
+        }
+        Ok(())
+    });
+}
+
+/// Matrix edge case: a **single-tier** tiered roster. With every
+/// department on one tier nobody outranks anybody, so the reclaim
+/// cascade has no victims and must terminate with an empty force list —
+/// conservation then forces `from_free + denied == need`.
+#[test]
+fn prop_single_tier_tiered_cascade_terminates() {
+    check("tiered-single-tier", 300, |g: &mut Gen| {
+        let k = g.usize_in(1, 8);
+        let tier = g.u64_in(0, 3) as u8;
+        let profiles: Vec<DeptProfile> = (0..k)
+            .map(|i| DeptProfile {
+                id: DeptId(i as u16),
+                kind: if g.bool() { DeptKind::Batch } else { DeptKind::Service },
+                tier,
+                quota: g.u64_in(1, 200),
+            })
+            .collect();
+        let total = g.u64_in(k as u64, 1000);
+        let mut ledger = Ledger::new(total, k);
+        for i in 0..k {
+            let n = g.u64_in(0, ledger.free());
+            ledger.grant(DeptId(i as u16), n).unwrap();
+        }
+        let mut policy = TieredCooperative::new(profiles.clone());
+        let eligible: Vec<DeptId> =
+            profiles.iter().filter(|p| p.kind == DeptKind::Batch).map(|p| p.id).collect();
+        for _ in 0..g.usize_in(1, 20) {
+            let dept = DeptId(g.usize_in(0, k - 1) as u16);
+            let need = g.u64_in(0, total + 10);
+            let d = policy.on_request(dept, need, &ledger, 0);
+            prop_assert!(
+                d.force.is_empty(),
+                "single-tier roster force-reclaimed {:?}",
+                d.force
+            );
+            prop_assert!(
+                d.from_free + d.denied == need && d.from_free <= ledger.free(),
+                "single-tier conservation broke: {} + {} != {need}",
+                d.from_free,
+                d.denied
+            );
+            let grants = policy.idle_grants(&ledger, &eligible, 0);
+            let granted: u64 = grants.iter().map(|&(_, n)| n).sum();
+            prop_assert!(granted <= ledger.free(), "idle over-grant");
+        }
+        Ok(())
+    });
+}
+
+/// Matrix edge case: an **all-service roster** — no batch department, so
+/// there is no queue to reclaim from and nothing to kill. The run must
+/// complete cleanly (no panic, no kills, no force returns), account its
+/// shortage, and conserve the ledger.
+#[test]
+fn prop_all_service_roster_runs_cleanly() {
+    check("all-service-roster", 25, |g: &mut Gen| {
+        let k = g.usize_in(1, 4);
+        let total = g.u64_in(8, 120);
+        let mut cfg = ExperimentConfig::dynamic(total);
+        cfg.horizon = g.u64_in(5_000, 40_000);
+        cfg.web.target_peak_instances = (total / k as u64).clamp(1, 16);
+        let samples = (cfg.horizon / cfg.ws_sample_period) as usize + 1;
+        let profiles: Vec<DeptProfile> = (0..k)
+            .map(|i| DeptProfile {
+                id: DeptId(i as u16),
+                kind: DeptKind::Service,
+                tier: g.u64_in(0, 2) as u8,
+                quota: total / k as u64,
+            })
+            .collect();
+        let inputs: Vec<DeptInput> = (0..k)
+            .map(|i| {
+                let mut d = 1u64;
+                let demand: Vec<u64> = (0..samples)
+                    .map(|_| {
+                        if g.bool() {
+                            d = g.u64_in(1, cfg.web.target_peak_instances.max(1));
+                        }
+                        d
+                    })
+                    .collect();
+                DeptInput {
+                    name: format!("svc{i}"),
+                    workload: DeptWorkload::Service(demand.into()),
+                }
+            })
+            .collect();
+        let spec = *g.pick(&[
+            PolicySpec::Cooperative,
+            PolicySpec::StaticPartition,
+            PolicySpec::Lease { secs: 600 },
+            PolicySpec::Tiered,
+        ]);
+        let res = ConsolidationSim::with_departments(
+            cfg,
+            "all-service".to_string(),
+            total,
+            inputs,
+            spec.build(&profiles),
+        )
+        .run()
+        .map_err(|e| format!("all-service roster failed under {}: {e}", spec.name()))?;
+        prop_assert!(res.submitted == 0, "no batch trace, yet jobs were submitted");
+        prop_assert!(
+            res.completed == 0 && res.killed == 0 && res.in_flight == 0,
+            "phantom batch outcomes: {res:?}"
+        );
+        prop_assert!(res.force_returns == 0, "forced a return with no batch victim");
+        prop_assert!(res.per_dept.len() == k, "per-dept breakdown wrong size");
+        prop_assert!(
+            res.per_dept.iter().map(|d| d.shortage_node_secs).sum::<u64>()
+                == res.ws_shortage_node_secs,
+            "shortage breakdown does not close"
+        );
         Ok(())
     });
 }

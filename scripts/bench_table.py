@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Render BENCH_micro.json as the markdown rows of the EXPERIMENTS.md
+§Perf "Recorded numbers" table.
+
+Usage: python3 scripts/bench_table.py [BENCH_micro.json] [commit]
+
+CI runs this on every push so the numbers for the open ROADMAP item
+("paste the first CI artifact into EXPERIMENTS.md") are one copy-paste
+away from any build log; locally, run `cargo bench --bench micro` first.
+"""
+
+import json
+import subprocess
+import sys
+
+RECORDED_PROBES = [
+    "100k chained events",
+    "100k same-timestamp events",
+    "full sweep serial (workers=1)",
+    "full sweep parallel (workers=auto)",
+    "scale sweep K=2..4",
+    "matrix grid K=2..3",
+]
+
+
+def commit_id(arg):
+    if arg:
+        return arg
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+        )
+        return out.stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def fmt(x):
+    if x >= 1e6:
+        return f"{x:,.0f}"
+    if x >= 100:
+        return f"{x:.0f}"
+    return f"{x:.1f}"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_micro.json"
+    commit = commit_id(sys.argv[2] if len(sys.argv) > 2 else None)
+    with open(path) as f:
+        doc = json.load(f)
+    by_name = {r["name"]: r for r in doc["results"]}
+    quick = " (quick mode)" if doc.get("quick") else ""
+    print(f"Markdown rows for EXPERIMENTS.md §Perf \"Recorded numbers\"{quick}:\n")
+    print("| Probe | ns/unit | units/sec | commit | source |")
+    print("|---|---|---|---|---|")
+    missing = []
+    for name in RECORDED_PROBES:
+        r = by_name.get(name)
+        if r is None:
+            missing.append(name)
+            continue
+        print(
+            f"| {name} | {fmt(r['ns_per_unit'])} | {fmt(r['units_per_sec'])} "
+            f"| {commit} | CI `BENCH_micro.json`{quick} |"
+        )
+    if missing:
+        print(f"\nWARNING: probes missing from {path}: {missing}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
