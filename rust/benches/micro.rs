@@ -21,13 +21,18 @@
 //! * "full fig7/fig8 sweep" is timed twice — workers=1 (serial) and
 //!   workers=0 (one per core) — and this bench *asserts* the two produce
 //!   identical RunResult tables before reporting the speedup.
+//! * "matrix required-size" is timed twice — the bisecting scan and the
+//!   exhaustive descending grid walk — after *asserting* both land on
+//!   the same exact required cluster size; the printed speedup is the
+//!   PR-4 acceptance gate (O(log size) vs O(size) simulations per cell).
 
 use std::collections::BTreeMap;
 
 use phoenix_cloud::cluster::{DeptId, Ledger};
 use phoenix_cloud::config::{ExperimentConfig, KillOrder, RosterMix, SchedulerKind};
-use phoenix_cloud::experiments::matrix::{self, MatrixAxes, PolicyAxis};
+use phoenix_cloud::experiments::matrix::{self, MatrixAxes, PolicyAxis, SizeScan};
 use phoenix_cloud::experiments::{consolidation, scale};
+use phoenix_cloud::util::timefmt::DAY;
 use phoenix_cloud::provision::PolicySpec;
 use phoenix_cloud::runtime::ForecastEngine;
 use phoenix_cloud::sim::{Engine, EventHandler, Schedule};
@@ -190,7 +195,7 @@ fn main() {
         cells.iter().map(|c| c.consolidated.events).sum()
     }));
 
-    section("scenario matrix (roster × policy × size grid, two-week traces)");
+    section("scenario matrix (roster × policy grid, bisecting size scans, two-week traces)");
     let matrix_cfg = ExperimentConfig::default();
     let matrix_axes = MatrixAxes {
         ks: vec![2, 3],
@@ -200,7 +205,7 @@ fn main() {
             PolicyAxis::Base(PolicySpec::Lease { secs: 3600 }),
         ],
         loads: vec![matrix_cfg.hpc.target_load],
-        size_fracs: matrix::default_size_fracs(&matrix_cfg, true),
+        scan: SizeScan::Bisect,
         quick: true,
     };
     {
@@ -220,6 +225,70 @@ fn main() {
         let cells = matrix::run_matrix(&matrix_cfg, &matrix_axes).expect("matrix");
         cells.iter().flat_map(|c| c.runs.iter().map(|r| r.events)).sum()
     }));
+
+    section("matrix required-size scan: bisect vs the exhaustive grid walk");
+    // A one-day roster with small quotas keeps the O(size) walk affordable
+    // while leaving the O(log size) bisection a real range to search.
+    let mut scan_cfg = ExperimentConfig::default();
+    scan_cfg.horizon = DAY;
+    scan_cfg.hpc.horizon = DAY;
+    scan_cfg.web.horizon = DAY;
+    scan_cfg.hpc.num_jobs = 250;
+    scan_cfg.st_nodes = 36;
+    scan_cfg.ws_nodes = 16;
+    scan_cfg.hpc.machine_nodes = 36;
+    scan_cfg.hpc.target_load = 0.6;
+    scan_cfg.web.target_peak_instances = 12;
+    scan_cfg.workers = 1; // time the scan itself, not the fan-out
+    let scan_axes = |scan: SizeScan| MatrixAxes {
+        ks: vec![4],
+        mixes: vec![RosterMix::Alternating],
+        policies: vec![PolicyAxis::Base(PolicySpec::Cooperative)],
+        loads: vec![scan_cfg.hpc.target_load],
+        scan,
+        quick: true,
+    };
+    {
+        // exactness gate: both scans must land on the same required size
+        let b = matrix::run_matrix(&scan_cfg, &scan_axes(SizeScan::Bisect)).expect("bisect");
+        let o =
+            matrix::run_matrix(&scan_cfg, &scan_axes(SizeScan::LinearOracle)).expect("oracle");
+        assert_eq!(
+            b[0].required_nodes, o[0].required_nodes,
+            "bisect and the linear grid walk disagree on the required size"
+        );
+        println!(
+            "required size K=4: {:?} of {} nodes — bisect probed {} sizes, walk {}",
+            b[0].required_nodes,
+            b[0].dedicated_nodes,
+            b[0].runs.len(),
+            o[0].runs.len()
+        );
+    }
+    let bisect_ns = {
+        let r = bench("matrix required-size: bisect scan", 0, iters(5).max(2), || {
+            let cells =
+                matrix::run_matrix(&scan_cfg, &scan_axes(SizeScan::Bisect)).expect("bisect");
+            cells.iter().flat_map(|c| c.runs.iter().map(|r| r.events)).sum()
+        });
+        let ns = r.mean_ns;
+        rep.record(r);
+        ns
+    };
+    let walk_ns = {
+        let r = bench("matrix required-size: linear grid walk", 0, iters(5).max(2), || {
+            let cells =
+                matrix::run_matrix(&scan_cfg, &scan_axes(SizeScan::LinearOracle)).expect("walk");
+            cells.iter().flat_map(|c| c.runs.iter().map(|r| r.events)).sum()
+        });
+        let ns = r.mean_ns;
+        rep.record(r);
+        ns
+    };
+    println!(
+        "bisect speedup over the exhaustive grid walk: {:.2}x (identical required sizes verified)",
+        walk_ns / bisect_ns.max(1e-9)
+    );
 
     if ForecastEngine::artifacts_present("artifacts") {
         section("PJRT forecaster (the predictive-autoscaler hot path)");

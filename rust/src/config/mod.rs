@@ -229,8 +229,15 @@ pub struct ScenarioSpec {
     /// HPC offered-load override (None = the base config's calibration).
     pub load: Option<f64>,
     /// Single consolidated-cluster fraction override in (0, 1]; None runs
-    /// the matrix's standard descending size grid.
+    /// the matrix's bisecting required-size scan.
     pub frac: Option<f64>,
+    /// SWF archive override (`trace = "path.swf"`): this scenario's batch
+    /// departments replay windows of the named log instead of the
+    /// synthetic generator (None = the base config's `[trace] swf`).
+    pub trace: Option<String>,
+    /// Web-demand correlation override ρ ∈ [0, 1] (None = the base
+    /// config's `[trace] correlation`).
+    pub correlation: Option<f64>,
 }
 
 pub(crate) const SCENARIO_POLICY_KINDS: [&str; 6] =
@@ -301,6 +308,16 @@ pub struct ExperimentConfig {
     /// Declared scenario-matrix cells (`[[scenario]]`); empty = the
     /// matrix command's built-in grid.
     pub scenarios: Vec<ScenarioSpec>,
+    /// Real SWF archive driving every generated batch department
+    /// (`[trace] swf = "path"` / `--swf`); None = synthetic traces.
+    pub swf: Option<String>,
+    /// Processors per node when converting SWF processor counts
+    /// (`[trace] procs_per_node`; SDSC BLUE: 8).
+    pub swf_procs_per_node: u64,
+    /// Correlation ρ ∈ [0, 1] between service departments' demand series
+    /// (`[trace] correlation` / `--correlation`): 0 = the seed's fully
+    /// independent traces (bit-identical), 1 = one shared load process.
+    pub correlation: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -321,6 +338,9 @@ impl Default for ExperimentConfig {
             departments: Vec::new(),
             policy: None,
             scenarios: Vec::new(),
+            swf: None,
+            swf_procs_per_node: 8,
+            correlation: 0.0,
         }
     }
 }
@@ -396,6 +416,12 @@ impl ExperimentConfig {
                 bail!("policy.lease_secs must be positive");
             }
         }
+        if self.swf_procs_per_node == 0 {
+            bail!("trace.procs_per_node must be positive");
+        }
+        if !self.correlation.is_finite() || !(0.0..=1.0).contains(&self.correlation) {
+            bail!("trace.correlation must be in [0, 1], got {}", self.correlation);
+        }
         for (i, s) in self.scenarios.iter().enumerate() {
             let label = if s.name.is_empty() { format!("#{i}") } else { s.name.clone() };
             if s.k == 0 || s.k > 64 {
@@ -419,6 +445,16 @@ impl ExperimentConfig {
             if let Some(frac) = s.frac {
                 if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
                     bail!("scenario {label}: frac must be in (0, 1], got {frac}");
+                }
+            }
+            if let Some(rho) = s.correlation {
+                if !rho.is_finite() || !(0.0..=1.0).contains(&rho) {
+                    bail!("scenario {label}: correlation must be in [0, 1], got {rho}");
+                }
+            }
+            if let Some(t) = &s.trace {
+                if t.is_empty() {
+                    bail!("scenario {label}: trace path must not be empty");
                 }
             }
         }
@@ -560,9 +596,33 @@ impl ExperimentConfig {
                 let lease_secs = typed_u64(s, "lease_secs", &ctx)?.unwrap_or(3600);
                 let load = typed_f64(s, "load", &ctx)?;
                 let frac = typed_f64(s, "frac", &ctx)?;
-                scenarios.push(ScenarioSpec { name, k, mix, policy_kind, lease_secs, load, frac });
+                let trace = typed_str(s, "trace", &ctx)?.map(str::to_string);
+                let correlation = typed_f64(s, "correlation", &ctx)?;
+                scenarios.push(ScenarioSpec {
+                    name,
+                    k,
+                    mix,
+                    policy_kind,
+                    lease_secs,
+                    load,
+                    frac,
+                    trace,
+                    correlation,
+                });
             }
             self.scenarios = scenarios;
+        }
+        if let Some(t) = doc.get("trace") {
+            let ctx = "[trace]";
+            if let Some(p) = typed_str(t, "swf", ctx)? {
+                self.swf = Some(p.to_string());
+            }
+            if let Some(n) = typed_u64(t, "procs_per_node", ctx)? {
+                self.swf_procs_per_node = n;
+            }
+            if let Some(rho) = typed_f64(t, "correlation", ctx)? {
+                self.correlation = rho;
+            }
         }
         if let Some(h) = doc.get("hpc") {
             if let Some(n) = h.get("num_jobs").and_then(Json::as_u64) {
@@ -759,6 +819,63 @@ mod tests {
         cfg.scenarios[1].frac = None;
         cfg.scenarios[1].k = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn trace_overlay_parses_and_validates() {
+        let doc = crate::util::toml::parse(
+            "[trace]\nswf = \"tests/fixtures/mini.swf\"\nprocs_per_node = 4\n\
+             correlation = 0.6\n\n\
+             [[scenario]]\nname = \"tied\"\nk = 4\ncorrelation = 0.9\n\
+             trace = \"other.swf\"\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.swf, None);
+        assert_eq!(cfg.swf_procs_per_node, 8, "SDSC BLUE default");
+        assert_eq!(cfg.correlation, 0.0, "seed behavior: independent departments");
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.swf.as_deref(), Some("tests/fixtures/mini.swf"));
+        assert_eq!(cfg.swf_procs_per_node, 4);
+        assert!((cfg.correlation - 0.6).abs() < 1e-12);
+        assert_eq!(cfg.scenarios[0].trace.as_deref(), Some("other.swf"));
+        assert_eq!(cfg.scenarios[0].correlation, Some(0.9));
+        // mistyped / out-of-range trace settings error, never silently pass
+        for bad in [
+            "[trace]\nswf = 3\n",
+            "[trace]\nprocs_per_node = \"eight\"\n",
+            "[trace]\ncorrelation = \"high\"\n",
+            "[[scenario]]\nk = 2\ncorrelation = \"high\"\n",
+            "[[scenario]]\nk = 2\ntrace = 9\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+        let mut cfg = ExperimentConfig::default();
+        cfg.correlation = 1.5;
+        assert!(cfg.validate().is_err(), "correlation above 1");
+        cfg.correlation = f64::NAN;
+        assert!(cfg.validate().is_err(), "NaN correlation");
+        cfg.correlation = 0.0;
+        cfg.swf_procs_per_node = 0;
+        assert!(cfg.validate().is_err(), "zero procs per node");
+        let mut cfg = ExperimentConfig::default();
+        cfg.scenarios.push(ScenarioSpec {
+            name: "bad".into(),
+            k: 2,
+            mix: RosterMix::Alternating,
+            policy_kind: "cooperative".into(),
+            lease_secs: 3600,
+            load: None,
+            frac: None,
+            trace: None,
+            correlation: Some(-0.1),
+        });
+        assert!(cfg.validate().is_err(), "negative scenario correlation");
+        cfg.scenarios[0].correlation = None;
+        cfg.scenarios[0].trace = Some(String::new());
+        assert!(cfg.validate().is_err(), "empty scenario trace path");
     }
 
     #[test]

@@ -53,6 +53,19 @@ pub fn demand_series(cfg: &WebTraceConfig, max_instances: u64) -> Vec<u64> {
     serving::autoscale_series(&rates, cfg.instance_capacity_rps, max_instances).0
 }
 
+/// Demand series for a department whose rate trace is demand-correlated
+/// with its roster siblings ([`crate::trace::correlated`]). `rho == 0.0`
+/// is bit-identical to [`demand_series`] — the seed's independent path.
+pub fn correlated_demand_series(
+    cfg: &WebTraceConfig,
+    rho: f64,
+    latent_seed: u64,
+    max_instances: u64,
+) -> Vec<u64> {
+    let rates = crate::trace::correlated::rate_series(cfg, rho, latent_seed);
+    serving::autoscale_series(&rates, cfg.instance_capacity_rps, max_instances).0
+}
+
 /// Export the figure as CSV (downsampled to keep the file readable).
 pub fn to_table(fig: &Fig5, stride: usize) -> Table {
     let mut t = Table::new(&["hours", "instances"]);
@@ -106,5 +119,18 @@ mod tests {
     fn demand_series_respects_cap() {
         let d = demand_series(&WebTraceConfig::default(), 32);
         assert!(*d.iter().max().unwrap() <= 32);
+    }
+
+    #[test]
+    fn correlated_demand_at_rho_zero_is_the_independent_series() {
+        let cfg = WebTraceConfig::default();
+        let latent = crate::trace::correlated::latent_seed(cfg.seed);
+        assert_eq!(
+            correlated_demand_series(&cfg, 0.0, latent, u64::MAX),
+            demand_series(&cfg, u64::MAX),
+            "ρ=0 must replay the seed's independent demand bit for bit"
+        );
+        let capped = correlated_demand_series(&cfg, 0.5, latent, 24);
+        assert!(*capped.iter().max().unwrap() <= 24);
     }
 }

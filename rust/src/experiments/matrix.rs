@@ -13,27 +13,42 @@
 //! * **lease term** — a sensitivity grid over `lease_secs` for the
 //!   lease-bearing policies;
 //! * **load level** — the HPC offered-load calibration;
-//! * **cluster size** — a descending fraction scan of the dedicated
-//!   cost, from which each cell's **required cluster size** is read: the
-//!   smallest cluster that keeps every service department whole (zero
-//!   SLO violation) without losing batch completions versus the
-//!   full-cost cluster.
+//! * **cluster size** — a **bisecting scan** ([`SizeScan::Bisect`]) that
+//!   returns each cell's *exact* **required cluster size**: the smallest
+//!   cluster that keeps every service department whole (zero SLO
+//!   violation) without losing batch completions versus the full-cost
+//!   cluster. The scan runs the full-cost baseline, warm-starts at the
+//!   paper's 76.9 % cost point, and halves the remainder of
+//!   `[1, full cost]` — O(log size) simulations where the retained
+//!   grid-walk oracle ([`SizeScan::LinearOracle`], test/bench only)
+//!   needs O(size). The bisection's exactness rests on monotone
+//!   feasibility: the exhaustive oracle verifies it across the entire
+//!   range (violated cells fail loudly) and the bisect-vs-oracle
+//!   property test pins the two scans equal on randomized cells.
 //!
-//! Every (roster × policy × lease × load) cell fans its size scan out
-//! through [`super::parallel`]; results reduce — in deterministic plan
-//! order, so parallel tables are bit-identical to serial ones — into
-//! per-cell summaries with `RunResult::per_dept` breakdowns, exported as
-//! CSV (`out/matrix.csv`) and JSON (`out/matrix.json`). The K = 2
-//! alternating cooperative cell at the paper's 76.9 % cost fraction
-//! replays the Fig. 7/8 DC run bit for bit ([`verify_anchor`], also
-//! regression-tested below).
+//! Cells fan out across [`super::parallel`] workers (each cell's scan is
+//! sequential — later probes depend on earlier verdicts); results reduce
+//! in deterministic plan order, so parallel tables are bit-identical to
+//! serial ones, into per-cell summaries with `RunResult::per_dept`
+//! breakdowns, exported as CSV (`out/matrix.csv`) and JSON
+//! (`out/matrix.json`). The K = 2 alternating cooperative cell's
+//! warm-start probe replays the Fig. 7/8 DC run bit for bit
+//! ([`verify_anchor`]; regression-pinned in `rust/tests/properties.rs`).
+//!
+//! Trace-driven cells: with `[trace] swf = …` (or `--swf`) the batch
+//! departments replay windows of a real SWF archive
+//! ([`crate::trace::archive`]), and `[trace] correlation = ρ` derives the
+//! service departments' demand from one shared latent process
+//! ([`crate::trace::correlated`]; ρ = 0 stays bit-identical to the
+//! independent traces).
 //!
 //! Configs may pin cells explicitly with `[[scenario]]` tables
-//! ([`ScenarioSpec`]); `phoenixd matrix` then runs those instead of the
-//! built-in grid. `phoenixd matrix --kmax 16 --quick` is the CI smoke
-//! grid.
+//! ([`ScenarioSpec`], including per-scenario `trace` / `correlation`
+//! overrides); `phoenixd matrix` then runs those instead of the built-in
+//! grid. `phoenixd matrix --kmax 8 --quick` is the CI smoke grid.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
@@ -103,6 +118,39 @@ impl PolicyAxis {
     }
 }
 
+/// How a cell finds its **required cluster size**.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SizeScan {
+    /// Bisection to the *exact* minimal feasible size (the default): run
+    /// the full-cost baseline (it gates completions), warm-start at the
+    /// paper's cost point, then halve the remaining `[1, full cost]`
+    /// range. O(log size) simulations per cell against a linear walk's
+    /// O(size); exactness rests on monotone feasibility, which every
+    /// scan verifies over its probes and rejects loudly if violated.
+    Bisect,
+    /// Exhaustive 1-node grid walk over every size up to the full cost —
+    /// the O(size) oracle the bisection is property-tested against
+    /// (`prop_matrix_bisect_matches_linear_oracle` in
+    /// `rust/tests/properties.rs`) and benchmarked against in
+    /// `benches/micro.rs`. Because it simulates the whole range, it is
+    /// also the scan whose monotone-feasibility verification actually
+    /// bites. Test/bench flag only; the CLI never sets it.
+    LinearOracle,
+    /// An explicit fraction ladder (scenario `frac =` pins a single
+    /// size): no search, the smallest feasible scanned size is reported.
+    Fracs(Vec<f64>),
+}
+
+impl SizeScan {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SizeScan::Bisect => "bisect",
+            SizeScan::LinearOracle => "linear-oracle",
+            SizeScan::Fracs(_) => "fracs",
+        }
+    }
+}
+
 /// The declarative grid `run_matrix` expands.
 #[derive(Debug, Clone)]
 pub struct MatrixAxes {
@@ -111,9 +159,8 @@ pub struct MatrixAxes {
     pub policies: Vec<PolicyAxis>,
     /// HPC offered-load levels.
     pub loads: Vec<f64>,
-    /// Descending candidate cluster sizes as fractions of the dedicated
-    /// cost; the first entry anchors the completion gate.
-    pub size_fracs: Vec<f64>,
+    /// The required-size scan every cell runs.
+    pub scan: SizeScan,
     /// Recorded in the JSON table so readers know the grid's scale.
     pub quick: bool,
 }
@@ -123,16 +170,6 @@ fn desc_dedup(mut fracs: Vec<f64>) -> Vec<f64> {
     fracs.sort_by(|a, b| b.partial_cmp(a).expect("finite fractions"));
     fracs.dedup_by(|a, b| a.to_bits() == b.to_bits());
     fracs
-}
-
-/// The standard size scan: full cost down past the paper's 76.9 %.
-pub fn default_size_fracs(base: &ExperimentConfig, quick: bool) -> Vec<f64> {
-    let paper = scale::default_ratio(base);
-    if quick {
-        desc_dedup(vec![1.0, paper])
-    } else {
-        desc_dedup(vec![1.0, 0.9, 0.85, 0.8, paper, 0.7])
-    }
 }
 
 impl MatrixAxes {
@@ -162,14 +199,14 @@ impl MatrixAxes {
             mixes: vec![RosterMix::Alternating, RosterMix::ServiceHeavy, RosterMix::BatchHeavy],
             policies,
             loads: vec![base.hpc.target_load],
-            size_fracs: default_size_fracs(base, false),
+            scan: SizeScan::Bisect,
             quick: false,
         }
     }
 
     /// The CI smoke grid: still spans roster shape × policy × lease term
-    /// up to `kmax`, but with two roster shapes, one lease term, and a
-    /// two-point size scan.
+    /// up to `kmax`, but with two roster shapes and one lease term (the
+    /// bisecting scan sets its own per-cell probe count).
     pub fn quick(base: &ExperimentConfig, kmax: usize) -> Self {
         let kmax = kmax.max(2);
         let mut ks = vec![2, 4.min(kmax), kmax];
@@ -187,18 +224,15 @@ impl MatrixAxes {
                 PolicyAxis::Mixed { lease_secs: 3600 },
             ],
             loads: vec![base.hpc.target_load],
-            size_fracs: default_size_fracs(base, true),
+            scan: SizeScan::Bisect,
             quick: true,
         }
     }
 
-    /// Total simulations the grid will run (before same-size dedup).
-    pub fn planned_runs(&self) -> usize {
-        self.ks.len()
-            * self.mixes.len()
-            * self.policies.len()
-            * self.loads.len()
-            * self.size_fracs.len()
+    /// Cells the grid will reduce (each runs its own required-size scan:
+    /// ~2 + log₂(cluster size) simulations under [`SizeScan::Bisect`]).
+    pub fn planned_cells(&self) -> usize {
+        self.ks.len() * self.mixes.len() * self.policies.len() * self.loads.len()
     }
 }
 
@@ -252,10 +286,20 @@ pub struct MatrixCell {
     pub load: f64,
     /// Σ department quotas — the K-dedicated-clusters cost.
     pub dedicated_nodes: u64,
-    /// The size scan, descending.
+    /// How the required size was found ([`SizeScan::name`]).
+    pub scan: String,
+    /// True when the cell's roster replays an SWF archive or correlated
+    /// demand (base `[trace]` settings *or* per-scenario overrides) —
+    /// such cells legitimately diverge from the synthetic fig7/fig8
+    /// anchor and [`verify_anchor`] skips them.
+    pub trace_driven: bool,
+    /// Every size actually simulated, descending.
     pub runs: Vec<CellRun>,
-    /// Smallest scanned size with zero SLO violation and no completion
-    /// loss versus the full-cost run; None when no scanned size passes.
+    /// The minimal feasible cluster size — exact under the bisecting and
+    /// linear-oracle scans, smallest feasible scanned size under an
+    /// explicit fraction ladder; None when even the full-cost run fails
+    /// the gate (zero SLO violation + no completion loss versus full
+    /// cost).
     pub required_nodes: Option<u64>,
     /// Per-department breakdown at the decisive run.
     pub per_dept: Vec<DeptSummary>,
@@ -287,11 +331,12 @@ struct CellPlan {
     roster: usize,
     k: usize,
     policy: PolicyAxis,
-    fracs: Vec<f64>,
+    scan: SizeScan,
 }
 
-/// A prepared roster: the base config at its load level, the (prefix-
-/// stable) department specs, and their shared traces.
+/// A prepared roster: the base config at its load level (plus any trace
+/// archive / correlation overrides folded in), the (prefix-stable)
+/// department specs, and their shared traces.
 struct Roster {
     mix: RosterMix,
     load: f64,
@@ -300,85 +345,184 @@ struct Roster {
     traces: scale::DeptTraces,
 }
 
-fn prepare_roster(base: &ExperimentConfig, mix: RosterMix, load: f64, kmax: usize) -> Roster {
+fn prepare_roster(
+    base: &ExperimentConfig,
+    mix: RosterMix,
+    load: f64,
+    kmax: usize,
+) -> Result<Roster> {
     let mut b = base.clone();
     b.hpc.target_load = load;
     let specs = mix.departments(kmax, &b);
-    let traces = scale::build_traces(&specs, &b);
-    Roster { mix, load, base: b, specs, traces }
+    let traces = scale::build_traces(&specs, &b)?;
+    Ok(Roster { mix, load, base: b, specs, traces })
 }
 
-/// Run the planned cells; the flattened run plan fans out across
-/// `workers` threads and reduces in plan order (bit-identical to serial).
-fn run_cells(rosters: &[Roster], cells: &[CellPlan], workers: usize) -> Result<Vec<MatrixCell>> {
-    // flatten: (cell, nodes, frac), cell-major, sizes descending, same-size
-    // duplicates dropped (tiny rosters can collapse adjacent fractions).
-    // Fracs are re-sorted here so the descending invariant — the first run
-    // is the full-cost completion-gate baseline, the last the smallest —
-    // holds for caller-supplied [[scenario]] fractions too.
-    let mut plan: Vec<(usize, u64, f64)> = Vec::new();
-    for (ci, c) in cells.iter().enumerate() {
-        if c.fracs.is_empty() {
-            bail!("cell '{}' has no cluster sizes to scan", c.name);
+/// Memoized probes of one cell's scan: cluster size → (cost fraction,
+/// simulation result).
+type ProbeMap = BTreeMap<u64, (f64, RunResult)>;
+
+/// Run one cell's required-size scan. Probes are memoized by node count
+/// (the baseline, the warm-start anchor, and the search can collide on
+/// tiny rosters) and every simulated size lands in the cell's `runs`
+/// table, descending.
+fn run_cell(rosters: &[Roster], c: &CellPlan) -> Result<MatrixCell> {
+    let roster = &rosters[c.roster];
+    let specs = &roster.specs[..c.k];
+    let dedicated: u64 = specs.iter().map(|s| s.quota).sum();
+    if dedicated == 0 {
+        bail!("cell '{}' has no nodes to scan", c.name);
+    }
+    let policy = c.policy.choice(specs);
+    let mut probes = ProbeMap::new();
+    let ensure = |probes: &mut ProbeMap, nodes: u64, frac: f64| -> Result<()> {
+        if let Entry::Vacant(e) = probes.entry(nodes) {
+            e.insert((
+                frac,
+                scale::run_roster(&roster.base, specs, &roster.traces, nodes, &policy)?,
+            ));
         }
-        let dedicated: u64 = rosters[c.roster].specs[..c.k].iter().map(|s| s.quota).sum();
-        let mut seen = BTreeSet::new();
-        for frac in desc_dedup(c.fracs.clone()) {
-            let nodes = ((frac * dedicated as f64).round() as u64).max(1);
-            if seen.insert(nodes) {
-                plan.push((ci, nodes, frac));
+        Ok(())
+    };
+
+    // the full-cost baseline runs first: smaller clusters must not lose
+    // batch work the K-dedicated-clusters cost would have finished
+    ensure(&mut probes, dedicated, 1.0)?;
+    let baseline = probes[&dedicated].1.completed;
+    let feasible_at = |probes: &ProbeMap, nodes: u64| {
+        let r = &probes[&nodes].1;
+        r.ws_shortage_node_secs == 0 && r.completed >= baseline
+    };
+
+    let required_nodes = match &c.scan {
+        SizeScan::Fracs(fracs) => {
+            if fracs.is_empty() {
+                bail!("cell '{}' has no cluster sizes to scan", c.name);
+            }
+            for frac in desc_dedup(fracs.clone()) {
+                let nodes = ((frac * dedicated as f64).round() as u64).max(1);
+                ensure(&mut probes, nodes, frac)?;
+            }
+            probes.keys().copied().filter(|&n| feasible_at(&probes, n)).min()
+        }
+        scan @ (SizeScan::Bisect | SizeScan::LinearOracle) => {
+            if !feasible_at(&probes, dedicated) {
+                None // even the full cost starves a service department
+            } else {
+                // search all the way down to one node: a binding cluster
+                // cap regenerates each service department's demand through
+                // the autoscaler (`scale::dept_input`), so no precomputed
+                // demand floor is sound — feasibility below the uncapped
+                // service peak is an empirical question the probes answer
+                let mut lo = 1u64;
+                let mut hi = dedicated;
+                if matches!(scan, SizeScan::Bisect) {
+                    // warm start at the paper's cost point; this also pins
+                    // the fig7/fig8 anchor run into every cell's table
+                    let anchor = ((scale::default_ratio(&roster.base) * dedicated as f64).round()
+                        as u64)
+                        .max(1);
+                    if (lo..hi).contains(&anchor) {
+                        ensure(&mut probes, anchor, anchor as f64 / dedicated as f64)?;
+                        if feasible_at(&probes, anchor) {
+                            hi = anchor;
+                        } else {
+                            lo = anchor + 1;
+                        }
+                    }
+                    while lo < hi {
+                        let mid = lo + (hi - lo) / 2;
+                        ensure(&mut probes, mid, mid as f64 / dedicated as f64)?;
+                        if feasible_at(&probes, mid) {
+                            hi = mid;
+                        } else {
+                            lo = mid + 1;
+                        }
+                    }
+                    Some(hi)
+                } else {
+                    // the grid-walk oracle simulates *every* size, so the
+                    // monotonicity verification below sees the whole range
+                    // (O(size) simulations — that is the point of the
+                    // oracle); the required size is the feasible suffix's
+                    // lower edge, which equals the bisection's answer
+                    // exactly when feasibility is monotone
+                    for n in 1..dedicated {
+                        ensure(&mut probes, n, n as f64 / dedicated as f64)?;
+                    }
+                    let mut required = dedicated;
+                    for n in (1..dedicated).rev() {
+                        if feasible_at(&probes, n) {
+                            required = n;
+                        } else {
+                            break;
+                        }
+                    }
+                    Some(required)
+                }
+            }
+        }
+    };
+
+    if !matches!(c.scan, SizeScan::Fracs(_)) {
+        // The searching scans are exact only under monotone feasibility.
+        // Bisection's own probe set is monotone-consistent by construction
+        // (an infeasible probe always lies below every feasible one), so
+        // this check has real teeth only for the exhaustive oracle, which
+        // sees the entire range — a cell whose feasibility dips after
+        // recovering fails loudly here, and the bisect-vs-oracle property
+        // test (`prop_matrix_bisect_matches_linear_oracle`) surfaces the
+        // resulting disagreement on the bisect side.
+        let smallest_feasible =
+            probes.keys().copied().filter(|&n| feasible_at(&probes, n)).min();
+        let largest_infeasible =
+            probes.keys().copied().filter(|&n| !feasible_at(&probes, n)).max();
+        if let (Some(f), Some(i)) = (smallest_feasible, largest_infeasible) {
+            if f < i {
+                bail!(
+                    "cell '{}': feasibility is not monotone in cluster size ({f} nodes \
+                     feasible but {i} nodes is not) — the required-size search is \
+                     unsound for this cell",
+                    c.name
+                );
             }
         }
     }
 
-    let results: Vec<RunResult> = parallel::parallel_map(plan.len(), workers, |i| {
-        let (ci, nodes, _) = plan[i];
-        let c = &cells[ci];
-        let r = &rosters[c.roster];
-        let policy = c.policy.choice(&r.specs[..c.k]);
-        scale::run_roster(&r.base, &r.specs[..c.k], &r.traces, nodes, &policy)
+    let runs: Vec<CellRun> = probes
+        .iter()
+        .rev()
+        .map(|(&nodes, (frac, r))| CellRun::from_result(nodes, *frac, r))
+        .collect();
+    let decisive_nodes = match required_nodes {
+        Some(req) => req,
+        // the cell's failure mode stays visible in the smallest probe
+        None => *probes.keys().next().expect("at least the baseline probe"),
+    };
+    let per_dept = probes[&decisive_nodes].1.per_dept.clone();
+    Ok(MatrixCell {
+        name: c.name.clone(),
+        k: c.k,
+        mix: roster.mix,
+        policy: c.policy.name().to_string(),
+        lease_secs: c.policy.lease_secs(),
+        load: roster.load,
+        dedicated_nodes: dedicated,
+        scan: c.scan.name().to_string(),
+        trace_driven: roster.base.swf.is_some() || roster.base.correlation != 0.0,
+        runs,
+        required_nodes,
+        per_dept,
     })
-    .into_iter()
-    .collect::<Result<_>>()?;
+}
 
-    let mut out = Vec::with_capacity(cells.len());
-    let mut cursor = 0usize;
-    for (ci, c) in cells.iter().enumerate() {
-        let roster = &rosters[c.roster];
-        let dedicated: u64 = roster.specs[..c.k].iter().map(|s| s.quota).sum();
-        let start = cursor;
-        while cursor < plan.len() && plan[cursor].0 == ci {
-            cursor += 1;
-        }
-        let runs: Vec<CellRun> = (start..cursor)
-            .map(|i| CellRun::from_result(plan[i].1, plan[i].2, &results[i]))
-            .collect();
-        // the full-cost (largest) run gates completions: smaller clusters
-        // must not lose batch work the dedicated-cost cluster finished
-        let baseline = runs.first().expect("non-empty size scan").completed;
-        let required_nodes = runs
-            .iter()
-            .filter(|r| r.shortage_node_secs == 0 && r.completed >= baseline)
-            .map(|r| r.nodes)
-            .min();
-        let decisive_idx = match required_nodes {
-            Some(req) => start + runs.iter().position(|r| r.nodes == req).expect("from scan"),
-            None => cursor - 1,
-        };
-        out.push(MatrixCell {
-            name: c.name.clone(),
-            k: c.k,
-            mix: roster.mix,
-            policy: c.policy.name().to_string(),
-            lease_secs: c.policy.lease_secs(),
-            load: roster.load,
-            dedicated_nodes: dedicated,
-            runs,
-            required_nodes,
-            per_dept: results[decisive_idx].per_dept.clone(),
-        });
-    }
-    Ok(out)
+/// Run the planned cells: cells fan out across `workers` threads (each
+/// cell's scan is sequential — later probes depend on earlier verdicts)
+/// and reduce in plan order, bit-identical to serial.
+fn run_cells(rosters: &[Roster], cells: &[CellPlan], workers: usize) -> Result<Vec<MatrixCell>> {
+    parallel::parallel_map(cells.len(), workers, |i| run_cell(rosters, &cells[i]))
+        .into_iter()
+        .collect()
 }
 
 /// Expand and run the full grid.
@@ -386,8 +530,11 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
     if axes.ks.is_empty() || axes.mixes.is_empty() || axes.policies.is_empty() {
         bail!("empty matrix axes");
     }
-    if axes.size_fracs.is_empty() || axes.loads.is_empty() {
-        bail!("matrix needs at least one size fraction and one load level");
+    if axes.loads.is_empty() {
+        bail!("matrix needs at least one load level");
+    }
+    if matches!(&axes.scan, SizeScan::Fracs(f) if f.is_empty()) {
+        bail!("matrix needs at least one size fraction");
     }
     let kmax = axes.ks.iter().copied().max().unwrap_or(2);
     let mut rosters = Vec::new();
@@ -395,7 +542,7 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
     for &mix in &axes.mixes {
         for &load in &axes.loads {
             let ri = rosters.len();
-            rosters.push(prepare_roster(base, mix, load, kmax));
+            rosters.push(prepare_roster(base, mix, load, kmax)?);
             for &k in &axes.ks {
                 for &policy in &axes.policies {
                     let lease = policy.lease_secs();
@@ -409,7 +556,7 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
                         roster: ri,
                         k,
                         policy,
-                        fracs: axes.size_fracs.clone(),
+                        scan: axes.scan.clone(),
                     });
                 }
             }
@@ -419,56 +566,75 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
 }
 
 /// Run a config's declared `[[scenario]]` cells instead of the grid.
-/// Scenarios sharing a (mix, load) pair share one prepared roster — the
-/// shapes are prefix-stable, so the largest requested K's traces serve
-/// every smaller sibling, exactly as in [`run_matrix`].
+/// Scenarios sharing a (mix, load, trace, correlation) tuple share one
+/// prepared roster — the shapes are prefix-stable, so the largest
+/// requested K's traces serve every smaller sibling, exactly as in
+/// [`run_matrix`]. A scenario with an explicit `frac` pins that single
+/// size (plus the always-run full-cost baseline); the rest bisect.
 pub fn run_scenarios(
     base: &ExperimentConfig,
     scenarios: &[ScenarioSpec],
-    size_fracs: &[f64],
 ) -> Result<Vec<MatrixCell>> {
     if scenarios.is_empty() {
         bail!("no [[scenario]] entries in the config");
     }
     let load_of = |s: &ScenarioSpec| s.load.unwrap_or(base.hpc.target_load);
-    // widest K per (mix, load) group, so one roster covers the group
-    let mut kmax_by_key: BTreeMap<(&str, u64), usize> = BTreeMap::new();
+    let swf_of = |s: &ScenarioSpec| s.trace.clone().or_else(|| base.swf.clone());
+    let rho_of = |s: &ScenarioSpec| s.correlation.unwrap_or(base.correlation);
+    type RosterKey = (&'static str, u64, Option<String>, u64);
+    let key_of = |s: &ScenarioSpec| -> RosterKey {
+        (s.mix.name(), load_of(s).to_bits(), swf_of(s), rho_of(s).to_bits())
+    };
+    // widest K per roster group, so one trace set covers the group
+    let mut kmax_by_key: BTreeMap<RosterKey, usize> = BTreeMap::new();
     for s in scenarios {
-        let key = (s.mix.name(), load_of(s).to_bits());
-        let k = kmax_by_key.entry(key).or_insert(0);
+        let k = kmax_by_key.entry(key_of(s)).or_insert(0);
         *k = (*k).max(s.k);
     }
     let mut rosters = Vec::new();
-    let mut roster_by_key: BTreeMap<(&str, u64), usize> = BTreeMap::new();
+    let mut roster_by_key: BTreeMap<RosterKey, usize> = BTreeMap::new();
     let mut cells = Vec::new();
     for s in scenarios {
         let policy = PolicyAxis::parse(&s.policy_kind, s.lease_secs)
             .with_context(|| format!("scenario '{}'", s.name))?;
-        let load = load_of(s);
-        let key = (s.mix.name(), load.to_bits());
-        let roster = *roster_by_key.entry(key).or_insert_with(|| {
-            rosters.push(prepare_roster(base, s.mix, load, kmax_by_key[&key]));
-            rosters.len() - 1
-        });
-        let fracs = match s.frac {
-            Some(f) => vec![f],
-            None => size_fracs.to_vec(),
+        let key = key_of(s);
+        let roster = match roster_by_key.get(&key) {
+            Some(&ri) => ri,
+            None => {
+                let mut eb = base.clone();
+                eb.swf = swf_of(s);
+                eb.correlation = rho_of(s);
+                rosters.push(prepare_roster(&eb, s.mix, load_of(s), kmax_by_key[&key])?);
+                roster_by_key.insert(key, rosters.len() - 1);
+                rosters.len() - 1
+            }
         };
-        cells.push(CellPlan { name: s.name.clone(), roster, k: s.k, policy, fracs });
+        let scan = match s.frac {
+            Some(f) => SizeScan::Fracs(vec![f]),
+            None => SizeScan::Bisect,
+        };
+        cells.push(CellPlan { name: s.name.clone(), roster, k: s.k, policy, scan });
     }
     run_cells(&rosters, &cells, base.workers)
 }
 
 /// Pin the K = 2 alternating cooperative cell to the Fig. 7/8 regression
 /// anchor: its run at `base.total_nodes` must equal the DC run of
-/// [`consolidation::sweep`] bit for bit. Returns `Ok(false)` when the
-/// grid holds no such cell (scenario configs may not), `Err` on any
-/// numeric divergence.
+/// [`consolidation::sweep`] bit for bit (the bisecting scan's warm-start
+/// probe lands on exactly that size). Returns `Ok(false)` when the grid
+/// holds no such cell or runs on traces the fig7/fig8 pair never saw (a
+/// `[trace]` SWF archive or ρ > 0, from the base config *or* a
+/// per-scenario override — `MatrixCell::trace_driven` records which),
+/// `Err` on any numeric divergence.
 pub fn verify_anchor(base: &ExperimentConfig, cells: &[MatrixCell]) -> Result<bool> {
+    if base.swf.is_some() || base.correlation != 0.0 {
+        return Ok(false); // the whole grid is trace-driven
+    }
     let Some(cell) = cells.iter().find(|c| {
         c.k == 2
             && c.mix == RosterMix::Alternating
             && c.policy == "cooperative"
+            && !c.trace_driven
             && c.load.to_bits() == base.hpc.target_load.to_bits()
     }) else {
         return Ok(false);
@@ -542,6 +708,8 @@ fn cell_json(c: &MatrixCell) -> Json {
         ("lease_secs", Json::num(c.lease_secs as f64)),
         ("load", Json::num(c.load)),
         ("dedicated_nodes", Json::num(c.dedicated_nodes as f64)),
+        ("scan", Json::str(&c.scan)),
+        ("trace_driven", Json::Bool(c.trace_driven)),
         (
             "required_nodes",
             c.required_nodes.map(|n| Json::num(n as f64)).unwrap_or(Json::Null),
@@ -552,11 +720,13 @@ fn cell_json(c: &MatrixCell) -> Json {
     ])
 }
 
-/// The machine-readable table (`out/matrix.json`): schema version 1.
+/// The machine-readable table (`out/matrix.json`): schema version 2
+/// (version 1 + the per-cell `scan` kind; `runs` are now the scan's
+/// probes rather than a fixed fraction grid).
 pub fn matrix_json(cells: &[MatrixCell], quick: bool) -> Json {
     Json::obj(vec![
         ("suite", Json::str("matrix")),
-        ("schema_version", Json::num(1.0)),
+        ("schema_version", Json::num(2.0)),
         ("quick", Json::Bool(quick)),
         ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
     ])
@@ -651,6 +821,16 @@ mod tests {
         cfg
     }
 
+    /// Small quotas keep the scans (and the linear oracle) cheap.
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = fast_cfg();
+        cfg.st_nodes = 24;
+        cfg.ws_nodes = 10;
+        cfg.hpc.machine_nodes = 24;
+        cfg.web.target_peak_instances = 8;
+        cfg
+    }
+
     fn small_axes(base: &ExperimentConfig) -> MatrixAxes {
         MatrixAxes {
             ks: vec![2, 3],
@@ -661,18 +841,18 @@ mod tests {
                 PolicyAxis::Mixed { lease_secs: 1800 },
             ],
             loads: vec![base.hpc.target_load],
-            size_fracs: vec![1.0, 0.8],
+            scan: SizeScan::Bisect,
             quick: true,
         }
     }
 
     /// The acceptance gate: parallel matrix tables are bit-identical to
-    /// serial ones (same cells, same runs, same numbers).
+    /// serial ones (same cells, same probes, same numbers).
     #[test]
     fn parallel_matrix_is_bit_identical_to_serial() {
-        let mut serial = fast_cfg();
+        let mut serial = small_cfg();
         serial.workers = 1;
-        let mut par = fast_cfg();
+        let mut par = small_cfg();
         par.workers = 4;
         let a = run_matrix(&serial, &small_axes(&serial)).unwrap();
         let b = run_matrix(&par, &small_axes(&par)).unwrap();
@@ -684,42 +864,118 @@ mod tests {
         assert_eq!(matrix_csv(&a), matrix_csv(&b));
     }
 
-    /// The acceptance regression: the K = 2 alternating cooperative cell
-    /// at the paper's cost fraction replays the Fig. 7/8 DC run bit for
-    /// bit (chained through `scale`'s own anchor test to the paper runs).
+    /// Correlation determinism (same seed + same ρ ⇒ bit-identical demand
+    /// and tables across worker layouts), and ρ actually matters.
     #[test]
-    fn k2_cooperative_cell_matches_fig7_fig8_anchor() {
-        let base = ExperimentConfig::default();
-        let axes = MatrixAxes {
-            ks: vec![2],
-            mixes: vec![RosterMix::Alternating],
-            policies: vec![PolicyAxis::Base(PolicySpec::Cooperative)],
-            loads: vec![base.hpc.target_load],
-            size_fracs: default_size_fracs(&base, true),
-            quick: true,
-        };
-        let cells = run_matrix(&base, &axes).unwrap();
-        assert_eq!(cells.len(), 1);
-        assert!(verify_anchor(&base, &cells).unwrap(), "anchor cell missing from the grid");
+    fn correlated_matrix_is_deterministic_across_worker_layouts() {
+        let mut serial = small_cfg();
+        serial.correlation = 0.6;
+        serial.workers = 1;
+        let mut par = serial.clone();
+        par.workers = 4;
+        let mut axes = small_axes(&serial);
+        axes.ks = vec![3];
+        axes.mixes = vec![RosterMix::ServiceHeavy];
+        let a = run_matrix(&serial, &axes).unwrap();
+        let b = run_matrix(&par, &axes).unwrap();
+        assert_eq!(
+            matrix_json(&a, true).to_string(),
+            matrix_json(&b, true).to_string(),
+            "correlated matrix diverged across worker layouts"
+        );
+        // ρ rewires the service traces, so the ρ=0 grid must differ
+        let mut indep = serial.clone();
+        indep.correlation = 0.0;
+        let c = run_matrix(&indep, &axes).unwrap();
+        assert_ne!(
+            matrix_json(&a, true).to_string(),
+            matrix_json(&c, true).to_string(),
+            "ρ=0.6 produced the same tables as independent traces"
+        );
     }
+
+    /// Bisection returns exactly what the exhaustive descending walk
+    /// returns, with far fewer probes (fixed cells here; randomized cells
+    /// live in rust/tests/properties.rs).
+    #[test]
+    fn bisect_matches_the_linear_oracle_with_fewer_probes() {
+        let mut cfg = small_cfg();
+        cfg.hpc.target_load = 0.6; // deep completion plateau
+        cfg.workers = 1;
+        for (mix, policy) in [
+            (RosterMix::Alternating, PolicyAxis::Base(PolicySpec::Cooperative)),
+            (RosterMix::ServiceHeavy, PolicyAxis::Base(PolicySpec::Tiered)),
+        ] {
+            let mut axes = MatrixAxes {
+                ks: vec![3],
+                mixes: vec![mix],
+                policies: vec![policy],
+                loads: vec![cfg.hpc.target_load],
+                scan: SizeScan::Bisect,
+                quick: true,
+            };
+            let bisect = run_matrix(&cfg, &axes).unwrap().remove(0);
+            axes.scan = SizeScan::LinearOracle;
+            let oracle = run_matrix(&cfg, &axes).unwrap().remove(0);
+            assert_eq!(
+                bisect.required_nodes, oracle.required_nodes,
+                "{}/{}: bisect {:?} vs oracle {:?}",
+                mix.name(),
+                bisect.policy,
+                bisect.required_nodes,
+                oracle.required_nodes
+            );
+            assert_eq!(bisect.scan, "bisect");
+            assert_eq!(oracle.scan, "linear-oracle");
+            assert!(
+                bisect.runs.len() < oracle.runs.len(),
+                "{}: bisect probed {} sizes, oracle {}",
+                bisect.name,
+                bisect.runs.len(),
+                oracle.runs.len()
+            );
+        }
+    }
+
+    // The K = 2 anchor regression — the bisecting scan's warm-start probe
+    // replaying the Fig. 7/8 DC run bit for bit — lives in
+    // rust/tests/properties.rs (`prop_k2_anchor_bit_identical_through_
+    // bisect_scan`); it runs the full two-week default config, so one
+    // copy of it is plenty.
 
     #[test]
     fn cells_scan_descending_and_reduce_consistently() {
-        let cfg = fast_cfg();
+        let cfg = small_cfg();
         let cells = run_matrix(&cfg, &small_axes(&cfg)).unwrap();
         assert_eq!(cells.len(), 2 * 2 * 3, "ks × mixes × policies");
         for c in &cells {
             assert!(!c.runs.is_empty());
+            assert_eq!(c.scan, "bisect");
             assert!(
                 c.runs.windows(2).all(|w| w[0].nodes > w[1].nodes),
                 "{}: sizes not strictly descending",
                 c.name
             );
+            // the full-cost baseline is always probed (it gates the rest)
+            assert_eq!(c.runs[0].nodes, c.dedicated_nodes, "{}", c.name);
+            assert!((c.runs[0].frac - 1.0).abs() < 1e-12, "{}", c.name);
             assert_eq!(c.per_dept.len(), c.k, "{}", c.name);
             if let Some(req) = c.required_nodes {
                 let run = c.runs.iter().find(|r| r.nodes == req).unwrap();
                 assert_eq!(run.shortage_node_secs, 0, "{}", c.name);
+                assert!(run.completed >= c.runs[0].completed, "{}", c.name);
                 assert_eq!(c.decisive().nodes, req);
+                // exactness: every probe below the required size failed
+                // the gate (that is what "minimal feasible" means)
+                for r in c.runs.iter().filter(|r| r.nodes < req) {
+                    assert!(
+                        r.shortage_node_secs > 0 || r.completed < c.runs[0].completed,
+                        "{}: probe at {} nodes was feasible below required {}",
+                        c.name,
+                        r.nodes,
+                        req
+                    );
+                }
             }
             // the decisive per-dept breakdown closes against the aggregate
             assert_eq!(
@@ -729,17 +985,23 @@ mod tests {
                 c.name
             );
         }
-        // cooperative cells keep every service department whole at every
-        // scanned size (WS priority is absolute)
+        // cooperative cells always pass the gate at full cost, so the
+        // bisection always lands on a required size for them
         for c in cells.iter().filter(|c| c.policy == "cooperative") {
-            assert!(c.runs.iter().all(|r| r.shortage_node_secs == 0), "{}", c.name);
             assert!(c.required_nodes.is_some(), "{}", c.name);
+            let req = c.required_nodes.unwrap();
+            // …and every probe at or above it kept the services whole
+            assert!(
+                c.runs.iter().filter(|r| r.nodes >= req).all(|r| r.shortage_node_secs == 0),
+                "{}",
+                c.name
+            );
         }
     }
 
     #[test]
     fn scenarios_run_in_place_of_the_grid() {
-        let cfg = fast_cfg();
+        let cfg = small_cfg();
         let scenarios = vec![
             ScenarioSpec {
                 name: "paper-pair".into(),
@@ -749,6 +1011,8 @@ mod tests {
                 lease_secs: 3600,
                 load: None,
                 frac: Some(0.8),
+                trace: None,
+                correlation: None,
             },
             ScenarioSpec {
                 name: "portal-farm".into(),
@@ -758,17 +1022,26 @@ mod tests {
                 lease_secs: 900,
                 load: Some(0.9),
                 frac: None,
+                trace: None,
+                correlation: Some(0.5),
             },
         ];
-        // ascending caller-supplied fracs are normalized to the descending
-        // scan order (the first run is the completion-gate baseline)
-        let cells = run_scenarios(&cfg, &scenarios, &[0.8, 1.0]).unwrap();
+        let cells = run_scenarios(&cfg, &scenarios).unwrap();
         assert_eq!(cells.len(), 2);
         assert_eq!(cells[0].name, "paper-pair");
-        assert_eq!(cells[0].runs.len(), 1, "explicit frac pins a single size");
+        assert_eq!(cells[0].scan, "fracs");
+        assert_eq!(
+            cells[0].runs.len(),
+            2,
+            "explicit frac pins one size next to the full-cost baseline"
+        );
+        assert!((cells[0].runs[0].frac - 1.0).abs() < 1e-12);
+        assert!((cells[0].runs[1].frac - 0.8).abs() < 1e-12);
+        // the unpinned scenario bisects
+        assert_eq!(cells[1].scan, "bisect");
         assert!(
             cells[1].runs.windows(2).all(|w| w[0].nodes > w[1].nodes),
-            "scenario size scan must be normalized descending"
+            "scenario size scan must be descending"
         );
         assert!((cells[1].runs[0].frac - 1.0).abs() < 1e-12);
         assert_eq!(cells[1].policy, "mixed");
@@ -776,23 +1049,79 @@ mod tests {
         assert_eq!(cells[1].k, 4);
         assert_eq!(cells[1].per_dept.len(), 4);
         assert!((cells[1].load - 0.9).abs() < 1e-12);
-        assert!(run_scenarios(&cfg, &[], &[1.0]).is_err());
+        assert!(run_scenarios(&cfg, &[]).is_err());
+    }
+
+    /// Per-scenario `trace` / `correlation` overrides reach the roster:
+    /// an archive-driven scenario replays the fixture's jobs, and the
+    /// anchor check is skipped for trace-driven grids rather than failing.
+    #[test]
+    fn scenario_trace_overrides_drive_the_roster() {
+        let cfg = small_cfg();
+        let scenarios = vec![ScenarioSpec {
+            name: "swf-pair".into(),
+            k: 2,
+            mix: RosterMix::Alternating,
+            policy_kind: "cooperative".into(),
+            lease_secs: 3600,
+            load: None,
+            frac: Some(1.0),
+            trace: Some("tests/fixtures/mini.swf".into()),
+            correlation: None,
+        }];
+        let cells = run_scenarios(&cfg, &scenarios).unwrap();
+        // the fixture holds 22 usable jobs — the synth trace holds 150
+        let batch: u64 = cells[0]
+            .per_dept
+            .iter()
+            .filter(|d| d.kind == DeptKind::Batch)
+            .map(|d| d.completed + d.killed + d.in_flight as u64)
+            .sum();
+        assert_eq!(batch, 22, "archive override did not reach the batch trace");
+        assert!(cells[0].trace_driven, "scenario trace override must mark the cell");
+        // the anchor check must *skip* this anchor-shaped trace-driven
+        // cell even though the base config itself is clean — the cell ran
+        // at exactly base.total_nodes, so only the trace_driven flag
+        // stands between us and a spurious divergence failure
+        let mut anchor_base = cfg.clone();
+        anchor_base.total_nodes = cells[0].dedicated_nodes;
+        assert!(
+            !verify_anchor(&anchor_base, &cells).unwrap(),
+            "anchor must skip per-scenario trace-driven cells"
+        );
+        // a swf-configured base skips (not fails) the fig7/8 anchor check
+        let mut swf_cfg = ExperimentConfig::default();
+        swf_cfg.swf = Some("tests/fixtures/mini.swf".into());
+        assert!(!verify_anchor(&swf_cfg, &cells).unwrap());
+        let mut rho_cfg = ExperimentConfig::default();
+        rho_cfg.correlation = 0.4;
+        assert!(!verify_anchor(&rho_cfg, &cells).unwrap());
+        // a bad scenario trace path errors instead of falling back
+        let mut bad = scenarios;
+        bad[0].trace = Some("tests/fixtures/absent.swf".into());
+        assert!(run_scenarios(&cfg, &bad).is_err());
     }
 
     #[test]
     fn json_table_has_the_ci_schema() {
-        let cfg = fast_cfg();
+        let cfg = small_cfg();
         let mut axes = small_axes(&cfg);
         axes.ks = vec![2];
         axes.mixes = vec![RosterMix::Alternating];
         let cells = run_matrix(&cfg, &axes).unwrap();
         let doc = Json::parse(&matrix_json(&cells, true).to_string()).unwrap();
         assert_eq!(doc.get("suite").unwrap().as_str(), Some("matrix"));
-        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(1));
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(2));
         assert_eq!(doc.get("quick").unwrap().as_bool(), Some(true));
         let cells_j = doc.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells_j.len(), cells.len());
         for c in cells_j {
+            assert_eq!(c.get("scan").unwrap().as_str(), Some("bisect"));
+            assert_eq!(
+                c.get("trace_driven").unwrap().as_bool(),
+                Some(false),
+                "synthetic grid cells must not read trace-driven"
+            );
             for key in [
                 "name",
                 "k",
@@ -801,6 +1130,8 @@ mod tests {
                 "lease_secs",
                 "load",
                 "dedicated_nodes",
+                "scan",
+                "trace_driven",
                 "required_nodes",
                 "required_frac",
                 "runs",
@@ -837,17 +1168,18 @@ mod tests {
         assert_eq!(MatrixAxes::full(&base, 10).ks, vec![2, 3, 4, 6, 8, 10]);
         assert_eq!(MatrixAxes::full(&base, 2).ks, vec![2]);
         assert!(full.policies.len() >= 8, "base + lease grid + mixed");
-        assert!(full.planned_runs() > 0);
+        assert!(full.planned_cells() > 0);
+        // both grids search by bisection (the oracle is a test flag only)
+        assert_eq!(full.scan, SizeScan::Bisect);
         let quick = MatrixAxes::quick(&base, 16);
         assert_eq!(quick.ks, vec![2, 4, 16]);
         assert!(quick.quick);
-        assert_eq!(quick.size_fracs.len(), 2);
+        assert_eq!(quick.scan, SizeScan::Bisect);
         let tiny = MatrixAxes::quick(&base, 2);
         assert_eq!(tiny.ks, vec![2]);
-        // the paper's ratio is always on the scan so the anchor exists
-        let paper = scale::default_ratio(&base);
-        assert!(quick.size_fracs.iter().any(|f| f.to_bits() == paper.to_bits()));
-        assert!(full.size_fracs.iter().any(|f| f.to_bits() == paper.to_bits()));
+        assert_eq!(SizeScan::Bisect.name(), "bisect");
+        assert_eq!(SizeScan::LinearOracle.name(), "linear-oracle");
+        assert_eq!(SizeScan::Fracs(vec![1.0]).name(), "fracs");
     }
 
     #[test]

@@ -22,8 +22,8 @@ use crate::config::{DeptSpec, ExperimentConfig, RosterMix};
 use crate::coordinator::{ConsolidationSim, DeptInput, DeptWorkload, RunResult};
 use crate::provision::{DeptProfile, PolicyChoice, PolicySpec};
 use crate::trace::csv::Table;
-use crate::trace::hpc_synth;
 use crate::trace::web_synth::WebTraceConfig;
+use crate::trace::{archive, correlated, hpc_synth};
 use crate::workload::Job;
 
 use super::{fig5, parallel};
@@ -86,8 +86,16 @@ fn derive_seed(base_seed: u64, ordinal: u64) -> u64 {
 }
 
 /// One service department's shared trace: the uncapped demand series, its
-/// peak, and the seeded web config (to regenerate when a cap binds).
-pub(crate) type ServiceTrace = (Arc<[u64]>, u64, WebTraceConfig);
+/// peak, and everything needed to regenerate it when a cap binds (the
+/// seeded web config plus the roster's correlation parameters).
+#[derive(Clone)]
+pub(crate) struct ServiceTrace {
+    series: Arc<[u64]>,
+    peak: u64,
+    web: WebTraceConfig,
+    rho: f64,
+    latent_seed: u64,
+}
 
 /// Per-department shared traces (generated once, `Arc`-shared across every
 /// run that replays the department). Shared with the scenario-matrix
@@ -99,7 +107,19 @@ pub(crate) struct DeptTraces {
     demand: Vec<Option<ServiceTrace>>,
 }
 
-pub(crate) fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> DeptTraces {
+/// Generate (or load) every department's trace. Batch departments replay
+/// the `[trace] swf` archive when one is configured (windowed per batch
+/// ordinal — [`archive::Archive::dept_jobs`]) and the calibrated
+/// synthetic generator otherwise; service departments draw from the
+/// demand-correlated generator (`base.correlation`; ρ = 0 is
+/// bit-identical to the seed's independent traces).
+pub(crate) fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> Result<DeptTraces> {
+    let swf = base
+        .swf
+        .as_deref()
+        .map(|p| archive::Archive::load(p, base.swf_procs_per_node))
+        .transpose()?;
+    let latent_seed = correlated::latent_seed(base.web.seed);
     let mut jobs = vec![None; specs.len()];
     let mut demand = vec![None; specs.len()];
     let mut batch_ord = 0u64;
@@ -109,20 +129,32 @@ pub(crate) fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> DeptT
             DeptKind::Batch => {
                 let mut hpc = base.hpc.clone();
                 hpc.seed = spec.seed.unwrap_or_else(|| derive_seed(base.hpc.seed, batch_ord));
+                let trace = match &swf {
+                    Some(a) => a.dept_jobs(batch_ord, &hpc),
+                    None => hpc_synth::generate(&hpc),
+                };
                 batch_ord += 1;
-                jobs[i] = Some(hpc_synth::generate(&hpc).into());
+                jobs[i] = Some(trace.into());
             }
             DeptKind::Service => {
                 let mut web = base.web.clone();
                 web.seed = spec.seed.unwrap_or_else(|| derive_seed(base.web.seed, service_ord));
                 service_ord += 1;
-                let series: Arc<[u64]> = fig5::demand_series(&web, u64::MAX).into();
+                let series: Arc<[u64]> =
+                    fig5::correlated_demand_series(&web, base.correlation, latent_seed, u64::MAX)
+                        .into();
                 let peak = series.iter().copied().max().unwrap_or(0);
-                demand[i] = Some((series, peak, web));
+                demand[i] = Some(ServiceTrace {
+                    series,
+                    peak,
+                    web,
+                    rho: base.correlation,
+                    latent_seed,
+                });
             }
         }
     }
-    DeptTraces { jobs, demand }
+    Ok(DeptTraces { jobs, demand })
 }
 
 /// One department's input for a run whose service cap is `cap`: the
@@ -134,13 +166,13 @@ pub(crate) fn dept_input(spec: &DeptSpec, traces: &DeptTraces, idx: usize, cap: 
             DeptWorkload::Batch(traces.jobs[idx].as_ref().expect("batch trace").clone())
         }
         DeptKind::Service => {
-            let (series, peak, web) = traces.demand[idx].as_ref().expect("service trace");
-            let series = if cap >= *peak {
-                series.clone()
+            let t = traces.demand[idx].as_ref().expect("service trace");
+            let series = if cap >= t.peak {
+                t.series.clone()
             } else {
                 // a binding cap changes the autoscaler trajectory, not
                 // just the peak — regenerate through the real scaler
-                fig5::demand_series(web, cap).into()
+                fig5::correlated_demand_series(&t.web, t.rho, t.latent_seed, cap).into()
             };
             DeptWorkload::Service(series)
         }
@@ -226,7 +258,7 @@ pub fn scale_sweep(
     assert!(ratio > 0.0 && ratio <= 1.0, "ratio must be in (0, 1]");
     let kmax = ks.iter().copied().max().unwrap_or(2).max(2);
     let specs = default_departments(kmax, base);
-    let traces = build_traces(&specs, base);
+    let traces = build_traces(&specs, base)?;
 
     // plan: dedicated runs for every department, then one consolidated
     // run per K
@@ -288,7 +320,7 @@ pub fn run_departments(cfg: &ExperimentConfig) -> Result<RunResult> {
         bail!("no [[department]] entries in the config (see configs/departments.toml)");
     }
     cfg.validate()?;
-    let traces = build_traces(&cfg.departments, cfg);
+    let traces = build_traces(&cfg.departments, cfg)?;
     let policy =
         cfg.policy.clone().unwrap_or(PolicyChoice::Base(PolicySpec::Cooperative));
     run_roster(cfg, &cfg.departments, &traces, cfg.total_nodes, &policy)
@@ -412,6 +444,22 @@ mod tests {
         assert!(cells[1].dedicated_completed >= cells[0].dedicated_completed);
         assert_eq!(cells[0].dedicated_nodes, cfg.st_nodes + cfg.ws_nodes);
         assert_eq!(cells[1].dedicated_nodes, 2 * (cfg.st_nodes + cfg.ws_nodes));
+    }
+
+    #[test]
+    fn archive_and_correlation_drive_the_roster_traces() {
+        let mut cfg = fast_cfg();
+        cfg.swf = Some("tests/fixtures/mini.swf".into());
+        cfg.correlation = 0.7;
+        let cells = scale_sweep(&cfg, &[3], PolicySpec::Cooperative, 0.9).unwrap();
+        // K=3 alternating = two batch departments, each replaying a window
+        // of the 22-usable-job fixture instead of the 200-job synth trace
+        assert_eq!(cells[0].consolidated.submitted, 44, "{:?}", cells[0].consolidated);
+        assert!(cells[0].consolidated.completed > 0);
+        assert_eq!(cells[0].consolidated_shortage, 0);
+        // a missing archive is a load error, not a silent synth fallback
+        cfg.swf = Some("tests/fixtures/no-such.swf".into());
+        assert!(scale_sweep(&cfg, &[2], PolicySpec::Cooperative, 0.9).is_err());
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! phoenixd fig8   [--sizes ...]
 //! phoenixd sweep  [--sizes ...]            # fig7 + fig8 + headline
 //! phoenixd scale  [--kmax 8] [--ratio 0.769] [--policy cooperative|lease|tiered|...]
-//! phoenixd matrix [--kmax 16] [--quick]    # roster × policy × lease × load grid
+//! phoenixd matrix [--kmax 16] [--quick] [--swf PATH] [--correlation R]
+//!                                          # roster × policy × lease × load grid;
+//!                                          # each cell bisects to its required size
 //! phoenixd depts  --config FILE            # run a [[department]] roster
 //! phoenixd ablate [--what kill|sched|scaler]
 //! phoenixd serve  [--nodes 160] [--secs 3600] [--speedup 100] [--predictive]
@@ -50,6 +52,16 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.hpc.target_load = args.get_f64("load", cfg.hpc.target_load)?;
     cfg.workers = args.get_u64("workers", cfg.workers as u64)? as usize;
+    // trace-driven rosters: a real SWF archive for the batch departments
+    // and/or demand correlation for the service departments. Only the
+    // roster-building subcommands (matrix / scale / depts) consume these —
+    // the fig5/fig7/fig8/sweep reproductions stay on the paper's
+    // calibrated synthetic traces (see USAGE).
+    if let Some(path) = args.get("swf") {
+        cfg.swf = Some(path.to_string());
+    }
+    cfg.swf_procs_per_node = args.get_u64("procs-per-node", cfg.swf_procs_per_node)?;
+    cfg.correlation = args.get_f64("correlation", cfg.correlation)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -90,15 +102,19 @@ fig7      completed jobs + turnaround vs cluster size (paper Fig. 7)\n  \
 fig8      killed jobs vs cluster size (paper Fig. 8)\n  \
 sweep     fig7 + fig8 + the headline consolidation claim\n  \
 scale     economies-of-scale: K consolidated vs K dedicated, K=2..kmax\n  \
-matrix    scenario matrix: roster shape x policy x lease term x load x size\n  \
-          (--kmax N --quick; [[scenario]] configs override the grid)\n  \
+matrix    scenario matrix: roster shape x policy x lease term x load, each cell\n  \
+          bisecting to its exact required cluster size (--kmax N --quick;\n  \
+          [[scenario]] configs override the grid; --swf PATH replays a real\n  \
+          SWF archive, --correlation R ties the web departments' demand)\n  \
 depts     run the config's [[department]] roster on one shared cluster\n  \
 ablate    design ablations (--what kill|sched|scaler)\n  \
 sense     headline sensitivity across seeds and load band (--seeds N)\n  \
 serve     realtime coordinator on a live trace (--predictive for PJRT)\n  \
 tracegen  emit a synthetic trace (--kind hpc|web)\n  \
 validate  parse + validate a config file\n\
-common flags: --config FILE --seed N --load F --workers N (0 = all cores) --verbose";
+common flags: --config FILE --seed N --load F --workers N (0 = all cores) --verbose\n\
+trace flags (matrix/scale/depts rosters only; fig5/fig7/fig8/sweep keep the\n\
+paper's synthetic traces): --swf FILE --procs-per-node N --correlation R";
 
 fn cmd_fig5(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
@@ -279,6 +295,12 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
     let kmax = (args.get_u64("kmax", 8)? as usize).clamp(2, 64);
     let quick = args.has("quick");
+    if let Some(swf) = &cfg.swf {
+        println!("batch departments replay SWF archive {swf} (windowed per department)");
+    }
+    if cfg.correlation > 0.0 {
+        println!("service demand correlated at ρ = {}", cfg.correlation);
+    }
     let cells = if cfg.scenarios.is_empty() {
         let axes = if quick {
             matrix::MatrixAxes::quick(&cfg, kmax)
@@ -286,18 +308,18 @@ fn cmd_matrix(args: &Args) -> Result<()> {
             matrix::MatrixAxes::full(&cfg, kmax)
         };
         println!(
-            "scenario matrix: {} rosters × {} Ks × {} policies × {} sizes ({} runs{})…",
+            "scenario matrix: {} rosters × {} Ks × {} policies = {} cells, each \
+             bisecting to its exact required cluster size{}…",
             axes.mixes.len(),
             axes.ks.len(),
             axes.policies.len(),
-            axes.size_fracs.len(),
-            axes.planned_runs(),
-            if quick { ", quick grid" } else { "" },
+            axes.planned_cells(),
+            if quick { " (quick grid)" } else { "" },
         );
         matrix::run_matrix(&cfg, &axes)?
     } else {
         println!("scenario matrix: {} [[scenario]] cells from the config…", cfg.scenarios.len());
-        matrix::run_scenarios(&cfg, &cfg.scenarios, &matrix::default_size_fracs(&cfg, quick))?
+        matrix::run_scenarios(&cfg, &cfg.scenarios)?
     };
     print!("{}", matrix::matrix_text(&cells));
     std::fs::create_dir_all("out")?;

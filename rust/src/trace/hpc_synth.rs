@@ -141,24 +141,37 @@ pub fn generate(cfg: &HpcTraceConfig) -> Vec<Job> {
         })
         .collect();
 
-    // --- deterministic load calibration (iterated because the runtime cap
-    // claws back part of each rescale) ---
-    let rt_cap = ((cfg.horizon as f64 * cfg.max_runtime_frac) as u64).max(60);
-    let capacity = (cfg.machine_nodes * cfg.horizon) as f64;
-    for _ in 0..8 {
-        let demand: f64 = jobs.iter().map(|j| (j.size * j.runtime) as f64).sum();
-        let scale = cfg.target_load * capacity / demand;
-        if (scale - 1.0).abs() < 0.005 {
-            break;
-        }
-        for j in &mut jobs {
-            j.runtime = ((j.runtime as f64 * scale).round() as u64).clamp(30, rt_cap);
-        }
-    }
+    calibrate_load(&mut jobs, cfg);
     for j in &mut jobs {
         j.requested = (j.runtime as f64 * rng.range_f64(1.1, 3.0)) as u64;
     }
     jobs
+}
+
+/// Deterministic load calibration: iteratively rescale runtimes so
+/// Σ size·runtime hits `target_load` × machine capacity, re-iterating
+/// because the runtime cap claws back part of each rescale. Shared with
+/// the SWF archive rescaler ([`super::archive::rescale`]) so the
+/// synthetic and trace-driven calibrations can never drift apart.
+pub(crate) fn calibrate_load(jobs: &mut [Job], cfg: &HpcTraceConfig) {
+    if cfg.target_load <= 0.0 {
+        return;
+    }
+    let rt_cap = ((cfg.horizon as f64 * cfg.max_runtime_frac) as u64).max(60);
+    let capacity = (cfg.machine_nodes * cfg.horizon) as f64;
+    for _ in 0..8 {
+        let demand: f64 = jobs.iter().map(|j| (j.size * j.runtime) as f64).sum();
+        if demand <= 0.0 {
+            break;
+        }
+        let scale = cfg.target_load * capacity / demand;
+        if (scale - 1.0).abs() < 0.005 {
+            break;
+        }
+        for j in jobs.iter_mut() {
+            j.runtime = ((j.runtime as f64 * scale).round() as u64).clamp(30, rt_cap);
+        }
+    }
 }
 
 /// Offered load of a job set against a machine (diagnostic, also used by

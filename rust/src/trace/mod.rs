@@ -12,7 +12,17 @@
 //!   peak/normal ratio) — [`web_synth`] generates a diurnal request-rate
 //!   series with match-day spikes calibrated so the Fig.-5 autoscaler
 //!   peaks at exactly the paper's 64 VMs.
+//!
+//! The N-department sweeps add two trace-driven layers on top
+//! (arXiv:1006.1401 / arXiv:1004.1276): [`archive`] windows and rescales
+//! one real SWF log into K deterministic batch-department traces (a
+//! miniature fixture ships at `tests/fixtures/mini.swf`), and
+//! [`correlated`] derives the K web-department demand series from one
+//! shared latent load process (ρ = 0 stays bit-identical to the
+//! independent [`web_synth`] output).
 
+pub mod archive;
+pub mod correlated;
 pub mod csv;
 pub mod hpc_synth;
 pub mod swf;

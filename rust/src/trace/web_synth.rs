@@ -111,6 +111,15 @@ fn match_shape(dt_secs: i64) -> f64 {
 
 /// Generate the calibrated rate series.
 pub fn generate(cfg: &WebTraceConfig) -> RateSeries {
+    calibrate(raw_shape(cfg), cfg)
+}
+
+/// The uncalibrated load *shape* (diurnal base × match spikes × AR(1)
+/// noise) — everything [`generate`] computes before the final
+/// deterministic rescale. Split out so [`super::correlated`] can blend
+/// shapes from several seeds into one demand-correlated department series
+/// and calibrate the blend once; `generate` = `calibrate(raw_shape(..))`.
+pub fn raw_shape(cfg: &WebTraceConfig) -> Vec<f64> {
     let mut rng = Rng::new(cfg.seed);
     let n = (cfg.horizon / cfg.sample_period) as usize;
     let days = (cfg.horizon / DAY).max(1);
@@ -173,11 +182,15 @@ pub fn generate(cfg: &WebTraceConfig) -> RateSeries {
         r *= (1.0 + noise).max(0.2);
         rates.push(r.max(0.01));
     }
+    rates
+}
 
-    // --- calibration: iterate the actual §III-C autoscaler until its peak
-    // instance demand equals the target (the equilibrium estimate
-    // ceil(R/(0.8·cap)) under-shoots because the ±1-per-20 s rule chases a
-    // noisy plateau, not the single max sample) ---
+/// Deterministically rescale a raw shape so the peak instance demand of
+/// the §III-C reactive autoscaler equals `cfg.target_peak_instances`:
+/// iterate the actual autoscaler until its peak hits the target (the
+/// equilibrium estimate ceil(R/(0.8·cap)) under-shoots because the
+/// ±1-per-20 s rule chases a noisy plateau, not the single max sample).
+pub fn calibrate(mut rates: Vec<f64>, cfg: &WebTraceConfig) -> RateSeries {
     let target = cfg.target_peak_instances;
     let mut scale = (target as f64 - 0.2) * 0.8 * cfg.instance_capacity_rps
         / rates.iter().cloned().fold(0.0, f64::max);

@@ -161,12 +161,23 @@ fn department_config_drives_a_k3_lease_run() {
 #[test]
 fn shipped_scenario_config_parses_and_validates() {
     let cfg = ExperimentConfig::from_file("configs/scenarios.toml").unwrap();
-    assert_eq!(cfg.scenarios.len(), 4);
+    assert_eq!(cfg.scenarios.len(), 5);
     let names: Vec<&str> = cfg.scenarios.iter().map(|s| s.name.as_str()).collect();
-    assert_eq!(names, vec!["paper-pair", "portal-farm", "hpc-shop-short-lease", "tiered-80pct"]);
+    assert_eq!(
+        names,
+        vec![
+            "paper-pair",
+            "portal-farm",
+            "hpc-shop-short-lease",
+            "tiered-80pct",
+            "correlated-portals"
+        ]
+    );
     assert_eq!(cfg.scenarios[1].policy_kind, "mixed");
     assert_eq!(cfg.scenarios[2].lease_secs, 600);
     assert_eq!(cfg.scenarios[3].frac, Some(0.8));
+    assert_eq!(cfg.scenarios[4].correlation, Some(0.8));
+    assert_eq!(cfg.scenarios[4].trace, None);
     // the shipped departments roster still parses too
     let cfg = ExperimentConfig::from_file("configs/departments.toml").unwrap();
     assert_eq!(cfg.departments.len(), 4);
@@ -192,10 +203,15 @@ fn scenario_config_drives_the_matrix() {
     .unwrap();
     let cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
     assert_eq!(cfg.scenarios.len(), 2);
-    let cells = matrix::run_scenarios(&cfg, &cfg.scenarios, &[1.0, 0.8]).unwrap();
+    let cells = matrix::run_scenarios(&cfg, &cfg.scenarios).unwrap();
     assert_eq!(cells.len(), 2);
     assert_eq!(cells[0].name, "pair");
-    assert_eq!(cells[0].runs.len(), 1, "frac pins one size");
+    assert_eq!(
+        cells[0].runs.len(),
+        2,
+        "frac pins one size next to the full-cost baseline"
+    );
+    assert_eq!(cells[1].scan, "bisect", "unpinned scenarios bisect");
     assert_eq!(cells[1].per_dept.len(), 3);
     assert_eq!(cells[1].policy, "mixed");
     for c in &cells {
@@ -205,6 +221,49 @@ fn scenario_config_drives_the_matrix() {
     let json = matrix::matrix_json(&cells, false).to_string();
     let doc = phoenix_cloud::util::json::Json::parse(&json).unwrap();
     assert_eq!(doc.get("cells").unwrap().as_arr().unwrap().len(), 2);
+}
+
+/// The trace-driven path end to end, exactly as
+/// `phoenixd matrix --swf tests/fixtures/mini.swf --quick` runs it: every
+/// batch department replays the bundled archive, the bisecting scans
+/// produce schema-valid tables, and the fig7/8 anchor pin is skipped
+/// (not failed) because the traces legitimately diverge.
+#[test]
+fn swf_fixture_drives_the_matrix() {
+    use phoenix_cloud::experiments::matrix;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.horizon = DAY;
+    cfg.hpc.horizon = DAY;
+    cfg.web.horizon = DAY;
+    cfg.swf = Some("tests/fixtures/mini.swf".into());
+    cfg.st_nodes = 24;
+    cfg.ws_nodes = 10;
+    cfg.hpc.machine_nodes = 24;
+    cfg.web.target_peak_instances = 8;
+    cfg.validate().unwrap();
+    let axes = matrix::MatrixAxes::quick(&cfg, 2);
+    let cells = matrix::run_matrix(&cfg, &axes).unwrap();
+    assert_eq!(cells.len(), axes.planned_cells());
+    for c in &cells {
+        assert!(!c.runs.is_empty(), "{}", c.name);
+        assert_eq!(c.scan, "bisect", "{}", c.name);
+        assert!(c.trace_driven, "{}: archive-driven cell not marked", c.name);
+        assert!(c.runs.iter().all(|r| r.events > 0), "{}", c.name);
+    }
+    assert!(
+        !matrix::verify_anchor(&cfg, &cells).unwrap(),
+        "anchor must be skipped on trace-driven grids"
+    );
+    let doc = phoenix_cloud::util::json::Json::parse(
+        &matrix::matrix_json(&cells, true).to_string(),
+    )
+    .unwrap();
+    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(2));
+    assert_eq!(
+        doc.get("cells").unwrap().as_arr().unwrap().len(),
+        cells.len()
+    );
 }
 
 /// The economies-of-scale sweep emits a consolidated-vs-dedicated row for

@@ -4,8 +4,9 @@
 //! failures print a `PHOENIX_PROP_SEED` that reproduces them exactly.
 
 use phoenix_cloud::cluster::{DeptId, DeptKind, Ledger};
-use phoenix_cloud::config::{ExperimentConfig, KillOrder, SchedulerKind};
+use phoenix_cloud::config::{ExperimentConfig, KillOrder, RosterMix, SchedulerKind};
 use phoenix_cloud::coordinator::{ConsolidationSim, DeptInput, DeptWorkload};
+use phoenix_cloud::experiments::matrix::{self, MatrixAxes, PolicyAxis, SizeScan};
 use phoenix_cloud::prop_assert;
 use phoenix_cloud::provision::{
     DeptProfile, LeaseBased, PolicyChoice, PolicySpec, ProvisionPolicy, TieredCooperative,
@@ -589,6 +590,117 @@ fn prop_all_service_roster_runs_cleanly() {
         );
         Ok(())
     });
+}
+
+/// The bisecting required-size scan returns exactly what the retained
+/// linear-scan oracle returns, on randomized scenario cells: random
+/// roster shape, K, policy, load, correlation, and seeds. Small quotas
+/// keep the oracle's O(size) walk affordable; the bisection's probe
+/// count must stay logarithmic.
+#[test]
+fn prop_matrix_bisect_matches_linear_oracle() {
+    check("matrix-bisect-oracle", 6, |g: &mut Gen| {
+        let mut cfg = ExperimentConfig::default();
+        let horizon = g.u64_in(20_000, 40_000);
+        cfg.horizon = horizon;
+        cfg.hpc.horizon = horizon;
+        cfg.web.horizon = horizon;
+        cfg.hpc.num_jobs = g.usize_in(40, 120);
+        cfg.st_nodes = g.u64_in(10, 24);
+        cfg.ws_nodes = g.u64_in(4, 12);
+        cfg.hpc.machine_nodes = cfg.st_nodes;
+        // moderate load: completions saturate above a capacity knee, so
+        // the feasibility frontier is sharp and monotone
+        cfg.hpc.target_load = g.f64_in(0.35, 0.75);
+        cfg.web.target_peak_instances = g.u64_in(2, cfg.ws_nodes);
+        cfg.hpc.seed = g.u64_in(1, u64::MAX - 1);
+        cfg.web.seed = g.u64_in(1, u64::MAX - 1);
+        cfg.correlation = *g.pick(&[0.0, 0.4, 0.9]);
+        cfg.workers = 1;
+        let k = g.usize_in(2, 4);
+        let mix = *g.pick(&[
+            RosterMix::Alternating,
+            RosterMix::ServiceHeavy,
+            RosterMix::BatchHeavy,
+        ]);
+        let policy = *g.pick(&[
+            PolicyAxis::Base(PolicySpec::Cooperative),
+            PolicyAxis::Base(PolicySpec::Tiered),
+            PolicyAxis::Base(PolicySpec::Lease { secs: 1800 }),
+            PolicyAxis::Mixed { lease_secs: 1800 },
+        ]);
+        let axes = |scan: SizeScan| MatrixAxes {
+            ks: vec![k],
+            mixes: vec![mix],
+            policies: vec![policy],
+            loads: vec![cfg.hpc.target_load],
+            scan,
+            quick: true,
+        };
+        let bisect = matrix::run_matrix(&cfg, &axes(SizeScan::Bisect))
+            .map_err(|e| format!("bisect scan failed: {e}"))?
+            .remove(0);
+        let oracle = matrix::run_matrix(&cfg, &axes(SizeScan::LinearOracle))
+            .map_err(|e| format!("oracle scan failed: {e}"))?
+            .remove(0);
+        prop_assert!(
+            bisect.required_nodes == oracle.required_nodes,
+            "K={k} {} {}: bisect found {:?}, linear oracle found {:?} \
+             (dedicated {}, bisect probes {:?})",
+            mix.name(),
+            bisect.policy,
+            bisect.required_nodes,
+            oracle.required_nodes,
+            bisect.dedicated_nodes,
+            bisect.runs.iter().map(|r| r.nodes).collect::<Vec<_>>()
+        );
+        // the whole point: logarithmic probe count (+2 for the baseline
+        // and the warm-start anchor)
+        let budget = 64 - bisect.dedicated_nodes.leading_zeros() as usize + 3;
+        prop_assert!(
+            bisect.runs.len() <= budget,
+            "bisect probed {} sizes of a {}-node range (budget {budget})",
+            bisect.runs.len(),
+            bisect.dedicated_nodes
+        );
+        // both scans probed the full-cost baseline first
+        prop_assert!(
+            bisect.runs[0].nodes == bisect.dedicated_nodes
+                && oracle.runs[0].nodes == oracle.dedicated_nodes,
+            "scan did not start from the full-cost baseline"
+        );
+        Ok(())
+    });
+}
+
+/// The K = 2 cooperative anchor survives the new scan path bit for bit:
+/// the bisection's warm-start probe at the paper's cluster size replays
+/// the Fig. 7/8 DC run exactly (`matrix::verify_anchor` compares every
+/// counter and the float bit patterns).
+#[test]
+fn prop_k2_anchor_bit_identical_through_bisect_scan() {
+    let base = ExperimentConfig::default();
+    let axes = MatrixAxes {
+        ks: vec![2],
+        mixes: vec![RosterMix::Alternating],
+        policies: vec![PolicyAxis::Base(PolicySpec::Cooperative)],
+        loads: vec![base.hpc.target_load],
+        scan: SizeScan::Bisect,
+        quick: true,
+    };
+    let cells = matrix::run_matrix(&base, &axes).unwrap();
+    assert_eq!(cells.len(), 1);
+    assert_eq!(cells[0].scan, "bisect");
+    assert!(!cells[0].trace_driven, "default grid must not read trace-driven");
+    assert!(
+        cells[0].runs.iter().any(|r| r.nodes == base.total_nodes),
+        "the bisecting scan must warm-start at the paper's {} nodes",
+        base.total_nodes
+    );
+    assert!(
+        matrix::verify_anchor(&base, &cells).unwrap(),
+        "bisecting scan lost the fig7/fig8 anchor run"
+    );
 }
 
 /// The sim engine delivers every event exactly once in time order, under

@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Validate an out/matrix.json table against schema version 2.
+
+Used by CI after both matrix smokes (the synthetic quick grid and the
+trace-driven run against the bundled SWF fixture):
+
+    python3 scripts/validate_matrix.py out/matrix.json --expect-kmax 8 \
+        --expect-policies mixed lease --expect-anchor-cell
+
+Schema v2 = v1 + the per-cell "scan" kind; "runs" are the scan's probes
+(descending) rather than a fixed fraction grid, and "required_nodes" is
+the exact minimal feasible size under the bisecting scan.
+"""
+
+import argparse
+import json
+import sys
+
+CELL_KEYS = (
+    "name", "k", "mix", "policy", "lease_secs", "load", "dedicated_nodes",
+    "scan", "trace_driven", "required_nodes", "required_frac", "runs",
+    "per_dept",
+)
+RUN_KEYS = (
+    "nodes", "frac", "completed", "killed", "in_flight",
+    "shortage_node_secs", "slo_violating_depts", "force_returns",
+    "avg_turnaround_s", "events",
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--expect-kmax", type=int, default=None,
+                    help="the grid must span K=2..this")
+    ap.add_argument("--expect-policies", nargs="*", default=[],
+                    help="policy names that must appear")
+    ap.add_argument("--expect-anchor-cell", action="store_true",
+                    help="require the K=2 alternating cooperative cell")
+    ap.add_argument("--expect-trace-driven", action="store_true",
+                    help="every cell must be marked trace_driven")
+    args = ap.parse_args()
+
+    with open(args.path) as f:
+        doc = json.load(f)
+    assert doc["suite"] == "matrix", doc.get("suite")
+    assert doc["schema_version"] == 2, doc.get("schema_version")
+    assert isinstance(doc["quick"], bool)
+    cells = doc["cells"]
+    assert cells, "no matrix cells recorded"
+
+    for c in cells:
+        for key in CELL_KEYS:
+            assert key in c, f"cell missing {key}: {sorted(c)}"
+        assert c["scan"] in ("bisect", "linear-oracle", "fracs"), c["scan"]
+        assert isinstance(c["trace_driven"], bool), c["name"]
+        if args.expect_trace_driven:
+            assert c["trace_driven"], f"cell {c['name']} not trace-driven"
+        assert c["runs"], f"cell {c['name']} has no runs"
+        nodes = [r["nodes"] for r in c["runs"]]
+        assert nodes == sorted(nodes, reverse=True), \
+            f"cell {c['name']}: probes not descending: {nodes}"
+        assert nodes[0] == c["dedicated_nodes"], \
+            f"cell {c['name']}: missing the full-cost baseline probe"
+        for r in c["runs"]:
+            for key in RUN_KEYS:
+                assert key in r, f"run missing {key}: {sorted(r)}"
+        if c["required_nodes"] is not None:
+            assert 1 <= c["required_nodes"] <= c["dedicated_nodes"], c["name"]
+            assert c["required_nodes"] in nodes, \
+                f"cell {c['name']}: required size was never simulated"
+        assert len(c["per_dept"]) == c["k"], c["name"]
+
+    if args.expect_kmax is not None:
+        ks = {c["k"] for c in cells}
+        assert 2 in ks and args.expect_kmax in ks, \
+            f"grid must span K=2..{args.expect_kmax}, got {sorted(ks)}"
+    policies = {c["policy"] for c in cells}
+    for p in args.expect_policies:
+        assert p in policies, f"missing policy {p}: {sorted(policies)}"
+    if args.expect_anchor_cell:
+        assert any(c["k"] == 2 and c["mix"] == "alternating"
+                   and c["policy"] == "cooperative" for c in cells), \
+            "anchor cell (K=2 alternating cooperative) missing"
+
+    print(f"{args.path} OK ({len(cells)} cells, "
+          f"{sum(len(c['runs']) for c in cells)} probes, "
+          f"scans: {sorted({c['scan'] for c in cells})})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
