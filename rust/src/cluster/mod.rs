@@ -179,6 +179,16 @@ impl Ledger {
         );
     }
 
+    /// Register one more department at runtime (dynamic affiliation,
+    /// arXiv:1003.0958): the ledger grows a zero-holding slot and returns
+    /// the new dense id. The pool size is unchanged — a joiner brings
+    /// demand, not nodes.
+    pub fn add_dept(&mut self) -> DeptId {
+        self.held.push(0);
+        self.check();
+        DeptId((self.held.len() - 1) as u16)
+    }
+
     /// Snapshot as (free, per-department holdings) for metrics sampling.
     pub fn snapshot(&self) -> (u64, Vec<u64>) {
         (self.free, self.held.clone())
@@ -243,6 +253,20 @@ mod tests {
         l.release(DeptId(3), 0).unwrap();
         l.transfer(DeptId(0), DeptId(3), 0).unwrap();
         assert_eq!(l.snapshot(), (5, vec![0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn add_dept_grows_the_ledger_at_runtime() {
+        let mut l = Ledger::new(20, 2);
+        l.grant(DeptId(0), 15).unwrap();
+        let joiner = l.add_dept();
+        assert_eq!(joiner, DeptId(2));
+        assert_eq!(l.num_depts(), 3);
+        assert_eq!(l.held(joiner), 0);
+        assert_eq!(l.total(), 20, "a joiner brings demand, not nodes");
+        l.grant(joiner, 5).unwrap();
+        l.transfer(DeptId(0), joiner, 3).unwrap();
+        assert_eq!(l.snapshot(), (0, vec![12, 0, 8]));
     }
 
     #[test]

@@ -112,6 +112,13 @@ pub struct DeptSpec {
     /// Trace seed override (None = derived from the base seed and the
     /// department index).
     pub seed: Option<u64>,
+    /// Trace second at which the department joins the shared cluster
+    /// (runtime affiliation, arXiv:1003.0958). 0 — the default — means
+    /// present from boot. Only the serve path (`phoenixd serve`) honors
+    /// joins; the virtual-time experiments reject rosters that use it.
+    /// Runtime joiners enter at their kind's default priority tier, so a
+    /// non-default `tier` on a joining department is ignored.
+    pub join_at: u64,
 }
 
 impl DeptSpec {
@@ -176,6 +183,7 @@ impl RosterMix {
             tier,
             quota: base.st_nodes,
             seed: None,
+            join_at: 0,
         };
         let service = |ord: usize| DeptSpec {
             name: format!("ws{ord}"),
@@ -183,6 +191,7 @@ impl RosterMix {
             tier: 0,
             quota: base.ws_nodes,
             seed: None,
+            join_at: 0,
         };
         (0..k)
             .map(|i| match self {
@@ -408,6 +417,12 @@ impl ExperimentConfig {
             if !self.departments.iter().any(|d| d.kind == DeptKind::Batch) {
                 bail!("at least one batch department required (nothing to consolidate)");
             }
+            if self.departments.iter().all(|d| d.join_at > 0) {
+                bail!(
+                    "every department has join_at > 0 — at least one must be \
+                     present at boot"
+                );
+            }
         } else if self.policy.is_some() {
             bail!("[policy] given but no [[department]] roster");
         }
@@ -535,7 +550,9 @@ impl ExperimentConfig {
                     DeptKind::Service => self.ws_nodes,
                 });
                 let seed = d.get("seed").and_then(Json::as_u64);
-                depts.push(DeptSpec { name, kind, tier, quota, seed });
+                let join_at = typed_u64(d, "join_at", &format!("department '{name}'"))?
+                    .unwrap_or(0);
+                depts.push(DeptSpec { name, kind, tier, quota, seed, join_at });
             }
             self.departments = depts;
         }
@@ -913,6 +930,7 @@ mod tests {
             tier: 0,
             quota: 64,
             seed: None,
+            join_at: 0,
         }];
         assert!(cfg.validate().is_err(), "no batch department");
         cfg.departments.push(DeptSpec {
@@ -921,10 +939,38 @@ mod tests {
             tier: 1,
             quota: 144,
             seed: None,
+            join_at: 0,
         });
         assert!(cfg.validate().is_err(), "duplicate names");
         cfg.departments[1].name = "hpc".into();
         cfg.validate().unwrap();
+        // a roster where nobody is present at boot cannot serve
+        cfg.departments[0].join_at = 600;
+        cfg.departments[1].join_at = 1200;
+        assert!(cfg.validate().is_err(), "all-joiner roster");
+        cfg.departments[1].join_at = 0;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn department_join_at_parses_and_defaults_to_boot() {
+        let doc = crate::util::toml::parse(
+            "[[department]]\nname = \"hpc\"\nkind = \"batch\"\n\n\
+             [[department]]\nname = \"late\"\nkind = \"batch\"\njoin_at = 1800\n\n\
+             [[department]]\nname = \"web\"\nkind = \"service\"\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.departments[0].join_at, 0, "default is present-at-boot");
+        assert_eq!(cfg.departments[1].join_at, 1800);
+        // a mistyped join_at errors instead of silently defaulting
+        let doc = crate::util::toml::parse(
+            "[[department]]\nname = \"x\"\nkind = \"batch\"\njoin_at = \"soon\"\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::default().apply_toml(&doc).is_err());
     }
 
     #[test]

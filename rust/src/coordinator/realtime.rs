@@ -1,45 +1,192 @@
-//! Realtime (wall-clock) mode: the same RPS / ST / WS logic running as
-//! live services on the message bus, with the WS autoscaler driven by a
-//! request-rate trace replayed at a configurable speedup — the shape of
-//! the paper's testbed run (§III-C), minus the Xen boxes.
+//! Realtime (wall-clock) mode: the Resource Provision Service and one CMS
+//! per department running as live services on the department-addressed
+//! message bus — the shape of the paper's testbed run (§III-C), minus the
+//! Xen boxes, generalized to any `[[department]]` roster under any
+//! configured [`crate::provision::ProvisionPolicy`] (the virtual-time layer has been
+//! N-department since the policy engine landed; this brings the serve
+//! path level with it).
 //!
-//! This is the serve path `phoenixd serve` and the predictive-scaling
-//! example use; the figure experiments use the virtual-time
-//! [`super::ConsolidationSim`] instead.
+//! This is the path `phoenixd serve` exercises; the figure experiments
+//! use the virtual-time [`super::ConsolidationSim`] instead. Both paths
+//! share the same servers ([`StServer`]/[`WsServer`]), ledger, and
+//! policies; where the sim dispatches events, the serve loop pumps
+//! [`Msg`] ticks — one quiescent bus dispatch per department per tick, in
+//! department-id order, mirroring the sim's same-timestamp event
+//! atomicity. The 2-department cooperative case reproduces the
+//! virtual-time totals on tick-aligned traces (pinned in
+//! `rust/tests/runtime_e2e.rs`).
+//!
+//! Runtime affiliation (arXiv:1003.0958): departments may join mid-run
+//! ([`Msg::DeptJoin`], driven by `join_at` on the roster spec) and leave
+//! again ([`Msg::DeptLeave`], driven by [`ServeDept::leave_at`]); a
+//! leaver's holdings are force-reclaimed over the bus and returned to the
+//! free pool.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cluster::DeptId;
-use crate::config::ExperimentConfig;
-use crate::provision::{two_dept_profiles, PolicySpec, Rps};
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{DeptId, DeptKind};
+use crate::config::{DeptSpec, ExperimentConfig, RosterMix};
+use crate::provision::{DeptProfile, PolicyChoice, PolicySpec, Rps};
+use crate::services::monitor::Monitor;
 use crate::services::{Bus, Ctx, Msg, Service, ServiceId};
 use crate::stcms::StServer;
 use crate::trace::web_synth::RateSeries;
-use crate::workload::Job;
+use crate::workload::{Job, JobState};
 use crate::wscms::autoscaler::utilization;
 use crate::wscms::{WsAction, WsServer};
 
-/// The scaling brain injected into the WS service: maps (avg_util, rate)
-/// to an instance target. Wraps either the reactive rule or the PJRT
-/// forecaster.
+use super::DeptSummary;
+
+/// The scaling brain injected into a service CMS: maps (avg_util, rate)
+/// to an instance target. Wraps the reactive rule, the PJRT forecaster,
+/// or a replay of a precomputed demand series.
 pub type ScalerFn = Box<dyn FnMut(f64, f64) -> u64>;
 
-/// Run statistics shared out of the boxed services (the bus owns the
-/// services; the report reads these after the loop).
-#[derive(Debug, Default)]
-struct Shared {
-    completed: Cell<u64>,
-    killed: Cell<u64>,
-    ws_peak: Cell<u64>,
-    ws_shortage: Cell<u64>,
+/// One department's input to the serve loop.
+pub struct ServeDept {
+    /// Identity, kind, quota, and (for runtime arrivals) `join_at`.
+    pub spec: DeptSpec,
+    pub workload: ServeWorkload,
+    /// Trace second at which the department leaves again (its holdings
+    /// are force-reclaimed to the free pool). `None` = stays to the end.
+    pub leave_at: Option<u64>,
 }
 
+impl ServeDept {
+    /// A batch department present from boot.
+    pub fn batch(name: &str, quota: u64, jobs: impl Into<Arc<[Job]>>) -> Self {
+        Self {
+            spec: DeptSpec {
+                name: name.to_string(),
+                kind: DeptKind::Batch,
+                tier: 1,
+                quota,
+                seed: None,
+                join_at: 0,
+            },
+            workload: ServeWorkload::Batch(jobs.into()),
+            leave_at: None,
+        }
+    }
+
+    /// A service department present from boot (booted with one instance;
+    /// the scaler takes over from the first tick).
+    pub fn service(name: &str, quota: u64, rates: RateSeries, scaler: ScalerFn) -> Self {
+        Self {
+            spec: DeptSpec {
+                name: name.to_string(),
+                kind: DeptKind::Service,
+                tier: 0,
+                quota,
+                seed: None,
+                join_at: 0,
+            },
+            workload: ServeWorkload::Service { rates, scaler, boot_instances: 1 },
+            leave_at: None,
+        }
+    }
+
+    /// Turn this department into a runtime arrival at trace second `t`.
+    pub fn joining_at(mut self, t: u64) -> Self {
+        self.spec.join_at = t;
+        self
+    }
+
+    /// Make the department leave at trace second `t`.
+    pub fn leaving_at(mut self, t: u64) -> Self {
+        self.leave_at = Some(t);
+        self
+    }
+}
+
+/// What a serve-path department runs.
+pub enum ServeWorkload {
+    /// Batch jobs, admitted to the department's ST-like CMS at their
+    /// trace submit times (ticks quantize admission).
+    Batch(Arc<[Job]>),
+    /// A request-rate series driving a live autoscaler. `boot_instances`
+    /// is granted from the free pool at t = 0 (the virtual-time sim's
+    /// first-sample boot grant — pass the demand series' first sample to
+    /// mirror it exactly); runtime joiners ignore it and claim on their
+    /// first tick instead.
+    Service { rates: RateSeries, scaler: ScalerFn, boot_instances: u64 },
+}
+
+// ---- shared run statistics ---------------------------------------------------
+// The bus owns the boxed services; the driver reads these after the loop.
+
+#[derive(Debug, Default)]
+struct DeptStats {
+    completed: Cell<u64>,
+    killed: Cell<u64>,
+    in_flight: Cell<usize>,
+    turnaround_sum: Cell<f64>,
+    holding: Cell<u64>,
+    shortage: Cell<u64>,
+    peak_demand: Cell<u64>,
+}
+
+#[derive(Debug, Default)]
+struct RpsStats {
+    force_returns: Cell<u64>,
+    forced_nodes: Cell<u64>,
+    denied: Cell<u64>,
+    free: Cell<u64>,
+    joins: Cell<u64>,
+    leaves: Cell<u64>,
+}
+
+// ---- the RPS service ---------------------------------------------------------
+
+/// The Resource Provision Service on the bus: owns the [`Rps`] (ledger +
+/// policy) and routes every department-addressed resource flow.
 struct RpsSvc {
     rps: Rps,
-    st: ServiceId,
-    ws: ServiceId,
+    /// Affiliated departments and their kinds (idle grants flow to the
+    /// batch members; join/leave edit this roster at runtime).
+    roster: BTreeMap<DeptId, DeptKind>,
+    /// Outstanding forced returns: (victim, claimant), FIFO per victim.
+    pending_force: VecDeque<(DeptId, DeptId)>,
+    /// Departments whose leave is waiting for their [`Msg::Released`].
+    leaving: Vec<DeptId>,
+    stats: Rc<RpsStats>,
+}
+
+impl RpsSvc {
+    fn batch_depts(&self) -> Vec<DeptId> {
+        self.roster
+            .iter()
+            .filter(|&(_, &k)| k == DeptKind::Batch)
+            .map(|(&d, _)| d)
+            .collect()
+    }
+
+    /// "If there are idle resources, provision all of them" (§II-B),
+    /// generalized: the policy distributes the free pool over the batch
+    /// members of the roster.
+    fn provision_idle_to_batch(&mut self, ctx: &mut Ctx<'_>) {
+        if self.rps.ledger().free() == 0 {
+            return;
+        }
+        let batch = self.batch_depts();
+        for (d, n) in self.rps.provision_idle(&batch, ctx.now()) {
+            if n > 0 {
+                ctx.send_to_dept(d, Msg::Grant { dept: d, nodes: n });
+            }
+        }
+    }
+
+    fn sync(&self) {
+        self.stats.free.set(self.rps.ledger().free());
+        self.stats.force_returns.set(self.rps.force_returns);
+        self.stats.forced_nodes.set(self.rps.forced_nodes);
+    }
 }
 
 impl Service for RpsSvc {
@@ -47,65 +194,205 @@ impl Service for RpsSvc {
         "resource-provision-service"
     }
 
-    fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_>) {
+        let now = ctx.now();
         match msg {
-            Msg::WsClaim { nodes } => {
-                let d = self.rps.request(DeptId::WS, nodes, ctx.now());
+            Msg::Claim { dept, nodes } => {
+                let d = self.rps.request(dept, nodes, now);
                 if d.from_free > 0 {
-                    ctx.send(self.ws, Msg::WsGrant { nodes: d.from_free });
+                    ctx.send_to_dept(dept, Msg::Grant { dept, nodes: d.from_free });
                 }
-                let force = d.force_total();
-                if force > 0 {
-                    // two-department wiring: every victim is the ST CMS
-                    ctx.send(self.st, Msg::ForceReturn { nodes: force });
+                for &(victim, m) in &d.force {
+                    self.pending_force.push_back((victim, dept));
+                    ctx.send_to_dept(victim, Msg::ForceReturn { dept: victim, nodes: m });
                 }
-            }
-            Msg::WsRelease { nodes } => {
-                self.rps.release(DeptId::WS, nodes, ctx.now());
-                let granted: u64 = self
-                    .rps
-                    .provision_idle(&[DeptId::ST], ctx.now())
-                    .iter()
-                    .map(|&(_, n)| n)
-                    .sum();
-                if granted > 0 {
-                    ctx.send(self.st, Msg::StGrant { nodes: granted });
+                // only service-side refusals count: a batch department
+                // re-claims its standing backlog every tick (that is how
+                // it discovers freed lease capacity), so counting those
+                // would inflate `denied` with the same unmet need each
+                // tick — the virtual-time path's denied counters are
+                // service-side only too
+                if d.denied > 0 && self.roster.get(&dept) == Some(&DeptKind::Service) {
+                    self.stats.denied.set(self.stats.denied.get() + d.denied);
                 }
             }
-            Msg::StReleased { nodes, .. } => {
-                self.rps.complete_force(DeptId::ST, DeptId::WS, nodes, ctx.now());
-                ctx.send(self.ws, Msg::WsGrant { nodes });
+            Msg::Release { dept, nodes } => {
+                self.rps.release(dept, nodes, now);
+                self.provision_idle_to_batch(ctx);
+            }
+            Msg::Released { dept, nodes, .. } => {
+                if let Some(i) = self.leaving.iter().position(|&d| d == dept) {
+                    // the final return of a departing CMS: everything goes
+                    // back to the free pool and the department is dropped
+                    self.leaving.swap_remove(i);
+                    self.rps.leave(dept, now);
+                    self.roster.remove(&dept);
+                    self.stats.leaves.set(self.stats.leaves.get() + 1);
+                    self.provision_idle_to_batch(ctx);
+                } else if let Some(i) =
+                    self.pending_force.iter().position(|&(v, _)| v == dept)
+                {
+                    let (victim, claimant) =
+                        self.pending_force.remove(i).expect("position just found");
+                    self.rps.complete_force(victim, claimant, nodes, now);
+                    ctx.send_to_dept(claimant, Msg::Grant { dept: claimant, nodes });
+                } else {
+                    // an unsolicited return conserves nodes as a release
+                    self.rps.release(dept, nodes, now);
+                }
+            }
+            Msg::LeaseReturn { dept, returned, renewed } => {
+                self.rps.lease_return(dept, returned, renewed, now);
+                // the freed capacity stays in the pool for urgent service
+                // claims; batch departments with queued work re-claim it
+                // on their next tick (arXiv:1006.1401's point)
+            }
+            Msg::DeptJoin { dept, kind, quota } => {
+                let tier = match kind {
+                    DeptKind::Service => 0,
+                    DeptKind::Batch => 1,
+                };
+                self.rps.join(DeptProfile { id: dept, kind, tier, quota }, now);
+                self.roster.insert(dept, kind);
+                self.stats.joins.set(self.stats.joins.get() + 1);
+            }
+            Msg::DeptLeave { dept } => {
+                let held = self.rps.ledger().held(dept);
+                if held > 0 {
+                    self.leaving.push(dept);
+                    ctx.send_to_dept(dept, Msg::ForceReturn { dept, nodes: held });
+                } else {
+                    self.rps.leave(dept, now);
+                    self.roster.remove(&dept);
+                    self.stats.leaves.set(self.stats.leaves.get() + 1);
+                }
+            }
+            Msg::Tick { now } => {
+                // lease expiry rides the tick: each expired lease becomes a
+                // LeaseExpired/LeaseReturn exchange with the holder
+                for (d, n) in self.rps.lease_expirations(now) {
+                    ctx.send_to_dept(d, Msg::LeaseExpired { dept: d, nodes: n });
+                }
             }
             _ => {}
         }
+        self.sync();
     }
 }
 
-struct StSvc {
+// ---- the batch CMS service ---------------------------------------------------
+
+struct BatchSvc {
+    dept: DeptId,
     st: StServer,
-    jobs: Vec<Job>,
+    jobs: Arc<[Job]>,
     next_job: usize,
+    /// Trace indices admitted early via [`Msg::SubmitJob`] (always ≥
+    /// `next_job`): the tick arrival loop skips them so a job is never
+    /// admitted twice.
+    submitted_early: BTreeSet<usize>,
     /// (finish_time, job_id) pending completions, processed on ticks.
     finishes: Vec<(u64, u64)>,
-    shared: Rc<Shared>,
+    rps: ServiceId,
+    monitor: ServiceId,
+    me: ServiceId,
+    stats: Rc<DeptStats>,
 }
 
-impl Service for StSvc {
+impl BatchSvc {
+    fn schedule(&mut self, now: u64) {
+        for s in self.st.schedule(now) {
+            self.finishes.push((s.finish_at, s.job_id));
+        }
+    }
+
+    /// Record `n` freshly killed jobs (the counters update incrementally —
+    /// cheap Cell writes, not an outcomes rescan per message).
+    fn count_killed(&self, n: usize) {
+        self.stats.killed.set(self.stats.killed.get() + n as u64);
+    }
+
+    /// Record the completion the CMS just pushed onto its outcomes.
+    fn count_completed(&self) {
+        debug_assert!(matches!(
+            self.st.outcomes.last().map(|o| o.state),
+            Some(JobState::Completed)
+        ));
+        if let Some(o) = self.st.outcomes.last() {
+            self.stats.completed.set(self.stats.completed.get() + 1);
+            self.stats
+                .turnaround_sum
+                .set(self.stats.turnaround_sum.get() + o.turnaround() as f64);
+        }
+    }
+
+    fn sync(&self) {
+        // jobs not yet admitted at the horizon count as in flight, so the
+        // accounting completed + killed + in_flight == submitted closes
+        // (`submitted_early` holds only indices the arrival cursor hasn't
+        // passed, so the subtraction never underflows)
+        self.stats.in_flight.set(
+            self.st.in_flight() + (self.jobs.len() - self.next_job)
+                - self.submitted_early.len(),
+        );
+        self.stats.holding.set(self.st.pool());
+    }
+}
+
+impl Service for BatchSvc {
     fn name(&self) -> &str {
         "st-server"
     }
 
-    fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_>) {
         match msg {
-            Msg::StGrant { nodes } => {
+            Msg::Grant { nodes, .. } => {
                 self.st.grant(nodes);
                 self.schedule(ctx.now());
             }
-            Msg::ForceReturn { nodes } => {
+            Msg::ForceReturn { nodes, .. } => {
                 let killed = self.st.force_return(nodes, ctx.now());
-                self.shared.killed.set(self.shared.killed.get() + killed.len() as u64);
-                let sender = ctx.sender();
-                ctx.send(sender, Msg::StReleased { nodes, killed: killed.len() as u64 });
+                self.count_killed(killed.len());
+                if let Some(sender) = ctx.sender().service() {
+                    ctx.send(sender, Msg::Released {
+                        dept: self.dept,
+                        nodes,
+                        killed: killed.len() as u64,
+                    });
+                }
+            }
+            Msg::LeaseExpired { nodes, .. } => {
+                // return what is idle, renew what is demonstrably busy
+                let returned = nodes.min(self.st.idle());
+                if returned > 0 {
+                    let killed = self.st.force_return(returned, ctx.now());
+                    debug_assert!(killed.is_empty(), "lease reclaim must only take idle nodes");
+                    self.count_killed(killed.len());
+                }
+                let busy = self.st.pool() - self.st.idle();
+                let renewed = (nodes - returned).min(busy);
+                if let Some(sender) = ctx.sender().service() {
+                    ctx.send(sender, Msg::LeaseReturn { dept: self.dept, returned, renewed });
+                }
+            }
+            Msg::SubmitJob { trace_idx, .. } => {
+                if trace_idx < self.next_job || self.submitted_early.contains(&trace_idx) {
+                    log::warn!(
+                        "{}: SubmitJob index {trace_idx} already admitted — dropped",
+                        self.dept
+                    );
+                } else if let Some(job) = self.jobs.get(trace_idx) {
+                    let job = job.clone();
+                    self.submitted_early.insert(trace_idx);
+                    self.st.submit(job);
+                    self.schedule(ctx.now());
+                } else {
+                    log::warn!(
+                        "{}: SubmitJob index {trace_idx} beyond trace ({} jobs) — dropped",
+                        self.dept,
+                        self.jobs.len()
+                    );
+                }
             }
             Msg::Tick { now } => {
                 // retire due completions
@@ -120,130 +407,418 @@ impl Service for StSvc {
                 });
                 for id in done {
                     if self.st.finish(id, now) {
-                        self.shared.completed.set(self.shared.completed.get() + 1);
+                        self.count_completed();
                     }
                 }
-                // admit newly arrived jobs
-                while self.next_job < self.jobs.len() && self.jobs[self.next_job].submit <= now {
-                    self.st.submit(self.jobs[self.next_job].clone());
+                // admit newly arrived jobs (skipping any the client tools
+                // already pushed through SubmitJob)
+                while self.next_job < self.jobs.len()
+                    && self.jobs[self.next_job].submit <= now
+                {
+                    if !self.submitted_early.remove(&self.next_job) {
+                        self.st.submit(self.jobs[self.next_job].clone());
+                    }
                     self.next_job += 1;
                 }
                 self.schedule(now);
+                // batch resource-management policy, serve-path flavor: ask
+                // upstream for the queued work the idle pool cannot cover
+                // (a no-op under the cooperative policy, whose free pool is
+                // always drained; lease/static/proportional policies grant
+                // from the pool per their contracts)
+                let need = self.st.queued_nodes().saturating_sub(self.st.idle());
+                if need > 0 {
+                    ctx.send(self.rps, Msg::Claim { dept: self.dept, nodes: need });
+                }
+                ctx.send(self.monitor, Msg::Heartbeat { from: self.me, now });
             }
             _ => {}
         }
+        self.sync();
     }
 }
 
-impl StSvc {
-    fn schedule(&mut self, now: u64) {
-        for s in self.st.schedule(now) {
-            self.finishes.push((s.finish_at, s.job_id));
-        }
-    }
-}
+// ---- the service CMS service -------------------------------------------------
 
-struct WsSvc {
+struct ServiceSvc {
+    dept: DeptId,
     ws: WsServer,
     scaler: ScalerFn,
     rates: RateSeries,
     cap: f64,
     rps: ServiceId,
-    shared: Rc<Shared>,
+    monitor: ServiceId,
+    me: ServiceId,
+    stats: Rc<DeptStats>,
 }
 
-impl Service for WsSvc {
+impl ServiceSvc {
+    fn sync(&self) {
+        self.stats.holding.set(self.ws.holding());
+        self.stats.shortage.set(self.ws.shortage_node_secs);
+    }
+}
+
+impl Service for ServiceSvc {
     fn name(&self) -> &str {
         "ws-server"
     }
 
-    fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_>) {
         match msg {
             Msg::Tick { now } => {
                 let rate = self.rates.at(now);
                 let held = self.ws.holding().max(1);
                 let util = utilization(rate, held, self.cap);
                 let target = (self.scaler)(util, rate);
-                self.shared.ws_peak.set(self.shared.ws_peak.get().max(target));
-                self.shared.ws_shortage.set(self.ws.shortage_node_secs);
+                self.stats.peak_demand.set(self.stats.peak_demand.get().max(target));
                 match self.ws.set_demand(target, now) {
                     WsAction::None => {}
                     WsAction::Release(n) => {
                         self.ws.release(n);
-                        ctx.send(self.rps, Msg::WsRelease { nodes: n });
+                        ctx.send(self.rps, Msg::Release { dept: self.dept, nodes: n });
                     }
-                    WsAction::Request(n) => ctx.send(self.rps, Msg::WsClaim { nodes: n }),
+                    WsAction::Request(n) => {
+                        ctx.send(self.rps, Msg::Claim { dept: self.dept, nodes: n })
+                    }
+                }
+                ctx.send(self.monitor, Msg::Heartbeat { from: self.me, now });
+            }
+            Msg::Grant { nodes, .. } => self.ws.grant(nodes),
+            Msg::ForceReturn { nodes, .. } => {
+                // a service department surrenders at most what it holds
+                // (only reachable under custom policies that name service
+                // victims — the built-ins never do)
+                let give = nodes.min(self.ws.holding());
+                if give > 0 {
+                    self.ws.release(give);
+                }
+                if let Some(sender) = ctx.sender().service() {
+                    ctx.send(sender, Msg::Released { dept: self.dept, nodes: give, killed: 0 });
                 }
             }
-            Msg::WsGrant { nodes } => self.ws.grant(nodes),
             _ => {}
+        }
+        self.sync();
+    }
+}
+
+// ---- the monitor service -----------------------------------------------------
+
+struct MonitorSvc {
+    monitor: Rc<RefCell<Monitor>>,
+}
+
+impl Service for MonitorSvc {
+    fn name(&self) -> &str {
+        "heartbeat-monitor"
+    }
+
+    fn handle(&mut self, msg: Msg, _ctx: &mut Ctx<'_>) {
+        if let Msg::Heartbeat { from, now } = msg {
+            self.monitor.borrow_mut().beat(from, now);
         }
     }
 }
 
-/// Summary of a realtime run.
+// ---- the serve loop ----------------------------------------------------------
+
+/// Summary of a realtime run — the serve-path mirror of the virtual-time
+/// [`super::RunResult`], with the same per-department breakdown shape.
 #[derive(Debug)]
 pub struct ServeReport {
+    pub label: String,
+    pub cluster_nodes: u64,
     pub sim_seconds: u64,
     pub wall: Duration,
     pub ticks: u64,
     pub messages: u64,
-    pub jobs_completed: u64,
-    pub jobs_killed: u64,
-    pub ws_peak_demand: u64,
+    pub submitted: usize,
+    pub completed: u64,
+    pub killed: u64,
+    /// Jobs still queued/running (or not yet admitted) at the horizon.
+    pub in_flight: usize,
+    /// Average turnaround of completed jobs, seconds.
+    pub avg_turnaround: f64,
+    /// Unmet service demand, node-seconds, summed over service depts.
     pub ws_shortage_node_secs: u64,
+    /// Highest instance target any service department asked for.
+    pub ws_peak_demand: u64,
+    pub force_returns: u64,
+    pub forced_nodes: u64,
+    /// Service-side demand the policy refused (non-cooperative baselines
+    /// only; a batch department's standing per-tick backlog claims are
+    /// not counted).
+    pub denied: u64,
+    /// Free-pool size when the loop ended (conservation check:
+    /// `free_end + Σ per_dept.holding_end == cluster_nodes`).
+    pub free_end: u64,
+    /// Runtime affiliation events processed.
+    pub joins: u64,
+    pub leaves: u64,
+    /// Services whose heartbeat was overdue at the horizon.
+    pub down_services: Vec<String>,
+    /// Per-department breakdown, in department-id order (leavers report
+    /// their final state).
+    pub per_dept: Vec<DeptSummary>,
 }
 
-/// Run the live coordinator for `sim_seconds` of trace time at `speedup`×
-/// wall clock (speedup 0 = as fast as possible).
-pub fn serve(
+/// Per-department driver bookkeeping, indexed by `DeptId` (joiners append).
+#[derive(Default)]
+struct RosterState {
+    specs: Vec<DeptSpec>,
+    stats: Vec<Rc<DeptStats>>,
+    service_ids: Vec<ServiceId>,
+    active: Vec<DeptId>,
+    pending_leaves: Vec<(u64, DeptId)>,
+    submitted: usize,
+}
+
+/// Immutable wiring every CMS service needs.
+struct Wiring {
+    rps: ServiceId,
+    monitor: ServiceId,
+    cap: f64,
+    scheduler: crate::config::SchedulerKind,
+    kill_order: crate::config::KillOrder,
+}
+
+/// Box one department's CMS, bind it in the bus directory, and record the
+/// driver-side bookkeeping. Boot members pass their pre-granted servers;
+/// runtime joiners pass `None` and start empty (they claim on their first
+/// tick).
+fn register_cms(
+    bus: &mut Bus,
+    wiring: &Wiring,
+    state: &mut RosterState,
+    dept: DeptId,
+    d: ServeDept,
+    st: Option<StServer>,
+    ws: Option<WsServer>,
+) -> Result<()> {
+    let share = Rc::new(DeptStats::default());
+    let me = bus.len_services();
+    let svc: Box<dyn Service> = match d.workload {
+        ServeWorkload::Batch(jobs) => {
+            state.submitted += jobs.len();
+            Box::new(BatchSvc {
+                dept,
+                st: st.unwrap_or_else(|| {
+                    StServer::for_dept(dept, wiring.scheduler, wiring.kill_order)
+                }),
+                jobs,
+                next_job: 0,
+                submitted_early: BTreeSet::new(),
+                finishes: Vec::new(),
+                rps: wiring.rps,
+                monitor: wiring.monitor,
+                me,
+                stats: Rc::clone(&share),
+            })
+        }
+        ServeWorkload::Service { rates, scaler, .. } => Box::new(ServiceSvc {
+            dept,
+            ws: ws.unwrap_or_else(|| WsServer::for_dept(dept)),
+            scaler,
+            rates,
+            cap: wiring.cap,
+            rps: wiring.rps,
+            monitor: wiring.monitor,
+            me,
+            stats: Rc::clone(&share),
+        }),
+    };
+    let id = bus
+        .register_dept(dept, svc)
+        .with_context(|| format!("registering {dept}"))?;
+    debug_assert_eq!(id, me);
+    if let Some(t) = d.leave_at {
+        state.pending_leaves.push((t, dept));
+    }
+    state.specs.push(d.spec);
+    state.stats.push(share);
+    state.service_ids.push(id);
+    state.active.push(dept);
+    Ok(())
+}
+
+/// Run the live coordinator over an explicit roster for `sim_seconds` of
+/// trace time at `speedup`× wall clock (0 = as fast as possible), under
+/// any [`PolicyChoice`] built from the boot members' profiles.
+///
+/// Departments with `spec.join_at > 0` join mid-run ([`Msg::DeptJoin`]);
+/// [`ServeDept::leave_at`] departures are reclaimed over the bus
+/// ([`Msg::DeptLeave`]). Bus protocol failures (livelock, routing to a
+/// department that never joined) surface as typed
+/// [`crate::services::BusError`]s in the `anyhow` chain — the serve-path
+/// mirror of the sim's `SimError`.
+pub fn serve_roster(
     cfg: &ExperimentConfig,
-    jobs: Vec<Job>,
-    rates: RateSeries,
-    scaler: ScalerFn,
+    policy: &PolicyChoice,
+    depts: Vec<ServeDept>,
     sim_seconds: u64,
     speedup: u64,
-) -> ServeReport {
-    let mut bus = Bus::new();
-    let total = cfg.total_nodes;
-    // ids are assigned in registration order: rps=0, st=1, ws=2
-    let rps_id = 0;
-    let st_id = 1;
-    let ws_id = 2;
-    let policy = PolicySpec::Cooperative.build(&two_dept_profiles(cfg.st_nodes, cfg.ws_nodes));
-    let mut rps = Rps::new(total, 2, policy);
-    let st0: u64 = rps.provision_idle(&[DeptId::ST], 0).iter().map(|&(_, n)| n).sum();
-    let cap = cfg.web.instance_capacity_rps;
-
-    let shared = Rc::new(Shared::default());
-    bus.register(Box::new(RpsSvc { rps, st: st_id, ws: ws_id }));
-    let mut st_server = StServer::new(cfg.scheduler, cfg.kill_order);
-    st_server.grant(st0);
-    bus.register(Box::new(StSvc {
-        st: st_server,
-        jobs,
-        next_job: 0,
-        finishes: Vec::new(),
-        shared: Rc::clone(&shared),
-    }));
-    bus.register(Box::new(WsSvc {
-        ws: WsServer::new(),
-        scaler,
-        rates,
-        cap,
-        rps: rps_id,
-        shared: Rc::clone(&shared),
-    }));
-
-    let started = Instant::now();
+) -> Result<ServeReport> {
     let tick_step = cfg.ws_sample_period;
-    let mut ticks = 0;
+    if tick_step == 0 {
+        bail!("ws_sample_period must be positive");
+    }
+    // boot members keep input order; joiners follow, sorted by arrival —
+    // ids are dense in that combined order, matching Rps::join's contract
+    let (mut boot, mut joiners): (Vec<ServeDept>, Vec<ServeDept>) =
+        depts.into_iter().partition(|d| d.spec.join_at == 0);
+    joiners.sort_by_key(|d| d.spec.join_at);
+    if boot.is_empty() {
+        bail!("at least one department must be present at boot (join_at = 0)");
+    }
+    for d in &joiners {
+        if let Some(leave) = d.leave_at {
+            if leave <= d.spec.join_at {
+                bail!("department '{}': leave_at must be after join_at", d.spec.name);
+            }
+        }
+    }
+
+    let total = cfg.total_nodes;
+    let profiles: Vec<DeptProfile> = boot
+        .iter()
+        .enumerate()
+        .map(|(i, d)| d.spec.profile(DeptId(i as u16)))
+        .collect();
+    let mut rps = Rps::new(total, boot.len(), policy.build(&profiles));
+    let label = format!("serve-K{}-{}", boot.len() + joiners.len(), policy.name());
+
+    // ---- boot: mirror the virtual-time sim — each boot service dept gets
+    // its boot-instances grant, the batch depts split the rest
+    let cap = cfg.web.instance_capacity_rps;
+    let mut boot_servers: Vec<Option<WsServer>> = Vec::with_capacity(boot.len());
+    let mut boot_batch: Vec<Option<StServer>> = Vec::with_capacity(boot.len());
+    for (i, d) in boot.iter().enumerate() {
+        let id = DeptId(i as u16);
+        match &d.workload {
+            ServeWorkload::Service { boot_instances, .. } => {
+                let granted = rps.bootstrap_grant(id, *boot_instances);
+                let mut ws = WsServer::for_dept(id);
+                ws.grant(granted);
+                ws.set_demand(*boot_instances, 0);
+                boot_servers.push(Some(ws));
+                boot_batch.push(None);
+            }
+            ServeWorkload::Batch(_) => {
+                boot_servers.push(None);
+                boot_batch.push(Some(StServer::for_dept(id, cfg.scheduler, cfg.kill_order)));
+            }
+        }
+    }
+    let batch_ids: Vec<DeptId> = boot
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| matches!(d.workload, ServeWorkload::Batch(_)))
+        .map(|(i, _)| DeptId(i as u16))
+        .collect();
+    for (d, n) in rps.provision_idle(&batch_ids, 0) {
+        boot_batch[d.index()]
+            .as_mut()
+            .expect("idle grants target batch departments")
+            .grant(n);
+    }
+    let boot_holdings: Vec<u64> = boot_batch
+        .iter()
+        .zip(&boot_servers)
+        .map(|(st, ws)| match (st, ws) {
+            (Some(st), _) => st.pool(),
+            (_, Some(ws)) => ws.holding(),
+            _ => 0,
+        })
+        .collect();
+
+    // ---- wire the bus: rps, monitor, then one CMS per boot department
+    let mut bus = Bus::new();
+    let rps_stats = Rc::new(RpsStats::default());
+    rps_stats.free.set(rps.ledger().free());
+    let roster: BTreeMap<DeptId, DeptKind> = boot
+        .iter()
+        .enumerate()
+        .map(|(i, d)| (DeptId(i as u16), d.spec.kind))
+        .collect();
+    let rps_id = bus.register(Box::new(RpsSvc {
+        rps,
+        roster,
+        pending_force: VecDeque::new(),
+        leaving: Vec::new(),
+        stats: Rc::clone(&rps_stats),
+    }));
+    let monitor = Rc::new(RefCell::new(Monitor::new(2 * tick_step)));
+    let mon_id = bus.register(Box::new(MonitorSvc { monitor: Rc::clone(&monitor) }));
+
+    let mut state = RosterState::default();
+    let wiring = Wiring {
+        rps: rps_id,
+        monitor: mon_id,
+        cap,
+        scheduler: cfg.scheduler,
+        kill_order: cfg.kill_order,
+    };
+    for (i, d) in boot.drain(..).enumerate() {
+        let id = DeptId(i as u16);
+        let st = boot_batch[i].take();
+        let ws = boot_servers[i].take();
+        register_cms(&mut bus, &wiring, &mut state, id, d, st, ws)?;
+        // seed the report cells with the boot allocation (the first sync
+        // happens on the department's first handled message)
+        if let Some(&h) = boot_holdings.get(i) {
+            state.stats[i].holding.set(h);
+        }
+    }
+    let n_boot = state.stats.len();
+
+    // ---- the tick loop
+    let limit = 10_000u64.max(100 * (n_boot as u64 + joiners.len() as u64 + 2));
+    let started = Instant::now();
+    let mut ticks = 0u64;
     let mut now = 0u64;
+    let mut next_join = 0usize;
+    state.pending_leaves.sort_by_key(|&(t, _)| t);
+    let mut joiners = joiners.into_iter().collect::<VecDeque<_>>();
     while now <= sim_seconds {
         bus.set_now(now);
-        bus.post(ws_id, Msg::Tick { now });
-        bus.post(st_id, Msg::Tick { now });
-        bus.run_until_quiescent(10_000);
+        // runtime arrivals due by this tick join before anyone ticks: the
+        // RPS must know the department before its first claim routes
+        while joiners.front().is_some_and(|d| d.spec.join_at <= now) {
+            let d = joiners.pop_front().expect("front just checked");
+            let dept = DeptId((n_boot + next_join) as u16);
+            next_join += 1;
+            bus.post(rps_id, Msg::DeptJoin {
+                dept,
+                kind: d.spec.kind,
+                quota: d.spec.quota,
+            });
+            register_cms(&mut bus, &wiring, &mut state, dept, d, None, None)?;
+            bus.run_until_quiescent(limit)
+                .with_context(|| format!("DeptJoin of {dept} at t={now}s"))?;
+        }
+        // the RPS settles lease expiries on its tick…
+        bus.post(rps_id, Msg::Tick { now });
+        bus.run_until_quiescent(limit)
+            .with_context(|| format!("RPS tick at t={now}s"))?;
+        // …then each department ticks in id order, one quiescent dispatch
+        // each — the bus mirror of the sim's same-timestamp event atomicity
+        for &d in &state.active {
+            bus.post_to_dept(d, Msg::Tick { now })
+                .with_context(|| format!("ticking {d} at t={now}s"))?;
+            bus.run_until_quiescent(limit)
+                .with_context(|| format!("tick of {d} at t={now}s"))?;
+        }
+        // departures settle at the end of their tick
+        while state.pending_leaves.first().is_some_and(|&(t, _)| t <= now) {
+            let (_, dept) = state.pending_leaves.remove(0);
+            bus.post(rps_id, Msg::DeptLeave { dept });
+            bus.run_until_quiescent(limit)
+                .with_context(|| format!("DeptLeave of {dept} at t={now}s"))?;
+            bus.unbind_dept(dept);
+            state.active.retain(|&x| x != dept);
+            monitor.borrow_mut().forget(state.service_ids[dept.index()]);
+        }
         ticks += 1;
         now += tick_step;
         if speedup > 0 {
@@ -254,17 +829,134 @@ pub fn serve(
             }
         }
     }
+    let RosterState { specs, stats, submitted, .. } = state;
 
-    ServeReport {
+    // ---- report
+    let last_now = now - tick_step;
+    let down_services: Vec<String> = monitor
+        .borrow()
+        .down(last_now)
+        .into_iter()
+        .map(|id| bus.service_name(id).to_string())
+        .collect();
+    let mut per_dept = Vec::with_capacity(specs.len());
+    let mut completed = 0u64;
+    let mut killed = 0u64;
+    let mut in_flight = 0usize;
+    let mut shortage = 0u64;
+    let mut peak = 0u64;
+    let mut turnaround_sum = 0.0f64;
+    for (spec, s) in specs.iter().zip(&stats) {
+        completed += s.completed.get();
+        killed += s.killed.get();
+        in_flight += s.in_flight.get();
+        shortage += s.shortage.get();
+        peak = peak.max(s.peak_demand.get());
+        turnaround_sum += s.turnaround_sum.get();
+        let dc = s.completed.get();
+        per_dept.push(DeptSummary {
+            name: spec.name.clone(),
+            kind: spec.kind,
+            completed: dc,
+            killed: s.killed.get(),
+            in_flight: s.in_flight.get(),
+            avg_turnaround: if dc > 0 { s.turnaround_sum.get() / dc as f64 } else { 0.0 },
+            shortage_node_secs: s.shortage.get(),
+            holding_end: s.holding.get(),
+        });
+    }
+    Ok(ServeReport {
+        label,
+        cluster_nodes: total,
         sim_seconds,
         wall: started.elapsed(),
         ticks,
         messages: bus.delivered,
-        jobs_completed: shared.completed.get(),
-        jobs_killed: shared.killed.get(),
-        ws_peak_demand: shared.ws_peak.get(),
-        ws_shortage_node_secs: shared.ws_shortage.get(),
-    }
+        submitted,
+        completed,
+        killed,
+        in_flight,
+        avg_turnaround: if completed > 0 { turnaround_sum / completed as f64 } else { 0.0 },
+        ws_shortage_node_secs: shortage,
+        ws_peak_demand: peak,
+        force_returns: rps_stats.force_returns.get(),
+        forced_nodes: rps_stats.forced_nodes.get(),
+        denied: rps_stats.denied.get(),
+        free_end: rps_stats.free.get(),
+        joins: rps_stats.joins.get(),
+        leaves: rps_stats.leaves.get(),
+        down_services,
+        per_dept,
+    })
+}
+
+/// Build and run the serve roster a config describes: its
+/// `[[department]]` entries (the paper's ST+WS pair when none are
+/// declared), the `[policy]` section (cooperative by default), the
+/// synthetic/archive traces of the trace layer, and any `join_at`
+/// arrivals. `scaler_for` supplies each service department's scaling
+/// brain (reactive, predictive, …).
+pub fn serve_config(
+    cfg: &ExperimentConfig,
+    sim_seconds: u64,
+    speedup: u64,
+    mut scaler_for: impl FnMut(&DeptSpec, &ExperimentConfig) -> ScalerFn,
+) -> Result<ServeReport> {
+    let specs = if cfg.departments.is_empty() {
+        RosterMix::Alternating.departments(2, cfg)
+    } else {
+        cfg.departments.clone()
+    };
+    let traces = crate::experiments::scale::build_traces(&specs, cfg)?;
+    let depts: Vec<ServeDept> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let workload = match spec.kind {
+                DeptKind::Batch => ServeWorkload::Batch(
+                    traces.batch_jobs(i).expect("batch departments carry a job trace"),
+                ),
+                DeptKind::Service => ServeWorkload::Service {
+                    rates: traces
+                        .service_rates(i)
+                        .expect("service departments carry a rate series"),
+                    scaler: scaler_for(spec, cfg),
+                    boot_instances: traces.service_boot_instances(i).unwrap_or(1),
+                },
+            };
+            ServeDept { spec: spec.clone(), workload, leave_at: None }
+        })
+        .collect();
+    let policy = cfg
+        .policy
+        .clone()
+        .unwrap_or(PolicyChoice::Base(PolicySpec::Cooperative));
+    serve_roster(cfg, &policy, depts, sim_seconds, speedup)
+}
+
+/// Convenience constructor for the paper's two-department testbed run:
+/// one ST-like batch department over `jobs`, one WS-like service
+/// department over `rates` + `scaler`, cooperative policy — the serve
+/// mirror of [`super::ConsolidationSim::new`].
+pub fn serve_pair(
+    cfg: &ExperimentConfig,
+    jobs: Vec<Job>,
+    rates: RateSeries,
+    scaler: ScalerFn,
+    sim_seconds: u64,
+    speedup: u64,
+) -> Result<ServeReport> {
+    let depts = vec![
+        ServeDept::batch("st", cfg.st_nodes, jobs),
+        ServeDept::service("ws", cfg.ws_nodes, rates, scaler),
+    ];
+    serve_roster(
+        cfg,
+        &PolicyChoice::Base(PolicySpec::Cooperative),
+        depts,
+        sim_seconds,
+        speedup,
+    )
 }
 
 #[cfg(test)]
@@ -273,18 +965,204 @@ mod tests {
     use crate::config::ExperimentConfig;
     use crate::wscms::autoscaler::Reactive;
 
+    fn reactive_scaler(max: u64) -> ScalerFn {
+        let mut reactive = Reactive::new(max);
+        Box::new(move |util, _| reactive.decide(util))
+    }
+
     #[test]
-    fn serve_runs_and_routes_messages() {
+    fn serve_pair_runs_and_routes_messages() {
         let mut cfg = ExperimentConfig::dynamic(64);
         cfg.ws_sample_period = 20;
         let rates = RateSeries { sample_period: 20, rates: vec![200.0; 100] };
         let jobs = vec![Job { id: 1, submit: 0, size: 8, runtime: 60, requested: 120 }];
-        let mut reactive = Reactive::new(64);
-        let scaler: ScalerFn = Box::new(move |util, _| reactive.decide(util));
-        let report = serve(&cfg, jobs, rates, scaler, 400, 0);
+        let report =
+            serve_pair(&cfg, jobs, rates, reactive_scaler(64), 400, 0).unwrap();
         assert_eq!(report.ticks, 21);
-        assert!(report.messages > 40, "messages={}", report.messages);
-        assert_eq!(report.jobs_completed, 1);
+        assert!(report.messages > 60, "messages={}", report.messages);
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.submitted, 1);
+        assert_eq!(report.in_flight, 0);
         assert!(report.ws_peak_demand >= 1);
+        assert_eq!(report.per_dept.len(), 2);
+        assert_eq!(report.per_dept[0].name, "st");
+        assert_eq!(report.per_dept[0].completed, 1);
+        assert_eq!(report.per_dept[1].kind, DeptKind::Service);
+        // conservation against the ledger
+        let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+        assert_eq!(report.free_end + held, report.cluster_nodes);
+        assert!(report.down_services.is_empty(), "{:?}", report.down_services);
+    }
+
+    #[test]
+    fn mid_run_join_and_leave_flow_through_the_protocol() {
+        let mut cfg = ExperimentConfig::dynamic(48);
+        cfg.ws_sample_period = 20;
+        let mk_jobs = |base: u64| -> Vec<Job> {
+            (0..6)
+                .map(|i| Job {
+                    id: base + i,
+                    submit: i * 20,
+                    size: 4,
+                    runtime: 100,
+                    requested: 200,
+                })
+                .collect()
+        };
+        let rates = RateSeries { sample_period: 20, rates: vec![300.0; 200] };
+        // the lease policy is what makes runtime affiliation work: the
+        // anchor's idle leased capacity expires back to the free pool, so
+        // the visitor's claim at join time is served without kills
+        // (arXiv:1006.1401 meets arXiv:1003.0958)
+        let depts = vec![
+            ServeDept::batch("anchor", 32, mk_jobs(1)),
+            ServeDept::service("portal", 16, rates, reactive_scaler(48)),
+            // joins at t = 400 with its own backlog, leaves at t = 500
+            // while still holding its granted nodes
+            ServeDept::batch("visitor", 16, mk_jobs(100))
+                .joining_at(400)
+                .leaving_at(500),
+        ];
+        let report = serve_roster(
+            &cfg,
+            &PolicyChoice::Base(PolicySpec::Lease { secs: 200 }),
+            depts,
+            2000,
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.joins, 1);
+        assert_eq!(report.leaves, 1);
+        assert_eq!(report.per_dept.len(), 3);
+        let visitor = &report.per_dept[2];
+        assert_eq!(visitor.name, "visitor");
+        assert_eq!(visitor.holding_end, 0, "leaver must hold nothing: {report:?}");
+        assert!(
+            visitor.completed > 0,
+            "the joiner's backlog must run between join and leave: {report:?}"
+        );
+        // conservation after a full join/leave cycle
+        let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+        assert_eq!(report.free_end + held, report.cluster_nodes, "{report:?}");
+        assert!(report.free_end > 0, "{report:?}");
+        assert_eq!(report.submitted, 12);
+        assert_eq!(
+            report.completed as usize + report.killed as usize + report.in_flight,
+            report.submitted,
+            "job accounting must close: {report:?}"
+        );
+    }
+
+    #[test]
+    fn lease_policy_expires_idle_grants_over_the_bus() {
+        let mut cfg = ExperimentConfig::dynamic(32);
+        cfg.ws_sample_period = 20;
+        // one short burst of work, then a long idle tail: the lease must
+        // pull the idle capacity back to the free pool
+        let jobs = vec![
+            Job { id: 1, submit: 0, size: 8, runtime: 100, requested: 200 },
+            Job { id: 2, submit: 0, size: 8, runtime: 100, requested: 200 },
+        ];
+        let rates = RateSeries { sample_period: 20, rates: vec![100.0; 200] };
+        let depts = vec![
+            ServeDept::batch("hpc", 24, jobs),
+            ServeDept::service("web", 8, rates, reactive_scaler(32)),
+        ];
+        let report = serve_roster(
+            &cfg,
+            &PolicyChoice::Base(PolicySpec::Lease { secs: 200 }),
+            depts,
+            2000,
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.completed, 2, "{report:?}");
+        let batch = &report.per_dept[0];
+        assert!(
+            batch.holding_end < 25,
+            "idle leased capacity never expired back: {report:?}"
+        );
+        assert!(report.free_end > 0, "{report:?}");
+        let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+        assert_eq!(report.free_end + held, report.cluster_nodes);
+    }
+
+    #[test]
+    fn submit_job_is_not_double_admitted() {
+        struct Nop;
+        impl Service for Nop {
+            fn name(&self) -> &str {
+                "nop"
+            }
+            fn handle(&mut self, _msg: Msg, _ctx: &mut Ctx<'_>) {}
+        }
+        let jobs: Arc<[Job]> =
+            vec![Job { id: 1, submit: 40, size: 2, runtime: 60, requested: 120 }].into();
+        let stats = Rc::new(DeptStats::default());
+        let mut bus = Bus::new();
+        let rps = bus.register(Box::new(Nop));
+        let mon = bus.register(Box::new(Nop));
+        let mut st = StServer::for_dept(
+            DeptId(0),
+            crate::config::SchedulerKind::FirstFit,
+            crate::config::KillOrder::MinSizeShortestElapsed,
+        );
+        st.grant(8);
+        bus.register_dept(DeptId(0), Box::new(BatchSvc {
+            dept: DeptId(0),
+            st,
+            jobs,
+            next_job: 0,
+            submitted_early: BTreeSet::new(),
+            finishes: Vec::new(),
+            rps,
+            monitor: mon,
+            me: 2,
+            stats: Rc::clone(&stats),
+        }))
+        .unwrap();
+        // a client pushes job 0 ahead of its trace submit time
+        bus.set_now(0);
+        bus.post_to_dept(DeptId(0), Msg::SubmitJob { dept: DeptId(0), trace_idx: 0 })
+            .unwrap();
+        bus.run_until_quiescent(100).unwrap();
+        assert_eq!(stats.in_flight.get(), 1);
+        // a duplicate SubmitJob is dropped, and the t=40 arrival tick must
+        // not admit the job a second time
+        bus.post_to_dept(DeptId(0), Msg::SubmitJob { dept: DeptId(0), trace_idx: 0 })
+            .unwrap();
+        bus.set_now(40);
+        bus.post_to_dept(DeptId(0), Msg::Tick { now: 40 }).unwrap();
+        bus.run_until_quiescent(100).unwrap();
+        assert_eq!(stats.in_flight.get(), 1, "job admitted twice");
+        assert_eq!(stats.completed.get(), 0);
+        // it completes exactly once (started at t=0, runtime 60)
+        bus.set_now(100);
+        bus.post_to_dept(DeptId(0), Msg::Tick { now: 100 }).unwrap();
+        bus.run_until_quiescent(100).unwrap();
+        assert_eq!(stats.completed.get(), 1);
+        assert_eq!(stats.in_flight.get(), 0);
+        // an out-of-range index is dropped, not a panic
+        bus.post_to_dept(DeptId(0), Msg::SubmitJob { dept: DeptId(0), trace_idx: 99 })
+            .unwrap();
+        assert!(bus.run_until_quiescent(100).is_ok());
+    }
+
+    #[test]
+    fn serve_config_builds_the_paper_pair_by_default() {
+        let mut cfg = ExperimentConfig::dynamic(160);
+        cfg.hpc.num_jobs = 60;
+        cfg.hpc.horizon = 2000;
+        cfg.web.horizon = 2000;
+        let report = serve_config(&cfg, 2000, 0, |_, c| {
+            let mut r = Reactive::new(c.total_nodes);
+            Box::new(move |util, _| r.decide(util))
+        })
+        .unwrap();
+        assert_eq!(report.per_dept.len(), 2);
+        assert_eq!(report.per_dept[0].name, "st0");
+        assert_eq!(report.per_dept[1].name, "ws0");
+        assert_eq!(report.submitted, 60);
+        assert_eq!(report.ws_shortage_node_secs, 0, "{report:?}");
     }
 }

@@ -22,7 +22,7 @@ use crate::config::{DeptSpec, ExperimentConfig, RosterMix};
 use crate::coordinator::{ConsolidationSim, DeptInput, DeptWorkload, RunResult};
 use crate::provision::{DeptProfile, PolicyChoice, PolicySpec};
 use crate::trace::csv::Table;
-use crate::trace::web_synth::WebTraceConfig;
+use crate::trace::web_synth::{RateSeries, WebTraceConfig};
 use crate::trace::{archive, correlated, hpc_synth};
 use crate::workload::Job;
 
@@ -105,6 +105,33 @@ pub(crate) struct DeptTraces {
     jobs: Vec<Option<Arc<[Job]>>>,
     /// Service departments: see [`ServiceTrace`].
     demand: Vec<Option<ServiceTrace>>,
+}
+
+impl DeptTraces {
+    /// Department `idx`'s shared batch trace (None for service depts).
+    pub(crate) fn batch_jobs(&self, idx: usize) -> Option<Arc<[Job]>> {
+        self.jobs.get(idx).cloned().flatten()
+    }
+
+    /// Department `idx`'s *request-rate* series (None for batch depts) —
+    /// the realtime serve path drives its live autoscaler from rates, not
+    /// from the precomputed demand series the virtual-time sim replays.
+    pub(crate) fn service_rates(&self, idx: usize) -> Option<RateSeries> {
+        self.demand
+            .get(idx)
+            .and_then(Option::as_ref)
+            .map(|t| correlated::rate_series(&t.web, t.rho, t.latent_seed))
+    }
+
+    /// First sample of department `idx`'s demand series — the boot grant
+    /// the virtual-time sim gives a service department, mirrored by the
+    /// serve path so both paths start from the same allocation.
+    pub(crate) fn service_boot_instances(&self, idx: usize) -> Option<u64> {
+        self.demand
+            .get(idx)
+            .and_then(Option::as_ref)
+            .map(|t| t.series.first().copied().unwrap_or(1))
+    }
 }
 
 /// Generate (or load) every department's trace. Batch departments replay
@@ -191,6 +218,14 @@ pub(crate) fn run_roster(
     total_nodes: u64,
     policy: &PolicyChoice,
 ) -> Result<RunResult> {
+    if let Some(late) = specs.iter().find(|s| s.join_at > 0) {
+        bail!(
+            "department '{}' declares join_at = {} — runtime affiliation is a \
+             serve-path feature; run this roster with `phoenixd serve`",
+            late.name,
+            late.join_at
+        );
+    }
     let profiles: Vec<DeptProfile> = specs
         .iter()
         .enumerate()

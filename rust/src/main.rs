@@ -11,7 +11,10 @@
 //!                                          # each cell bisects to its required size
 //! phoenixd depts  --config FILE            # run a [[department]] roster
 //! phoenixd ablate [--what kill|sched|scaler]
-//! phoenixd serve  [--nodes 160] [--secs 3600] [--speedup 100] [--predictive]
+//! phoenixd serve  [--config FILE] [--nodes 160] [--secs 3600] [--speedup 100]
+//!                 [--predictive]           # any [[department]] roster (K>=2,
+//!                                          # join_at = mid-run arrivals) under
+//!                                          # the configured [policy]
 //! phoenixd tracegen --kind hpc|web --out FILE
 //! phoenixd validate [--config FILE]        # config check
 //! ```
@@ -109,7 +112,10 @@ matrix    scenario matrix: roster shape x policy x lease term x load, each cell\
 depts     run the config's [[department]] roster on one shared cluster\n  \
 ablate    design ablations (--what kill|sched|scaler)\n  \
 sense     headline sensitivity across seeds and load band (--seeds N)\n  \
-serve     realtime coordinator on a live trace (--predictive for PJRT)\n  \
+serve     realtime coordinator: the config's [[department]] roster (default:\n  \
+          the paper's ST+WS pair) live on the department-addressed message\n  \
+          bus, [policy]-driven, with join_at mid-run arrivals\n  \
+          (--predictive for the PJRT autoscaler on the first service dept)\n  \
 tracegen  emit a synthetic trace (--kind hpc|web)\n  \
 validate  parse + validate a config file\n\
 common flags: --config FILE --seed N --load F --workers N (0 = all cores) --verbose\n\
@@ -437,53 +443,102 @@ fn cmd_ablate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = base_config(args)?;
     cfg.configuration = phoenix_cloud::config::Configuration::Dynamic;
-    cfg.total_nodes = args.get_u64("nodes", 160)?;
+    cfg.total_nodes = args.get_u64("nodes", cfg.total_nodes)?;
     let secs = args.get_u64("secs", 3600)?;
     let speedup = args.get_u64("speedup", 0)?;
+    cfg.horizon = secs;
     cfg.hpc.horizon = secs;
     cfg.web.horizon = secs.max(cfg.web.sample_period * 64);
+    cfg.validate()?;
 
-    let jobs = hpc_synth::generate(&cfg.hpc);
-    let rates = web_synth::generate(&cfg.web);
+    // the predictive scaler (one PJRT engine) steers the first service
+    // department; any further service departments run the reactive rule
     let cap = cfg.web.instance_capacity_rps;
-
-    let scaler: ScalerFn = if args.has("predictive") {
+    let mut predictive: Option<ForecastEngine> = if args.has("predictive") {
         let dir = args.get_or("artifacts", "artifacts");
         if !ForecastEngine::artifacts_present(dir) {
             bail!("--predictive needs AOT artifacts in '{dir}' (run `make artifacts`)");
         }
-        let mut engine = ForecastEngine::load(dir)?;
+        let engine = ForecastEngine::load(dir)?;
         println!("predictive autoscaler on PJRT ({})", engine.platform());
-        let w = engine.meta.window;
-        let mut util_hist = vec![0f32; w];
-        let mut rate_hist = vec![0f32; w];
-        Box::new(move |util, rate| {
-            util_hist.rotate_left(1);
-            *util_hist.last_mut().unwrap() = util as f32;
-            rate_hist.rotate_left(1);
-            *rate_hist.last_mut().unwrap() = (rate / cap) as f32;
-            let pred = engine.forecast_one(&util_hist, &rate_hist).unwrap_or(1.0);
-            (pred / 0.8).ceil().max(1.0) as u64
-        })
+        Some(engine)
     } else {
-        let mut reactive = Reactive::new(cfg.total_nodes);
-        Box::new(move |util, _| reactive.decide(util))
+        None
+    };
+    let scaler_for = |_spec: &phoenix_cloud::config::DeptSpec,
+                      c: &ExperimentConfig|
+     -> ScalerFn {
+        match predictive.take() {
+            Some(mut engine) => {
+                let w = engine.meta.window;
+                let mut util_hist = vec![0f32; w];
+                let mut rate_hist = vec![0f32; w];
+                Box::new(move |util, rate| {
+                    util_hist.rotate_left(1);
+                    *util_hist.last_mut().unwrap() = util as f32;
+                    rate_hist.rotate_left(1);
+                    *rate_hist.last_mut().unwrap() = (rate / cap) as f32;
+                    let pred = engine.forecast_one(&util_hist, &rate_hist).unwrap_or(1.0);
+                    (pred / 0.8).ceil().max(1.0) as u64
+                })
+            }
+            None => {
+                let mut reactive = Reactive::new(c.total_nodes);
+                Box::new(move |util, _| reactive.decide(util))
+            }
+        }
     };
 
+    let k = if cfg.departments.is_empty() { 2 } else { cfg.departments.len() };
+    let joiners = cfg.departments.iter().filter(|d| d.join_at > 0).count();
     println!(
-        "serving DC-{} for {}s of trace time (speedup {}x)…",
+        "serving {k} departments ({joiners} joining mid-run) on DC-{} for {secs}s of \
+         trace time (speedup {})…",
         cfg.total_nodes,
-        secs,
-        if speedup == 0 { "max".to_string() } else { speedup.to_string() }
+        if speedup == 0 { "max".to_string() } else { format!("{speedup}x") }
     );
-    let report = realtime::serve(&cfg, jobs, rates, scaler, secs, speedup);
+    let report = realtime::serve_config(&cfg, secs, speedup, scaler_for)?;
+    println!(
+        "{:<12} {:>8} {:>10} {:>7} {:>14} {:>13} {:>9}",
+        "department", "kind", "completed", "killed", "turnaround(s)", "shortage", "holding"
+    );
+    for d in &report.per_dept {
+        println!(
+            "{:<12} {:>8} {:>10} {:>7} {:>14.0} {:>13} {:>9}",
+            d.name,
+            d.kind.name(),
+            d.completed,
+            d.killed,
+            d.avg_turnaround,
+            d.shortage_node_secs,
+            d.holding_end
+        );
+    }
+    println!("  label            : {}", report.label);
     println!("  ticks            : {}", report.ticks);
     println!("  bus messages     : {}", report.messages);
-    println!("  jobs completed   : {}", report.jobs_completed);
-    println!("  jobs killed      : {}", report.jobs_killed);
-    println!("  WS peak demand   : {}", report.ws_peak_demand);
-    println!("  WS shortage      : {} node·s", report.ws_shortage_node_secs);
+    println!("  joins / leaves   : {} / {}", report.joins, report.leaves);
+    println!("  jobs completed   : {}", report.completed);
+    println!("  jobs killed      : {}", report.killed);
+    println!("  peak svc demand  : {}", report.ws_peak_demand);
+    println!("  svc shortage     : {} node·s", report.ws_shortage_node_secs);
+    println!("  force returns    : {} ({} nodes)", report.force_returns, report.forced_nodes);
+    println!("  free at horizon  : {} of {}", report.free_end, report.cluster_nodes);
     println!("  wall time        : {:.2?}", report.wall);
+    if report.down_services.is_empty() {
+        println!("  health           : all services beating");
+    } else {
+        println!("  health           : DOWN {:?}", report.down_services);
+    }
+    let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+    if report.free_end + held != report.cluster_nodes {
+        bail!(
+            "ledger conservation violated: free {} + held {} != total {}",
+            report.free_end,
+            held,
+            report.cluster_nodes
+        );
+    }
     Ok(())
 }
 

@@ -216,6 +216,22 @@ impl ProvisionPolicy for MixedPolicy {
     fn next_expiry(&self) -> Option<SimTime> {
         self.subs.iter().filter_map(|s| s.next_expiry()).min()
     }
+
+    fn on_join(&mut self, profile: DeptProfile, now: SimTime) {
+        // every sub-policy was built over the full roster, so every one
+        // must learn about the joiner (whatever tier routes its requests)
+        super::policy::upsert_profile(&mut self.depts, profile);
+        for sub in &mut self.subs {
+            sub.on_join(profile, now);
+        }
+    }
+
+    fn on_leave(&mut self, dept: DeptId, now: SimTime) {
+        super::policy::remove_profile(&mut self.depts, dept);
+        for sub in &mut self.subs {
+            sub.on_leave(dept, now);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -309,6 +325,22 @@ mod tests {
         p.renewed(DeptId(2), 7, 100);
         assert_eq!(p.next_expiry(), Some(200));
         assert_eq!(p.expired(200), vec![(DeptId(2), 7)]);
+    }
+
+    #[test]
+    fn join_and_leave_reach_every_sub_policy() {
+        let mut p = mixed_lease_bottom();
+        // a tier-2 batch joiner routes to the leased sub-policy
+        let joiner = DeptProfile { id: DeptId(3), kind: DeptKind::Batch, tier: 2, quota: 50 };
+        p.on_join(joiner, 0);
+        assert_eq!(p.route(DeptId(3)), 0, "joiner must route to its tier's rule");
+        let l = Ledger::new(12, 4);
+        assert_eq!(p.idle_grants(&l, &[DeptId(3)], 0), vec![(DeptId(3), 12)]);
+        assert_eq!(p.next_expiry(), Some(100), "joiner's grant must be leased");
+        // leaving drops the profile and the lease book entries everywhere
+        p.on_leave(DeptId(3), 50);
+        assert_eq!(p.next_expiry(), None);
+        assert_eq!(p.route(DeptId(3)), 1, "departed dept falls to the default route");
     }
 
     #[test]

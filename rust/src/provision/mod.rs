@@ -131,6 +131,36 @@ impl Rps {
     pub fn next_expiry(&self) -> Option<SimTime> {
         self.policy.next_expiry()
     }
+
+    /// A department joins the shared cluster at runtime (dynamic
+    /// affiliation, arXiv:1003.0958): the ledger grows one zero-holding
+    /// slot and the policy starts tracking the profile. `profile.id` must
+    /// be the next dense id — departments join in id order, exactly as
+    /// the serve loop assigns them.
+    pub fn join(&mut self, profile: DeptProfile, now: SimTime) -> DeptId {
+        let id = self.ledger.add_dept();
+        assert_eq!(
+            id, profile.id,
+            "join ids must be dense and in arrival order (ledger assigned {id})"
+        );
+        self.policy.on_join(profile, now);
+        id
+    }
+
+    /// A department leaves the cluster: whatever it still holds returns to
+    /// the free pool (the driver has already reclaimed the nodes from its
+    /// CMS) and the policy forgets the profile. Returns the reclaimed
+    /// node count.
+    pub fn leave(&mut self, dept: DeptId, now: SimTime) -> u64 {
+        let held = self.ledger.held(dept);
+        if held > 0 {
+            self.ledger
+                .release(dept, held)
+                .expect("leave releases exactly what the department held");
+        }
+        self.policy.on_leave(dept, now);
+        held
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +236,32 @@ mod tests {
         assert_eq!(rps.ledger().free(), 20);
         assert_eq!(rps.ledger().held(DeptId::ST), 30);
         assert_eq!(rps.next_expiry(), Some(200));
+    }
+
+    #[test]
+    fn join_then_leave_round_trips_through_the_rps() {
+        let mut rps = coop(100);
+        rps.provision_idle(&[DeptId::ST], 0); // all 100 to ST
+        let profile =
+            DeptProfile { id: DeptId(2), kind: DeptKind::Batch, tier: 1, quota: 40 };
+        assert_eq!(rps.join(profile, 10), DeptId(2));
+        assert_eq!(rps.ledger().num_depts(), 3);
+        // the joiner can now be granted and forced like any other dept
+        let d = rps.request(DeptId::WS, 10, 20);
+        let forced_from_st = d.force.iter().any(|&(v, _)| v == DeptId::ST);
+        assert!(forced_from_st, "{d:?}");
+        for &(v, n) in &d.force {
+            rps.complete_force(v, DeptId::WS, n, 20);
+        }
+        rps.release(DeptId::WS, 10, 30);
+        let grants = rps.provision_idle(&[DeptId(2)], 30);
+        assert_eq!(grants, vec![(DeptId(2), 10)]);
+        // leave: holdings flow back to the free pool, profile forgotten
+        assert_eq!(rps.leave(DeptId(2), 40), 10);
+        assert_eq!(rps.ledger().held(DeptId(2)), 0);
+        assert_eq!(rps.ledger().free(), 10);
+        let (free, held) = rps.ledger().snapshot();
+        assert_eq!(free + held.iter().sum::<u64>(), 100);
     }
 
     #[test]

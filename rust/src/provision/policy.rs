@@ -173,6 +173,34 @@ pub trait ProvisionPolicy: fmt::Debug + Send {
     fn next_expiry(&self) -> Option<SimTime> {
         None
     }
+
+    /// A department joined the shared cluster at runtime (dynamic
+    /// affiliation, arXiv:1003.0958): start tracking its profile.
+    /// Policies that key decisions on per-department profiles must
+    /// implement this (all built-ins do); the default ignores the join,
+    /// which is safe only for profile-free policies — unknown departments
+    /// then fall under the policy's existing unknown-dept rules.
+    fn on_join(&mut self, _profile: DeptProfile, _now: SimTime) {}
+
+    /// A department left the cluster; its holdings were already released
+    /// to the free pool. Built-ins drop the profile (and, for lease
+    /// policies, any outstanding lease-book entries). Default: no-op.
+    fn on_leave(&mut self, _dept: DeptId, _now: SimTime) {}
+}
+
+/// Insert `p` into a profile roster, replacing any stale entry with the
+/// same id (shared by every policy's `on_join`, including the mixed
+/// combinator's).
+pub(crate) fn upsert_profile(depts: &mut Vec<DeptProfile>, p: DeptProfile) {
+    match depts.iter_mut().find(|e| e.id == p.id) {
+        Some(slot) => *slot = p,
+        None => depts.push(p),
+    }
+}
+
+/// Drop department `id` from a profile roster (shared `on_leave` body).
+pub(crate) fn remove_profile(depts: &mut Vec<DeptProfile>, id: DeptId) {
+    depts.retain(|p| p.id != id);
 }
 
 /// Declarative policy selection — the parsed form of the `[policy]` config
@@ -341,6 +369,14 @@ impl ProvisionPolicy for Cooperative {
         // "if there are idle resources … provision all of them to ST"
         split_even(ledger.free(), eligible)
     }
+
+    fn on_join(&mut self, profile: DeptProfile, _now: SimTime) {
+        upsert_profile(&mut self.depts, profile);
+    }
+
+    fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
+        remove_profile(&mut self.depts, dept);
+    }
 }
 
 // ---- static partition (the SC baseline), N departments ----------------------
@@ -400,6 +436,14 @@ impl ProvisionPolicy for StaticPartition {
         }
         out
     }
+
+    fn on_join(&mut self, profile: DeptProfile, _now: SimTime) {
+        upsert_profile(&mut self.depts, profile);
+    }
+
+    fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
+        remove_profile(&mut self.depts, dept);
+    }
 }
 
 // ---- proportional share (ablation), N departments ---------------------------
@@ -456,6 +500,14 @@ impl ProvisionPolicy for ProportionalShare {
         _now: SimTime,
     ) -> Vec<(DeptId, u64)> {
         split_even(ledger.free(), eligible)
+    }
+
+    fn on_join(&mut self, profile: DeptProfile, _now: SimTime) {
+        upsert_profile(&mut self.depts, profile);
+    }
+
+    fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
+        remove_profile(&mut self.depts, dept);
     }
 }
 
@@ -595,6 +647,16 @@ impl ProvisionPolicy for LeaseBased {
     fn next_expiry(&self) -> Option<SimTime> {
         self.leases.keys().next().copied()
     }
+
+    fn on_join(&mut self, profile: DeptProfile, _now: SimTime) {
+        upsert_profile(&mut self.depts, profile);
+    }
+
+    fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
+        // a departed department's outstanding leases must never fire
+        self.drop_leased(dept, u64::MAX);
+        remove_profile(&mut self.depts, dept);
+    }
 }
 
 // ---- priority-tiered cooperative --------------------------------------------
@@ -681,6 +743,14 @@ impl ProvisionPolicy for TieredCooperative {
             .map(|&(_, d)| d)
             .collect();
         split_even(ledger.free(), &group)
+    }
+
+    fn on_join(&mut self, profile: DeptProfile, _now: SimTime) {
+        upsert_profile(&mut self.depts, profile);
+    }
+
+    fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
+        remove_profile(&mut self.depts, dept);
     }
 }
 
@@ -921,6 +991,57 @@ mod tests {
             assert_eq!(built.name(), name);
         }
         assert!(PolicySpec::parse("lottery", 300).is_err());
+    }
+
+    #[test]
+    fn join_and_leave_update_every_policy_roster() {
+        // a third (batch) department joins at runtime, becomes a force
+        // victim, then leaves again
+        let joiner = DeptProfile { id: DeptId(2), kind: DeptKind::Batch, tier: 1, quota: 30 };
+        for spec in [
+            PolicySpec::Cooperative,
+            PolicySpec::StaticPartition,
+            PolicySpec::ProportionalShare,
+            PolicySpec::Lease { secs: 60 },
+            PolicySpec::Tiered,
+        ] {
+            let mut p = spec.build(&two_dept_profiles(144, 64));
+            p.on_join(joiner, 10);
+            let mut l = Ledger::new(40, 3);
+            l.grant(DeptId(2), 25).unwrap(); // the joiner holds 25, 15 free
+            // a service claim may now reclaim from the joiner under the
+            // force-capable policies
+            let d = p.on_request(DeptId::WS, 40, &l, 20);
+            assert_eq!(
+                d.from_free + d.force_total() + d.denied,
+                40,
+                "{}: joiner broke conservation: {d:?}",
+                p.name()
+            );
+            if matches!(spec, PolicySpec::Cooperative | PolicySpec::Lease { .. }) {
+                assert!(
+                    d.force.iter().any(|&(v, _)| v == DeptId(2)),
+                    "{}: joined dept never became a victim: {d:?}",
+                    p.name()
+                );
+            }
+            // after leave, the policy must stop naming the department
+            p.on_leave(DeptId(2), 30);
+            let d = p.on_request(DeptId::WS, 40, &l, 40);
+            assert!(
+                d.force.iter().all(|&(v, _)| v != DeptId(2)),
+                "{}: departed dept still a victim: {d:?}",
+                p.name()
+            );
+        }
+        // a leaving lease-holder takes its lease-book entries with it
+        let mut p = LeaseBased::new(two_dept_profiles(144, 64), 100);
+        p.on_join(joiner, 0);
+        let l = Ledger::new(10, 3);
+        assert_eq!(p.idle_grants(&l, &[DeptId(2)], 0), vec![(DeptId(2), 10)]);
+        assert_eq!(p.next_expiry(), Some(100));
+        p.on_leave(DeptId(2), 50);
+        assert_eq!(p.next_expiry(), None, "departed dept's lease survived");
     }
 
     #[test]

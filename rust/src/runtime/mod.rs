@@ -43,13 +43,20 @@ impl Meta {
                 .map(|x| x as usize)
                 .with_context(|| format!("meta.json missing '{k}'"))
         };
-        let params = v
+        let raw = v
             .get("init_params")
             .and_then(Json::as_arr)
-            .context("meta.json missing 'init_params'")?
-            .iter()
-            .map(|x| x.as_f64().unwrap_or(0.0) as f32)
-            .collect::<Vec<_>>();
+            .context("meta.json missing 'init_params'")?;
+        let mut params = Vec::with_capacity(raw.len());
+        for (i, x) in raw.iter().enumerate() {
+            // a malformed entry is a broken artifact bundle — reject with
+            // the field index (the seed silently coerced it to 0.0, which
+            // corrupted the forecaster head instead of failing the load)
+            let value = x.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("meta.json init_params[{i}] is not a number (got {x})")
+            })?;
+            params.push(value as f32);
+        }
         let meta = Meta {
             num_services: req_u("num_services")?,
             window: req_u("window")?,
@@ -302,6 +309,32 @@ mod tests {
         .unwrap();
         let err = Meta::load(dir.to_str().unwrap()).unwrap_err();
         assert!(err.to_string().contains("init_params"), "{err}");
+    }
+
+    #[test]
+    fn meta_load_rejects_malformed_init_params_with_field_index() {
+        let dir = std::env::temp_dir().join("phoenix_meta_malformed_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // entry 2 is a string: the seed coerced it to 0.0 and silently
+        // corrupted the forecaster head; now the load must name the field
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"num_services": 2, "window": 4, "num_params": 3, "init_params": [1, 2, "x"]}"#,
+        )
+        .unwrap();
+        let err = Meta::load(dir.to_str().unwrap()).unwrap_err();
+        assert!(
+            err.to_string().contains("init_params[2]"),
+            "error must carry the field index: {err}"
+        );
+        // a valid file of the same shape still loads
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"num_services": 2, "window": 4, "num_params": 3, "init_params": [1, 2.5, 3]}"#,
+        )
+        .unwrap();
+        let meta = Meta::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(meta.init_params, vec![1.0, 2.5, 3.0]);
     }
 
     #[test]

@@ -1,23 +1,119 @@
-//! Service registry + deterministic message bus.
+//! Service registry + deterministic message bus with a department
+//! directory.
+//!
+//! The bus delivers messages FIFO (delivery order = send order), addressed
+//! either by dense [`ServiceId`] or — for the department-addressed
+//! protocol of [`super::messages`] — by [`DeptId`] through the
+//! `register_dept` directory. Failures that were `assert!`s in the seed
+//! (livelock, messages to unregistered services) are typed [`BusError`]s
+//! returned as `Result`, so a protocol bug aborts the serve loop cleanly
+//! and propagates to the CLI instead of panicking.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+
+use crate::cluster::DeptId;
 
 use super::messages::Msg;
 
 /// Dense service handle assigned at registration.
 pub type ServiceId = usize;
 
-/// Context handed to a service while it handles a message: lets it send
-/// follow-ups and read the logical clock.
-pub struct Ctx {
-    sender: ServiceId,
-    now: u64,
-    outbox: Vec<(ServiceId, Msg)>,
+/// Who handed a message to the bus — replaces the seed's `usize::MAX`
+/// sentinel with a typed origin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sender {
+    /// Injected from outside the bus (the driver loop, client tools,
+    /// timers).
+    External,
+    /// Sent by a registered service while handling a message.
+    Service(ServiceId),
 }
 
-impl Ctx {
+impl Sender {
+    /// The sending service's id, if the message came from a service.
+    pub fn service(self) -> Option<ServiceId> {
+        match self {
+            Sender::Service(id) => Some(id),
+            Sender::External => None,
+        }
+    }
+}
+
+impl fmt::Display for Sender {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Sender::External => write!(f, "external"),
+            Sender::Service(id) => write!(f, "service {id}"),
+        }
+    }
+}
+
+/// A bus-level protocol failure. These are programming/protocol bugs, not
+/// operational conditions — the driver aborts the run and the error
+/// propagates (through `anyhow`) to the `phoenixd serve` CLI, mirroring
+/// how the virtual-time path reports `coordinator::SimError`.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum BusError {
+    /// The dispatch loop delivered `limit` messages without reaching
+    /// quiescence — a ping-pong cycle between services.
+    #[error(
+        "bus livelock: {delivered} messages without quiescence (limit {limit}) — \
+         a protocol ping-pong bug"
+    )]
+    Livelock { delivered: u64, limit: u64 },
+    /// A message was addressed to a service id nobody registered.
+    #[error(
+        "message from {from} to unregistered service {to} \
+         (only {registered} services registered)"
+    )]
+    UnregisteredService { to: ServiceId, from: Sender, registered: usize },
+    /// A department-addressed send found no service bound for the
+    /// department (it never joined, or already left).
+    #[error("no service bound for {dept}")]
+    UnboundDept { dept: DeptId },
+    /// `register_dept` for a department that already has a service.
+    #[error("{dept} is already bound to service {service}")]
+    DeptAlreadyBound { dept: DeptId, service: ServiceId },
+}
+
+/// Context handed to a service while it handles a message: lets it send
+/// follow-ups (by service id or by department address), read the logical
+/// clock, and see who sent the message being handled.
+pub struct Ctx<'a> {
+    sender: Sender,
+    now: u64,
+    outbox: Vec<(ServiceId, Msg)>,
+    directory: &'a BTreeMap<DeptId, ServiceId>,
+    /// First routing failure recorded by [`Ctx::send_to_dept`]; the bus
+    /// turns it into the dispatch result.
+    error: Option<BusError>,
+}
+
+impl Ctx<'_> {
     pub fn send(&mut self, to: ServiceId, msg: Msg) {
         self.outbox.push((to, msg));
+    }
+
+    /// Send to the service bound for `dept` in the bus directory. A send
+    /// to an unbound department records a [`BusError::UnboundDept`] that
+    /// aborts the dispatch after this handler returns (services cannot
+    /// propagate errors themselves) — routing to a department that never
+    /// joined, or already left, is a protocol bug.
+    pub fn send_to_dept(&mut self, dept: DeptId, msg: Msg) {
+        match self.directory.get(&dept) {
+            Some(&id) => self.outbox.push((id, msg)),
+            None => {
+                if self.error.is_none() {
+                    self.error = Some(BusError::UnboundDept { dept });
+                }
+            }
+        }
+    }
+
+    /// The service currently bound for `dept`, if any.
+    pub fn service_for(&self, dept: DeptId) -> Option<ServiceId> {
+        self.directory.get(&dept).copied()
     }
 
     pub fn now(&self) -> u64 {
@@ -25,7 +121,7 @@ impl Ctx {
     }
 
     /// Who delivered the message being handled.
-    pub fn sender(&self) -> ServiceId {
+    pub fn sender(&self) -> Sender {
         self.sender
     }
 }
@@ -34,14 +130,16 @@ impl Ctx {
 pub trait Service {
     fn name(&self) -> &str;
     /// Handle one message; send responses through `ctx`.
-    fn handle(&mut self, msg: Msg, ctx: &mut Ctx);
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_>);
 }
 
 /// The message bus: FIFO queue over registered services, dispatched
-/// deterministically (delivery order = send order).
+/// deterministically (delivery order = send order), plus the department
+/// directory that backs the department-addressed protocol.
 pub struct Bus {
     services: Vec<Box<dyn Service>>,
-    queue: VecDeque<(ServiceId, ServiceId, Msg)>, // (from, to, msg)
+    directory: BTreeMap<DeptId, ServiceId>,
+    queue: VecDeque<(Sender, ServiceId, Msg)>,
     now: u64,
     pub delivered: u64,
 }
@@ -54,13 +152,48 @@ impl Default for Bus {
 
 impl Bus {
     pub fn new() -> Self {
-        Self { services: Vec::new(), queue: VecDeque::new(), now: 0, delivered: 0 }
+        Self {
+            services: Vec::new(),
+            directory: BTreeMap::new(),
+            queue: VecDeque::new(),
+            now: 0,
+            delivered: 0,
+        }
     }
 
     /// Register a service; returns its id (used as a message address).
     pub fn register(&mut self, svc: Box<dyn Service>) -> ServiceId {
         self.services.push(svc);
         self.services.len() - 1
+    }
+
+    /// Register a service *and* bind it as department `dept`'s CMS in the
+    /// directory, so department-addressed sends reach it. Departments may
+    /// join at any time (runtime affiliation); re-binding a live
+    /// department is an error.
+    pub fn register_dept(
+        &mut self,
+        dept: DeptId,
+        svc: Box<dyn Service>,
+    ) -> Result<ServiceId, BusError> {
+        if let Some(&service) = self.directory.get(&dept) {
+            return Err(BusError::DeptAlreadyBound { dept, service });
+        }
+        let id = self.register(svc);
+        self.directory.insert(dept, id);
+        Ok(id)
+    }
+
+    /// The service bound for `dept`, if any.
+    pub fn service_for(&self, dept: DeptId) -> Option<ServiceId> {
+        self.directory.get(&dept).copied()
+    }
+
+    /// Unbind `dept` from the directory (its service stays registered —
+    /// ids are dense and never reused — but department-addressed traffic
+    /// no longer reaches it). Returns the unbound service id.
+    pub fn unbind_dept(&mut self, dept: DeptId) -> Option<ServiceId> {
+        self.directory.remove(&dept)
     }
 
     pub fn service_name(&self, id: ServiceId) -> &str {
@@ -78,26 +211,71 @@ impl Bus {
 
     /// Inject a message from "outside" (client tools, timers).
     pub fn post(&mut self, to: ServiceId, msg: Msg) {
-        self.queue.push_back((usize::MAX, to, msg));
+        self.queue.push_back((Sender::External, to, msg));
+    }
+
+    /// Inject a message from "outside", addressed by department.
+    pub fn post_to_dept(&mut self, dept: DeptId, msg: Msg) -> Result<(), BusError> {
+        let to = self
+            .directory
+            .get(&dept)
+            .copied()
+            .ok_or(BusError::UnboundDept { dept })?;
+        self.post(to, msg);
+        Ok(())
     }
 
     /// Deliver messages until the queue drains. Returns the number
-    /// delivered. `limit` guards against ping-pong livelock (panics if
-    /// exceeded — a protocol bug, not an operational condition).
-    pub fn run_until_quiescent(&mut self, limit: u64) -> u64 {
+    /// delivered, or a typed [`BusError`] when `limit` deliveries pass
+    /// without quiescence (ping-pong livelock) or a message is addressed
+    /// to an unregistered service / unbound department — protocol bugs
+    /// the seed `assert!`ed on.
+    pub fn run_until_quiescent(&mut self, limit: u64) -> Result<u64, BusError> {
         let mut n = 0;
-        while let Some((from, to, msg)) = self.queue.pop_front() {
+        let result = loop {
+            let Some((from, to, msg)) = self.queue.pop_front() else {
+                break Ok(n);
+            };
             n += 1;
-            assert!(n <= limit, "bus livelock: {n} messages without quiescence");
-            let mut ctx = Ctx { sender: from, now: self.now, outbox: Vec::new() };
-            self.services[to].handle(msg, &mut ctx);
-            for (dest, m) in ctx.outbox {
-                assert!(dest < self.services.len(), "message to unregistered service {dest}");
-                self.queue.push_back((to, dest, m));
+            if n > limit {
+                break Err(BusError::Livelock { delivered: n, limit });
             }
-        }
+            if to >= self.services.len() {
+                break Err(BusError::UnregisteredService {
+                    to,
+                    from,
+                    registered: self.services.len(),
+                });
+            }
+            let mut ctx = Ctx {
+                sender: from,
+                now: self.now,
+                outbox: Vec::new(),
+                directory: &self.directory,
+                error: None,
+            };
+            self.services[to].handle(msg, &mut ctx);
+            let Ctx { outbox, error, .. } = ctx;
+            if let Some(e) = error {
+                break Err(e);
+            }
+            for (dest, m) in outbox {
+                if dest >= self.services.len() {
+                    return self.settle(n, Err(BusError::UnregisteredService {
+                        to: dest,
+                        from: Sender::Service(to),
+                        registered: self.services.len(),
+                    }));
+                }
+                self.queue.push_back((Sender::Service(to), dest, m));
+            }
+        };
+        self.settle(n, result)
+    }
+
+    fn settle(&mut self, n: u64, result: Result<u64, BusError>) -> Result<u64, BusError> {
         self.delivered += n;
-        n
+        result
     }
 }
 
@@ -105,7 +283,7 @@ impl Bus {
 mod tests {
     use super::*;
 
-    /// Echoes WsClaim back as WsGrant to the sender.
+    /// Echoes a Claim back as a Grant to the sender.
     struct Granter;
 
     impl Service for Granter {
@@ -113,11 +291,10 @@ mod tests {
             "granter"
         }
 
-        fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
-            if let Msg::WsClaim { nodes } = msg {
-                let sender = ctx.sender();
-                if sender != usize::MAX {
-                    ctx.send(sender, Msg::WsGrant { nodes });
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_>) {
+            if let Msg::Claim { dept, nodes } = msg {
+                if let Some(sender) = ctx.sender().service() {
+                    ctx.send(sender, Msg::Grant { dept, nodes });
                 }
             }
         }
@@ -125,6 +302,7 @@ mod tests {
 
     /// Claims once at Tick, records grants.
     struct Claimer {
+        dept: DeptId,
         rps: ServiceId,
         granted: u64,
     }
@@ -134,10 +312,12 @@ mod tests {
             "claimer"
         }
 
-        fn handle(&mut self, msg: Msg, ctx: &mut Ctx) {
+        fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_>) {
             match msg {
-                Msg::Tick { .. } => ctx.send(self.rps, Msg::WsClaim { nodes: 7 }),
-                Msg::WsGrant { nodes } => self.granted += nodes,
+                Msg::Tick { .. } => {
+                    ctx.send(self.rps, Msg::Claim { dept: self.dept, nodes: 7 })
+                }
+                Msg::Grant { nodes, .. } => self.granted += nodes,
                 _ => {}
             }
         }
@@ -147,16 +327,18 @@ mod tests {
     fn request_grant_roundtrip() {
         let mut bus = Bus::new();
         let rps = bus.register(Box::new(Granter));
-        let ws = bus.register(Box::new(Claimer { rps, granted: 0 }));
-        bus.post(ws, Msg::Tick { now: 0 });
-        let delivered = bus.run_until_quiescent(100);
-        assert_eq!(delivered, 3); // Tick, WsClaim, WsGrant
+        let ws = bus
+            .register_dept(DeptId(0), Box::new(Claimer { dept: DeptId(0), rps, granted: 0 }))
+            .unwrap();
+        bus.post_to_dept(DeptId(0), Msg::Tick { now: 0 }).unwrap();
+        let delivered = bus.run_until_quiescent(100).unwrap();
+        assert_eq!(delivered, 3); // Tick, Claim, Grant
         assert_eq!(bus.service_name(rps), "granter");
+        assert_eq!(bus.service_for(DeptId(0)), Some(ws));
     }
 
     #[test]
-    #[should_panic(expected = "livelock")]
-    fn livelock_guard_fires() {
+    fn livelock_guard_returns_typed_error() {
         struct PingPong {
             peer: ServiceId,
         }
@@ -164,7 +346,7 @@ mod tests {
             fn name(&self) -> &str {
                 "pingpong"
             }
-            fn handle(&mut self, _msg: Msg, ctx: &mut Ctx) {
+            fn handle(&mut self, _msg: Msg, ctx: &mut Ctx<'_>) {
                 ctx.send(self.peer, Msg::Shutdown);
             }
         }
@@ -172,6 +354,78 @@ mod tests {
         let a = bus.register(Box::new(PingPong { peer: 1 }));
         let _b = bus.register(Box::new(PingPong { peer: a }));
         bus.post(a, Msg::Shutdown);
-        bus.run_until_quiescent(50);
+        let err = bus.run_until_quiescent(50).unwrap_err();
+        assert_eq!(err, BusError::Livelock { delivered: 51, limit: 50 });
+        assert!(err.to_string().contains("livelock"), "{err}");
+    }
+
+    #[test]
+    fn unregistered_service_send_returns_typed_error() {
+        struct Stray;
+        impl Service for Stray {
+            fn name(&self) -> &str {
+                "stray"
+            }
+            fn handle(&mut self, _msg: Msg, ctx: &mut Ctx<'_>) {
+                ctx.send(99, Msg::Shutdown);
+            }
+        }
+        let mut bus = Bus::new();
+        let a = bus.register(Box::new(Stray));
+        bus.post(a, Msg::Tick { now: 0 });
+        let err = bus.run_until_quiescent(10).unwrap_err();
+        assert_eq!(
+            err,
+            BusError::UnregisteredService { to: 99, from: Sender::Service(a), registered: 1 }
+        );
+        // a bad external post is caught at dispatch too
+        bus.post(42, Msg::Shutdown);
+        let err = bus.run_until_quiescent(10).unwrap_err();
+        assert_eq!(
+            err,
+            BusError::UnregisteredService { to: 42, from: Sender::External, registered: 1 }
+        );
+    }
+
+    #[test]
+    fn dept_directory_binds_unbinds_and_rejects_rebinds() {
+        struct Nop;
+        impl Service for Nop {
+            fn name(&self) -> &str {
+                "nop"
+            }
+            fn handle(&mut self, _msg: Msg, _ctx: &mut Ctx<'_>) {}
+        }
+        let mut bus = Bus::new();
+        let id = bus.register_dept(DeptId(3), Box::new(Nop)).unwrap();
+        assert_eq!(bus.service_for(DeptId(3)), Some(id));
+        let err = bus.register_dept(DeptId(3), Box::new(Nop)).unwrap_err();
+        assert_eq!(err, BusError::DeptAlreadyBound { dept: DeptId(3), service: id });
+        assert_eq!(
+            bus.post_to_dept(DeptId(9), Msg::Shutdown).unwrap_err(),
+            BusError::UnboundDept { dept: DeptId(9) }
+        );
+        assert_eq!(bus.unbind_dept(DeptId(3)), Some(id));
+        assert_eq!(bus.service_for(DeptId(3)), None);
+        assert!(bus.post_to_dept(DeptId(3), Msg::Shutdown).is_err());
+    }
+
+    #[test]
+    fn send_to_unbound_dept_aborts_dispatch_with_typed_error() {
+        struct Router;
+        impl Service for Router {
+            fn name(&self) -> &str {
+                "router"
+            }
+            fn handle(&mut self, _msg: Msg, ctx: &mut Ctx<'_>) {
+                assert_eq!(ctx.service_for(DeptId(7)), None);
+                ctx.send_to_dept(DeptId(7), Msg::Grant { dept: DeptId(7), nodes: 1 });
+            }
+        }
+        let mut bus = Bus::new();
+        let a = bus.register(Box::new(Router));
+        bus.post(a, Msg::Tick { now: 5 });
+        let err = bus.run_until_quiescent(10).unwrap_err();
+        assert_eq!(err, BusError::UnboundDept { dept: DeptId(7) });
     }
 }

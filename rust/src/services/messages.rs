@@ -1,42 +1,86 @@
-//! Messages exchanged between the RPS and the cloud management services.
-//! One closed enum — the framework stays allocation-light and the full
-//! protocol is visible in one place.
+//! The department-addressed service protocol (§II-B, generalized per
+//! arXiv:1003.0958): every resource-flow message names the department it
+//! concerns, so one closed enum serves any roster shape — the paper's
+//! fixed WS/ST pair is just the two-address special case. One closed enum
+//! keeps the framework allocation-light and the full protocol visible in
+//! one place; the variant set has no workload-specific messages left (the
+//! seed's `WsClaim`/`StGrant`/`ForceReturn`-style variants are gone).
+//!
+//! Conventions:
+//! * `dept` always names the department the *resources* belong to — on
+//!   RPS-bound messages it is the sender's own department, on CMS-bound
+//!   messages the recipient's.
+//! * The RPS routes CMS-bound messages through the bus's department
+//!   directory ([`crate::services::Bus::register_dept`]); a message for an
+//!   unbound department is a protocol bug surfaced as a typed
+//!   [`crate::services::BusError`].
 
+use crate::cluster::{DeptId, DeptKind};
+use crate::services::framework::ServiceId;
 use crate::sim::SimTime;
 
-/// Service-to-service message.
+/// Service-to-service message of the department-addressed protocol.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
-    // ---- WS Server -> RPS --------------------------------------------------
-    /// Urgent claim for `nodes` more nodes.
-    WsClaim { nodes: u64 },
-    /// Immediate release of idle nodes.
-    WsRelease { nodes: u64 },
+    // ---- CMS -> RPS ---------------------------------------------------------
+    /// Department `dept` urgently claims `nodes` more nodes (a service
+    /// department's deficit after a demand rise, or a batch department's
+    /// queued work beyond its idle pool). The RPS answers with [`Msg::Grant`]
+    /// for the free-pool share and [`Msg::ForceReturn`] to each victim the
+    /// policy names for the shortfall.
+    Claim { dept: DeptId, nodes: u64 },
+    /// Department `dept` returns `nodes` idle nodes to the free pool
+    /// immediately (§II-B: service departments release surplus at once).
+    Release { dept: DeptId, nodes: u64 },
+    /// Department `dept` finished a [`Msg::ForceReturn`]: it surrendered
+    /// `nodes` nodes, killing `killed` jobs to do so. The RPS books the
+    /// transfer and forwards the nodes to the claimant (or to the free pool
+    /// when the return settles a [`Msg::DeptLeave`]).
+    Released { dept: DeptId, nodes: u64, killed: u64 },
+    /// Department `dept` settles an expired lease ([`Msg::LeaseExpired`]):
+    /// `returned` idle nodes go back to the free pool, `renewed` busy nodes
+    /// stay for another term (arXiv:1006.1401 lease-style resizing).
+    LeaseReturn { dept: DeptId, returned: u64, renewed: u64 },
 
-    // ---- RPS -> WS Server --------------------------------------------------
-    /// Nodes provisioned to WS.
-    WsGrant { nodes: u64 },
+    // ---- RPS -> CMS ---------------------------------------------------------
+    /// `nodes` nodes are provisioned to department `dept` (free-pool grant,
+    /// idle-capacity distribution, or a completed forced transfer).
+    Grant { dept: DeptId, nodes: u64 },
+    /// Department `dept` must surrender `nodes` nodes *now* — idle nodes
+    /// first, then killing running jobs in the configured order (§II-B).
+    /// The CMS answers with [`Msg::Released`].
+    ForceReturn { dept: DeptId, nodes: u64 },
+    /// A lease covering `nodes` of department `dept`'s grants expired: the
+    /// CMS returns what is idle and renews what is busy via
+    /// [`Msg::LeaseReturn`]. Only lease-bearing policies emit this.
+    LeaseExpired { dept: DeptId, nodes: u64 },
 
-    // ---- RPS -> ST Server --------------------------------------------------
-    /// Nodes provisioned to ST.
-    StGrant { nodes: u64 },
-    /// Forced return: release `nodes` immediately (killing jobs if needed).
-    ForceReturn { nodes: u64 },
+    // ---- client tools -> batch CMS ------------------------------------------
+    /// Submit job `trace_idx` of department `dept`'s trace to its batch CMS
+    /// (the client-tools path of §II-A; out-of-range indices are dropped
+    /// with a warning).
+    SubmitJob { dept: DeptId, trace_idx: usize },
 
-    // ---- ST Server -> RPS --------------------------------------------------
-    /// ST released nodes after a forced return (`killed` jobs died for it).
-    StReleased { nodes: u64, killed: u64 },
-
-    // ---- client tools -> ST CMS --------------------------------------------
-    /// Submit a job (index into the run's trace).
-    SubmitJob { trace_idx: usize },
+    // ---- lifecycle (runtime affiliation, arXiv:1003.0958) -------------------
+    /// Department `dept` joins the shared cluster at runtime: the RPS grows
+    /// the ledger by one slot and starts tracking the department's profile
+    /// (`kind`, `quota`; runtime joiners enter at their kind's default
+    /// priority tier — tier-differentiated membership is a boot-roster
+    /// feature).
+    DeptJoin { dept: DeptId, kind: DeptKind, quota: u64 },
+    /// Department `dept` leaves the shared cluster. The RPS force-reclaims
+    /// everything the department still holds (a [`Msg::ForceReturn`] /
+    /// [`Msg::Released`] exchange), returns it to the free pool, and drops
+    /// the department from the policy.
+    DeptLeave { dept: DeptId },
 
     // ---- timers / lifecycle -------------------------------------------------
-    /// Periodic tick (dispatch mode injects these; realtime mode uses the
-    /// wall clock).
+    /// Periodic tick (the serve loop injects these; the RPS settles lease
+    /// expiries on its tick, the CMSes admit arrivals, retire completions,
+    /// and run their resource-management policies on theirs).
     Tick { now: SimTime },
-    /// Heartbeat for the monitor.
-    Heartbeat { from: usize, now: SimTime },
+    /// Heartbeat for the monitor service (`from` is the beating service).
+    Heartbeat { from: ServiceId, now: SimTime },
     /// Orderly shutdown.
     Shutdown,
 }

@@ -1,18 +1,25 @@
 //! The common service framework (§II-A): the substrate every cloud
 //! management service is built on. It provides service registration, a
-//! message bus with deterministic FIFO dispatch, and a heartbeat monitor —
-//! the "set of services that manage, monitor the shared cluster resources
-//! and provision resources to cloud management services".
+//! message bus with deterministic FIFO dispatch and a department
+//! directory (the department-addressed protocol of [`messages`]), and a
+//! heartbeat monitor — the "set of services that manage, monitor the
+//! shared cluster resources and provision resources to cloud management
+//! services".
 //!
 //! Two execution modes share the same [`Service`] trait:
 //! * **dispatch mode** — single-threaded, deterministic delivery
 //!   ([`Bus::run_until_quiescent`]); the simulator and tests use this;
 //! * **realtime mode** — [`crate::coordinator::realtime`] pumps the same
-//!   bus from a wall-clock loop with live services.
+//!   bus from a wall-clock loop with one live CMS service per department
+//!   (any roster shape, including runtime [`Msg::DeptJoin`] arrivals).
+//!
+//! Protocol failures (livelock, messages to unregistered services or
+//! unbound departments) are typed [`BusError`]s returned as `Result`, not
+//! panics.
 
 pub mod framework;
 pub mod messages;
 pub mod monitor;
 
-pub use framework::{Bus, Ctx, Service, ServiceId};
+pub use framework::{Bus, BusError, Ctx, Sender, Service, ServiceId};
 pub use messages::Msg;

@@ -1,18 +1,21 @@
 //! Heartbeat monitor — the framework's health-tracking service. Each CMS
-//! heartbeats every period; the monitor flags services whose heartbeat is
-//! overdue by `timeout`. (In the real Phoenix stack this drives failover;
-//! here it drives the coordinator's health report and exercises the
-//! framework's periodic-message machinery.)
+//! heartbeats every period ([`crate::services::Msg::Heartbeat`], sent on
+//! its tick by the realtime coordinator's department services); the
+//! monitor flags services whose heartbeat is overdue by `timeout`. (In
+//! the real Phoenix stack this drives failover; here it drives the serve
+//! report's health line and exercises the framework's periodic-message
+//! machinery.)
 
 use std::collections::BTreeMap;
 
+use crate::services::framework::ServiceId;
 use crate::sim::SimTime;
 
 /// Tracks last-heard-from times.
 #[derive(Debug)]
 pub struct Monitor {
     timeout: u64,
-    last_seen: BTreeMap<usize, SimTime>,
+    last_seen: BTreeMap<ServiceId, SimTime>,
 }
 
 impl Monitor {
@@ -21,18 +24,24 @@ impl Monitor {
     }
 
     /// Record a heartbeat.
-    pub fn beat(&mut self, service: usize, now: SimTime) {
+    pub fn beat(&mut self, service: ServiceId, now: SimTime) {
         self.last_seen.insert(service, now);
     }
 
     /// Services considered down at `now` (never-seen services are not
     /// listed until they have beaten once — registration is implicit).
-    pub fn down(&self, now: SimTime) -> Vec<usize> {
+    pub fn down(&self, now: SimTime) -> Vec<ServiceId> {
         self.last_seen
             .iter()
             .filter(|&(_, &t)| now.saturating_sub(t) > self.timeout)
             .map(|(&id, _)| id)
             .collect()
+    }
+
+    /// Stop tracking a service (an orderly departure — e.g. a department
+    /// that left the cluster — must not read as a failure).
+    pub fn forget(&mut self, service: ServiceId) {
+        self.last_seen.remove(&service);
     }
 
     pub fn tracked(&self) -> usize {

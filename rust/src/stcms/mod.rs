@@ -87,6 +87,12 @@ impl StServer {
         self.queue.len()
     }
 
+    /// Total nodes the queued (not yet started) jobs ask for — the demand
+    /// signal the realtime batch CMS sends upstream as a claim.
+    pub fn queued_nodes(&self) -> u64 {
+        self.queue.iter().map(|j| j.size).sum()
+    }
+
     pub fn running_count(&self) -> usize {
         self.running.len()
     }

@@ -322,15 +322,23 @@ fn realtime_serve_mirrors_virtual_time_policies() {
         .collect();
     let mut reactive = Reactive::new(96);
     let scaler: ScalerFn = Box::new(move |util, _| reactive.decide(util));
-    let report = realtime::serve(&cfg, jobs, rates, scaler, 2000, 0);
+    let report = realtime::serve_pair(&cfg, jobs, rates, scaler, 2000, 0).unwrap();
     // 500 rps needs 500/(0.8*50) = 13 instances at equilibrium
     assert!(
         (12..=16).contains(&report.ws_peak_demand),
         "peak demand {}",
         report.ws_peak_demand
     );
-    assert_eq!(report.jobs_completed, 20);
+    assert_eq!(report.completed, 20);
     assert!(report.messages > 100);
+    // the report carries the virtual-time path's per-department shape
+    assert_eq!(report.per_dept.len(), 2);
+    assert_eq!(
+        report.per_dept.iter().map(|d| d.completed).sum::<u64>(),
+        report.completed
+    );
+    let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+    assert_eq!(report.free_end + held, report.cluster_nodes, "ledger conservation");
 }
 
 #[test]

@@ -738,3 +738,85 @@ fn prop_engine_total_order() {
         Ok(())
     });
 }
+
+/// Serve-path conservation (the bus mirror of the virtual-time ledger
+/// properties): for random rosters — mixed kinds, random quotas and
+/// traces, runtime joiners — under every built-in base policy, the
+/// grant / force / release / lease / join / leave message flows keep the
+/// ledger whole: `free_end + Σ holding_end == total`, and the batch job
+/// accounting closes (`completed + killed + in_flight == submitted`).
+/// Per-move over-grant/over-force would panic inside the run via the
+/// Ledger's conservation checks.
+#[test]
+fn prop_serve_bus_flows_conserve_nodes_against_ledger() {
+    use phoenix_cloud::coordinator::realtime::{serve_roster, ScalerFn, ServeDept};
+    use phoenix_cloud::trace::web_synth::RateSeries;
+
+    check("serve-bus-conservation", 40, |g: &mut Gen| {
+        let total = g.u64_in(24, 96);
+        let mut cfg = ExperimentConfig::dynamic(total);
+        cfg.web.target_peak_instances = 4;
+        cfg.ws_sample_period = 20;
+        let specs = [
+            PolicySpec::Cooperative,
+            PolicySpec::StaticPartition,
+            PolicySpec::ProportionalShare,
+            PolicySpec::Lease { secs: 40 },
+            PolicySpec::Lease { secs: 260 },
+            PolicySpec::Tiered,
+        ];
+        let policy = PolicyChoice::Base(*g.pick(&specs));
+        let k = g.usize_in(2, 5);
+        let mut depts = Vec::with_capacity(k);
+        for i in 0..k {
+            // dept 0 is always a boot-time batch anchor
+            if i == 0 || g.bool() {
+                let jobs: Vec<Job> = (0..g.usize_in(1, 8))
+                    .map(|j| Job {
+                        id: (i * 100 + j) as u64 + 1,
+                        submit: g.u64_in(0, 600),
+                        size: g.u64_in(1, 6),
+                        runtime: g.u64_in(20, 300),
+                        requested: 600,
+                    })
+                    .collect();
+                let mut d = ServeDept::batch(&format!("b{i}"), g.u64_in(8, 48), jobs);
+                if i > 0 && g.bool() {
+                    d = d.joining_at(g.u64_in(1, 500));
+                }
+                depts.push(d);
+            } else {
+                let rates = RateSeries {
+                    sample_period: 20,
+                    rates: (0..60).map(|_| g.f64_in(0.0, 800.0)).collect(),
+                };
+                let mut reactive = Reactive::new(total);
+                let scaler: ScalerFn = Box::new(move |util, _| reactive.decide(util));
+                let mut d =
+                    ServeDept::service(&format!("s{i}"), g.u64_in(4, 32), rates, scaler);
+                if g.bool() {
+                    d = d.joining_at(g.u64_in(1, 500));
+                }
+                depts.push(d);
+            }
+        }
+        let report = serve_roster(&cfg, &policy, depts, 1000, 0)
+            .map_err(|e| format!("serve failed: {e:#}"))?;
+        let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+        prop_assert!(
+            report.free_end + held == total,
+            "ledger leaked: free {} + held {held} != {total} ({report:?})",
+            report.free_end
+        );
+        prop_assert!(
+            report.completed as usize + report.killed as usize + report.in_flight
+                == report.submitted,
+            "job accounting open: {report:?}"
+        );
+        prop_assert!(
+            report.per_dept.iter().map(|d| d.completed).sum::<u64>() == report.completed,
+            "per-dept completed does not sum: {report:?}"
+        );
+        Ok(())
+    });
+}

@@ -1,12 +1,160 @@
-//! L1↔L3 numerics contract: the AOT-compiled HLO (Pallas kernel + JAX
-//! graph) executed through PJRT must match the pure-Rust reference
-//! implementation, and the train_step must actually learn.
+//! Runtime end-to-end contracts, two halves:
 //!
-//! These tests need `make artifacts`; they skip (with a notice) when the
-//! artifacts are absent so `cargo test` stays green on a fresh checkout.
+//! 1. **Serve path** — the realtime coordinator on the
+//!    department-addressed service bus must mirror the virtual-time
+//!    `ConsolidationSim`: the 2-department cooperative case is pinned to
+//!    the same completed/killed/peak totals on tick-aligned traces, and
+//!    the shipped `configs/serve.toml` roster (K = 3, one mid-run
+//!    `DeptJoin`) runs end to end. These run everywhere.
+//! 2. **L1↔L3 numerics** — the AOT-compiled HLO (Pallas kernel + JAX
+//!    graph) executed through PJRT must match the pure-Rust reference
+//!    implementation, and the train_step must actually learn. These need
+//!    `make artifacts`; they skip (with a notice) when the artifacts are
+//!    absent so `cargo test` stays green on a fresh checkout.
 
+use phoenix_cloud::cluster::DeptKind;
+use phoenix_cloud::config::{DeptSpec, ExperimentConfig};
+use phoenix_cloud::coordinator::realtime::{
+    self, ScalerFn, ServeDept, ServeWorkload,
+};
+use phoenix_cloud::coordinator::ConsolidationSim;
 use phoenix_cloud::runtime::{reference_forecast, ForecastEngine};
+use phoenix_cloud::trace::web_synth::RateSeries;
 use phoenix_cloud::util::rng::Rng;
+use phoenix_cloud::workload::Job;
+
+// ---- serve path: the bus mirrors the virtual-time coordinator ---------------
+
+/// The acceptance pin: a 2-department cooperative serve run reports the
+/// same completed / killed / peak / shortage / force totals as the
+/// equivalent `ConsolidationSim` run. Traces are tick-aligned (submits,
+/// runtimes, and demand changes on 20 s boundaries) so the serve loop's
+/// tick quantization is exact, and the serve-side scaler replays the
+/// sim's precomputed demand series sample by sample.
+#[test]
+fn serve_two_dept_cooperative_matches_consolidation_sim() {
+    let mut cfg = ExperimentConfig::dynamic(16);
+    cfg.horizon = 400;
+    cfg.ws_sample_period = 20;
+    let jobs = vec![
+        Job { id: 1, submit: 0, size: 4, runtime: 100, requested: 200 },
+        Job { id: 2, submit: 0, size: 4, runtime: 100, requested: 200 },
+        Job { id: 3, submit: 20, size: 4, runtime: 100, requested: 200 },
+        Job { id: 4, submit: 200, size: 2, runtime: 60, requested: 120 },
+    ];
+    // 21 samples over 400 s: a spike to 10 instances at t = 40 (forcing
+    // kills on the 16-node cluster), back to 2 at t = 140
+    let mut demand = vec![2u64; 21];
+    for d in demand.iter_mut().take(7).skip(2) {
+        *d = 10;
+    }
+
+    let sim = ConsolidationSim::new(cfg.clone(), jobs.clone(), demand.clone())
+        .run()
+        .unwrap();
+    assert!(sim.killed > 0, "the pin must exercise the kill path: {sim:?}");
+
+    // serve: same jobs; the service department replays the same demand
+    // series (one scaler call per tick = one sample), booted at demand[0]
+    // exactly like the sim's first-sample boot grant
+    let replay: ScalerFn = {
+        let demand = demand.clone();
+        let mut k = 0usize;
+        Box::new(move |_, _| {
+            let d = demand[k.min(demand.len() - 1)];
+            k += 1;
+            d
+        })
+    };
+    let rates = RateSeries { sample_period: 20, rates: vec![0.0; demand.len()] };
+    let depts = vec![
+        ServeDept::batch("st", cfg.st_nodes, jobs),
+        ServeDept {
+            spec: DeptSpec {
+                name: "ws".into(),
+                kind: DeptKind::Service,
+                tier: 0,
+                quota: cfg.ws_nodes,
+                seed: None,
+                join_at: 0,
+            },
+            workload: ServeWorkload::Service {
+                rates,
+                scaler: replay,
+                boot_instances: demand[0],
+            },
+            leave_at: None,
+        },
+    ];
+    let policy = phoenix_cloud::provision::PolicyChoice::Base(
+        phoenix_cloud::provision::PolicySpec::Cooperative,
+    );
+    let serve = realtime::serve_roster(&cfg, &policy, depts, 400, 0).unwrap();
+
+    assert_eq!(serve.completed, sim.completed, "completed: {serve:?}\nvs {sim:?}");
+    assert_eq!(serve.killed, sim.killed, "killed: {serve:?}\nvs {sim:?}");
+    assert_eq!(serve.in_flight, sim.in_flight);
+    assert_eq!(serve.submitted, sim.submitted);
+    assert_eq!(serve.ws_shortage_node_secs, sim.ws_shortage_node_secs);
+    assert_eq!(
+        serve.ws_peak_demand,
+        demand.iter().copied().max().unwrap(),
+        "peak demand"
+    );
+    assert_eq!(serve.force_returns, sim.force_returns);
+    assert_eq!(serve.forced_nodes, sim.forced_nodes);
+    assert_eq!(
+        serve.avg_turnaround, sim.avg_turnaround,
+        "turnaround diverged: {} vs {}",
+        serve.avg_turnaround, sim.avg_turnaround
+    );
+    // per-department breakdowns agree too
+    assert_eq!(serve.per_dept.len(), sim.per_dept.len());
+    for (s, v) in serve.per_dept.iter().zip(&sim.per_dept) {
+        assert_eq!(s.kind, v.kind);
+        assert_eq!(s.completed, v.completed, "{}: {serve:?}\nvs {sim:?}", s.name);
+        assert_eq!(s.killed, v.killed, "{}", s.name);
+    }
+    // and the serve ledger closes
+    let held: u64 = serve.per_dept.iter().map(|d| d.holding_end).sum();
+    assert_eq!(serve.free_end + held, serve.cluster_nodes);
+}
+
+/// The shipped serve roster (K = 3, lease policy, one mid-run arrival)
+/// runs end to end through `serve_config` — exactly what
+/// `phoenixd serve --config configs/serve.toml` executes and what the CI
+/// smoke step drives on every push.
+#[test]
+fn shipped_serve_config_runs_a_join_scenario() {
+    let mut cfg = ExperimentConfig::from_file("configs/serve.toml").unwrap();
+    let secs = 2000u64;
+    cfg.horizon = secs;
+    cfg.hpc.horizon = secs;
+    cfg.hpc.num_jobs = 120; // keep the test fast; the CLI uses the full config
+    cfg.web.horizon = secs.max(cfg.web.sample_period * 64);
+    assert_eq!(cfg.departments.len(), 3);
+    assert!(
+        cfg.departments.iter().any(|d| d.join_at > 0 && d.join_at < secs),
+        "the shipped roster must exercise a mid-run join"
+    );
+    let report = realtime::serve_config(&cfg, secs, 0, |_, c| {
+        let mut r = phoenix_cloud::wscms::autoscaler::Reactive::new(c.total_nodes);
+        Box::new(move |util, _| r.decide(util))
+    })
+    .unwrap();
+    assert_eq!(report.joins, 1, "{report:?}");
+    assert_eq!(report.per_dept.len(), 3);
+    assert_eq!(
+        report.completed as usize + report.killed as usize + report.in_flight,
+        report.submitted,
+        "job accounting must close: {report:?}"
+    );
+    let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+    assert_eq!(report.free_end + held, report.cluster_nodes, "ledger conservation");
+    assert!(report.down_services.is_empty(), "{:?}", report.down_services);
+}
+
+// ---- L1↔L3 numerics contract (needs `make artifacts`) -----------------------
 
 const DIR: &str = "artifacts";
 
