@@ -12,7 +12,9 @@
 //! conventional ids [`DeptId::ST`] (0) and [`DeptId::WS`] (1).
 //!
 //! The ledger enforces conservation invariants after every move: nodes are
-//! never double-allocated and never lost (`free + Σ held == total`).
+//! never double-allocated and never lost (`free + Σ held + down == total`
+//! — `down` is the crashed pool of the fault-injection layer,
+//! [`crate::faults`]; it is zero in every healthy run).
 
 use std::fmt;
 
@@ -27,6 +29,10 @@ impl DeptId {
     /// Conventional id of the Web-service department in the paper's
     /// two-department configuration.
     pub const WS: DeptId = DeptId(1);
+    /// Placeholder address on injected fault messages
+    /// ([`crate::services::Msg::NodeDown`] / `NodeUp`): the RPS itself
+    /// picks the victim, so the injector has no department to name.
+    pub const RPS_FAULT: DeptId = DeptId(u16::MAX);
 
     #[inline]
     pub fn index(self) -> usize {
@@ -72,6 +78,9 @@ pub struct Ledger {
     total: u64,
     free: u64,
     held: Vec<u64>,
+    /// Crashed nodes awaiting repair (fault injection). They belong to
+    /// nobody: not allocatable, not held, returned to `free` on recovery.
+    down: u64,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -83,9 +92,9 @@ pub enum LedgerError {
 }
 
 impl Ledger {
-    /// All nodes start free (held by the provision service).
+    /// All nodes start free (held by the provision service) and healthy.
     pub fn new(total: u64, num_depts: usize) -> Self {
-        Self { total, free: total, held: vec![0; num_depts] }
+        Self { total, free: total, held: vec![0; num_depts], down: 0 }
     }
 
     pub fn total(&self) -> u64 {
@@ -94,6 +103,11 @@ impl Ledger {
 
     pub fn free(&self) -> u64 {
         self.free
+    }
+
+    /// Crashed nodes awaiting repair.
+    pub fn down(&self) -> u64 {
+        self.down
     }
 
     pub fn num_depts(&self) -> usize {
@@ -166,15 +180,66 @@ impl Ledger {
         Ok(())
     }
 
+    /// Crash-voiding, free-pool side: `n` free nodes fail and move to the
+    /// down pool. Fails (without mutating) if fewer than `n` are free.
+    pub fn crash_free(&mut self, n: u64) -> Result<(), LedgerError> {
+        if self.free < n {
+            return Err(LedgerError::Insufficient {
+                holder: "free".to_string(),
+                requested: n,
+                held: self.free,
+            });
+        }
+        self.free -= n;
+        self.down += n;
+        self.check();
+        Ok(())
+    }
+
+    /// Crash-voiding, holder side: `n` of `dept`'s nodes fail and move to
+    /// the down pool. The caller has already killed/shrunk the CMS state
+    /// riding on them. Fails (without mutating) on overdraw.
+    pub fn crash_held(&mut self, dept: DeptId, n: u64) -> Result<(), LedgerError> {
+        let slot = self.slot(dept)?;
+        if *slot < n {
+            return Err(LedgerError::Insufficient {
+                holder: dept.to_string(),
+                requested: n,
+                held: *slot,
+            });
+        }
+        *slot -= n;
+        self.down += n;
+        self.check();
+        Ok(())
+    }
+
+    /// `n` repaired nodes return down → free. Fails (without mutating) if
+    /// fewer than `n` are down.
+    pub fn recover(&mut self, n: u64) -> Result<(), LedgerError> {
+        if self.down < n {
+            return Err(LedgerError::Insufficient {
+                holder: "down".to_string(),
+                requested: n,
+                held: self.down,
+            });
+        }
+        self.down -= n;
+        self.free += n;
+        self.check();
+        Ok(())
+    }
+
     /// Conservation invariant; cheap enough to run after every move.
     #[inline]
     fn check(&self) {
         debug_assert_eq!(
-            self.free + self.held.iter().sum::<u64>(),
+            self.free + self.held.iter().sum::<u64>() + self.down,
             self.total,
-            "ledger leaked nodes: free={} held={:?} total={}",
+            "ledger leaked nodes: free={} held={:?} down={} total={}",
             self.free,
             self.held,
+            self.down,
             self.total
         );
     }
@@ -190,6 +255,8 @@ impl Ledger {
     }
 
     /// Snapshot as (free, per-department holdings) for metrics sampling.
+    /// Crashed nodes are reported separately by [`Ledger::down`]; the full
+    /// invariant is `free + Σ held + down == total`.
     pub fn snapshot(&self) -> (u64, Vec<u64>) {
         (self.free, self.held.clone())
     }
@@ -267,6 +334,45 @@ mod tests {
         l.grant(joiner, 5).unwrap();
         l.transfer(DeptId(0), joiner, 3).unwrap();
         assert_eq!(l.snapshot(), (0, vec![12, 0, 8]));
+    }
+
+    #[test]
+    fn crash_and_recover_move_through_the_down_pool() {
+        let mut l = Ledger::new(20, 2);
+        l.grant(DeptId::ST, 12).unwrap();
+        // free-pool crash
+        l.crash_free(3).unwrap();
+        assert_eq!((l.free(), l.down()), (5, 3));
+        // holder crash
+        l.crash_held(DeptId::ST, 4).unwrap();
+        assert_eq!(l.held(DeptId::ST), 8);
+        assert_eq!(l.down(), 7);
+        assert_eq!(l.snapshot(), (5, vec![8, 0]), "snapshot shape unchanged");
+        // recovery returns to the free pool, never to the old holder
+        l.recover(6).unwrap();
+        assert_eq!((l.free(), l.down()), (11, 1));
+        l.recover(1).unwrap();
+        assert_eq!(l.down(), 0);
+        assert_eq!(l.free() + l.held(DeptId::ST), l.total());
+    }
+
+    #[test]
+    fn crash_and_recover_refuse_overdraw_without_mutating() {
+        let mut l = Ledger::new(10, 2);
+        l.grant(DeptId::WS, 4).unwrap();
+        l.crash_free(2).unwrap();
+        let before = (l.snapshot(), l.down());
+        assert!(matches!(l.crash_free(9), Err(LedgerError::Insufficient { .. })));
+        assert!(matches!(
+            l.crash_held(DeptId::WS, 5),
+            Err(LedgerError::Insufficient { .. })
+        ));
+        assert!(matches!(l.recover(3), Err(LedgerError::Insufficient { .. })));
+        assert_eq!(
+            l.crash_held(DeptId(9), 1),
+            Err(LedgerError::UnknownDept(DeptId(9)))
+        );
+        assert_eq!((l.snapshot(), l.down()), before);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::DeptKind;
+use crate::faults::FaultConfig;
 use crate::provision::mixed::{PolicyChoice, TierRule};
 use crate::provision::policy::{DeptProfile, PolicySpec};
 use crate::trace::hpc_synth::HpcTraceConfig;
@@ -114,10 +115,11 @@ pub struct DeptSpec {
     pub seed: Option<u64>,
     /// Trace second at which the department joins the shared cluster
     /// (runtime affiliation, arXiv:1003.0958). 0 — the default — means
-    /// present from boot. Only the serve path (`phoenixd serve`) honors
-    /// joins; the virtual-time experiments reject rosters that use it.
-    /// Runtime joiners enter at their kind's default priority tier, so a
-    /// non-default `tier` on a joining department is ignored.
+    /// present from boot. Both paths honor joins: the serve loop posts
+    /// `DeptJoin` on the bus, the virtual-time engine seeds a `DeptJoin`
+    /// event ahead of the joiner's workload. Runtime joiners enter at
+    /// their kind's default priority tier, so a non-default `tier` on a
+    /// joining department is ignored.
     pub join_at: u64,
 }
 
@@ -247,6 +249,36 @@ pub struct ScenarioSpec {
     /// Web-demand correlation override ρ ∈ [0, 1] (None = the base
     /// config's `[trace] correlation`).
     pub correlation: Option<f64>,
+    /// Per-node MTBF override, seconds (None = the base `[faults]`
+    /// config; 0 disables fault injection for this scenario).
+    pub mtbf: Option<f64>,
+    /// Per-node MTTR override, seconds.
+    pub mttr: Option<f64>,
+    /// Fault-schedule seed override.
+    pub fault_seed: Option<u64>,
+    /// Noisy-neighbor efficiency override in (0, 1].
+    pub efficiency: Option<f64>,
+}
+
+impl ScenarioSpec {
+    /// The effective fault config of this scenario: the base `[faults]`
+    /// settings with this scenario's overrides applied.
+    pub fn fault_config(&self, base: &FaultConfig) -> FaultConfig {
+        let mut f = base.clone();
+        if let Some(mtbf) = self.mtbf {
+            f.mtbf_secs = mtbf;
+        }
+        if let Some(mttr) = self.mttr {
+            f.mttr_secs = mttr;
+        }
+        if let Some(seed) = self.fault_seed {
+            f.seed = seed;
+        }
+        if let Some(eff) = self.efficiency {
+            f.efficiency = eff;
+        }
+        f
+    }
 }
 
 pub(crate) const SCENARIO_POLICY_KINDS: [&str; 6] =
@@ -327,6 +359,10 @@ pub struct ExperimentConfig {
     /// (`[trace] correlation` / `--correlation`): 0 = the seed's fully
     /// independent traces (bit-identical), 1 = one shared load process.
     pub correlation: f64,
+    /// Fault injection & degraded capacity (`[faults]` / `--mtbf` etc.).
+    /// The default is the healthy cluster: zero MTBF (no events, no RNG
+    /// draws), efficiency 1.0, no flash crowd — entirely inert.
+    pub faults: FaultConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -350,6 +386,7 @@ impl Default for ExperimentConfig {
             swf: None,
             swf_procs_per_node: 8,
             correlation: 0.0,
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -437,6 +474,14 @@ impl ExperimentConfig {
         if !self.correlation.is_finite() || !(0.0..=1.0).contains(&self.correlation) {
             bail!("trace.correlation must be in [0, 1], got {}", self.correlation);
         }
+        self.faults.validate()?;
+        if self.faults.flash_crowd.is_some() && self.correlation == 0.0 {
+            bail!(
+                "faults.flash_crowd replaces the correlated blend's latent — it needs \
+                 trace.correlation > 0 to reach any department (rho = 0 replays the \
+                 independent traces bit-identically)"
+            );
+        }
         for (i, s) in self.scenarios.iter().enumerate() {
             let label = if s.name.is_empty() { format!("#{i}") } else { s.name.clone() };
             if s.k == 0 || s.k > 64 {
@@ -472,6 +517,10 @@ impl ExperimentConfig {
                     bail!("scenario {label}: trace path must not be empty");
                 }
             }
+            // fault overrides validate through the same rules as [faults]
+            s.fault_config(&self.faults)
+                .validate()
+                .with_context(|| format!("scenario {label}"))?;
         }
         Ok(())
     }
@@ -615,6 +664,10 @@ impl ExperimentConfig {
                 let frac = typed_f64(s, "frac", &ctx)?;
                 let trace = typed_str(s, "trace", &ctx)?.map(str::to_string);
                 let correlation = typed_f64(s, "correlation", &ctx)?;
+                let mtbf = typed_f64(s, "mtbf", &ctx)?;
+                let mttr = typed_f64(s, "mttr", &ctx)?;
+                let fault_seed = typed_u64(s, "fault_seed", &ctx)?;
+                let efficiency = typed_f64(s, "efficiency", &ctx)?;
                 scenarios.push(ScenarioSpec {
                     name,
                     k,
@@ -625,6 +678,10 @@ impl ExperimentConfig {
                     frac,
                     trace,
                     correlation,
+                    mtbf,
+                    mttr,
+                    fault_seed,
+                    efficiency,
                 });
             }
             self.scenarios = scenarios;
@@ -639,6 +696,24 @@ impl ExperimentConfig {
             }
             if let Some(rho) = typed_f64(t, "correlation", ctx)? {
                 self.correlation = rho;
+            }
+        }
+        if let Some(f) = doc.get("faults") {
+            let ctx = "[faults]";
+            if let Some(v) = typed_f64(f, "mtbf_secs", ctx)? {
+                self.faults.mtbf_secs = v;
+            }
+            if let Some(v) = typed_f64(f, "mttr_secs", ctx)? {
+                self.faults.mttr_secs = v;
+            }
+            if let Some(v) = typed_u64(f, "seed", ctx)? {
+                self.faults.seed = v;
+            }
+            if let Some(v) = typed_f64(f, "efficiency", ctx)? {
+                self.faults.efficiency = v;
+            }
+            if let Some(v) = typed_str(f, "flash_crowd", ctx)? {
+                self.faults.flash_crowd = Some(v.to_string());
             }
         }
         if let Some(h) = doc.get("hpc") {
@@ -888,11 +963,83 @@ mod tests {
             frac: None,
             trace: None,
             correlation: Some(-0.1),
+            mtbf: None,
+            mttr: None,
+            fault_seed: None,
+            efficiency: None,
         });
         assert!(cfg.validate().is_err(), "negative scenario correlation");
         cfg.scenarios[0].correlation = None;
         cfg.scenarios[0].trace = Some(String::new());
         assert!(cfg.validate().is_err(), "empty scenario trace path");
+    }
+
+    #[test]
+    fn faults_overlay_parses_and_validates() {
+        let doc = crate::util::toml::parse(
+            "[trace]\ncorrelation = 0.5\n\n\
+             [faults]\nmtbf_secs = 40000\nmttr_secs = 1800\nseed = 99\n\
+             efficiency = 0.9\nflash_crowd = \"traces/wc\"\n\n\
+             [[scenario]]\nname = \"faulty\"\nk = 2\nmtbf = 20000\n\
+             fault_seed = 7\nefficiency = 0.8\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        assert!(!cfg.faults.enabled(), "default is the healthy cluster");
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        // a flash crowd only reaches departments through the blend — rho=0
+        // would silently replay the independent traces, so it is rejected
+        cfg.correlation = 0.0;
+        assert!(cfg.validate().is_err(), "flash_crowd with rho = 0");
+        cfg.correlation = 0.5;
+        assert_eq!(cfg.faults.mtbf_secs, 40_000.0);
+        assert_eq!(cfg.faults.mttr_secs, 1_800.0);
+        assert_eq!(cfg.faults.seed, 99);
+        assert_eq!(cfg.faults.efficiency, 0.9);
+        assert_eq!(cfg.faults.flash_crowd.as_deref(), Some("traces/wc"));
+        // the scenario's effective config overlays the base
+        let s = &cfg.scenarios[0];
+        assert_eq!((s.mtbf, s.mttr), (Some(20_000.0), None));
+        let eff = s.fault_config(&cfg.faults);
+        assert_eq!(eff.mtbf_secs, 20_000.0);
+        assert_eq!(eff.mttr_secs, 1_800.0, "unset override keeps the base");
+        assert_eq!(eff.seed, 7);
+        assert_eq!(eff.efficiency, 0.8);
+        // mistyped fault settings error, never silently default
+        for bad in [
+            "[faults]\nmtbf_secs = \"often\"\n",
+            "[faults]\nseed = -1\n",
+            "[[scenario]]\nk = 2\nmtbf = \"often\"\n",
+            "[[scenario]]\nk = 2\nfault_seed = 0.5\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+        // out-of-range values are caught by validate (base and override)
+        let mut cfg = ExperimentConfig::default();
+        cfg.faults.efficiency = 1.5;
+        assert!(cfg.validate().is_err(), "efficiency above 1");
+        cfg.faults.efficiency = 1.0;
+        cfg.scenarios.push(ScenarioSpec {
+            name: "bad".into(),
+            k: 2,
+            mix: RosterMix::Alternating,
+            policy_kind: "cooperative".into(),
+            lease_secs: 3600,
+            load: None,
+            frac: None,
+            trace: None,
+            correlation: None,
+            mtbf: Some(-5.0),
+            mttr: None,
+            fault_seed: None,
+            efficiency: None,
+        });
+        assert!(cfg.validate().is_err(), "negative scenario mtbf");
+        cfg.scenarios[0].mtbf = Some(0.0);
+        cfg.validate().unwrap();
+        assert!(!cfg.scenarios[0].fault_config(&cfg.faults).enabled());
     }
 
     #[test]

@@ -18,8 +18,9 @@ use std::sync::Arc;
 
 use crate::cluster::{DeptId, DeptKind};
 use crate::config::{Configuration, ExperimentConfig};
+use crate::faults::{self, FaultKind};
 use crate::metrics::Registry;
-use crate::provision::{two_dept_profiles, PolicySpec, ProvisionPolicy, Rps};
+use crate::provision::{two_dept_profiles, DeptProfile, PolicySpec, ProvisionPolicy, Rps};
 use crate::sim::{Engine, EventHandler, Schedule, SimTime};
 use crate::stcms::StServer;
 use crate::workload::{Job, JobState};
@@ -62,6 +63,24 @@ enum Ev {
     GrantArrive { dept: u16, nodes: u64 },
     /// Check the policy for expired leases (lease-based policies only).
     LeaseTick,
+    /// One node crashes (seeded from the fault schedule): the RPS picks
+    /// the victim — free pool first, else the largest holder — and the
+    /// victim CMS kills jobs / sheds capacity.
+    NodeCrash,
+    /// One crashed node finishes repair and re-enters the free pool.
+    NodeRecover,
+    /// Department `dept` joins the shared cluster (runtime affiliation;
+    /// seeded ahead of the joiner's workload events at the same instant).
+    DeptJoin { dept: u16 },
+}
+
+/// A department joining the shared cluster mid-run (virtual-time runtime
+/// affiliation): `profile.id` must be the next dense ledger id at `at`,
+/// i.e. joiners are ordered by join time after the boot members.
+#[derive(Debug, Clone)]
+pub struct PlannedJoin {
+    pub at: SimTime,
+    pub profile: DeptProfile,
 }
 
 /// One department's share of a [`RunResult`].
@@ -104,6 +123,16 @@ pub struct RunResult {
     pub forced_nodes: u64,
     /// Time-weighted mean busy nodes across the batch pools.
     pub st_busy_mean: f64,
+    /// Node crashes injected (0 when fault injection is off).
+    pub crashes: u64,
+    /// Batch jobs killed by node crashes (a subset of `killed`).
+    pub crash_kills: u64,
+    /// 1 − down-node-seconds / (total nodes × horizon); exactly 1.0 when
+    /// fault injection is off.
+    pub availability: f64,
+    /// Mean seconds from a crash until every service department's holding
+    /// again covers its demand (0.0 when nothing crashed).
+    pub mean_recovery_s: f64,
     /// Simulator events processed (perf accounting).
     pub events: u64,
     pub registry: Registry,
@@ -168,6 +197,23 @@ pub struct ConsolidationSim {
     /// First routing failure; set by the dispatch handler, checked by
     /// [`ConsolidationSim::run`] (subsequent events are skipped).
     error: Option<SimError>,
+    /// Whether each department has joined yet (boot members start true).
+    active: Vec<bool>,
+    /// Per-department join time (0 for boot members).
+    join_at: Vec<SimTime>,
+    /// Joins not yet processed; drained by `on_dept_join`.
+    pending_joins: Vec<PlannedJoin>,
+    // -- fault accounting ----------------------------------------------------
+    crashes: u64,
+    crash_kills: u64,
+    /// ∫ down(t) dt so far (node-seconds), maintained piecewise at every
+    /// crash/recover and closed at the horizon.
+    down_acc: u64,
+    last_down_change: SimTime,
+    /// Crash times not yet back to a fully-satisfied service roster.
+    open_crashes: Vec<SimTime>,
+    /// Σ (restore − crash) over settled crashes, seconds.
+    recovery_secs: u64,
 }
 
 impl ConsolidationSim {
@@ -212,17 +258,61 @@ impl ConsolidationSim {
         inputs: Vec<DeptInput>,
         policy: Box<dyn ProvisionPolicy>,
     ) -> Self {
+        Self::with_roster(cfg, label, total_nodes, inputs, Vec::new(), policy)
+    }
+
+    /// Like [`ConsolidationSim::with_departments`], plus runtime joiners:
+    /// the last `joins.len()` entries of `inputs` are departments that
+    /// join mid-run (ordered by join time, dense ids after the boot
+    /// members, matching the [`Rps::join`] contract). `policy` is built
+    /// over the boot members' profiles only; joiners enter via
+    /// [`crate::provision::ProvisionPolicy::on_join`].
+    pub fn with_roster(
+        cfg: ExperimentConfig,
+        label: String,
+        total_nodes: u64,
+        inputs: Vec<DeptInput>,
+        joins: Vec<PlannedJoin>,
+        policy: Box<dyn ProvisionPolicy>,
+    ) -> Self {
         assert!(!inputs.is_empty(), "at least one department required");
+        let boot = inputs.len() - joins.len();
+        assert!(boot > 0, "at least one department must be present at boot");
+        for (j, join) in joins.iter().enumerate() {
+            assert_eq!(
+                join.profile.id,
+                DeptId((boot + j) as u16),
+                "joiners must carry the dense ids after the boot members"
+            );
+            if j > 0 {
+                assert!(joins[j - 1].at <= join.at, "joins must be ordered by time");
+            }
+        }
+        // noisy neighbors degrade batch throughput only on a genuinely
+        // shared cluster (both kinds present); 1.0 is exactly inert
+        let shared = {
+            let kind_of = |inp: &DeptInput| match inp.workload {
+                DeptWorkload::Batch(_) => DeptKind::Batch,
+                DeptWorkload::Service(_) => DeptKind::Service,
+            };
+            inputs.iter().any(|i| kind_of(i) == DeptKind::Batch)
+                && inputs.iter().any(|i| kind_of(i) == DeptKind::Service)
+        };
+        let efficiency = cfg.faults.efficiency;
         let depts: Vec<Dept> = inputs
             .into_iter()
             .enumerate()
             .map(|(i, inp)| {
                 let id = DeptId(i as u16);
                 let body = match inp.workload {
-                    DeptWorkload::Batch(jobs) => DeptBody::Batch {
-                        jobs,
-                        server: StServer::for_dept(id, cfg.scheduler, cfg.kill_order),
-                    },
+                    DeptWorkload::Batch(jobs) => {
+                        let mut server =
+                            StServer::for_dept(id, cfg.scheduler, cfg.kill_order);
+                        if shared && efficiency != 1.0 {
+                            server.set_efficiency(efficiency);
+                        }
+                        DeptBody::Batch { jobs, server }
+                    }
                     DeptWorkload::Service(demand) => {
                         DeptBody::Service { demand, server: WsServer::for_dept(id) }
                     }
@@ -236,7 +326,13 @@ impl ConsolidationSim {
                 }
             })
             .collect();
-        let rps = Rps::new(total_nodes, depts.len(), policy);
+        let mut active = vec![true; depts.len()];
+        let mut join_at = vec![0; depts.len()];
+        for join in &joins {
+            active[join.profile.id.index()] = false;
+            join_at[join.profile.id.index()] = join.at;
+        }
+        let rps = Rps::new(total_nodes, boot, policy);
         Self {
             cfg,
             label,
@@ -245,6 +341,15 @@ impl ConsolidationSim {
             registry: Registry::new(),
             lease_tick_at: None,
             error: None,
+            active,
+            join_at,
+            pending_joins: joins,
+            crashes: 0,
+            crash_kills: 0,
+            down_acc: 0,
+            last_down_change: 0,
+            open_crashes: Vec::new(),
+            recovery_secs: 0,
         }
     }
 
@@ -252,7 +357,7 @@ impl ConsolidationSim {
         self.depts
             .iter()
             .enumerate()
-            .filter(|(_, d)| d.kind() == DeptKind::Batch)
+            .filter(|&(i, d)| self.active[i] && d.kind() == DeptKind::Batch)
             .map(|(i, _)| DeptId(i as u16))
             .collect()
     }
@@ -297,9 +402,12 @@ impl ConsolidationSim {
     pub fn run(mut self) -> anyhow::Result<RunResult> {
         let mut engine: Engine<Ev> = Engine::new();
 
-        // boot: each service department gets its first-sample demand, the
-        // batch departments split the rest
+        // boot: each service department *present at boot* gets its
+        // first-sample demand, the batch departments split the rest
         for i in 0..self.depts.len() {
+            if !self.active[i] {
+                continue;
+            }
             let id = DeptId(i as u16);
             let d0 = match &self.depts[i].body {
                 DeptBody::Service { demand, .. } => *demand.first().unwrap_or(&1),
@@ -319,20 +427,32 @@ impl ConsolidationSim {
             self.lease_tick_at = Some(t);
         }
 
+        // seed joins before any workload event, so a joiner's events at the
+        // same instant process after the join (equal-timestamp delivery is
+        // FIFO in schedule order)
+        for join in &self.pending_joins {
+            if join.at <= self.cfg.horizon {
+                engine.schedule(join.at, Ev::DeptJoin { dept: join.profile.id.0 });
+            }
+        }
+
         // seed events, department by department: all submissions…
         for (i, dept) in self.depts.iter().enumerate() {
+            let ja = self.join_at[i];
             match &dept.body {
                 DeptBody::Batch { jobs, .. } => {
                     for (idx, job) in jobs.iter().enumerate() {
-                        if job.submit <= self.cfg.horizon {
-                            engine.schedule(job.submit, Ev::Submit { dept: i as u16, idx });
+                        // a joiner's backlog arrives the moment it joins
+                        let submit = job.submit.max(ja);
+                        if submit <= self.cfg.horizon {
+                            engine.schedule(submit, Ev::Submit { dept: i as u16, idx });
                         }
                     }
                 }
                 // …and only the samples where the demand *changes*
                 // (event-count discipline: 60 480 samples/2 weeks, but
                 // only ~2 000 changes)
-                DeptBody::Service { demand, .. } => {
+                DeptBody::Service { demand, .. } if ja == 0 => {
                     let mut prev = *demand.first().unwrap_or(&1);
                     for (k, &d) in demand.iter().enumerate() {
                         if d != prev {
@@ -344,7 +464,39 @@ impl ConsolidationSim {
                         }
                     }
                 }
+                // a service joiner claims its at-join sample the moment it
+                // joins, then follows the change discipline from there
+                DeptBody::Service { demand, .. } => {
+                    if demand.is_empty() || ja > self.cfg.horizon {
+                        continue;
+                    }
+                    let period = self.cfg.ws_sample_period;
+                    let k0 = ((ja / period) as usize).min(demand.len() - 1);
+                    engine.schedule(ja, Ev::WsDemand { dept: i as u16, sample: k0 });
+                    let mut prev = demand[k0];
+                    for (k, &d) in demand.iter().enumerate().skip(k0 + 1) {
+                        if d != prev {
+                            engine.schedule(
+                                k as u64 * period,
+                                Ev::WsDemand { dept: i as u16, sample: k },
+                            );
+                            prev = d;
+                        }
+                    }
+                }
             }
+        }
+
+        // the fault schedule: a pure function of (seed, horizon, nodes),
+        // empty — with zero RNG draws — when mtbf is 0
+        for fault in
+            faults::schedule(&self.cfg.faults, self.cfg.horizon, self.rps.ledger().total())
+        {
+            let ev = match fault.kind {
+                FaultKind::Crash => Ev::NodeCrash,
+                FaultKind::Recover => Ev::NodeRecover,
+            };
+            engine.schedule(fault.at, ev);
         }
 
         let horizon = self.cfg.horizon;
@@ -362,6 +514,12 @@ impl ConsolidationSim {
                 let d = server.demand();
                 server.set_demand(d, now);
             }
+        }
+        // close the down-time integral and any still-open recoveries
+        self.note_down_change(now);
+        let open: Vec<SimTime> = self.open_crashes.drain(..).collect();
+        for t in open {
+            self.recovery_secs += now - t;
         }
 
         Ok(self.finish(events))
@@ -451,6 +609,19 @@ impl ConsolidationSim {
             force_returns: self.rps.force_returns,
             forced_nodes: self.rps.forced_nodes,
             st_busy_mean,
+            crashes: self.crashes,
+            crash_kills: self.crash_kills,
+            availability: if cluster_nodes > 0 && self.cfg.horizon > 0 {
+                1.0 - self.down_acc as f64
+                    / (cluster_nodes as f64 * self.cfg.horizon as f64)
+            } else {
+                1.0
+            },
+            mean_recovery_s: if self.crashes > 0 {
+                self.recovery_secs as f64 / self.crashes as f64
+            } else {
+                0.0
+            },
             events,
             registry: self.registry,
             per_dept,
@@ -525,36 +696,165 @@ impl ConsolidationSim {
                 self.schedule_lease_tick(sched, now);
             }
             WsAction::Request(n) => {
-                let d = self.rps.request(dept, n, now);
-                if d.from_free > 0 {
-                    self.service_server(dept)?.grant(d.from_free);
-                }
-                let force_total = d.force_total();
-                for &(victim, m) in &d.force {
-                    let killed = self.batch_server(victim)?.force_return(m, now);
-                    self.registry.counter("force.kills").add(killed.len() as u64);
-                    self.rps.complete_force(victim, dept, m, now);
-                }
-                if force_total > 0 {
-                    // reallocation takes seconds (§III-D): kill + rewire
-                    sched.after(self.cfg.realloc_delay, Ev::GrantArrive {
-                        dept: dept.0,
-                        nodes: force_total,
-                    });
-                }
-                if d.denied > 0 {
-                    // only reachable under the non-cooperative baselines
-                    let name = self.depts[dept.index()].name.clone();
-                    self.registry.counter(&format!("{name}.denied")).add(d.denied);
-                }
+                self.claim_for_service(dept, n, now, sched)?;
             }
         }
+        self.settle_recoveries(now);
         self.sample_pools(now);
+        Ok(())
+    }
+
+    /// A service department urgently claims `n` nodes: free pool first,
+    /// then forced returns (with the reallocation delay), denials counted.
+    /// Used by demand rises, crash deficits, and post-recovery re-claims.
+    fn claim_for_service(
+        &mut self,
+        dept: DeptId,
+        n: u64,
+        now: SimTime,
+        sched: &mut Schedule<Ev>,
+    ) -> Result<(), SimError> {
+        let d = self.rps.request(dept, n, now);
+        if d.from_free > 0 {
+            self.service_server(dept)?.grant(d.from_free);
+        }
+        let force_total = d.force_total();
+        for &(victim, m) in &d.force {
+            let killed = self.batch_server(victim)?.force_return(m, now);
+            self.registry.counter("force.kills").add(killed.len() as u64);
+            self.rps.complete_force(victim, dept, m, now);
+        }
+        if force_total > 0 {
+            // reallocation takes seconds (§III-D): kill + rewire
+            sched.after(self.cfg.realloc_delay, Ev::GrantArrive {
+                dept: dept.0,
+                nodes: force_total,
+            });
+        }
+        if d.denied > 0 {
+            // only reachable under the non-cooperative baselines
+            let name = self.depts[dept.index()].name.clone();
+            self.registry.counter(&format!("{name}.denied")).add(d.denied);
+        }
         Ok(())
     }
 
     fn on_grant_arrive(&mut self, dept: DeptId, nodes: u64, now: SimTime) -> Result<(), SimError> {
         self.service_server(dept)?.grant(nodes);
+        self.settle_recoveries(now);
+        self.sample_pools(now);
+        Ok(())
+    }
+
+    // ---- fault & lifecycle event bodies ------------------------------------
+
+    /// Fold the elapsed interval into the down-node-seconds integral.
+    fn note_down_change(&mut self, now: SimTime) {
+        let down = self.rps.ledger().down();
+        self.down_acc += down * (now - self.last_down_change);
+        self.last_down_change = now;
+    }
+
+    /// Close every open crash once the whole service roster is satisfied
+    /// again (holding ≥ demand everywhere) — the recovery-time metric.
+    fn settle_recoveries(&mut self, now: SimTime) {
+        if self.open_crashes.is_empty() {
+            return;
+        }
+        let restored = self.depts.iter().enumerate().all(|(i, d)| {
+            !self.active[i]
+                || match &d.body {
+                    DeptBody::Service { server, .. } => server.holding() >= server.demand(),
+                    DeptBody::Batch { .. } => true,
+                }
+        });
+        if restored {
+            for t in self.open_crashes.drain(..) {
+                self.recovery_secs += now - t;
+            }
+        }
+    }
+
+    fn on_node_crash(&mut self, now: SimTime, sched: &mut Schedule<Ev>) -> Result<(), SimError> {
+        self.note_down_change(now);
+        self.crashes += 1;
+        self.open_crashes.push(now);
+        for (victim, n) in self.rps.crash_anywhere(1, now) {
+            let Some(dept) = victim else { continue };
+            match self.depts[dept.index()].kind() {
+                DeptKind::Batch => {
+                    let killed = self.batch_server(dept)?.crash(n, now);
+                    self.crash_kills += killed.len() as u64;
+                    self.registry.counter("crash.kills").add(killed.len() as u64);
+                }
+                DeptKind::Service => {
+                    self.service_server(dept)?.crash(n, now);
+                    // the demand target did not move: re-claim the deficit
+                    // immediately, exactly like a demand rise
+                    let (holding, demand) = {
+                        let s = self.service_server(dept)?;
+                        (s.holding(), s.demand())
+                    };
+                    if holding < demand {
+                        self.claim_for_service(dept, demand - holding, now, sched)?;
+                    }
+                }
+            }
+        }
+        self.settle_recoveries(now);
+        self.sample_pools(now);
+        Ok(())
+    }
+
+    fn on_node_recover(
+        &mut self,
+        now: SimTime,
+        sched: &mut Schedule<Ev>,
+    ) -> Result<(), SimError> {
+        self.note_down_change(now);
+        self.rps.recover(1, now);
+        // service deficits are urgent: every short service department
+        // re-claims before batch sees the repaired capacity
+        for i in 0..self.depts.len() {
+            if !self.active[i] || self.depts[i].kind() != DeptKind::Service {
+                continue;
+            }
+            let id = DeptId(i as u16);
+            let (holding, demand) = {
+                let s = self.service_server(id)?;
+                (s.holding(), s.demand())
+            };
+            if holding < demand {
+                self.claim_for_service(id, demand - holding, now, sched)?;
+            }
+        }
+        // whatever is left flows to batch per the policy
+        let batch = self.batch_ids();
+        if self.rps.ledger().free() > 0 && !batch.is_empty() {
+            for (d, n) in self.rps.provision_idle(&batch, now) {
+                if n > 0 {
+                    self.batch_server(d)?.grant(n);
+                    self.run_scheduler(d, now, sched)?;
+                }
+            }
+            self.schedule_lease_tick(sched, now);
+        }
+        self.settle_recoveries(now);
+        self.sample_pools(now);
+        Ok(())
+    }
+
+    fn on_dept_join(&mut self, dept: DeptId, now: SimTime) -> Result<(), SimError> {
+        let pos = self
+            .pending_joins
+            .iter()
+            .position(|j| j.profile.id == dept)
+            .expect("DeptJoin event without a pending join");
+        let join = self.pending_joins.remove(pos);
+        self.rps.join(join.profile, now);
+        self.active[dept.index()] = true;
+        // the joiner's own workload events (seeded at/after the join, FIFO
+        // behind this event) drive its first claims and submissions
         self.sample_pools(now);
         Ok(())
     }
@@ -663,6 +963,9 @@ impl EventHandler<Ev> for Handler<'_> {
                 self.sim.on_grant_arrive(DeptId(dept), nodes, now)
             }
             Ev::LeaseTick => self.sim.on_lease_tick(now, sched),
+            Ev::NodeCrash => self.sim.on_node_crash(now, sched),
+            Ev::NodeRecover => self.sim.on_node_recover(now, sched),
+            Ev::DeptJoin { dept } => self.sim.on_dept_join(DeptId(dept), now),
         };
         if let Err(e) = result {
             self.sim.error = Some(e);
@@ -775,6 +1078,53 @@ mod tests {
         assert!(pool_max >= 15.0, "pool_max={pool_max}");
     }
 
+    // ---- faults ------------------------------------------------------------
+
+    #[test]
+    fn fault_injection_is_deterministic_and_accounted() {
+        let mk = || {
+            let mut cfg = tiny_cfg(16);
+            cfg.faults.mtbf_secs = 2_000.0;
+            cfg.faults.mttr_secs = 200.0;
+            ConsolidationSim::new(cfg, tiny_jobs(), vec![1u64; 100]).run().unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert!(a.crashes > 0, "16 nodes × 2000 s at MTBF 2000 must crash: {a:?}");
+        assert!(a.availability < 1.0 && a.availability > 0.0, "{a:?}");
+        assert_eq!(a.crashes, b.crashes, "same seed must replay bit-identically");
+        assert_eq!(a.availability.to_bits(), b.availability.to_bits());
+        assert_eq!(a.mean_recovery_s.to_bits(), b.mean_recovery_s.to_bits());
+        assert_eq!((a.completed, a.killed, a.events), (b.completed, b.killed, b.events));
+        // every job ends up completed, killed, or in flight — never lost
+        assert_eq!(a.completed + a.killed + a.in_flight as u64, 4, "{a:?}");
+        assert!(a.crash_kills <= a.killed);
+        // the healthy configuration is exactly inert
+        let h = ConsolidationSim::new(tiny_cfg(16), tiny_jobs(), vec![1u64; 100])
+            .run()
+            .unwrap();
+        assert_eq!((h.crashes, h.crash_kills), (0, 0));
+        assert_eq!(h.availability, 1.0);
+        assert_eq!(h.mean_recovery_s, 0.0);
+    }
+
+    #[test]
+    fn noisy_neighbors_stretch_shared_batch_runtimes() {
+        let mut cfg = tiny_cfg(16);
+        cfg.faults.efficiency = 0.5;
+        let slow = ConsolidationSim::new(cfg, tiny_jobs(), vec![1u64; 100]).run().unwrap();
+        let base = ConsolidationSim::new(tiny_cfg(16), tiny_jobs(), vec![1u64; 100])
+            .run()
+            .unwrap();
+        assert_eq!(slow.completed, 4, "{slow:?}");
+        assert!(
+            slow.avg_turnaround > base.avg_turnaround,
+            "half efficiency must stretch turnaround: {} vs {}",
+            slow.avg_turnaround,
+            base.avg_turnaround
+        );
+    }
+
     // ---- N-department runs -------------------------------------------------
 
     use crate::provision::DeptProfile;
@@ -835,6 +1185,45 @@ mod tests {
             res.per_dept.iter().map(|d| d.completed).sum::<u64>(),
             res.completed
         );
+    }
+
+    #[test]
+    fn virtual_time_joiner_enters_mid_run_and_claims() {
+        // two boot departments plus a service department joining at t=600
+        let cfg = tiny_cfg(16);
+        let inputs = vec![
+            DeptInput { name: "st".into(), workload: DeptWorkload::Batch(tiny_jobs().into()) },
+            DeptInput {
+                name: "ws".into(),
+                workload: DeptWorkload::Service(vec![1u64; 100].into()),
+            },
+            DeptInput {
+                name: "late-web".into(),
+                workload: DeptWorkload::Service(vec![2u64; 100].into()),
+            },
+        ];
+        let boot_profiles = vec![
+            DeptProfile { id: DeptId(0), kind: DeptKind::Batch, tier: 1, quota: 16 },
+            DeptProfile { id: DeptId(1), kind: DeptKind::Service, tier: 0, quota: 8 },
+        ];
+        let joins = vec![PlannedJoin {
+            at: 600,
+            profile: DeptProfile { id: DeptId(2), kind: DeptKind::Service, tier: 0, quota: 8 },
+        }];
+        let policy = PolicySpec::Cooperative.build(&boot_profiles);
+        let res =
+            ConsolidationSim::with_roster(cfg, "join-3".to_string(), 16, inputs, joins, policy)
+                .run()
+                .unwrap();
+        assert_eq!(res.per_dept.len(), 3);
+        assert_eq!(res.completed, 4, "boot batch work unaffected: {res:?}");
+        let late = &res.per_dept[2];
+        assert_eq!(late.name, "late-web");
+        assert_eq!(late.kind, DeptKind::Service);
+        assert_eq!(late.holding_end, 2, "joiner claims its demand: {res:?}");
+        // the joiner's claim forced nodes out of the idle batch pool
+        assert!(res.force_returns > 0, "{res:?}");
+        assert_eq!(res.killed, 0, "idle nodes satisfy the claim: {res:?}");
     }
 
     #[test]

@@ -140,6 +140,9 @@ struct RpsStats {
     free: Cell<u64>,
     joins: Cell<u64>,
     leaves: Cell<u64>,
+    crashes: Cell<u64>,
+    recovers: Cell<u64>,
+    down: Cell<u64>,
 }
 
 // ---- the RPS service ---------------------------------------------------------
@@ -186,6 +189,7 @@ impl RpsSvc {
         self.stats.free.set(self.rps.ledger().free());
         self.stats.force_returns.set(self.rps.force_returns);
         self.stats.forced_nodes.set(self.rps.forced_nodes);
+        self.stats.down.set(self.rps.ledger().down());
     }
 }
 
@@ -266,6 +270,26 @@ impl Service for RpsSvc {
                     self.roster.remove(&dept);
                     self.stats.leaves.set(self.stats.leaves.get() + 1);
                 }
+            }
+            Msg::NodeDown { nodes, .. } => {
+                // injected with the placeholder address DeptId::RPS_FAULT:
+                // the RPS picks the victims (free pool first, else the
+                // largest holder), books the down move, and forwards the
+                // crash dept-addressed to each hit CMS
+                self.stats.crashes.set(self.stats.crashes.get() + 1);
+                for (holder, n) in self.rps.crash_anywhere(nodes, now) {
+                    if let Some(d) = holder {
+                        ctx.send_to_dept(d, Msg::NodeDown { dept: d, nodes: n });
+                    }
+                }
+            }
+            Msg::NodeUp { nodes, .. } => {
+                self.stats.recovers.set(self.stats.recovers.get() + 1);
+                self.rps.recover(nodes, now);
+                // repaired nodes land in the free pool; idle capacity flows
+                // back to the batch members at once, service deficits
+                // re-claim on their next tick
+                self.provision_idle_to_batch(ctx);
             }
             Msg::Tick { now } => {
                 // lease expiry rides the tick: each expired lease becomes a
@@ -394,6 +418,12 @@ impl Service for BatchSvc {
                     );
                 }
             }
+            Msg::NodeDown { nodes, .. } => {
+                // the RPS already booked the nodes into the down pool; this
+                // CMS just loses them — killing whatever was running on them
+                let killed = self.st.crash(nodes, ctx.now());
+                self.count_killed(killed.len());
+            }
             Msg::Tick { now } => {
                 // retire due completions
                 let mut done = Vec::new();
@@ -497,6 +527,11 @@ impl Service for ServiceSvc {
                     ctx.send(sender, Msg::Released { dept: self.dept, nodes: give, killed: 0 });
                 }
             }
+            Msg::NodeDown { nodes, .. } => {
+                // effective capacity shrinks without the demand target
+                // moving; the next tick's demand evaluation re-claims
+                self.ws.crash(nodes.min(self.ws.holding()), ctx.now());
+            }
             _ => {}
         }
         self.sync();
@@ -551,11 +586,16 @@ pub struct ServeReport {
     /// not counted).
     pub denied: u64,
     /// Free-pool size when the loop ended (conservation check:
-    /// `free_end + Σ per_dept.holding_end == cluster_nodes`).
+    /// `free_end + Σ per_dept.holding_end + down_end == cluster_nodes`).
     pub free_end: u64,
     /// Runtime affiliation events processed.
     pub joins: u64,
     pub leaves: u64,
+    /// Fault injections processed ([`Msg::NodeDown`] / [`Msg::NodeUp`]).
+    pub crashes: u64,
+    pub recovers: u64,
+    /// Nodes still in the ledger's down pool at the horizon.
+    pub down_end: u64,
     /// Services whose heartbeat was overdue at the horizon.
     pub down_services: Vec<String>,
     /// Per-department breakdown, in department-id order (leavers report
@@ -581,6 +621,9 @@ struct Wiring {
     cap: f64,
     scheduler: crate::config::SchedulerKind,
     kill_order: crate::config::KillOrder,
+    /// Noisy-neighbor throughput factor for batch servers (1.0 when the
+    /// roster is not genuinely shared — exactly inert).
+    efficiency: f64,
 }
 
 /// Box one department's CMS, bind it in the bus directory, and record the
@@ -601,11 +644,15 @@ fn register_cms(
     let svc: Box<dyn Service> = match d.workload {
         ServeWorkload::Batch(jobs) => {
             state.submitted += jobs.len();
+            let mut st = st.unwrap_or_else(|| {
+                StServer::for_dept(dept, wiring.scheduler, wiring.kill_order)
+            });
+            if wiring.efficiency != 1.0 {
+                st.set_efficiency(wiring.efficiency);
+            }
             Box::new(BatchSvc {
                 dept,
-                st: st.unwrap_or_else(|| {
-                    StServer::for_dept(dept, wiring.scheduler, wiring.kill_order)
-                }),
+                st,
                 jobs,
                 next_job: 0,
                 submitted_early: BTreeSet::new(),
@@ -663,6 +710,10 @@ pub fn serve_roster(
     if tick_step == 0 {
         bail!("ws_sample_period must be positive");
     }
+    // noisy neighbors degrade batch throughput only on a genuinely shared
+    // cluster (both kinds present somewhere in the roster)
+    let shared = depts.iter().any(|d| d.spec.kind == DeptKind::Batch)
+        && depts.iter().any(|d| d.spec.kind == DeptKind::Service);
     // boot members keep input order; joiners follow, sorted by arrival —
     // ids are dense in that combined order, matching Rps::join's contract
     let (mut boot, mut joiners): (Vec<ServeDept>, Vec<ServeDept>) =
@@ -758,6 +809,7 @@ pub fn serve_roster(
         cap,
         scheduler: cfg.scheduler,
         kill_order: cfg.kill_order,
+        efficiency: if shared { cfg.faults.efficiency } else { 1.0 },
     };
     for (i, d) in boot.drain(..).enumerate() {
         let id = DeptId(i as u16);
@@ -773,6 +825,13 @@ pub fn serve_roster(
     let n_boot = state.stats.len();
 
     // ---- the tick loop
+    // the deterministic fault schedule (empty when faults are disabled):
+    // due crashes/recoveries are injected at the RPS each tick, before the
+    // lease settling and the department ticks, with the placeholder fault
+    // address — the serve-path twin of the sim's NodeCrash/NodeRecover
+    // events (quantized to tick boundaries)
+    let fault_events = crate::faults::schedule(&cfg.faults, sim_seconds, total);
+    let mut next_fault = 0usize;
     let limit = 10_000u64.max(100 * (n_boot as u64 + joiners.len() as u64 + 2));
     let started = Instant::now();
     let mut ticks = 0u64;
@@ -796,6 +855,23 @@ pub fn serve_roster(
             register_cms(&mut bus, &wiring, &mut state, dept, d, None, None)?;
             bus.run_until_quiescent(limit)
                 .with_context(|| format!("DeptJoin of {dept} at t={now}s"))?;
+        }
+        // due fault events fire in schedule order (crash before the paired
+        // recovery, always)
+        while fault_events.get(next_fault).is_some_and(|ev| ev.at <= now) {
+            let ev = &fault_events[next_fault];
+            next_fault += 1;
+            let msg = match ev.kind {
+                crate::faults::FaultKind::Crash => {
+                    Msg::NodeDown { dept: DeptId::RPS_FAULT, nodes: 1 }
+                }
+                crate::faults::FaultKind::Recover => {
+                    Msg::NodeUp { dept: DeptId::RPS_FAULT, nodes: 1 }
+                }
+            };
+            bus.post(rps_id, msg);
+            bus.run_until_quiescent(limit)
+                .with_context(|| format!("fault event at t={now}s"))?;
         }
         // the RPS settles lease expiries on its tick…
         bus.post(rps_id, Msg::Tick { now });
@@ -885,6 +961,9 @@ pub fn serve_roster(
         free_end: rps_stats.free.get(),
         joins: rps_stats.joins.get(),
         leaves: rps_stats.leaves.get(),
+        crashes: rps_stats.crashes.get(),
+        recovers: rps_stats.recovers.get(),
+        down_end: rps_stats.down.get(),
         down_services,
         per_dept,
     })
@@ -992,6 +1071,40 @@ mod tests {
         let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
         assert_eq!(report.free_end + held, report.cluster_nodes);
         assert!(report.down_services.is_empty(), "{:?}", report.down_services);
+    }
+
+    #[test]
+    fn serve_path_faults_follow_the_deterministic_schedule() {
+        let mut cfg = ExperimentConfig::dynamic(64);
+        cfg.ws_sample_period = 20;
+        cfg.faults.mtbf_secs = 5_000.0;
+        cfg.faults.mttr_secs = 500.0;
+        let mk = |cfg: &ExperimentConfig| {
+            let rates = RateSeries { sample_period: 20, rates: vec![200.0; 300] };
+            let jobs =
+                vec![Job { id: 1, submit: 0, size: 8, runtime: 60, requested: 120 }];
+            serve_pair(cfg, jobs, rates, reactive_scaler(64), 4000, 0).unwrap()
+        };
+        let a = mk(&cfg);
+        let b = mk(&cfg);
+        // the serve loop replays exactly the pure-function schedule
+        let evs = crate::faults::schedule(&cfg.faults, 4000, 64);
+        let want_crashes = evs
+            .iter()
+            .filter(|e| e.kind == crate::faults::FaultKind::Crash)
+            .count() as u64;
+        assert!(want_crashes > 0, "64 nodes × 4000 s at MTBF 5000 must crash");
+        assert_eq!(a.crashes, want_crashes);
+        assert_eq!(a.recovers, evs.len() as u64 - want_crashes);
+        assert_eq!(
+            (a.crashes, a.recovers, a.completed, a.killed),
+            (b.crashes, b.recovers, b.completed, b.killed),
+            "same seed must replay identically"
+        );
+        // conservation now includes the down pool
+        let held: u64 = a.per_dept.iter().map(|d| d.holding_end).sum();
+        assert_eq!(a.free_end + held + a.down_end, a.cluster_nodes, "{a:?}");
+        assert!(a.down_end <= a.cluster_nodes);
     }
 
     #[test]

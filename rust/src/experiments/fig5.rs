@@ -62,7 +62,24 @@ pub fn correlated_demand_series(
     latent_seed: u64,
     max_instances: u64,
 ) -> Vec<u64> {
-    let rates = crate::trace::correlated::rate_series(cfg, rho, latent_seed);
+    latent_demand_series(
+        cfg,
+        rho,
+        &crate::trace::correlated::Latent::Seeded(latent_seed),
+        max_instances,
+    )
+}
+
+/// [`correlated_demand_series`] generalized over the latent source —
+/// [`crate::trace::correlated::Latent::Replay`] turns a WorldCup flash
+/// crowd into the shared spike every department rides at once.
+pub fn latent_demand_series(
+    cfg: &WebTraceConfig,
+    rho: f64,
+    latent: &crate::trace::correlated::Latent,
+    max_instances: u64,
+) -> Vec<u64> {
+    let rates = crate::trace::correlated::rate_series_with(cfg, rho, latent);
     serving::autoscale_series(&rates, cfg.instance_capacity_rps, max_instances).0
 }
 

@@ -53,7 +53,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::DeptKind;
-use crate::config::{DeptSpec, ExperimentConfig, RosterMix, ScenarioSpec};
+use crate::config::{DeptSpec, ExperimentConfig, FaultConfig, RosterMix, ScenarioSpec};
 use crate::coordinator::{DeptSummary, RunResult};
 use crate::provision::{PolicyChoice, PolicySpec, TierRule};
 use crate::util::json::Json;
@@ -122,7 +122,8 @@ impl PolicyAxis {
 #[derive(Debug, Clone, PartialEq)]
 pub enum SizeScan {
     /// Bisection to the *exact* minimal feasible size (the default): run
-    /// the full-cost baseline (it gates completions), warm-start at the
+    /// the K dedicated-cluster baselines (their summed completions gate
+    /// the scan) and the full-cost consolidated run, warm-start at the
     /// paper's cost point, then halve the remaining `[1, full cost]`
     /// range. O(log size) simulations per cell against a linear walk's
     /// O(size); exactness rests on monotone feasibility, which every
@@ -251,6 +252,16 @@ pub struct CellRun {
     pub force_returns: u64,
     pub avg_turnaround: f64,
     pub events: u64,
+    /// Node crashes injected over the run (0 on a zero-fault config).
+    pub crashes: u64,
+    /// Batch jobs killed by a node crash (⊆ `killed`).
+    pub crash_kills: u64,
+    /// Node availability — 1 − (down node·s / total node·s); exactly 1.0
+    /// on a zero-fault config.
+    pub availability: f64,
+    /// Mean seconds from a crash until every service department is whole
+    /// again (0 when no crashes fired).
+    pub mean_recovery_s: f64,
 }
 
 impl CellRun {
@@ -270,6 +281,10 @@ impl CellRun {
             force_returns: r.force_returns,
             avg_turnaround: r.avg_turnaround,
             events: r.events,
+            crashes: r.crashes,
+            crash_kills: r.crash_kills,
+            availability: r.availability,
+            mean_recovery_s: r.mean_recovery_s,
         }
     }
 }
@@ -286,6 +301,15 @@ pub struct MatrixCell {
     pub load: f64,
     /// Σ department quotas — the K-dedicated-clusters cost.
     pub dedicated_nodes: u64,
+    /// Σ of the K departments' completions when each runs on its *own*
+    /// quota-sized cluster — the completion-loss gate every probe is held
+    /// to (what the K-dedicated-clusters cost would actually finish).
+    pub baseline_completed: u64,
+    /// True when a `[[scenario]]` overrode the base fault regime (`mtbf`
+    /// / `mttr` / `fault_seed` / `efficiency`) — such cells legitimately
+    /// diverge from the fig7/fig8 anchor and [`verify_anchor`] skips
+    /// them, exactly like trace-driven ones.
+    pub fault_overridden: bool,
     /// How the required size was found ([`SizeScan::name`]).
     pub scan: String,
     /// True when the cell's roster replays an SWF archive or correlated
@@ -332,6 +356,10 @@ struct CellPlan {
     k: usize,
     policy: PolicyAxis,
     scan: SizeScan,
+    /// The cell's effective fault regime (base `[faults]` with any
+    /// per-scenario overrides folded in).
+    faults: FaultConfig,
+    fault_overridden: bool,
 }
 
 /// A prepared roster: the base config at its load level (plus any trace
@@ -374,24 +402,37 @@ fn run_cell(rosters: &[Roster], c: &CellPlan) -> Result<MatrixCell> {
         bail!("cell '{}' has no nodes to scan", c.name);
     }
     let policy = c.policy.choice(specs);
+    let mut base = roster.base.clone();
+    base.faults = c.faults.clone();
+
+    // the completion gate: smaller clusters must not lose batch work the
+    // K-dedicated-clusters cost would have finished — measured by actually
+    // running each department on its own quota-sized cluster. The
+    // consolidated full-cost run is *not* that cost: consolidation can
+    // beat K dedicated clusters by lending idle service nodes to batch,
+    // and gating against the inflated number over-rejected small clusters.
+    let mut baseline_completed = 0u64;
+    for (i, spec) in specs.iter().enumerate() {
+        baseline_completed += scale::run_dedicated(&base, spec, &roster.traces, i)?.completed;
+    }
+
     let mut probes = ProbeMap::new();
     let ensure = |probes: &mut ProbeMap, nodes: u64, frac: f64| -> Result<()> {
         if let Entry::Vacant(e) = probes.entry(nodes) {
             e.insert((
                 frac,
-                scale::run_roster(&roster.base, specs, &roster.traces, nodes, &policy)?,
+                scale::run_roster(&base, specs, &roster.traces, nodes, &policy)?,
             ));
         }
         Ok(())
     };
 
-    // the full-cost baseline runs first: smaller clusters must not lose
-    // batch work the K-dedicated-clusters cost would have finished
+    // the full-cost consolidated run still anchors every scan (and the
+    // bisection's fig7/fig8 warm-start probe lands inside its table)
     ensure(&mut probes, dedicated, 1.0)?;
-    let baseline = probes[&dedicated].1.completed;
     let feasible_at = |probes: &ProbeMap, nodes: u64| {
         let r = &probes[&nodes].1;
-        r.ws_shortage_node_secs == 0 && r.completed >= baseline
+        r.ws_shortage_node_secs == 0 && r.completed >= baseline_completed
     };
 
     let required_nodes = match &c.scan {
@@ -407,7 +448,9 @@ fn run_cell(rosters: &[Roster], c: &CellPlan) -> Result<MatrixCell> {
         }
         scan @ (SizeScan::Bisect | SizeScan::LinearOracle) => {
             if !feasible_at(&probes, dedicated) {
-                None // even the full cost starves a service department
+                // even the full cost starves a service department, or
+                // finishes less than the K dedicated clusters would
+                None
             } else {
                 // search all the way down to one node: a binding cluster
                 // cap regenerates each service department's demand through
@@ -508,6 +551,8 @@ fn run_cell(rosters: &[Roster], c: &CellPlan) -> Result<MatrixCell> {
         lease_secs: c.policy.lease_secs(),
         load: roster.load,
         dedicated_nodes: dedicated,
+        baseline_completed,
+        fault_overridden: c.fault_overridden,
         scan: c.scan.name().to_string(),
         trace_driven: roster.base.swf.is_some() || roster.base.correlation != 0.0,
         runs,
@@ -557,6 +602,8 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
                         k,
                         policy,
                         scan: axes.scan.clone(),
+                        faults: base.faults.clone(),
+                        fault_overridden: false,
                     });
                 }
             }
@@ -571,6 +618,10 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
 /// requested K's traces serve every smaller sibling, exactly as in
 /// [`run_matrix`]. A scenario with an explicit `frac` pins that single
 /// size (plus the always-run full-cost baseline); the rest bisect.
+/// Fault-regime overrides (`mtbf` / `mttr` / `fault_seed` /
+/// `efficiency`) apply per cell at simulation time and never touch the
+/// traces (the flash-crowd replay is a base-config knob), so they do
+/// not split the shared rosters.
 pub fn run_scenarios(
     base: &ExperimentConfig,
     scenarios: &[ScenarioSpec],
@@ -613,7 +664,18 @@ pub fn run_scenarios(
             Some(f) => SizeScan::Fracs(vec![f]),
             None => SizeScan::Bisect,
         };
-        cells.push(CellPlan { name: s.name.clone(), roster, k: s.k, policy, scan });
+        cells.push(CellPlan {
+            name: s.name.clone(),
+            roster,
+            k: s.k,
+            policy,
+            scan,
+            faults: s.fault_config(&base.faults),
+            fault_overridden: s.mtbf.is_some()
+                || s.mttr.is_some()
+                || s.fault_seed.is_some()
+                || s.efficiency.is_some(),
+        });
     }
     run_cells(&rosters, &cells, base.workers)
 }
@@ -625,7 +687,11 @@ pub fn run_scenarios(
 /// holds no such cell or runs on traces the fig7/fig8 pair never saw (a
 /// `[trace]` SWF archive or ρ > 0, from the base config *or* a
 /// per-scenario override — `MatrixCell::trace_driven` records which),
-/// `Err` on any numeric divergence.
+/// `Err` on any numeric divergence. Cells whose fault regime was
+/// overridden by a `[[scenario]]` are skipped the same way; the *base*
+/// `[faults]` config needs no skip — the deterministic injector gives
+/// the matrix probe and the sweep's DC run the same fault schedule, so
+/// the anchor holds bit for bit even on a faulty base config.
 pub fn verify_anchor(base: &ExperimentConfig, cells: &[MatrixCell]) -> Result<bool> {
     if base.swf.is_some() || base.correlation != 0.0 {
         return Ok(false); // the whole grid is trace-driven
@@ -635,6 +701,7 @@ pub fn verify_anchor(base: &ExperimentConfig, cells: &[MatrixCell]) -> Result<bo
             && c.mix == RosterMix::Alternating
             && c.policy == "cooperative"
             && !c.trace_driven
+            && !c.fault_overridden
             && c.load.to_bits() == base.hpc.target_load.to_bits()
     }) else {
         return Ok(false);
@@ -696,6 +763,10 @@ fn run_json(r: &CellRun) -> Json {
         ("force_returns", Json::num(r.force_returns as f64)),
         ("avg_turnaround_s", Json::num(r.avg_turnaround)),
         ("events", Json::num(r.events as f64)),
+        ("crashes", Json::num(r.crashes as f64)),
+        ("crash_kills", Json::num(r.crash_kills as f64)),
+        ("availability", Json::num(r.availability)),
+        ("mean_recovery_s", Json::num(r.mean_recovery_s)),
     ])
 }
 
@@ -708,8 +779,10 @@ fn cell_json(c: &MatrixCell) -> Json {
         ("lease_secs", Json::num(c.lease_secs as f64)),
         ("load", Json::num(c.load)),
         ("dedicated_nodes", Json::num(c.dedicated_nodes as f64)),
+        ("baseline_completed", Json::num(c.baseline_completed as f64)),
         ("scan", Json::str(&c.scan)),
         ("trace_driven", Json::Bool(c.trace_driven)),
+        ("fault_overridden", Json::Bool(c.fault_overridden)),
         (
             "required_nodes",
             c.required_nodes.map(|n| Json::num(n as f64)).unwrap_or(Json::Null),
@@ -720,13 +793,15 @@ fn cell_json(c: &MatrixCell) -> Json {
     ])
 }
 
-/// The machine-readable table (`out/matrix.json`): schema version 2
-/// (version 1 + the per-cell `scan` kind; `runs` are now the scan's
-/// probes rather than a fixed fraction grid).
+/// The machine-readable table (`out/matrix.json`): schema version 3
+/// (version 2 + the per-cell dedicated-completion gate
+/// `baseline_completed` and `fault_overridden` flag, and per-run fault
+/// columns `crashes` / `crash_kills` / `availability` /
+/// `mean_recovery_s`).
 pub fn matrix_json(cells: &[MatrixCell], quick: bool) -> Json {
     Json::obj(vec![
         ("suite", Json::str("matrix")),
-        ("schema_version", Json::num(2.0)),
+        ("schema_version", Json::num(3.0)),
         ("quick", Json::Bool(quick)),
         ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
     ])
@@ -747,14 +822,15 @@ fn csv_field(s: &str) -> String {
 /// [`crate::trace::csv::Table`].
 pub fn matrix_csv(cells: &[MatrixCell]) -> String {
     let mut out = String::from(
-        "name,k,mix,policy,lease_secs,load,dedicated_nodes,required_nodes,required_frac,\
+        "name,k,mix,policy,lease_secs,load,dedicated_nodes,baseline_completed,\
+         required_nodes,required_frac,\
          completed,killed,in_flight,shortage_node_secs,slo_violating_depts,force_returns,\
-         avg_turnaround_s,events\n",
+         avg_turnaround_s,events,crashes,crash_kills,availability,mean_recovery_s\n",
     );
     for c in cells {
         let d = c.decisive();
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.1},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.1},{},{},{},{:.6},{:.1}\n",
             csv_field(&c.name),
             c.k,
             c.mix.name(),
@@ -762,6 +838,7 @@ pub fn matrix_csv(cells: &[MatrixCell]) -> String {
             c.lease_secs,
             c.load,
             c.dedicated_nodes,
+            c.baseline_completed,
             c.required_nodes.map(|n| n.to_string()).unwrap_or_default(),
             c.required_frac().map(|f| format!("{f:.4}")).unwrap_or_default(),
             d.completed,
@@ -772,6 +849,10 @@ pub fn matrix_csv(cells: &[MatrixCell]) -> String {
             d.force_returns,
             d.avg_turnaround,
             d.events,
+            d.crashes,
+            d.crash_kills,
+            d.availability,
+            d.mean_recovery_s,
         ));
     }
     out
@@ -963,13 +1044,13 @@ mod tests {
             if let Some(req) = c.required_nodes {
                 let run = c.runs.iter().find(|r| r.nodes == req).unwrap();
                 assert_eq!(run.shortage_node_secs, 0, "{}", c.name);
-                assert!(run.completed >= c.runs[0].completed, "{}", c.name);
+                assert!(run.completed >= c.baseline_completed, "{}", c.name);
                 assert_eq!(c.decisive().nodes, req);
                 // exactness: every probe below the required size failed
                 // the gate (that is what "minimal feasible" means)
                 for r in c.runs.iter().filter(|r| r.nodes < req) {
                     assert!(
-                        r.shortage_node_secs > 0 || r.completed < c.runs[0].completed,
+                        r.shortage_node_secs > 0 || r.completed < c.baseline_completed,
                         "{}: probe at {} nodes was feasible below required {}",
                         c.name,
                         r.nodes,
@@ -1013,6 +1094,10 @@ mod tests {
                 frac: Some(0.8),
                 trace: None,
                 correlation: None,
+                mtbf: None,
+                mttr: None,
+                fault_seed: None,
+                efficiency: None,
             },
             ScenarioSpec {
                 name: "portal-farm".into(),
@@ -1024,6 +1109,10 @@ mod tests {
                 frac: None,
                 trace: None,
                 correlation: Some(0.5),
+                mtbf: None,
+                mttr: None,
+                fault_seed: None,
+                efficiency: None,
             },
         ];
         let cells = run_scenarios(&cfg, &scenarios).unwrap();
@@ -1068,6 +1157,10 @@ mod tests {
             frac: Some(1.0),
             trace: Some("tests/fixtures/mini.swf".into()),
             correlation: None,
+            mtbf: None,
+            mttr: None,
+            fault_seed: None,
+            efficiency: None,
         }];
         let cells = run_scenarios(&cfg, &scenarios).unwrap();
         // the fixture holds 22 usable jobs — the synth trace holds 150
@@ -1102,6 +1195,91 @@ mod tests {
         assert!(run_scenarios(&cfg, &bad).is_err());
     }
 
+    /// The completion gate is the Σ of K *dedicated-cluster* runs, not the
+    /// consolidated full-cost probe (which consolidation can legitimately
+    /// beat by lending idle service nodes to batch — gating against it
+    /// over-rejected small clusters).
+    #[test]
+    fn completion_gate_is_the_sum_of_dedicated_runs() {
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        let mut axes = small_axes(&cfg);
+        axes.ks = vec![3];
+        axes.mixes = vec![RosterMix::Alternating];
+        axes.policies = vec![PolicyAxis::Base(PolicySpec::Cooperative)];
+        let cell = run_matrix(&cfg, &axes).unwrap().remove(0);
+        // recompute the baseline by hand from the same roster + traces
+        let specs = RosterMix::Alternating.departments(3, &cfg);
+        let traces = scale::build_traces(&specs, &cfg).unwrap();
+        let expect: u64 = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| scale::run_dedicated(&cfg, s, &traces, i).unwrap().completed)
+            .sum();
+        assert_eq!(cell.baseline_completed, expect);
+        assert!(cell.baseline_completed > 0);
+        // the full-cost consolidated run may finish *more* than the K
+        // dedicated clusters; the gate must still be the dedicated sum
+        assert!(
+            cell.runs[0].completed >= cell.baseline_completed,
+            "full cost {} under the dedicated baseline {}",
+            cell.runs[0].completed,
+            cell.baseline_completed
+        );
+        assert!(cell.required_nodes.is_some());
+    }
+
+    /// Fault-regime overrides reach the probes: a scenario's `mtbf` turns
+    /// the availability columns live, the tables stay run-to-run
+    /// deterministic, the zero-fault sibling stays exactly clean, and the
+    /// anchor check skips the overridden cell.
+    #[test]
+    fn scenario_fault_overrides_reach_the_cells() {
+        let cfg = small_cfg();
+        let scen = |name: &str, policy: &str, faulty: bool| ScenarioSpec {
+            name: name.into(),
+            k: 2,
+            mix: RosterMix::Alternating,
+            policy_kind: policy.into(),
+            lease_secs: 3600,
+            load: None,
+            frac: Some(1.0),
+            trace: None,
+            correlation: None,
+            mtbf: faulty.then_some(20_000.0),
+            mttr: faulty.then_some(600.0),
+            fault_seed: None,
+            efficiency: None,
+        };
+        let scenarios =
+            vec![scen("faulty", "cooperative", true), scen("healthy", "static", false)];
+        let a = run_scenarios(&cfg, &scenarios).unwrap();
+        let b = run_scenarios(&cfg, &scenarios).unwrap();
+        assert_eq!(
+            matrix_json(&a, true).to_string(),
+            matrix_json(&b, true).to_string(),
+            "fault cells diverged across identical runs"
+        );
+        let faulty = a[0].decisive();
+        assert!(faulty.crashes > 0, "mtbf=20000s over a day must crash nodes");
+        assert!(faulty.availability > 0.0 && faulty.availability < 1.0);
+        assert!(faulty.crash_kills <= faulty.killed);
+        assert!(a[0].fault_overridden);
+        let healthy = a[1].decisive();
+        assert_eq!(healthy.crashes, 0);
+        assert_eq!(healthy.availability.to_bits(), 1.0f64.to_bits());
+        assert_eq!(healthy.mean_recovery_s.to_bits(), 0.0f64.to_bits());
+        assert!(!a[1].fault_overridden);
+        // the anchor check must skip the overridden K=2 cooperative cell
+        // (the healthy sibling is static-partition, so nothing matches)
+        let mut anchor_base = cfg.clone();
+        anchor_base.total_nodes = a[0].dedicated_nodes;
+        assert!(
+            !verify_anchor(&anchor_base, &a).unwrap(),
+            "anchor must skip fault-overridden cells"
+        );
+    }
+
     #[test]
     fn json_table_has_the_ci_schema() {
         let cfg = small_cfg();
@@ -1111,7 +1289,7 @@ mod tests {
         let cells = run_matrix(&cfg, &axes).unwrap();
         let doc = Json::parse(&matrix_json(&cells, true).to_string()).unwrap();
         assert_eq!(doc.get("suite").unwrap().as_str(), Some("matrix"));
-        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(2));
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(3));
         assert_eq!(doc.get("quick").unwrap().as_bool(), Some(true));
         let cells_j = doc.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells_j.len(), cells.len());
@@ -1130,8 +1308,10 @@ mod tests {
                 "lease_secs",
                 "load",
                 "dedicated_nodes",
+                "baseline_completed",
                 "scan",
                 "trace_driven",
+                "fault_overridden",
                 "required_nodes",
                 "required_frac",
                 "runs",
@@ -1139,10 +1319,28 @@ mod tests {
             ] {
                 assert!(c.get(key).is_some(), "cell missing {key}");
             }
+            assert_eq!(
+                c.get("fault_overridden").unwrap().as_bool(),
+                Some(false),
+                "grid cells never override the base fault regime"
+            );
             for r in c.get("runs").unwrap().as_arr().unwrap() {
-                for key in ["nodes", "frac", "completed", "killed", "shortage_node_secs"] {
+                for key in [
+                    "nodes",
+                    "frac",
+                    "completed",
+                    "killed",
+                    "shortage_node_secs",
+                    "crashes",
+                    "crash_kills",
+                    "availability",
+                    "mean_recovery_s",
+                ] {
                     assert!(r.get(key).is_some(), "run missing {key}");
                 }
+                // the zero-fault grid keeps the fault columns exactly clean
+                assert_eq!(r.get("crashes").unwrap().as_u64(), Some(0));
+                assert_eq!(r.get("availability").unwrap().as_f64(), Some(1.0));
             }
         }
         // CSV: header + one row per cell

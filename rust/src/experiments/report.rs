@@ -103,6 +103,10 @@ mod tests {
             force_returns: 3,
             forced_nodes: 40,
             st_busy_mean: 120.0,
+            crashes: 0,
+            crash_kills: 0,
+            availability: 1.0,
+            mean_recovery_s: 0.0,
             events: 9999,
             registry: Registry::new(),
             per_dept: Vec::new(),

@@ -19,7 +19,7 @@ use anyhow::{bail, Result};
 
 use crate::cluster::{DeptId, DeptKind};
 use crate::config::{DeptSpec, ExperimentConfig, RosterMix};
-use crate::coordinator::{ConsolidationSim, DeptInput, DeptWorkload, RunResult};
+use crate::coordinator::{ConsolidationSim, DeptInput, DeptWorkload, PlannedJoin, RunResult};
 use crate::provision::{DeptProfile, PolicyChoice, PolicySpec};
 use crate::trace::csv::Table;
 use crate::trace::web_synth::{RateSeries, WebTraceConfig};
@@ -94,7 +94,7 @@ pub(crate) struct ServiceTrace {
     peak: u64,
     web: WebTraceConfig,
     rho: f64,
-    latent_seed: u64,
+    latent: correlated::Latent,
 }
 
 /// Per-department shared traces (generated once, `Arc`-shared across every
@@ -120,7 +120,7 @@ impl DeptTraces {
         self.demand
             .get(idx)
             .and_then(Option::as_ref)
-            .map(|t| correlated::rate_series(&t.web, t.rho, t.latent_seed))
+            .map(|t| correlated::rate_series_with(&t.web, t.rho, &t.latent))
     }
 
     /// First sample of department `idx`'s demand series — the boot grant
@@ -146,7 +146,17 @@ pub(crate) fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> Resul
         .as_deref()
         .map(|p| archive::Archive::load(p, base.swf_procs_per_node))
         .transpose()?;
-    let latent_seed = correlated::latent_seed(base.web.seed);
+    // flash crowds replace the synthetic latent with the WorldCup replay:
+    // every service department rides the real trace's match peaks at once
+    // (through the correlated blend, so `correlation` still sets how hard)
+    let latent = match &base.faults.flash_crowd {
+        Some(dir) => correlated::Latent::Replay(Arc::new(crate::trace::worldcup::load_dir(
+            dir,
+            base.web.sample_period,
+            crate::trace::worldcup::PAPER_SCALE,
+        )?)),
+        None => correlated::Latent::Seeded(correlated::latent_seed(base.web.seed)),
+    };
     let mut jobs = vec![None; specs.len()];
     let mut demand = vec![None; specs.len()];
     let mut batch_ord = 0u64;
@@ -168,7 +178,7 @@ pub(crate) fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> Resul
                 web.seed = spec.seed.unwrap_or_else(|| derive_seed(base.web.seed, service_ord));
                 service_ord += 1;
                 let series: Arc<[u64]> =
-                    fig5::correlated_demand_series(&web, base.correlation, latent_seed, u64::MAX)
+                    fig5::latent_demand_series(&web, base.correlation, &latent, u64::MAX)
                         .into();
                 let peak = series.iter().copied().max().unwrap_or(0);
                 demand[i] = Some(ServiceTrace {
@@ -176,7 +186,7 @@ pub(crate) fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> Resul
                     peak,
                     web,
                     rho: base.correlation,
-                    latent_seed,
+                    latent: latent.clone(),
                 });
             }
         }
@@ -199,7 +209,7 @@ pub(crate) fn dept_input(spec: &DeptSpec, traces: &DeptTraces, idx: usize, cap: 
             } else {
                 // a binding cap changes the autoscaler trajectory, not
                 // just the peak — regenerate through the real scaler
-                fig5::correlated_demand_series(&t.web, t.rho, t.latent_seed, cap).into()
+                fig5::latent_demand_series(&t.web, t.rho, &t.latent, cap).into()
             };
             DeptWorkload::Service(series)
         }
@@ -218,29 +228,49 @@ pub(crate) fn run_roster(
     total_nodes: u64,
     policy: &PolicyChoice,
 ) -> Result<RunResult> {
-    if let Some(late) = specs.iter().find(|s| s.join_at > 0) {
-        bail!(
-            "department '{}' declares join_at = {} — runtime affiliation is a \
-             serve-path feature; run this roster with `phoenixd serve`",
-            late.name,
-            late.join_at
-        );
+    // boot members keep spec order; `join_at > 0` departments follow,
+    // sorted by join time — ids are dense in that combined order, the
+    // [`ConsolidationSim::with_roster`] / `Rps::join` contract (traces
+    // were built in spec order, so each department keeps its own stream
+    // regardless of where it lands in the run order)
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    order.sort_by_key(|&i| (specs[i].join_at > 0, specs[i].join_at));
+    let boot = specs.iter().filter(|s| s.join_at == 0).count();
+    if boot == 0 {
+        bail!("at least one department must be present at boot (join_at = 0)");
     }
-    let profiles: Vec<DeptProfile> = specs
+    // the policy is built over the boot members only; joiners enter via
+    // the policy's on_join hook, keeping their configured tier (unlike
+    // the serve path, whose DeptJoin message carries no tier)
+    let profiles: Vec<DeptProfile> = order[..boot]
         .iter()
         .enumerate()
-        .map(|(i, s)| s.profile(DeptId(i as u16)))
+        .map(|(slot, &i)| specs[i].profile(DeptId(slot as u16)))
         .collect();
-    let inputs: Vec<DeptInput> = specs
+    let inputs: Vec<DeptInput> = order
+        .iter()
+        .map(|&i| dept_input(&specs[i], traces, i, total_nodes))
+        .collect();
+    let joins: Vec<PlannedJoin> = order[boot..]
         .iter()
         .enumerate()
-        .map(|(i, s)| dept_input(s, traces, i, total_nodes))
+        .map(|(j, &i)| PlannedJoin {
+            at: specs[i].join_at,
+            profile: specs[i].profile(DeptId((boot + j) as u16)),
+        })
         .collect();
     let mut cfg = base.clone();
     cfg.total_nodes = total_nodes;
     let label = format!("K{}-{}", specs.len(), policy.name());
-    ConsolidationSim::with_departments(cfg, label, total_nodes, inputs, policy.build(&profiles))
-        .run()
+    ConsolidationSim::with_roster(
+        cfg,
+        label,
+        total_nodes,
+        inputs,
+        joins,
+        policy.build(&profiles),
+    )
+    .run()
 }
 
 /// Run the consolidated configuration under a base policy (the scale
@@ -256,7 +286,7 @@ fn run_consolidated(
 }
 
 /// Run one department on its own dedicated cluster of `quota` nodes.
-fn run_dedicated(
+pub(crate) fn run_dedicated(
     base: &ExperimentConfig,
     spec: &DeptSpec,
     traces: &DeptTraces,
@@ -501,6 +531,82 @@ mod tests {
     fn run_departments_requires_a_roster() {
         let cfg = fast_cfg();
         assert!(run_departments(&cfg).is_err());
+    }
+
+    /// Regression for the virtual-time `join_at` bail: a roster with a
+    /// runtime arrival now runs on the sim path too (the serve loop is no
+    /// longer the only home of runtime affiliation).
+    #[test]
+    fn roster_with_join_at_runs_in_virtual_time() {
+        let cfg = fast_cfg();
+        let mut specs = default_departments(3, &cfg);
+        specs[2].join_at = 20_000;
+        let traces = build_traces(&specs, &cfg).unwrap();
+        let res = run_roster(
+            &cfg,
+            &specs,
+            &traces,
+            200,
+            &PolicyChoice::Base(PolicySpec::Cooperative),
+        )
+        .unwrap();
+        assert_eq!(res.per_dept.len(), 3);
+        assert_eq!(res.per_dept[2].name, "st1");
+        assert!(
+            res.per_dept[2].completed > 0,
+            "the joiner's backlog must run after t=20000: {res:?}"
+        );
+        // a boot-everything roster is unaffected by the new path
+        let mut boot_specs = default_departments(3, &cfg);
+        boot_specs[2].join_at = 0;
+        let boot_res = run_roster(
+            &cfg,
+            &boot_specs,
+            &traces,
+            200,
+            &PolicyChoice::Base(PolicySpec::Cooperative),
+        )
+        .unwrap();
+        assert_eq!(boot_res.submitted, res.submitted);
+        assert!(boot_res.per_dept[2].completed > 0);
+    }
+
+    #[test]
+    fn flash_crowd_replay_reshapes_the_correlated_traces() {
+        use crate::trace::worldcup::{encode, WcRecord};
+        let dir = std::env::temp_dir().join("phoenix_flash_latent_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let rec = |ts: u32| WcRecord {
+            timestamp: ts,
+            client_id: 1,
+            object_id: 1,
+            size: 100,
+            method: 0,
+            status: 200,
+            file_type: 1,
+            server: 0,
+        };
+        // a flat synthetic day with one massive burst at sample 40
+        let mut records: Vec<WcRecord> =
+            (0..100).map(|k| rec(894_000_000 + k * 20)).collect();
+        for _ in 0..200 {
+            records.push(rec(894_000_000 + 40 * 20));
+        }
+        std::fs::write(dir.join("wc_day66_1"), encode(&records)).unwrap();
+
+        let mut cfg = fast_cfg();
+        cfg.correlation = 0.8;
+        let specs = default_departments(3, &cfg);
+        let seeded = build_traces(&specs, &cfg).unwrap();
+        cfg.faults.flash_crowd = Some(dir.to_string_lossy().into_owned());
+        let flash = build_traces(&specs, &cfg).unwrap();
+        let flash2 = build_traces(&specs, &cfg).unwrap();
+        let s = |t: &DeptTraces, i: usize| t.demand[i].as_ref().unwrap().series.clone();
+        assert_eq!(s(&flash, 1), s(&flash2, 1), "replay latent must be deterministic");
+        assert_ne!(s(&seeded, 1), s(&flash, 1), "the flash crowd must reshape the blend");
+        // a bogus directory is a load error, not a silent synth fallback
+        cfg.faults.flash_crowd = Some("/no/such/dir".into());
+        assert!(build_traces(&specs, &cfg).is_err());
     }
 
     #[test]

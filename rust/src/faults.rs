@@ -1,0 +1,254 @@
+//! Deterministic fault injection: seeded node crash/recover schedules.
+//!
+//! The consolidation claim — a shared cluster can be *smaller* than the
+//! sum of dedicated ones and still provision "enough resources" to the
+//! Web department — is only credible if it survives node failures. The
+//! RE-provisioning successors (arXiv:1003.0958, arXiv:1006.1401) make
+//! holdings that vanish mid-lease first-class; this module supplies the
+//! vanishing.
+//!
+//! Each node alternates an up/down renewal process: time-to-failure is
+//! exponential with mean `mtbf_secs`, repair time exponential with mean
+//! `mttr_secs`, each node on its own seeded stream. The whole schedule is
+//! a **pure function** of (seed, horizon, node count) — generated up
+//! front, before any simulation state exists — so the same config yields
+//! a bit-identical schedule no matter how the surrounding experiment is
+//! parallelized, and a zero MTBF yields an empty schedule with *zero* RNG
+//! draws (the zero-fault configuration is entirely inert; every pinned
+//! table stays bit-identical).
+//!
+//! The sister knob lives here too: [`FaultConfig::efficiency`], the
+//! noisy-neighbor factor degrading effective batch throughput on shared
+//! clusters (1.0 = inert), and [`FaultConfig::flash_crowd`], a WorldCup
+//! trace directory replayed as the shared latent of the correlated web
+//! blend ([`crate::trace::correlated`]) so K departments spike together.
+
+use anyhow::{bail, Result};
+
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// Salt folded into the fault seed per node (the source paper's arXiv id,
+/// as the trace layer does with its own salts).
+const NODE_SALT: u64 = 0x0906_1346;
+
+/// Fault-injection knobs (`[faults]` in TOML, `--mtbf`/`--mttr`/
+/// `--fault-seed`/`--efficiency`/`--flash-crowd` on the CLI, plus
+/// per-`[[scenario]]` overrides). The default is the healthy cluster:
+/// no crashes, full efficiency, no flash crowd.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Mean time between failures per node, seconds. 0 disables fault
+    /// injection entirely (no events, no RNG draws).
+    pub mtbf_secs: f64,
+    /// Mean time to repair per node, seconds.
+    pub mttr_secs: f64,
+    /// Seed of the fault schedule (independent of the trace seeds, so
+    /// enabling faults never perturbs the workload).
+    pub seed: u64,
+    /// Noisy-neighbor efficiency factor in (0, 1]: effective batch
+    /// throughput on a shared (batch + service) cluster is scaled by this
+    /// — a job of runtime `r` occupies its nodes for `ceil(r / efficiency)`
+    /// seconds. 1.0 (the default) is exactly the undegraded simulator.
+    pub efficiency: f64,
+    /// Directory of WorldCup'98 `wc_day*` files replayed as the shared
+    /// latent of the correlated web blend (flash crowds: K departments
+    /// spike together on the real trace's match peaks). None = the
+    /// synthetic latent.
+    pub flash_crowd: Option<String>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            mtbf_secs: 0.0,
+            mttr_secs: 3600.0,
+            seed: NODE_SALT,
+            efficiency: 1.0,
+            flash_crowd: None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any crash/recover events will be generated.
+    pub fn enabled(&self) -> bool {
+        self.mtbf_secs > 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.mtbf_secs.is_finite() || self.mtbf_secs < 0.0 {
+            bail!("faults.mtbf_secs must be finite and >= 0, got {}", self.mtbf_secs);
+        }
+        if !self.mttr_secs.is_finite() || self.mttr_secs <= 0.0 {
+            bail!("faults.mttr_secs must be finite and > 0, got {}", self.mttr_secs);
+        }
+        if !self.efficiency.is_finite() || !(0.0..=1.0).contains(&self.efficiency)
+            || self.efficiency == 0.0
+        {
+            bail!("faults.efficiency must be in (0, 1], got {}", self.efficiency);
+        }
+        if let Some(dir) = &self.flash_crowd {
+            if dir.is_empty() {
+                bail!("faults.flash_crowd directory must not be empty");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What happened to a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Crash,
+    Recover,
+}
+
+/// One scheduled fault: node `node` crashes or recovers at virtual second
+/// `at`. Every crash of a node is followed by exactly one recover of the
+/// same node (possibly beyond the horizon, in which case it is dropped
+/// and the node stays down to the end).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub node: u64,
+    pub kind: FaultKind,
+}
+
+/// Generate the crash/recover schedule for `nodes` nodes over `horizon`
+/// seconds — a pure function of the config, sorted by (time, node), with
+/// each node's events strictly alternating Crash/Recover. Empty when
+/// `mtbf_secs == 0`.
+pub fn schedule(cfg: &FaultConfig, horizon: SimTime, nodes: u64) -> Vec<FaultEvent> {
+    if !cfg.enabled() || horizon == 0 || nodes == 0 {
+        return Vec::new();
+    }
+    let fail_rate = 1.0 / cfg.mtbf_secs;
+    let repair_rate = 1.0 / cfg.mttr_secs;
+    let mut events = Vec::new();
+    for node in 0..nodes {
+        // each node gets its own stream, so the schedule for node i never
+        // depends on how many other nodes exist
+        let mut rng = Rng::new(cfg.seed ^ (node ^ NODE_SALT).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exp(fail_rate).max(1.0);
+            let crash_at = t as SimTime;
+            if crash_at >= horizon {
+                break;
+            }
+            events.push(FaultEvent { at: crash_at, node, kind: FaultKind::Crash });
+            t += rng.exp(repair_rate).max(1.0);
+            let recover_at = t as SimTime;
+            if recover_at >= horizon {
+                break; // stays down to the end of the run
+            }
+            events.push(FaultEvent { at: recover_at, node, kind: FaultKind::Recover });
+        }
+    }
+    events.sort_by_key(|e| (e.at, e.node));
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn faulty(mtbf: f64, mttr: f64, seed: u64) -> FaultConfig {
+        FaultConfig { mtbf_secs: mtbf, mttr_secs: mttr, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn zero_mtbf_is_inert() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        assert!(schedule(&cfg, 1_000_000, 160).is_empty());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let cfg = faulty(40_000.0, 3_600.0, 42);
+        let a = schedule(&cfg, 1_209_600, 160);
+        let b = schedule(&cfg, 1_209_600, 160);
+        assert!(!a.is_empty(), "two weeks at MTBF 40ks over 160 nodes must fault");
+        assert_eq!(a, b, "same seed must give a bit-identical schedule");
+        let c = schedule(&faulty(40_000.0, 3_600.0, 43), 1_209_600, 160);
+        assert_ne!(a, c, "the seed must matter");
+    }
+
+    #[test]
+    fn per_node_events_alternate_and_stay_in_horizon() {
+        let cfg = faulty(20_000.0, 2_000.0, 7);
+        let horizon = 500_000;
+        let evs = schedule(&cfg, horizon, 32);
+        let mut last: Option<&FaultEvent> = None;
+        for e in &evs {
+            assert!(e.at < horizon);
+            if let Some(prev) = last {
+                assert!((prev.at, prev.node) <= (e.at, e.node), "not sorted");
+            }
+            last = Some(e);
+        }
+        for node in 0..32 {
+            let mine: Vec<_> = evs.iter().filter(|e| e.node == node).collect();
+            for (i, e) in mine.iter().enumerate() {
+                let want = if i % 2 == 0 { FaultKind::Crash } else { FaultKind::Recover };
+                assert_eq!(e.kind, want, "node {node} event {i} out of order");
+                if i > 0 {
+                    assert!(mine[i - 1].at < e.at, "node {node} events not increasing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn node_schedules_are_independent_of_fleet_size() {
+        // node 3's personal schedule is identical whether the fleet has 8
+        // or 80 nodes — the per-node streams never interleave
+        let cfg = faulty(10_000.0, 1_000.0, 9);
+        let small: Vec<_> =
+            schedule(&cfg, 300_000, 8).into_iter().filter(|e| e.node == 3).collect();
+        let big: Vec<_> =
+            schedule(&cfg, 300_000, 80).into_iter().filter(|e| e.node == 3).collect();
+        assert_eq!(small, big);
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        let mut cfg = FaultConfig::default();
+        cfg.mtbf_secs = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.mtbf_secs = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.mtbf_secs = 0.0;
+        cfg.mttr_secs = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.mttr_secs = 600.0;
+        cfg.efficiency = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.efficiency = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.efficiency = 0.8;
+        cfg.validate().unwrap();
+        cfg.flash_crowd = Some(String::new());
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn mean_interval_tracks_mtbf() {
+        // sanity on the renewal process: with MTTR ≪ MTBF the crash count
+        // over H is roughly H / MTBF per node
+        let cfg = faulty(50_000.0, 100.0, 11);
+        let horizon = 10_000_000;
+        let crashes = schedule(&cfg, horizon, 64)
+            .iter()
+            .filter(|e| e.kind == FaultKind::Crash)
+            .count() as f64;
+        let expect = 64.0 * horizon as f64 / 50_000.0;
+        assert!(
+            (crashes - expect).abs() / expect < 0.15,
+            "crashes={crashes} expect≈{expect}"
+        );
+    }
+}

@@ -26,6 +26,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod metrics;
 pub mod provision;
 pub mod runtime;

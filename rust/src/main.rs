@@ -65,6 +65,15 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.swf_procs_per_node = args.get_u64("procs-per-node", cfg.swf_procs_per_node)?;
     cfg.correlation = args.get_f64("correlation", cfg.correlation)?;
+    // deterministic fault injection & degraded capacity: CLI flags overlay
+    // the [faults] config section (mtbf 0 keeps injection off)
+    cfg.faults.mtbf_secs = args.get_f64("mtbf", cfg.faults.mtbf_secs)?;
+    cfg.faults.mttr_secs = args.get_f64("mttr", cfg.faults.mttr_secs)?;
+    cfg.faults.seed = args.get_u64("fault-seed", cfg.faults.seed)?;
+    cfg.faults.efficiency = args.get_f64("efficiency", cfg.faults.efficiency)?;
+    if let Some(dir) = args.get("flash-crowd") {
+        cfg.faults.flash_crowd = Some(dir.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -120,7 +129,12 @@ tracegen  emit a synthetic trace (--kind hpc|web)\n  \
 validate  parse + validate a config file\n\
 common flags: --config FILE --seed N --load F --workers N (0 = all cores) --verbose\n\
 trace flags (matrix/scale/depts rosters only; fig5/fig7/fig8/sweep keep the\n\
-paper's synthetic traces): --swf FILE --procs-per-node N --correlation R";
+paper's synthetic traces): --swf FILE --procs-per-node N --correlation R\n\
+fault flags (overlay the [faults] config section; mtbf 0 = injection off):\n  \
+--mtbf SECS --mttr SECS --fault-seed N (deterministic crash/recover schedule)\n  \
+--efficiency F (noisy-neighbor batch slowdown on shared clusters, (0,1])\n  \
+--flash-crowd DIR (WorldCup wc_day* replay as the shared demand spike;\n  \
+needs --correlation > 0 to reach the departments)";
 
 fn cmd_fig5(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
@@ -523,6 +537,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  peak svc demand  : {}", report.ws_peak_demand);
     println!("  svc shortage     : {} node·s", report.ws_shortage_node_secs);
     println!("  force returns    : {} ({} nodes)", report.force_returns, report.forced_nodes);
+    if report.crashes > 0 || report.recovers > 0 {
+        println!("  crashes/recovers : {} / {}", report.crashes, report.recovers);
+        println!("  down at horizon  : {} nodes", report.down_end);
+    }
     println!("  free at horizon  : {} of {}", report.free_end, report.cluster_nodes);
     println!("  wall time        : {:.2?}", report.wall);
     if report.down_services.is_empty() {
@@ -531,11 +549,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("  health           : DOWN {:?}", report.down_services);
     }
     let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
-    if report.free_end + held != report.cluster_nodes {
+    if report.free_end + held + report.down_end != report.cluster_nodes {
         bail!(
-            "ledger conservation violated: free {} + held {} != total {}",
+            "ledger conservation violated: free {} + held {} + down {} != total {}",
             report.free_end,
             held,
+            report.down_end,
             report.cluster_nodes
         );
     }

@@ -232,6 +232,21 @@ impl ProvisionPolicy for MixedPolicy {
             sub.on_leave(dept, now);
         }
     }
+
+    fn on_crash(&mut self, holder: Option<DeptId>, n: u64, now: SimTime) {
+        // the holder's owning tier voids its own lease books (like
+        // on_force); a free-pool crash has no holder to route
+        if let Some(dept) = holder {
+            let sub = self.route(dept);
+            self.subs[sub].on_crash(holder, n, now);
+        }
+    }
+
+    fn on_recover(&mut self, n: u64, now: SimTime) {
+        for sub in &mut self.subs {
+            sub.on_recover(n, now);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +356,21 @@ mod tests {
         p.on_leave(DeptId(3), 50);
         assert_eq!(p.next_expiry(), None);
         assert_eq!(p.route(DeptId(3)), 1, "departed dept falls to the default route");
+    }
+
+    #[test]
+    fn crashes_void_the_owning_tier_lease_book() {
+        let mut p = mixed_lease_bottom();
+        let l = Ledger::new(12, 3);
+        p.idle_grants(&l, &[DeptId(2)], 0); // leased until 100
+        assert_eq!(p.next_expiry(), Some(100));
+        // a crash in the leased holder's pool voids its booked nodes
+        p.on_crash(Some(DeptId(2)), 12, 50);
+        assert_eq!(p.next_expiry(), None, "crash must void the lease book");
+        // free-pool crashes and recoveries are no-ops on every sub-policy
+        p.on_crash(None, 1, 60);
+        p.on_recover(1, 70);
+        assert_eq!(p.next_expiry(), None);
     }
 
     #[test]

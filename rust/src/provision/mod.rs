@@ -161,6 +161,62 @@ impl Rps {
         self.policy.on_leave(dept, now);
         held
     }
+
+    /// `n` nodes crashed: out of `holder`'s pool (the driver has already
+    /// killed the victim's work on them) or out of the free pool (`None`).
+    /// They move to the ledger's `down` pool and the policy voids any
+    /// lease books covering them.
+    pub fn crash(&mut self, holder: Option<DeptId>, n: u64, now: SimTime) {
+        match holder {
+            Some(dept) => self
+                .ledger
+                .crash_held(dept, n)
+                .expect("crash exceeded the holder's nodes"),
+            None => self.ledger.crash_free(n).expect("crash exceeded the free pool"),
+        }
+        self.policy.on_crash(holder, n, now);
+    }
+
+    /// `n` crashed nodes finished repair: they re-enter the free pool and
+    /// the policy is told so the driver's next re-provisioning pass can
+    /// hand them out.
+    pub fn recover(&mut self, n: u64, now: SimTime) {
+        self.ledger.recover(n).expect("recovered more nodes than were down");
+        self.policy.on_recover(n, now);
+    }
+
+    /// Crash up to `n` nodes using the standard victim rule: the free pool
+    /// first, then the holder with the largest holding (ties to the lower
+    /// id). Returns the per-victim breakdown (`None` = free pool) so the
+    /// driver can kill the victims' work. Crashes fewer than `n` only if
+    /// the whole cluster is already down.
+    pub fn crash_anywhere(&mut self, n: u64, now: SimTime) -> Vec<(Option<DeptId>, u64)> {
+        let mut out = Vec::new();
+        let mut left = n;
+        let from_free = left.min(self.ledger.free());
+        if from_free > 0 {
+            self.crash(None, from_free, now);
+            out.push((None, from_free));
+            left -= from_free;
+        }
+        while left > 0 {
+            let (_, held) = self.ledger.snapshot();
+            let victim = held
+                .iter()
+                .enumerate()
+                .filter(|&(_, &h)| h > 0)
+                .max_by_key(|&(i, &h)| (h, std::cmp::Reverse(i)))
+                .map(|(i, &h)| (DeptId(i as u16), h));
+            let Some((dept, held)) = victim else {
+                break; // whole cluster already down
+            };
+            let take = left.min(held);
+            self.crash(Some(dept), take, now);
+            out.push((Some(dept), take));
+            left -= take;
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -262,6 +318,50 @@ mod tests {
         assert_eq!(rps.ledger().free(), 10);
         let (free, held) = rps.ledger().snapshot();
         assert_eq!(free + held.iter().sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn crash_and_recover_round_trip_through_the_rps() {
+        let mut rps = coop(100);
+        rps.bootstrap_grant(DeptId::WS, 30);
+        // 70 free: a 10-node crash comes out of the free pool first
+        let victims = rps.crash_anywhere(10, 5);
+        assert_eq!(victims, vec![(None, 10)]);
+        assert_eq!(rps.ledger().down(), 10);
+        assert_eq!(rps.ledger().free(), 60);
+        rps.provision_idle(&[DeptId::ST], 5); // remaining 60 to ST
+        // nothing free now: the largest holder (ST, 60) is the victim
+        let victims = rps.crash_anywhere(15, 10);
+        assert_eq!(victims, vec![(Some(DeptId::ST), 15)]);
+        assert_eq!(rps.ledger().down(), 25);
+        assert_eq!(rps.ledger().held(DeptId::ST), 45);
+        // recovery returns the nodes to the free pool
+        rps.recover(25, 20);
+        assert_eq!(rps.ledger().down(), 0);
+        assert_eq!(rps.ledger().free(), 25);
+        let (free, held) = rps.ledger().snapshot();
+        assert_eq!(free + held.iter().sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn crash_voids_lease_books() {
+        let profiles = two_dept_profiles(144, 64);
+        let mut rps = Rps::new(50, 2, PolicySpec::Lease { secs: 100 }.build(&profiles));
+        rps.provision_idle(&[DeptId::ST], 0); // 50 leased until 100
+        assert_eq!(rps.next_expiry(), Some(100));
+        rps.crash(Some(DeptId::ST), 50, 10);
+        assert_eq!(rps.next_expiry(), None, "crash must void the lease book");
+        assert_eq!(rps.ledger().held(DeptId::ST), 0);
+        assert_eq!(rps.ledger().down(), 50);
+    }
+
+    #[test]
+    fn crash_anywhere_stops_at_an_empty_cluster() {
+        let mut rps = coop(10);
+        let victims = rps.crash_anywhere(25, 0);
+        assert_eq!(victims, vec![(None, 10)]);
+        assert_eq!(rps.ledger().down(), 10);
+        assert_eq!(rps.ledger().free(), 0);
     }
 
     #[test]

@@ -186,6 +186,20 @@ pub trait ProvisionPolicy: fmt::Debug + Send {
     /// to the free pool. Built-ins drop the profile (and, for lease
     /// policies, any outstanding lease-book entries). Default: no-op.
     fn on_leave(&mut self, _dept: DeptId, _now: SimTime) {}
+
+    /// `n` nodes crashed (fault injection, [`crate::faults`]): out of
+    /// `holder`'s holdings, or out of the free pool when `holder` is
+    /// `None`. The ledger move ([`Ledger::crash_held`] /
+    /// [`Ledger::crash_free`]) has already happened; this is the
+    /// bookkeeping hook — lease policies void the crashed nodes' lease
+    /// entries so a lease can never fire for capacity that no longer
+    /// exists. Default (for policies that track no per-grant state): no-op.
+    fn on_crash(&mut self, _holder: Option<DeptId>, _n: u64, _now: SimTime) {}
+
+    /// `n` repaired nodes returned to the free pool
+    /// ([`Ledger::recover`]): the driver re-provisions them right after
+    /// this hook, so stateless policies need nothing here. Default: no-op.
+    fn on_recover(&mut self, _n: u64, _now: SimTime) {}
 }
 
 /// Insert `p` into a profile roster, replacing any stale entry with the
@@ -377,6 +391,11 @@ impl ProvisionPolicy for Cooperative {
     fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
         remove_profile(&mut self.depts, dept);
     }
+
+    // on_crash / on_recover: the cooperative policy keys every decision on
+    // the live ledger, so the trait defaults (no-op) are its complete
+    // crash semantics — recovered nodes re-enter via the free pool and the
+    // driver's re-provisioning pass.
 }
 
 // ---- static partition (the SC baseline), N departments ----------------------
@@ -642,6 +661,15 @@ impl ProvisionPolicy for LeaseBased {
 
     fn on_force(&mut self, victim: DeptId, n: u64, _now: SimTime) {
         self.drop_leased(victim, n);
+    }
+
+    fn on_crash(&mut self, holder: Option<DeptId>, n: u64, _now: SimTime) {
+        // a crash voids the victim's lease book exactly like a force:
+        // the nodes are gone, so their lease entries must never fire
+        // (earliest expiry first — same rule as on_force)
+        if let Some(dept) = holder {
+            self.drop_leased(dept, n);
+        }
     }
 
     fn next_expiry(&self) -> Option<SimTime> {

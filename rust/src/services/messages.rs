@@ -74,6 +74,19 @@ pub enum Msg {
     /// the department from the policy.
     DeptLeave { dept: DeptId },
 
+    // ---- fault injection ----------------------------------------------------
+    /// `nodes` nodes crashed. The serve loop injects this at the RPS with
+    /// the placeholder address `DeptId::RPS_FAULT`; the RPS picks the
+    /// victim (free pool first, else the largest holder), books the nodes
+    /// into the ledger's `down` pool, and — when a holder was hit —
+    /// forwards the message dept-addressed to the victim CMS, which kills
+    /// batch jobs or shrinks web capacity accordingly.
+    NodeDown { dept: DeptId, nodes: u64 },
+    /// `nodes` crashed nodes finished repair: the RPS returns them to the
+    /// free pool and re-provisions idle capacity. Injected with the same
+    /// placeholder address as [`Msg::NodeDown`].
+    NodeUp { dept: DeptId, nodes: u64 },
+
     // ---- timers / lifecycle -------------------------------------------------
     /// Periodic tick (the serve loop injects these; the RPS settles lease
     /// expiries on its tick, the CMSes admit arrivals, retire completions,

@@ -45,6 +45,10 @@ pub struct StServer {
     running: BTreeMap<u64, RunningJob>,
     scheduler: Scheduler,
     kill_order: KillOrder,
+    /// Noisy-neighbor efficiency in (0, 1]: on a shared cluster a job of
+    /// runtime `r` occupies its nodes for `ceil(r / efficiency)` seconds.
+    /// Exactly 1.0 (the default) leaves every runtime untouched.
+    efficiency: f64,
     /// Terminal outcomes (completed + killed) for metrics.
     pub outcomes: Vec<JobOutcome>,
 }
@@ -66,8 +70,19 @@ impl StServer {
             running: BTreeMap::new(),
             scheduler: Scheduler::new(scheduler),
             kill_order,
+            efficiency: 1.0,
             outcomes: Vec::new(),
         }
+    }
+
+    /// Degrade effective throughput (noisy neighbors on a shared cluster).
+    /// Must be set before any job starts; 1.0 restores exact runtimes.
+    pub fn set_efficiency(&mut self, efficiency: f64) {
+        assert!(
+            efficiency.is_finite() && efficiency > 0.0 && efficiency <= 1.0,
+            "efficiency must be in (0, 1], got {efficiency}"
+        );
+        self.efficiency = efficiency;
     }
 
     /// The department this CMS manages resources for.
@@ -171,7 +186,14 @@ impl StServer {
         // remove from the back first so indices stay valid…
         for &qidx in picked.iter().rev() {
             let job = self.queue.remove(qidx);
-            let finish_at = now + job.runtime;
+            // exact addition at efficiency 1.0 keeps every pinned table
+            // bit-identical; anything less stretches the occupancy
+            let occupancy = if self.efficiency == 1.0 {
+                job.runtime
+            } else {
+                (job.runtime as f64 / self.efficiency).ceil() as u64
+            };
+            let finish_at = now + occupancy;
             self.busy += job.size;
             self.running.insert(
                 job.id,
@@ -188,6 +210,15 @@ impl StServer {
         started.reverse();
         debug_assert!(self.busy <= self.pool, "scheduler oversubscribed the pool");
         started
+    }
+
+    /// `n` of this department's nodes crashed. Same mechanics as a forced
+    /// return — idle nodes vanish first, then running jobs are killed in
+    /// the configured order — but the nodes leave for the ledger's `down`
+    /// pool, not the free pool (the caller performs that move). Returns
+    /// the killed job ids; their pending Finish events become stale no-ops.
+    pub fn crash(&mut self, n: u64, now: SimTime) -> Vec<u64> {
+        self.force_return(n, now)
     }
 
     /// Jobs still queued or running when the horizon ends (neither
@@ -280,6 +311,42 @@ mod tests {
         let mut st = server();
         st.grant(2);
         st.force_return(3, 0);
+    }
+
+    #[test]
+    fn degraded_efficiency_stretches_occupancy() {
+        let mut st = server();
+        st.set_efficiency(0.8);
+        st.grant(4);
+        st.submit(job(1, 0, 4, 100));
+        let started = st.schedule(10);
+        assert_eq!(started[0].finish_at, 10 + 125, "100 / 0.8 = 125");
+        // the stretched completion time is what finish() sees
+        assert!(st.finish(1, 135));
+        assert_eq!(st.outcomes[0].turnaround(), 135);
+    }
+
+    #[test]
+    fn full_efficiency_is_bit_exact() {
+        let mut st = server();
+        st.set_efficiency(1.0);
+        st.grant(4);
+        st.submit(job(1, 0, 4, 97));
+        assert_eq!(st.schedule(0)[0].finish_at, 97);
+    }
+
+    #[test]
+    fn crash_kills_like_a_forced_return() {
+        let mut st = server();
+        st.grant(12);
+        st.submit(job(1, 0, 8, 100));
+        st.submit(job(2, 0, 4, 100));
+        st.schedule(0);
+        // no idle: a 2-node crash kills the size-4 job (min size first)
+        let killed = st.crash(2, 50);
+        assert_eq!(killed, vec![2]);
+        assert_eq!(st.pool(), 10);
+        assert!(!st.finish(2, 100), "the crashed job's finish must be stale");
     }
 
     #[test]

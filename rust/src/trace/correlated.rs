@@ -25,6 +25,8 @@
 //! from the base web seed), so the same config reproduces the same
 //! correlated fleet on any worker layout.
 
+use std::sync::Arc;
+
 use crate::trace::web_synth::{self, RateSeries, WebTraceConfig};
 
 /// Salt folded into the base web seed to derive the roster-wide latent
@@ -37,6 +39,45 @@ pub fn latent_seed(base_web_seed: u64) -> u64 {
     base_web_seed ^ LATENT_SALT.wrapping_mul(0x9E3779B97F4A7C15)
 }
 
+/// The roster-wide shared load process the correlated blend draws from.
+#[derive(Clone)]
+pub enum Latent {
+    /// The synthetic latent from a shared seed (the default;
+    /// [`latent_seed`] derives it from the base web seed).
+    Seeded(u64),
+    /// An external rate series replayed as the latent — flash crowds: the
+    /// WorldCup'98 archive's match peaks hit every department at once
+    /// (`faults.flash_crowd` in the config). The series is resampled onto
+    /// each department's sample grid, wrapping when shorter than the
+    /// horizon, and mean-normalized to the O(1) scale raw shapes live at.
+    Replay(Arc<RateSeries>),
+}
+
+impl Latent {
+    /// The latent shape on `cfg`'s sample grid (one value per sample).
+    fn shape(&self, cfg: &WebTraceConfig) -> Vec<f64> {
+        match self {
+            Latent::Seeded(seed) => {
+                let mut latent_cfg = cfg.clone();
+                latent_cfg.seed = *seed;
+                web_synth::raw_shape(&latent_cfg)
+            }
+            Latent::Replay(series) => {
+                let n = (cfg.horizon / cfg.sample_period) as usize;
+                let span = series.len_secs().max(1);
+                let raw: Vec<f64> = (0..n as u64)
+                    .map(|k| series.at(k * cfg.sample_period % span))
+                    .collect();
+                let mean = crate::util::stats::mean(&raw);
+                if mean <= 0.0 {
+                    return vec![1.0; n];
+                }
+                raw.into_iter().map(|r| (r / mean).max(0.01)).collect()
+            }
+        }
+    }
+}
+
 /// One department's rate series at correlation `rho` ∈ [0, 1].
 ///
 /// `cfg.seed` is the department's own seed (exactly as the independent
@@ -45,6 +86,14 @@ pub fn latent_seed(base_web_seed: u64) -> u64 {
 /// identical to the independent path, regression-tested in
 /// `rust/tests/traces.rs`.
 pub fn rate_series(cfg: &WebTraceConfig, rho: f64, latent_seed: u64) -> RateSeries {
+    rate_series_with(cfg, rho, &Latent::Seeded(latent_seed))
+}
+
+/// [`rate_series`] generalized over the latent source. `rho == 0.0`
+/// short-circuits to the independent generator no matter the latent — a
+/// flash-crowd replay only reaches departments through the blend, so it
+/// needs `correlation > 0` to matter (validated at config load).
+pub fn rate_series_with(cfg: &WebTraceConfig, rho: f64, latent: &Latent) -> RateSeries {
     assert!(
         rho.is_finite() && (0.0..=1.0).contains(&rho),
         "correlation must be in [0, 1], got {rho}"
@@ -53,9 +102,7 @@ pub fn rate_series(cfg: &WebTraceConfig, rho: f64, latent_seed: u64) -> RateSeri
         return web_synth::generate(cfg);
     }
     let own = web_synth::raw_shape(cfg);
-    let mut latent_cfg = cfg.clone();
-    latent_cfg.seed = latent_seed;
-    let latent = web_synth::raw_shape(&latent_cfg);
+    let latent = latent.shape(cfg);
     let mixed: Vec<f64> = own
         .iter()
         .zip(&latent)
@@ -146,5 +193,52 @@ mod tests {
     #[should_panic(expected = "correlation must be in [0, 1]")]
     fn rejects_out_of_range_rho() {
         rate_series(&WebTraceConfig::default(), 1.5, 1);
+    }
+
+    // ---- flash-crowd replay latent -------------------------------------
+
+    use std::sync::Arc;
+
+    #[test]
+    fn replay_latent_drives_every_department_at_rho_one() {
+        // a spiky external series: flat 10 rps with one 1000 rps burst
+        let mut rates = vec![10.0; 100];
+        rates[40] = 1000.0;
+        let latent =
+            Latent::Replay(Arc::new(RateSeries { sample_period: 20, rates }));
+        let mut a_cfg = WebTraceConfig::default();
+        a_cfg.seed = 100;
+        let mut b_cfg = WebTraceConfig::default();
+        b_cfg.seed = 200;
+        let a = rate_series_with(&a_cfg, 1.0, &latent);
+        let b = rate_series_with(&b_cfg, 1.0, &latent);
+        assert_eq!(a.rates, b.rates, "ρ=1 departments must replay the flash crowd");
+        // the burst sample dominates: the replayed peak lands where the
+        // external series put it (wrapped over the horizon)
+        let peak_idx =
+            a.rates.iter().enumerate().max_by(|x, y| x.1.total_cmp(y.1)).unwrap().0;
+        assert_eq!(peak_idx % 100, 40, "burst must land on the external peak");
+    }
+
+    #[test]
+    fn replay_latent_wraps_a_short_series_over_the_horizon() {
+        let latent_series = RateSeries { sample_period: 20, rates: vec![1.0, 5.0] };
+        let cfg = WebTraceConfig::default();
+        let n = (cfg.horizon / cfg.sample_period) as usize;
+        let shape = Latent::Replay(Arc::new(latent_series)).shape(&cfg);
+        assert_eq!(shape.len(), n);
+        // mean-normalized to 1.0, alternating over the whole horizon
+        assert!((crate::util::stats::mean(&shape) - 1.0).abs() < 1e-9);
+        assert!(shape[0] < shape[1]);
+        assert_eq!(shape[0].to_bits(), shape[2].to_bits(), "must wrap periodically");
+    }
+
+    #[test]
+    fn replay_rho_zero_is_still_the_independent_generator() {
+        let cfg = WebTraceConfig::default();
+        let latent =
+            Latent::Replay(Arc::new(RateSeries { sample_period: 20, rates: vec![7.0; 4] }));
+        let a = rate_series_with(&cfg, 0.0, &latent);
+        assert_eq!(a.rates, web_synth::generate(&cfg).rates);
     }
 }

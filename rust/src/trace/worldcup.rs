@@ -27,6 +27,9 @@ use anyhow::{bail, Context, Result};
 
 use super::web_synth::RateSeries;
 
+/// The paper's request-rate scale factor (§III-B).
+pub const PAPER_SCALE: f64 = 2.22;
+
 /// One decoded request record (the fields the simulator uses).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WcRecord {

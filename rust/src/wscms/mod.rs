@@ -97,6 +97,24 @@ impl WsServer {
         assert!(n <= self.holding, "releasing more than held");
         self.holding -= n;
     }
+
+    /// `n` of this department's nodes crashed: effective capacity shrinks
+    /// without the demand target moving, so the next demand evaluation
+    /// re-claims the deficit. The elapsed interval is accounted first
+    /// (same bookkeeping as [`WsServer::set_demand`]) so the shortage
+    /// integral stays time-weighted across the capacity step.
+    pub fn crash(&mut self, n: u64, now: SimTime) {
+        assert!(n <= self.holding, "crashing more than held");
+        if self.holding < self.demand {
+            let dt = now - self.last_change;
+            self.shortage_node_secs += (self.demand - self.holding) * dt;
+            if dt > 0 {
+                self.shortage_samples += 1;
+            }
+        }
+        self.last_change = now;
+        self.holding -= n;
+    }
 }
 
 impl Default for WsServer {
@@ -158,5 +176,29 @@ mod tests {
     fn over_release_panics() {
         let mut ws = WsServer::new();
         ws.release(1);
+    }
+
+    #[test]
+    fn crash_shrinks_holding_and_opens_a_shortage() {
+        let mut ws = WsServer::new();
+        ws.grant(5);
+        assert_eq!(ws.set_demand(5, 0), WsAction::None);
+        // 2 nodes crash at t=10: demand stays 5, holding drops to 3
+        ws.crash(2, 10);
+        assert_eq!(ws.holding(), 3);
+        assert_eq!(ws.demand(), 5);
+        assert_eq!(ws.shortage_node_secs, 0, "no shortage before the crash");
+        // the next evaluation accounts 2 nodes short for 10 s and re-claims
+        assert_eq!(ws.set_demand(5, 20), WsAction::Request(2));
+        assert_eq!(ws.shortage_node_secs, 20);
+        assert_eq!(ws.shortage_samples, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "crashing more than held")]
+    fn over_crash_panics() {
+        let mut ws = WsServer::new();
+        ws.grant(1);
+        ws.crash(2, 0);
     }
 }

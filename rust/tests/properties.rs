@@ -9,8 +9,8 @@ use phoenix_cloud::coordinator::{ConsolidationSim, DeptInput, DeptWorkload};
 use phoenix_cloud::experiments::matrix::{self, MatrixAxes, PolicyAxis, SizeScan};
 use phoenix_cloud::prop_assert;
 use phoenix_cloud::provision::{
-    DeptProfile, LeaseBased, PolicyChoice, PolicySpec, ProvisionPolicy, TieredCooperative,
-    TierRule,
+    DeptProfile, LeaseBased, PolicyChoice, PolicySpec, ProvisionPolicy, Rps,
+    TieredCooperative, TierRule,
 };
 use phoenix_cloud::util::prop::{check, Gen};
 use phoenix_cloud::workload::{Job, JobState};
@@ -816,6 +816,288 @@ fn prop_serve_bus_flows_conserve_nodes_against_ledger() {
         prop_assert!(
             report.per_dept.iter().map(|d| d.completed).sum::<u64>() == report.completed,
             "per-dept completed does not sum: {report:?}"
+        );
+        Ok(())
+    });
+}
+
+/// The ledger's `down` pool closes the conservation identity: across random
+/// grant/release/transfer/crash/recover storms, `free + Σheld + down ==
+/// total` always, and a rejected move never mutates any pool.
+#[test]
+fn prop_ledger_down_pool_conserves_nodes() {
+    check("ledger-down-conservation", 300, |g: &mut Gen| {
+        let k = g.usize_in(1, 6);
+        let total = g.u64_in(0, 1000);
+        let mut ledger = Ledger::new(total, k);
+        for _ in 0..g.usize_in(1, 60) {
+            let from = DeptId(g.usize_in(0, k + 1) as u16);
+            let to = DeptId(g.usize_in(0, k + 1) as u16);
+            let n = g.u64_in(0, total + 10);
+            let before = (ledger.snapshot(), ledger.down());
+            let ok = match g.usize_in(0, 5) {
+                0 => ledger.grant(to, n).is_ok(),
+                1 => ledger.release(from, n).is_ok(),
+                2 => ledger.transfer(from, to, n).is_ok(),
+                3 => ledger.crash_free(n).is_ok(),
+                4 => ledger.crash_held(from, n).is_ok(),
+                _ => ledger.recover(n).is_ok(),
+            };
+            let (free, held) = ledger.snapshot();
+            let down = ledger.down();
+            prop_assert!(
+                free + held.iter().sum::<u64>() + down == total,
+                "leak: {free}+{held:?}+{down} != {total}"
+            );
+            if !ok {
+                prop_assert!(
+                    (ledger.snapshot(), ledger.down()) == before,
+                    "failed move mutated the ledger"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Crash/recover conservation through the full [`Rps`] under every policy
+/// shape (five bases plus the per-tier mixed combinator): random storms of
+/// idle provisioning, forced requests, releases, `crash_anywhere`, and
+/// `recover` keep `free + Σheld + down == total` at every step, and a crash
+/// ask always takes exactly `min(asked, live)` nodes.  Any over-move inside
+/// the Rps panics via its internal `expect`s, so this property also proves
+/// the policies' `on_crash`/`on_recover` hooks never desynchronize the
+/// books from the ledger.
+#[test]
+fn prop_rps_crash_recover_conserves_under_every_policy() {
+    check("rps-crash-conservation", 150, |g: &mut Gen| {
+        let k = g.usize_in(2, 6);
+        let profiles: Vec<DeptProfile> = (0..k)
+            .map(|i| DeptProfile {
+                id: DeptId(i as u16),
+                kind: if i % 2 == 0 { DeptKind::Batch } else { DeptKind::Service },
+                tier: g.u64_in(0, 3) as u8,
+                quota: g.u64_in(1, 200),
+            })
+            .collect();
+        let total = g.u64_in(k as u64, 800);
+        let choice = if g.usize_in(0, 5) == 5 {
+            let rules = g.vec_of(1, 3, |g| TierRule {
+                tier: g.u64_in(0, 3) as u8,
+                spec: *g.pick(&[
+                    PolicySpec::Cooperative,
+                    PolicySpec::StaticPartition,
+                    PolicySpec::Lease { secs: 60 },
+                    PolicySpec::Tiered,
+                ]),
+            });
+            PolicyChoice::Mixed { default: PolicySpec::Cooperative, rules }
+        } else {
+            PolicyChoice::Base(*g.pick(&[
+                PolicySpec::Cooperative,
+                PolicySpec::StaticPartition,
+                PolicySpec::ProportionalShare,
+                PolicySpec::Lease { secs: 60 },
+                PolicySpec::Tiered,
+            ]))
+        };
+        let mut rps = Rps::new(total, k, choice.build(&profiles));
+        let eligible: Vec<DeptId> = profiles
+            .iter()
+            .filter(|p| p.kind == DeptKind::Batch)
+            .map(|p| p.id)
+            .collect();
+        let mut now = 0u64;
+        for _ in 0..g.usize_in(1, 40) {
+            now += g.u64_in(0, 300);
+            match g.usize_in(0, 4) {
+                0 => {
+                    rps.provision_idle(&eligible, now);
+                }
+                1 => {
+                    let dept = DeptId(g.usize_in(0, k - 1) as u16);
+                    let d = rps.request(dept, g.u64_in(0, total), now);
+                    for &(victim, n) in &d.force {
+                        rps.complete_force(victim, dept, n, now);
+                    }
+                }
+                2 => {
+                    let dept = DeptId(g.usize_in(0, k - 1) as u16);
+                    let held = rps.ledger().held(dept);
+                    if held > 0 {
+                        rps.release(dept, g.u64_in(1, held), now);
+                    }
+                }
+                3 => {
+                    let live = total - rps.ledger().down();
+                    let asked = g.u64_in(0, total + 5);
+                    let victims = rps.crash_anywhere(asked, now);
+                    let crashed: u64 = victims.iter().map(|&(_, n)| n).sum();
+                    prop_assert!(
+                        crashed == asked.min(live),
+                        "{}: crash took {crashed} of asked {asked} with {live} live",
+                        rps.policy_name()
+                    );
+                }
+                _ => {
+                    let down = rps.ledger().down();
+                    if down > 0 {
+                        rps.recover(g.u64_in(1, down), now);
+                    }
+                }
+            }
+            let (free, held) = rps.ledger().snapshot();
+            let down = rps.ledger().down();
+            prop_assert!(
+                free + held.iter().sum::<u64>() + down == total,
+                "{}: leak: {free}+{held:?}+{down} != {total}",
+                rps.policy_name()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// A crash mid-lease never leaks a lease book.  Lease-bearing policies (the
+/// base lease and the mixed combinator routing a tier onto a lease) book
+/// every idle grant; crashing leased nodes must void the matching book
+/// entries, so every later expiry is covered by the holder's live nodes and
+/// a full drain empties the book.  A leaked entry would surface here as an
+/// expiry larger than the holding (and panic inside `lease_return`).
+#[test]
+fn prop_crash_mid_lease_never_leaks_lease_books() {
+    check("crash-lease-books", 200, |g: &mut Gen| {
+        let k = g.usize_in(2, 5);
+        let profiles: Vec<DeptProfile> = (0..k)
+            .map(|i| DeptProfile {
+                id: DeptId(i as u16),
+                kind: if i % 2 == 0 { DeptKind::Batch } else { DeptKind::Service },
+                // batch departments sit on tier 1 so the mixed rule below
+                // routes all of them onto the leased sub-policy
+                tier: if i % 2 == 0 { 1 } else { 0 },
+                quota: g.u64_in(2, 100),
+            })
+            .collect();
+        let total = g.u64_in(k as u64, 500);
+        let secs = g.u64_in(10, 400);
+        let choice = if g.bool() {
+            PolicyChoice::Base(PolicySpec::Lease { secs })
+        } else {
+            PolicyChoice::Mixed {
+                default: PolicySpec::Cooperative,
+                rules: vec![TierRule { tier: 1, spec: PolicySpec::Lease { secs } }],
+            }
+        };
+        let mut rps = Rps::new(total, k, choice.build(&profiles));
+        let eligible: Vec<DeptId> = profiles
+            .iter()
+            .filter(|p| p.kind == DeptKind::Batch)
+            .map(|p| p.id)
+            .collect();
+        let mut now = 0u64;
+        for _ in 0..g.usize_in(1, 30) {
+            now += g.u64_in(1, secs * 2);
+            match g.usize_in(0, 2) {
+                0 => {
+                    rps.provision_idle(&eligible, now);
+                }
+                1 => {
+                    rps.crash_anywhere(g.u64_in(0, total), now);
+                }
+                _ => {
+                    let down = rps.ledger().down();
+                    if down > 0 {
+                        rps.recover(g.u64_in(1, down), now);
+                    }
+                }
+            }
+            for (dept, n) in rps.lease_expirations(now) {
+                prop_assert!(
+                    n <= rps.ledger().held(dept),
+                    "leaked lease book: {dept} expires {n} of {} held",
+                    rps.ledger().held(dept)
+                );
+                rps.lease_return(dept, n, 0, now);
+            }
+        }
+        // drain far past the longest term: every surviving lease expires,
+        // returns cleanly, and the book is empty afterwards
+        now += secs * 4 + 1;
+        for (dept, n) in rps.lease_expirations(now) {
+            prop_assert!(
+                n <= rps.ledger().held(dept),
+                "leaked lease book at drain: {dept} expires {n} of {} held",
+                rps.ledger().held(dept)
+            );
+            rps.lease_return(dept, n, 0, now);
+        }
+        prop_assert!(rps.next_expiry().is_none(), "lease book not drained");
+        let (free, held) = rps.ledger().snapshot();
+        let down = rps.ledger().down();
+        prop_assert!(
+            free + held.iter().sum::<u64>() + down == total,
+            "leak after drain: {free}+{held:?}+{down} != {total}"
+        );
+        Ok(())
+    });
+}
+
+/// The fault injector is bit-identical however the work is laid out: the
+/// same seeded config produces byte-equal schedules whether fleets are
+/// expanded serially or through the parallel map, events arrive sorted by
+/// `(at, node)` with strict per-node crash/recover alternation inside the
+/// horizon, and an `mtbf = 0` config is inert.
+#[test]
+fn prop_fault_schedule_bit_identical_serial_vs_parallel() {
+    use phoenix_cloud::experiments::parallel;
+    use phoenix_cloud::faults::{self, FaultConfig, FaultKind};
+
+    check("fault-schedule-parallel", 60, |g: &mut Gen| {
+        let cfg = FaultConfig {
+            mtbf_secs: g.f64_in(500.0, 50_000.0),
+            mttr_secs: g.f64_in(10.0, 5_000.0),
+            seed: g.u64_in(0, u64::MAX - 1),
+            ..FaultConfig::default()
+        };
+        let horizon = g.u64_in(1_000, 400_000);
+        let fleets: Vec<u64> = (0..g.usize_in(1, 6)).map(|_| g.u64_in(1, 200)).collect();
+        let serial =
+            parallel::parallel_map(fleets.len(), 1, |i| faults::schedule(&cfg, horizon, fleets[i]));
+        let threaded =
+            parallel::parallel_map(fleets.len(), 4, |i| faults::schedule(&cfg, horizon, fleets[i]));
+        prop_assert!(serial == threaded, "fault schedules diverged across worker layouts");
+        for events in &serial {
+            prop_assert!(
+                events.windows(2).all(|w| (w[0].at, w[0].node) <= (w[1].at, w[1].node)),
+                "schedule not sorted by (at, node)"
+            );
+            prop_assert!(
+                events.iter().all(|e| e.at < horizon),
+                "event scheduled at or past the horizon"
+            );
+            let mut last: std::collections::BTreeMap<u64, FaultKind> =
+                std::collections::BTreeMap::new();
+            for e in events {
+                if let Some(prev) = last.insert(e.node, e.kind) {
+                    prop_assert!(
+                        prev != e.kind,
+                        "node {} repeated {:?} without alternating",
+                        e.node,
+                        e.kind
+                    );
+                } else {
+                    prop_assert!(
+                        e.kind == FaultKind::Crash,
+                        "node {} recovered before ever crashing",
+                        e.node
+                    );
+                }
+            }
+        }
+        let off = FaultConfig { mtbf_secs: 0.0, ..cfg };
+        prop_assert!(
+            faults::schedule(&off, horizon, 200).is_empty(),
+            "mtbf = 0 must be inert"
         );
         Ok(())
     });

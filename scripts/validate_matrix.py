@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate an out/matrix.json table against schema version 2.
+"""Validate an out/matrix.json table against schema version 3.
 
 Used by CI after both matrix smokes (the synthetic quick grid and the
 trace-driven run against the bundled SWF fixture):
@@ -10,6 +10,13 @@ trace-driven run against the bundled SWF fixture):
 Schema v2 = v1 + the per-cell "scan" kind; "runs" are the scan's probes
 (descending) rather than a fixed fraction grid, and "required_nodes" is
 the exact minimal feasible size under the bisecting scan.
+
+Schema v3 = v2 + the fault columns: per cell "baseline_completed" (the
+summed dedicated-cluster completions gating the scan) and
+"fault_overridden" (scenario-level fault knobs, skipped by the anchor
+check); per run "crashes", "crash_kills", "availability" and
+"mean_recovery_s".  With fault injection off every run must report zero
+crashes and availability 1.0 bit-exactly.
 """
 
 import argparse
@@ -18,13 +25,14 @@ import sys
 
 CELL_KEYS = (
     "name", "k", "mix", "policy", "lease_secs", "load", "dedicated_nodes",
-    "scan", "trace_driven", "required_nodes", "required_frac", "runs",
-    "per_dept",
+    "baseline_completed", "scan", "trace_driven", "fault_overridden",
+    "required_nodes", "required_frac", "runs", "per_dept",
 )
 RUN_KEYS = (
     "nodes", "frac", "completed", "killed", "in_flight",
     "shortage_node_secs", "slo_violating_depts", "force_returns",
-    "avg_turnaround_s", "events",
+    "avg_turnaround_s", "events", "crashes", "crash_kills",
+    "availability", "mean_recovery_s",
 )
 
 
@@ -39,12 +47,16 @@ def main() -> int:
                     help="require the K=2 alternating cooperative cell")
     ap.add_argument("--expect-trace-driven", action="store_true",
                     help="every cell must be marked trace_driven")
+    ap.add_argument("--expect-faults", action="store_true",
+                    help="at least one run must have observed a crash")
+    ap.add_argument("--expect-zero-faults", action="store_true",
+                    help="every run must be crash-free with availability 1.0")
     args = ap.parse_args()
 
     with open(args.path) as f:
         doc = json.load(f)
     assert doc["suite"] == "matrix", doc.get("suite")
-    assert doc["schema_version"] == 2, doc.get("schema_version")
+    assert doc["schema_version"] == 3, doc.get("schema_version")
     assert isinstance(doc["quick"], bool)
     cells = doc["cells"]
     assert cells, "no matrix cells recorded"
@@ -65,6 +77,13 @@ def main() -> int:
         for r in c["runs"]:
             for key in RUN_KEYS:
                 assert key in r, f"run missing {key}: {sorted(r)}"
+            assert 0.0 <= r["availability"] <= 1.0, \
+                f"cell {c['name']}: availability {r['availability']}"
+            assert r["crash_kills"] <= r["killed"], \
+                f"cell {c['name']}: crash kills exceed total kills"
+            if args.expect_zero_faults:
+                assert r["crashes"] == 0 and r["availability"] == 1.0, \
+                    f"cell {c['name']}: unexpected faults: {r['crashes']}"
         if c["required_nodes"] is not None:
             assert 1 <= c["required_nodes"] <= c["dedicated_nodes"], c["name"]
             assert c["required_nodes"] in nodes, \
@@ -78,6 +97,9 @@ def main() -> int:
     policies = {c["policy"] for c in cells}
     for p in args.expect_policies:
         assert p in policies, f"missing policy {p}: {sorted(policies)}"
+    if args.expect_faults:
+        assert any(r["crashes"] > 0 for c in cells for r in c["runs"]), \
+            "no run observed a crash despite fault injection"
     if args.expect_anchor_cell:
         assert any(c["k"] == 2 and c["mix"] == "alternating"
                    and c["policy"] == "cooperative" for c in cells), \
