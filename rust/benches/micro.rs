@@ -18,6 +18,15 @@
 //!   amortized with batch-drain of same-timestamp storms — the acceptance
 //!   gate for this rewrite is ≥2× on both probes, read from
 //!   `BENCH_micro.json` against the seed's numbers.
+//! * "far-horizon spread 100k events" and "1e9s-horizon chained far hops"
+//!   compare the PR-7 hierarchical wheel (sim/hier.rs) against the PR-1
+//!   wheel on horizons that overflow the 4096-s window: the spread sits
+//!   entirely in the hier wheel's coarse level (no heap) while the PR-1
+//!   wheel pays O(log n) overflow-heap churn per event — the acceptance
+//!   gate is ≥2× per event on the spread probe.
+//! * "sharded K=64 run" times one ShardedEngine run at workers=1 vs
+//!   workers=auto after *asserting* identical lane digests — the
+//!   multi-core-win probe for the lane-parallel engine (sim/shard.rs).
 //! * "full fig7/fig8 sweep" is timed twice — workers=1 (serial) and
 //!   workers=0 (one per core) — and this bench *asserts* the two produce
 //!   identical RunResult tables before reporting the speedup.
@@ -35,7 +44,9 @@ use phoenix_cloud::experiments::{consolidation, scale};
 use phoenix_cloud::util::timefmt::DAY;
 use phoenix_cloud::provision::PolicySpec;
 use phoenix_cloud::runtime::ForecastEngine;
-use phoenix_cloud::sim::{Engine, EventHandler, Schedule};
+use phoenix_cloud::sim::{
+    Engine, EventHandler, HierWheel, LaneEvent, LaneOut, Schedule, ShardModel, ShardedEngine,
+};
 use phoenix_cloud::stcms::kill::pick_victims;
 use phoenix_cloud::stcms::queue::JobQueue;
 use phoenix_cloud::stcms::scheduler::{RunningJob, Scheduler};
@@ -51,6 +62,79 @@ impl EventHandler<u32> for Chain {
         if ev > 0 {
             sched.after(1, ev - 1);
         }
+    }
+}
+
+/// Drains scheduled events without scheduling more (the spread probes).
+struct Sink;
+
+impl EventHandler<u32> for Sink {
+    fn handle(&mut self, _ev: u32, _sched: &mut Schedule<u32>) {}
+}
+
+/// Chains hops of 10 000 s — each beyond the PR-1 wheel's 4096-s window,
+/// inside the hierarchical wheel's ~194-day span.
+struct FarChain;
+
+impl EventHandler<u32> for FarChain {
+    fn handle(&mut self, ev: u32, sched: &mut Schedule<u32>) {
+        if ev > 0 {
+            sched.after(10_000, ev - 1);
+        }
+    }
+}
+
+/// One lane-addressed event of the sharded-engine probe.
+#[derive(Clone)]
+struct MixEv {
+    lane: usize,
+    step: u32,
+}
+
+impl LaneEvent for MixEv {
+    fn lane(&self) -> Option<usize> {
+        Some(self.lane)
+    }
+}
+
+struct MixLane {
+    digest: u64,
+}
+
+/// ~1 µs of deterministic per-event CPU work, enough for the lane phase's
+/// scoped threads to amortize their synchronization.
+fn mix64(mut x: u64) -> u64 {
+    for _ in 0..1_000 {
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        x ^= x >> 29;
+    }
+    x
+}
+
+struct MixModel;
+
+impl ShardModel for MixModel {
+    type Ev = MixEv;
+    type Lane = MixLane;
+    type Effect = ();
+
+    fn on_lane(&self, lane: &mut MixLane, ev: MixEv, now: u64, out: &mut LaneOut<MixEv, ()>) {
+        lane.digest = mix64(lane.digest ^ now ^ u64::from(ev.step));
+        if ev.step > 0 {
+            out.after(60, MixEv { lane: ev.lane, step: ev.step - 1 });
+        }
+    }
+
+    fn commit(&mut self, _lane: usize, _eff: (), _now: u64, _sched: &mut Schedule<MixEv>) {}
+
+    fn on_global(
+        &mut self,
+        _lanes: &mut Vec<MixLane>,
+        _ev: MixEv,
+        _now: u64,
+        _sched: &mut Schedule<MixEv>,
+    ) {
     }
 }
 
@@ -81,6 +165,97 @@ fn main() {
         eng.run(&mut Chain);
         eng.processed()
     }));
+
+    section("hierarchical wheel vs PR-1 wheel (far horizons)");
+    // The spread probe is the designed win: 100k pending events scattered
+    // over ~174 days sit in the hierarchical wheel's coarse level (the
+    // BinaryHeap is never touched) while the PR-1 wheel funnels all of
+    // them through its overflow heap — O(log n) churn per event. The
+    // printed per-event ratio is the PR-7 acceptance gate (>= 2x).
+    let spread: Vec<u64> = {
+        let mut rng = Rng::new(7);
+        (0..100_000).map(|_| rng.range_u64(0, 15_000_000)).collect()
+    };
+    let hier_ns = {
+        let r = bench("far-horizon spread 100k events: hier wheel", 1, iters(10), || {
+            let mut eng = Engine::with_queue(HierWheel::default());
+            for (i, &t) in spread.iter().enumerate() {
+                eng.schedule(t, i as u32);
+            }
+            eng.run(&mut Sink);
+            eng.processed()
+        });
+        let ns = r.mean_ns;
+        rep.record(r);
+        ns
+    };
+    let wheel_ns = {
+        let r = bench("far-horizon spread 100k events: PR-1 wheel", 1, iters(10), || {
+            let mut eng: Engine<u32> = Engine::new();
+            for (i, &t) in spread.iter().enumerate() {
+                eng.schedule(t, i as u32);
+            }
+            eng.run(&mut Sink);
+            eng.processed()
+        });
+        let ns = r.mean_ns;
+        rep.record(r);
+        ns
+    };
+    println!(
+        "hier-wheel per-event speedup on far-horizon spreads: {:.2}x over the PR-1 wheel \
+         (gate: >= 2x)",
+        wheel_ns / hier_ns.max(1e-9)
+    );
+    // month-long-plus horizons walked hop by hop: every hop leaves the
+    // PR-1 window (heap round-trip + window jump) but stays inside the
+    // hierarchical span (cascade only)
+    rep.record(bench("1e9s-horizon chained far hops: hier wheel", 1, iters(10), || {
+        let mut eng = Engine::with_queue(HierWheel::default());
+        eng.schedule(0, 100_000u32);
+        eng.run(&mut FarChain);
+        eng.processed()
+    }));
+    rep.record(bench("1e9s-horizon chained far hops: PR-1 wheel", 1, iters(10), || {
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(0, 100_000u32);
+        eng.run(&mut FarChain);
+        eng.processed()
+    }));
+
+    section("sharded engine (K=64 lanes, ~1 µs of work per event)");
+    let shard_run = |workers: usize| -> (u64, Vec<u64>) {
+        let lanes: Vec<MixLane> = (0..64).map(|i| MixLane { digest: i as u64 }).collect();
+        let mut eng = ShardedEngine::new(MixModel, lanes, workers);
+        for lane in 0..64 {
+            eng.schedule(0, MixEv { lane, step: 160 });
+        }
+        eng.run();
+        let processed = eng.processed();
+        let (_, lanes) = eng.into_parts();
+        (processed, lanes.into_iter().map(|l| l.digest).collect())
+    };
+    // determinism gate: every worker layout must produce identical lanes
+    let shard_oracle = shard_run(1);
+    assert_eq!(shard_oracle, shard_run(2), "sharded run diverged between 1 and 2 workers");
+    assert_eq!(shard_oracle, shard_run(0), "sharded run diverged between serial and auto");
+    let sharded_serial_ns = {
+        let r = bench("sharded K=64 run: workers=1", 1, iters(5).max(2), || shard_run(1).0);
+        let ns = r.mean_ns;
+        rep.record(r);
+        ns
+    };
+    let sharded_auto_ns = {
+        let r = bench("sharded K=64 run: workers=auto", 1, iters(5).max(2), || shard_run(0).0);
+        let ns = r.mean_ns;
+        rep.record(r);
+        ns
+    };
+    println!(
+        "sharded K=64 speedup: {:.2}x with workers=auto over workers=1 \
+         (identical lane digests verified)",
+        sharded_serial_ns / sharded_auto_ns.max(1e-9)
+    );
 
     section("cluster ledger");
     rep.record(bench("1M transfers", 1, iters(10), || {

@@ -15,6 +15,7 @@ use crate::cluster::DeptKind;
 use crate::faults::FaultConfig;
 use crate::provision::mixed::{PolicyChoice, TierRule};
 use crate::provision::policy::{DeptProfile, PolicySpec};
+use crate::sim::EngineKind;
 use crate::trace::hpc_synth::HpcTraceConfig;
 use crate::trace::web_synth::WebTraceConfig;
 use crate::util::json::Json;
@@ -258,6 +259,13 @@ pub struct ScenarioSpec {
     pub fault_seed: Option<u64>,
     /// Noisy-neighbor efficiency override in (0, 1].
     pub efficiency: Option<f64>,
+    /// Number of trailing roster members that join mid-run at `join_at`
+    /// instead of booting with the cluster (runtime affiliation axis).
+    /// Must leave at least one boot department: `joiners < k`.
+    pub joiners: usize,
+    /// Join time (trace seconds) for the joining departments; must be
+    /// positive when `joiners > 0`.
+    pub join_at: u64,
 }
 
 impl ScenarioSpec {
@@ -336,6 +344,13 @@ pub struct ExperimentConfig {
     /// ablations): 0 = one per available core, 1 = serial. Parallel runs
     /// return results in configuration order, bit-identical to serial.
     pub workers: usize,
+    /// Event-queue engine behind every virtual-time run (`[experiments]
+    /// engine` / `--engine`). All variants are proven bit-identical by
+    /// `tests/engine_differential.rs`, so this is a cost-model choice:
+    /// `wheel` (the long-standing default), `hier` (far horizons stay
+    /// heap-free), `sharded` (per-department lane storage), `reference`
+    /// (the heap oracle).
+    pub engine: EngineKind,
     pub hpc: HpcTraceConfig,
     pub web: WebTraceConfig,
     /// N-department roster (`[[department]]`). Empty = the paper's
@@ -378,6 +393,7 @@ impl Default for ExperimentConfig {
             ws_sample_period: 20,
             realloc_delay: 5,
             workers: 0,
+            engine: EngineKind::default(),
             hpc: HpcTraceConfig::default(),
             web: WebTraceConfig::default(),
             departments: Vec::new(),
@@ -517,6 +533,17 @@ impl ExperimentConfig {
                     bail!("scenario {label}: trace path must not be empty");
                 }
             }
+            if s.joiners >= s.k {
+                bail!(
+                    "scenario {label}: joiners ({}) must leave at least one boot \
+                     department (k = {})",
+                    s.joiners,
+                    s.k
+                );
+            }
+            if s.joiners > 0 && s.join_at == 0 {
+                bail!("scenario {label}: joiners > 0 needs join_at > 0");
+            }
             // fault overrides validate through the same rules as [faults]
             s.fault_config(&self.faults)
                 .validate()
@@ -572,6 +599,10 @@ impl ExperimentConfig {
         if let Some(x) = doc.get("experiments") {
             if let Some(n) = x.get("workers").and_then(Json::as_u64) {
                 self.workers = n as usize;
+            }
+            if let Some(v) = typed_str(x, "engine", "[experiments]")? {
+                self.engine =
+                    EngineKind::parse(v).map_err(|e| anyhow::anyhow!("[experiments]: {e}"))?;
             }
         }
         if let Some(arr) = doc.get("department").and_then(Json::as_arr) {
@@ -668,6 +699,8 @@ impl ExperimentConfig {
                 let mttr = typed_f64(s, "mttr", &ctx)?;
                 let fault_seed = typed_u64(s, "fault_seed", &ctx)?;
                 let efficiency = typed_f64(s, "efficiency", &ctx)?;
+                let joiners = typed_u64(s, "joiners", &ctx)?.unwrap_or(0) as usize;
+                let join_at = typed_u64(s, "join_at", &ctx)?.unwrap_or(0);
                 scenarios.push(ScenarioSpec {
                     name,
                     k,
@@ -682,6 +715,8 @@ impl ExperimentConfig {
                     mttr,
                     fault_seed,
                     efficiency,
+                    joiners,
+                    join_at,
                 });
             }
             self.scenarios = scenarios;
@@ -797,6 +832,60 @@ mod tests {
         cfg.apply_toml(&doc).unwrap();
         assert_eq!(cfg.workers, 4);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_experiments_engine() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.engine, EngineKind::Wheel, "seed default is the PR-1 wheel");
+        let doc = crate::util::toml::parse("[experiments]\nengine = \"hier\"\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Hier);
+        cfg.validate().unwrap();
+        for (text, kind) in [
+            ("[experiments]\nengine = \"reference\"\n", EngineKind::Reference),
+            ("[experiments]\nengine = \"wheel\"\n", EngineKind::Wheel),
+            ("[experiments]\nengine = \"sharded\"\n", EngineKind::Sharded),
+        ] {
+            let doc = crate::util::toml::parse(text).unwrap();
+            cfg.apply_toml(&doc).unwrap();
+            assert_eq!(cfg.engine, kind);
+        }
+        // mistyped or unknown engines error instead of silently defaulting
+        for bad in ["[experiments]\nengine = 3\n", "[experiments]\nengine = \"quantum\"\n"] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn scenario_join_axis_parses_and_validates() {
+        let doc = crate::util::toml::parse(
+            "[[scenario]]\nname = \"join-sweep\"\nk = 4\njoiners = 2\njoin_at = 86400\n\n\
+             [[scenario]]\nk = 2\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!((cfg.scenarios[0].joiners, cfg.scenarios[0].join_at), (2, 86_400));
+        assert_eq!((cfg.scenarios[1].joiners, cfg.scenarios[1].join_at), (0, 0));
+        // every department joining leaves nobody to boot the cluster
+        cfg.scenarios[0].joiners = 4;
+        assert!(cfg.validate().is_err(), "joiners == k");
+        cfg.scenarios[0].joiners = 1;
+        cfg.scenarios[0].join_at = 0;
+        assert!(cfg.validate().is_err(), "joiners without a join time");
+        cfg.scenarios[0].join_at = 60;
+        cfg.validate().unwrap();
+        // mistyped joiner fields error instead of silently defaulting
+        for bad in [
+            "[[scenario]]\nk = 2\njoiners = \"two\"\n",
+            "[[scenario]]\nk = 2\njoin_at = -5\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]
@@ -967,6 +1056,8 @@ mod tests {
             mttr: None,
             fault_seed: None,
             efficiency: None,
+            joiners: 0,
+            join_at: 0,
         });
         assert!(cfg.validate().is_err(), "negative scenario correlation");
         cfg.scenarios[0].correlation = None;
@@ -1035,6 +1126,8 @@ mod tests {
             mttr: None,
             fault_seed: None,
             efficiency: None,
+            joiners: 0,
+            join_at: 0,
         });
         assert!(cfg.validate().is_err(), "negative scenario mtbf");
         cfg.scenarios[0].mtbf = Some(0.0);

@@ -21,7 +21,10 @@ use crate::config::{Configuration, ExperimentConfig};
 use crate::faults::{self, FaultKind};
 use crate::metrics::Registry;
 use crate::provision::{two_dept_profiles, DeptProfile, PolicySpec, ProvisionPolicy, Rps};
-use crate::sim::{Engine, EventHandler, Schedule, SimTime};
+use crate::sim::{
+    Engine, EngineKind, EventHandler, EventQueue, HierWheel, LaneEvent, LaneQueue, Schedule,
+    SimTime,
+};
 use crate::stcms::StServer;
 use crate::workload::{Job, JobState};
 use crate::wscms::{WsAction, WsServer};
@@ -72,6 +75,24 @@ enum Ev {
     /// Department `dept` joins the shared cluster (runtime affiliation;
     /// seeded ahead of the joiner's workload events at the same instant).
     DeptJoin { dept: u16 },
+}
+
+/// Lane routing for dept-addressed events: workload and grant events
+/// belong to their department's lane; lease ticks, faults, and joins are
+/// cluster-wide barriers. This is what `--engine sharded` keys the
+/// per-department [`LaneQueue`] storage on (the consolidation *handler*
+/// stays serial — grants flow through the shared RPS ledger within a
+/// timestamp; see ARCHITECTURE.md "Engine hierarchy & determinism proof").
+impl LaneEvent for Ev {
+    fn lane(&self) -> Option<usize> {
+        match self {
+            Ev::Submit { dept, .. }
+            | Ev::Finish { dept, .. }
+            | Ev::WsDemand { dept, .. }
+            | Ev::GrantArrive { dept, .. } => Some(*dept as usize),
+            Ev::LeaseTick | Ev::NodeCrash | Ev::NodeRecover | Ev::DeptJoin { .. } => None,
+        }
+    }
 }
 
 /// A department joining the shared cluster mid-run (virtual-time runtime
@@ -399,9 +420,24 @@ impl ConsolidationSim {
     /// the provisioning policy's profiles disagree with the departments'
     /// actual workloads (a mis-kinded roster); the seed code panicked
     /// here instead.
-    pub fn run(mut self) -> anyhow::Result<RunResult> {
-        let mut engine: Engine<Ev> = Engine::new();
+    ///
+    /// The event queue behind the run is selected by `cfg.engine`
+    /// (`--engine`); all four are proven bit-identical by
+    /// `tests/engine_differential.rs`, so this is purely a cost-model
+    /// choice.
+    pub fn run(self) -> anyhow::Result<RunResult> {
+        match self.cfg.engine {
+            EngineKind::Reference => self.run_with(Engine::new_reference()),
+            EngineKind::Wheel => self.run_with(Engine::new()),
+            EngineKind::Hier => self.run_with(Engine::with_queue(HierWheel::default())),
+            EngineKind::Sharded => self.run_with(Engine::with_queue(LaneQueue::default())),
+        }
+    }
 
+    fn run_with<Q: EventQueue<Ev>>(
+        mut self,
+        mut engine: Engine<Ev, Q>,
+    ) -> anyhow::Result<RunResult> {
         // boot: each service department *present at boot* gets its
         // first-sample demand, the batch departments split the rest
         for i in 0..self.depts.len() {

@@ -44,8 +44,9 @@
 //!
 //! Configs may pin cells explicitly with `[[scenario]]` tables
 //! ([`ScenarioSpec`], including per-scenario `trace` / `correlation`
-//! overrides); `phoenixd matrix` then runs those instead of the built-in
-//! grid. `phoenixd matrix --kmax 8 --quick` is the CI smoke grid.
+//! overrides and the join axis — `joiners` trailing departments arriving
+//! at `join_at` instead of boot); `phoenixd matrix` then runs those
+//! instead of the built-in grid. `phoenixd matrix --kmax 8 --quick` is the CI smoke grid.
 
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
@@ -299,6 +300,13 @@ pub struct MatrixCell {
     /// 0 when the policy carries no lease.
     pub lease_secs: u64,
     pub load: f64,
+    /// Trailing roster members that join mid-run (`[[scenario]] joiners`);
+    /// 0 = every department boots at t = 0. Joiner cells legitimately
+    /// diverge from the fig7/fig8 anchor and [`verify_anchor`] skips
+    /// them, exactly like trace-driven ones.
+    pub joiners: usize,
+    /// The virtual second the joiners arrive (0 when `joiners` = 0).
+    pub join_at: u64,
     /// Σ department quotas — the K-dedicated-clusters cost.
     pub dedicated_nodes: u64,
     /// Σ of the K departments' completions when each runs on its *own*
@@ -356,6 +364,10 @@ struct CellPlan {
     k: usize,
     policy: PolicyAxis,
     scan: SizeScan,
+    /// Trailing members of the K-prefix that join at `join_at` instead of
+    /// booting (the `[[scenario]]` join axis); the grid always uses 0.
+    joiners: usize,
+    join_at: u64,
     /// The cell's effective fault regime (base `[faults]` with any
     /// per-scenario overrides folded in).
     faults: FaultConfig,
@@ -396,7 +408,21 @@ type ProbeMap = BTreeMap<u64, (f64, RunResult)>;
 /// table, descending.
 fn run_cell(rosters: &[Roster], c: &CellPlan) -> Result<MatrixCell> {
     let roster = &rosters[c.roster];
-    let specs = &roster.specs[..c.k];
+    if c.joiners >= c.k {
+        bail!("cell '{}' would have no boot departments", c.name);
+    }
+    // The join axis mutates a *local* copy of the K-prefix: the trailing
+    // `joiners` members join at `join_at` instead of booting, leaving the
+    // shared roster prefix-stable for sibling cells. Traces are looked up
+    // by original spec index, so a joiner replays exactly the demand it
+    // would have had from boot, and `run_dedicated` ignores `join_at`, so
+    // the completion gate below is the same dedicated sum with or without
+    // joiners.
+    let mut specs: Vec<DeptSpec> = roster.specs[..c.k].to_vec();
+    for spec in specs.iter_mut().rev().take(c.joiners) {
+        spec.join_at = c.join_at;
+    }
+    let specs = &specs[..];
     let dedicated: u64 = specs.iter().map(|s| s.quota).sum();
     if dedicated == 0 {
         bail!("cell '{}' has no nodes to scan", c.name);
@@ -550,6 +576,8 @@ fn run_cell(rosters: &[Roster], c: &CellPlan) -> Result<MatrixCell> {
         policy: c.policy.name().to_string(),
         lease_secs: c.policy.lease_secs(),
         load: roster.load,
+        joiners: c.joiners,
+        join_at: c.join_at,
         dedicated_nodes: dedicated,
         baseline_completed,
         fault_overridden: c.fault_overridden,
@@ -602,6 +630,8 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
                         k,
                         policy,
                         scan: axes.scan.clone(),
+                        joiners: 0,
+                        join_at: 0,
                         faults: base.faults.clone(),
                         fault_overridden: false,
                     });
@@ -621,7 +651,10 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
 /// Fault-regime overrides (`mtbf` / `mttr` / `fault_seed` /
 /// `efficiency`) apply per cell at simulation time and never touch the
 /// traces (the flash-crowd replay is a base-config knob), so they do
-/// not split the shared rosters.
+/// not split the shared rosters. The join axis (`joiners` / `join_at`,
+/// deferring the trailing roster members' arrival) likewise applies
+/// inside [`run_cell`] on a local copy of the K-prefix, so joiner cells
+/// share rosters with their boot-time siblings.
 pub fn run_scenarios(
     base: &ExperimentConfig,
     scenarios: &[ScenarioSpec],
@@ -670,6 +703,8 @@ pub fn run_scenarios(
             k: s.k,
             policy,
             scan,
+            joiners: s.joiners,
+            join_at: s.join_at,
             faults: s.fault_config(&base.faults),
             fault_overridden: s.mtbf.is_some()
                 || s.mttr.is_some()
@@ -688,7 +723,9 @@ pub fn run_scenarios(
 /// `[trace]` SWF archive or ρ > 0, from the base config *or* a
 /// per-scenario override — `MatrixCell::trace_driven` records which),
 /// `Err` on any numeric divergence. Cells whose fault regime was
-/// overridden by a `[[scenario]]` are skipped the same way; the *base*
+/// overridden by a `[[scenario]]`, and cells with mid-run joiners
+/// (`joiners > 0` defers a department the fig7/fig8 pair booted at
+/// t = 0), are skipped the same way; the *base*
 /// `[faults]` config needs no skip — the deterministic injector gives
 /// the matrix probe and the sweep's DC run the same fault schedule, so
 /// the anchor holds bit for bit even on a faulty base config.
@@ -700,6 +737,7 @@ pub fn verify_anchor(base: &ExperimentConfig, cells: &[MatrixCell]) -> Result<bo
         c.k == 2
             && c.mix == RosterMix::Alternating
             && c.policy == "cooperative"
+            && c.joiners == 0
             && !c.trace_driven
             && !c.fault_overridden
             && c.load.to_bits() == base.hpc.target_load.to_bits()
@@ -778,6 +816,8 @@ fn cell_json(c: &MatrixCell) -> Json {
         ("policy", Json::str(&c.policy)),
         ("lease_secs", Json::num(c.lease_secs as f64)),
         ("load", Json::num(c.load)),
+        ("joiners", Json::num(c.joiners as f64)),
+        ("join_at", Json::num(c.join_at as f64)),
         ("dedicated_nodes", Json::num(c.dedicated_nodes as f64)),
         ("baseline_completed", Json::num(c.baseline_completed as f64)),
         ("scan", Json::str(&c.scan)),
@@ -793,15 +833,16 @@ fn cell_json(c: &MatrixCell) -> Json {
     ])
 }
 
-/// The machine-readable table (`out/matrix.json`): schema version 3
-/// (version 2 + the per-cell dedicated-completion gate
+/// The machine-readable table (`out/matrix.json`): schema version 4
+/// (version 3 + the per-cell join axis `joiners` / `join_at`; version 3
+/// = version 2 + the per-cell dedicated-completion gate
 /// `baseline_completed` and `fault_overridden` flag, and per-run fault
 /// columns `crashes` / `crash_kills` / `availability` /
 /// `mean_recovery_s`).
 pub fn matrix_json(cells: &[MatrixCell], quick: bool) -> Json {
     Json::obj(vec![
         ("suite", Json::str("matrix")),
-        ("schema_version", Json::num(3.0)),
+        ("schema_version", Json::num(4.0)),
         ("quick", Json::Bool(quick)),
         ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
     ])
@@ -822,7 +863,7 @@ fn csv_field(s: &str) -> String {
 /// [`crate::trace::csv::Table`].
 pub fn matrix_csv(cells: &[MatrixCell]) -> String {
     let mut out = String::from(
-        "name,k,mix,policy,lease_secs,load,dedicated_nodes,baseline_completed,\
+        "name,k,mix,policy,lease_secs,load,joiners,join_at,dedicated_nodes,baseline_completed,\
          required_nodes,required_frac,\
          completed,killed,in_flight,shortage_node_secs,slo_violating_depts,force_returns,\
          avg_turnaround_s,events,crashes,crash_kills,availability,mean_recovery_s\n",
@@ -830,13 +871,15 @@ pub fn matrix_csv(cells: &[MatrixCell]) -> String {
     for c in cells {
         let d = c.decisive();
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.1},{},{},{},{:.6},{:.1}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.1},{},{},{},{:.6},{:.1}\n",
             csv_field(&c.name),
             c.k,
             c.mix.name(),
             c.policy,
             c.lease_secs,
             c.load,
+            c.joiners,
+            c.join_at,
             c.dedicated_nodes,
             c.baseline_completed,
             c.required_nodes.map(|n| n.to_string()).unwrap_or_default(),
@@ -1098,6 +1141,8 @@ mod tests {
                 mttr: None,
                 fault_seed: None,
                 efficiency: None,
+                joiners: 0,
+                join_at: 0,
             },
             ScenarioSpec {
                 name: "portal-farm".into(),
@@ -1113,6 +1158,8 @@ mod tests {
                 mttr: None,
                 fault_seed: None,
                 efficiency: None,
+                joiners: 0,
+                join_at: 0,
             },
         ];
         let cells = run_scenarios(&cfg, &scenarios).unwrap();
@@ -1161,6 +1208,8 @@ mod tests {
             mttr: None,
             fault_seed: None,
             efficiency: None,
+            joiners: 0,
+            join_at: 0,
         }];
         let cells = run_scenarios(&cfg, &scenarios).unwrap();
         // the fixture holds 22 usable jobs — the synth trace holds 150
@@ -1250,6 +1299,8 @@ mod tests {
             mttr: faulty.then_some(600.0),
             fault_seed: None,
             efficiency: None,
+            joiners: 0,
+            join_at: 0,
         };
         let scenarios =
             vec![scen("faulty", "cooperative", true), scen("healthy", "static", false)];
@@ -1280,6 +1331,71 @@ mod tests {
         );
     }
 
+    /// The `[[scenario]]` join axis reaches the cells: joiner scenarios
+    /// defer the trailing departments' workload (the tables move), the
+    /// no-joiner sibling stays bit-identical to a run without the axis
+    /// (the shared roster is never mutated), and the anchor check skips
+    /// joiner cells instead of comparing them.
+    #[test]
+    fn scenario_join_axis_reaches_the_cells() {
+        let cfg = small_cfg();
+        let scen = |name: &str, joiners: usize, join_at: u64| ScenarioSpec {
+            name: name.into(),
+            k: 3,
+            mix: RosterMix::Alternating,
+            policy_kind: "cooperative".into(),
+            lease_secs: 3600,
+            load: None,
+            frac: Some(1.0),
+            trace: None,
+            correlation: None,
+            mtbf: None,
+            mttr: None,
+            fault_seed: None,
+            efficiency: None,
+            joiners,
+            join_at,
+        };
+        let cells = run_scenarios(
+            &cfg,
+            &[scen("late-pair", 2, 6 * 3600), scen("boot-roster", 0, 0)],
+        )
+        .unwrap();
+        assert_eq!((cells[0].joiners, cells[0].join_at), (2, 6 * 3600));
+        assert_eq!((cells[1].joiners, cells[1].join_at), (0, 0));
+        // joiners never move the dedicated cost or the completion gate's
+        // construction (run_dedicated boots everyone)
+        assert_eq!(cells[0].dedicated_nodes, cells[1].dedicated_nodes);
+        assert_eq!(cells[0].baseline_completed, cells[1].baseline_completed);
+        // deferring two departments' arrival must move the full-cost run
+        assert_ne!(
+            cells[0].runs[0].events, cells[1].runs[0].events,
+            "join axis did not reach the simulation"
+        );
+        // the no-joiner cell is bit-identical with or without joiner
+        // siblings in the list (shared rosters stay prefix-stable)
+        let alone = run_scenarios(&cfg, &[scen("boot-roster", 0, 0)]).unwrap();
+        assert_eq!(
+            cell_json(&cells[1]).to_string(),
+            cell_json(&alone[0]).to_string(),
+            "joiner sibling perturbed the no-joiner cell"
+        );
+        // the anchor check skips joiner cells: a K=2 anchor-shaped joiner
+        // cell running at exactly base.total_nodes must be skipped, not
+        // compared (it legitimately diverges from the fig7/fig8 pair)
+        let mut k2 = scen("late-k2", 1, 6 * 3600);
+        k2.k = 2;
+        let k2_cells = run_scenarios(&cfg, &[k2]).unwrap();
+        let mut anchor_base = cfg.clone();
+        anchor_base.total_nodes = k2_cells[0].dedicated_nodes;
+        assert!(
+            !verify_anchor(&anchor_base, &k2_cells).unwrap(),
+            "anchor must skip joiner cells"
+        );
+        // a joiner count that leaves no boot department fails loudly
+        assert!(run_scenarios(&cfg, &[scen("no-boot", 3, 600)]).is_err());
+    }
+
     #[test]
     fn json_table_has_the_ci_schema() {
         let cfg = small_cfg();
@@ -1289,7 +1405,7 @@ mod tests {
         let cells = run_matrix(&cfg, &axes).unwrap();
         let doc = Json::parse(&matrix_json(&cells, true).to_string()).unwrap();
         assert_eq!(doc.get("suite").unwrap().as_str(), Some("matrix"));
-        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(3));
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(4));
         assert_eq!(doc.get("quick").unwrap().as_bool(), Some(true));
         let cells_j = doc.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells_j.len(), cells.len());
@@ -1307,6 +1423,8 @@ mod tests {
                 "policy",
                 "lease_secs",
                 "load",
+                "joiners",
+                "join_at",
                 "dedicated_nodes",
                 "baseline_completed",
                 "scan",

@@ -55,6 +55,12 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.hpc.target_load = args.get_f64("load", cfg.hpc.target_load)?;
     cfg.workers = args.get_u64("workers", cfg.workers as u64)? as usize;
+    // event-queue engine selection; every variant is proven bit-identical
+    // by tests/engine_differential.rs, so this is purely a cost-model knob
+    if let Some(engine) = args.get("engine") {
+        cfg.engine = phoenix_cloud::sim::EngineKind::parse(engine)
+            .map_err(|e| anyhow::anyhow!("--engine: {e}"))?;
+    }
     // trace-driven rosters: a real SWF archive for the batch departments
     // and/or demand correlation for the service departments. Only the
     // roster-building subcommands (matrix / scale / depts) consume these —
@@ -127,7 +133,9 @@ serve     realtime coordinator: the config's [[department]] roster (default:\n  
           (--predictive for the PJRT autoscaler on the first service dept)\n  \
 tracegen  emit a synthetic trace (--kind hpc|web)\n  \
 validate  parse + validate a config file\n\
-common flags: --config FILE --seed N --load F --workers N (0 = all cores) --verbose\n\
+common flags: --config FILE --seed N --load F --workers N (0 = all cores) --verbose\n  \
+--engine reference|wheel|hier|sharded (event-queue engine; bit-identical,\n  \
+cost model only — see tests/engine_differential.rs)\n\
 trace flags (matrix/scale/depts rosters only; fig5/fig7/fig8/sweep keep the\n\
 paper's synthetic traces): --swf FILE --procs-per-node N --correlation R\n\
 fault flags (overlay the [faults] config section; mtbf 0 = injection off):\n  \

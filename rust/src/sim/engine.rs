@@ -23,6 +23,17 @@ pub struct Schedule<E> {
 }
 
 impl<E> Schedule<E> {
+    /// Build a handle over an existing pending buffer (the engines thread
+    /// one scratch buffer through every dispatch to avoid allocation).
+    pub(crate) fn new(now: SimTime, pending: Vec<(SimTime, E)>) -> Self {
+        Self { now, pending }
+    }
+
+    /// Hand the pending buffer back to the engine that owns it.
+    pub(crate) fn into_pending(self) -> Vec<(SimTime, E)> {
+        self.pending
+    }
+
     /// Current simulation time.
     pub fn now(&self) -> SimTime {
         self.now

@@ -1,0 +1,466 @@
+//! Hierarchical timing wheel: two lazily-rotated levels plus an overflow
+//! heap, so month-long horizons never touch the `BinaryHeap`.
+//!
+//! Layout: level 0 is a window of [`SLOTS`] one-second slots (exactly the
+//! PR-1 wheel); level 1 is a ring of [`SLOTS`] coarse slots, each covering
+//! [`SLOTS`] seconds (~68 min), for a combined span of [`L1_SPAN`] seconds
+//! (~194 days). The L0 window is always aligned to an L1 slot boundary:
+//! `l0_start = l1_base + k·SLOTS` for the most recently cascaded L1 slot
+//! `k`. When L0 drains, the next occupied L1 slot *cascades* — its events
+//! are distributed into L0 slots and the window advances to that slot's
+//! range. Only events farther than ~194 days (or post-jump stragglers)
+//! ever reach the overflow heap.
+//!
+//! FIFO proof sketch (the differential harness in
+//! `tests/engine_differential.rs` checks it exhaustively): the engine
+//! assigns strictly increasing `seq`s, and every path appends in `seq`
+//! order — direct pushes append; an L1 slot's vec is in push order, so for
+//! any fixed timestamp its subsequence is `seq`-ascending, and cascading
+//! distributes the vec in that order; heap migration pops in `(time, seq)`
+//! order and always happens while L1 is empty, so migrated events precede
+//! any later direct push (whose `seq` is necessarily larger). Slot and
+//! batch vectors recycle their capacity (the cascade hands each drained
+//! L1 vec back to its slot), so steady state allocates nothing.
+//!
+//! Alignment invariant: `l0_start = l1_base + (cursor1 − 1)·SLOTS`
+//! whenever pushes can observe the wheel, which makes any in-span push
+//! beyond the L0 window land at an L1 index `≥ cursor1` — the L1 cursor
+//! never rewinds and each coarse slot cascades at most once per lap.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::engine::{Entry, EventQueue};
+use super::SimTime;
+
+/// Slots per level (both levels). L0 slots are one second; L1 slots are
+/// `SLOTS` seconds.
+const SLOTS: usize = 4096;
+const WORDS: usize = SLOTS / 64;
+/// Seconds covered by L0 + L1 together from `l1_base`.
+const L1_SPAN: u64 = (SLOTS as u64) * (SLOTS as u64);
+
+/// The hierarchical wheel. See the module docs for the invariants.
+pub struct HierWheel<E> {
+    /// `l0[i]` holds the events at time `l0_start + i`, in seq order.
+    l0: Vec<Vec<E>>,
+    bits0: [u64; WORDS],
+    /// Next L0 slot to inspect; rewinds only onto provably-empty slots.
+    cursor0: usize,
+    /// Simulation time of L0 slot 0 (always `l1_base + k·SLOTS`).
+    l0_start: SimTime,
+    /// `l1[j]` holds the events in `[l1_base + j·SLOTS, +SLOTS)`, in push
+    /// order, each tagged with its exact time for the cascade.
+    l1: Vec<Vec<(SimTime, E)>>,
+    bits1: [u64; WORDS],
+    /// Next L1 slot to consider cascading; never rewinds (see module doc).
+    cursor1: usize,
+    /// Simulation time of L1 slot 0 (aligned to a `SLOTS` boundary).
+    l1_base: SimTime,
+    /// Batch being drained, reversed so `pop` takes from the back in FIFO
+    /// order without shifting.
+    active: Vec<E>,
+    active_time: SimTime,
+    /// Beyond-span events and post-jump stragglers, in `(time, seq)` order.
+    overflow: BinaryHeap<Reverse<Entry<E>>>,
+    len: usize,
+}
+
+impl<E> Default for HierWheel<E> {
+    fn default() -> Self {
+        Self {
+            l0: std::iter::repeat_with(Vec::new).take(SLOTS).collect(),
+            bits0: [0; WORDS],
+            cursor0: 0,
+            l0_start: 0,
+            l1: std::iter::repeat_with(Vec::new).take(SLOTS).collect(),
+            bits1: [0; WORDS],
+            // L1 slot 0 is "pre-cascaded" into the initial L0 window
+            // ([0, SLOTS)), keeping the alignment invariant from the start.
+            cursor1: 1,
+            l1_base: 0,
+            active: Vec::new(),
+            active_time: 0,
+            overflow: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+}
+
+/// First set bit at or after `from`, via a word scan.
+fn scan_bits(bits: &[u64; WORDS], from: usize) -> Option<usize> {
+    if from >= SLOTS {
+        return None;
+    }
+    let mut w = from / 64;
+    let mut word = bits[w] & (!0u64 << (from % 64));
+    loop {
+        if word != 0 {
+            return Some(w * 64 + word.trailing_zeros() as usize);
+        }
+        w += 1;
+        if w == WORDS {
+            return None;
+        }
+        word = bits[w];
+    }
+}
+
+impl<E> HierWheel<E> {
+    #[inline]
+    fn set_bit0(&mut self, i: usize) {
+        self.bits0[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    fn clear_bit0(&mut self, i: usize) {
+        self.bits0[i / 64] &= !(1 << (i % 64));
+    }
+
+    #[inline]
+    fn set_bit1(&mut self, i: usize) {
+        self.bits1[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    fn clear_bit1(&mut self, i: usize) {
+        self.bits1[i / 64] &= !(1 << (i % 64));
+    }
+
+    /// Distribute L1 slot `j` into L0 and advance the window to its range.
+    /// Precondition: L0 is empty (its scan just failed).
+    fn cascade(&mut self, j: usize) {
+        let slot_start = self.l1_base + (j as u64) * SLOTS as u64;
+        let mut batch = std::mem::take(&mut self.l1[j]);
+        self.clear_bit1(j);
+        self.l0_start = slot_start;
+        self.cursor0 = 0;
+        self.cursor1 = j + 1;
+        for (time, ev) in batch.drain(..) {
+            debug_assert!(time >= slot_start && time - slot_start < SLOTS as u64);
+            let idx = (time - slot_start) as usize;
+            self.l0[idx].push(ev);
+            self.set_bit0(idx);
+        }
+        // hand the drained allocation back to the slot (capacity recycles)
+        self.l1[j] = batch;
+    }
+
+    /// Time and payload of the head event without removing it (positions
+    /// the cursors exactly like [`EventQueue::next_time`]).
+    pub fn peek(&mut self) -> Option<(SimTime, &E)> {
+        let t = self.next_time()?;
+        if !self.active.is_empty() {
+            return self.active.last().map(|ev| (t, ev));
+        }
+        if let Some(Reverse(e)) = self.overflow.peek() {
+            if e.time < self.l0_start {
+                return Some((e.time, &e.ev));
+            }
+        }
+        self.l0[self.cursor0].first().map(|ev| (t, ev))
+    }
+}
+
+impl<E> EventQueue<E> for HierWheel<E> {
+    fn push(&mut self, time: SimTime, seq: u64, ev: E) {
+        self.len += 1;
+        if time < self.l0_start {
+            // the window already moved past `time` (idle jump between
+            // runs); deliver through the overflow heap, which next_time
+            // checks before both levels
+            self.overflow.push(Reverse(Entry { time, seq, ev }));
+            return;
+        }
+        let offset = time - self.l0_start;
+        if offset < SLOTS as u64 {
+            let idx = offset as usize;
+            self.l0[idx].push(ev);
+            self.set_bit0(idx);
+            if idx < self.cursor0 {
+                // every slot in [idx, cursor0) was scanned empty
+                self.cursor0 = idx;
+            }
+            return;
+        }
+        // beyond the L0 window; `time >= l0_start` makes the L1 offset
+        // well-defined, and the alignment invariant makes j >= cursor1
+        if time - self.l1_base < L1_SPAN {
+            let j = ((time - self.l1_base) / SLOTS as u64) as usize;
+            debug_assert!(j >= self.cursor1, "L1 cursor would rewind");
+            self.l1[j].push((time, ev));
+            self.set_bit1(j);
+            return;
+        }
+        self.overflow.push(Reverse(Entry { time, seq, ev }));
+    }
+
+    fn next_time(&mut self) -> Option<SimTime> {
+        loop {
+            if !self.active.is_empty() {
+                return Some(self.active_time);
+            }
+            // stragglers are strictly earlier than everything in either
+            // level (L0 times >= l0_start, L1 times >= l0_start + SLOTS)
+            if let Some(Reverse(e)) = self.overflow.peek() {
+                if e.time < self.l0_start {
+                    return Some(e.time);
+                }
+            }
+            if let Some(idx) = scan_bits(&self.bits0, self.cursor0) {
+                self.cursor0 = idx;
+                return Some(self.l0_start + idx as u64);
+            }
+            // L0 drained: cascade the next occupied coarse slot
+            if let Some(j) = scan_bits(&self.bits1, self.cursor1) {
+                self.cascade(j);
+                continue; // the L0 scan now finds a slot
+            }
+            // both levels drained: jump to the earliest overflow event
+            // (aligned down to a coarse-slot boundary) and migrate
+            // everything within the new span into L1
+            let head_time = match self.overflow.peek() {
+                Some(Reverse(e)) => e.time,
+                None => return None,
+            };
+            self.l1_base = head_time - head_time % SLOTS as u64;
+            self.l0_start = self.l1_base;
+            self.cursor0 = 0;
+            self.cursor1 = 0;
+            while let Some(Reverse(e)) = self.overflow.peek() {
+                // heap pops ascending from the new base, so the offset
+                // cannot underflow; comparing offsets (never computing
+                // `l1_base + L1_SPAN`) keeps times near `SimTime::MAX`
+                // deliverable
+                if e.time - self.l1_base >= L1_SPAN {
+                    break;
+                }
+                let Reverse(e) = self.overflow.pop().unwrap();
+                let j = ((e.time - self.l1_base) / SLOTS as u64) as usize;
+                self.l1[j].push((e.time, e.ev));
+                self.set_bit1(j);
+            }
+            // loop: the L1 scan finds the head's slot and cascades it,
+            // restoring the alignment invariant before returning
+        }
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, E)> {
+        loop {
+            if let Some(ev) = self.active.pop() {
+                self.len -= 1;
+                return Some((self.active_time, ev));
+            }
+            let t = self.next_time()?;
+            if let Some(Reverse(e)) = self.overflow.peek() {
+                if e.time < self.l0_start {
+                    let Reverse(e) = self.overflow.pop().unwrap();
+                    self.len -= 1;
+                    return Some((e.time, e.ev));
+                }
+            }
+            // cursor0 sits on the non-empty slot for `t`: swap the whole
+            // slot into the active batch (batch-drain, capacity recycles)
+            std::mem::swap(&mut self.l0[self.cursor0], &mut self.active);
+            self.active.reverse();
+            self.active_time = t;
+            self.clear_bit0(self.cursor0);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = SLOTS as u64;
+
+    fn drain(w: &mut HierWheel<&'static str>) -> Vec<(SimTime, &'static str)> {
+        let mut out = Vec::new();
+        while let Some(x) = w.pop() {
+            out.push(x);
+        }
+        out
+    }
+
+    #[test]
+    fn orders_within_window_and_fifo_on_ties() {
+        let mut w = HierWheel::default();
+        w.push(20, 1, "a");
+        w.push(10, 2, "b");
+        w.push(10, 3, "c");
+        w.push(0, 4, "d");
+        assert_eq!(w.len(), 4);
+        assert_eq!(drain(&mut w), vec![(0, "d"), (10, "b"), (10, "c"), (20, "a")]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn l1_events_cascade_without_touching_the_heap() {
+        let mut w = HierWheel::default();
+        // all within L1 span (~194 days) but far outside the L0 window
+        w.push(10, 1, "near");
+        w.push(S * 100 + 7, 2, "hours");
+        w.push(S * 4000 + 1, 3, "months");
+        assert_eq!(w.overflow.len(), 0, "in-span events must not hit the heap");
+        assert_eq!(
+            drain(&mut w),
+            vec![(10, "near"), (S * 100 + 7, "hours"), (S * 4000 + 1, "months")]
+        );
+    }
+
+    #[test]
+    fn cascade_preserves_fifo_within_a_coarse_slot() {
+        let mut w = HierWheel::default();
+        // one coarse slot, several timestamps, pushed out of time order
+        w.push(S * 2 + 30, 1, "b1");
+        w.push(S * 2 + 10, 2, "a1");
+        w.push(S * 2 + 30, 3, "b2");
+        w.push(S * 2 + 10, 4, "a2");
+        assert_eq!(
+            drain(&mut w),
+            vec![
+                (S * 2 + 10, "a1"),
+                (S * 2 + 10, "a2"),
+                (S * 2 + 30, "b1"),
+                (S * 2 + 30, "b2"),
+            ]
+        );
+    }
+
+    #[test]
+    fn cascade_and_direct_pushes_interleave_fifo_on_equal_times() {
+        let mut w = HierWheel::default();
+        w.push(S + 5, 1, "first"); // parked in L1 slot 1
+        assert_eq!(w.next_time(), Some(S + 5)); // cascade into the window
+        w.push(S + 5, 2, "second"); // direct push into the cascaded slot
+        assert_eq!(drain(&mut w), vec![(S + 5, "first"), (S + 5, "second")]);
+    }
+
+    #[test]
+    fn window_and_span_boundaries_are_exact() {
+        let mut w = HierWheel::default();
+        w.push(S - 1, 1, "l0-last"); // last slot of the initial window
+        w.push(S, 2, "l1-first"); // first L1-routed time
+        w.push(L1_SPAN - 1, 3, "l1-last"); // last in-span second
+        w.push(L1_SPAN, 4, "heap-first"); // first beyond-span second
+        assert_eq!(w.overflow.len(), 1);
+        assert_eq!(
+            drain(&mut w),
+            vec![
+                (S - 1, "l0-last"),
+                (S, "l1-first"),
+                (L1_SPAN - 1, "l1-last"),
+                (L1_SPAN, "heap-first"),
+            ]
+        );
+    }
+
+    #[test]
+    fn far_future_overflows_and_migrates() {
+        let mut w = HierWheel::default();
+        w.push(10, 1, "near");
+        w.push(L1_SPAN * 3 + 17, 2, "far");
+        assert_eq!(w.pop(), Some((10, "near")));
+        // still beyond the original span: overflow again
+        w.push(L1_SPAN * 2, 3, "mid");
+        assert_eq!(w.pop(), Some((L1_SPAN * 2, "mid")));
+        assert_eq!(w.pop(), Some((L1_SPAN * 3 + 17, "far")));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn straggler_behind_a_jumped_window_is_delivered_first() {
+        let mut w = HierWheel::default();
+        w.push(L1_SPAN * 5, 1, "far");
+        assert_eq!(w.next_time(), Some(L1_SPAN * 5)); // span jumped
+        w.push(5, 2, "late");
+        w.push(7, 3, "later");
+        assert_eq!(
+            drain(&mut w),
+            vec![(5, "late"), (7, "later"), (L1_SPAN * 5, "far")]
+        );
+    }
+
+    #[test]
+    fn push_behind_cursor_rewinds() {
+        let mut w = HierWheel::default();
+        w.push(100, 1, "b");
+        assert_eq!(w.next_time(), Some(100)); // cursor0 advanced to 100
+        w.push(40, 2, "a");
+        assert_eq!(drain(&mut w), vec![(40, "a"), (100, "b")]);
+    }
+
+    #[test]
+    fn same_time_push_during_batch_drain_runs_after_batch() {
+        let mut w = HierWheel::default();
+        w.push(10, 1, "a");
+        w.push(10, 2, "b");
+        assert_eq!(w.pop(), Some((10, "a"))); // batch active
+        w.push(10, 3, "c"); // same timestamp, mid-drain
+        assert_eq!(w.pop(), Some((10, "b")));
+        assert_eq!(w.pop(), Some((10, "c")));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn push_into_a_later_coarse_slot_mid_drain() {
+        let mut w = HierWheel::default();
+        w.push(S * 3 + 9, 1, "x");
+        assert_eq!(w.pop(), Some((S * 3 + 9, "x"))); // window now at slot 3
+        // beyond the new window but in span: must route to L1, not panic
+        w.push(S * 7 + 2, 2, "y");
+        w.push(S * 3 + 100, 3, "z"); // still inside the current window
+        assert_eq!(drain(&mut w), vec![(S * 3 + 100, "z"), (S * 7 + 2, "y")]);
+    }
+
+    #[test]
+    fn delivers_events_at_time_max() {
+        // regression: the aligned jump must keep times near SimTime::MAX
+        // deliverable (MAX % SLOTS = 4095 lands in L1 slot 0)
+        let mut w = HierWheel::default();
+        w.push(10, 1, "near");
+        w.push(u64::MAX, 2, "end-of-time");
+        assert_eq!(w.pop(), Some((10, "near")));
+        assert_eq!(w.pop(), Some((u64::MAX, "end-of-time")));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn peek_matches_pop_across_all_paths() {
+        let mut w = HierWheel::default();
+        w.push(3, 1, "a");
+        w.push(S * 2 + 1, 2, "b");
+        w.push(L1_SPAN + 5, 3, "c");
+        while w.peek().is_some() {
+            let (pt, &pe) = w.peek().unwrap();
+            assert_eq!(w.pop(), Some((pt, pe)));
+        }
+        assert!(w.is_empty());
+        // straggler path: jump far, then push behind the window
+        w.push(L1_SPAN * 2, 4, "far");
+        assert_eq!(w.next_time(), Some(L1_SPAN * 2));
+        w.push(9, 5, "late");
+        assert_eq!(w.peek().map(|(t, e)| (t, *e)), Some((9, "late")));
+        assert_eq!(w.pop(), Some((9, "late")));
+    }
+
+    #[test]
+    fn len_tracks_across_all_paths() {
+        let mut w = HierWheel::default();
+        w.push(1, 1, "a");
+        w.push(S * 50, 2, "b");
+        w.push(L1_SPAN + 3, 3, "c");
+        assert_eq!(w.len(), 3);
+        w.pop();
+        assert_eq!(w.len(), 2);
+        w.next_time();
+        assert_eq!(w.len(), 2);
+        drain(&mut w);
+        assert_eq!(w.len(), 0);
+    }
+}

@@ -8,20 +8,97 @@
 //! sequence number making same-time ordering deterministic (FIFO among
 //! equal timestamps).
 //!
-//! Two queue implementations sit behind the same [`Engine`] API:
+//! Four queue implementations sit behind the same [`Engine`] API — all
+//! held bit-identical by the conformance suite in
+//! `tests/engine_differential.rs`:
 //! * [`TimingWheel`] (default) — a bucketed calendar queue with an
 //!   overflow heap for far-future events: O(1) amortized per event and
-//!   allocation-free in steady state. This is the hot path for every
-//!   figure, ablation, and sensitivity sweep.
+//!   allocation-free in steady state.
+//! * [`HierWheel`] — a two-level hierarchical wheel (4096×1 s cascading
+//!   from 4096×~68 min, ~194-day span) so month-long horizons never touch
+//!   the overflow `BinaryHeap`.
+//! * [`LaneQueue`] — per-department event lanes (one [`HierWheel`] each)
+//!   merged deterministically by `(time, seq)`; the storage layer behind
+//!   `--engine sharded`.
 //! * [`HeapQueue`] (via [`ReferenceEngine`]) — the classic binary heap,
-//!   kept as the behavioral oracle; `tests/properties.rs` checks the two
-//!   deliver bit-identical sequences over randomized schedules.
+//!   kept as the behavioral oracle.
+//!
+//! [`ShardedEngine`] runs a lane-decomposed model ([`ShardModel`])
+//! concurrently within each timestamp via `std::thread::scope`, committing
+//! effects in id order so results are bit-identical to the serial engine
+//! at any worker count — see `sim/shard.rs`.
 
 mod engine;
+mod hier;
+mod shard;
 mod wheel;
 
 pub use engine::{Engine, EventHandler, EventQueue, HeapQueue, ReferenceEngine, Schedule};
+pub use hier::HierWheel;
+pub use shard::{LaneEvent, LaneOut, LaneQueue, LaneRunner, ShardModel, ShardedEngine};
 pub use wheel::TimingWheel;
 
 /// Simulation time in whole seconds since the trace epoch.
 pub type SimTime = u64;
+
+/// Event-queue engine selection for experiment runs (`--engine`,
+/// `[experiments] engine`). All variants are proven bit-identical by the
+/// differential harness; they differ only in cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Binary-heap oracle — O(log n) per event.
+    Reference,
+    /// PR-1 one-level timing wheel (the long-standing default).
+    #[default]
+    Wheel,
+    /// Two-level hierarchical wheel — far horizons stay heap-free.
+    Hier,
+    /// Per-department lane queues with a deterministic `(time, seq)`
+    /// merge (lane-partitioned storage; the coordinator's handler stays
+    /// serial — see ARCHITECTURE.md).
+    Sharded,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "reference" | "heap" => Ok(Self::Reference),
+            "wheel" => Ok(Self::Wheel),
+            "hier" | "hierarchical" => Ok(Self::Hier),
+            "sharded" | "lanes" => Ok(Self::Sharded),
+            other => Err(format!(
+                "unknown engine '{other}' (expected reference|wheel|hier|sharded)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Reference => "reference",
+            Self::Wheel => "wheel",
+            Self::Hier => "hier",
+            Self::Sharded => "sharded",
+        }
+    }
+}
+
+#[cfg(test)]
+mod kind_tests {
+    use super::EngineKind;
+
+    #[test]
+    fn engine_kind_parses_and_round_trips() {
+        for kind in [
+            EngineKind::Reference,
+            EngineKind::Wheel,
+            EngineKind::Hier,
+            EngineKind::Sharded,
+        ] {
+            assert_eq!(EngineKind::parse(kind.name()), Ok(kind));
+        }
+        assert_eq!(EngineKind::parse("heap"), Ok(EngineKind::Reference));
+        assert_eq!(EngineKind::parse("hierarchical"), Ok(EngineKind::Hier));
+        assert!(EngineKind::parse("quantum").is_err());
+        assert_eq!(EngineKind::default(), EngineKind::Wheel);
+    }
+}

@@ -1,0 +1,632 @@
+//! Sharded per-department event lanes: lane-partitioned event storage
+//! ([`LaneQueue`]) and a scoped-thread engine ([`ShardedEngine`]) that
+//! drains lanes concurrently within a timestamp while staying bit-for-bit
+//! identical to the serial engine.
+//!
+//! # Lanes
+//!
+//! Events carry a lane address through [`LaneEvent`]: `Some(d)` for
+//! department-local events, `None` for cluster-wide (global) events.
+//! [`LaneQueue`] keeps each lane in its own [`HierWheel`] and pops by a
+//! deterministic id-ordered merge — the minimum `(time, seq)` across lane
+//! heads, which is exactly the global schedule order (seqs are unique), so
+//! it is a drop-in [`EventQueue`] for the serial [`Engine`](super::Engine).
+//!
+//! # The lane contract
+//!
+//! [`ShardedEngine`] runs a [`ShardModel`], which splits event handling in
+//! two phases the type system holds apart:
+//!
+//! - **lane phase** — [`ShardModel::on_lane`] gets `&self` (shared state
+//!   read-only in aggregate, but by contract untouched), `&mut` its own
+//!   lane, and a [`LaneOut`] to emit follow-up events and effects. Within
+//!   one timestamp, maximal seq-contiguous runs of lane events execute
+//!   concurrently via `std::thread::scope`, partitioned by lane.
+//! - **commit phase** — the collected outputs are sorted by `seq` (the
+//!   id-ordered merge) and [`ShardModel::commit`] applies effects to the
+//!   shared state serially, in exactly the order the serial engine would
+//!   have produced them. Cross-lane writes travel as zero-delay follow-up
+//!   events, never as direct mutation.
+//!
+//! Global events ([`LaneEvent::lane`] → `None`, e.g. a lease tick, a node
+//! crash, a department join) are serial barriers with full access to the
+//! lanes vector — a join may grow it mid-run.
+//!
+//! Because `on_lane` can only read the model and write its own lane, the
+//! outcome is independent of worker count and interleaving; the
+//! differential harness (`tests/engine_differential.rs`) checks the
+//! engine against the serial [`LaneRunner`] adapter over randomized
+//! adversarial programs at several worker layouts.
+//!
+//! The consolidation coordinator's handlers couple through the shared RPS
+//! ledger *within* a timestamp (grants observed by later same-tick
+//! events), so it keeps the serial handler and uses [`LaneQueue`] for
+//! lane-partitioned storage only (`--engine sharded`); see
+//! ARCHITECTURE.md "Engine hierarchy & determinism proof".
+
+use super::engine::{EventHandler, EventQueue, Schedule};
+use super::hier::HierWheel;
+use super::SimTime;
+
+/// Lane addressing for shardable event types.
+pub trait LaneEvent {
+    /// The department lane this event belongs to, or `None` for global
+    /// (cluster-wide) events that act as serial barriers.
+    fn lane(&self) -> Option<usize>;
+}
+
+/// Per-lane event storage with a deterministic id-ordered merge.
+///
+/// Lane index 0 holds global events; department `d` maps to lane `d + 1`.
+/// Lanes are created on first use. Pop order is the minimum `(time, seq)`
+/// across lane heads — bit-identical to a single queue.
+pub struct LaneQueue<E> {
+    lanes: Vec<HierWheel<(u64, E)>>,
+    len: usize,
+}
+
+impl<E> Default for LaneQueue<E> {
+    fn default() -> Self {
+        Self { lanes: Vec::new(), len: 0 }
+    }
+}
+
+impl<E> LaneQueue<E> {
+    /// Number of lanes materialized so far (including the global lane).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Lane index holding the head `(time, seq)`, with that key.
+    fn best(&mut self) -> Option<(usize, SimTime, u64)> {
+        let mut best: Option<(usize, SimTime, u64)> = None;
+        for li in 0..self.lanes.len() {
+            if let Some((t, &(seq, _))) = self.lanes[li].peek() {
+                let better = match best {
+                    None => true,
+                    Some((_, bt, bs)) => (t, seq) < (bt, bs),
+                };
+                if better {
+                    best = Some((li, t, seq));
+                }
+            }
+        }
+        best
+    }
+
+    /// Head event's `(time, seq, lane)` without removing it; the lane is
+    /// `None` for a global event.
+    pub fn peek_meta(&mut self) -> Option<(SimTime, u64, Option<usize>)> {
+        self.best()
+            .map(|(li, t, seq)| (t, seq, if li == 0 { None } else { Some(li - 1) }))
+    }
+
+    /// Pop the head in `(time, seq)` order, keeping the seq.
+    pub fn pop_entry(&mut self) -> Option<(SimTime, u64, E)> {
+        let (li, _, _) = self.best()?;
+        let (t, (seq, ev)) = self.lanes[li].pop().expect("peeked head vanished");
+        self.len -= 1;
+        Some((t, seq, ev))
+    }
+}
+
+impl<E: LaneEvent> EventQueue<E> for LaneQueue<E> {
+    fn push(&mut self, time: SimTime, seq: u64, ev: E) {
+        let li = ev.lane().map_or(0, |d| d + 1);
+        if li >= self.lanes.len() {
+            self.lanes.resize_with(li + 1, HierWheel::default);
+        }
+        // the payload carries the seq so the cross-lane merge can compare
+        // equal-timestamp heads
+        self.lanes[li].push(time, seq, (seq, ev));
+        self.len += 1;
+    }
+
+    fn next_time(&mut self) -> Option<SimTime> {
+        self.best().map(|(_, t, _)| t)
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.pop_entry().map(|(t, _, ev)| (t, ev))
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+/// Output handle for the lane phase: follow-up events plus effects for the
+/// serial commit phase. Mirrors [`Schedule`]'s clamping semantics.
+pub struct LaneOut<E, F> {
+    now: SimTime,
+    follow_ups: Vec<(SimTime, E)>,
+    effects: Vec<F>,
+}
+
+impl<E, F> LaneOut<E, F> {
+    fn new(now: SimTime) -> Self {
+        Self { now, follow_ups: Vec::new(), effects: Vec::new() }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule a follow-up event at absolute time `at` (clamped to now).
+    pub fn at(&mut self, at: SimTime, ev: E) {
+        self.follow_ups.push((at.max(self.now), ev));
+    }
+
+    /// Schedule a follow-up event after `delay` seconds.
+    pub fn after(&mut self, delay: u64, ev: E) {
+        self.follow_ups.push((self.now + delay, ev));
+    }
+
+    /// Emit an effect for the serial commit phase.
+    pub fn effect(&mut self, f: F) {
+        self.effects.push(f);
+    }
+}
+
+/// A simulation model decomposed for lane-parallel execution. See the
+/// module docs for the contract each method must uphold.
+pub trait ShardModel: Sync {
+    type Ev: LaneEvent + Send;
+    type Lane: Send;
+    type Effect: Send;
+
+    /// Lane phase: handle a lane-addressed event. Runs concurrently across
+    /// lanes within a timestamp — must touch only `lane`'s state.
+    fn on_lane(
+        &self,
+        lane: &mut Self::Lane,
+        ev: Self::Ev,
+        now: SimTime,
+        out: &mut LaneOut<Self::Ev, Self::Effect>,
+    );
+
+    /// Commit phase: apply one effect to the shared state. Serial, in
+    /// global `(time, seq)` order — must not touch lane state (cross-lane
+    /// writes go through zero-delay follow-up events).
+    fn commit(&mut self, lane: usize, effect: Self::Effect, now: SimTime, sched: &mut Schedule<Self::Ev>);
+
+    /// Global events: a serial barrier with full access (a department
+    /// join may push a new lane).
+    fn on_global(
+        &mut self,
+        lanes: &mut Vec<Self::Lane>,
+        ev: Self::Ev,
+        now: SimTime,
+        sched: &mut Schedule<Self::Ev>,
+    );
+}
+
+/// Serial adapter: runs a [`ShardModel`] on any queue-backed
+/// [`Engine`](super::Engine) by executing lane phase + commit per event,
+/// in delivery order. This is the oracle the sharded engine is held
+/// bit-identical to.
+pub struct LaneRunner<M: ShardModel> {
+    pub model: M,
+    pub lanes: Vec<M::Lane>,
+}
+
+impl<M: ShardModel> LaneRunner<M> {
+    pub fn new(model: M, lanes: Vec<M::Lane>) -> Self {
+        Self { model, lanes }
+    }
+}
+
+impl<M: ShardModel> EventHandler<M::Ev> for LaneRunner<M> {
+    fn handle(&mut self, ev: M::Ev, sched: &mut Schedule<M::Ev>) {
+        let now = sched.now();
+        match ev.lane() {
+            None => self.model.on_global(&mut self.lanes, ev, now, sched),
+            Some(l) => {
+                assert!(l < self.lanes.len(), "event addressed to unknown lane {l}");
+                let mut out = LaneOut::new(now);
+                self.model.on_lane(&mut self.lanes[l], ev, now, &mut out);
+                // follow-ups first, then commit follow-ups — the sharded
+                // engine assigns seqs in the same order
+                for (at, e) in out.follow_ups {
+                    sched.at(at, e);
+                }
+                for eff in out.effects {
+                    self.model.commit(l, eff, now, sched);
+                }
+            }
+        }
+    }
+}
+
+/// The lane-parallel engine: one *run* uses multiple cores while the
+/// observable behavior stays bit-identical to the serial engine for any
+/// worker count (including 1). See the module docs for the phase rules.
+pub struct ShardedEngine<M: ShardModel> {
+    model: M,
+    lanes: Vec<M::Lane>,
+    queue: LaneQueue<M::Ev>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+    workers: usize,
+    scratch: Vec<(SimTime, M::Ev)>,
+}
+
+impl<M: ShardModel> ShardedEngine<M> {
+    /// `workers = 0` resolves to the core count; `1` is the serial
+    /// fallback (identical results either way).
+    pub fn new(model: M, lanes: Vec<M::Lane>, workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        Self {
+            model,
+            lanes,
+            queue: LaneQueue::default(),
+            now: 0,
+            seq: 0,
+            processed: 0,
+            workers,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+
+    pub fn lanes(&self) -> &[M::Lane] {
+        &self.lanes
+    }
+
+    /// Tear down into the final model + lane states (for comparisons).
+    pub fn into_parts(self) -> (M, Vec<M::Lane>) {
+        (self.model, self.lanes)
+    }
+
+    /// Seed an event (past times clamp to now, as in `Engine::schedule`).
+    pub fn schedule(&mut self, at: SimTime, ev: M::Ev) {
+        self.seq += 1;
+        self.queue.push(at.max(self.now), self.seq, ev);
+    }
+
+    fn push(&mut self, at: SimTime, ev: M::Ev) {
+        self.seq += 1;
+        self.queue.push(at.max(self.now), self.seq, ev);
+    }
+
+    /// Run the lane phase for one seq-contiguous group of lane events at
+    /// the current timestamp; returns outputs sorted back into seq order.
+    #[allow(clippy::type_complexity)]
+    fn lane_phase(
+        &mut self,
+        group: Vec<(u64, usize, M::Ev)>,
+    ) -> Vec<(u64, usize, LaneOut<M::Ev, M::Effect>)> {
+        let now = self.now;
+        // partition by lane, preserving per-lane seq order
+        let mut by_lane: std::collections::BTreeMap<usize, Vec<(u64, M::Ev)>> =
+            std::collections::BTreeMap::new();
+        for (seq, lane, ev) in group {
+            assert!(lane < self.lanes.len(), "event addressed to unknown lane {lane}");
+            by_lane.entry(lane).or_default().push((seq, ev));
+        }
+        let mut tasks: Vec<(usize, &mut M::Lane, Vec<(u64, M::Ev)>)> = Vec::new();
+        for (li, lane_state) in self.lanes.iter_mut().enumerate() {
+            if let Some(evs) = by_lane.remove(&li) {
+                tasks.push((li, lane_state, evs));
+            }
+        }
+        let model = &self.model;
+        let run_bucket = |bucket: Vec<(usize, &mut M::Lane, Vec<(u64, M::Ev)>)>| {
+            let mut part = Vec::new();
+            for (li, lane, evs) in bucket {
+                for (seq, ev) in evs {
+                    let mut out = LaneOut::new(now);
+                    model.on_lane(lane, ev, now, &mut out);
+                    part.push((li, seq, out));
+                }
+            }
+            part
+        };
+        let workers = self.workers.min(tasks.len());
+        let mut outs: Vec<(u64, usize, LaneOut<M::Ev, M::Effect>)> = Vec::new();
+        if workers <= 1 {
+            for (li, seq, out) in run_bucket(tasks) {
+                outs.push((seq, li, out));
+            }
+        } else {
+            let mut buckets: Vec<Vec<(usize, &mut M::Lane, Vec<(u64, M::Ev)>)>> =
+                (0..workers).map(|_| Vec::new()).collect();
+            for (i, task) in tasks.into_iter().enumerate() {
+                buckets[i % workers].push(task);
+            }
+            let parts: Vec<_> = std::thread::scope(|s| {
+                let handles: Vec<_> = buckets
+                    .into_iter()
+                    .map(|bucket| s.spawn(|| run_bucket(bucket)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("lane worker panicked"))
+                    .collect()
+            });
+            for part in parts {
+                for (li, seq, out) in part {
+                    outs.push((seq, li, out));
+                }
+            }
+        }
+        // the deterministic id-ordered merge: commit in global seq order
+        outs.sort_unstable_by_key(|&(seq, _, _)| seq);
+        outs
+    }
+
+    /// Run until the queue drains or the clock passes `horizon` (same
+    /// landing rule as `Engine::run_until`).
+    pub fn run_until(&mut self, horizon: SimTime) {
+        while let Some(t) = self.queue.next_time() {
+            if t > horizon {
+                break;
+            }
+            self.now = t;
+            // gather the maximal seq-contiguous run of lane events at t
+            let mut group: Vec<(u64, usize, M::Ev)> = Vec::new();
+            loop {
+                match self.queue.peek_meta() {
+                    Some((tt, _, Some(_))) if tt == t => {
+                        let (_, seq, ev) = self.queue.pop_entry().expect("peeked head vanished");
+                        let lane = ev.lane().expect("peek said lane event");
+                        group.push((seq, lane, ev));
+                    }
+                    _ => break,
+                }
+            }
+            if group.is_empty() {
+                // head is a global event at t: a serial barrier
+                let (_, _, ev) = self.queue.pop_entry().expect("next_time reported an event");
+                self.processed += 1;
+                let mut sched = Schedule::new(t, std::mem::take(&mut self.scratch));
+                self.model.on_global(&mut self.lanes, ev, t, &mut sched);
+                let mut pending = sched.into_pending();
+                for (at, follow) in pending.drain(..) {
+                    self.push(at, follow);
+                }
+                self.scratch = pending;
+                continue;
+            }
+            self.processed += group.len() as u64;
+            let outs = self.lane_phase(group);
+            for (_, lane, out) in outs {
+                // per event: lane follow-ups first, then commit follow-ups
+                // — the same seq assignment order as the serial adapter
+                for (at, follow) in out.follow_ups {
+                    self.push(at, follow);
+                }
+                let mut sched = Schedule::new(t, std::mem::take(&mut self.scratch));
+                for eff in out.effects {
+                    self.model.commit(lane, eff, t, &mut sched);
+                }
+                let mut pending = sched.into_pending();
+                for (at, follow) in pending.drain(..) {
+                    self.push(at, follow);
+                }
+                self.scratch = pending;
+            }
+            // zero-delay follow-ups at t form later seq-contiguous groups;
+            // the outer loop re-polls and picks them up at the same time
+        }
+        if horizon != SimTime::MAX && self.now < horizon {
+            self.now = horizon;
+        }
+    }
+
+    /// Drain everything (no horizon).
+    pub fn run(&mut self) {
+        self.run_until(SimTime::MAX);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Engine, ReferenceEngine};
+    use super::*;
+
+    /// Toy shard model: department lanes record work and claim nodes from
+    /// a shared ledger; grants travel back as zero-delay lane events.
+    #[derive(Clone, Debug, PartialEq)]
+    enum TEv {
+        Work { dept: u16, id: u32 },
+        Claim { dept: u16, nodes: u64 },
+        Grant { dept: u16, nodes: u64 },
+        Tick,
+        Join,
+    }
+
+    impl LaneEvent for TEv {
+        fn lane(&self) -> Option<usize> {
+            match self {
+                TEv::Work { dept, .. } | TEv::Claim { dept, .. } | TEv::Grant { dept, .. } => {
+                    Some(*dept as usize)
+                }
+                TEv::Tick | TEv::Join => None,
+            }
+        }
+    }
+
+    #[derive(Clone, Debug, Default, PartialEq)]
+    struct TLane {
+        seen: Vec<(SimTime, u32)>,
+        held: u64,
+    }
+
+    enum TEff {
+        Claim(u64),
+    }
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct TModel {
+        free: u64,
+        ticks: u32,
+        commits: Vec<(SimTime, usize, u64)>,
+    }
+
+    impl ShardModel for TModel {
+        type Ev = TEv;
+        type Lane = TLane;
+        type Effect = TEff;
+
+        fn on_lane(&self, lane: &mut TLane, ev: TEv, now: SimTime, out: &mut LaneOut<TEv, TEff>) {
+            match ev {
+                TEv::Work { dept, id } => {
+                    lane.seen.push((now, id));
+                    if id < 3 {
+                        // chained same-lane follow-up
+                        out.after(7, TEv::Work { dept, id: id + 1 });
+                    }
+                }
+                TEv::Claim { nodes, .. } => out.effect(TEff::Claim(nodes)),
+                TEv::Grant { nodes, .. } => lane.held += nodes,
+            }
+        }
+
+        fn commit(&mut self, lane: usize, eff: TEff, now: SimTime, sched: &mut Schedule<TEv>) {
+            let TEff::Claim(want) = eff;
+            let got = want.min(self.free);
+            self.free -= got;
+            self.commits.push((now, lane, got));
+            if got > 0 {
+                // zero-delay cross-back into the lane
+                sched.at(now, TEv::Grant { dept: lane as u16, nodes: got });
+            }
+        }
+
+        fn on_global(
+            &mut self,
+            lanes: &mut Vec<TLane>,
+            ev: TEv,
+            _now: SimTime,
+            _sched: &mut Schedule<TEv>,
+        ) {
+            match ev {
+                TEv::Tick => {
+                    self.ticks += 1;
+                    self.free += 2;
+                }
+                TEv::Join => lanes.push(TLane::default()),
+                _ => unreachable!("lane event reached on_global"),
+            }
+        }
+    }
+
+    fn model() -> TModel {
+        TModel { free: 5, ticks: 0, commits: Vec::new() }
+    }
+
+    /// A program with same-timestamp storms across lanes, contended
+    /// claims, a mid-run join, and global barriers.
+    fn seed(mut sched: impl FnMut(SimTime, TEv)) {
+        for d in 0..3u16 {
+            sched(10, TEv::Work { dept: d, id: 0 });
+            sched(10, TEv::Claim { dept: d, nodes: 2 });
+        }
+        sched(10, TEv::Tick);
+        for d in 0..3u16 {
+            sched(10, TEv::Work { dept: d, id: 100 + d as u32 });
+        }
+        sched(20, TEv::Join);
+        sched(20, TEv::Work { dept: 3, id: 7 });
+        sched(25, TEv::Claim { dept: 3, nodes: 9 });
+        sched(30, TEv::Tick);
+    }
+
+    fn run_sharded(workers: usize) -> (TModel, Vec<TLane>, SimTime, u64) {
+        let mut eng = ShardedEngine::new(model(), vec![TLane::default(); 3], workers);
+        seed(|t, ev| eng.schedule(t, ev));
+        eng.run_until(1_000);
+        let (now, processed) = (eng.now(), eng.processed());
+        let (m, lanes) = eng.into_parts();
+        (m, lanes, now, processed)
+    }
+
+    fn run_serial<Q: EventQueue<TEv>>(queue: Q) -> (TModel, Vec<TLane>, SimTime, u64) {
+        let mut eng = Engine::with_queue(queue);
+        seed(|t, ev| eng.schedule(t, ev));
+        let mut runner = LaneRunner::new(model(), vec![TLane::default(); 3]);
+        eng.run_until(&mut runner, 1_000);
+        (runner.model, runner.lanes, eng.now(), eng.processed())
+    }
+
+    #[test]
+    fn sharded_matches_serial_oracle_across_worker_layouts() {
+        let oracle = {
+            let mut eng: ReferenceEngine<TEv> = Engine::new_reference();
+            seed(|t, ev| eng.schedule(t, ev));
+            let mut runner = LaneRunner::new(model(), vec![TLane::default(); 3]);
+            eng.run_until(&mut runner, 1_000);
+            (runner.model, runner.lanes, eng.now(), eng.processed())
+        };
+        for workers in [1, 2, 0] {
+            assert_eq!(run_sharded(workers), oracle, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn lane_queue_is_a_drop_in_queue_for_the_serial_engine() {
+        let heap = run_serial(super::super::HeapQueue::default());
+        let lanes = run_serial(LaneQueue::default());
+        assert_eq!(lanes, heap);
+    }
+
+    #[test]
+    fn contended_claims_commit_in_schedule_order() {
+        // free = 5; three claims of 2 at t=10 in dept order: grants 2, 2, 1
+        let (m, lanes, _, _) = run_sharded(2);
+        let t10: Vec<u64> =
+            m.commits.iter().filter(|(t, _, _)| *t == 10).map(|(_, _, g)| *g).collect();
+        assert_eq!(t10, vec![2, 2, 1]);
+        assert_eq!(lanes[0].held, 2);
+        assert_eq!(lanes[1].held, 2);
+        assert_eq!(lanes[2].held, 1);
+        // the join at t=20 added lane 3; its claim at 25 drew on the
+        // tick's replenishment (free was 5-5+2 = 2)
+        assert_eq!(lanes[3].held, 2);
+        assert_eq!(m.free, 2); // +2 from the final tick at t=30
+        assert_eq!(m.ticks, 2);
+    }
+
+    #[test]
+    fn chained_lane_followups_keep_fifo() {
+        let (_, lanes, _, _) = run_sharded(0);
+        // dept 0: Work id 0 at 10 chains 1@17, 2@24, 3@31; storm id 100@10
+        assert_eq!(lanes[0].seen, vec![(10, 0), (10, 100), (17, 1), (24, 2), (31, 3)]);
+    }
+
+    #[test]
+    fn lane_queue_reports_len_and_lanes() {
+        let mut q: LaneQueue<TEv> = LaneQueue::default();
+        q.push(5, 1, TEv::Tick);
+        q.push(3, 2, TEv::Work { dept: 1, id: 9 });
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.lane_count(), 3); // global + depts 0..=1
+        assert_eq!(q.next_time(), Some(3));
+        assert_eq!(q.pop(), Some((3, TEv::Work { dept: 1, id: 9 })));
+        assert_eq!(q.pop(), Some((5, TEv::Tick)));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+}

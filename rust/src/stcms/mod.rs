@@ -105,7 +105,7 @@ impl StServer {
     /// Total nodes the queued (not yet started) jobs ask for — the demand
     /// signal the realtime batch CMS sends upstream as a claim.
     pub fn queued_nodes(&self) -> u64 {
-        self.queue.iter().map(|j| j.size).sum()
+        self.queue.queued_nodes()
     }
 
     pub fn running_count(&self) -> usize {

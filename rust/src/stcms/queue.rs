@@ -1,15 +1,24 @@
-//! The ST CMS wait queue: arrival-ordered, with O(1) inspection by index.
+//! The ST CMS wait queue, stored struct-of-arrays.
 //!
-//! A plain `Vec` (not `VecDeque`) because the First-Fit scheduler scans by
-//! index and removes from arbitrary positions; removal compacts with
-//! `remove`, which is O(n) worst case but the queue stays short (hundreds)
-//! and profiling showed it is nowhere near the hot path.
+//! The schedulers' hot loops scan one or two fields per job (`size` for
+//! First-Fit/FCFS, plus `requested` for EASY's reservation check), so the
+//! queue keeps each [`Job`] field in its own dense `Vec`: a First-Fit scan
+//! walks a contiguous `&[u64]` of sizes instead of striding over whole
+//! `Job` structs. Arrival order is the vector order (submissions arrive in
+//! time order from the trace); removal compacts every column with
+//! `Vec::remove`, O(n) worst case, but the queue stays short (hundreds)
+//! and removal is nowhere near the hot path.
 
+use crate::sim::SimTime;
 use crate::workload::Job;
 
 #[derive(Debug, Default)]
 pub struct JobQueue {
-    items: Vec<Job>,
+    ids: Vec<u64>,
+    submits: Vec<SimTime>,
+    sizes: Vec<u64>,
+    runtimes: Vec<u64>,
+    requesteds: Vec<u64>,
 }
 
 impl JobQueue {
@@ -17,31 +26,54 @@ impl JobQueue {
         Self::default()
     }
 
-    /// Append at the tail (arrival order is preserved; submissions arrive
-    /// in time order from the trace).
+    /// Append at the tail (arrival order is preserved).
     pub fn push(&mut self, job: Job) {
-        self.items.push(job);
+        self.ids.push(job.id);
+        self.submits.push(job.submit);
+        self.sizes.push(job.size);
+        self.runtimes.push(job.runtime);
+        self.requesteds.push(job.requested);
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.ids.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.ids.is_empty()
     }
 
-    pub fn get(&self, idx: usize) -> &Job {
-        &self.items[idx]
+    /// Node count of the job at `idx`.
+    pub fn size(&self, idx: usize) -> u64 {
+        self.sizes[idx]
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &Job> {
-        self.items.iter()
+    /// User-requested wallclock of the job at `idx` (EASY's reservation
+    /// check reads this without touching the other columns).
+    pub fn requested(&self, idx: usize) -> u64 {
+        self.requesteds[idx]
     }
 
-    /// Remove and return the job at `idx` (shifts the tail down).
+    /// The dense size column in arrival order — the First-Fit/FCFS scans
+    /// iterate this slice directly.
+    pub fn sizes(&self) -> &[u64] {
+        &self.sizes
+    }
+
+    /// Total nodes requested by every queued job.
+    pub fn queued_nodes(&self) -> u64 {
+        self.sizes.iter().sum()
+    }
+
+    /// Remove and return the job at `idx` (every column shifts down).
     pub fn remove(&mut self, idx: usize) -> Job {
-        self.items.remove(idx)
+        Job {
+            id: self.ids.remove(idx),
+            submit: self.submits.remove(idx),
+            size: self.sizes.remove(idx),
+            runtime: self.runtimes.remove(idx),
+            requested: self.requesteds.remove(idx),
+        }
     }
 }
 
@@ -50,7 +82,7 @@ mod tests {
     use super::*;
 
     fn job(id: u64) -> Job {
-        Job { id, submit: 0, size: 1, runtime: 10, requested: 20 }
+        Job { id, submit: id * 5, size: id + 1, runtime: 10 + id, requested: 20 + id }
     }
 
     #[test]
@@ -59,19 +91,36 @@ mod tests {
         for id in [3, 1, 2] {
             q.push(job(id));
         }
-        let ids: Vec<u64> = q.iter().map(|j| j.id).collect();
-        assert_eq!(ids, vec![3, 1, 2]);
+        assert_eq!(q.sizes(), &[4, 2, 3]);
+        assert_eq!(q.remove(0).id, 3);
+        assert_eq!(q.remove(0).id, 1);
+        assert_eq!(q.remove(0).id, 2);
+        assert!(q.is_empty());
     }
 
     #[test]
-    fn remove_compacts() {
+    fn remove_compacts_every_column() {
         let mut q = JobQueue::new();
         for id in 0..5 {
             q.push(job(id));
         }
         let removed = q.remove(2);
-        assert_eq!(removed.id, 2);
+        assert_eq!(removed, job(2));
         assert_eq!(q.len(), 4);
-        assert_eq!(q.get(2).id, 3);
+        // the columns stay in lockstep: index 2 is now the former job 3
+        assert_eq!(q.size(2), job(3).size);
+        assert_eq!(q.requested(2), job(3).requested);
+        assert_eq!(q.remove(2), job(3));
+    }
+
+    #[test]
+    fn size_column_sums_queued_nodes() {
+        let mut q = JobQueue::new();
+        for id in 0..4 {
+            q.push(job(id));
+        }
+        assert_eq!(q.queued_nodes(), 1 + 2 + 3 + 4);
+        q.remove(0);
+        assert_eq!(q.queued_nodes(), 2 + 3 + 4);
     }
 }

@@ -55,14 +55,15 @@ impl Scheduler {
 
 /// Scan the queue in arrival order; start everything that fits in the
 /// remaining idle nodes (jobs that don't fit are skipped, not blocking).
+/// Walks the queue's dense size column — the only field this policy reads.
 fn first_fit(queue: &JobQueue, mut idle: u64) -> Vec<usize> {
     let mut picked = Vec::new();
-    for (i, job) in queue.iter().enumerate() {
+    for (i, &size) in queue.sizes().iter().enumerate() {
         if idle == 0 {
             break;
         }
-        if job.size <= idle {
-            idle -= job.size;
+        if size <= idle {
+            idle -= size;
             picked.push(i);
         }
     }
@@ -72,9 +73,9 @@ fn first_fit(queue: &JobQueue, mut idle: u64) -> Vec<usize> {
 /// Strict FCFS: start from the head only while it fits.
 fn fcfs(queue: &JobQueue, mut idle: u64) -> Vec<usize> {
     let mut picked = Vec::new();
-    for (i, job) in queue.iter().enumerate() {
-        if job.size <= idle {
-            idle -= job.size;
+    for (i, &size) in queue.sizes().iter().enumerate() {
+        if size <= idle {
+            idle -= size;
             picked.push(i);
         } else {
             break; // head-of-line blocking
@@ -94,25 +95,25 @@ fn easy(
     now: SimTime,
 ) -> Vec<usize> {
     let mut picked = Vec::new();
+    let sizes = queue.sizes();
     let mut i = 0;
     // FCFS prefix
-    while i < queue.len() {
-        let job = queue.get(i);
-        if job.size <= idle {
-            idle -= job.size;
+    while i < sizes.len() {
+        if sizes[i] <= idle {
+            idle -= sizes[i];
             picked.push(i);
             i += 1;
         } else {
             break;
         }
     }
-    if i >= queue.len() {
+    if i >= sizes.len() {
         return picked;
     }
 
-    // Reservation for the blocked head: when will `head.size` nodes be
+    // Reservation for the blocked head: when will `head_size` nodes be
     // free, assuming running jobs end at expected_end?
-    let head = queue.get(i);
+    let head_size = sizes[i];
     let mut ends: Vec<(SimTime, u64)> =
         running.values().map(|r| (r.expected_end, r.size)).collect();
     ends.sort_unstable();
@@ -121,28 +122,29 @@ fn easy(
     let mut extra = 0u64; // nodes free at shadow_time beyond the head's need
     for (end, size) in ends {
         avail += size;
-        if avail >= head.size {
+        if avail >= head_size {
             shadow_time = end;
-            extra = avail - head.size;
+            extra = avail - head_size;
             break;
         }
     }
 
-    // Backfill pass over the rest of the queue.
-    for j in (i + 1)..queue.len() {
+    // Backfill pass over the rest of the queue; only candidates that fit
+    // the idle nodes pay for the `requested` column lookup.
+    for j in (i + 1)..sizes.len() {
         if idle == 0 {
             break;
         }
-        let job = queue.get(j);
-        if job.size > idle {
+        let size = sizes[j];
+        if size > idle {
             continue;
         }
-        let fits_before_shadow = now + job.requested <= shadow_time;
-        let fits_extra = job.size <= extra;
+        let fits_before_shadow = now + queue.requested(j) <= shadow_time;
+        let fits_extra = size <= extra;
         if fits_before_shadow || fits_extra {
-            idle -= job.size;
+            idle -= size;
             if fits_extra {
-                extra -= job.size;
+                extra -= size;
             }
             picked.push(j);
         }

@@ -1,0 +1,629 @@
+//! Differential-oracle conformance suite for the event engines.
+//!
+//! Every queue behind [`Engine`] — the reference `BinaryHeap`, the PR-1
+//! [`TimingWheel`], the two-level [`HierWheel`] and the per-department
+//! [`LaneQueue`] — must deliver the exact same `(time, seq)` schedule, and
+//! [`ShardedEngine`] must produce bit-identical state to the serial
+//! [`LaneRunner`] adapter at every worker layout. This suite proves both
+//! over randomized adversarial programs (same-timestamp storms, slot-wrap
+//! and L1-span boundary times, far-horizon overflow spills, past-time
+//! clamps, crash/recover and join/leave globals mid-run) and pins the
+//! known boundary behaviors with literal traces.
+//!
+//! On failure the harness greedily shrinks the program (ddmin-lite: drop
+//! chunks of n/2, n/4, …, 1 events while the divergence persists) and
+//! prints the minimal reproducing program next to the failing
+//! `PHOENIX_PROP_SEED`.
+
+use phoenix_cloud::sim::{
+    Engine, EventHandler, EventQueue, HierWheel, LaneEvent, LaneOut, LaneQueue, LaneRunner,
+    ReferenceEngine, Schedule, ShardModel, ShardedEngine,
+};
+use phoenix_cloud::util::prop::{check, Gen};
+use phoenix_cloud::util::rng::Rng;
+
+/// One second past the hierarchical wheel's L0 window (4096 s) wraps the
+/// slot cursor; one second past the L1 span (4096 × 4096 s) spills to the
+/// overflow heap. Both edges are generated explicitly below.
+const L1_SPAN: u64 = 4096 * 4096;
+
+// ---------------------------------------------------------------------------
+// Layer 1: the four queues deliver identical global traces
+// ---------------------------------------------------------------------------
+
+/// Minimal lane-addressable event: `lane == 0` is global, `1..=4` map to
+/// department lanes `0..=3` (so `LaneQueue` exercises its cross-lane
+/// merge; the other queues ignore the address entirely).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Tagged {
+    lane: u8,
+    tag: u32,
+}
+
+impl LaneEvent for Tagged {
+    fn lane(&self) -> Option<usize> {
+        if self.lane == 0 {
+            None
+        } else {
+            Some(self.lane as usize - 1)
+        }
+    }
+}
+
+fn tg(lane: u8, tag: u32) -> Tagged {
+    Tagged { lane, tag }
+}
+
+/// Trace recorder with seeded follow-up scheduling; the RNG stream stays
+/// aligned across queues exactly as long as delivery order does, so any
+/// divergence surfaces as a trace mismatch.
+struct Recorder {
+    seen: Vec<(u64, Tagged)>,
+    rng: Rng,
+}
+
+/// Delays chosen to land follow-ups on every interesting edge: the same
+/// timestamp (0), the PR-1 window edge (4095/4096/4097), a wheel
+/// revolution (8191), and past the L1 span (heap territory for the
+/// hierarchical wheel).
+const FOLLOW_DELAYS: [u64; 10] = [0, 0, 1, 7, 4095, 4096, 4097, 8191, 40_000, L1_SPAN + 1];
+
+impl EventHandler<Tagged> for Recorder {
+    fn handle(&mut self, ev: Tagged, sched: &mut Schedule<Tagged>) {
+        self.seen.push((sched.now(), ev));
+        if self.rng.chance(0.25) {
+            let delay = FOLLOW_DELAYS[self.rng.below(FOLLOW_DELAYS.len() as u64) as usize];
+            let lane = self.rng.below(5) as u8;
+            sched.after(delay, tg(lane, ev.tag.wrapping_mul(31).wrapping_add(1)));
+        }
+    }
+}
+
+/// A randomized event program: seed events, a first horizon (the clock
+/// lands on it), then late events that may target the past (exercising the
+/// `Engine::schedule` clamp), then a drain to empty.
+#[derive(Debug, Clone)]
+struct QueueProgram {
+    seeds: Vec<(u64, Tagged)>,
+    h1: u64,
+    late: Vec<(u64, Tagged)>,
+    handler_seed: u64,
+}
+
+/// Everything observable from a run: the full delivery trace, the final
+/// clock, the processed count, and how many events ran before the first
+/// horizon.
+type QueueOut = (Vec<(u64, Tagged)>, u64, u64, usize);
+
+fn drive<Q: EventQueue<Tagged>>(mut eng: Engine<Tagged, Q>, p: &QueueProgram) -> QueueOut {
+    let mut rec = Recorder { seen: Vec::new(), rng: Rng::new(p.handler_seed) };
+    for &(t, ev) in &p.seeds {
+        eng.schedule(t, ev);
+    }
+    eng.run_until(&mut rec, p.h1);
+    let before_horizon = rec.seen.len();
+    for &(t, ev) in &p.late {
+        eng.schedule(t, ev); // may be in the past — clamps to now
+    }
+    eng.run(&mut rec);
+    assert!(eng.is_empty());
+    (rec.seen, eng.now(), eng.processed(), before_horizon)
+}
+
+fn divergence(name: &str, oracle: &QueueOut, got: &QueueOut) -> String {
+    let i = oracle.0.iter().zip(&got.0).take_while(|(a, b)| a == b).count();
+    format!(
+        "{name} diverged from the reference heap at trace index {i}: oracle \
+         {:?} vs {:?} (trace lens {}/{}, now {}/{}, processed {}/{}, events \
+         before the first horizon {}/{})",
+        oracle.0.get(i),
+        got.0.get(i),
+        oracle.0.len(),
+        got.0.len(),
+        oracle.1,
+        got.1,
+        oracle.2,
+        got.2,
+        oracle.3,
+        got.3,
+    )
+}
+
+/// Run the program through all four queues; `Some(message)` on the first
+/// divergence from the heap oracle.
+fn queue_fails(p: &QueueProgram) -> Option<String> {
+    let oracle = drive(Engine::new_reference(), p);
+    let wheel = drive(Engine::new(), p);
+    if wheel != oracle {
+        return Some(divergence("PR-1 wheel", &oracle, &wheel));
+    }
+    let hier = drive(Engine::with_queue(HierWheel::default()), p);
+    if hier != oracle {
+        return Some(divergence("hierarchical wheel", &oracle, &hier));
+    }
+    let lanes = drive(Engine::with_queue(LaneQueue::default()), p);
+    if lanes != oracle {
+        return Some(divergence("lane queue", &oracle, &lanes));
+    }
+    None
+}
+
+/// Boundary-heavy virtual times: a fixed storm timestamp, the PR-1 slot
+/// wrap, the L1-span edge, and far spills beyond every wheel's window.
+fn boundary_time(g: &mut Gen) -> u64 {
+    match g.usize_in(0, 5) {
+        0 => 7,
+        1 => *g.pick(&[4094, 4095, 4096, 4097, 8191, 8192]),
+        2 => g.u64_in(0, 300),
+        3 => g.u64_in(0, 60_000),
+        4 => *g.pick(&[L1_SPAN - 1, L1_SPAN, L1_SPAN + 1]),
+        _ => g.u64_in(L1_SPAN, 2_000_000_000),
+    }
+}
+
+fn gen_queue_program(g: &mut Gen) -> QueueProgram {
+    let n = g.usize_in(1, 120);
+    let mut seeds = Vec::with_capacity(n);
+    for i in 0..n {
+        seeds.push((boundary_time(g), tg(g.usize_in(0, 4) as u8, i as u32)));
+    }
+    let h1 = g.u64_in(0, 2_000_000_000);
+    let late = g.vec_of(0, 8, |g| {
+        (g.u64_in(0, 2_000_000_000), tg(g.usize_in(0, 4) as u8, 9_000 + g.u64_in(0, 99) as u32))
+    });
+    QueueProgram { seeds, h1, late, handler_seed: g.u64_in(0, u64::MAX / 2) }
+}
+
+// ---------------------------------------------------------------------------
+// The shrinker (shared by both layers)
+// ---------------------------------------------------------------------------
+
+/// ddmin-lite over one event list: greedily drop chunks of n/2, n/4, …, 1
+/// events while `fails` still reports a divergence. Returns whether the
+/// program got smaller.
+fn shrink_list<P: Clone, T>(
+    program: &mut P,
+    msg: &mut String,
+    list: fn(&mut P) -> &mut Vec<T>,
+    fails: impl Fn(&P) -> Option<String>,
+) -> bool {
+    let mut progressed = false;
+    let mut chunk = (list(program).len() / 2).max(1);
+    loop {
+        let mut i = 0;
+        while i < list(program).len() {
+            let mut cand = program.clone();
+            let hi = {
+                let v = list(&mut cand);
+                let hi = (i + chunk).min(v.len());
+                v.drain(i..hi);
+                hi
+            };
+            if let Some(m) = fails(&cand) {
+                *program = cand;
+                *msg = m;
+                progressed = true;
+            } else {
+                i = hi;
+            }
+        }
+        if chunk == 1 {
+            break;
+        }
+        chunk /= 2;
+    }
+    progressed
+}
+
+fn shrink_queue_program(mut p: QueueProgram) -> (QueueProgram, String) {
+    let mut msg = queue_fails(&p).expect("shrink called on a passing program");
+    loop {
+        let a = shrink_list(&mut p, &mut msg, |p| &mut p.seeds, queue_fails);
+        let b = shrink_list(&mut p, &mut msg, |p| &mut p.late, queue_fails);
+        if !a && !b {
+            break;
+        }
+    }
+    (p, msg)
+}
+
+#[test]
+fn differential_queue_conformance() {
+    check("engine-differential-queues", 48, |g| {
+        let p = gen_queue_program(g);
+        if queue_fails(&p).is_some() {
+            let (min, msg) = shrink_queue_program(p);
+            return Err(format!(
+                "queues diverged; minimal reproducing program: seeds={:?} \
+                 h1={} late={:?} handler_seed={}\n{msg}",
+                min.seeds, min.h1, min.late, min.handler_seed
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Layer 2: ShardedEngine vs the serial LaneRunner oracle
+// ---------------------------------------------------------------------------
+
+/// Department-shaped events over a shared node ledger. `Work` chains
+/// follow-ups (including zero-delay storms), `Claim` emits an effect the
+/// commit phase resolves against contended shared capacity, `Grant`
+/// travels back as a zero-delay lane event, and the globals exercise the
+/// serial-barrier path: capacity crash/recover, department join (grows the
+/// lanes vector mid-run) and leave (drains a lane's held nodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DEv {
+    Work { dept: u16, val: u32, chain: u8 },
+    Claim { dept: u16, want: u32 },
+    Grant { dept: u16, got: u32 },
+    Tick,
+    Crash,
+    Recover,
+    Join,
+    Leave { dept: u16 },
+}
+
+impl LaneEvent for DEv {
+    fn lane(&self) -> Option<usize> {
+        match *self {
+            DEv::Work { dept, .. } | DEv::Claim { dept, .. } | DEv::Grant { dept, .. } => {
+                Some(dept as usize)
+            }
+            DEv::Tick | DEv::Crash | DEv::Recover | DEv::Join | DEv::Leave { .. } => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct DLane {
+    digest: u64,
+    seen: u32,
+    held: u32,
+}
+
+fn fresh_lane(i: usize) -> DLane {
+    DLane { digest: i as u64 ^ 0x5DEECE66D, seen: 0, held: 0 }
+}
+
+struct DModel {
+    free: u32,
+    granted: u64,
+    ticks: u32,
+}
+
+impl DModel {
+    fn new() -> Self {
+        Self { free: 4, granted: 0, ticks: 0 }
+    }
+}
+
+impl ShardModel for DModel {
+    type Ev = DEv;
+    type Lane = DLane;
+    type Effect = (u16, u32);
+
+    fn on_lane(&self, lane: &mut DLane, ev: DEv, now: u64, out: &mut LaneOut<DEv, (u16, u32)>) {
+        match ev {
+            DEv::Work { dept, val, chain } => {
+                lane.seen += 1;
+                lane.digest = lane.digest.wrapping_mul(0x100000001b3) ^ now ^ u64::from(val);
+                if chain > 0 {
+                    // zero-delay keeps the storm at this timestamp; the far
+                    // hops cross the wheel windows
+                    let delay = [0, 1, 60, 4096, 10_000][val as usize % 5];
+                    let next = DEv::Work {
+                        dept,
+                        val: val.wrapping_mul(7).wrapping_add(1),
+                        chain: chain - 1,
+                    };
+                    out.after(delay, next);
+                }
+            }
+            DEv::Claim { dept, want } => out.effect((dept, want)),
+            DEv::Grant { got, .. } => {
+                lane.held += got;
+                lane.digest ^= u64::from(got).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ now;
+            }
+            _ => unreachable!("global event routed to a lane"),
+        }
+    }
+
+    fn commit(&mut self, lane: usize, eff: (u16, u32), now: u64, sched: &mut Schedule<DEv>) {
+        let (dept, want) = eff;
+        debug_assert_eq!(lane, dept as usize);
+        // contended shared capacity: the grant a department gets depends on
+        // the commit order, which is exactly what the id-ordered merge pins
+        let got = want.min(self.free);
+        self.free -= got;
+        self.granted += u64::from(got);
+        if got > 0 {
+            sched.at(now, DEv::Grant { dept, got });
+        }
+    }
+
+    fn on_global(&mut self, lanes: &mut Vec<DLane>, ev: DEv, now: u64, sched: &mut Schedule<DEv>) {
+        match ev {
+            DEv::Tick => {
+                self.ticks += 1;
+                self.free += 1;
+            }
+            DEv::Crash => self.free = self.free.saturating_sub(3),
+            DEv::Recover => self.free += 3,
+            DEv::Join => {
+                let dept = lanes.len() as u16;
+                lanes.push(fresh_lane(lanes.len()));
+                self.free += 2;
+                // the joiner immediately files work and a claim
+                sched.at(now, DEv::Work { dept, val: now as u32, chain: 1 });
+                sched.after(5, DEv::Claim { dept, want: 2 });
+            }
+            DEv::Leave { dept } => {
+                // a departed lane returns its held nodes to the pool
+                if let Some(l) = lanes.get_mut(dept as usize) {
+                    self.free += l.held;
+                    l.held = 0;
+                }
+            }
+            _ => unreachable!("lane event routed to on_global"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ShardProgram {
+    k0: usize,
+    seeds: Vec<(u64, DEv)>,
+    h1: u64,
+    late: Vec<(u64, DEv)>,
+}
+
+/// Everything observable after a run: final lane states, shared-model
+/// state, clock and processed count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct ShardOut {
+    lanes: Vec<DLane>,
+    free: u32,
+    granted: u64,
+    ticks: u32,
+    now: u64,
+    processed: u64,
+}
+
+fn fresh_lanes(k0: usize) -> Vec<DLane> {
+    (0..k0).map(fresh_lane).collect()
+}
+
+/// The serial oracle: the same model driven through [`LaneRunner`] on the
+/// heap-backed reference engine.
+fn oracle_shard_run(p: &ShardProgram) -> ShardOut {
+    let mut eng: ReferenceEngine<DEv> = Engine::new_reference();
+    let mut runner = LaneRunner::new(DModel::new(), fresh_lanes(p.k0));
+    for &(t, ev) in &p.seeds {
+        eng.schedule(t, ev);
+    }
+    eng.run_until(&mut runner, p.h1);
+    for &(t, ev) in &p.late {
+        eng.schedule(t, ev);
+    }
+    eng.run(&mut runner);
+    ShardOut {
+        lanes: runner.lanes,
+        free: runner.model.free,
+        granted: runner.model.granted,
+        ticks: runner.model.ticks,
+        now: eng.now(),
+        processed: eng.processed(),
+    }
+}
+
+fn sharded_run(p: &ShardProgram, workers: usize) -> ShardOut {
+    let mut eng = ShardedEngine::new(DModel::new(), fresh_lanes(p.k0), workers);
+    for &(t, ev) in &p.seeds {
+        eng.schedule(t, ev);
+    }
+    eng.run_until(p.h1);
+    for &(t, ev) in &p.late {
+        eng.schedule(t, ev);
+    }
+    eng.run();
+    let (now, processed) = (eng.now(), eng.processed());
+    let (model, lanes) = eng.into_parts();
+    ShardOut { lanes, free: model.free, granted: model.granted, ticks: model.ticks, now, processed }
+}
+
+/// Compare the sharded engine against the serial oracle at the serial
+/// layout, a fixed two-worker layout, and `workers = 0` (all cores).
+fn shard_fails(p: &ShardProgram) -> Option<String> {
+    let oracle = oracle_shard_run(p);
+    for workers in [1usize, 2, 0] {
+        let got = sharded_run(p, workers);
+        if got != oracle {
+            return Some(format!(
+                "ShardedEngine(workers={workers}) diverged from the serial \
+                 LaneRunner oracle:\n oracle: {oracle:?}\n got:    {got:?}"
+            ));
+        }
+    }
+    None
+}
+
+fn gen_shard_ev(g: &mut Gen, k0: usize) -> DEv {
+    let dept = g.usize_in(0, k0 - 1) as u16;
+    match g.usize_in(0, 9) {
+        0..=3 => {
+            DEv::Work { dept, val: g.u64_in(0, 1_000) as u32, chain: g.usize_in(0, 3) as u8 }
+        }
+        4 | 5 => DEv::Claim { dept, want: g.u64_in(0, 5) as u32 },
+        6 => DEv::Tick,
+        7 => *g.pick(&[DEv::Crash, DEv::Recover]),
+        8 => DEv::Join,
+        // may address a joiner's lane or one that never exists (guarded)
+        _ => DEv::Leave { dept: g.usize_in(0, k0 + 1) as u16 },
+    }
+}
+
+fn gen_shard_program(g: &mut Gen) -> ShardProgram {
+    let k0 = g.usize_in(1, 4);
+    let n = g.usize_in(1, 100);
+    let mut seeds = Vec::with_capacity(n);
+    for _ in 0..n {
+        seeds.push((boundary_time(g), gen_shard_ev(g, k0)));
+    }
+    let h1 = g.u64_in(0, 2_000_000_000);
+    let late = g.vec_of(0, 6, |g| (g.u64_in(0, 2_000_000_000), gen_shard_ev(g, k0)));
+    ShardProgram { k0, seeds, h1, late }
+}
+
+fn shrink_shard_program(mut p: ShardProgram) -> (ShardProgram, String) {
+    let mut msg = shard_fails(&p).expect("shrink called on a passing program");
+    loop {
+        let a = shrink_list(&mut p, &mut msg, |p| &mut p.seeds, shard_fails);
+        let b = shrink_list(&mut p, &mut msg, |p| &mut p.late, shard_fails);
+        if !a && !b {
+            break;
+        }
+    }
+    (p, msg)
+}
+
+#[test]
+fn differential_sharded_conformance() {
+    check("engine-differential-sharded", 32, |g| {
+        let p = gen_shard_program(g);
+        if shard_fails(&p).is_some() {
+            let (min, msg) = shrink_shard_program(p);
+            return Err(format!(
+                "sharded engine diverged; minimal reproducing program: \
+                 k0={} seeds={:?} h1={} late={:?}\n{msg}",
+                min.k0, min.seeds, min.h1, min.late
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pinned boundary regressions (literal traces, no randomness)
+// ---------------------------------------------------------------------------
+
+/// Follow-up-free recorder for the pinned traces.
+#[derive(Default)]
+struct Pin {
+    seen: Vec<(u64, Tagged)>,
+}
+
+impl EventHandler<Tagged> for Pin {
+    fn handle(&mut self, ev: Tagged, sched: &mut Schedule<Tagged>) {
+        self.seen.push((sched.now(), ev));
+    }
+}
+
+/// The PR-1 wheel's slot cursor wraps 4095 → 0; events past the initial
+/// window park in the overflow heap and come back after the idle jump.
+#[test]
+fn pinned_wheel_slot_wrap_4095_to_0() {
+    let mut eng = Engine::new();
+    let mut rec = Pin::default();
+    eng.schedule(0, tg(0, 10));
+    eng.schedule(4095, tg(1, 11)); // last slot of the initial window
+    eng.schedule(4096, tg(2, 12)); // one past: overflow heap
+    eng.schedule(4095, tg(3, 13)); // same slot, later seq — FIFO
+    eng.run(&mut rec);
+    let expect = vec![(0, tg(0, 10)), (4095, tg(1, 11)), (4095, tg(3, 13)), (4096, tg(2, 12))];
+    assert_eq!(rec.seen, expect);
+    assert_eq!(eng.now(), 4096);
+    assert_eq!(eng.processed(), 4);
+}
+
+/// Far-future events hand off wheel → heap → wheel across idle jumps, and
+/// stragglers scheduled after a jump clamp to the jumped-to clock.
+#[test]
+fn pinned_wheel_overflow_heap_handoff() {
+    let mut eng = Engine::new();
+    let mut rec = Pin::default();
+    eng.schedule(10_000, tg(0, 1));
+    eng.schedule(50_000, tg(0, 2));
+    eng.schedule(12, tg(0, 3));
+    eng.run(&mut rec);
+    assert_eq!(rec.seen, vec![(12, tg(0, 3)), (10_000, tg(0, 1)), (50_000, tg(0, 2))]);
+    eng.schedule(5, tg(0, 4)); // now = 50_000: clamps, never panics
+    eng.run(&mut rec);
+    assert_eq!(rec.seen.last(), Some(&(50_000, tg(0, 4))));
+    assert_eq!(eng.processed(), 4);
+}
+
+/// `Engine::schedule` clamps past times to `now` identically behind every
+/// queue, including after `run_until` lands the clock on the horizon.
+#[test]
+fn pinned_schedule_clamp_identical_across_queues() {
+    fn run<Q: EventQueue<Tagged>>(mut eng: Engine<Tagged, Q>) -> Vec<(u64, Tagged)> {
+        let mut rec = Pin::default();
+        eng.schedule(100, tg(1, 1));
+        eng.run_until(&mut rec, 2_000);
+        assert_eq!(eng.now(), 2_000, "clock must land on the horizon");
+        eng.schedule(150, tg(2, 2)); // in the past — clamps to 2000
+        eng.schedule(2_000, tg(0, 3)); // exactly at now
+        eng.run(&mut rec);
+        rec.seen
+    }
+    let expect = vec![(100, tg(1, 1)), (2_000, tg(2, 2)), (2_000, tg(0, 3))];
+    assert_eq!(run(Engine::new_reference()), expect);
+    assert_eq!(run(Engine::new()), expect);
+    assert_eq!(run(Engine::with_queue(HierWheel::default())), expect);
+    assert_eq!(run(Engine::with_queue(LaneQueue::default())), expect);
+}
+
+/// Equal-timestamp storms deliver FIFO in schedule order everywhere — in
+/// particular through the lane queue's cross-lane `(time, seq)` merge.
+#[test]
+fn pinned_equal_timestamp_storm_fifo_everywhere() {
+    fn run<Q: EventQueue<Tagged>>(mut eng: Engine<Tagged, Q>) -> Vec<(u64, Tagged)> {
+        let mut rec = Pin::default();
+        for i in 0..64u32 {
+            eng.schedule(7, tg((i % 5) as u8, i));
+        }
+        eng.run(&mut rec);
+        rec.seen
+    }
+    let oracle = run(Engine::new_reference());
+    assert!(oracle.iter().all(|&(t, _)| t == 7));
+    let tags: Vec<u32> = oracle.iter().map(|&(_, e)| e.tag).collect();
+    assert_eq!(tags, (0..64).collect::<Vec<_>>());
+    assert_eq!(run(Engine::new()), oracle);
+    assert_eq!(run(Engine::with_queue(HierWheel::default())), oracle);
+    assert_eq!(run(Engine::with_queue(LaneQueue::default())), oracle);
+}
+
+/// A fixed adversarial program through every worker layout: ledger
+/// contention at t=0, a join and more work at t=7, a capacity crash at the
+/// window edge, leave/recover at 10 000 and a late past-time straggler.
+#[test]
+fn sharded_layouts_agree_on_a_fixed_program() {
+    let p = ShardProgram {
+        k0: 3,
+        seeds: vec![
+            (0, DEv::Work { dept: 0, val: 3, chain: 2 }),
+            (0, DEv::Claim { dept: 1, want: 3 }),
+            (0, DEv::Claim { dept: 2, want: 3 }), // contends: only 4 free
+            (7, DEv::Join),
+            (7, DEv::Work { dept: 1, val: 9, chain: 1 }),
+            (4096, DEv::Crash),
+            (4096, DEv::Claim { dept: 0, want: 2 }),
+            (10_000, DEv::Leave { dept: 2 }),
+            (10_000, DEv::Recover),
+            (60_000, DEv::Tick),
+        ],
+        h1: 5_000,
+        late: vec![(100, DEv::Work { dept: 2, val: 1, chain: 0 })], // past → clamps
+    };
+    assert_eq!(shard_fails(&p), None);
+    let out = oracle_shard_run(&p);
+    assert_eq!(out.lanes.len(), 4, "the t=7 join must add a lane");
+    assert_eq!(out.ticks, 1);
+    assert!(out.processed > p.seeds.len() as u64, "chains and grants must fire");
+    // seq order resolves the t=0 contention: dept 1 claimed first
+    assert_eq!(out.lanes[1].held, 3);
+    assert_eq!(out.lanes[2].held, 0, "dept 2 got the 1 leftover, then left");
+}

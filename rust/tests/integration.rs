@@ -161,7 +161,8 @@ fn department_config_drives_a_k3_lease_run() {
 #[test]
 fn shipped_scenario_config_parses_and_validates() {
     let cfg = ExperimentConfig::from_file("configs/scenarios.toml").unwrap();
-    assert_eq!(cfg.scenarios.len(), 5);
+    // kept in lockstep with configs/scenarios.toml (this list went stale
+    // when "flaky-fleet" shipped and hid behind the rest of the suite)
     let names: Vec<&str> = cfg.scenarios.iter().map(|s| s.name.as_str()).collect();
     assert_eq!(
         names,
@@ -170,14 +171,21 @@ fn shipped_scenario_config_parses_and_validates() {
             "portal-farm",
             "hpc-shop-short-lease",
             "tiered-80pct",
+            "flaky-fleet",
+            "late-affiliates",
             "correlated-portals"
         ]
     );
     assert_eq!(cfg.scenarios[1].policy_kind, "mixed");
     assert_eq!(cfg.scenarios[2].lease_secs, 600);
     assert_eq!(cfg.scenarios[3].frac, Some(0.8));
-    assert_eq!(cfg.scenarios[4].correlation, Some(0.8));
-    assert_eq!(cfg.scenarios[4].trace, None);
+    assert_eq!(cfg.scenarios[4].mtbf, Some(86400.0));
+    assert_eq!(cfg.scenarios[5].joiners, 2);
+    assert_eq!(cfg.scenarios[5].join_at, 7200);
+    assert_eq!(cfg.scenarios[6].correlation, Some(0.8));
+    assert_eq!(cfg.scenarios[6].trace, None);
+    // every boot-time cell leaves the join axis at its defaults
+    assert!(cfg.scenarios[..5].iter().all(|s| s.joiners == 0 && s.join_at == 0));
     // the shipped departments roster still parses too
     let cfg = ExperimentConfig::from_file("configs/departments.toml").unwrap();
     assert_eq!(cfg.departments.len(), 4);
@@ -259,7 +267,9 @@ fn swf_fixture_drives_the_matrix() {
         &matrix::matrix_json(&cells, true).to_string(),
     )
     .unwrap();
-    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(2));
+    // kept in lockstep with `matrix_json` (this assert went stale at
+    // schema v3 and hid behind the rest of the suite)
+    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(4));
     assert_eq!(
         doc.get("cells").unwrap().as_arr().unwrap().len(),
         cells.len()

@@ -4,7 +4,7 @@
 //! failures print a `PHOENIX_PROP_SEED` that reproduces them exactly.
 
 use phoenix_cloud::cluster::{DeptId, DeptKind, Ledger};
-use phoenix_cloud::config::{ExperimentConfig, KillOrder, RosterMix, SchedulerKind};
+use phoenix_cloud::config::{ExperimentConfig, KillOrder, RosterMix, ScenarioSpec, SchedulerKind};
 use phoenix_cloud::coordinator::{ConsolidationSim, DeptInput, DeptWorkload};
 use phoenix_cloud::experiments::matrix::{self, MatrixAxes, PolicyAxis, SizeScan};
 use phoenix_cloud::prop_assert;
@@ -416,6 +416,19 @@ fn prop_wheel_matches_reference_heap() {
         prop_assert!(got.1 == want.1, "now: wheel {} heap {}", got.1, want.1);
         prop_assert!(got.2 == want.2, "processed: wheel {} heap {}", got.2, want.2);
         prop_assert!(got.3 == want.3, "len at horizon: wheel {} heap {}", got.3, want.3);
+
+        // The hierarchical wheel rides the same contract (the lane queue
+        // needs lane-addressed events, so its conformance — and the
+        // adversarial boundary programs for all four queues — lives in
+        // tests/engine_differential.rs).
+        let mut hier = Engine::with_queue(phoenix_cloud::sim::HierWheel::default());
+        let got_h = drive(&mut hier, hseed, &seeds, h1, &late);
+        prop_assert!(
+            got_h == want,
+            "hier wheel diverged from the heap: {:?} vs {:?}",
+            got_h.0.iter().zip(&want.0).find(|(a, b)| a != b),
+            (got_h.1, got_h.2, got_h.3, want.1, want.2, want.3)
+        );
         Ok(())
     });
 }
@@ -700,6 +713,44 @@ fn prop_k2_anchor_bit_identical_through_bisect_scan() {
     assert!(
         matrix::verify_anchor(&base, &cells).unwrap(),
         "bisecting scan lost the fig7/fig8 anchor run"
+    );
+
+    // The anchor also survives the `[[scenario]]` path with the join axis
+    // in play: a joiner cell listed *first* must be skipped (a deferred
+    // department changes the run the fig7/fig8 pair booted at t = 0), and
+    // the plain K = 2 cooperative sibling behind it must still replay the
+    // anchor bit for bit.
+    let scen = |name: &str, joiners: usize, join_at: u64, frac: Option<f64>| ScenarioSpec {
+        name: name.into(),
+        k: 2,
+        mix: RosterMix::Alternating,
+        policy_kind: "cooperative".into(),
+        lease_secs: 1800,
+        load: None,
+        frac,
+        trace: None,
+        correlation: None,
+        mtbf: None,
+        mttr: None,
+        fault_seed: None,
+        efficiency: None,
+        joiners,
+        join_at,
+    };
+    let scen_cells = matrix::run_scenarios(
+        &base,
+        &[scen("late-joiner", 1, 7_200, Some(1.0)), scen("anchor-shaped", 0, 0, None)],
+    )
+    .unwrap();
+    assert_eq!(scen_cells[0].joiners, 1, "join axis must reach the cell");
+    assert!(
+        scen_cells[1].runs.iter().any(|r| r.nodes == base.total_nodes),
+        "scenario bisect must warm-start at the paper's {} nodes",
+        base.total_nodes
+    );
+    assert!(
+        matrix::verify_anchor(&base, &scen_cells).unwrap(),
+        "scenario path lost the fig7/fig8 anchor (or failed to skip the joiner cell)"
     );
 }
 

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate an out/matrix.json table against schema version 3.
+"""Validate an out/matrix.json table against schema version 4.
 
 Used by CI after both matrix smokes (the synthetic quick grid and the
 trace-driven run against the bundled SWF fixture):
@@ -17,6 +17,11 @@ summed dedicated-cluster completions gating the scan) and
 check); per run "crashes", "crash_kills", "availability" and
 "mean_recovery_s".  With fault injection off every run must report zero
 crashes and availability 1.0 bit-exactly.
+
+Schema v4 = v3 + the per-cell join axis: "joiners" (trailing roster
+members that join mid-run) and "join_at" (the virtual second they
+arrive; 0 when joiners is 0).  Joiner cells are skipped by the anchor
+check, exactly like trace-driven and fault-overridden ones.
 """
 
 import argparse
@@ -24,9 +29,10 @@ import json
 import sys
 
 CELL_KEYS = (
-    "name", "k", "mix", "policy", "lease_secs", "load", "dedicated_nodes",
-    "baseline_completed", "scan", "trace_driven", "fault_overridden",
-    "required_nodes", "required_frac", "runs", "per_dept",
+    "name", "k", "mix", "policy", "lease_secs", "load", "joiners",
+    "join_at", "dedicated_nodes", "baseline_completed", "scan",
+    "trace_driven", "fault_overridden", "required_nodes", "required_frac",
+    "runs", "per_dept",
 )
 RUN_KEYS = (
     "nodes", "frac", "completed", "killed", "in_flight",
@@ -56,7 +62,7 @@ def main() -> int:
     with open(args.path) as f:
         doc = json.load(f)
     assert doc["suite"] == "matrix", doc.get("suite")
-    assert doc["schema_version"] == 3, doc.get("schema_version")
+    assert doc["schema_version"] == 4, doc.get("schema_version")
     assert isinstance(doc["quick"], bool)
     cells = doc["cells"]
     assert cells, "no matrix cells recorded"
@@ -66,6 +72,11 @@ def main() -> int:
             assert key in c, f"cell missing {key}: {sorted(c)}"
         assert c["scan"] in ("bisect", "linear-oracle", "fracs"), c["scan"]
         assert isinstance(c["trace_driven"], bool), c["name"]
+        assert 0 <= c["joiners"] < c["k"], \
+            f"cell {c['name']}: joiners {c['joiners']} of k {c['k']}"
+        if c["joiners"]:
+            assert c["join_at"] > 0, \
+                f"cell {c['name']}: joiners without a join time"
         if args.expect_trace_driven:
             assert c["trace_driven"], f"cell {c['name']} not trace-driven"
         assert c["runs"], f"cell {c['name']} has no runs"
