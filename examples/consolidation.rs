@@ -26,6 +26,8 @@ fn main() -> anyhow::Result<()> {
     );
     println!("WS trace : autoscaled WorldCup-like demand, peak 64 instances\n");
 
+    // examples report wall time to the terminal; nothing simulated reads it
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     let results = consolidation::sweep(&base, &sizes)?;
     println!("{}", report::sweep_text(&results));

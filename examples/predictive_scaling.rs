@@ -68,6 +68,8 @@ fn main() -> anyhow::Result<()> {
         rows.push((util_hist.clone(), rate_hist.clone(), target));
     }
     // SGD over shuffled batches of S rows via the AOT train_step
+    // examples report wall time to the terminal; nothing simulated reads it
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     let mut losses = Vec::new();
     let epochs = 3usize;
@@ -112,6 +114,7 @@ fn main() -> anyhow::Result<()> {
     let (mut r_short, mut p_short) = (0u64, 0u64); // overload samples
     let (mut r_over, mut p_over) = (0f64, 0f64); // mean over-provision
     let week2 = &rates.rates[samples_per_week..];
+    #[allow(clippy::disallowed_methods)]
     let t1 = std::time::Instant::now();
     let mut forecast_calls = 0u64;
     for &rate in week2 {

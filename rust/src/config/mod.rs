@@ -837,7 +837,7 @@ mod tests {
     #[test]
     fn toml_experiments_engine() {
         let mut cfg = ExperimentConfig::default();
-        assert_eq!(cfg.engine, EngineKind::Wheel, "seed default is the PR-1 wheel");
+        assert_eq!(cfg.engine, EngineKind::Hier, "default engine is hier since PR 8");
         let doc = crate::util::toml::parse("[experiments]\nengine = \"hier\"\n").unwrap();
         cfg.apply_toml(&doc).unwrap();
         assert_eq!(cfg.engine, EngineKind::Hier);

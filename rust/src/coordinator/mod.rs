@@ -885,6 +885,7 @@ impl ConsolidationSim {
             .pending_joins
             .iter()
             .position(|j| j.profile.id == dept)
+            // phoenix-lint: allow(panic_path): drivers enqueue the pending join before posting DeptJoin
             .expect("DeptJoin event without a pending join");
         let join = self.pending_joins.remove(pos);
         self.rps.join(join.profile, now);

@@ -237,6 +237,7 @@ impl Service for RpsSvc {
                     self.pending_force.iter().position(|&(v, _)| v == dept)
                 {
                     let (victim, claimant) =
+                        // phoenix-lint: allow(panic_path): index came from position() on this deque
                         self.pending_force.remove(i).expect("position just found");
                     self.rps.complete_force(victim, claimant, nodes, now);
                     ctx.send_to_dept(claimant, Msg::Grant { dept: claimant, nodes });
@@ -565,6 +566,10 @@ pub struct ServeReport {
     pub label: String,
     pub cluster_nodes: u64,
     pub sim_seconds: u64,
+    /// Wall-clock duration of the run. The deterministic serve loop never
+    /// reads the wall clock (lint rule R1): this is left at
+    /// [`Duration::ZERO`] by [`serve_config`] and stamped by the CLI
+    /// boundary (`cmd_serve`), the one place that may time the call.
     pub wall: Duration,
     pub ticks: u64,
     pub messages: u64,
@@ -770,6 +775,7 @@ pub fn serve_roster(
     for (d, n) in rps.provision_idle(&batch_ids, 0) {
         boot_batch[d.index()]
             .as_mut()
+            // phoenix-lint: allow(panic_path): provision_idle was given only batch ids
             .expect("idle grants target batch departments")
             .grant(n);
     }
@@ -833,7 +839,15 @@ pub fn serve_roster(
     let fault_events = crate::faults::schedule(&cfg.faults, sim_seconds, total);
     let mut next_fault = 0usize;
     let limit = 10_000u64.max(100 * (n_boot as u64 + joiners.len() as u64 + 2));
-    let started = Instant::now();
+    // Wall-clock anchor for optional realtime pacing (`--speedup N`): the
+    // sleep at the bottom of the loop only *delays* execution; virtual time
+    // (`now`) drives every simulated decision, so determinism is untouched.
+    // Regression note: this read previously sat unconditionally on the tick
+    // path and leaked into ServeReport.wall — see ARCHITECTURE.md
+    // §"Determinism contract".
+    #[allow(clippy::disallowed_methods)] // Instant::now — same pacing-only justification
+    // phoenix-lint: allow(wall_clock): pacing-only anchor, gated on speedup; no simulated state reads it
+    let pacing_anchor = (speedup > 0).then(Instant::now);
     let mut ticks = 0u64;
     let mut now = 0u64;
     let mut next_join = 0usize;
@@ -844,6 +858,7 @@ pub fn serve_roster(
         // runtime arrivals due by this tick join before anyone ticks: the
         // RPS must know the department before its first claim routes
         while joiners.front().is_some_and(|d| d.spec.join_at <= now) {
+            // phoenix-lint: allow(panic_path): front() checked is_some by the loop guard
             let d = joiners.pop_front().expect("front just checked");
             let dept = DeptId((n_boot + next_join) as u16);
             next_join += 1;
@@ -897,9 +912,9 @@ pub fn serve_roster(
         }
         ticks += 1;
         now += tick_step;
-        if speedup > 0 {
+        if let Some(anchor) = pacing_anchor {
             let wall_target = Duration::from_secs_f64(now as f64 / speedup as f64);
-            let elapsed = started.elapsed();
+            let elapsed = anchor.elapsed();
             if wall_target > elapsed {
                 std::thread::sleep(wall_target - elapsed);
             }
@@ -945,7 +960,7 @@ pub fn serve_roster(
         label,
         cluster_nodes: total,
         sim_seconds,
-        wall: started.elapsed(),
+        wall: Duration::ZERO, // stamped by the CLI boundary, see ServeReport::wall
         ticks,
         messages: bus.delivered,
         submitted,
@@ -993,11 +1008,13 @@ pub fn serve_config(
         .map(|(i, spec)| {
             let workload = match spec.kind {
                 DeptKind::Batch => ServeWorkload::Batch(
+                    // phoenix-lint: allow(panic_path): build_traces builds a job trace per batch dept
                     traces.batch_jobs(i).expect("batch departments carry a job trace"),
                 ),
                 DeptKind::Service => ServeWorkload::Service {
                     rates: traces
                         .service_rates(i)
+                        // phoenix-lint: allow(panic_path): build_traces builds a rate series per service dept
                         .expect("service departments carry a rate series"),
                     scaler: scaler_for(spec, cfg),
                     boot_instances: traces.service_boot_instances(i).unwrap_or(1),

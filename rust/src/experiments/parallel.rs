@@ -44,13 +44,16 @@ where
                     break;
                 }
                 let r = f(i);
+                // phoenix-lint: allow(panic_path): poisoned mutex means a worker panicked — propagate
                 out.lock().unwrap()[i] = Some(r);
             });
         }
     });
     out.into_inner()
+        // phoenix-lint: allow(panic_path): poison propagation, same as the lock above
         .unwrap()
         .into_iter()
+        // phoenix-lint: allow(panic_path): the scope joined every worker, so every slot is filled
         .map(|r| r.expect("worker dropped a result"))
         .collect()
 }

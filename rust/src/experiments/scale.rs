@@ -200,9 +200,11 @@ pub(crate) fn build_traces(specs: &[DeptSpec], base: &ExperimentConfig) -> Resul
 pub(crate) fn dept_input(spec: &DeptSpec, traces: &DeptTraces, idx: usize, cap: u64) -> DeptInput {
     let workload = match spec.kind {
         DeptKind::Batch => {
+            // phoenix-lint: allow(panic_path): build_traces fills jobs[i] for every batch dept
             DeptWorkload::Batch(traces.jobs[idx].as_ref().expect("batch trace").clone())
         }
         DeptKind::Service => {
+            // phoenix-lint: allow(panic_path): build_traces fills demand[i] for every service dept
             let t = traces.demand[idx].as_ref().expect("service trace");
             let series = if cap >= t.peak {
                 t.series.clone()

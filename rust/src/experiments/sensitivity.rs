@@ -97,7 +97,9 @@ pub fn across_loads(
         cfg.workers = 1;
         cfg.hpc.target_load = load;
         let mut results = consolidation::sweep(&cfg, &[dc_size])?;
+        // phoenix-lint: allow(panic_path): sweep returns exactly [SC, DC] for one size
         let dc = results.pop().expect("sweep returns SC + DC");
+        // phoenix-lint: allow(panic_path): second of the sweep's two entries
         let sc = results.pop().expect("sweep returns SC + DC");
         Ok((load, sc, dc))
     })

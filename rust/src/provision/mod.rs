@@ -57,6 +57,7 @@ impl Rps {
         if d.from_free > 0 {
             self.ledger
                 .grant(dept, d.from_free)
+                // phoenix-lint: allow(panic_path): conservation invariant — the property suite proves every built-in respects from_free <= free()
                 .expect("policy over-granted free nodes");
         }
         if !d.force.is_empty() {
@@ -71,6 +72,7 @@ impl Rps {
     pub fn complete_force(&mut self, from: DeptId, to: DeptId, n: u64, now: SimTime) {
         self.ledger
             .transfer(from, to, n)
+            // phoenix-lint: allow(panic_path): conservation invariant — forced amounts are capped by the victim's holdings
             .expect("forced transfer exceeded the victim's holding");
         self.policy.on_force(from, n, now);
     }
@@ -79,6 +81,7 @@ impl Rps {
     pub fn release(&mut self, dept: DeptId, n: u64, now: SimTime) {
         self.ledger
             .release(dept, n)
+            // phoenix-lint: allow(panic_path): conservation invariant — drivers release only nodes the CMS holds
             .expect("department released more than it held");
         self.policy.on_release(dept, n, now);
     }
@@ -93,6 +96,7 @@ impl Rps {
     ) -> Vec<(DeptId, u64)> {
         let grants = self.policy.idle_grants(&self.ledger, eligible, now);
         for &(d, n) in &grants {
+            // phoenix-lint: allow(panic_path): conservation invariant — idle_grants must sum to <= free()
             self.ledger.grant(d, n).expect("idle grant exceeded free pool");
         }
         grants
@@ -103,6 +107,7 @@ impl Rps {
     pub fn bootstrap_grant(&mut self, dept: DeptId, n: u64) -> u64 {
         let grant = n.min(self.ledger.free());
         if grant > 0 {
+            // phoenix-lint: allow(panic_path): grant was min()-ed against free() on the line above
             self.ledger.grant(dept, grant).expect("bootstrap grant overdraw");
         }
         grant
@@ -120,6 +125,7 @@ impl Rps {
         if returned > 0 {
             self.ledger
                 .release(dept, returned)
+                // phoenix-lint: allow(panic_path): the driver caps lease returns by the department's idle holding
                 .expect("lease returned more than the department held");
         }
         if renewed > 0 {
@@ -156,6 +162,7 @@ impl Rps {
         if held > 0 {
             self.ledger
                 .release(dept, held)
+                // phoenix-lint: allow(panic_path): held was read from the same ledger two lines up
                 .expect("leave releases exactly what the department held");
         }
         self.policy.on_leave(dept, now);
@@ -171,7 +178,9 @@ impl Rps {
             Some(dept) => self
                 .ledger
                 .crash_held(dept, n)
+                // phoenix-lint: allow(panic_path): fault driver caps crashes by the holder's live nodes
                 .expect("crash exceeded the holder's nodes"),
+            // phoenix-lint: allow(panic_path): fault driver caps crashes by the free pool
             None => self.ledger.crash_free(n).expect("crash exceeded the free pool"),
         }
         self.policy.on_crash(holder, n, now);
@@ -181,6 +190,7 @@ impl Rps {
     /// the policy is told so the driver's next re-provisioning pass can
     /// hand them out.
     pub fn recover(&mut self, n: u64, now: SimTime) {
+        // phoenix-lint: allow(panic_path): recoveries are paired 1:1 with earlier crashes by the schedule
         self.ledger.recover(n).expect("recovered more nodes than were down");
         self.policy.on_recover(n, now);
     }

@@ -26,9 +26,14 @@
 //!
 //! # Implementing a custom policy
 //!
+//! Spell out the whole lifecycle surface — `on_join`/`on_leave` (dynamic
+//! affiliation) and `on_crash`/`on_recover` (fault injection) — even when
+//! a hook is a deliberate no-op; the in-tree lint (`cargo run -p
+//! phoenix-lint`, rule R4) rejects impls that silently inherit them:
+//!
 //! ```
 //! use phoenix_cloud::cluster::{DeptId, Ledger};
-//! use phoenix_cloud::provision::{ProvisionDecision, ProvisionPolicy};
+//! use phoenix_cloud::provision::{DeptProfile, ProvisionDecision, ProvisionPolicy};
 //! use phoenix_cloud::sim::SimTime;
 //!
 //! /// Grants from the free pool only — never forces, never denies less.
@@ -59,6 +64,15 @@
 //!     ) -> Vec<(DeptId, u64)> {
 //!         Vec::new() // hoard the free pool for future requests
 //!     }
+//!
+//!     // profile-free policy: joins/leaves change nothing it tracks
+//!     fn on_join(&mut self, _profile: DeptProfile, _now: SimTime) {}
+//!     fn on_leave(&mut self, _dept: DeptId, _now: SimTime) {}
+//!
+//!     // stateless w.r.t. grants: the ledger already reflects the crash,
+//!     // and recovered nodes re-enter via the free pool
+//!     fn on_crash(&mut self, _holder: Option<DeptId>, _n: u64, _now: SimTime) {}
+//!     fn on_recover(&mut self, _n: u64, _now: SimTime) {}
 //! }
 //!
 //! let mut policy = FreeOnly;
@@ -392,10 +406,14 @@ impl ProvisionPolicy for Cooperative {
         remove_profile(&mut self.depts, dept);
     }
 
-    // on_crash / on_recover: the cooperative policy keys every decision on
-    // the live ledger, so the trait defaults (no-op) are its complete
-    // crash semantics — recovered nodes re-enter via the free pool and the
-    // driver's re-provisioning pass.
+    /// Deliberate no-op: cooperative keys every decision on the live
+    /// ledger, which already reflects the crash; there is no per-grant
+    /// state to void (lint rule R4 wants this spelled out, not inherited).
+    fn on_crash(&mut self, _holder: Option<DeptId>, _n: u64, _now: SimTime) {}
+
+    /// Deliberate no-op: recovered nodes re-enter via the free pool and
+    /// the driver's re-provisioning pass.
+    fn on_recover(&mut self, _n: u64, _now: SimTime) {}
 }
 
 // ---- static partition (the SC baseline), N departments ----------------------
@@ -463,6 +481,14 @@ impl ProvisionPolicy for StaticPartition {
     fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
         remove_profile(&mut self.depts, dept);
     }
+
+    /// Deliberate no-op: quotas are headroom checks against the live
+    /// ledger; a crash shrinks holdings and headroom follows automatically.
+    fn on_crash(&mut self, _holder: Option<DeptId>, _n: u64, _now: SimTime) {}
+
+    /// Deliberate no-op: repaired nodes rejoin the free pool and are
+    /// re-granted by the quota-capped `idle_grants` pass.
+    fn on_recover(&mut self, _n: u64, _now: SimTime) {}
 }
 
 // ---- proportional share (ablation), N departments ---------------------------
@@ -528,6 +554,13 @@ impl ProvisionPolicy for ProportionalShare {
     fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
         remove_profile(&mut self.depts, dept);
     }
+
+    /// Deliberate no-op: like cooperative, decisions read the live ledger
+    /// only; the service-priority force path needs no crash bookkeeping.
+    fn on_crash(&mut self, _holder: Option<DeptId>, _n: u64, _now: SimTime) {}
+
+    /// Deliberate no-op: recovery flows through the free pool.
+    fn on_recover(&mut self, _n: u64, _now: SimTime) {}
 }
 
 // ---- lease-based cooperative (arXiv:1006.1401) ------------------------------
@@ -685,6 +718,11 @@ impl ProvisionPolicy for LeaseBased {
         self.drop_leased(dept, u64::MAX);
         remove_profile(&mut self.depts, dept);
     }
+
+    /// Deliberate no-op: crashed nodes already left the lease book via
+    /// [`ProvisionPolicy::on_crash`]; repaired nodes re-enter the free
+    /// pool and pick up fresh leases when re-granted.
+    fn on_recover(&mut self, _n: u64, _now: SimTime) {}
 }
 
 // ---- priority-tiered cooperative --------------------------------------------
@@ -780,6 +818,14 @@ impl ProvisionPolicy for TieredCooperative {
     fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
         remove_profile(&mut self.depts, dept);
     }
+
+    /// Deliberate no-op: tier ranking reads the live ledger per decision;
+    /// a crash shrinks the victim's holdings and the cascade adapts.
+    fn on_crash(&mut self, _holder: Option<DeptId>, _n: u64, _now: SimTime) {}
+
+    /// Deliberate no-op: repaired nodes rejoin the free pool and flow to
+    /// the top eligible tier on the next `idle_grants` pass.
+    fn on_recover(&mut self, _n: u64, _now: SimTime) {}
 }
 
 // ---- convenience constructors -----------------------------------------------

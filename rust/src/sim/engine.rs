@@ -212,6 +212,7 @@ impl<E, Q: EventQueue<E>> Engine<E, Q> {
             if next > horizon {
                 break;
             }
+            // phoenix-lint: allow(panic_path): next_time() just returned Some, so the queue is non-empty
             let (t, ev) = self.queue.pop().expect("next_time reported an event");
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;

@@ -235,6 +235,7 @@ impl<E> EventQueue<E> for HierWheel<E> {
                 if e.time - self.l1_base >= L1_SPAN {
                     break;
                 }
+                // phoenix-lint: allow(panic_path): peeked non-empty just above; pop cannot fail
                 let Reverse(e) = self.overflow.pop().unwrap();
                 let j = ((e.time - self.l1_base) / SLOTS as u64) as usize;
                 self.l1[j].push((e.time, e.ev));
@@ -254,6 +255,7 @@ impl<E> EventQueue<E> for HierWheel<E> {
             let t = self.next_time()?;
             if let Some(Reverse(e)) = self.overflow.peek() {
                 if e.time < self.l0_start {
+                    // phoenix-lint: allow(panic_path): guarded by the peek on the line above
                     let Reverse(e) = self.overflow.pop().unwrap();
                     self.len -= 1;
                     return Some((e.time, e.ev));

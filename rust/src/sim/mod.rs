@@ -48,10 +48,15 @@ pub type SimTime = u64;
 pub enum EngineKind {
     /// Binary-heap oracle — O(log n) per event.
     Reference,
-    /// PR-1 one-level timing wheel (the long-standing default).
-    #[default]
+    /// PR-1 one-level timing wheel (the default through PR 7; still
+    /// selectable with `--engine wheel` and pinned bit-identical to
+    /// `hier` by `prop_engine_default_hier_bit_identical_to_wheel`
+    /// in properties.rs).
     Wheel,
     /// Two-level hierarchical wheel — far horizons stay heap-free.
+    /// The default since PR 8: same outputs as `wheel` (differentially
+    /// proven), lower cost on long-horizon runs.
+    #[default]
     Hier,
     /// Per-department lane queues with a deterministic `(time, seq)`
     /// merge (lane-partitioned storage; the coordinator's handler stays
@@ -99,6 +104,6 @@ mod kind_tests {
         assert_eq!(EngineKind::parse("heap"), Ok(EngineKind::Reference));
         assert_eq!(EngineKind::parse("hierarchical"), Ok(EngineKind::Hier));
         assert!(EngineKind::parse("quantum").is_err());
-        assert_eq!(EngineKind::default(), EngineKind::Wheel);
+        assert_eq!(EngineKind::default(), EngineKind::Hier, "hier is the default since PR 8");
     }
 }

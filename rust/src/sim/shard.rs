@@ -104,6 +104,7 @@ impl<E> LaneQueue<E> {
     /// Pop the head in `(time, seq)` order, keeping the seq.
     pub fn pop_entry(&mut self) -> Option<(SimTime, u64, E)> {
         let (li, _, _) = self.best()?;
+        // phoenix-lint: allow(panic_path): best() just located a non-empty lane
         let (t, (seq, ev)) = self.lanes[li].pop().expect("peeked head vanished");
         self.len -= 1;
         Some((t, seq, ev))
@@ -362,6 +363,7 @@ impl<M: ShardModel> ShardedEngine<M> {
                     .collect();
                 handles
                     .into_iter()
+                    // phoenix-lint: allow(panic_path): join() only errs if a worker panicked — propagate
                     .map(|h| h.join().expect("lane worker panicked"))
                     .collect()
             });
@@ -389,7 +391,9 @@ impl<M: ShardModel> ShardedEngine<M> {
             loop {
                 match self.queue.peek_meta() {
                     Some((tt, _, Some(_))) if tt == t => {
+                        // phoenix-lint: allow(panic_path): peek_meta() just returned Some at this time
                         let (_, seq, ev) = self.queue.pop_entry().expect("peeked head vanished");
+                        // phoenix-lint: allow(panic_path): peek_meta() reported Some(lane) for this head
                         let lane = ev.lane().expect("peek said lane event");
                         group.push((seq, lane, ev));
                     }
@@ -398,6 +402,7 @@ impl<M: ShardModel> ShardedEngine<M> {
             }
             if group.is_empty() {
                 // head is a global event at t: a serial barrier
+                // phoenix-lint: allow(panic_path): next_time() returned Some, so the queue is non-empty
                 let (_, _, ev) = self.queue.pop_entry().expect("next_time reported an event");
                 self.processed += 1;
                 let mut sched = Schedule::new(t, std::mem::take(&mut self.scratch));

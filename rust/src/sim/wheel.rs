@@ -156,6 +156,7 @@ impl<E> EventQueue<E> for TimingWheel<E> {
                 if e.time - self.start >= WHEEL_SLOTS as u64 {
                     break;
                 }
+                // phoenix-lint: allow(panic_path): peeked non-empty just above; pop cannot fail
                 let Reverse(e) = self.overflow.pop().unwrap();
                 let idx = (e.time - self.start) as usize;
                 self.slots[idx].push(e.ev);
@@ -174,6 +175,7 @@ impl<E> EventQueue<E> for TimingWheel<E> {
             let t = self.next_time()?;
             if let Some(Reverse(e)) = self.overflow.peek() {
                 if e.time < self.start {
+                    // phoenix-lint: allow(panic_path): guarded by the peek on the line above
                     let Reverse(e) = self.overflow.pop().unwrap();
                     self.len -= 1;
                     return Some((e.time, e.ev));

@@ -139,6 +139,7 @@ impl StServer {
             let shortfall = n - self.idle();
             let victims = kill::pick_victims(&self.running, shortfall, self.kill_order, now);
             for id in victims {
+                // phoenix-lint: allow(panic_path): pick_victims draws ids from this same running map
                 let rj = self.running.remove(&id).expect("victim not running");
                 self.busy -= rj.size;
                 self.outcomes.push(JobOutcome {

@@ -31,6 +31,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::trace::hpc_synth::{self, HpcTraceConfig};
 use crate::trace::swf;
+use crate::util::num;
 use crate::workload::Job;
 
 /// A loaded SWF archive: usable jobs re-based to submit time 0.
@@ -74,6 +75,7 @@ impl Archive {
     /// of the ordinal, modulo the span. Ordinal 0 is always 0 (the first
     /// department replays the archive verbatim).
     pub fn offset(&self, ordinal: u64) -> u64 {
+        // phoenix-lint: allow(lossy_cast): reduced mod span (a u64) before narrowing, so every value fits
         ((ordinal as u128 * 0x9E37_79B9_7F4A_7C15u128) % self.span as u128) as u64
     }
 
@@ -93,8 +95,8 @@ impl Archive {
             })
             .collect();
         out.sort_by_key(|j| (j.submit, j.id));
-        for (i, j) in out.iter_mut().enumerate() {
-            j.id = i as u64 + 1;
+        for (j, id) in out.iter_mut().zip(1u64..) {
+            j.id = id;
         }
         out
     }
@@ -117,13 +119,13 @@ pub fn rescale(mut jobs: Vec<Job>, src_span: u64, cfg: &HpcTraceConfig) -> Vec<J
         .map(|j| j.requested.max(j.runtime) as f64 / j.runtime.max(1) as f64)
         .collect();
     for j in &mut jobs {
-        j.submit = ((j.submit as u128 * cfg.horizon as u128) / src_span as u128) as u64;
+        j.submit = num::mul_div_u64(j.submit, cfg.horizon, src_span);
         j.size = j.size.clamp(1, cfg.machine_nodes);
     }
     // the one deterministic load calibration, shared with hpc_synth
     hpc_synth::calibrate_load(&mut jobs, cfg);
     for (j, ratio) in jobs.iter_mut().zip(&ratios) {
-        j.requested = ((j.runtime as f64 * ratio).round() as u64).max(j.runtime);
+        j.requested = num::round_f64_u64(j.runtime as f64 * ratio).max(j.runtime);
     }
     jobs.sort_by_key(|j| (j.submit, j.id));
     jobs

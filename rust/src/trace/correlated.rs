@@ -63,9 +63,10 @@ impl Latent {
                 web_synth::raw_shape(&latent_cfg)
             }
             Latent::Replay(series) => {
-                let n = (cfg.horizon / cfg.sample_period) as usize;
+                let n_samples = cfg.horizon / cfg.sample_period;
+                let n = crate::util::num::usize_from_u64(n_samples);
                 let span = series.len_secs().max(1);
-                let raw: Vec<f64> = (0..n as u64)
+                let raw: Vec<f64> = (0..n_samples)
                     .map(|k| series.at(k * cfg.sample_period % span))
                     .collect();
                 let mean = crate::util::stats::mean(&raw);

@@ -4,6 +4,8 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::num;
+
 /// A numeric table with named columns.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Table {
@@ -34,7 +36,7 @@ impl Table {
                 .iter()
                 .map(|v| {
                     if v.fract() == 0.0 && v.abs() < 1e15 {
-                        format!("{}", *v as i64)
+                        format!("{}", num::trunc_f64_i64(*v))
                     } else {
                         format!("{v}")
                     }

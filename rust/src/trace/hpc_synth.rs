@@ -15,6 +15,7 @@
 //! * requested wallclock — runtime × uniform[1.1, 3] (over-estimation as
 //!   observed in real logs).
 
+use crate::util::num;
 use crate::util::rng::Rng;
 use crate::util::timefmt::{DAY, HOUR, TWO_WEEKS};
 use crate::workload::Job;
@@ -103,22 +104,25 @@ pub fn generate(cfg: &HpcTraceConfig) -> Vec<Job> {
     // --- arrivals: sample num_jobs times from the envelope by inversion ---
     // Build a coarse CDF of the envelope at 10-minute resolution.
     let step = 600u64;
-    let n_steps = (cfg.horizon / step) as usize;
+    let n_steps = num::usize_from_u64(cfg.horizon / step);
     let mut cdf = Vec::with_capacity(n_steps);
     let mut acc = 0.0;
-    for i in 0..n_steps {
-        acc += rate_envelope(i as u64 * step);
+    let mut t = 0u64;
+    for _ in 0..n_steps {
+        acc += rate_envelope(t);
         cdf.push(acc);
+        t += step;
     }
     let total = acc;
 
     let mut submits: Vec<u64> = (0..cfg.num_jobs)
         .map(|_| {
             let u = rng.f64() * total;
-            let idx = match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            // total_cmp == partial_cmp on the finite CDF values; no panic arm
+            let idx = match cdf.binary_search_by(|c| c.total_cmp(&u)) {
                 Ok(i) | Err(i) => i.min(n_steps - 1),
             };
-            idx as u64 * step + rng.below(step)
+            num::u64_from_usize(idx) * step + rng.below(step)
         })
         .collect();
     submits.sort_unstable();
@@ -126,16 +130,16 @@ pub fn generate(cfg: &HpcTraceConfig) -> Vec<Job> {
     // --- sizes & runtimes ---
     let mut jobs: Vec<Job> = submits
         .into_iter()
-        .enumerate()
-        .map(|(i, submit)| {
+        .zip(1u64..)
+        .map(|(submit, id)| {
             let size = draw_size(&mut rng, cfg.machine_nodes);
             // log-normal runtime: median 15 min, σ=1.5 (heavy tail)
             let runtime = rng.lognormal(900f64.ln(), 1.5).max(30.0);
             Job {
-                id: i as u64 + 1,
+                id,
                 submit,
                 size,
-                runtime: runtime as u64,
+                runtime: num::trunc_f64_u64(runtime),
                 requested: 0, // filled after rescaling
             }
         })
@@ -143,7 +147,7 @@ pub fn generate(cfg: &HpcTraceConfig) -> Vec<Job> {
 
     calibrate_load(&mut jobs, cfg);
     for j in &mut jobs {
-        j.requested = (j.runtime as f64 * rng.range_f64(1.1, 3.0)) as u64;
+        j.requested = num::trunc_f64_u64(j.runtime as f64 * rng.range_f64(1.1, 3.0));
     }
     jobs
 }
@@ -157,7 +161,7 @@ pub(crate) fn calibrate_load(jobs: &mut [Job], cfg: &HpcTraceConfig) {
     if cfg.target_load <= 0.0 {
         return;
     }
-    let rt_cap = ((cfg.horizon as f64 * cfg.max_runtime_frac) as u64).max(60);
+    let rt_cap = num::trunc_f64_u64(cfg.horizon as f64 * cfg.max_runtime_frac).max(60);
     let capacity = (cfg.machine_nodes * cfg.horizon) as f64;
     for _ in 0..8 {
         let demand: f64 = jobs.iter().map(|j| (j.size * j.runtime) as f64).sum();
@@ -169,7 +173,7 @@ pub(crate) fn calibrate_load(jobs: &mut [Job], cfg: &HpcTraceConfig) {
             break;
         }
         for j in jobs.iter_mut() {
-            j.runtime = ((j.runtime as f64 * scale).round() as u64).clamp(30, rt_cap);
+            j.runtime = num::round_f64_u64(j.runtime as f64 * scale).clamp(30, rt_cap);
         }
     }
 }

@@ -58,7 +58,8 @@ fn sentinel_field(raw: &str, lineno: usize, field: usize, name: &str) -> Result<
             "swf line {lineno}: field {field} ({name}): negative value {v} \
              (only the -1 unknown-sentinel is allowed)"
         ),
-        v => Ok(Some(v as u64)),
+        // v >= 0 here, so the conversion is total
+        v => Ok(u64::try_from(v).ok()),
     }
 }
 
@@ -82,7 +83,7 @@ pub fn parse(text: &str) -> Result<Vec<SwfRecord>> {
             .with_context(|| format!("swf line {lineno}: job number cannot be unknown"))?;
         let submit = f(1, "submit time")?
             .with_context(|| format!("swf line {lineno}: submit time cannot be unknown"))?;
-        let status = f(10, "status")?.map(|v| v as i64);
+        let status = f(10, "status")?.map(crate::util::num::i64_from_u64);
         out.push(SwfRecord {
             job_id,
             submit,

@@ -17,6 +17,7 @@
 //! seconds — the same thing the real trace reduces to before it drives the
 //! resource simulator.
 
+use crate::util::num;
 use crate::util::rng::Rng;
 use crate::util::timefmt::{DAY, HOUR, MINUTE, TWO_WEEKS};
 
@@ -61,12 +62,12 @@ pub struct RateSeries {
 impl RateSeries {
     /// Rate at absolute time `t` (step function).
     pub fn at(&self, t: u64) -> f64 {
-        let idx = (t / self.sample_period) as usize;
+        let idx = num::usize_from_u64(t / self.sample_period);
         self.rates.get(idx).or_else(|| self.rates.last()).copied().unwrap_or(0.0)
     }
 
     pub fn len_secs(&self) -> u64 {
-        self.rates.len() as u64 * self.sample_period
+        num::u64_from_usize(self.rates.len()) * self.sample_period
     }
 
     pub fn peak(&self) -> f64 {
@@ -96,8 +97,8 @@ fn diurnal(t: u64) -> f64 {
 /// Match event: linear 30-min ramp, 105-min sustained plateau (a match),
 /// exponential ~45-min decay tail.
 fn match_shape(dt_secs: i64) -> f64 {
-    let ramp = 30 * MINUTE as i64;
-    let hold = 105 * MINUTE as i64;
+    let ramp = 30 * num::i64_from_u64(MINUTE);
+    let hold = 105 * num::i64_from_u64(MINUTE);
     if !(-ramp..=hold + 4 * 3600).contains(&dt_secs) {
         0.0
     } else if dt_secs < 0 {
@@ -121,7 +122,7 @@ pub fn generate(cfg: &WebTraceConfig) -> RateSeries {
 /// and calibrate the blend once; `generate` = `calibrate(raw_shape(..))`.
 pub fn raw_shape(cfg: &WebTraceConfig) -> Vec<f64> {
     let mut rng = Rng::new(cfg.seed);
-    let n = (cfg.horizon / cfg.sample_period) as usize;
+    let n = num::usize_from_u64(cfg.horizon / cfg.sample_period);
     let days = (cfg.horizon / DAY).max(1);
 
     // schedule matches: not every day is a match day (the paper's slice
@@ -155,15 +156,19 @@ pub fn raw_shape(cfg: &WebTraceConfig) -> Vec<f64> {
     // instead of scanning every match at every sample — §Perf: this cuts
     // trace generation from 4.3 ms to ~1 ms for the two-week series.
     let mut spike = vec![0.0f64; n];
-    let active_lo = 30 * MINUTE as i64; // ramp
-    let active_hi = (105 * MINUTE + 4 * 3600) as i64; // hold + decay tail
+    let active_lo = 30 * num::i64_from_u64(MINUTE); // ramp
+    let active_hi = num::i64_from_u64(105 * MINUTE + 4 * 3600); // hold + decay tail
     for &(kick, pop) in &matches {
-        let lo = ((kick as i64 - active_lo).max(0) as u64 / cfg.sample_period) as usize;
-        let hi = (((kick as i64 + active_hi) as u64).div_ceil(cfg.sample_period) as usize)
-            .min(n.saturating_sub(1));
+        let kick_i = num::i64_from_u64(kick);
+        let lo =
+            num::usize_from_u64(num::u64_from_i64(kick_i - active_lo) / cfg.sample_period);
+        let hi = num::usize_from_u64(
+            num::u64_from_i64(kick_i + active_hi).div_ceil(cfg.sample_period),
+        )
+        .min(n.saturating_sub(1));
         for (i, s) in spike.iter_mut().enumerate().take(hi + 1).skip(lo) {
-            let t = i as u64 * cfg.sample_period;
-            *s += pop * match_shape(t as i64 - kick as i64);
+            let t = num::u64_from_usize(i) * cfg.sample_period;
+            *s += pop * match_shape(num::i64_from_u64(t) - kick_i);
         }
     }
 
@@ -176,7 +181,7 @@ pub fn raw_shape(cfg: &WebTraceConfig) -> Vec<f64> {
     let drive = (1.0 - rho * rho).sqrt() * 0.03;
     let mut noise = 0.0f64;
     for i in 0..n {
-        let t = i as u64 * cfg.sample_period;
+        let t = num::u64_from_usize(i) * cfg.sample_period;
         let mut r = diurnal(t) + spike[i];
         noise = rho * noise + drive * rng.normal();
         r *= (1.0 + noise).max(0.2);

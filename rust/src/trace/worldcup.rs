@@ -26,6 +26,7 @@
 use anyhow::{bail, Context, Result};
 
 use super::web_synth::RateSeries;
+use crate::util::num;
 
 /// The paper's request-rate scale factor (§III-B).
 pub const PAPER_SCALE: f64 = 2.22;
@@ -91,12 +92,16 @@ pub fn to_rate_series(records: &[WcRecord], sample_period: u64, scale: f64) -> R
     if records.is_empty() {
         return RateSeries { sample_period, rates: Vec::new() };
     }
-    let t0 = records.iter().map(|r| r.timestamp).min().unwrap() as u64;
-    let t1 = records.iter().map(|r| r.timestamp).max().unwrap() as u64;
-    let n = ((t1 - t0) / sample_period + 1) as usize;
+    let (mut t0, mut t1) = (u64::MAX, 0u64);
+    for r in records {
+        let ts = u64::from(r.timestamp);
+        t0 = t0.min(ts);
+        t1 = t1.max(ts);
+    }
+    let n = num::usize_from_u64((t1 - t0) / sample_period + 1);
     let mut counts = vec![0u64; n];
     for r in records {
-        counts[((r.timestamp as u64 - t0) / sample_period) as usize] += 1;
+        counts[num::usize_from_u64((u64::from(r.timestamp) - t0) / sample_period)] += 1;
     }
     let rates = counts
         .into_iter()

@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logger;
+pub mod num;
 pub mod plot;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,103 @@
+//! Documented, total numeric conversions for the trace parsers.
+//!
+//! Lint rule R3 (`phoenix-lint`, see ARCHITECTURE.md §"Determinism
+//! contract") bans bare `as` integer casts inside `trace/` — the PR-3 SWF
+//! truncation bug class, where a silent narrowing corrupted submit times.
+//! These helpers carry the casts instead: each one names its semantics in
+//! its signature, is total (saturates instead of wrapping or panicking),
+//! and is unit-tested at the edges. `trace/` code converts through them;
+//! a site that genuinely needs different semantics documents itself with
+//! `// phoenix-lint: allow(lossy_cast): <why>`.
+//!
+//! The float→int helpers deliberately keep Rust's own saturating `as`
+//! semantics (NaN → 0, −∞/negative → 0 for unsigned, +∞ → MAX), so
+//! replacing an in-tree `x as u64` with `trunc_f64_u64(x)` is
+//! bit-identical — required, because the fig7/fig8 anchor pins hash the
+//! tables these conversions feed.
+
+/// Truncate an `f64` toward zero into a `u64`, saturating: NaN and
+/// negatives → 0, values beyond `u64::MAX` → `u64::MAX`. Exactly Rust's
+/// `x as u64`.
+pub fn trunc_f64_u64(x: f64) -> u64 {
+    x as u64
+}
+
+/// Round an `f64` half-away-from-zero, then saturate into a `u64`.
+/// Exactly the in-tree `x.round() as u64` idiom.
+pub fn round_f64_u64(x: f64) -> u64 {
+    x.round() as u64
+}
+
+/// Truncate an `f64` toward zero into an `i64`, saturating at both ends
+/// (NaN → 0). Exactly Rust's `x as i64`.
+pub fn trunc_f64_i64(x: f64) -> i64 {
+    x as i64
+}
+
+/// `u64` → `usize`, saturating. Lossless on the 64-bit targets CI runs;
+/// on a hypothetical 32-bit target an oversized trace index saturates
+/// instead of wrapping.
+pub fn usize_from_u64(v: u64) -> usize {
+    usize::try_from(v).unwrap_or(usize::MAX)
+}
+
+/// `usize` → `u64`, saturating (lossless on every target Rust supports
+/// today; spelled as a conversion so R3 stays cast-free).
+pub fn u64_from_usize(v: usize) -> u64 {
+    u64::try_from(v).unwrap_or(u64::MAX)
+}
+
+/// `u64` → `i64`, saturating at `i64::MAX`. Simulation times are far
+/// below the edge; the saturation is the documented out-of-range story.
+pub fn i64_from_u64(v: u64) -> i64 {
+    i64::try_from(v).unwrap_or(i64::MAX)
+}
+
+/// `i64` → `u64`, clamping negatives to 0 — the `v.max(0) as u64` idiom.
+pub fn u64_from_i64(v: i64) -> u64 {
+    u64::try_from(v).unwrap_or(0)
+}
+
+/// `(v * num) / den` computed in `u128` so the product cannot overflow,
+/// saturated back into `u64` (in-range whenever the true quotient fits,
+/// which holds for every trace rescale: the result is ≤ the horizon).
+/// A zero `den` is treated as 1 rather than dividing by zero.
+pub fn mul_div_u64(v: u64, num: u64, den: u64) -> u64 {
+    let q = (v as u128 * num as u128) / u128::from(den.max(1));
+    u64::try_from(q).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_helpers_match_as_cast_semantics() {
+        for x in [0.0, 0.49, 0.5, 1.9, 1e18, f64::INFINITY] {
+            assert_eq!(trunc_f64_u64(x), x as u64, "trunc {x}");
+            assert_eq!(round_f64_u64(x), x.round() as u64, "round {x}");
+        }
+        for x in [f64::NAN, -1.5, f64::NEG_INFINITY] {
+            assert_eq!(trunc_f64_u64(x), 0, "unsigned floor {x}");
+        }
+        assert_eq!(trunc_f64_i64(-1.9), -1);
+        assert_eq!(trunc_f64_i64(f64::NEG_INFINITY), i64::MIN);
+        assert_eq!(trunc_f64_i64(f64::NAN), 0);
+    }
+
+    #[test]
+    fn integer_helpers_saturate_at_the_edges() {
+        assert_eq!(usize_from_u64(7), 7);
+        assert_eq!(u64_from_usize(7), 7);
+        assert_eq!(i64_from_u64(u64::MAX), i64::MAX);
+        assert_eq!(u64_from_i64(-3), 0);
+        assert_eq!(u64_from_i64(i64::MAX), i64::MAX as u64);
+    }
+
+    #[test]
+    fn mul_div_is_exact_and_overflow_proof() {
+        assert_eq!(mul_div_u64(3, 100, 7), 42); // floor(300/7)
+        assert_eq!(mul_div_u64(u64::MAX, u64::MAX, u64::MAX), u64::MAX);
+        assert_eq!(mul_div_u64(5, 5, 0), 25, "den 0 treated as 1");
+    }
+}

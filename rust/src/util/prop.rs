@@ -64,6 +64,7 @@ pub fn check(name: &str, default_cases: usize, mut prop: impl FnMut(&mut Gen) ->
     if let Some(seed) = forced_seed {
         let mut g = Gen { rng: Rng::new(seed), case: 0 };
         if let Err(msg) = prop(&mut g) {
+            // phoenix-lint: allow(panic_path): a property failure must fail the test; panic IS the channel
             panic!("property '{name}' failed (PHOENIX_PROP_SEED={seed}): {msg}");
         }
         return;
@@ -74,6 +75,7 @@ pub fn check(name: &str, default_cases: usize, mut prop: impl FnMut(&mut Gen) ->
         let seed = fnv1a(name.as_bytes()) ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut g = Gen { rng: Rng::new(seed), case };
         if let Err(msg) = prop(&mut g) {
+            // phoenix-lint: allow(panic_path): test-failure channel, same as the forced-seed arm
             panic!(
                 "property '{name}' failed on case {case}/{cases} \
                  (reproduce with PHOENIX_PROP_SEED={seed}): {msg}"

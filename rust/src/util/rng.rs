@@ -238,7 +238,8 @@ impl Zipf {
     /// Draw a rank in [1, n].
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        // total_cmp == partial_cmp on the finite CDF values; no panic arm
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) | Err(i) => (i + 1).min(self.cdf.len()),
         }
     }

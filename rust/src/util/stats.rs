@@ -78,7 +78,8 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp == partial_cmp on finite samples; no panic arm
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, q)
 }
 

@@ -43,6 +43,7 @@ pub fn parse(src: &str) -> Result<Json, TomlError> {
                 return Err(err("empty table-name component"));
             }
             // navigate to the parent, then append a fresh table to the array
+            // phoenix-lint: allow(panic_path): split('.') yields >= 1 component, checked non-empty above
             let (last, parent_path) = path.split_last().expect("non-empty path");
             let parent = ensure_table(&mut root, parent_path).map_err(|m| err(&m))?;
             let entry = parent
@@ -64,6 +65,7 @@ pub fn parse(src: &str) -> Result<Json, TomlError> {
             // materialize the table; intermediate components may pass
             // through an array-of-tables (last element), but the *named*
             // table itself must not be one — that needs a [[..]] header
+            // phoenix-lint: allow(panic_path): split('.') yields >= 1 component, checked non-empty above
             let (last, parent_path) = path.split_last().expect("non-empty path");
             let parent = ensure_table(&mut root, parent_path).map_err(|m| err(&m))?;
             match parent.entry(last.clone()).or_insert_with(|| Json::Obj(BTreeMap::new())) {

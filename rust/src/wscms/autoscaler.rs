@@ -96,10 +96,12 @@ where
     /// One decision from the measured utilization and offered rate.
     pub fn decide(&mut self, avg_util: f64, rate: f64) -> u64 {
         self.util_hist.rotate_left(1);
+        // phoenix-lint: allow(panic_path): histories are fixed-length, never empty
         *self.util_hist.last_mut().unwrap() = avg_util as f32;
         self.rate_hist.rotate_left(1);
         // normalize rate to "instances worth of load" so the feature scale
         // matches what the forecaster was trained on
+        // phoenix-lint: allow(panic_path): same fixed-length invariant as util_hist
         *self.rate_hist.last_mut().unwrap() = (rate / self.cap) as f32;
 
         let pred = (self.forecast)(&self.util_hist, &self.rate_hist);

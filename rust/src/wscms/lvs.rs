@@ -61,6 +61,7 @@ impl FrontEnd {
         // slice the length of the director list.
         let dummy: Vec<Instance> =
             (0..self.directors.len() as u64).map(Instance::new).collect();
+        // phoenix-lint: allow(panic_path): directors is non-empty by construction, so pick returns Some
         self.dns.pick(&dummy).unwrap()
     }
 

@@ -754,6 +754,51 @@ fn prop_k2_anchor_bit_identical_through_bisect_scan() {
     );
 }
 
+/// Engine-default pin: flipping the default from `wheel` to `hier` (PR 8)
+/// must not move a single bit of the experiment tables. One K = 2
+/// cooperative matrix cell — the fig7/fig8 anchor's own shape — is run
+/// under both engines and compared as serialized JSON and CSV; both sides
+/// must also still replay the anchor run itself.
+#[test]
+fn prop_engine_default_hier_bit_identical_to_wheel() {
+    use phoenix_cloud::sim::EngineKind;
+
+    let mut wheel = ExperimentConfig::default();
+    wheel.engine = EngineKind::Wheel;
+    let mut hier = ExperimentConfig::default();
+    hier.engine = EngineKind::Hier;
+    assert_eq!(ExperimentConfig::default().engine, EngineKind::Hier);
+
+    let axes = |cfg: &ExperimentConfig| MatrixAxes {
+        ks: vec![2],
+        mixes: vec![RosterMix::Alternating],
+        policies: vec![PolicyAxis::Base(PolicySpec::Cooperative)],
+        loads: vec![cfg.hpc.target_load],
+        scan: SizeScan::Bisect,
+        quick: true,
+    };
+    let a = matrix::run_matrix(&wheel, &axes(&wheel)).unwrap();
+    let b = matrix::run_matrix(&hier, &axes(&hier)).unwrap();
+    assert_eq!(
+        matrix::matrix_json(&a, true).to_string(),
+        matrix::matrix_json(&b, true).to_string(),
+        "hier engine diverged from wheel on the anchor-shaped cell"
+    );
+    assert_eq!(
+        matrix::matrix_csv(&a),
+        matrix::matrix_csv(&b),
+        "hier engine CSV diverged from wheel"
+    );
+    assert!(
+        matrix::verify_anchor(&wheel, &a).unwrap(),
+        "wheel side lost the fig7/fig8 anchor run"
+    );
+    assert!(
+        matrix::verify_anchor(&hier, &b).unwrap(),
+        "hier side lost the fig7/fig8 anchor run"
+    );
+}
+
 /// The sim engine delivers every event exactly once in time order, under
 /// random schedules (including same-timestamp storms).
 #[test]

@@ -1,0 +1,953 @@
+//! phoenix-lint — machine-checks the `phoenix_cloud` determinism contract.
+//!
+//! Every headline table in this repo (the fig7/fig8 anchor pin, bit-identical
+//! parallel-vs-serial matrices, the zero-fault pin, the sharded-engine ≡
+//! heap-oracle proof) rests on a contract the compiler cannot see: no
+//! wall-clock reads, no ambient entropy, no hash-order iteration, no lossy
+//! casts in the trace parsers, no silently-inherited policy lifecycle, no
+//! panic paths in library code. This crate turns that prose contract
+//! (ARCHITECTURE.md §"Determinism contract") into a CI gate.
+//!
+//! # Rules
+//!
+//! | id | name             | scope                         | what it flags |
+//! |----|------------------|-------------------------------|---------------|
+//! | R1 | `wall_clock`     | deterministic modules¹        | `Instant::now`, `SystemTime::now`, `thread_rng`, `from_entropy`, `UNIX_EPOCH` |
+//! | R2 | `hash_order`     | deterministic modules¹        | *iteration* over `HashMap`/`HashSet` bindings (insertion/lookup is fine) |
+//! | R3 | `lossy_cast`     | `trace/` (non-test code)      | bare `as` integer casts — the PR-3 SWF truncation bug class |
+//! | R4 | `policy_surface` | everywhere                    | `impl ProvisionPolicy` blocks that silently inherit any of `on_crash`/`on_recover`/`on_join`/`on_leave` |
+//! | R5 | `panic_path`     | library code (not `main.rs`, tests, benches) | `.unwrap()`, `.expect()`, `panic!`, `todo!`, `unimplemented!` |
+//!
+//! ¹ deterministic modules: `sim/`, `coordinator/`, `experiments/`,
+//! `provision/`, `trace/`, and `faults.rs`. Wall-clock reads are always
+//! legal in `util/bench.rs` (the one audited timing module).
+//!
+//! # Allow annotations
+//!
+//! A provably-legal site is suppressed with a justified annotation on the
+//! same line or the line directly above the flagged token:
+//!
+//! ```text
+//! // phoenix-lint: allow(wall_clock): pacing only delays the loop; no sim state reads it
+//! ```
+//!
+//! An annotation **must** carry a non-empty justification after the closing
+//! parenthesis; a bare `allow(..)` is itself a finding (R0), so the
+//! allowlist stays self-documenting.
+//!
+//! # Why a token scanner, not `syn`
+//!
+//! The repo builds offline with zero external dependencies, and these rules
+//! are module-scoped *token* properties (does this file mention
+//! `Instant::now`? does this `impl ProvisionPolicy` block contain
+//! `fn on_crash`?), not type-level ones. A comment/string-stripping
+//! tokenizer decides them exactly as well as a full AST would, builds in
+//! milliseconds, and cannot drift out of sync with a parser crate's MSRV.
+//! The corner it cuts — no name resolution — is covered by the coarse
+//! crate-wide net in `clippy.toml` (`disallowed-methods` /
+//! `disallowed-types`), which *does* resolve paths; the two layers are
+//! deliberate complements.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// A contract rule. `R0` (`BadAllow`) is the meta-rule: malformed or
+/// unjustified `phoenix-lint: allow(..)` annotations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1 — wall-clock / ambient-entropy reads in deterministic modules.
+    WallClock,
+    /// R2 — iteration over hash-ordered containers in deterministic modules.
+    HashOrder,
+    /// R3 — bare `as` integer casts in trace parsers.
+    LossyCast,
+    /// R4 — `impl ProvisionPolicy` missing part of the lifecycle surface.
+    PolicySurface,
+    /// R5 — `unwrap`/`expect`/`panic!` in library code.
+    PanicPath,
+    /// R0 — malformed `phoenix-lint: allow(..)` annotation.
+    BadAllow,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::WallClock => "R1",
+            Rule::HashOrder => "R2",
+            Rule::LossyCast => "R3",
+            Rule::PolicySurface => "R4",
+            Rule::PanicPath => "R5",
+            Rule::BadAllow => "R0",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::WallClock => "wall_clock",
+            Rule::HashOrder => "hash_order",
+            Rule::LossyCast => "lossy_cast",
+            Rule::PolicySurface => "policy_surface",
+            Rule::PanicPath => "panic_path",
+            Rule::BadAllow => "allow",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Rule> {
+        Some(match s {
+            "wall_clock" => Rule::WallClock,
+            "hash_order" => Rule::HashOrder,
+            "lossy_cast" => Rule::LossyCast,
+            "policy_surface" => Rule::PolicySurface,
+            "panic_path" => Rule::PanicPath,
+            _ => return None,
+        })
+    }
+}
+
+/// One contract violation, printed as `file:line: [R#/name] message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}/{}] {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.rule.name(),
+            self.msg
+        )
+    }
+}
+
+/// Which rule sets apply to a file, derived from its path relative to
+/// `rust/src` (or from a `//~ scope: <rel-path>` directive — used by the
+/// fixture suite to lint loose files as if they lived in the tree).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Scope {
+    deterministic: bool,
+    trace: bool,
+    wall_clock_ok: bool,
+    binary: bool,
+}
+
+impl Scope {
+    pub fn for_rel_path(rel: &str) -> Self {
+        let rel = rel.replace('\\', "/");
+        let top = rel.split('/').next().unwrap_or("");
+        Scope {
+            deterministic: matches!(
+                top,
+                "sim" | "coordinator" | "experiments" | "provision" | "trace"
+            ) || rel == "faults.rs",
+            trace: top == "trace",
+            wall_clock_ok: rel == "util/bench.rs",
+            binary: rel == "main.rs",
+        }
+    }
+}
+
+// ---- source cleaning --------------------------------------------------------
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    let hi = b.min(out.len());
+    for slot in out.iter_mut().take(hi).skip(a) {
+        if *slot != b'\n' {
+            *slot = b' ';
+        }
+    }
+}
+
+/// Replace the contents of comments, string literals, and char literals
+/// with spaces, preserving newlines (so token line numbers survive) and
+/// leaving all real code bytes untouched. Handles nested block comments,
+/// raw strings (`r"…"`, `r#"…"#`, and the `b`-prefixed forms), escapes,
+/// and the char-literal vs lifetime ambiguity.
+pub fn clean_source(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        let next = if i + 1 < n { b[i + 1] } else { 0 };
+        if c == b'/' && next == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && next == b'*' {
+            // Rust block comments nest
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if j + 1 < n && b[j] == b'/' && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if j + 1 < n && b[j] == b'*' && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'r'
+            && (next == b'"' || next == b'#')
+            && !(i > 0 && is_ident_byte(b[i - 1]))
+        {
+            // raw string r"…" / r#"…"# (a leading `b` is just an ident byte
+            // before the `r`, so `br"…"` lands here too once `b` is consumed)
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                let mut k = j + 1;
+                let mut end = n;
+                while k < n {
+                    if b[k] == b'"'
+                        && k + 1 + hashes <= n
+                        && b[k + 1..k + 1 + hashes].iter().all(|&x| x == b'#')
+                    {
+                        end = k + 1 + hashes;
+                        break;
+                    }
+                    k += 1;
+                }
+                blank(&mut out, i, end);
+                i = end;
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            if next == b'\\' {
+                // escaped char literal: skip quote, backslash, escaped char,
+                // then scan to the closing quote (covers '\'' and '\u{..}')
+                let mut j = (i + 3).min(n);
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                let j = (j + 1).min(n);
+                blank(&mut out, i, j);
+                i = j;
+            } else if i + 2 < n && b[i + 2] == b'\'' && next != b'\'' {
+                blank(&mut out, i, i + 3);
+                i += 3;
+            } else {
+                i += 1; // a lifetime tick, not a char literal
+            }
+        } else {
+            i += 1;
+        }
+    }
+    // only ASCII spaces were written, always at ASCII byte positions, so
+    // the buffer is still valid UTF-8
+    String::from_utf8(out).unwrap_or_default()
+}
+
+// ---- tokenizer --------------------------------------------------------------
+
+/// A word (`[A-Za-z0-9_]+`) or a single punctuation character (with `::`
+/// merged), tagged with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+}
+
+pub fn tokenize(clean: &str) -> Vec<Tok> {
+    let b = clean.as_bytes();
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if is_ident_byte(c) {
+            let start = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { text: clean[start..i].to_string(), line });
+        } else if c == b':' && i + 1 < b.len() && b[i + 1] == b':' {
+            toks.push(Tok { text: "::".to_string(), line });
+            i += 2;
+        } else if c.is_ascii() {
+            toks.push(Tok { text: (c as char).to_string(), line });
+            i += 1;
+        } else {
+            // multibyte char outside strings/comments (unicode identifier):
+            // step over the full char to stay on UTF-8 boundaries
+            i += if c >= 0xF0 {
+                4
+            } else if c >= 0xE0 {
+                3
+            } else {
+                2
+            };
+        }
+    }
+    toks
+}
+
+fn matches_seq(toks: &[Tok], i: usize, pat: &[&str]) -> bool {
+    pat.iter()
+        .enumerate()
+        .all(|(k, p)| toks.get(i + k).is_some_and(|t| t.text == *p))
+}
+
+/// Mark the lines covered by `#[cfg(test)] mod … { … }` blocks and
+/// `#[test] fn … { … }` bodies — R3/R5 don't apply there (tests may
+/// construct fixtures with casts and assert with unwraps).
+fn test_line_mask(toks: &[Tok], n_lines: usize) -> Vec<bool> {
+    let mut mask = vec![false; n_lines + 2];
+    let mut i = 0;
+    while i < toks.len() {
+        let is_cfg_test = matches_seq(toks, i, &["#", "[", "cfg", "(", "test", ")", "]"]);
+        let is_test_attr = matches_seq(toks, i, &["#", "[", "test", "]"]);
+        if !(is_cfg_test || is_test_attr) {
+            i += 1;
+            continue;
+        }
+        let attr_len = if is_cfg_test { 7 } else { 4 };
+        // find the block start, skipping further attributes and the item
+        // header; `#[cfg(test)] mod x;` (out-of-line) has no block — skip it
+        let mut j = i + attr_len;
+        let mut open = None;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "{" => {
+                    open = Some(j);
+                    break;
+                }
+                ";" => break,
+                _ => j += 1,
+            }
+        }
+        let Some(open) = open else {
+            i += attr_len;
+            continue;
+        };
+        let mut depth = 0usize;
+        let mut end = toks.len() - 1;
+        let mut k = open;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let (l0, l1) = (toks[i].line, toks[end].line);
+        for slot in mask.iter_mut().take(l1 + 1).skip(l0) {
+            *slot = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+// ---- allow annotations ------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct Allows {
+    /// Allowed (1-based line, rule) pairs — an annotation covers its own
+    /// line and the one directly below it.
+    by_line: Vec<(usize, Rule)>,
+    /// Malformed annotations: (line, message).
+    bad: Vec<(usize, String)>,
+}
+
+fn collect_allows(src: &str) -> Allows {
+    let mut a = Allows::default();
+    for (idx, raw) in src.lines().enumerate() {
+        let line = idx + 1;
+        let Some(pos) = raw.find("phoenix-lint:") else { continue };
+        let rest = raw[pos + "phoenix-lint:".len()..].trim_start();
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            a.bad.push((line, "expected `allow(<rule>)` after `phoenix-lint:`".to_string()));
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            a.bad.push((line, "unclosed `allow(`".to_string()));
+            continue;
+        };
+        let name = inner[..close].trim();
+        let Some(rule) = Rule::from_name(name) else {
+            a.bad.push((
+                line,
+                format!(
+                    "unknown rule `{name}` in allow(..) — expected one of wall_clock, \
+                     hash_order, lossy_cast, policy_surface, panic_path"
+                ),
+            ));
+            continue;
+        };
+        let justification = inner[close + 1..].trim_start_matches([':', '-', '—', ' ']).trim();
+        if justification.is_empty() {
+            a.bad.push((
+                line,
+                format!("allow({name}) without a justification — say why this site is legal"),
+            ));
+            continue;
+        }
+        a.by_line.push((line, rule));
+        a.by_line.push((line + 1, rule));
+    }
+    a
+}
+
+/// A `//~ scope: <rel-path>` directive in the first lines of a file
+/// overrides the path-derived scope (used by the fixture suite).
+fn scope_directive(src: &str) -> Option<String> {
+    src.lines()
+        .take(5)
+        .find_map(|l| l.trim().strip_prefix("//~ scope:").map(|s| s.trim().to_string()))
+}
+
+// ---- rules ------------------------------------------------------------------
+
+const HASH_ITER_METHODS: [&str; 8] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain"];
+
+const INT_TYPES: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+const POLICY_HOOKS: [&str; 4] = ["on_crash", "on_recover", "on_join", "on_leave"];
+
+type Raw = (Rule, usize, String);
+
+fn rule_wall_clock(scope: Scope, toks: &[Tok], out: &mut Vec<Raw>) {
+    if !scope.deterministic || scope.wall_clock_ok {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        let what = match t.text.as_str() {
+            "Instant" | "SystemTime" if matches_seq(toks, i + 1, &["::", "now"]) => {
+                format!("{}::now() reads the wall clock", t.text)
+            }
+            "thread_rng" => "thread_rng() draws ambient OS entropy".to_string(),
+            "from_entropy" => "from_entropy() seeds from the OS".to_string(),
+            "UNIX_EPOCH" => "UNIX_EPOCH anchors wall-clock arithmetic".to_string(),
+            _ => continue,
+        };
+        out.push((
+            Rule::WallClock,
+            t.line,
+            format!(
+                "{what} in a deterministic module — legal only in util/bench.rs or behind \
+                 `// phoenix-lint: allow(wall_clock): <why>`"
+            ),
+        ));
+    }
+}
+
+fn is_ident(s: &str) -> bool {
+    s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+}
+
+fn rule_hash_order(scope: Scope, toks: &[Tok], out: &mut Vec<Raw>) {
+    if !scope.deterministic {
+        return;
+    }
+    // pass A: names bound to HashMap/HashSet anywhere in this file
+    // (let bindings, fields, fn params)
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    for (i, t) in toks.iter().enumerate() {
+        if is_ident(&t.text) && matches_seq(toks, i + 1, &[":"]) {
+            let mut j = i + 2;
+            loop {
+                match toks.get(j).map(|t| t.text.as_str()) {
+                    Some("&") | Some("mut") => j += 1,
+                    Some("'") => j += 2,
+                    _ => break,
+                }
+            }
+            if matches_seq(toks, j, &["std", "::", "collections", "::"]) {
+                j += 4;
+            }
+            if toks.get(j).is_some_and(|t| t.text == "HashMap" || t.text == "HashSet") {
+                names.insert(&t.text);
+            }
+        }
+        if t.text == "let" {
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|t| t.text == "mut") {
+                j += 1;
+            }
+            if toks.get(j).is_some_and(|t| is_ident(&t.text)) && matches_seq(toks, j + 1, &["="])
+            {
+                let mut k = j + 2;
+                if matches_seq(toks, k, &["std", "::", "collections", "::"]) {
+                    k += 4;
+                }
+                if toks.get(k).is_some_and(|t| t.text == "HashMap" || t.text == "HashSet") {
+                    names.insert(&toks[j].text);
+                }
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    // pass B: iteration over those names
+    for (i, t) in toks.iter().enumerate() {
+        if names.contains(t.text.as_str())
+            && matches_seq(toks, i + 1, &["."])
+            && toks.get(i + 2).is_some_and(|m| HASH_ITER_METHODS.contains(&m.text.as_str()))
+            && matches_seq(toks, i + 3, &["("])
+        {
+            out.push((
+                Rule::HashOrder,
+                t.line,
+                format!(
+                    "iteration over hash container `{}` — order is nondeterministic; use \
+                     BTreeMap/BTreeSet or collect-and-sort first",
+                    t.text
+                ),
+            ));
+        }
+        if t.text != "for" {
+            continue;
+        }
+        // `for <pat> in <expr> {`: a bare hash name in <expr> iterates it
+        let mut j = i + 1;
+        let mut in_pos = None;
+        while j < toks.len() && j < i + 24 {
+            match toks[j].text.as_str() {
+                "in" => {
+                    in_pos = Some(j);
+                    break;
+                }
+                "{" | ";" => break,
+                _ => j += 1,
+            }
+        }
+        let Some(p) = in_pos else { continue };
+        let mut k = p + 1;
+        while k < toks.len() && k < p + 24 && toks[k].text != "{" && toks[k].text != ";" {
+            if names.contains(toks[k].text.as_str()) {
+                // `map.len()` in a range bound is a scalar read, not
+                // iteration; method-call iteration is caught above
+                let iterates = match toks.get(k + 1).map(|t| t.text.as_str()) {
+                    Some(".") => toks
+                        .get(k + 2)
+                        .is_some_and(|m| HASH_ITER_METHODS.contains(&m.text.as_str())),
+                    _ => true,
+                };
+                if iterates {
+                    out.push((
+                        Rule::HashOrder,
+                        toks[k].line,
+                        format!(
+                            "`for .. in` over hash container `{}` — iteration order is \
+                             nondeterministic",
+                            toks[k].text
+                        ),
+                    ));
+                }
+            }
+            k += 1;
+        }
+    }
+}
+
+fn rule_lossy_cast(scope: Scope, toks: &[Tok], tmask: &[bool], out: &mut Vec<Raw>) {
+    if !scope.trace {
+        return;
+    }
+    let mut stmt_has_use = false;
+    for (i, t) in toks.iter().enumerate() {
+        match t.text.as_str() {
+            "use" => stmt_has_use = true,
+            ";" | "{" | "}" => stmt_has_use = false,
+            "as" if !stmt_has_use => {
+                let Some(ty) = toks.get(i + 1) else { continue };
+                if INT_TYPES.contains(&ty.text.as_str())
+                    && !tmask.get(t.line).copied().unwrap_or(false)
+                {
+                    out.push((
+                        Rule::LossyCast,
+                        t.line,
+                        format!(
+                            "bare `as {}` cast in a trace parser — use try_from / a \
+                             documented util::num conversion, or justify with \
+                             `// phoenix-lint: allow(lossy_cast): <why>`",
+                            ty.text
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn rule_policy_surface(toks: &[Tok], out: &mut Vec<Raw>) {
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text != "impl" {
+            i += 1;
+            continue;
+        }
+        // `impl [path::]ProvisionPolicy for Target { … }`; a trait *bound*
+        // inside the generics list (`impl<P: ProvisionPolicy> …`) is not a
+        // trait impl, so only accept the name at angle-depth 0
+        let mut j = i + 1;
+        let mut saw_trait = false;
+        let mut angle = 0usize;
+        while j < toks.len() && j < i + 16 {
+            match toks[j].text.as_str() {
+                "<" => angle += 1,
+                ">" => angle = angle.saturating_sub(1),
+                "ProvisionPolicy" if angle == 0 => saw_trait = true,
+                "for" | "{" | ";" => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !saw_trait || !toks.get(j).is_some_and(|t| t.text == "for") {
+            i += 1;
+            continue;
+        }
+        let target = toks.get(j + 1).map(|t| t.text.clone()).unwrap_or_default();
+        let mut k = j;
+        while k < toks.len() && toks[k].text != "{" {
+            k += 1;
+        }
+        if k == toks.len() {
+            break;
+        }
+        let open = k;
+        let mut depth = 0usize;
+        let mut end = toks.len() - 1;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let body = &toks[open..=end.min(toks.len() - 1)];
+        let missing: Vec<&str> = POLICY_HOOKS
+            .iter()
+            .copied()
+            .filter(|h| !body.windows(2).any(|w| w[0].text == "fn" && w[1].text == *h))
+            .collect();
+        if !missing.is_empty() {
+            out.push((
+                Rule::PolicySurface,
+                toks[i].line,
+                format!(
+                    "impl ProvisionPolicy for {target} must spell out the full lifecycle \
+                     surface (a silently-inherited default hides crash/affiliation \
+                     semantics) — missing: {}",
+                    missing.join(", ")
+                ),
+            ));
+        }
+        i = end + 1;
+    }
+}
+
+fn rule_panic_path(scope: Scope, toks: &[Tok], tmask: &[bool], out: &mut Vec<Raw>) {
+    if scope.binary {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if tmask.get(t.line).copied().unwrap_or(false) {
+            continue;
+        }
+        let what = match t.text.as_str() {
+            "unwrap" | "expect"
+                if i > 0 && toks[i - 1].text == "." && matches_seq(toks, i + 1, &["("]) =>
+            {
+                format!(".{}() can panic", t.text)
+            }
+            "panic" | "todo" | "unimplemented" if matches_seq(toks, i + 1, &["!"]) => {
+                format!("{}! in library code", t.text)
+            }
+            _ => continue,
+        };
+        out.push((
+            Rule::PanicPath,
+            t.line,
+            format!(
+                "{what} — return a Result, or justify the invariant with \
+                 `// phoenix-lint: allow(panic_path): <why>`"
+            ),
+        ));
+    }
+}
+
+// ---- driver -----------------------------------------------------------------
+
+/// Lint one file's source. `rel` is the path relative to `rust/src` (it
+/// selects the rule scope); a `//~ scope:` directive in the source
+/// overrides it. Findings carry `rel` as their file name.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let scoped = scope_directive(src).unwrap_or_else(|| rel.to_string());
+    let scope = Scope::for_rel_path(&scoped);
+    let clean = clean_source(src);
+    let toks = tokenize(&clean);
+    let tmask = test_line_mask(&toks, src.lines().count());
+    let allows = collect_allows(src);
+
+    let mut raw: Vec<Raw> = Vec::new();
+    rule_wall_clock(scope, &toks, &mut raw);
+    rule_hash_order(scope, &toks, &mut raw);
+    rule_lossy_cast(scope, &toks, &tmask, &mut raw);
+    rule_policy_surface(&toks, &mut raw);
+    rule_panic_path(scope, &toks, &tmask, &mut raw);
+    raw.sort();
+    // the method-call and for-in patterns of R2 can both fire on one line:
+    // one finding per (rule, line) is enough
+    raw.dedup_by(|a, b| a.0 == b.0 && a.1 == b.1);
+
+    let mut findings: Vec<Finding> = allows
+        .bad
+        .iter()
+        .map(|(line, msg)| Finding {
+            rule: Rule::BadAllow,
+            file: rel.to_string(),
+            line: *line,
+            msg: msg.clone(),
+        })
+        .collect();
+    for (rule, line, msg) in raw {
+        let allowed = allows.by_line.iter().any(|&(l, r)| l == line && r == rule);
+        if !allowed {
+            findings.push(Finding { rule, file: rel.to_string(), line, msg });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+fn collect_rs_files(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if p.is_file() {
+        if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in fs::read_dir(p)? {
+        collect_rs_files(&entry?.path(), out)?;
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself when it is a
+/// file), in sorted path order. Findings carry the full on-disk path.
+pub fn lint_path(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let display = f.to_string_lossy().replace('\\', "/");
+        for mut finding in lint_source(&rel, &src) {
+            finding.file = display.clone();
+            findings.push(finding);
+        }
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(rel: &str, src: &str) -> Vec<(Rule, usize)> {
+        lint_source(rel, src).into_iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    #[test]
+    fn cleaning_strips_comments_strings_and_char_literals() {
+        let src = "let a = \"Instant::now()\"; // Instant::now()\n\
+                   /* nested /* Instant::now() */ still comment */\n\
+                   let c = 'x'; let lt: &'static str = \"y\";\n\
+                   let r = r#\"Instant::now() \"quoted\"\"#;\n";
+        let clean = clean_source(src);
+        assert!(!clean.contains("Instant"), "leaked banned token: {clean}");
+        assert!(clean.contains("let a ="));
+        assert!(clean.contains("let c ="));
+        assert!(clean.contains("'static"), "lifetime must survive cleaning");
+        assert_eq!(clean.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn cleaning_handles_escaped_quotes_and_quote_char() {
+        let src = "let q = '\\''; let s = \"a \\\" Instant::now() b\"; let t = '\\n';";
+        let clean = clean_source(src);
+        assert!(!clean.contains("Instant"), "{clean}");
+        assert!(clean.contains("let t ="));
+    }
+
+    #[test]
+    fn tokenizer_merges_path_separators() {
+        let toks = tokenize("std::time::Instant::now()");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, ["std", "::", "time", "::", "Instant", "::", "now", "(", ")"]);
+    }
+
+    #[test]
+    fn r1_fires_only_in_deterministic_modules() {
+        let src = "fn f() -> u64 { std::time::Instant::now().elapsed().as_secs() }";
+        assert_eq!(rules_of("sim/engine.rs", src), vec![(Rule::WallClock, 1)]);
+        assert_eq!(rules_of("faults.rs", src), vec![(Rule::WallClock, 1)]);
+        assert!(rules_of("util/bench.rs", src).is_empty());
+        assert!(rules_of("wscms/serving.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_allows_with_justification_and_rejects_without() {
+        let ok = "fn f() {\n    // phoenix-lint: allow(wall_clock): pacing only, no sim state\n    let t = Instant::now();\n}";
+        assert!(rules_of("coordinator/realtime.rs", ok).is_empty());
+        let bare = "fn f() {\n    // phoenix-lint: allow(wall_clock)\n    let t = Instant::now();\n}";
+        let got = rules_of("coordinator/realtime.rs", bare);
+        assert!(got.contains(&(Rule::BadAllow, 2)), "{got:?}");
+        assert!(got.contains(&(Rule::WallClock, 3)), "unjustified allow must not suppress: {got:?}");
+    }
+
+    #[test]
+    fn r2_flags_iteration_but_not_lookup() {
+        let src = "fn f(m: &HashMap<u64, u64>) -> Option<u64> {\n\
+                   \x20   let _n = m.len();\n\
+                   \x20   for (k, _) in m.iter() { let _ = k; }\n\
+                   \x20   m.get(&1).copied()\n}";
+        assert_eq!(rules_of("experiments/matrix.rs", src), vec![(Rule::HashOrder, 3)]);
+        // lookups alone stay silent
+        let lookup = "fn f(m: &HashMap<u64, u64>) -> Option<u64> { m.get(&1).copied() }";
+        assert!(rules_of("experiments/matrix.rs", lookup).is_empty());
+        // and BTreeMap iteration is always fine
+        let btree = "fn f(m: &BTreeMap<u64, u64>) -> usize { m.iter().count() }";
+        assert!(rules_of("experiments/matrix.rs", btree).is_empty());
+    }
+
+    #[test]
+    fn r2_sees_let_bindings_and_for_loops() {
+        let src = "fn f() {\n\
+                   \x20   let mut seen = HashSet::new();\n\
+                   \x20   seen.insert(1u64);\n\
+                   \x20   for v in &seen { let _ = v; }\n}";
+        assert_eq!(rules_of("sim/shard.rs", src), vec![(Rule::HashOrder, 4)]);
+    }
+
+    #[test]
+    fn r3_fires_in_trace_only_and_skips_tests() {
+        let src = "pub fn f(x: f64) -> u64 { x as u64 }";
+        assert_eq!(rules_of("trace/swf.rs", src), vec![(Rule::LossyCast, 1)]);
+        assert!(rules_of("sim/engine.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn g(x: f64) -> u64 { x as u64 }\n}";
+        assert!(rules_of("trace/swf.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn r3_ignores_use_renames_and_float_casts() {
+        assert!(rules_of("trace/swf.rs", "use std::io::Result as u64_alias;\n").is_empty());
+        assert!(rules_of("trace/swf.rs", "fn f(x: u64) -> f64 { x as f64 }").is_empty());
+    }
+
+    #[test]
+    fn r4_requires_the_full_lifecycle_surface() {
+        let partial = "impl ProvisionPolicy for Greedy {\n\
+                       \x20   fn name(&self) -> &str { \"greedy\" }\n\
+                       \x20   fn on_join(&mut self, _p: DeptProfile, _t: u64) {}\n\
+                       \x20   fn on_leave(&mut self, _d: DeptId, _t: u64) {}\n}";
+        assert_eq!(rules_of("provision/policy.rs", partial), vec![(Rule::PolicySurface, 1)]);
+        let full = "impl ProvisionPolicy for Greedy {\n\
+                    \x20   fn on_crash(&mut self) {}\n\
+                    \x20   fn on_recover(&mut self) {}\n\
+                    \x20   fn on_join(&mut self) {}\n\
+                    \x20   fn on_leave(&mut self) {}\n}";
+        assert!(rules_of("provision/policy.rs", full).is_empty());
+        // a generic *bound* on the trait is not an impl of it
+        let bound = "impl<P: ProvisionPolicy> Holder<P> { fn get(&self) -> &P { &self.0 } }";
+        assert!(rules_of("provision/mixed.rs", bound).is_empty());
+    }
+
+    #[test]
+    fn r5_flags_library_panics_but_not_main_or_tests() {
+        let src = "pub fn f(v: Option<u64>) -> u64 { v.unwrap() }";
+        assert_eq!(rules_of("util/stats.rs", src), vec![(Rule::PanicPath, 1)]);
+        assert!(rules_of("main.rs", src).is_empty());
+        let test_src = "#[test]\nfn t() { Some(1u64).unwrap(); }";
+        assert!(rules_of("util/stats.rs", test_src).is_empty());
+        // unwrap_or and friends are total, not panics
+        let total = "pub fn f(v: Option<u64>) -> u64 { v.unwrap_or(0) }";
+        assert!(rules_of("util/stats.rs", total).is_empty());
+    }
+
+    #[test]
+    fn scope_directive_overrides_the_path() {
+        let src = "//~ scope: trace/fixture.rs\npub fn f(x: f64) -> u64 { x as u64 }";
+        assert_eq!(rules_of("whatever.rs", src), vec![(Rule::LossyCast, 2)]);
+    }
+
+    #[test]
+    fn unknown_allow_rule_is_a_finding() {
+        let src = "// phoenix-lint: allow(everything): please\nfn f() {}";
+        assert_eq!(rules_of("sim/engine.rs", src), vec![(Rule::BadAllow, 1)]);
+    }
+}

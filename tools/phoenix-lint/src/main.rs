@@ -1,0 +1,45 @@
+//! CLI for phoenix-lint. With no arguments, lints the main crate's
+//! `rust/src` tree (located relative to this crate's manifest, so
+//! `cargo run -p phoenix-lint` works from anywhere in the workspace);
+//! otherwise each argument is a file or directory to lint.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!(
+            "phoenix-lint: machine-checks the phoenix_cloud determinism contract (R1-R5)\n\
+             usage: cargo run -p phoenix-lint [--] [path ...]\n\
+             With no paths, lints rust/src. Exits 1 on findings, 2 on I/O errors."
+        );
+        return ExitCode::SUCCESS;
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+
+    let mut findings = Vec::new();
+    for root in &roots {
+        match phoenix_lint::lint_path(root) {
+            Ok(mut f) => findings.append(&mut f),
+            Err(e) => {
+                eprintln!("phoenix-lint: cannot read {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("phoenix-lint: determinism contract clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("phoenix-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,38 @@
+//~ scope: trace/fixture.rs
+//! Clean fixture: trace-scoped (the strictest rule set — R1, R2, R3, R5
+//! all apply) yet silent, because every lookalike below is legal:
+//! banned tokens in comments/strings, BTreeMap iteration, a justified
+//! allow on a cast, and unwraps confined to `#[cfg(test)]`.
+
+use std::collections::BTreeMap;
+
+/// Mentions Instant::now() and thread_rng in a doc comment — comments
+/// are stripped before scanning.
+pub fn describe() -> &'static str {
+    "call Instant::now() and x as u64 — strings are stripped too"
+}
+
+pub fn sum_by_key(rows: &BTreeMap<u64, u64>) -> u64 {
+    // BTreeMap iteration is deterministic and always fine
+    rows.iter().map(|(_, v)| *v).sum()
+}
+
+pub fn widen(raw: u32) -> u64 {
+    // phoenix-lint: allow(lossy_cast): u32 -> u64 widens, every value representable
+    raw as u64
+}
+
+pub fn head(values: &[u64]) -> Option<u64> {
+    values.first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widen_round_trips() {
+        // unwrap in tests is legal
+        assert_eq!(u32::try_from(widen(7)).unwrap(), 7);
+    }
+}

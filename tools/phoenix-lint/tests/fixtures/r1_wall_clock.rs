@@ -1,0 +1,8 @@
+//~ scope: sim/fixture.rs
+//! Known-bad fixture for R1: a wall-clock read inside a deterministic
+//! module. Exactly one finding, on the `Instant::now()` line.
+
+pub fn tick_duration_secs() -> u64 {
+    let started = std::time::Instant::now();
+    started.elapsed().as_secs()
+}

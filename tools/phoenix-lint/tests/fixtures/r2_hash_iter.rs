@@ -1,0 +1,11 @@
+//~ scope: coordinator/fixture.rs
+//! Known-bad fixture for R2: iterating a HashMap in a deterministic
+//! module. Lookup and insertion on the same map stay silent; the single
+//! finding is on the `.iter()` line.
+
+use std::collections::HashMap;
+
+pub fn sum_pending(pending: &HashMap<u64, u64>) -> u64 {
+    let _one = pending.get(&1).copied().unwrap_or(0);
+    pending.iter().map(|(_, v)| *v).sum()
+}

@@ -1,0 +1,8 @@
+//~ scope: trace/fixture.rs
+//! Known-bad fixture for R3: a bare `as` integer cast in a trace
+//! parser — the PR-3 SWF truncation bug class. One finding, on the
+//! cast line.
+
+pub fn parse_submit(raw: f64) -> u64 {
+    raw as u64
+}

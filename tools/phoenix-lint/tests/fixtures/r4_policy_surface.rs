@@ -1,0 +1,16 @@
+//~ scope: provision/fixture.rs
+//! Known-bad fixture for R4: an `impl ProvisionPolicy` that silently
+//! inherits the crash/recovery lifecycle defaults. One finding, on the
+//! `impl` line, naming on_crash and on_recover as missing.
+
+pub struct Hoarder;
+
+impl ProvisionPolicy for Hoarder {
+    fn name(&self) -> &'static str {
+        "hoarder"
+    }
+
+    fn on_join(&mut self, _profile: DeptProfile, _now: u64) {}
+
+    fn on_leave(&mut self, _dept: DeptId, _now: u64) {}
+}

@@ -1,0 +1,7 @@
+//~ scope: util/fixture.rs
+//! Known-bad fixture for R5: a panic path in library code. One finding,
+//! on the `.unwrap()` line.
+
+pub fn head(values: &[u64]) -> u64 {
+    values.first().copied().unwrap()
+}

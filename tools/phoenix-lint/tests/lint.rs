@@ -1,0 +1,105 @@
+//! Fixture-driven self-test for phoenix-lint, plus the integration
+//! check that the real `rust/src` tree is clean at HEAD.
+//!
+//! Each known-bad fixture must produce *exactly one* finding, with the
+//! expected rule id — proving both that the rule fires and that the
+//! rest of the scanner stays quiet around it.
+
+use std::path::{Path, PathBuf};
+
+use phoenix_lint::{lint_path, Rule};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn lint_fixture(name: &str) -> Vec<phoenix_lint::Finding> {
+    lint_path(&fixture(name)).expect("fixture readable")
+}
+
+fn assert_single(name: &str, rule: Rule, needle: &str) {
+    let findings = lint_fixture(name);
+    assert_eq!(
+        findings.len(),
+        1,
+        "{name}: expected exactly one finding, got: {:?}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+    assert_eq!(findings[0].rule, rule, "{name}: wrong rule: {}", findings[0]);
+    assert!(
+        findings[0].msg.contains(needle),
+        "{name}: message `{}` should mention `{needle}`",
+        findings[0].msg
+    );
+}
+
+#[test]
+fn r1_wall_clock_fixture_flags() {
+    assert_single("r1_wall_clock.rs", Rule::WallClock, "Instant::now");
+}
+
+#[test]
+fn r2_hash_iter_fixture_flags() {
+    assert_single("r2_hash_iter.rs", Rule::HashOrder, "pending");
+}
+
+#[test]
+fn r3_lossy_cast_fixture_flags() {
+    assert_single("r3_lossy_cast.rs", Rule::LossyCast, "as u64");
+}
+
+#[test]
+fn r4_policy_surface_fixture_flags() {
+    let findings = lint_fixture("r4_policy_surface.rs");
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, Rule::PolicySurface);
+    assert!(findings[0].msg.contains("on_crash"), "{}", findings[0]);
+    assert!(findings[0].msg.contains("on_recover"), "{}", findings[0]);
+    assert!(
+        !findings[0].msg.contains("on_join"),
+        "on_join is implemented and must not be reported missing: {}",
+        findings[0]
+    );
+}
+
+#[test]
+fn r5_panic_path_fixture_flags() {
+    assert_single("r5_panic_path.rs", Rule::PanicPath, "unwrap");
+}
+
+#[test]
+fn clean_fixture_is_silent() {
+    let findings = lint_fixture("clean.rs");
+    assert!(
+        findings.is_empty(),
+        "clean fixture must be silent, got: {:?}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn rule_ids_match_the_documented_contract() {
+    assert_eq!((Rule::WallClock.id(), Rule::WallClock.name()), ("R1", "wall_clock"));
+    assert_eq!((Rule::HashOrder.id(), Rule::HashOrder.name()), ("R2", "hash_order"));
+    assert_eq!((Rule::LossyCast.id(), Rule::LossyCast.name()), ("R3", "lossy_cast"));
+    assert_eq!(
+        (Rule::PolicySurface.id(), Rule::PolicySurface.name()),
+        ("R4", "policy_surface")
+    );
+    assert_eq!((Rule::PanicPath.id(), Rule::PanicPath.name()), ("R5", "panic_path"));
+    assert_eq!((Rule::BadAllow.id(), Rule::BadAllow.name()), ("R0", "allow"));
+}
+
+/// The real tree is clean at HEAD: every violation the findings sweep
+/// surfaced has been fixed or carries a justified allow. This is the
+/// same check `cargo run -p phoenix-lint` performs in CI.
+#[test]
+fn real_rust_src_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let findings = lint_path(&root).expect("rust/src readable");
+    assert!(
+        findings.is_empty(),
+        "determinism contract violations in rust/src:\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
