@@ -39,10 +39,14 @@ use std::collections::BTreeMap;
 
 use phoenix_cloud::cluster::{DeptId, Ledger};
 use phoenix_cloud::config::{ExperimentConfig, KillOrder, RosterMix, SchedulerKind};
+use phoenix_cloud::coordinator::realtime::{serve_roster_with_ingest, ServeDept, ServeReport};
 use phoenix_cloud::experiments::matrix::{self, MatrixAxes, PolicyAxis, SizeScan};
 use phoenix_cloud::experiments::{consolidation, scale};
+use phoenix_cloud::net::driver::{self, RosterTarget};
+use phoenix_cloud::net::ServeFrontend;
+use phoenix_cloud::trace::web_synth::RateSeries;
 use phoenix_cloud::util::timefmt::DAY;
-use phoenix_cloud::provision::PolicySpec;
+use phoenix_cloud::provision::{PolicyChoice, PolicySpec};
 use phoenix_cloud::runtime::ForecastEngine;
 use phoenix_cloud::sim::{
     Engine, EventHandler, HierWheel, LaneEvent, LaneOut, Schedule, ShardModel, ShardedEngine,
@@ -464,6 +468,80 @@ fn main() {
         "bisect speedup over the exhaustive grid walk: {:.2}x (identical required sizes verified)",
         walk_ns / bisect_ns.max(1e-9)
     );
+
+    section("serve ingest saturation (requests/sec vs p99 grant latency vs roster size)");
+    // K batch departments fed exclusively over the network frontend: every
+    // trace submit time sits beyond the horizon, so only ingest admits
+    // jobs. Work units are ingested requests — `units_per_sec` in
+    // BENCH_micro.json is the sustained ingest rate; the printed p99 is
+    // the per-request bus round-trip (EXPERIMENTS.md §Serve saturation
+    // table). Conservation is asserted on every run.
+    let total_reqs = if quick() { 20_000usize } else { 100_000 };
+    let serve_ingest = |k: usize, total: usize| -> ServeReport {
+        let mut cfg = ExperimentConfig::dynamic(64 * k as u64);
+        cfg.ws_sample_period = 20;
+        let secs = 2_000u64;
+        let per_dept = total / k;
+        let depts: Vec<ServeDept> = (0..k)
+            .map(|d| {
+                let jobs: Vec<Job> = (0..per_dept)
+                    .map(|i| Job {
+                        id: i as u64 + 1,
+                        submit: secs + 1, // ingest-only: never tick-admitted
+                        size: 1,
+                        runtime: 2,
+                        requested: 60,
+                    })
+                    .collect();
+                ServeDept::batch(&format!("st{d}"), 64, jobs)
+            })
+            .collect();
+        let targets: Vec<RosterTarget> = (0..k)
+            .map(|d| RosterTarget { dept: DeptId(d as u16), trace_len: per_dept })
+            .collect();
+        let rate = total as f64 / secs as f64;
+        let rates =
+            RateSeries { sample_period: 20, rates: vec![rate; (secs / 20) as usize] };
+        let mut rng = Rng::new(0x5e);
+        let reqs = driver::open_loop(&targets, &rates, secs, 100.0, total, &mut rng);
+        let n_reqs = reqs.len() as u64;
+        let mut fe = ServeFrontend::in_memory(reqs, total.max(1), 0);
+        let report = serve_roster_with_ingest(
+            &cfg,
+            &PolicyChoice::Base(PolicySpec::Cooperative),
+            depts,
+            secs,
+            0,
+            Some(&mut fe),
+        )
+        .expect("serve ingest run");
+        let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+        assert_eq!(
+            report.free_end + held + report.down_end,
+            report.cluster_nodes,
+            "ledger conservation violated under ingest load (K={k})"
+        );
+        assert_eq!(report.ingested + report.shed, n_reqs, "requests lost (K={k})");
+        report
+    };
+    for k in [2usize, 4, 8] {
+        let probe = serve_ingest(k, total_reqs);
+        println!(
+            "serve ingest K={k}: {} ingested / {} shed / {} acked — grant latency \
+             mean {:.1}s p99 {:.1}s (trace time)",
+            probe.ingested,
+            probe.shed,
+            probe.acked,
+            probe.grant_latency_mean_s,
+            probe.grant_latency_p99_s
+        );
+        rep.record(bench(
+            &format!("serve ingest saturation K={k}"),
+            0,
+            iters(3).max(2),
+            || serve_ingest(k, total_reqs).ingested,
+        ));
+    }
 
     if ForecastEngine::artifacts_present("artifacts") {
         section("PJRT forecaster (the predictive-autoscaler hot path)");

@@ -1111,7 +1111,7 @@ mod tests {
         let res = ConsolidationSim::new(cfg, tiny_jobs(), ws_demand).run().unwrap();
         assert_eq!(res.completed, 4);
         // ST pool must have grown after the release
-        let pool_max = res.registry.series["st.pool"].max();
+        let pool_max = res.registry.series["st.pool"].max().unwrap_or(0.0);
         assert!(pool_max >= 15.0, "pool_max={pool_max}");
     }
 

@@ -34,7 +34,7 @@ use crate::cluster::{DeptId, DeptKind};
 use crate::config::{DeptSpec, ExperimentConfig, RosterMix};
 use crate::provision::{DeptProfile, PolicyChoice, PolicySpec, Rps};
 use crate::services::monitor::Monitor;
-use crate::services::{Bus, Ctx, Msg, Service, ServiceId};
+use crate::services::{Bus, Ctx, Msg, Sender, Service, ServiceId, SubmitAck};
 use crate::stcms::StServer;
 use crate::trace::web_synth::RateSeries;
 use crate::workload::{Job, JobState};
@@ -318,6 +318,11 @@ struct BatchSvc {
     submitted_early: BTreeSet<usize>,
     /// (finish_time, job_id) pending completions, processed on ticks.
     finishes: Vec<(u64, u64)>,
+    /// Ingress submissions awaiting their ack, keyed by job id:
+    /// `(trace_idx, submitted_at)`. Entries leave as jobs are scheduled
+    /// (emitting a [`SubmitAck`]); jobs killed before ever starting simply
+    /// never ack — the frontend counts acks ≤ ingested.
+    ack_pending: BTreeMap<u64, (usize, u64)>,
     rps: ServiceId,
     monitor: ServiceId,
     me: ServiceId,
@@ -325,9 +330,14 @@ struct BatchSvc {
 }
 
 impl BatchSvc {
-    fn schedule(&mut self, now: u64) {
+    fn schedule(&mut self, now: u64, ctx: &mut Ctx<'_>) {
         for s in self.st.schedule(now) {
             self.finishes.push((s.finish_at, s.job_id));
+            // a job that came in over the network frontend acks the moment
+            // it is first scheduled onto granted nodes
+            if let Some((trace_idx, submitted)) = self.ack_pending.remove(&s.job_id) {
+                ctx.ack(SubmitAck { dept: self.dept, trace_idx, submitted, granted: now });
+            }
         }
     }
 
@@ -373,7 +383,8 @@ impl Service for BatchSvc {
         match msg {
             Msg::Grant { nodes, .. } => {
                 self.st.grant(nodes);
-                self.schedule(ctx.now());
+                let now = ctx.now();
+                self.schedule(now, ctx);
             }
             Msg::ForceReturn { nodes, .. } => {
                 let killed = self.st.force_return(nodes, ctx.now());
@@ -409,8 +420,14 @@ impl Service for BatchSvc {
                 } else if let Some(job) = self.jobs.get(trace_idx) {
                     let job = job.clone();
                     self.submitted_early.insert(trace_idx);
+                    // frontend-injected submissions owe an ack when their
+                    // covering grant lands
+                    if ctx.sender() == Sender::Ingress {
+                        self.ack_pending.insert(job.id, (trace_idx, ctx.now()));
+                    }
                     self.st.submit(job);
-                    self.schedule(ctx.now());
+                    let now = ctx.now();
+                    self.schedule(now, ctx);
                 } else {
                     log::warn!(
                         "{}: SubmitJob index {trace_idx} beyond trace ({} jobs) — dropped",
@@ -451,7 +468,7 @@ impl Service for BatchSvc {
                     }
                     self.next_job += 1;
                 }
-                self.schedule(now);
+                self.schedule(now, ctx);
                 // batch resource-management policy, serve-path flavor: ask
                 // upstream for the queued work the idle pool cannot cover
                 // (a no-op under the cooperative policy, whose free pool is
@@ -603,6 +620,22 @@ pub struct ServeReport {
     pub down_end: u64,
     /// Services whose heartbeat was overdue at the horizon.
     pub down_services: Vec<String>,
+    /// Network-frontend requests accepted into the ingest queue (0 when
+    /// the run had no frontend).
+    pub ingested: u64,
+    /// Requests shed 429-style because the bounded ingest queue was full.
+    pub shed: u64,
+    /// Undecodable request lines plus requests addressing departments the
+    /// roster could not route.
+    pub ingest_bad: u64,
+    /// [`SubmitAck`]s delivered back to the frontend (≤ `ingested`: jobs
+    /// killed before first scheduling never ack).
+    pub acked: u64,
+    /// Mean bus round-trip (submit → first scheduling) over acked
+    /// requests, trace seconds.
+    pub grant_latency_mean_s: f64,
+    /// p99 of the same distribution.
+    pub grant_latency_p99_s: f64,
     /// Per-department breakdown, in department-id order (leavers report
     /// their final state).
     pub per_dept: Vec<DeptSummary>,
@@ -662,6 +695,7 @@ fn register_cms(
                 next_job: 0,
                 submitted_early: BTreeSet::new(),
                 finishes: Vec::new(),
+                ack_pending: BTreeMap::new(),
                 rps: wiring.rps,
                 monitor: wiring.monitor,
                 me,
@@ -710,6 +744,24 @@ pub fn serve_roster(
     depts: Vec<ServeDept>,
     sim_seconds: u64,
     speedup: u64,
+) -> Result<ServeReport> {
+    serve_roster_with_ingest(cfg, policy, depts, sim_seconds, speedup, None)
+}
+
+/// [`serve_roster`] with an optional network frontend
+/// ([`crate::net::ServeFrontend`]): each tick, due external requests are
+/// pumped through the frontend's bounded queue (shedding 429-style when
+/// full) and posted as ingress-sent [`Msg::SubmitJob`]s; acks drained
+/// from the bus flow back through the frontend and into the report's
+/// grant-latency figures. With `None` the ingest path is exactly inert —
+/// no ingress posts, no acks, bit-identical to [`serve_roster`].
+pub fn serve_roster_with_ingest(
+    cfg: &ExperimentConfig,
+    policy: &PolicyChoice,
+    depts: Vec<ServeDept>,
+    sim_seconds: u64,
+    speedup: u64,
+    mut frontend: Option<&mut crate::net::ServeFrontend>,
 ) -> Result<ServeReport> {
     let tick_step = cfg.ws_sample_period;
     if tick_step == 0 {
@@ -851,6 +903,9 @@ pub fn serve_roster(
     let mut ticks = 0u64;
     let mut now = 0u64;
     let mut next_join = 0usize;
+    // per-request bus round-trip latencies (trace seconds) of every ack
+    // the frontend received; empty without a frontend
+    let mut grant_latencies: Vec<f64> = Vec::new();
     state.pending_leaves.sort_by_key(|&(t, _)| t);
     let mut joiners = joiners.into_iter().collect::<VecDeque<_>>();
     while now <= sim_seconds {
@@ -888,6 +943,25 @@ pub fn serve_roster(
             bus.run_until_quiescent(limit)
                 .with_context(|| format!("fault event at t={now}s"))?;
         }
+        // due external requests enter next: the frontend's bounded queue
+        // releases at most its drain budget per tick, each becoming an
+        // ingress-sent SubmitJob; a request for a department that never
+        // joined (or already left) is counted, not silently dropped
+        if let Some(fe) = frontend.as_deref_mut() {
+            let mut posted = false;
+            for req in fe.pump(now) {
+                let msg = Msg::SubmitJob { dept: req.dept, trace_idx: req.trace_idx };
+                if bus.post_to_dept_ingress(req.dept, msg).is_err() {
+                    fe.count_unroutable();
+                } else {
+                    posted = true;
+                }
+            }
+            if posted {
+                bus.run_until_quiescent(limit)
+                    .with_context(|| format!("ingest drain at t={now}s"))?;
+            }
+        }
         // the RPS settles lease expiries on its tick…
         bus.post(rps_id, Msg::Tick { now });
         bus.run_until_quiescent(limit)
@@ -910,6 +984,15 @@ pub fn serve_roster(
             state.active.retain(|&x| x != dept);
             monitor.borrow_mut().forget(state.service_ids[dept.index()]);
         }
+        // acks minted this tick (idle-pool admissions, grants, tick-time
+        // scheduling) leave the bus toward the clients now, and their
+        // bus round-trip latency is recorded per request
+        if let Some(fe) = frontend.as_deref_mut() {
+            for ack in bus.take_acks() {
+                grant_latencies.push(ack.granted.saturating_sub(ack.submitted) as f64);
+                fe.deliver_ack(&ack);
+            }
+        }
         ticks += 1;
         now += tick_step;
         if let Some(anchor) = pacing_anchor {
@@ -921,6 +1004,10 @@ pub fn serve_roster(
         }
     }
     let RosterState { specs, stats, submitted, .. } = state;
+    let (ingested, shed, ingest_bad) = frontend
+        .as_ref()
+        .map(|fe| (fe.stats.ingested, fe.stats.shed, fe.stats.bad))
+        .unwrap_or((0, 0, 0));
 
     // ---- report
     let last_now = now - tick_step;
@@ -980,6 +1067,12 @@ pub fn serve_roster(
         recovers: rps_stats.recovers.get(),
         down_end: rps_stats.down.get(),
         down_services,
+        ingested,
+        shed,
+        ingest_bad,
+        acked: crate::util::num::u64_from_usize(grant_latencies.len()),
+        grant_latency_mean_s: crate::util::stats::mean(&grant_latencies),
+        grant_latency_p99_s: crate::util::stats::percentile(&grant_latencies, 0.99),
         per_dept,
     })
 }
@@ -994,7 +1087,20 @@ pub fn serve_config(
     cfg: &ExperimentConfig,
     sim_seconds: u64,
     speedup: u64,
+    scaler_for: impl FnMut(&DeptSpec, &ExperimentConfig) -> ScalerFn,
+) -> Result<ServeReport> {
+    serve_config_with_ingest(cfg, sim_seconds, speedup, scaler_for, None)
+}
+
+/// [`serve_config`] with an optional network frontend — the `phoenixd
+/// serve --listen` / `--ingest-file` entry point. See
+/// [`serve_roster_with_ingest`].
+pub fn serve_config_with_ingest(
+    cfg: &ExperimentConfig,
+    sim_seconds: u64,
+    speedup: u64,
     mut scaler_for: impl FnMut(&DeptSpec, &ExperimentConfig) -> ScalerFn,
+    frontend: Option<&mut crate::net::ServeFrontend>,
 ) -> Result<ServeReport> {
     let specs = if cfg.departments.is_empty() {
         RosterMix::Alternating.departments(2, cfg)
@@ -1027,7 +1133,7 @@ pub fn serve_config(
         .policy
         .clone()
         .unwrap_or(PolicyChoice::Base(PolicySpec::Cooperative));
-    serve_roster(cfg, &policy, depts, sim_seconds, speedup)
+    serve_roster_with_ingest(cfg, &policy, depts, sim_seconds, speedup, frontend)
 }
 
 /// Convenience constructor for the paper's two-department testbed run:
@@ -1245,6 +1351,7 @@ mod tests {
             next_job: 0,
             submitted_early: BTreeSet::new(),
             finishes: Vec::new(),
+            ack_pending: BTreeMap::new(),
             rps,
             monitor: mon,
             me: 2,
@@ -1276,6 +1383,115 @@ mod tests {
         bus.post_to_dept(DeptId(0), Msg::SubmitJob { dept: DeptId(0), trace_idx: 99 })
             .unwrap();
         assert!(bus.run_until_quiescent(100).is_ok());
+    }
+
+    /// A roster whose batch trace arrives only over the frontend: every
+    /// request must be ingested, acked with measurable latency, and
+    /// completed, with the node ledger conserved.
+    #[test]
+    fn ingest_frontend_feeds_submit_jobs_and_collects_acks() {
+        let mut cfg = ExperimentConfig::dynamic(64);
+        cfg.ws_sample_period = 20;
+        let horizon = 400;
+        // submit times beyond the horizon: the tick arrival loop never
+        // admits these — only the ingest path can
+        let jobs: Vec<Job> = (0..10)
+            .map(|i| Job { id: i + 1, submit: horizon + 1, size: 1, runtime: 40, requested: 120 })
+            .collect();
+        let rates = RateSeries { sample_period: 20, rates: vec![50.0; 100] };
+        let depts = vec![
+            ServeDept::batch("st", cfg.st_nodes, jobs),
+            ServeDept::service("ws", cfg.ws_nodes, rates, reactive_scaler(64)),
+        ];
+        let reqs: Vec<crate::net::IngestRequest> = (0..10)
+            .map(|i| crate::net::IngestRequest {
+                dept: DeptId(0),
+                trace_idx: i,
+                due: i as u64 * 20,
+            })
+            .collect();
+        let mut fe = crate::net::ServeFrontend::in_memory(reqs, 64, 0);
+        let report = serve_roster_with_ingest(
+            &cfg,
+            &PolicyChoice::Base(PolicySpec::Cooperative),
+            depts,
+            horizon,
+            0,
+            Some(&mut fe),
+        )
+        .unwrap();
+        assert_eq!(report.ingested, 10);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.ingest_bad, 0);
+        assert_eq!(report.acked, 10, "every ingested job acks");
+        assert!(report.grant_latency_p99_s >= report.grant_latency_mean_s);
+        assert_eq!(report.completed, 10);
+        assert_eq!(report.in_flight, 0);
+        let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+        assert_eq!(report.free_end + held + report.down_end, report.cluster_nodes);
+    }
+
+    /// When arrivals outrun the bounded queue the overflow is shed and
+    /// counted — never silently dropped — and what was admitted still
+    /// flows to completion.
+    #[test]
+    fn ingest_backpressure_sheds_and_counts_overflow() {
+        let mut cfg = ExperimentConfig::dynamic(64);
+        cfg.ws_sample_period = 20;
+        let horizon = 400;
+        let jobs: Vec<Job> = (0..10)
+            .map(|i| Job { id: i + 1, submit: horizon + 1, size: 1, runtime: 40, requested: 120 })
+            .collect();
+        let depts = vec![ServeDept::batch("st", cfg.st_nodes, jobs)];
+        // all ten requests burst at t=0 against a cap-4 queue
+        let reqs: Vec<crate::net::IngestRequest> = (0..10)
+            .map(|i| crate::net::IngestRequest { dept: DeptId(0), trace_idx: i, due: 0 })
+            .collect();
+        let mut fe = crate::net::ServeFrontend::in_memory(reqs, 4, 2);
+        let report = serve_roster_with_ingest(
+            &cfg,
+            &PolicyChoice::Base(PolicySpec::Cooperative),
+            depts,
+            horizon,
+            0,
+            Some(&mut fe),
+        )
+        .unwrap();
+        assert_eq!(report.ingested, 4, "cap-4 queue admits four");
+        assert_eq!(report.shed, 6, "overflow counted, not dropped");
+        assert_eq!(report.acked, 4);
+        assert_eq!(report.completed, 4);
+        let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
+        assert_eq!(report.free_end + held + report.down_end, report.cluster_nodes);
+    }
+
+    /// Requests for departments the roster cannot route are rejected and
+    /// counted as bad input, without aborting the run.
+    #[test]
+    fn ingest_unroutable_departments_are_counted_not_fatal() {
+        let mut cfg = ExperimentConfig::dynamic(64);
+        cfg.ws_sample_period = 20;
+        let jobs =
+            vec![Job { id: 1, submit: 401, size: 1, runtime: 40, requested: 120 }];
+        let depts = vec![ServeDept::batch("st", cfg.st_nodes, jobs)];
+        let reqs = vec![
+            crate::net::IngestRequest { dept: DeptId(0), trace_idx: 0, due: 0 },
+            crate::net::IngestRequest { dept: DeptId(7), trace_idx: 0, due: 0 },
+        ];
+        let mut fe = crate::net::ServeFrontend::in_memory(reqs, 16, 0);
+        let report = serve_roster_with_ingest(
+            &cfg,
+            &PolicyChoice::Base(PolicySpec::Cooperative),
+            depts,
+            400,
+            0,
+            Some(&mut fe),
+        )
+        .unwrap();
+        assert_eq!(report.ingested, 2, "both decoded and queued");
+        assert_eq!(report.ingest_bad, 1, "dept 7 never joined");
+        assert_eq!(report.acked, 1);
+        assert_eq!(report.completed, 1);
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod faults;
 pub mod metrics;
+pub mod net;
 pub mod provision;
 pub mod runtime;
 pub mod services;

@@ -15,7 +15,12 @@
 //!                 [--predictive]           # any [[department]] roster (K>=2,
 //!                                          # join_at = mid-run arrivals) under
 //!                                          # the configured [policy]
-//! phoenixd tracegen --kind hpc|web --out FILE
+//!                 [--listen ADDR | --ingest-file FILE] [--ingest-queue N]
+//!                 [--ingest-drain N] [--ack-out FILE]
+//!                                          # live network frontend: line-framed
+//!                                          # JSON requests -> SubmitJob, acks
+//!                                          # back, bounded-queue backpressure
+//! phoenixd tracegen --kind hpc|web|requests --out FILE
 //! phoenixd validate [--config FILE]        # config check
 //! ```
 
@@ -27,6 +32,7 @@ use phoenix_cloud::coordinator::realtime::{self, ScalerFn};
 use phoenix_cloud::experiments::{
     ablations, consolidation, fig5, matrix, report, scale, sensitivity,
 };
+use phoenix_cloud::net::driver;
 use phoenix_cloud::provision::{PolicyChoice, PolicySpec};
 use phoenix_cloud::runtime::ForecastEngine;
 use phoenix_cloud::trace::{hpc_synth, swf, web_synth, worldcup};
@@ -130,8 +136,15 @@ sense     headline sensitivity across seeds and load band (--seeds N)\n  \
 serve     realtime coordinator: the config's [[department]] roster (default:\n  \
           the paper's ST+WS pair) live on the department-addressed message\n  \
           bus, [policy]-driven, with join_at mid-run arrivals\n  \
-          (--predictive for the PJRT autoscaler on the first service dept)\n  \
-tracegen  emit a synthetic trace (--kind hpc|web)\n  \
+          (--predictive for the PJRT autoscaler on the first service dept;\n  \
+          --listen ADDR or --ingest-file FILE for the network frontend:\n  \
+          line-framed JSON requests become SubmitJob bus messages, acks\n  \
+          flow back per request, --ingest-queue N bounds the backlog and\n  \
+          overflow is shed 429-style, --ingest-drain N caps posts per tick,\n  \
+          --ack-out FILE captures ack/reject lines in file mode)\n  \
+tracegen  emit a synthetic trace (--kind hpc|web, or --kind requests for a\n  \
+          serve ingest stream: --requests N --mode open|closed --rate RPS\n  \
+          --concurrency N --mean-work-ms F aimed at the config's roster)\n  \
 validate  parse + validate a config file\n\
 common flags: --config FILE --seed N --load F --workers N (0 = all cores) --verbose\n  \
 --engine reference|wheel|hier|sharded (event-queue engine, default hier;\n  \
@@ -511,6 +524,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
 
+    // ---- optional network frontend: --listen (socket) or --ingest-file
+    // (the sandboxed-CI fallback). Without either, the ingest path is
+    // exactly inert and the output stays byte-identical to earlier builds.
+    let queue_cap = args.get_u64("ingest-queue", 4096)? as usize;
+    let drain = args.get_u64("ingest-drain", 0)? as usize;
+    let mut frontend = match (args.get("listen"), args.get("ingest-file")) {
+        (Some(_), Some(_)) => bail!("--listen and --ingest-file are mutually exclusive"),
+        (Some(addr), None) => {
+            let (fe, local) = phoenix_cloud::net::ServeFrontend::listen(addr, queue_cap, drain)?;
+            println!("listening on {local} (ingest queue {queue_cap})");
+            Some(fe)
+        }
+        (None, Some(path)) => {
+            let fe = phoenix_cloud::net::ServeFrontend::file_tail(
+                path,
+                args.get("ack-out"),
+                queue_cap,
+                drain,
+            )?;
+            println!("tailing requests from {path} (ingest queue {queue_cap})");
+            Some(fe)
+        }
+        (None, None) => None,
+    };
+
     let k = if cfg.departments.is_empty() { 2 } else { cfg.departments.len() };
     let joiners = cfg.departments.iter().filter(|d| d.join_at > 0).count();
     println!(
@@ -523,7 +561,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the CLI boundary is the one legal place to time it.
     #[allow(clippy::disallowed_methods)]
     let serve_started = std::time::Instant::now();
-    let mut report = realtime::serve_config(&cfg, secs, speedup, scaler_for)?;
+    let mut report =
+        realtime::serve_config_with_ingest(&cfg, secs, speedup, scaler_for, frontend.as_mut())?;
     report.wall = serve_started.elapsed();
     println!(
         "{:<12} {:>8} {:>10} {:>7} {:>14} {:>13} {:>9}",
@@ -550,6 +589,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  peak svc demand  : {}", report.ws_peak_demand);
     println!("  svc shortage     : {} node·s", report.ws_shortage_node_secs);
     println!("  force returns    : {} ({} nodes)", report.force_returns, report.forced_nodes);
+    if frontend.is_some() {
+        println!("  ingested / shed  : {} / {}", report.ingested, report.shed);
+        println!("  acked            : {} (bad requests {})", report.acked, report.ingest_bad);
+        println!(
+            "  grant latency    : mean {:.1}s p99 {:.1}s (bus round-trip, trace time)",
+            report.grant_latency_mean_s, report.grant_latency_p99_s
+        );
+    }
     if report.crashes > 0 || report.recovers > 0 {
         println!("  crashes/recovers : {} / {}", report.crashes, report.recovers);
         println!("  down at horizon  : {} nodes", report.down_end);
@@ -599,7 +646,58 @@ fn cmd_tracegen(args: &Args) -> Result<()> {
             t.save(&out)?;
             println!("wrote {} samples (peak {:.0} rps) to {out}", rates.rates.len(), rates.peak());
         }
-        other => bail!("unknown trace kind '{other}' (hpc|web)"),
+        "requests" => {
+            // a request stream for `serve --ingest-file` / `--listen`,
+            // addressed at the config's boot batch departments (trace
+            // indices always name real jobs — see driver::roster_targets)
+            let targets = driver::roster_targets(&cfg)?;
+            if targets.iter().all(|t| t.trace_len == 0) {
+                bail!("the config's roster has no boot batch departments to address");
+            }
+            let secs = args.get_u64("secs", 3600)?;
+            let total = args.get_u64("requests", 100_000)? as usize;
+            let mean_work_ms = args.get_f64("mean-work-ms", 100.0)?;
+            let mut rng = phoenix_cloud::util::rng::Rng::new(cfg.web.seed ^ 0x51);
+            let reqs = match args.get_or("mode", "open") {
+                "open" => {
+                    // rate-replay: the web trace's shape, rescaled so the
+                    // horizon carries ~`total` requests (or --rate RPS flat)
+                    let rates = match args.get("rate") {
+                        Some(r) => {
+                            let rps: f64 = r
+                                .parse()
+                                .map_err(|_| anyhow::anyhow!("--rate must be a number"))?;
+                            web_synth::RateSeries {
+                                sample_period: cfg.web.sample_period,
+                                rates: vec![rps; (secs / cfg.web.sample_period).max(1) as usize],
+                            }
+                        }
+                        None => {
+                            let mut rates = web_synth::generate(&cfg.web);
+                            let mean = rates.mean().max(1e-9);
+                            let want = total as f64 / secs.max(1) as f64;
+                            for r in &mut rates.rates {
+                                *r *= want / mean;
+                            }
+                            rates
+                        }
+                    };
+                    driver::open_loop(&targets, &rates, secs, mean_work_ms, total, &mut rng)
+                }
+                "closed" => {
+                    let conc = args.get_u64("concurrency", 64)? as usize;
+                    driver::closed_loop(&targets, conc, total, mean_work_ms, 50.0, &mut rng)
+                }
+                other => bail!("unknown --mode '{other}' (open|closed)"),
+            };
+            std::fs::write(&out, driver::to_lines(&reqs))?;
+            println!(
+                "wrote {} requests across {} departments to {out}",
+                reqs.len(),
+                targets.len()
+            );
+        }
+        other => bail!("unknown trace kind '{other}' (hpc|web|requests)"),
     }
     Ok(())
 }

@@ -54,8 +54,12 @@ impl TimeSeries {
         self.points.last().map(|&(_, v)| v)
     }
 
-    pub fn max(&self) -> f64 {
-        self.points.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max)
+    /// Largest recorded value, `None` on an empty series. (Previously this
+    /// folded from `f64::NEG_INFINITY`, which leaked a non-finite value
+    /// into `{:.3}` text reports and — if routed through
+    /// [`crate::util::json::Json::num`] — invalid JSON.)
+    pub fn max(&self) -> Option<f64> {
+        self.points.iter().map(|&(_, v)| v).reduce(f64::max)
     }
 
     /// Time-weighted mean over [0, horizon] treating the series as a step
@@ -131,7 +135,11 @@ impl Registry {
             ));
         }
         for (k, ts) in &self.series {
-            out.push_str(&format!("{k}: {} samples, max={:.3}\n", ts.points.len(), ts.max()));
+            out.push_str(&format!(
+                "{k}: {} samples, max={:.3}\n",
+                ts.points.len(),
+                ts.max().unwrap_or(0.0)
+            ));
         }
         out
     }
@@ -161,6 +169,21 @@ mod tests {
         ts.push(20, 2.0);
         assert_eq!(ts.points.len(), 2);
         assert_eq!(ts.last(), Some(2.0));
+    }
+
+    #[test]
+    fn empty_series_max_is_none_and_summary_stays_finite() {
+        let ts = TimeSeries::default();
+        assert_eq!(ts.max(), None, "no NEG_INFINITY sentinel");
+        let mut r = Registry::new();
+        r.series("st.pool"); // registered but never sampled
+        let text = r.summary();
+        assert!(text.contains("max=0.000"), "{text}");
+        assert!(!text.contains("inf"), "{text}");
+        // a populated series still reports its true max
+        r.series("st.pool").push(0, 3.0);
+        r.series("st.pool").push(10, 7.0);
+        assert_eq!(r.series["st.pool"].max(), Some(7.0));
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Load driver for the serve frontend: turns [`crate::wscms::loadgen`]
+//! arrival streams into dept-addressed [`IngestRequest`]s aimed at a
+//! K-department roster, either fed directly to an in-memory frontend
+//! (the saturation bench) or rendered to a request file / socket stream
+//! (`phoenixd tracegen --kind requests` + `serve --ingest-file`).
+//!
+//! Arrivals are assigned round-robin across the targets with sequential
+//! per-target trace indices, so every generated request names a real job
+//! in its department's trace and the per-department submission order is
+//! the arrival order (the FIFO the ingest queue preserves).
+
+use anyhow::Result;
+
+use crate::cluster::{DeptId, DeptKind};
+use crate::config::{ExperimentConfig, RosterMix};
+use crate::trace::web_synth::RateSeries;
+use crate::util::rng::Rng;
+use crate::wscms::loadgen;
+use crate::workload::Request;
+
+use super::{request_line, IngestRequest};
+
+/// One department a driver can aim requests at: its id and how many jobs
+/// its trace holds (requests beyond `trace_len` would be dropped by the
+/// CMS as out-of-range, so the driver stops addressing a target once its
+/// trace is exhausted).
+#[derive(Debug, Clone, Copy)]
+pub struct RosterTarget {
+    pub dept: DeptId,
+    pub trace_len: usize,
+}
+
+/// The driveable targets of a config's roster: its boot batch departments
+/// (`join_at == 0`) with their trace lengths. Mirrors `serve_config`'s
+/// roster building exactly — same default pair, same trace construction —
+/// so every generated `trace_idx` names a real job in the trace the serve
+/// loop will load for that department.
+pub fn roster_targets(cfg: &ExperimentConfig) -> Result<Vec<RosterTarget>> {
+    let specs = if cfg.departments.is_empty() {
+        RosterMix::Alternating.departments(2, cfg)
+    } else {
+        cfg.departments.clone()
+    };
+    let traces = crate::experiments::scale::build_traces(&specs, cfg)?;
+    Ok(specs
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.kind == DeptKind::Batch && s.join_at == 0)
+        .map(|(i, _)| RosterTarget {
+            dept: DeptId(i as u16),
+            trace_len: traces.batch_jobs(i).map(|j| j.len()).unwrap_or(0),
+        })
+        .collect())
+}
+
+/// Assign an arrival stream round-robin over `targets`, consuming each
+/// target's trace indices sequentially. Exhausted targets are skipped;
+/// generation stops when every trace is spent. `due` is the arrival's
+/// trace second (`arrival_ms / 1000`).
+fn assign(arrivals: &[Request], targets: &[RosterTarget]) -> Vec<IngestRequest> {
+    let mut out = Vec::with_capacity(arrivals.len());
+    if targets.is_empty() {
+        return out;
+    }
+    let mut next_idx = vec![0usize; targets.len()];
+    let mut cursor = 0usize;
+    for req in arrivals {
+        // find the next target with trace left, starting at the cursor
+        let Some(offset) = (0..targets.len())
+            .find(|off| next_idx[(cursor + off) % targets.len()] < targets[(cursor + off) % targets.len()].trace_len)
+        else {
+            break; // every trace spent
+        };
+        let k = (cursor + offset) % targets.len();
+        out.push(IngestRequest {
+            dept: targets[k].dept,
+            trace_idx: next_idx[k],
+            due: req.arrival_ms / 1000,
+        });
+        next_idx[k] += 1;
+        cursor = (k + 1) % targets.len();
+    }
+    out
+}
+
+/// Open-loop driver: Poisson arrivals rate-replayed from a web trace
+/// ([`loadgen::generate`]), capped at `max_requests` (0 = uncapped),
+/// spread over the roster.
+pub fn open_loop(
+    targets: &[RosterTarget],
+    rates: &RateSeries,
+    secs: u64,
+    mean_work_ms: f64,
+    max_requests: usize,
+    rng: &mut Rng,
+) -> Vec<IngestRequest> {
+    let mut arrivals = loadgen::generate(rates, 0, secs, mean_work_ms, rng);
+    if max_requests > 0 && arrivals.len() > max_requests {
+        arrivals.truncate(max_requests);
+    }
+    assign(&arrivals, targets)
+}
+
+/// Closed-loop driver: `concurrency` virtual clients issuing `total`
+/// requests ([`loadgen::closed_loop`]), spread over the roster.
+pub fn closed_loop(
+    targets: &[RosterTarget],
+    concurrency: usize,
+    total: usize,
+    mean_work_ms: f64,
+    think_ms: f64,
+    rng: &mut Rng,
+) -> Vec<IngestRequest> {
+    let arrivals = loadgen::closed_loop(concurrency, total, mean_work_ms, think_ms, rng);
+    assign(&arrivals, targets)
+}
+
+/// Render a request stream as the line protocol (one JSON object per
+/// line), ready for `serve --ingest-file` or a socket client.
+pub fn to_lines(reqs: &[IngestRequest]) -> String {
+    let mut out = String::with_capacity(reqs.len() * 32);
+    for r in reqs {
+        out.push_str(&request_line(r));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::parse_line;
+
+    fn targets(lens: &[usize]) -> Vec<RosterTarget> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &trace_len)| RosterTarget { dept: DeptId(i as u16), trace_len })
+            .collect()
+    }
+
+    #[test]
+    fn assign_round_robins_with_sequential_indices() {
+        let arrivals: Vec<Request> =
+            (0..6).map(|i| Request { arrival_ms: i * 500, work_ms: 10 }).collect();
+        let got = assign(&arrivals, &targets(&[10, 10]));
+        let seq: Vec<(u16, usize, u64)> =
+            got.iter().map(|r| (r.dept.0, r.trace_idx, r.due)).collect();
+        assert_eq!(
+            seq,
+            vec![(0, 0, 0), (1, 0, 0), (0, 1, 1), (1, 1, 1), (0, 2, 2), (1, 2, 2)]
+        );
+    }
+
+    #[test]
+    fn assign_skips_exhausted_targets_and_stops_when_all_spent() {
+        let arrivals: Vec<Request> =
+            (0..10).map(|i| Request { arrival_ms: i, work_ms: 1 }).collect();
+        let got = assign(&arrivals, &targets(&[1, 3]));
+        assert_eq!(got.len(), 4, "1 + 3 trace slots total");
+        let dept0 = got.iter().filter(|r| r.dept == DeptId(0)).count();
+        let dept1 = got.iter().filter(|r| r.dept == DeptId(1)).count();
+        assert_eq!((dept0, dept1), (1, 3));
+        // per-dept indices stay sequential even with skipping
+        let idx1: Vec<usize> =
+            got.iter().filter(|r| r.dept == DeptId(1)).map(|r| r.trace_idx).collect();
+        assert_eq!(idx1, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn open_loop_caps_and_covers_the_roster() {
+        let rates = RateSeries { sample_period: 20, rates: vec![200.0; 10] };
+        let mut rng = Rng::new(11);
+        let reqs = open_loop(&targets(&[1000, 1000, 1000, 1000]), &rates, 200, 15.0, 500, &mut rng);
+        assert!(reqs.len() <= 500);
+        assert!(!reqs.is_empty());
+        for d in 0..4u16 {
+            assert!(reqs.iter().any(|r| r.dept == DeptId(d)), "dept {d} starved");
+        }
+        assert!(reqs.windows(2).all(|w| w[0].due <= w[1].due), "due sorted");
+    }
+
+    #[test]
+    fn lines_round_trip_through_the_codec() {
+        let mut rng = Rng::new(12);
+        let reqs = closed_loop(&targets(&[50, 50]), 4, 40, 10.0, 20.0, &mut rng);
+        assert_eq!(reqs.len(), 40);
+        let text = to_lines(&reqs);
+        let parsed: Vec<IngestRequest> =
+            text.lines().map(|l| parse_line(l).expect("own lines parse")).collect();
+        assert_eq!(parsed, reqs);
+    }
+}

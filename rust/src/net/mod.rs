@@ -1,0 +1,539 @@
+//! Network frontend for the realtime coordinator (`phoenixd serve
+//! --listen` / `--ingest-file`): the one place external traffic crosses
+//! the process boundary into the department-addressed bus.
+//!
+//! Shape of the path (ARCHITECTURE.md §"Serve path"):
+//!
+//! ```text
+//! clients ──lines──▶ transport ──▶ bounded IngestQueue ──drain/tick──▶ bus
+//!    ▲                                   │ full?                        │
+//!    └────── 429 reject / SubmitAck ◀────┴─────────── take_acks ◀───────┘
+//! ```
+//!
+//! * **Wire format** — one JSON object per line:
+//!   `{"dept": 0, "idx": 17, "at": 120}`. `dept` addresses the department
+//!   directory, `idx` is the trace index [`Msg::SubmitJob`] carries, and
+//!   the optional `at` is the trace second the request becomes due
+//!   (rate-replayed drivers pace arrivals with it; live socket clients
+//!   omit it and are due immediately).
+//! * **Backpressure** — the [`IngestQueue`] is bounded. When the CMSes
+//!   fall behind (the per-tick drain budget cannot keep up with
+//!   arrivals), further requests are *shed*: counted, answered with a
+//!   429-style reject line, and never silently dropped
+//!   ([`ServeReport::shed`](crate::coordinator::realtime::ServeReport)).
+//! * **Acks** — the serve loop drains [`SubmitAck`]s from the bus each
+//!   tick and writes them back through the transport, so every granted
+//!   request's bus round-trip latency is measurable client-side.
+//!
+//! Determinism: this module is the audited wall-clock/socket-I/O boundary
+//! (it joins `util/bench.rs` in the phoenix-lint R1 exemption — see
+//! ARCHITECTURE.md §"Determinism contract"). The deterministic core never
+//! calls into it: `serve` without a frontend passes `None` and stays
+//! bit-identical. The codec and queue themselves are pure and
+//! deterministic; only the transports ([`socket`], [`FileTail`]) touch
+//! the outside world.
+//!
+//! [`Msg::SubmitJob`]: crate::services::Msg::SubmitJob
+
+pub mod driver;
+pub mod socket;
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+
+use crate::cluster::DeptId;
+use crate::services::SubmitAck;
+use crate::util::json::Json;
+use crate::util::num::usize_from_u64;
+
+/// One decoded ingest request, ready to become a dept-addressed
+/// [`crate::services::Msg::SubmitJob`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestRequest {
+    /// Department whose batch CMS the request addresses.
+    pub dept: DeptId,
+    /// Index into that department's job trace.
+    pub trace_idx: usize,
+    /// Trace second the request becomes due (0 = immediately). Transports
+    /// release requests in line order once due, so a replay file should
+    /// keep `at` nondecreasing.
+    pub due: u64,
+}
+
+/// Decode one line-framed JSON request. Blank lines and `#` comments are
+/// the caller's concern (transports skip them before decoding).
+pub fn parse_line(line: &str) -> Result<IngestRequest, String> {
+    let v = Json::parse(line).map_err(|e| e.to_string())?;
+    let dept = v
+        .get("dept")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "missing or invalid 'dept'".to_string())?;
+    let dept = u16::try_from(dept).map_err(|_| format!("'dept' {dept} out of range"))?;
+    let idx = v
+        .get("idx")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "missing or invalid 'idx'".to_string())?;
+    let due = match v.get("at") {
+        Some(t) => t.as_u64().ok_or_else(|| "invalid 'at'".to_string())?,
+        None => 0,
+    };
+    Ok(IngestRequest { dept: DeptId(dept), trace_idx: usize_from_u64(idx), due })
+}
+
+/// Render one request as its wire line (inverse of [`parse_line`]).
+pub fn request_line(r: &IngestRequest) -> String {
+    format!(r#"{{"at":{},"dept":{},"idx":{}}}"#, r.due, r.dept.index(), r.trace_idx)
+}
+
+/// Render a granted ack as a response line.
+pub fn ack_line(a: &SubmitAck) -> String {
+    format!(
+        r#"{{"ack":"granted","dept":{},"idx":{},"submitted":{},"granted":{}}}"#,
+        a.dept.index(),
+        a.trace_idx,
+        a.submitted,
+        a.granted
+    )
+}
+
+/// Render a shed rejection (the HTTP-429 analogue of the line protocol).
+pub fn reject_line(r: &IngestRequest) -> String {
+    format!(
+        r#"{{"ack":"shed","status":429,"dept":{},"idx":{}}}"#,
+        r.dept.index(),
+        r.trace_idx
+    )
+}
+
+// ---- the bounded ingest queue ------------------------------------------------
+
+/// Bounded FIFO between the transports and the bus: the backpressure
+/// point. `push` refuses when full (the shed path); `drain` hands the
+/// serve loop at most its per-tick budget, preserving arrival order — so
+/// two submissions for the same department can never reorder (pinned by
+/// `prop_ingest_queue_preserves_per_dept_fifo`).
+#[derive(Debug)]
+pub struct IngestQueue {
+    q: VecDeque<IngestRequest>,
+    cap: usize,
+}
+
+impl IngestQueue {
+    pub fn new(cap: usize) -> Self {
+        Self { q: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    /// Enqueue unless full. A `false` return is the caller's cue to shed.
+    #[must_use]
+    pub fn push(&mut self, req: IngestRequest) -> bool {
+        if self.q.len() >= self.cap {
+            false
+        } else {
+            self.q.push_back(req);
+            true
+        }
+    }
+
+    /// Dequeue up to `n` requests in FIFO order.
+    pub fn drain(&mut self, n: usize) -> Vec<IngestRequest> {
+        let take = n.min(self.q.len());
+        self.q.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+// ---- transports ---------------------------------------------------------------
+
+/// Where request lines come from and where ack/reject lines go back. The
+/// serve loop only ever sees decoded [`IngestRequest`]s; implementations
+/// own all I/O.
+pub trait IngestTransport {
+    /// Decoded requests due by trace second `now`, in arrival order.
+    /// Undecodable lines are counted into `bad` and skipped — external
+    /// garbage must never abort the coordinator.
+    fn poll(&mut self, now: u64, bad: &mut u64) -> Vec<IngestRequest>;
+
+    /// Write one response line back toward the clients. Best-effort:
+    /// transports without a return channel drop it.
+    fn send_line(&mut self, _line: &str) {}
+
+    /// True when no further requests can ever arrive (lets drivers and
+    /// tests stop polling early; live sockets never promise this).
+    fn exhausted(&self) -> bool {
+        false
+    }
+}
+
+/// In-memory transport over a pre-generated request list (benches, tests,
+/// and the saturation probe). Requests must be sorted by `due`; responses
+/// are retained for inspection.
+pub struct VecSource {
+    reqs: Vec<IngestRequest>,
+    next: usize,
+    /// Every ack/reject line written back, in order.
+    pub responses: Vec<String>,
+}
+
+impl VecSource {
+    pub fn new(mut reqs: Vec<IngestRequest>) -> Self {
+        reqs.sort_by_key(|r| r.due);
+        Self { reqs, next: 0, responses: Vec::new() }
+    }
+}
+
+impl IngestTransport for VecSource {
+    fn poll(&mut self, now: u64, _bad: &mut u64) -> Vec<IngestRequest> {
+        let start = self.next;
+        while self.next < self.reqs.len() && self.reqs[self.next].due <= now {
+            self.next += 1;
+        }
+        self.reqs[start..self.next].to_vec()
+    }
+
+    fn send_line(&mut self, line: &str) {
+        self.responses.push(line.to_string());
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next >= self.reqs.len()
+    }
+}
+
+/// File-tail transport: the sandboxed-CI fallback for `--listen`. Each
+/// poll reads whatever new bytes were appended to the request file,
+/// decodes the complete lines, and releases them as their `at` seconds
+/// come due. Acks/rejects go to an optional response file.
+pub struct FileTail {
+    file: File,
+    /// Trailing partial line carried between polls.
+    partial: Vec<u8>,
+    /// Decoded but not yet due (the "outside world" buffer — unbounded on
+    /// purpose: it models clients that have not sent yet, not the queue).
+    pending: VecDeque<IngestRequest>,
+    ack_out: Option<File>,
+    saw_eof: bool,
+}
+
+impl FileTail {
+    pub fn open(path: &str, ack_out: Option<&str>) -> io::Result<Self> {
+        let mut file = File::open(path)?;
+        file.seek(SeekFrom::Start(0))?;
+        let ack_out = match ack_out {
+            Some(p) => Some(File::create(p)?),
+            None => None,
+        };
+        Ok(Self {
+            file,
+            partial: Vec::new(),
+            pending: VecDeque::new(),
+            ack_out,
+            saw_eof: false,
+        })
+    }
+}
+
+impl IngestTransport for FileTail {
+    fn poll(&mut self, now: u64, bad: &mut u64) -> Vec<IngestRequest> {
+        // pull every byte appended since the last poll (File keeps its
+        // cursor; a writer appending concurrently is the live-tail case)
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.file.read(&mut chunk) {
+                Ok(0) => {
+                    self.saw_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.saw_eof = false;
+                    self.partial.extend_from_slice(&chunk[..n]);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    *bad += 1;
+                    break;
+                }
+            }
+        }
+        while let Some(pos) = self.partial.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.partial.drain(..=pos).collect();
+            let Ok(text) = std::str::from_utf8(&line[..line.len() - 1]) else {
+                *bad += 1;
+                continue;
+            };
+            let text = text.trim();
+            if text.is_empty() || text.starts_with('#') {
+                continue;
+            }
+            match parse_line(text) {
+                Ok(req) => self.pending.push_back(req),
+                Err(e) => {
+                    log::warn!("ingest file: dropped line ({e}): {text}");
+                    *bad += 1;
+                }
+            }
+        }
+        let mut out = Vec::new();
+        while self.pending.front().is_some_and(|r| r.due <= now) {
+            if let Some(r) = self.pending.pop_front() {
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    fn send_line(&mut self, line: &str) {
+        if let Some(f) = self.ack_out.as_mut() {
+            // best-effort: a full disk must not take the coordinator down
+            let _ = f.write_all(line.as_bytes()).and_then(|()| f.write_all(b"\n"));
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.saw_eof && self.partial.is_empty() && self.pending.is_empty()
+    }
+}
+
+// ---- the frontend --------------------------------------------------------------
+
+/// Ingest counters the serve loop folds into
+/// [`crate::coordinator::realtime::ServeReport`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FrontendStats {
+    /// Requests accepted into the bounded queue.
+    pub ingested: u64,
+    /// Requests shed 429-style because the queue was full.
+    pub shed: u64,
+    /// Undecodable lines plus requests for unroutable departments.
+    pub bad: u64,
+}
+
+/// The assembled frontend handed to the serve loop: transport + bounded
+/// queue + per-tick drain budget. `pump` is the only entry the tick loop
+/// calls; everything wall-clock- or socket-shaped stays behind the
+/// transport trait object.
+pub struct ServeFrontend {
+    transport: Box<dyn IngestTransport>,
+    queue: IngestQueue,
+    drain_per_tick: usize,
+    pub stats: FrontendStats,
+}
+
+impl ServeFrontend {
+    /// `queue_cap` bounds the ingest queue; `drain_per_tick` is how many
+    /// queued requests each tick forwards to the bus (0 = whole queue).
+    pub fn new(
+        transport: Box<dyn IngestTransport>,
+        queue_cap: usize,
+        drain_per_tick: usize,
+    ) -> Self {
+        let queue = IngestQueue::new(queue_cap);
+        let drain_per_tick = if drain_per_tick == 0 {
+            queue.capacity()
+        } else {
+            drain_per_tick
+        };
+        Self { transport, queue, drain_per_tick, stats: FrontendStats::default() }
+    }
+
+    /// Frontend over an in-memory request list (benches and tests).
+    pub fn in_memory(reqs: Vec<IngestRequest>, queue_cap: usize, drain: usize) -> Self {
+        Self::new(Box::new(VecSource::new(reqs)), queue_cap, drain)
+    }
+
+    /// Frontend tailing a request file (the sandboxed-CI `--ingest-file`
+    /// mode); acks/rejects go to `ack_out` when given.
+    pub fn file_tail(
+        path: &str,
+        ack_out: Option<&str>,
+        queue_cap: usize,
+        drain: usize,
+    ) -> io::Result<Self> {
+        Ok(Self::new(Box::new(FileTail::open(path, ack_out)?), queue_cap, drain))
+    }
+
+    /// Frontend listening on a TCP address (`--listen`); returns the
+    /// bound address so `--listen 127.0.0.1:0` can report its port.
+    pub fn listen(
+        addr: &str,
+        queue_cap: usize,
+        drain: usize,
+    ) -> io::Result<(Self, std::net::SocketAddr)> {
+        let (transport, local) = socket::SocketTransport::bind(addr)?;
+        Ok((Self::new(Box::new(transport), queue_cap, drain), local))
+    }
+
+    /// One tick's worth of frontend work: poll the transport for due
+    /// requests, admit them to the bounded queue (shedding with a 429
+    /// reject when full), then hand back at most the drain budget for the
+    /// serve loop to post onto the bus.
+    pub fn pump(&mut self, now: u64) -> Vec<IngestRequest> {
+        for req in self.transport.poll(now, &mut self.stats.bad) {
+            if self.queue.push(req) {
+                self.stats.ingested += 1;
+            } else {
+                self.stats.shed += 1;
+                let line = reject_line(&req);
+                self.transport.send_line(&line);
+            }
+        }
+        self.queue.drain(self.drain_per_tick)
+    }
+
+    /// Write a granted ack back toward the client.
+    pub fn deliver_ack(&mut self, ack: &SubmitAck) {
+        let line = ack_line(ack);
+        self.transport.send_line(&line);
+    }
+
+    /// Count a drained request whose department was not routable (never
+    /// joined, or already left) — rejected, not silently dropped.
+    pub fn count_unroutable(&mut self) {
+        self.stats.bad += 1;
+    }
+
+    /// Requests admitted but not yet drained.
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when the transport is dry *and* the queue is drained.
+    pub fn exhausted(&self) -> bool {
+        self.transport.exhausted() && self.queue.is_empty()
+    }
+
+    /// The transport, for post-run inspection (tests read
+    /// [`VecSource::responses`] back out).
+    pub fn transport(&self) -> &dyn IngestTransport {
+        self.transport.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(dept: u16, idx: usize, due: u64) -> IngestRequest {
+        IngestRequest { dept: DeptId(dept), trace_idx: idx, due }
+    }
+
+    #[test]
+    fn codec_roundtrips_and_rejects_garbage() {
+        let r = req(3, 41, 120);
+        assert_eq!(parse_line(&request_line(&r)), Ok(r));
+        // 'at' is optional and defaults to due-immediately
+        let v = parse_line(r#"{"dept": 1, "idx": 9}"#).unwrap();
+        assert_eq!(v, req(1, 9, 0));
+        for bad in [
+            "",
+            "not json",
+            r#"{"idx": 1}"#,
+            r#"{"dept": -1, "idx": 1}"#,
+            r#"{"dept": 70000, "idx": 1}"#,
+            r#"{"dept": 0, "idx": 1.5}"#,
+            r#"{"dept": 0, "idx": 1, "at": "soon"}"#,
+        ] {
+            assert!(parse_line(bad).is_err(), "{bad:?} must not decode");
+        }
+    }
+
+    #[test]
+    fn response_lines_are_valid_json() {
+        let a = SubmitAck { dept: DeptId(2), trace_idx: 7, submitted: 10, granted: 40 };
+        let parsed = Json::parse(&ack_line(&a)).unwrap();
+        assert_eq!(parsed.get("granted").and_then(Json::as_u64), Some(40));
+        let rej = Json::parse(&reject_line(&req(1, 5, 0))).unwrap();
+        assert_eq!(rej.get("status").and_then(Json::as_u64), Some(429));
+    }
+
+    #[test]
+    fn queue_bounds_and_preserves_fifo() {
+        let mut q = IngestQueue::new(2);
+        assert!(q.push(req(0, 0, 0)));
+        assert!(q.push(req(1, 0, 0)));
+        assert!(!q.push(req(0, 1, 0)), "third push must shed at cap 2");
+        let drained = q.drain(10);
+        assert_eq!(drained, vec![req(0, 0, 0), req(1, 0, 0)]);
+        assert!(q.is_empty());
+        // drain respects the budget
+        assert!(q.push(req(0, 2, 0)));
+        assert!(q.push(req(0, 3, 0)));
+        assert_eq!(q.drain(1), vec![req(0, 2, 0)]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn vec_source_releases_by_due_time() {
+        let mut src =
+            VecSource::new(vec![req(0, 2, 40), req(0, 0, 0), req(0, 1, 20)]);
+        let mut bad = 0;
+        assert_eq!(src.poll(0, &mut bad), vec![req(0, 0, 0)]);
+        assert_eq!(src.poll(39, &mut bad), vec![req(0, 1, 20)]);
+        assert!(!src.exhausted());
+        assert_eq!(src.poll(100, &mut bad), vec![req(0, 2, 40)]);
+        assert!(src.exhausted());
+        assert_eq!(bad, 0);
+    }
+
+    #[test]
+    fn frontend_sheds_when_the_queue_is_full_and_counts_it() {
+        // 5 requests all due at t=0, queue cap 2, drain 1 per tick
+        let reqs: Vec<IngestRequest> = (0..5).map(|i| req(0, i, 0)).collect();
+        let mut fe = ServeFrontend::in_memory(reqs, 2, 1);
+        let drained = fe.pump(0);
+        assert_eq!(drained.len(), 1);
+        assert_eq!(fe.stats.ingested, 2, "cap-2 queue admits two");
+        assert_eq!(fe.stats.shed, 3, "the rest shed, counted");
+        assert_eq!(fe.backlog(), 1);
+        // the shed requests were answered with 429 lines
+        let drained2 = fe.pump(1);
+        assert_eq!(drained2.len(), 1);
+        assert!(fe.exhausted());
+        assert_eq!(fe.stats.ingested + fe.stats.shed, 5, "nothing vanishes");
+    }
+
+    #[test]
+    fn file_tail_replays_paced_lines(
+    ) -> std::result::Result<(), Box<dyn std::error::Error>> {
+        let dir = std::env::temp_dir();
+        let path = dir.join("phoenix_net_file_tail_test.jsonl");
+        let ack_path = dir.join("phoenix_net_file_tail_test_acks.jsonl");
+        std::fs::write(
+            &path,
+            "# comment\n\
+             {\"at\":0,\"dept\":0,\"idx\":0}\n\
+             {\"at\":0,\"dept\":0,\"idx\":1}\n\
+             not json\n\
+             {\"at\":40,\"dept\":0,\"idx\":2}\n",
+        )?;
+        let path_s = path.to_string_lossy().to_string();
+        let ack_s = ack_path.to_string_lossy().to_string();
+        let mut tail = FileTail::open(&path_s, Some(&ack_s))?;
+        let mut bad = 0;
+        let t0 = tail.poll(0, &mut bad);
+        assert_eq!(t0, vec![req(0, 0, 0), req(0, 1, 0)]);
+        assert_eq!(bad, 1, "the garbage line is counted, not fatal");
+        assert!(!tail.exhausted());
+        let t40 = tail.poll(40, &mut bad);
+        assert_eq!(t40, vec![req(0, 2, 40)]);
+        assert!(tail.exhausted());
+        tail.send_line("{\"ack\":\"granted\"}");
+        drop(tail);
+        let acks = std::fs::read_to_string(&ack_path)?;
+        assert!(acks.contains("granted"), "{acks}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&ack_path).ok();
+        Ok(())
+    }
+}

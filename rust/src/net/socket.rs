@@ -1,0 +1,212 @@
+//! Nonblocking TCP transport for `phoenixd serve --listen`: the live
+//! half of the ingest boundary. One listener, any number of line-framed
+//! client connections; every poll accepts pending connections, reads
+//! whatever bytes are available, and decodes complete lines into
+//! [`IngestRequest`]s. Responses (acks and 429 rejects) are broadcast to
+//! every open connection — clients filter by `dept`/`idx`.
+//!
+//! All I/O is nonblocking (`set_nonblocking`), so the serve tick loop
+//! never stalls on a slow client: a poll returns whatever the kernel had
+//! buffered and nothing more. No wall clock is read here — pacing stays
+//! in the serve loop — so this file needs no clippy `disallowed_methods`
+//! allowance despite living in the R1-exempt `net/` scope.
+
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use super::{parse_line, IngestRequest, IngestTransport};
+
+/// One accepted client connection plus its partial-line read buffer.
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    /// Set when the peer hung up or errored; swept after each poll.
+    closed: bool,
+}
+
+/// The `--listen` transport: nonblocking listener + connection set.
+pub struct SocketTransport {
+    listener: TcpListener,
+    conns: Vec<Conn>,
+}
+
+impl SocketTransport {
+    /// Bind `addr` (e.g. `127.0.0.1:7077`, or port 0 for an ephemeral
+    /// port) and return the transport plus the actual bound address.
+    pub fn bind(addr: &str) -> io::Result<(Self, SocketAddr)> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        Ok((Self { listener, conns: Vec::new() }, local))
+    }
+
+    fn accept_pending(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_ok() {
+                        self.conns.push(Conn {
+                            stream,
+                            buf: Vec::new(),
+                            closed: false,
+                        });
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("serve frontend: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Split `buf` on newlines, decoding each complete line. `flush`
+    /// additionally decodes a trailing unterminated line (used when the
+    /// peer closed the connection mid-line).
+    fn drain_lines(
+        buf: &mut Vec<u8>,
+        flush: bool,
+        out: &mut Vec<IngestRequest>,
+        bad: &mut u64,
+    ) {
+        let mut decode = |bytes: &[u8]| {
+            let Ok(text) = std::str::from_utf8(bytes) else {
+                *bad += 1;
+                return;
+            };
+            let text = text.trim();
+            if text.is_empty() || text.starts_with('#') {
+                return;
+            }
+            match parse_line(text) {
+                Ok(req) => out.push(req),
+                Err(e) => {
+                    log::warn!("serve frontend: dropped request ({e}): {text}");
+                    *bad += 1;
+                }
+            }
+        };
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=pos).collect();
+            decode(&line[..line.len() - 1]);
+        }
+        if flush && !buf.is_empty() {
+            let rest = std::mem::take(buf);
+            decode(&rest);
+        }
+    }
+}
+
+impl IngestTransport for SocketTransport {
+    fn poll(&mut self, _now: u64, bad: &mut u64) -> Vec<IngestRequest> {
+        self.accept_pending();
+        let mut out = Vec::new();
+        let mut chunk = [0u8; 16 * 1024];
+        for conn in &mut self.conns {
+            loop {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        // peer closed: flush any unterminated final line
+                        Self::drain_lines(&mut conn.buf, true, &mut out, bad);
+                        conn.closed = true;
+                        break;
+                    }
+                    Ok(n) => conn.buf.extend_from_slice(&chunk[..n]),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.closed = true;
+                        break;
+                    }
+                }
+            }
+            if !conn.closed {
+                Self::drain_lines(&mut conn.buf, false, &mut out, bad);
+            }
+        }
+        self.conns.retain(|c| !c.closed);
+        out
+    }
+
+    fn send_line(&mut self, line: &str) {
+        for conn in &mut self.conns {
+            // best-effort broadcast; a wedged client is dropped next poll
+            let ok = conn
+                .stream
+                .write_all(line.as_bytes())
+                .and_then(|()| conn.stream.write_all(b"\n"));
+            if ok.is_err() {
+                conn.closed = true;
+            }
+        }
+        self.conns.retain(|c| !c.closed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeptId;
+
+    #[test]
+    fn loopback_decodes_lines_and_broadcasts_responses() -> io::Result<()> {
+        let (mut transport, addr) = SocketTransport::bind("127.0.0.1:0")?;
+        let mut client = TcpStream::connect(addr)?;
+        client.write_all(b"{\"dept\":0,\"idx\":0}\n{\"dept\":1,\"idx\":1}\nnope\n")?;
+        client.flush()?;
+        // nonblocking read on our side: retry until the kernel delivers
+        let mut bad = 0;
+        let mut got = Vec::new();
+        for _ in 0..200 {
+            got.extend(transport.poll(0, &mut bad));
+            if got.len() >= 2 && bad >= 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(
+            got,
+            vec![
+                IngestRequest { dept: DeptId(0), trace_idx: 0, due: 0 },
+                IngestRequest { dept: DeptId(1), trace_idx: 1, due: 0 },
+            ]
+        );
+        assert_eq!(bad, 1, "the garbage line is counted");
+        transport.send_line("{\"ack\":\"granted\",\"idx\":0}");
+        client.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+        let mut resp = [0u8; 256];
+        let n = client.read(&mut resp)?;
+        let text = std::str::from_utf8(&resp[..n]).unwrap_or("");
+        assert!(text.contains("granted"), "client sees the ack: {text:?}");
+        Ok(())
+    }
+
+    #[test]
+    fn closed_connections_flush_their_final_line_and_are_swept() -> io::Result<()> {
+        let (mut transport, addr) = SocketTransport::bind("127.0.0.1:0")?;
+        {
+            let mut client = TcpStream::connect(addr)?;
+            // no trailing newline: must still decode on close
+            client.write_all(b"{\"dept\":2,\"idx\":9,\"at\":3}")?;
+            client.flush()?;
+        } // dropped: peer closed
+        let mut bad = 0;
+        let mut got = Vec::new();
+        for _ in 0..200 {
+            got.extend(transport.poll(0, &mut bad));
+            if !got.is_empty() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(
+            got,
+            vec![IngestRequest { dept: DeptId(2), trace_idx: 9, due: 3 }]
+        );
+        assert_eq!(bad, 0);
+        assert!(transport.conns.is_empty(), "closed conn swept");
+        Ok(())
+    }
+}

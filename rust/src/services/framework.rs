@@ -14,7 +14,7 @@ use std::fmt;
 
 use crate::cluster::DeptId;
 
-use super::messages::Msg;
+use super::messages::{Msg, SubmitAck};
 
 /// Dense service handle assigned at registration.
 pub type ServiceId = usize;
@@ -26,6 +26,11 @@ pub enum Sender {
     /// Injected from outside the bus (the driver loop, client tools,
     /// timers).
     External,
+    /// Injected by the network frontend (`phoenixd serve --listen` / the
+    /// file-tail ingest loop): an external client's request that crossed
+    /// the process boundary. A CMS that admits an ingress submission owes
+    /// it a [`SubmitAck`] when the covering grant lands.
+    Ingress,
     /// Sent by a registered service while handling a message.
     Service(ServiceId),
 }
@@ -35,7 +40,7 @@ impl Sender {
     pub fn service(self) -> Option<ServiceId> {
         match self {
             Sender::Service(id) => Some(id),
-            Sender::External => None,
+            Sender::External | Sender::Ingress => None,
         }
     }
 }
@@ -44,6 +49,7 @@ impl fmt::Display for Sender {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Sender::External => write!(f, "external"),
+            Sender::Ingress => write!(f, "ingress"),
             Sender::Service(id) => write!(f, "service {id}"),
         }
     }
@@ -88,6 +94,9 @@ pub struct Ctx<'a> {
     /// First routing failure recorded by [`Ctx::send_to_dept`]; the bus
     /// turns it into the dispatch result.
     error: Option<BusError>,
+    /// Ingress acknowledgements emitted while handling this message; the
+    /// bus collects them for [`Bus::take_acks`].
+    acks: Vec<SubmitAck>,
 }
 
 impl Ctx<'_> {
@@ -124,6 +133,13 @@ impl Ctx<'_> {
     pub fn sender(&self) -> Sender {
         self.sender
     }
+
+    /// Acknowledge an ingress submission ([`Sender::Ingress`]): the ack
+    /// leaves the bus toward the network frontend via [`Bus::take_acks`]
+    /// rather than being routed to a service.
+    pub fn ack(&mut self, ack: SubmitAck) {
+        self.acks.push(ack);
+    }
 }
 
 /// A cloud management service (or the RPS) plugged into the framework.
@@ -142,6 +158,10 @@ pub struct Bus {
     queue: VecDeque<(Sender, ServiceId, Msg)>,
     now: u64,
     pub delivered: u64,
+    /// Ingress acknowledgements collected from handlers; drained by the
+    /// serve loop with [`Bus::take_acks`]. Empty unless a frontend posts
+    /// [`Sender::Ingress`] traffic, so dispatch-mode users never see it.
+    acks: Vec<SubmitAck>,
 }
 
 impl Default for Bus {
@@ -158,6 +178,7 @@ impl Bus {
             queue: VecDeque::new(),
             now: 0,
             delivered: 0,
+            acks: Vec::new(),
         }
     }
 
@@ -225,6 +246,27 @@ impl Bus {
         Ok(())
     }
 
+    /// Inject a network-frontend request, addressed by department, with
+    /// the [`Sender::Ingress`] origin — the CMS owes the submission a
+    /// [`SubmitAck`] when its covering grant lands. Unlike service-side
+    /// routing bugs, an unbound department here is an *operational*
+    /// condition (external clients can name departments that never
+    /// joined), so the caller counts the error instead of aborting.
+    pub fn post_to_dept_ingress(&mut self, dept: DeptId, msg: Msg) -> Result<(), BusError> {
+        let to = self
+            .directory
+            .get(&dept)
+            .copied()
+            .ok_or(BusError::UnboundDept { dept })?;
+        self.queue.push_back((Sender::Ingress, to, msg));
+        Ok(())
+    }
+
+    /// Drain the ingress acknowledgements emitted since the last call.
+    pub fn take_acks(&mut self) -> Vec<SubmitAck> {
+        std::mem::take(&mut self.acks)
+    }
+
     /// Deliver messages until the queue drains. Returns the number
     /// delivered, or a typed [`BusError`] when `limit` deliveries pass
     /// without quiescence (ping-pong livelock) or a message is addressed
@@ -253,9 +295,11 @@ impl Bus {
                 outbox: Vec::new(),
                 directory: &self.directory,
                 error: None,
+                acks: Vec::new(),
             };
             self.services[to].handle(msg, &mut ctx);
-            let Ctx { outbox, error, .. } = ctx;
+            let Ctx { outbox, error, acks, .. } = ctx;
+            self.acks.extend(acks);
             if let Some(e) = error {
                 break Err(e);
             }
@@ -385,6 +429,50 @@ mod tests {
             err,
             BusError::UnregisteredService { to: 42, from: Sender::External, registered: 1 }
         );
+    }
+
+    #[test]
+    fn ingress_posts_carry_their_sender_and_acks_leave_the_bus() {
+        /// Acks every ingress SubmitJob immediately; ignores everything else.
+        struct Acker;
+        impl Service for Acker {
+            fn name(&self) -> &str {
+                "acker"
+            }
+            fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_>) {
+                if let Msg::SubmitJob { dept, trace_idx } = msg {
+                    assert_eq!(ctx.sender(), Sender::Ingress);
+                    ctx.ack(SubmitAck {
+                        dept,
+                        trace_idx,
+                        submitted: ctx.now(),
+                        granted: ctx.now(),
+                    });
+                }
+            }
+        }
+        let mut bus = Bus::new();
+        bus.register_dept(DeptId(0), Box::new(Acker)).unwrap();
+        bus.set_now(7);
+        bus.post_to_dept_ingress(DeptId(0), Msg::SubmitJob { dept: DeptId(0), trace_idx: 3 })
+            .unwrap();
+        assert_eq!(
+            bus.post_to_dept_ingress(DeptId(5), Msg::SubmitJob {
+                dept: DeptId(5),
+                trace_idx: 0
+            })
+            .unwrap_err(),
+            BusError::UnboundDept { dept: DeptId(5) }
+        );
+        bus.run_until_quiescent(10).unwrap();
+        let acks = bus.take_acks();
+        assert_eq!(acks, vec![SubmitAck {
+            dept: DeptId(0),
+            trace_idx: 3,
+            submitted: 7,
+            granted: 7
+        }]);
+        assert!(bus.take_acks().is_empty(), "take_acks must drain");
     }
 
     #[test]

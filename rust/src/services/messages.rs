@@ -97,3 +97,24 @@ pub enum Msg {
     /// Orderly shutdown.
     Shutdown,
 }
+
+/// The `Released`-style acknowledgement of an ingress submission: a batch
+/// CMS emits one ([`crate::services::Ctx::ack`]) when a job pushed over
+/// the network frontend ([`Msg::SubmitJob`] with
+/// [`crate::services::Sender::Ingress`]) is first scheduled onto granted
+/// nodes — i.e. when the [`Msg::Grant`] (or idle capacity) that covers it
+/// lands. Unlike [`Msg`] variants it leaves the bus: the serve loop drains
+/// acks each tick ([`crate::services::Bus::take_acks`]) and hands them to
+/// the frontend, so `granted - submitted` is the per-request bus
+/// round-trip ("grant latency") in trace seconds, measurable per request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitAck {
+    /// Department whose CMS acknowledged the submission.
+    pub dept: DeptId,
+    /// Trace index the original [`Msg::SubmitJob`] named.
+    pub trace_idx: usize,
+    /// Trace second the submission was delivered to the CMS.
+    pub submitted: SimTime,
+    /// Trace second the job was first scheduled onto nodes.
+    pub granted: SimTime,
+}

@@ -22,4 +22,4 @@ pub mod messages;
 pub mod monitor;
 
 pub use framework::{Bus, BusError, Ctx, Sender, Service, ServiceId};
-pub use messages::Msg;
+pub use messages::{Msg, SubmitAck};

@@ -89,7 +89,11 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Builder: number. JSON has no encoding for NaN or ±∞ — a non-finite
+    /// value here would serialize as invalid JSON (the empty-`TimeSeries`
+    /// `max()` NEG_INFINITY bug class), so debug builds refuse it.
     pub fn num(n: f64) -> Json {
+        debug_assert!(n.is_finite(), "Json::num({n}) — JSON cannot encode non-finite numbers");
         Json::Num(n)
     }
 

@@ -28,6 +28,21 @@ pub fn round_f64_u64(x: f64) -> u64 {
     x.round() as u64
 }
 
+/// Truncate an `f64` toward zero into a `u32`, saturating: NaN and
+/// negatives → 0, values beyond `u32::MAX` → `u32::MAX`. Exactly Rust's
+/// `x as u32` (the load generator's per-request work demand).
+pub fn trunc_f64_u32(x: f64) -> u32 {
+    x as u32
+}
+
+/// Widen a `u64` into an `f64` with Rust's `as` semantics: exact below
+/// 2^53, round-to-nearest above. Spelled as a helper so R3-scoped code
+/// (trace parsers, the load generator) stays bare-cast-free and the
+/// rounding story has one documented home.
+pub fn f64_from_u64(v: u64) -> f64 {
+    v as f64
+}
+
 /// Truncate an `f64` toward zero into an `i64`, saturating at both ends
 /// (NaN → 0). Exactly Rust's `x as i64`.
 pub fn trunc_f64_i64(x: f64) -> i64 {
@@ -79,7 +94,13 @@ mod tests {
         }
         for x in [f64::NAN, -1.5, f64::NEG_INFINITY] {
             assert_eq!(trunc_f64_u64(x), 0, "unsigned floor {x}");
+            assert_eq!(trunc_f64_u32(x), 0, "u32 floor {x}");
         }
+        assert_eq!(trunc_f64_u32(1.9), 1);
+        assert_eq!(trunc_f64_u32(1e18), u32::MAX, "u32 saturates high");
+        assert_eq!(f64_from_u64(0), 0.0);
+        assert_eq!(f64_from_u64(1 << 53), 9_007_199_254_740_992.0);
+        assert_eq!(f64_from_u64(u64::MAX), u64::MAX as f64);
         assert_eq!(trunc_f64_i64(-1.9), -1);
         assert_eq!(trunc_f64_i64(f64::NEG_INFINITY), i64::MIN);
         assert_eq!(trunc_f64_i64(f64::NAN), 0);

@@ -1,13 +1,34 @@
-//! httperf-style open-loop load generator: Poisson arrivals at the trace's
-//! instantaneous rate, exponential per-request service demand. Open-loop
-//! matters — like httperf, arrivals do not slow down when the service
-//! saturates, which is what creates the overload the autoscaler must chase.
+//! httperf-style load generation for the web-serving path and the serve
+//! frontend driver ([`crate::net::driver`]).
+//!
+//! Two generator shapes, matching the classic load-testing split:
+//! * [`generate`] — **open-loop**: Poisson arrivals at the trace's
+//!   instantaneous rate, exponential per-request service demand. Like
+//!   httperf, arrivals do not slow down when the service saturates, which
+//!   is what creates the overload the autoscaler must chase.
+//! * [`closed_loop`] — fixed concurrency: N virtual clients each issue,
+//!   wait out their request's service demand plus a think time, and issue
+//!   again. Throughput self-limits to what the servers sustain, the
+//!   complementary probe for the saturation bench.
+//!
+//! All f64→int casts go through `util::num` (phoenix-lint R3 covers this
+//! file — same lossy-cast discipline as `trace/`).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::trace::web_synth::RateSeries;
+use crate::util::num::{f64_from_u64, round_f64_u64, trunc_f64_u32, trunc_f64_u64};
 use crate::util::rng::Rng;
 use crate::workload::Request;
 
-/// Generate request arrivals over `[start, end)` following `rates`.
+/// Exponential service demand in whole ms, never zero.
+fn sample_work_ms(mean_work_ms: f64, rng: &mut Rng) -> u32 {
+    trunc_f64_u32(rng.exp(1.0 / mean_work_ms).max(0.1)).saturating_add(1)
+}
+
+/// Generate open-loop request arrivals over `[start, end)` following
+/// `rates`.
 ///
 /// Thinning (Lewis–Shedler) against the series' max rate gives an exact
 /// nonhomogeneous Poisson process; `mean_work_ms` is the mean exponential
@@ -21,19 +42,56 @@ pub fn generate(
 ) -> Vec<Request> {
     let mut out = Vec::new();
     let max_rate = rates.peak().max(1e-9);
-    let mut t = start as f64;
-    while t < end as f64 {
+    let end_s = f64_from_u64(end);
+    let mut t = f64_from_u64(start);
+    while t < end_s {
         t += rng.exp(max_rate);
-        if t >= end as f64 {
+        if t >= end_s {
             break;
         }
-        let inst_rate = rates.at(t as u64);
+        let inst_rate = rates.at(trunc_f64_u64(t));
         if rng.f64() < inst_rate / max_rate {
             out.push(Request {
-                arrival_ms: (t * 1000.0) as u64,
-                work_ms: rng.exp(1.0 / mean_work_ms).max(0.1) as u32 + 1,
+                arrival_ms: trunc_f64_u64(t * 1000.0),
+                work_ms: sample_work_ms(mean_work_ms, rng),
             });
         }
+    }
+    out
+}
+
+/// Generate closed-loop arrivals: `concurrency` virtual clients, each
+/// cycling issue → wait `work_ms` service → wait `think_ms` (exponential
+/// mean) → issue, until `total` requests exist. Arrivals come out sorted.
+pub fn closed_loop(
+    concurrency: usize,
+    total: usize,
+    mean_work_ms: f64,
+    think_ms: f64,
+    rng: &mut Rng,
+) -> Vec<Request> {
+    let mut out = Vec::with_capacity(total);
+    if concurrency == 0 || total == 0 {
+        return out;
+    }
+    // min-heap of (next issue time in ms, client id); client id breaks
+    // ties deterministically
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = (0..concurrency)
+        .map(|i| {
+            // stagger client starts across one think interval so the
+            // first wave is not a synchronized burst
+            Reverse((round_f64_u64(rng.exp(1.0 / think_ms.max(0.1))), i))
+        })
+        .collect();
+    while out.len() < total {
+        let Some(Reverse((t, i))) = heap.pop() else {
+            break;
+        };
+        let work_ms = sample_work_ms(mean_work_ms, rng);
+        out.push(Request { arrival_ms: t, work_ms });
+        let think = round_f64_u64(rng.exp(1.0 / think_ms.max(0.1)));
+        let next = t.saturating_add(u64::from(work_ms)).saturating_add(think);
+        heap.push(Reverse((next, i)));
     }
     out
 }
@@ -83,5 +141,41 @@ mod tests {
         let mut rng = Rng::new(4);
         let reqs = generate(&rates, 0, 40, 15.0, &mut rng);
         assert!(reqs.iter().all(|r| r.work_ms >= 1));
+    }
+
+    #[test]
+    fn closed_loop_produces_exactly_total_sorted_requests() {
+        let mut rng = Rng::new(5);
+        let reqs = closed_loop(8, 500, 20.0, 50.0, &mut rng);
+        assert_eq!(reqs.len(), 500);
+        assert!(reqs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        assert!(reqs.iter().all(|r| r.work_ms >= 1));
+    }
+
+    #[test]
+    fn closed_loop_concurrency_bounds_outstanding_requests() {
+        // at any instant at most `concurrency` requests can be between
+        // issue and completion: check via a sweep over issue/finish events
+        let conc = 4;
+        let mut rng = Rng::new(6);
+        let reqs = closed_loop(conc, 300, 10.0, 30.0, &mut rng);
+        let mut events: Vec<(u64, i64)> = Vec::new();
+        for r in &reqs {
+            events.push((r.arrival_ms, 1));
+            events.push((r.arrival_ms + u64::from(r.work_ms), -1));
+        }
+        events.sort_by_key(|&(t, d)| (t, d)); // finishes before issues at ties
+        let mut open = 0i64;
+        for (_, d) in events {
+            open += d;
+            assert!(open <= conc as i64, "outstanding {open} > {conc}");
+        }
+    }
+
+    #[test]
+    fn closed_loop_degenerate_inputs_are_empty() {
+        let mut rng = Rng::new(7);
+        assert!(closed_loop(0, 100, 10.0, 10.0, &mut rng).is_empty());
+        assert!(closed_loop(4, 0, 10.0, 10.0, &mut rng).is_empty());
     }
 }

@@ -1198,3 +1198,65 @@ fn prop_fault_schedule_bit_identical_serial_vs_parallel() {
         Ok(())
     });
 }
+
+/// The bounded ingest queue — the serve frontend's backpressure buffer —
+/// never reorders same-department submissions: across any interleaving of
+/// pushes and partial drains, the drained stream equals the accepted push
+/// stream (global FIFO, which implies per-department FIFO), rejected
+/// pushes are exactly the overflow, and the queue never exceeds its
+/// capacity.
+#[test]
+fn prop_ingest_queue_preserves_per_dept_fifo() {
+    use phoenix_cloud::net::{IngestQueue, IngestRequest};
+
+    check("ingest-queue-fifo", 300, |g: &mut Gen| {
+        let cap = g.usize_in(1, 16);
+        let mut q = IngestQueue::new(cap);
+        let n_depts = g.usize_in(1, 4);
+        let mut next_idx = vec![0usize; n_depts];
+        let mut accepted: Vec<IngestRequest> = Vec::new();
+        let mut drained: Vec<IngestRequest> = Vec::new();
+        let mut pushes = 0usize;
+        let mut shed = 0usize;
+        for _ in 0..g.usize_in(1, 80) {
+            if g.bool() {
+                let d = g.usize_in(0, n_depts - 1);
+                let req = IngestRequest {
+                    dept: DeptId(d as u16),
+                    trace_idx: next_idx[d],
+                    due: g.u64_in(0, 100),
+                };
+                next_idx[d] += 1;
+                pushes += 1;
+                if q.push(req) {
+                    accepted.push(req);
+                } else {
+                    shed += 1;
+                }
+            } else {
+                drained.extend(q.drain(g.usize_in(0, cap + 1)));
+            }
+            prop_assert!(q.len() <= q.capacity(), "queue over capacity");
+        }
+        while !q.is_empty() {
+            drained.extend(q.drain(cap));
+        }
+        prop_assert!(
+            drained == accepted,
+            "drain order diverged from accepted push order"
+        );
+        prop_assert!(pushes == accepted.len() + shed, "push accounting leaked");
+        for d in 0..n_depts {
+            let idxs: Vec<usize> = drained
+                .iter()
+                .filter(|r| r.dept == DeptId(d as u16))
+                .map(|r| r.trace_idx)
+                .collect();
+            prop_assert!(
+                idxs.windows(2).all(|w| w[0] < w[1]),
+                "dept {d} reordered: {idxs:?}"
+            );
+        }
+        Ok(())
+    });
+}

@@ -20,6 +20,9 @@ RECORDED_PROBES = [
     "full sweep parallel (workers=auto)",
     "scale sweep K=2..4",
     "matrix grid K=2..3",
+    "serve ingest saturation K=2",
+    "serve ingest saturation K=4",
+    "serve ingest saturation K=8",
 ]
 
 

@@ -14,13 +14,15 @@
 //! |----|------------------|-------------------------------|---------------|
 //! | R1 | `wall_clock`     | deterministic modules¹        | `Instant::now`, `SystemTime::now`, `thread_rng`, `from_entropy`, `UNIX_EPOCH` |
 //! | R2 | `hash_order`     | deterministic modules¹        | *iteration* over `HashMap`/`HashSet` bindings (insertion/lookup is fine) |
-//! | R3 | `lossy_cast`     | `trace/` (non-test code)      | bare `as` integer casts — the PR-3 SWF truncation bug class |
+//! | R3 | `lossy_cast`     | `trace/`, `wscms/loadgen.rs` (non-test code) | bare `as` integer casts — the PR-3 SWF truncation bug class |
 //! | R4 | `policy_surface` | everywhere                    | `impl ProvisionPolicy` blocks that silently inherit any of `on_crash`/`on_recover`/`on_join`/`on_leave` |
 //! | R5 | `panic_path`     | library code (not `main.rs`, tests, benches) | `.unwrap()`, `.expect()`, `panic!`, `todo!`, `unimplemented!` |
 //!
 //! ¹ deterministic modules: `sim/`, `coordinator/`, `experiments/`,
 //! `provision/`, `trace/`, and `faults.rs`. Wall-clock reads are always
-//! legal in `util/bench.rs` (the one audited timing module).
+//! legal in `util/bench.rs` (the one audited timing module) and in `net/`
+//! (the serve frontend's socket/file ingest boundary — external I/O by
+//! design; the deterministic core never calls into it).
 //!
 //! # Allow annotations
 //!
@@ -151,8 +153,8 @@ impl Scope {
                 top,
                 "sim" | "coordinator" | "experiments" | "provision" | "trace"
             ) || rel == "faults.rs",
-            trace: top == "trace",
-            wall_clock_ok: rel == "util/bench.rs",
+            trace: top == "trace" || rel == "wscms/loadgen.rs",
+            wall_clock_ok: rel == "util/bench.rs" || top == "net",
             binary: rel == "main.rs",
         }
     }
@@ -858,6 +860,9 @@ mod tests {
         assert_eq!(rules_of("faults.rs", src), vec![(Rule::WallClock, 1)]);
         assert!(rules_of("util/bench.rs", src).is_empty());
         assert!(rules_of("wscms/serving.rs", src).is_empty());
+        // net/ is the audited external-I/O boundary: exempt like bench.rs
+        assert!(rules_of("net/socket.rs", src).is_empty());
+        assert!(rules_of("net/mod.rs", src).is_empty());
     }
 
     #[test]
@@ -901,6 +906,10 @@ mod tests {
         assert!(rules_of("sim/engine.rs", src).is_empty());
         let test_src = "#[cfg(test)]\nmod tests {\n    fn g(x: f64) -> u64 { x as u64 }\n}";
         assert!(rules_of("trace/swf.rs", test_src).is_empty());
+        // the load generator feeds the same conversion-sensitive numbers
+        // as the trace parsers: R3 covers it too
+        assert_eq!(rules_of("wscms/loadgen.rs", src), vec![(Rule::LossyCast, 1)]);
+        assert!(rules_of("wscms/serving.rs", src).is_empty(), "rest of wscms/ unscoped");
     }
 
     #[test]
