@@ -469,6 +469,38 @@ fn main() {
         walk_ns / bisect_ns.max(1e-9)
     );
 
+    section("predictive pre-granting vs reactive cooperative (forecast overhead + headline)");
+    // The same one-day K=4 roster, service-heavy so forecasts matter; the
+    // probe times the predictive cell (tracker feeds + reservation math on
+    // top of the cooperative flow) and the gate prints the headline pair.
+    let pred_axes = |spec: PolicySpec| MatrixAxes {
+        ks: vec![4],
+        mixes: vec![RosterMix::ServiceHeavy],
+        policies: vec![PolicyAxis::Base(spec)],
+        loads: vec![scan_cfg.hpc.target_load],
+        scan: SizeScan::Bisect,
+        quick: true,
+    };
+    let pred_spec = PolicySpec::Predictive(scan_cfg.predictive);
+    {
+        let p = matrix::run_matrix(&scan_cfg, &pred_axes(pred_spec)).expect("predictive");
+        let c = matrix::run_matrix(&scan_cfg, &pred_axes(PolicySpec::Cooperative))
+            .expect("cooperative");
+        let mae = p[0].runs.iter().find_map(|r| r.forecast_mae);
+        assert!(mae.is_some(), "predictive cell produced no forecasts");
+        println!(
+            "required size K=4: predictive {:?} vs cooperative {:?} of {} nodes (mae {:.2})",
+            p[0].required_nodes,
+            c[0].required_nodes,
+            p[0].dedicated_nodes,
+            mae.unwrap_or(f64::NAN),
+        );
+    }
+    rep.record(bench("predictive vs cooperative K=4", 0, iters(3).max(2), || {
+        let cells = matrix::run_matrix(&scan_cfg, &pred_axes(pred_spec)).expect("predictive");
+        cells.iter().flat_map(|c| c.runs.iter().map(|r| r.events)).sum()
+    }));
+
     section("serve ingest saturation (requests/sec vs p99 grant latency vs roster size)");
     // K batch departments fed exclusively over the network frontend: every
     // trace submit time sits beyond the horizon, so only ingest admits

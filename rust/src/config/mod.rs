@@ -15,6 +15,7 @@ use crate::cluster::DeptKind;
 use crate::faults::FaultConfig;
 use crate::provision::mixed::{PolicyChoice, TierRule};
 use crate::provision::policy::{DeptProfile, PolicySpec};
+use crate::provision::predictive::PredictiveSpec;
 use crate::sim::EngineKind;
 use crate::trace::hpc_synth::HpcTraceConfig;
 use crate::trace::web_synth::WebTraceConfig;
@@ -122,6 +123,12 @@ pub struct DeptSpec {
     /// their kind's default priority tier, so a non-default `tier` on a
     /// joining department is ignored.
     pub join_at: u64,
+    /// Trace second at which the department leaves the shared cluster
+    /// (runtime disaffiliation, the mirror of `join_at`). 0 — the
+    /// default — means the department stays through the horizon. A
+    /// leaver's holdings return to the free pool and its workload after
+    /// the departure is dropped. Must exceed `join_at` when both are set.
+    pub leave_at: u64,
 }
 
 impl DeptSpec {
@@ -187,6 +194,7 @@ impl RosterMix {
             quota: base.st_nodes,
             seed: None,
             join_at: 0,
+            leave_at: 0,
         };
         let service = |ord: usize| DeptSpec {
             name: format!("ws{ord}"),
@@ -195,6 +203,7 @@ impl RosterMix {
             quota: base.ws_nodes,
             seed: None,
             join_at: 0,
+            leave_at: 0,
         };
         (0..k)
             .map(|i| match self {
@@ -266,6 +275,14 @@ pub struct ScenarioSpec {
     /// Join time (trace seconds) for the joining departments; must be
     /// positive when `joiners > 0`.
     pub join_at: u64,
+    /// Number of trailing roster members that leave mid-run at `leave_at`
+    /// (runtime disaffiliation axis, the mirror of `joiners`). Must leave
+    /// at least one staying department: `leavers < k`.
+    pub leavers: usize,
+    /// Leave time (trace seconds) for the leaving departments; must be
+    /// positive when `leavers > 0`, and greater than `join_at` when the
+    /// same trailing members both join and leave mid-run.
+    pub leave_at: u64,
 }
 
 impl ScenarioSpec {
@@ -289,8 +306,8 @@ impl ScenarioSpec {
     }
 }
 
-pub(crate) const SCENARIO_POLICY_KINDS: [&str; 6] =
-    ["cooperative", "static", "proportional", "lease", "tiered", "mixed"];
+pub(crate) const SCENARIO_POLICY_KINDS: [&str; 7] =
+    ["cooperative", "static", "proportional", "lease", "tiered", "predictive", "mixed"];
 
 // Typed optional accessors for overlay tables: `None` only when the key is
 // absent — a present-but-mistyped value is an error, never a silent
@@ -361,6 +378,12 @@ pub struct ExperimentConfig {
     /// `configuration` (cooperative for dynamic, static partition for
     /// static).
     pub policy: Option<PolicyChoice>,
+    /// Forecast knobs for the predictive policy (`[policy]
+    /// forecast_window` / `forecast_horizon` / `headroom_tenths`, CLI
+    /// `--forecast-window` / `--forecast-horizon` / `--headroom-tenths`).
+    /// Applied wherever a `predictive` spec is materialized — the
+    /// `[policy]` choice, scenario cells, and the matrix policy axis.
+    pub predictive: PredictiveSpec,
     /// Declared scenario-matrix cells (`[[scenario]]`); empty = the
     /// matrix command's built-in grid.
     pub scenarios: Vec<ScenarioSpec>,
@@ -398,6 +421,7 @@ impl Default for ExperimentConfig {
             web: WebTraceConfig::default(),
             departments: Vec::new(),
             policy: None,
+            predictive: PredictiveSpec::default(),
             scenarios: Vec::new(),
             swf: None,
             swf_procs_per_node: 8,
@@ -476,6 +500,22 @@ impl ExperimentConfig {
                      present at boot"
                 );
             }
+            for d in &self.departments {
+                if d.leave_at > 0 && d.leave_at <= d.join_at {
+                    bail!(
+                        "department '{}': leave_at ({}) must exceed join_at ({})",
+                        d.name,
+                        d.leave_at,
+                        d.join_at
+                    );
+                }
+            }
+            if self.departments.iter().all(|d| d.leave_at > 0) {
+                bail!(
+                    "every department has leave_at > 0 — at least one must \
+                     stay through the horizon"
+                );
+            }
         } else if self.policy.is_some() {
             bail!("[policy] given but no [[department]] roster");
         }
@@ -483,6 +523,12 @@ impl ExperimentConfig {
             if choice.lease_terms().iter().any(|&secs| secs == 0) {
                 bail!("policy.lease_secs must be positive");
             }
+        }
+        if self.predictive.window < 2 {
+            bail!("policy.forecast_window must be at least 2 (need a slope)");
+        }
+        if self.predictive.horizon_secs == 0 {
+            bail!("policy.forecast_horizon must be positive");
         }
         if self.swf_procs_per_node == 0 {
             bail!("trace.procs_per_node must be positive");
@@ -543,6 +589,25 @@ impl ExperimentConfig {
             }
             if s.joiners > 0 && s.join_at == 0 {
                 bail!("scenario {label}: joiners > 0 needs join_at > 0");
+            }
+            if s.leavers >= s.k {
+                bail!(
+                    "scenario {label}: leavers ({}) must leave at least one \
+                     staying department (k = {})",
+                    s.leavers,
+                    s.k
+                );
+            }
+            if s.leavers > 0 && s.leave_at == 0 {
+                bail!("scenario {label}: leavers > 0 needs leave_at > 0");
+            }
+            if s.leavers > 0 && s.joiners > 0 && s.leave_at <= s.join_at {
+                bail!(
+                    "scenario {label}: the trailing members both join and \
+                     leave — leave_at ({}) must exceed join_at ({})",
+                    s.leave_at,
+                    s.join_at
+                );
             }
             // fault overrides validate through the same rules as [faults]
             s.fault_config(&self.faults)
@@ -632,11 +697,31 @@ impl ExperimentConfig {
                 let seed = d.get("seed").and_then(Json::as_u64);
                 let join_at = typed_u64(d, "join_at", &format!("department '{name}'"))?
                     .unwrap_or(0);
-                depts.push(DeptSpec { name, kind, tier, quota, seed, join_at });
+                let leave_at = typed_u64(d, "leave_at", &format!("department '{name}'"))?
+                    .unwrap_or(0);
+                depts.push(DeptSpec { name, kind, tier, quota, seed, join_at, leave_at });
             }
             self.departments = depts;
         }
         if let Some(p) = doc.get("policy") {
+            // Forecast knobs overlay the defaults before any "predictive"
+            // spec is materialized, so `kind = "predictive"` (base, tier
+            // rule, or scenario cell) picks them up.
+            if let Some(n) = typed_u64(p, "forecast_window", "[policy]")? {
+                self.predictive.window = u32::try_from(n).map_err(|_| {
+                    anyhow::anyhow!("[policy]: forecast_window {n} exceeds u32")
+                })?;
+            }
+            if let Some(n) = typed_u64(p, "forecast_horizon", "[policy]")? {
+                self.predictive.horizon_secs = u32::try_from(n).map_err(|_| {
+                    anyhow::anyhow!("[policy]: forecast_horizon {n} exceeds u32")
+                })?;
+            }
+            if let Some(n) = typed_u64(p, "headroom_tenths", "[policy]")? {
+                self.predictive.headroom_tenths = u32::try_from(n).map_err(|_| {
+                    anyhow::anyhow!("[policy]: headroom_tenths {n} exceeds u32")
+                })?;
+            }
             let kind = p
                 .get("kind")
                 .and_then(Json::as_str)
@@ -675,6 +760,9 @@ impl ExperimentConfig {
             } else {
                 PolicyChoice::Base(PolicySpec::parse(kind, lease_secs)?)
             });
+            if let Some(choice) = &mut self.policy {
+                choice.patch_predictive(self.predictive);
+            }
         }
         if let Some(arr) = doc.get("scenario").and_then(Json::as_arr) {
             let mut scenarios = Vec::with_capacity(arr.len());
@@ -701,6 +789,8 @@ impl ExperimentConfig {
                 let efficiency = typed_f64(s, "efficiency", &ctx)?;
                 let joiners = typed_u64(s, "joiners", &ctx)?.unwrap_or(0) as usize;
                 let join_at = typed_u64(s, "join_at", &ctx)?.unwrap_or(0);
+                let leavers = typed_u64(s, "leavers", &ctx)?.unwrap_or(0) as usize;
+                let leave_at = typed_u64(s, "leave_at", &ctx)?.unwrap_or(0);
                 scenarios.push(ScenarioSpec {
                     name,
                     k,
@@ -717,6 +807,8 @@ impl ExperimentConfig {
                     efficiency,
                     joiners,
                     join_at,
+                    leavers,
+                    leave_at,
                 });
             }
             self.scenarios = scenarios;
@@ -882,6 +974,128 @@ mod tests {
         for bad in [
             "[[scenario]]\nk = 2\njoiners = \"two\"\n",
             "[[scenario]]\nk = 2\njoin_at = -5\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn scenario_leave_axis_parses_and_validates() {
+        let doc = crate::util::toml::parse(
+            "[[scenario]]\nname = \"leave-sweep\"\nk = 4\nleavers = 1\nleave_at = 86400\n\n\
+             [[scenario]]\nk = 4\njoiners = 1\njoin_at = 3600\nleavers = 1\n\
+             leave_at = 7200\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!((cfg.scenarios[0].leavers, cfg.scenarios[0].leave_at), (1, 86_400));
+        // every department leaving leaves nobody to run the cluster out
+        cfg.scenarios[0].leavers = 4;
+        assert!(cfg.validate().is_err(), "leavers == k");
+        cfg.scenarios[0].leavers = 1;
+        cfg.scenarios[0].leave_at = 0;
+        assert!(cfg.validate().is_err(), "leavers without a leave time");
+        cfg.scenarios[0].leave_at = 60;
+        cfg.validate().unwrap();
+        // trailing members that both join and leave must do so in order
+        cfg.scenarios[1].leave_at = 3600;
+        assert!(cfg.validate().is_err(), "leave_at <= join_at with joiners");
+        cfg.scenarios[1].leave_at = 3601;
+        cfg.validate().unwrap();
+        // mistyped leaver fields error instead of silently defaulting
+        for bad in [
+            "[[scenario]]\nk = 2\nleavers = \"one\"\n",
+            "[[scenario]]\nk = 2\nleave_at = -5\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(ExperimentConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn department_leave_at_parses_and_validates() {
+        let doc = crate::util::toml::parse(
+            "[[department]]\nname = \"hpc\"\nkind = \"batch\"\n\n\
+             [[department]]\nname = \"guest\"\nkind = \"batch\"\njoin_at = 1800\n\
+             leave_at = 86400\n\n\
+             [[department]]\nname = \"web\"\nkind = \"service\"\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.departments[0].leave_at, 0, "default stays through the horizon");
+        assert_eq!(cfg.departments[1].leave_at, 86_400);
+        // leaving before (or at) the join is rejected
+        cfg.departments[1].leave_at = 1800;
+        assert!(cfg.validate().is_err(), "leave_at == join_at");
+        cfg.departments[1].leave_at = 1801;
+        cfg.validate().unwrap();
+        // a roster where everyone leaves is rejected
+        for d in &mut cfg.departments {
+            d.leave_at = 90_000;
+        }
+        cfg.departments[1].join_at = 0;
+        assert!(cfg.validate().is_err(), "all-leaver roster");
+        cfg.departments[0].leave_at = 0;
+        cfg.validate().unwrap();
+        // a mistyped leave_at errors instead of silently defaulting
+        let doc = crate::util::toml::parse(
+            "[[department]]\nname = \"x\"\nkind = \"batch\"\nleave_at = \"soon\"\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn predictive_policy_overlay_carries_forecast_knobs() {
+        let doc = crate::util::toml::parse(
+            "[policy]\nkind = \"predictive\"\nforecast_window = 32\n\
+             forecast_horizon = 120\nheadroom_tenths = 15\n\n\
+             [[department]]\nname = \"hpc\"\nkind = \"batch\"\n\n\
+             [[department]]\nname = \"web\"\nkind = \"service\"\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.predictive, PredictiveSpec::default());
+        cfg.apply_toml(&doc).unwrap();
+        cfg.validate().unwrap();
+        let want =
+            PredictiveSpec { window: 32, horizon_secs: 120, headroom_tenths: 15 };
+        assert_eq!(cfg.predictive, want);
+        // the knobs reach the materialized policy spec, not just the config
+        assert_eq!(cfg.policy, Some(PolicyChoice::Base(PolicySpec::Predictive(want))));
+        // degenerate knobs are rejected
+        cfg.predictive.window = 1;
+        assert!(cfg.validate().is_err(), "window below 2");
+        cfg.predictive.window = 32;
+        cfg.predictive.horizon_secs = 0;
+        assert!(cfg.validate().is_err(), "zero horizon");
+        cfg.predictive.horizon_secs = 120;
+        cfg.validate().unwrap();
+        // knobs also patch predictive tier rules inside a mix
+        let doc = crate::util::toml::parse(
+            "[policy]\nkind = \"mixed\"\nforecast_window = 8\n\
+             [[policy.tier]]\ntier = 0\nkind = \"predictive\"\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        let Some(PolicyChoice::Mixed { rules, .. }) = &cfg.policy else {
+            panic!("expected a mixed policy, got {:?}", cfg.policy);
+        };
+        let PolicySpec::Predictive(spec) = rules[0].spec else {
+            panic!("expected a predictive tier rule, got {:?}", rules[0].spec);
+        };
+        assert_eq!(spec.window, 8);
+        // mistyped knobs error instead of silently defaulting
+        for bad in [
+            "[policy]\nkind = \"predictive\"\nforecast_window = \"wide\"\n",
+            "[policy]\nkind = \"predictive\"\nforecast_horizon = -60\n",
+            "[policy]\nkind = \"predictive\"\nheadroom_tenths = 4294967296\n",
         ] {
             let doc = crate::util::toml::parse(bad).unwrap();
             assert!(ExperimentConfig::default().apply_toml(&doc).is_err(), "{bad}");
@@ -1058,6 +1272,8 @@ mod tests {
             efficiency: None,
             joiners: 0,
             join_at: 0,
+            leavers: 0,
+            leave_at: 0,
         });
         assert!(cfg.validate().is_err(), "negative scenario correlation");
         cfg.scenarios[0].correlation = None;
@@ -1128,6 +1344,8 @@ mod tests {
             efficiency: None,
             joiners: 0,
             join_at: 0,
+            leavers: 0,
+            leave_at: 0,
         });
         assert!(cfg.validate().is_err(), "negative scenario mtbf");
         cfg.scenarios[0].mtbf = Some(0.0);
@@ -1171,6 +1389,7 @@ mod tests {
             quota: 64,
             seed: None,
             join_at: 0,
+            leave_at: 0,
         }];
         assert!(cfg.validate().is_err(), "no batch department");
         cfg.departments.push(DeptSpec {
@@ -1180,6 +1399,7 @@ mod tests {
             quota: 144,
             seed: None,
             join_at: 0,
+            leave_at: 0,
         });
         assert!(cfg.validate().is_err(), "duplicate names");
         cfg.departments[1].name = "hpc".into();

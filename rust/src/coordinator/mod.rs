@@ -75,11 +75,17 @@ enum Ev {
     /// Department `dept` joins the shared cluster (runtime affiliation;
     /// seeded ahead of the joiner's workload events at the same instant).
     DeptJoin { dept: u16 },
+    /// Department `dept` leaves the shared cluster (runtime
+    /// disaffiliation, the mirror of [`Ev::DeptJoin`]): its running jobs
+    /// are killed / capacity shed, every held node returns to the free
+    /// pool, and workload events at or after the departure are dropped.
+    DeptLeave { dept: u16 },
 }
 
 /// Lane routing for dept-addressed events: workload and grant events
-/// belong to their department's lane; lease ticks, faults, and joins are
-/// cluster-wide barriers. This is what `--engine sharded` keys the
+/// belong to their department's lane; lease ticks, faults, joins, and
+/// leaves are cluster-wide barriers (a departure redistributes capacity
+/// across every lane). This is what `--engine sharded` keys the
 /// per-department [`LaneQueue`] storage on (the consolidation *handler*
 /// stays serial — grants flow through the shared RPS ledger within a
 /// timestamp; see ARCHITECTURE.md "Engine hierarchy & determinism proof").
@@ -90,7 +96,11 @@ impl LaneEvent for Ev {
             | Ev::Finish { dept, .. }
             | Ev::WsDemand { dept, .. }
             | Ev::GrantArrive { dept, .. } => Some(*dept as usize),
-            Ev::LeaseTick | Ev::NodeCrash | Ev::NodeRecover | Ev::DeptJoin { .. } => None,
+            Ev::LeaseTick
+            | Ev::NodeCrash
+            | Ev::NodeRecover
+            | Ev::DeptJoin { .. }
+            | Ev::DeptLeave { .. } => None,
         }
     }
 }
@@ -154,6 +164,14 @@ pub struct RunResult {
     /// Mean seconds from a crash until every service department's holding
     /// again covers its demand (0.0 when nothing crashed).
     pub mean_recovery_s: f64,
+    /// Mean absolute forecast error (nodes) across every scored forecast,
+    /// `None` unless the provisioning policy forecasts (predictive, or a
+    /// mix with a predictive tier) and scored at least one.
+    pub forecast_mae: Option<f64>,
+    /// Fraction of targeted service claims fully served from the free
+    /// pool (the pre-grant reservation paid off); `None` unless the
+    /// policy forecasts and saw at least one targeted claim.
+    pub pregrant_hit_rate: Option<f64>,
     /// Simulator events processed (perf accounting).
     pub events: u64,
     pub registry: Registry,
@@ -218,10 +236,15 @@ pub struct ConsolidationSim {
     /// First routing failure; set by the dispatch handler, checked by
     /// [`ConsolidationSim::run`] (subsequent events are skipped).
     error: Option<SimError>,
-    /// Whether each department has joined yet (boot members start true).
+    /// Whether each department is currently affiliated (boot members
+    /// start true; joiners flip true at their join, leavers flip false
+    /// at their departure).
     active: Vec<bool>,
     /// Per-department join time (0 for boot members).
     join_at: Vec<SimTime>,
+    /// Per-department leave time (0 = stays through the horizon); set by
+    /// [`ConsolidationSim::plan_leave`] before the run.
+    leave_at: Vec<SimTime>,
     /// Joins not yet processed; drained by `on_dept_join`.
     pending_joins: Vec<PlannedJoin>,
     // -- fault accounting ----------------------------------------------------
@@ -353,6 +376,7 @@ impl ConsolidationSim {
             active[join.profile.id.index()] = false;
             join_at[join.profile.id.index()] = join.at;
         }
+        let leave_at = vec![0; active.len()];
         let rps = Rps::new(total_nodes, boot, policy);
         Self {
             cfg,
@@ -364,6 +388,7 @@ impl ConsolidationSim {
             error: None,
             active,
             join_at,
+            leave_at,
             pending_joins: joins,
             crashes: 0,
             crash_kills: 0,
@@ -372,6 +397,18 @@ impl ConsolidationSim {
             open_crashes: Vec::new(),
             recovery_secs: 0,
         }
+    }
+
+    /// Schedule a runtime departure (pre-run, the mirror of the `joins`
+    /// of [`ConsolidationSim::with_roster`]): department `dept` leaves
+    /// the shared cluster at `at`. A joiner's departure must come after
+    /// its join; `at` = 0 clears a planned departure.
+    pub fn plan_leave(&mut self, dept: DeptId, at: SimTime) {
+        assert!(
+            at == 0 || at > self.join_at[dept.index()],
+            "leave_at must exceed the department's join_at"
+        );
+        self.leave_at[dept.index()] = at;
     }
 
     fn batch_ids(&self) -> Vec<DeptId> {
@@ -469,6 +506,15 @@ impl ConsolidationSim {
         for join in &self.pending_joins {
             if join.at <= self.cfg.horizon {
                 engine.schedule(join.at, Ev::DeptJoin { dept: join.profile.id.0 });
+            }
+        }
+
+        // seed departures before the workload events too, so a leaver's
+        // workload event at exactly leave_at processes after the leave
+        // (and is dropped by the active-guard) — departures are inclusive
+        for (i, &la) in self.leave_at.iter().enumerate() {
+            if la > 0 && la <= self.cfg.horizon {
+                engine.schedule(la, Ev::DeptLeave { dept: i as u16 });
             }
         }
 
@@ -630,6 +676,7 @@ impl ConsolidationSim {
 
         let avg_turnaround = crate::util::stats::mean(&turnarounds);
         let cluster_nodes = self.rps.ledger().total();
+        let fstats = self.rps.forecast_stats();
         self.registry.counter("jobs.completed").add(completed);
         self.registry.counter("jobs.killed").add(killed);
         RunResult {
@@ -658,6 +705,8 @@ impl ConsolidationSim {
             } else {
                 0.0
             },
+            forecast_mae: fstats.and_then(|s| s.mae()),
+            pregrant_hit_rate: fstats.and_then(|s| s.hit_rate()),
             events,
             registry: self.registry,
             per_dept,
@@ -673,6 +722,9 @@ impl ConsolidationSim {
         now: SimTime,
         sched: &mut Schedule<Ev>,
     ) -> Result<(), SimError> {
+        if !self.active[dept.index()] {
+            return Ok(()); // submissions at/after the department's departure
+        }
         let job = match &self.depts[dept.index()].body {
             DeptBody::Batch { jobs, .. } => jobs[idx].clone(),
             DeptBody::Service { .. } => return Err(self.kind_err(dept, DeptKind::Batch)),
@@ -697,6 +749,9 @@ impl ConsolidationSim {
         now: SimTime,
         sched: &mut Schedule<Ev>,
     ) -> Result<(), SimError> {
+        if !self.active[dept.index()] {
+            return Ok(()); // the departure already killed this job
+        }
         if self.batch_server(dept)?.finish(job_id, now) {
             self.run_scheduler(dept, now, sched)?;
         }
@@ -710,10 +765,21 @@ impl ConsolidationSim {
         now: SimTime,
         sched: &mut Schedule<Ev>,
     ) -> Result<(), SimError> {
+        if !self.active[dept.index()] {
+            return Ok(()); // demand changes at/after the department's departure
+        }
         let target = match &self.depts[dept.index()].body {
             DeptBody::Service { demand, .. } => demand[sample],
             DeptBody::Batch { .. } => return Err(self.kind_err(dept, DeptKind::Service)),
         };
+        // feed the sample to the policy before acting on it (no-op for the
+        // reactive policies; the predictive policy trains its per-dept
+        // tracker here — no events are scheduled, so non-predictive runs
+        // are bit-identical with or without the hook)
+        let held = self.rps.ledger().held(dept);
+        let util =
+            if held == 0 { 0.0 } else { (target as f64 / held as f64).min(1.0) };
+        self.rps.observe(dept, util, target, now);
         match self.service_server(dept)?.set_demand(target, now) {
             WsAction::None => {}
             WsAction::Release(n) => {
@@ -776,6 +842,12 @@ impl ConsolidationSim {
     }
 
     fn on_grant_arrive(&mut self, dept: DeptId, nodes: u64, now: SimTime) -> Result<(), SimError> {
+        if !self.active[dept.index()] {
+            // the department left while the grant was in flight; the
+            // departure already returned its ledger holdings (which
+            // include forced nodes still being rewired)
+            return Ok(());
+        }
         self.service_server(dept)?.grant(nodes);
         self.settle_recoveries(now);
         self.sample_pools(now);
@@ -896,6 +968,57 @@ impl ConsolidationSim {
         Ok(())
     }
 
+    fn on_dept_leave(
+        &mut self,
+        dept: DeptId,
+        now: SimTime,
+        sched: &mut Schedule<Ev>,
+    ) -> Result<(), SimError> {
+        if !self.active[dept.index()] {
+            return Ok(());
+        }
+        match self.depts[dept.index()].kind() {
+            DeptKind::Batch => {
+                // running jobs die with the departure (their Finish events
+                // are dropped by the active-guard); outcomes stay recorded
+                let server = self.batch_server(dept)?;
+                let pool = server.pool();
+                if pool > 0 {
+                    let killed = server.force_return(pool, now);
+                    self.registry.counter("leave.kills").add(killed.len() as u64);
+                }
+            }
+            DeptKind::Service => {
+                // zero the demand first so shortage accounting closes at
+                // the departure, then shed the server-side capacity; the
+                // ledger side (including forced grants still in flight)
+                // is settled by Rps::leave below
+                let server = self.service_server(dept)?;
+                server.set_demand(0, now);
+                let holding = server.holding();
+                if holding > 0 {
+                    server.release(holding);
+                }
+            }
+        }
+        self.active[dept.index()] = false;
+        self.rps.leave(dept, now);
+        // the freed capacity flows to the remaining batch departments
+        let batch = self.batch_ids();
+        if self.rps.ledger().free() > 0 && !batch.is_empty() {
+            for (d, n) in self.rps.provision_idle(&batch, now) {
+                if n > 0 {
+                    self.batch_server(d)?.grant(n);
+                    self.run_scheduler(d, now, sched)?;
+                }
+            }
+            self.schedule_lease_tick(sched, now);
+        }
+        self.settle_recoveries(now);
+        self.sample_pools(now);
+        Ok(())
+    }
+
     fn on_lease_tick(&mut self, now: SimTime, sched: &mut Schedule<Ev>) -> Result<(), SimError> {
         self.lease_tick_at = None;
         for (d, n) in self.rps.lease_expirations(now) {
@@ -1003,6 +1126,7 @@ impl EventHandler<Ev> for Handler<'_> {
             Ev::NodeCrash => self.sim.on_node_crash(now, sched),
             Ev::NodeRecover => self.sim.on_node_recover(now, sched),
             Ev::DeptJoin { dept } => self.sim.on_dept_join(DeptId(dept), now),
+            Ev::DeptLeave { dept } => self.sim.on_dept_leave(DeptId(dept), now, sched),
         };
         if let Err(e) = result {
             self.sim.error = Some(e);
@@ -1261,6 +1385,76 @@ mod tests {
         // the joiner's claim forced nodes out of the idle batch pool
         assert!(res.force_returns > 0, "{res:?}");
         assert_eq!(res.killed, 0, "idle nodes satisfy the claim: {res:?}");
+    }
+
+    #[test]
+    fn virtual_time_service_leaver_frees_capacity_for_batch() {
+        let cfg = tiny_cfg(16);
+        // WS holds 4 nodes until it leaves at t=600
+        let mut sim = ConsolidationSim::new(cfg, tiny_jobs(), vec![4u64; 100]);
+        sim.plan_leave(DeptId(1), 600);
+        let res = sim.run().unwrap();
+        assert_eq!(res.completed, 4, "batch work unaffected: {res:?}");
+        let ws = &res.per_dept[1];
+        assert_eq!(ws.holding_end, 0, "leaver must hold nothing: {res:?}");
+        assert_eq!(res.ws_shortage_node_secs, 0);
+        // the departure's freed nodes flow to the batch pool
+        let pool_max = res.registry.series["st.pool"].max().unwrap_or(0.0);
+        assert!(pool_max >= 15.0, "pool_max={pool_max}");
+    }
+
+    #[test]
+    fn virtual_time_batch_leaver_kills_running_jobs_and_drops_backlog() {
+        let cfg = tiny_cfg(16);
+        let mut sim = ConsolidationSim::new(cfg, tiny_jobs(), vec![1u64; 100]);
+        // jobs 1-3 are running at t=30; job 4 (submit 500) is after the leave
+        sim.plan_leave(DeptId(0), 30);
+        let res = sim.run().unwrap();
+        assert_eq!(res.completed, 0, "{res:?}");
+        assert_eq!(res.killed, 3, "running jobs die with the departure: {res:?}");
+        assert_eq!(res.in_flight, 0, "post-departure submissions are dropped");
+        assert_eq!(res.registry.counter_value("leave.kills"), 3);
+        assert_eq!(res.per_dept[0].holding_end, 0);
+        // a departure is not a crash: availability stays perfect
+        assert_eq!(res.availability, 1.0);
+    }
+
+    #[test]
+    fn predictive_policy_runs_end_to_end_and_reports_forecast_stats() {
+        use crate::provision::{two_dept_profiles, PredictiveSpec};
+        let cfg = tiny_cfg(16);
+        // demand toggles every sample so the tracker sees a change event
+        // each period and warms its window quickly
+        let demand: Vec<u64> =
+            (0..100).map(|k| if k % 2 == 0 { 1 } else { 3 }).collect();
+        let spec = PredictiveSpec { window: 8, horizon_secs: 60, headroom_tenths: 10 };
+        let policy = crate::provision::PolicySpec::Predictive(spec)
+            .build(&two_dept_profiles(16, 8));
+        let inputs = vec![
+            DeptInput { name: "st".into(), workload: DeptWorkload::Batch(tiny_jobs().into()) },
+            DeptInput {
+                name: "ws".into(),
+                workload: DeptWorkload::Service(demand.clone().into()),
+            },
+        ];
+        let res = ConsolidationSim::with_departments(
+            cfg.clone(),
+            "pred-2".to_string(),
+            16,
+            inputs,
+            policy,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(res.ws_shortage_node_secs, 0, "{res:?}");
+        assert_eq!(res.completed + res.killed + res.in_flight as u64, 4, "{res:?}");
+        let mae = res.forecast_mae.expect("warm tracker must score forecasts");
+        assert!(mae.is_finite() && mae >= 0.0, "{res:?}");
+        assert!(res.pregrant_hit_rate.is_some(), "demand rises were targeted: {res:?}");
+        // the reactive baseline reports no forecast columns at all
+        let base = ConsolidationSim::new(cfg, tiny_jobs(), demand).run().unwrap();
+        assert_eq!(base.forecast_mae, None);
+        assert_eq!(base.pregrant_hit_rate, None);
     }
 
     #[test]

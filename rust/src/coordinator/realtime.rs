@@ -69,6 +69,7 @@ impl ServeDept {
                 quota,
                 seed: None,
                 join_at: 0,
+                leave_at: 0,
             },
             workload: ServeWorkload::Batch(jobs.into()),
             leave_at: None,
@@ -86,6 +87,7 @@ impl ServeDept {
                 quota,
                 seed: None,
                 join_at: 0,
+                leave_at: 0,
             },
             workload: ServeWorkload::Service { rates, scaler, boot_instances: 1 },
             leave_at: None,
@@ -143,6 +145,8 @@ struct RpsStats {
     crashes: Cell<u64>,
     recovers: Cell<u64>,
     down: Cell<u64>,
+    forecast_mae: Cell<Option<f64>>,
+    pregrant_hit_rate: Cell<Option<f64>>,
 }
 
 // ---- the RPS service ---------------------------------------------------------
@@ -190,6 +194,9 @@ impl RpsSvc {
         self.stats.force_returns.set(self.rps.force_returns);
         self.stats.forced_nodes.set(self.rps.forced_nodes);
         self.stats.down.set(self.rps.ledger().down());
+        let fs = self.rps.forecast_stats();
+        self.stats.forecast_mae.set(fs.and_then(|s| s.mae()));
+        self.stats.pregrant_hit_rate.set(fs.and_then(|s| s.hit_rate()));
     }
 }
 
@@ -293,6 +300,22 @@ impl Service for RpsSvc {
                 self.provision_idle_to_batch(ctx);
             }
             Msg::Tick { now } => {
+                // demand sample for forecasting policies: the ledger's
+                // holdings are the serve-path demand signal (a satisfied
+                // service department holds exactly its scaler target), so
+                // the DemandTracker sees the same per-tick series shape as
+                // the virtual-time coordinator's on_ws_demand hook
+                let service: Vec<DeptId> = self
+                    .roster
+                    .iter()
+                    .filter(|&(_, &k)| k == DeptKind::Service)
+                    .map(|(&d, _)| d)
+                    .collect();
+                for d in service {
+                    let held = self.rps.ledger().held(d);
+                    let util = if held == 0 { 0.0 } else { 1.0 };
+                    self.rps.observe(d, util, held, now);
+                }
                 // lease expiry rides the tick: each expired lease becomes a
                 // LeaseExpired/LeaseReturn exchange with the holder
                 for (d, n) in self.rps.lease_expirations(now) {
@@ -636,6 +659,11 @@ pub struct ServeReport {
     pub grant_latency_mean_s: f64,
     /// p99 of the same distribution.
     pub grant_latency_p99_s: f64,
+    /// Forecast mean absolute error, nodes (forecasting policies only).
+    pub forecast_mae: Option<f64>,
+    /// Share of targeted service claims served wholly from the reserved
+    /// free pool (forecasting policies only).
+    pub pregrant_hit_rate: Option<f64>,
     /// Per-department breakdown, in department-id order (leavers report
     /// their final state).
     pub per_dept: Vec<DeptSummary>,
@@ -1073,6 +1101,8 @@ pub fn serve_roster_with_ingest(
         acked: crate::util::num::u64_from_usize(grant_latencies.len()),
         grant_latency_mean_s: crate::util::stats::mean(&grant_latencies),
         grant_latency_p99_s: crate::util::stats::percentile(&grant_latencies, 0.99),
+        forecast_mae: rps_stats.forecast_mae.get(),
+        pregrant_hit_rate: rps_stats.pregrant_hit_rate.get(),
         per_dept,
     })
 }
@@ -1126,7 +1156,12 @@ pub fn serve_config_with_ingest(
                     boot_instances: traces.service_boot_instances(i).unwrap_or(1),
                 },
             };
-            ServeDept { spec: spec.clone(), workload, leave_at: None }
+            ServeDept {
+                spec: spec.clone(),
+                workload,
+                // the roster's leave_at axis drives serve-path departures
+                leave_at: (spec.leave_at > 0).then_some(spec.leave_at),
+            }
         })
         .collect();
     let policy = cfg
@@ -1228,6 +1263,53 @@ mod tests {
         let held: u64 = a.per_dept.iter().map(|d| d.holding_end).sum();
         assert_eq!(a.free_end + held + a.down_end, a.cluster_nodes, "{a:?}");
         assert!(a.down_end <= a.cluster_nodes);
+    }
+
+    #[test]
+    fn predictive_policy_reports_forecast_stats_on_the_serve_path() {
+        let mut cfg = ExperimentConfig::dynamic(64);
+        cfg.ws_sample_period = 20;
+        let mk = |policy: &PolicyChoice| {
+            // a toggling load keeps the service department claiming and
+            // releasing, so the tracker sees a non-constant demand series
+            let rates: Vec<f64> = (0..200)
+                .map(|i| if (i / 10) % 2 == 0 { 200.0 } else { 1600.0 })
+                .collect();
+            let depts = vec![
+                ServeDept::batch(
+                    "st",
+                    32,
+                    vec![Job { id: 1, submit: 0, size: 8, runtime: 60, requested: 600 }],
+                ),
+                ServeDept::service(
+                    "ws",
+                    32,
+                    RateSeries { sample_period: 20, rates },
+                    reactive_scaler(64),
+                ),
+            ];
+            serve_roster(&cfg, policy, depts, 4000, 0).unwrap()
+        };
+        let predictive = mk(&PolicyChoice::Base(PolicySpec::Predictive(
+            crate::provision::PredictiveSpec {
+                window: 8,
+                horizon_secs: 120,
+                headroom_tenths: 10,
+            },
+        )));
+        let mae = predictive.forecast_mae.expect("tracker sampled every RPS tick");
+        assert!(mae.is_finite() && mae >= 0.0, "mae={mae}");
+        assert!(
+            predictive.pregrant_hit_rate.is_some(),
+            "toggling demand must produce targeted claims: {predictive:?}"
+        );
+        assert_eq!(predictive.completed, 1, "{predictive:?}");
+        let held: u64 = predictive.per_dept.iter().map(|d| d.holding_end).sum();
+        assert_eq!(predictive.free_end + held, predictive.cluster_nodes);
+        // non-forecasting policies stay silent on the forecast columns
+        let coop = mk(&PolicyChoice::Base(PolicySpec::Cooperative));
+        assert_eq!(coop.forecast_mae, None);
+        assert_eq!(coop.pregrant_hit_rate, None);
     }
 
     #[test]

@@ -196,6 +196,7 @@ impl MatrixAxes {
         for secs in [600, 3600, 14_400] {
             policies.push(PolicyAxis::Base(PolicySpec::Lease { secs }));
         }
+        policies.push(PolicyAxis::Base(PolicySpec::Predictive(base.predictive)));
         policies.push(PolicyAxis::Mixed { lease_secs: 3600 });
         Self {
             ks,
@@ -224,6 +225,7 @@ impl MatrixAxes {
                 PolicyAxis::Base(PolicySpec::ProportionalShare),
                 PolicyAxis::Base(PolicySpec::Tiered),
                 PolicyAxis::Base(PolicySpec::Lease { secs: 3600 }),
+                PolicyAxis::Base(PolicySpec::Predictive(base.predictive)),
                 PolicyAxis::Mixed { lease_secs: 3600 },
             ],
             loads: vec![base.hpc.target_load],
@@ -264,6 +266,12 @@ pub struct CellRun {
     /// Mean seconds from a crash until every service department is whole
     /// again (0 when no crashes fired).
     pub mean_recovery_s: f64,
+    /// Forecast mean absolute error, nodes (forecasting policies only —
+    /// None on every other cell).
+    pub forecast_mae: Option<f64>,
+    /// Share of targeted service claims served wholly from the reserved
+    /// free pool (forecasting policies only).
+    pub pregrant_hit_rate: Option<f64>,
 }
 
 impl CellRun {
@@ -287,6 +295,8 @@ impl CellRun {
             crash_kills: r.crash_kills,
             availability: r.availability,
             mean_recovery_s: r.mean_recovery_s,
+            forecast_mae: r.forecast_mae,
+            pregrant_hit_rate: r.pregrant_hit_rate,
         }
     }
 }
@@ -308,6 +318,13 @@ pub struct MatrixCell {
     pub joiners: usize,
     /// The virtual second the joiners arrive (0 when `joiners` = 0).
     pub join_at: u64,
+    /// Trailing roster members that leave mid-run (`[[scenario]] leavers`,
+    /// the departure mirror of the join axis); 0 = every department stays
+    /// to the horizon. Leaver cells legitimately diverge from the
+    /// fig7/fig8 anchor and [`verify_anchor`] skips them.
+    pub leavers: usize,
+    /// The virtual second the leavers depart (0 when `leavers` = 0).
+    pub leave_at: u64,
     /// Σ department quotas — the K-dedicated-clusters cost.
     pub dedicated_nodes: u64,
     /// Σ of the K departments' completions when each runs on its *own*
@@ -371,6 +388,10 @@ struct CellPlan {
     /// booting (the `[[scenario]]` join axis); the grid always uses 0.
     joiners: usize,
     join_at: u64,
+    /// Trailing members of the K-prefix that leave at `leave_at` (the
+    /// `[[scenario]]` departure axis); the grid always uses 0.
+    leavers: usize,
+    leave_at: u64,
     /// The cell's effective fault regime (base `[faults]` with any
     /// per-scenario overrides folded in).
     faults: FaultConfig,
@@ -414,16 +435,30 @@ fn run_cell(rosters: &[Roster], c: &CellPlan) -> Result<MatrixCell> {
     if c.joiners >= c.k {
         bail!("cell '{}' would have no boot departments", c.name);
     }
+    if c.leavers >= c.k {
+        bail!("cell '{}' would have every department leave", c.name);
+    }
+    if c.leavers > 0 && c.leave_at == 0 {
+        bail!("cell '{}' has leavers but no leave_at", c.name);
+    }
+    if c.leavers > 0 && c.joiners > 0 && c.leave_at <= c.join_at {
+        bail!("cell '{}': leave_at must be after join_at", c.name);
+    }
     // The join axis mutates a *local* copy of the K-prefix: the trailing
     // `joiners` members join at `join_at` instead of booting, leaving the
     // shared roster prefix-stable for sibling cells. Traces are looked up
     // by original spec index, so a joiner replays exactly the demand it
     // would have had from boot, and `run_dedicated` ignores `join_at`, so
     // the completion gate below is the same dedicated sum with or without
-    // joiners.
+    // joiners. The departure axis mutates the same local copy: the
+    // trailing `leavers` members (which may coincide with the joiners)
+    // depart at `leave_at`.
     let mut specs: Vec<DeptSpec> = roster.specs[..c.k].to_vec();
     for spec in specs.iter_mut().rev().take(c.joiners) {
         spec.join_at = c.join_at;
+    }
+    for spec in specs.iter_mut().rev().take(c.leavers) {
+        spec.leave_at = c.leave_at;
     }
     let specs = &specs[..];
     let dedicated: u64 = specs.iter().map(|s| s.quota).sum();
@@ -582,6 +617,8 @@ fn run_cell(rosters: &[Roster], c: &CellPlan) -> Result<MatrixCell> {
         load: roster.load,
         joiners: c.joiners,
         join_at: c.join_at,
+        leavers: c.leavers,
+        leave_at: c.leave_at,
         dedicated_nodes: dedicated,
         baseline_completed,
         fault_overridden: c.fault_overridden,
@@ -636,6 +673,8 @@ pub fn run_matrix(base: &ExperimentConfig, axes: &MatrixAxes) -> Result<Vec<Matr
                         scan: axes.scan.clone(),
                         joiners: 0,
                         join_at: 0,
+                        leavers: 0,
+                        leave_at: 0,
                         faults: base.faults.clone(),
                         fault_overridden: false,
                     });
@@ -683,8 +722,14 @@ pub fn run_scenarios(
     let mut roster_by_key: BTreeMap<RosterKey, usize> = BTreeMap::new();
     let mut cells = Vec::new();
     for s in scenarios {
-        let policy = PolicyAxis::parse(&s.policy_kind, s.lease_secs)
+        let mut policy = PolicyAxis::parse(&s.policy_kind, s.lease_secs)
             .with_context(|| format!("scenario '{}'", s.name))?;
+        // the parser only knows the kind; the base config's `[policy]`
+        // forecast knobs (window / horizon / headroom) parameterize every
+        // predictive scenario cell
+        if let PolicyAxis::Base(PolicySpec::Predictive(spec)) = &mut policy {
+            *spec = base.predictive;
+        }
         let key = key_of(s);
         let roster = match roster_by_key.get(&key) {
             Some(&ri) => ri,
@@ -709,6 +754,8 @@ pub fn run_scenarios(
             scan,
             joiners: s.joiners,
             join_at: s.join_at,
+            leavers: s.leavers,
+            leave_at: s.leave_at,
             faults: s.fault_config(&base.faults),
             fault_overridden: s.mtbf.is_some()
                 || s.mttr.is_some()
@@ -727,9 +774,11 @@ pub fn run_scenarios(
 /// `[trace]` SWF archive or ρ > 0, from the base config *or* a
 /// per-scenario override — `MatrixCell::trace_driven` records which),
 /// `Err` on any numeric divergence. Cells whose fault regime was
-/// overridden by a `[[scenario]]`, and cells with mid-run joiners
+/// overridden by a `[[scenario]]`, cells with mid-run joiners
 /// (`joiners > 0` defers a department the fig7/fig8 pair booted at
-/// t = 0), are skipped the same way; the *base*
+/// t = 0), and cells with mid-run leavers (`leavers > 0` removes a
+/// department the pair kept to the horizon) are skipped the same way;
+/// the *base*
 /// `[faults]` config needs no skip — the deterministic injector gives
 /// the matrix probe and the sweep's DC run the same fault schedule, so
 /// the anchor holds bit for bit even on a faulty base config.
@@ -742,6 +791,7 @@ pub fn verify_anchor(base: &ExperimentConfig, cells: &[MatrixCell]) -> Result<bo
             && c.mix == RosterMix::Alternating
             && c.policy == "cooperative"
             && c.joiners == 0
+            && c.leavers == 0
             && !c.trace_driven
             && !c.fault_overridden
             && c.load.to_bits() == base.hpc.target_load.to_bits()
@@ -809,6 +859,11 @@ fn run_json(r: &CellRun) -> Json {
         ("crash_kills", Json::num(r.crash_kills as f64)),
         ("availability", Json::num(r.availability)),
         ("mean_recovery_s", Json::num(r.mean_recovery_s)),
+        ("forecast_mae", r.forecast_mae.map(Json::num).unwrap_or(Json::Null)),
+        (
+            "pregrant_hit_rate",
+            r.pregrant_hit_rate.map(Json::num).unwrap_or(Json::Null),
+        ),
     ])
 }
 
@@ -822,6 +877,8 @@ fn cell_json(c: &MatrixCell) -> Json {
         ("load", Json::num(c.load)),
         ("joiners", Json::num(c.joiners as f64)),
         ("join_at", Json::num(c.join_at as f64)),
+        ("leavers", Json::num(c.leavers as f64)),
+        ("leave_at", Json::num(c.leave_at as f64)),
         ("dedicated_nodes", Json::num(c.dedicated_nodes as f64)),
         ("baseline_completed", Json::num(c.baseline_completed as f64)),
         ("scan", Json::str(&c.scan)),
@@ -837,16 +894,18 @@ fn cell_json(c: &MatrixCell) -> Json {
     ])
 }
 
-/// The machine-readable table (`out/matrix.json`): schema version 4
-/// (version 3 + the per-cell join axis `joiners` / `join_at`; version 3
-/// = version 2 + the per-cell dedicated-completion gate
+/// The machine-readable table (`out/matrix.json`): schema version 5
+/// (version 4 + the per-cell departure axis `leavers` / `leave_at` and
+/// the per-run forecast columns `forecast_mae` / `pregrant_hit_rate`;
+/// version 4 = version 3 + the per-cell join axis `joiners` / `join_at`;
+/// version 3 = version 2 + the per-cell dedicated-completion gate
 /// `baseline_completed` and `fault_overridden` flag, and per-run fault
 /// columns `crashes` / `crash_kills` / `availability` /
 /// `mean_recovery_s`).
 pub fn matrix_json(cells: &[MatrixCell], quick: bool) -> Json {
     Json::obj(vec![
         ("suite", Json::str("matrix")),
-        ("schema_version", Json::num(4.0)),
+        ("schema_version", Json::num(5.0)),
         ("quick", Json::Bool(quick)),
         ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
     ])
@@ -867,15 +926,18 @@ fn csv_field(s: &str) -> String {
 /// [`crate::trace::csv::Table`].
 pub fn matrix_csv(cells: &[MatrixCell]) -> String {
     let mut out = String::from(
-        "name,k,mix,policy,lease_secs,load,joiners,join_at,dedicated_nodes,baseline_completed,\
+        "name,k,mix,policy,lease_secs,load,joiners,join_at,leavers,leave_at,\
+         dedicated_nodes,baseline_completed,\
          required_nodes,required_frac,\
          completed,killed,in_flight,shortage_node_secs,slo_violating_depts,force_returns,\
-         avg_turnaround_s,events,crashes,crash_kills,availability,mean_recovery_s\n",
+         avg_turnaround_s,events,crashes,crash_kills,availability,mean_recovery_s,\
+         forecast_mae,pregrant_hit_rate\n",
     );
     for c in cells {
         let d = c.decisive();
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.1},{},{},{},{:.6},{:.1}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.1},{},{},{},{:.6},\
+             {:.1},{},{}\n",
             csv_field(&c.name),
             c.k,
             c.mix.name(),
@@ -884,6 +946,8 @@ pub fn matrix_csv(cells: &[MatrixCell]) -> String {
             c.load,
             c.joiners,
             c.join_at,
+            c.leavers,
+            c.leave_at,
             c.dedicated_nodes,
             c.baseline_completed,
             c.required_nodes.map(|n| n.to_string()).unwrap_or_default(),
@@ -900,9 +964,68 @@ pub fn matrix_csv(cells: &[MatrixCell]) -> String {
             d.crash_kills,
             d.availability,
             d.mean_recovery_s,
+            d.forecast_mae.map(|m| format!("{m:.4}")).unwrap_or_default(),
+            d.pregrant_hit_rate.map(|h| format!("{h:.4}")).unwrap_or_default(),
         ));
     }
     out
+}
+
+/// The forecast headline (`phoenixd matrix` prints it after the main
+/// table): for every roster that ran under both the predictive and the
+/// cooperative policy, put their decisive runs side by side — required
+/// cluster size, SLO shortage, and the predictive cell's forecast quality
+/// (MAE in nodes, pre-grant hit rate). Answers the subsystem's question:
+/// does prediction beat reactive cooperative provisioning on required
+/// cluster size and SLO violations at equal availability? Returns `None`
+/// when no predictive cell has a cooperative sibling on the same roster.
+pub fn predictive_vs_cooperative_text(cells: &[MatrixCell]) -> Option<String> {
+    let pairs: Vec<(&MatrixCell, &MatrixCell)> = cells
+        .iter()
+        .filter(|c| c.policy == "predictive")
+        .filter_map(|p| {
+            cells
+                .iter()
+                .find(|c| {
+                    c.policy == "cooperative"
+                        && c.k == p.k
+                        && c.mix == p.mix
+                        && c.load.to_bits() == p.load.to_bits()
+                        && c.joiners == p.joiners
+                        && c.leavers == p.leavers
+                        && c.fault_overridden == p.fault_overridden
+                })
+                .map(|coop| (p, coop))
+        })
+        .collect();
+    if pairs.is_empty() {
+        return None;
+    }
+    let req = |c: &MatrixCell| {
+        c.required_nodes.map(|n| n.to_string()).unwrap_or_else(|| "none".to_string())
+    };
+    let mut out = String::from("predictive vs cooperative (same roster, same load):\n");
+    out.push_str(&format!(
+        "{:<24} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7}\n",
+        "roster", "coop-req", "pred-req", "coop-slo", "pred-slo", "mae", "hit%"
+    ));
+    for (p, coop) in pairs {
+        let pd = p.decisive();
+        let cd = coop.decisive();
+        out.push_str(&format!(
+            "{:<24} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7}\n",
+            format!("k{}-{}", p.k, p.mix.name()),
+            req(coop),
+            req(p),
+            cd.shortage_node_secs,
+            pd.shortage_node_secs,
+            pd.forecast_mae.map(|m| format!("{m:.2}")).unwrap_or_else(|| "-".to_string()),
+            pd.pregrant_hit_rate
+                .map(|h| format!("{:.1}", h * 100.0))
+                .unwrap_or_else(|| "-".to_string()),
+        ));
+    }
+    Some(out)
 }
 
 /// Aligned text table for the CLI.
@@ -1147,6 +1270,8 @@ mod tests {
                 efficiency: None,
                 joiners: 0,
                 join_at: 0,
+                leavers: 0,
+                leave_at: 0,
             },
             ScenarioSpec {
                 name: "portal-farm".into(),
@@ -1164,6 +1289,8 @@ mod tests {
                 efficiency: None,
                 joiners: 0,
                 join_at: 0,
+                leavers: 0,
+                leave_at: 0,
             },
         ];
         let cells = run_scenarios(&cfg, &scenarios).unwrap();
@@ -1214,6 +1341,8 @@ mod tests {
             efficiency: None,
             joiners: 0,
             join_at: 0,
+            leavers: 0,
+            leave_at: 0,
         }];
         let cells = run_scenarios(&cfg, &scenarios).unwrap();
         // the fixture holds 22 usable jobs — the synth trace holds 150
@@ -1305,6 +1434,8 @@ mod tests {
             efficiency: None,
             joiners: 0,
             join_at: 0,
+            leavers: 0,
+            leave_at: 0,
         };
         let scenarios =
             vec![scen("faulty", "cooperative", true), scen("healthy", "static", false)];
@@ -1359,6 +1490,8 @@ mod tests {
             efficiency: None,
             joiners,
             join_at,
+            leavers: 0,
+            leave_at: 0,
         };
         let cells = run_scenarios(
             &cfg,
@@ -1400,6 +1533,125 @@ mod tests {
         assert!(run_scenarios(&cfg, &[scen("no-boot", 3, 600)]).is_err());
     }
 
+    /// The `[[scenario]]` departure axis reaches the cells: leaver
+    /// scenarios remove the trailing departments mid-run (the tables
+    /// move), the axes land in the cell record, the anchor check skips
+    /// leaver cells, and degenerate leaver counts fail loudly.
+    #[test]
+    fn scenario_leave_axis_reaches_the_cells() {
+        let cfg = small_cfg();
+        let scen = |name: &str, leavers: usize, leave_at: u64| ScenarioSpec {
+            name: name.into(),
+            k: 3,
+            mix: RosterMix::ServiceHeavy,
+            policy_kind: "cooperative".into(),
+            lease_secs: 3600,
+            load: None,
+            frac: Some(1.0),
+            trace: None,
+            correlation: None,
+            mtbf: None,
+            mttr: None,
+            fault_seed: None,
+            efficiency: None,
+            joiners: 0,
+            join_at: 0,
+            leavers,
+            leave_at,
+        };
+        let cells = run_scenarios(
+            &cfg,
+            &[scen("early-exit", 1, 6 * 3600), scen("full-stay", 0, 0)],
+        )
+        .unwrap();
+        assert_eq!((cells[0].leavers, cells[0].leave_at), (1, 6 * 3600));
+        assert_eq!((cells[1].leavers, cells[1].leave_at), (0, 0));
+        // the departure never moves the dedicated cost or the gate's
+        // construction (run_dedicated keeps everyone to the horizon)
+        assert_eq!(cells[0].dedicated_nodes, cells[1].dedicated_nodes);
+        assert_eq!(cells[0].baseline_completed, cells[1].baseline_completed);
+        // removing a department mid-run must move the full-cost run
+        assert_ne!(
+            cells[0].runs[0].events, cells[1].runs[0].events,
+            "departure axis did not reach the simulation"
+        );
+        // the anchor check skips leaver cells: an anchor-shaped K=2 leaver
+        // cell at exactly base.total_nodes must be skipped, not compared
+        let mut k2 = scen("early-k2", 1, 6 * 3600);
+        k2.k = 2;
+        k2.mix = RosterMix::Alternating;
+        let k2_cells = run_scenarios(&cfg, &[k2]).unwrap();
+        let mut anchor_base = cfg.clone();
+        anchor_base.total_nodes = k2_cells[0].dedicated_nodes;
+        assert!(
+            !verify_anchor(&anchor_base, &k2_cells).unwrap(),
+            "anchor must skip leaver cells"
+        );
+        // degenerate departures fail loudly
+        assert!(run_scenarios(&cfg, &[scen("all-leave", 3, 600)]).is_err());
+        assert!(run_scenarios(&cfg, &[scen("no-when", 1, 0)]).is_err());
+    }
+
+    /// Predictive cells carry the forecast columns through the tables,
+    /// the base config's forecast knobs parameterize scenario cells, and
+    /// the headline comparison renders when a cooperative sibling exists.
+    #[test]
+    fn predictive_cells_carry_forecast_columns_and_the_headline() {
+        let mut cfg = small_cfg();
+        cfg.predictive = crate::provision::PredictiveSpec {
+            window: 8,
+            horizon_secs: 600,
+            headroom_tenths: 10,
+        };
+        let scen = |name: &str, kind: &str| ScenarioSpec {
+            name: name.into(),
+            k: 2,
+            mix: RosterMix::Alternating,
+            policy_kind: kind.into(),
+            lease_secs: 3600,
+            load: None,
+            frac: Some(1.0),
+            trace: None,
+            correlation: None,
+            mtbf: None,
+            mttr: None,
+            fault_seed: None,
+            efficiency: None,
+            joiners: 0,
+            join_at: 0,
+            leavers: 0,
+            leave_at: 0,
+        };
+        let cells = run_scenarios(
+            &cfg,
+            &[scen("pred-pair", "predictive"), scen("coop-pair", "cooperative")],
+        )
+        .unwrap();
+        assert_eq!(cells[0].policy, "predictive");
+        let pred = cells[0].decisive();
+        let mae = pred.forecast_mae.expect("predictive cells report MAE");
+        assert!(mae.is_finite() && mae >= 0.0, "mae={mae}");
+        assert!(pred.pregrant_hit_rate.is_some(), "{:?}", cells[0]);
+        // non-forecasting cells keep the columns null
+        let coop = cells[1].decisive();
+        assert_eq!(coop.forecast_mae, None);
+        assert_eq!(coop.pregrant_hit_rate, None);
+        // the headline table pairs the two cells
+        let headline = predictive_vs_cooperative_text(&cells)
+            .expect("a cooperative sibling exists");
+        assert!(headline.contains("pred-req"), "{headline}");
+        assert!(headline.contains("k2-alternating"), "{headline}");
+        // no predictive cell → no table
+        assert!(predictive_vs_cooperative_text(&cells[1..]).is_none());
+        // the JSON carries numbers for predictive runs, nulls otherwise
+        let doc = Json::parse(&matrix_json(&cells, true).to_string()).unwrap();
+        let cells_j = doc.get("cells").unwrap().as_arr().unwrap();
+        let pred_runs = cells_j[0].get("runs").unwrap().as_arr().unwrap();
+        assert!(pred_runs.iter().all(|r| r.get("forecast_mae").unwrap().as_f64().is_some()));
+        let coop_runs = cells_j[1].get("runs").unwrap().as_arr().unwrap();
+        assert!(coop_runs.iter().all(|r| r.get("forecast_mae").unwrap().as_f64().is_none()));
+    }
+
     #[test]
     fn json_table_has_the_ci_schema() {
         let cfg = small_cfg();
@@ -1409,7 +1661,7 @@ mod tests {
         let cells = run_matrix(&cfg, &axes).unwrap();
         let doc = Json::parse(&matrix_json(&cells, true).to_string()).unwrap();
         assert_eq!(doc.get("suite").unwrap().as_str(), Some("matrix"));
-        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(4));
+        assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(5));
         assert_eq!(doc.get("quick").unwrap().as_bool(), Some(true));
         let cells_j = doc.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells_j.len(), cells.len());
@@ -1429,6 +1681,8 @@ mod tests {
                 "load",
                 "joiners",
                 "join_at",
+                "leavers",
+                "leave_at",
                 "dedicated_nodes",
                 "baseline_completed",
                 "scan",
@@ -1457,6 +1711,8 @@ mod tests {
                     "crash_kills",
                     "availability",
                     "mean_recovery_s",
+                    "forecast_mae",
+                    "pregrant_hit_rate",
                 ] {
                     assert!(r.get(key).is_some(), "run missing {key}");
                 }
@@ -1487,8 +1743,17 @@ mod tests {
         // an off-ladder kmax is still simulated, not silently dropped
         assert_eq!(MatrixAxes::full(&base, 10).ks, vec![2, 3, 4, 6, 8, 10]);
         assert_eq!(MatrixAxes::full(&base, 2).ks, vec![2]);
-        assert!(full.policies.len() >= 8, "base + lease grid + mixed");
+        assert!(full.policies.len() >= 9, "base + lease grid + predictive + mixed");
         assert!(full.planned_cells() > 0);
+        // both grids sweep the predictive policy, carrying the base
+        // config's forecast knobs
+        let has_pred = |axes: &MatrixAxes| {
+            axes.policies
+                .iter()
+                .any(|p| matches!(p, PolicyAxis::Base(PolicySpec::Predictive(s)) if *s == base.predictive))
+        };
+        assert!(has_pred(&full), "full grid misses the predictive axis");
+        assert!(has_pred(&MatrixAxes::quick(&base, 4)), "quick grid misses the predictive axis");
         // both grids search by bisection (the oracle is a test flag only)
         assert_eq!(full.scan, SizeScan::Bisect);
         let quick = MatrixAxes::quick(&base, 16);

@@ -107,6 +107,8 @@ mod tests {
             crash_kills: 0,
             availability: 1.0,
             mean_recovery_s: 0.0,
+            forecast_mae: None,
+            pregrant_hit_rate: None,
             events: 9999,
             registry: Registry::new(),
             per_dept: Vec::new(),

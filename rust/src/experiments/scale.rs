@@ -264,15 +264,23 @@ pub(crate) fn run_roster(
     let mut cfg = base.clone();
     cfg.total_nodes = total_nodes;
     let label = format!("K{}-{}", specs.len(), policy.name());
-    ConsolidationSim::with_roster(
+    let mut sim = ConsolidationSim::with_roster(
         cfg,
         label,
         total_nodes,
         inputs,
         joins,
         policy.build(&profiles),
-    )
-    .run()
+    );
+    // the departure axis: each leaver's slot in the run order carries its
+    // configured leave_at into the sim (validate() guarantees it exceeds
+    // the department's join_at)
+    for (slot, &i) in order.iter().enumerate() {
+        if specs[i].leave_at > 0 {
+            sim.plan_leave(DeptId(slot as u16), specs[i].leave_at);
+        }
+    }
+    sim.run()
 }
 
 /// Run the consolidated configuration under a base policy (the scale
@@ -571,6 +579,46 @@ mod tests {
         .unwrap();
         assert_eq!(boot_res.submitted, res.submitted);
         assert!(boot_res.per_dept[2].completed > 0);
+    }
+
+    /// The departure axis mirror of the join test: a roster whose third
+    /// department leaves mid-run threads `leave_at` into the sim, frees
+    /// its capacity, and still conserves nodes at the horizon.
+    #[test]
+    fn roster_with_leave_at_runs_in_virtual_time() {
+        let cfg = fast_cfg();
+        let mut specs = default_departments(3, &cfg);
+        specs[2].leave_at = 20_000;
+        let traces = build_traces(&specs, &cfg).unwrap();
+        let res = run_roster(
+            &cfg,
+            &specs,
+            &traces,
+            200,
+            &PolicyChoice::Base(PolicySpec::Cooperative),
+        )
+        .unwrap();
+        assert_eq!(res.per_dept.len(), 3);
+        // the leaver is a batch department: jobs still running at t=20000
+        // are killed and its backlog is dropped, so it completes less than
+        // the same roster without the departure
+        let mut stay_specs = default_departments(3, &cfg);
+        stay_specs[2].leave_at = 0;
+        let stay = run_roster(
+            &cfg,
+            &stay_specs,
+            &traces,
+            200,
+            &PolicyChoice::Base(PolicySpec::Cooperative),
+        )
+        .unwrap();
+        assert!(
+            res.per_dept[2].completed < stay.per_dept[2].completed,
+            "departure at t=20000 must cut the leaver's completions: {} vs {}",
+            res.per_dept[2].completed,
+            stay.per_dept[2].completed
+        );
+        assert_eq!(res.per_dept[2].holding_end, 0, "a leaver holds nothing: {res:?}");
     }
 
     #[test]

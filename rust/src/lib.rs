@@ -8,7 +8,8 @@
 //!   generalized from two departments to N: the common service framework,
 //!   the Resource Provision Service with pluggable
 //!   [`provision::ProvisionPolicy`] implementations (cooperative, static,
-//!   proportional, lease-based, tiered, plus the per-tier
+//!   proportional, lease-based, tiered, the forecast-driven
+//!   [`provision::Predictive`] reservation policy, plus the per-tier
 //!   [`provision::MixedPolicy`] combinator), per-department batch CMSes
 //!   (scheduling) and service CMSes (autoscaling + load balancing), plus
 //!   every substrate they need (event simulator, N-department cluster
@@ -27,6 +28,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod faults;
+pub mod forecast;
 pub mod metrics;
 pub mod net;
 pub mod provision;

@@ -86,6 +86,22 @@ fn base_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(dir) = args.get("flash-crowd") {
         cfg.faults.flash_crowd = Some(dir.to_string());
     }
+    // forecast knobs for the predictive provisioning policy: CLI flags
+    // overlay the [policy] config section (window/horizon/headroom), then
+    // any parsed predictive policy choice is re-patched so the knobs
+    // actually reach it
+    let u32_flag = |name: &str, cur: u32| -> Result<u32> {
+        u32::try_from(args.get_u64(name, cur as u64)?)
+            .map_err(|_| anyhow::anyhow!("--{name} out of range"))
+    };
+    cfg.predictive.window = u32_flag("forecast-window", cfg.predictive.window)?;
+    cfg.predictive.horizon_secs = u32_flag("forecast-horizon", cfg.predictive.horizon_secs)?;
+    cfg.predictive.headroom_tenths =
+        u32_flag("headroom-tenths", cfg.predictive.headroom_tenths)?;
+    let spec = cfg.predictive;
+    if let Some(choice) = &mut cfg.policy {
+        choice.patch_predictive(spec);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -155,7 +171,11 @@ fault flags (overlay the [faults] config section; mtbf 0 = injection off):\n  \
 --mtbf SECS --mttr SECS --fault-seed N (deterministic crash/recover schedule)\n  \
 --efficiency F (noisy-neighbor batch slowdown on shared clusters, (0,1])\n  \
 --flash-crowd DIR (WorldCup wc_day* replay as the shared demand spike;\n  \
-needs --correlation > 0 to reach the departments)";
+needs --correlation > 0 to reach the departments)\n\
+forecast flags (the predictive provisioning policy; overlay [policy]):\n  \
+--forecast-window N (rolling samples per forecast, >= 2)\n  \
+--forecast-horizon SECS (how far ahead to pre-grant)\n  \
+--headroom-tenths N (k·sigma safety margin, tenths: 20 = 2.0 sigma)";
 
 fn cmd_fig5(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
@@ -304,7 +324,12 @@ fn cmd_scale(args: &Args) -> Result<()> {
     if lease_secs == 0 {
         bail!("--lease-secs must be positive");
     }
-    let policy = PolicySpec::parse(args.get_or("policy", "cooperative"), lease_secs)?;
+    let mut policy = PolicySpec::parse(args.get_or("policy", "cooperative"), lease_secs)?;
+    // the parser only knows the kind; the config/CLI forecast knobs
+    // parameterize a predictive sweep
+    if let PolicySpec::Predictive(spec) = &mut policy {
+        *spec = cfg.predictive;
+    }
     let ks: Vec<usize> = (2..=kmax).collect();
     println!(
         "economies of scale: K consolidated departments ({} policy, cluster = \
@@ -363,6 +388,9 @@ fn cmd_matrix(args: &Args) -> Result<()> {
         matrix::run_scenarios(&cfg, &cfg.scenarios)?
     };
     print!("{}", matrix::matrix_text(&cells));
+    if let Some(headline) = matrix::predictive_vs_cooperative_text(&cells) {
+        print!("\n{headline}");
+    }
     std::fs::create_dir_all("out")?;
     let json = matrix::matrix_json(&cells, quick);
     std::fs::write("out/matrix.json", format!("{json}\n"))?;
@@ -589,6 +617,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  peak svc demand  : {}", report.ws_peak_demand);
     println!("  svc shortage     : {} node·s", report.ws_shortage_node_secs);
     println!("  force returns    : {} ({} nodes)", report.force_returns, report.forced_nodes);
+    if let Some(mae) = report.forecast_mae {
+        let hits = report
+            .pregrant_hit_rate
+            .map(|h| format!("{:.1}%", h * 100.0))
+            .unwrap_or_else(|| "-".to_string());
+        println!("  forecast mae     : {mae:.2} nodes (pre-grant hit rate {hits})");
+    }
     if frontend.is_some() {
         println!("  ingested / shed  : {} / {}", report.ingested, report.shed);
         println!("  acked            : {} (bad requests {})", report.acked, report.ingest_bad);

@@ -73,6 +73,26 @@ impl PolicyChoice {
         }
     }
 
+    /// Overwrite every predictive spec this choice carries with the
+    /// config-level forecast knobs (`PolicySpec::parse` only ever yields
+    /// the default spec — the knobs live in `ExperimentConfig`).
+    pub fn patch_predictive(&mut self, spec: crate::provision::PredictiveSpec) {
+        let patch = |s: &mut PolicySpec| {
+            if let PolicySpec::Predictive(p) = s {
+                *p = spec;
+            }
+        };
+        match self {
+            PolicyChoice::Base(s) => patch(s),
+            PolicyChoice::Mixed { default, rules } => {
+                patch(default);
+                for rule in rules {
+                    patch(&mut rule.spec);
+                }
+            }
+        }
+    }
+
     /// Every lease term this choice carries (validation helper).
     pub fn lease_terms(&self) -> Vec<u64> {
         let term = |spec: &PolicySpec| match spec {
@@ -247,6 +267,24 @@ impl ProvisionPolicy for MixedPolicy {
             sub.on_recover(n, now);
         }
     }
+
+    fn observe(&mut self, dept: DeptId, util: f64, demand: u64, now: SimTime) {
+        // demand samples reach the owning sub-policy only: a predictive
+        // tier must not train on (or reserve against) departments whose
+        // requests another contract routes
+        let sub = self.route(dept);
+        self.subs[sub].observe(dept, util, demand, now);
+    }
+
+    fn forecast_stats(&self) -> Option<crate::forecast::ForecastStats> {
+        let mut merged: Option<crate::forecast::ForecastStats> = None;
+        for sub in &self.subs {
+            if let Some(s) = sub.forecast_stats() {
+                merged.get_or_insert_with(Default::default).merge(&s);
+            }
+        }
+        merged
+    }
 }
 
 #[cfg(test)]
@@ -371,6 +409,26 @@ mod tests {
         p.on_crash(None, 1, 60);
         p.on_recover(1, 70);
         assert_eq!(p.next_expiry(), None);
+    }
+
+    #[test]
+    fn predictive_tier_observes_and_reports_through_the_mix() {
+        use crate::provision::PredictiveSpec;
+        let spec = PredictiveSpec { window: 4, horizon_secs: 120, headroom_tenths: 0 };
+        let mut p = MixedPolicy::new(
+            three_tier_depts(),
+            vec![TierRule { tier: 0, spec: PolicySpec::Predictive(spec) }],
+            PolicySpec::Cooperative,
+        );
+        assert!(p.forecast_stats().is_some(), "predictive sub must surface stats");
+        for i in 0..4u64 {
+            p.observe(DeptId(0), 0.7, 10 + i, i * 60);
+        }
+        assert_eq!(p.forecast_stats().unwrap().samples, 4);
+        // samples for a cooperative-routed department never reach (or
+        // train) the predictive tier
+        p.observe(DeptId(1), 0.5, 3, 300);
+        assert_eq!(p.forecast_stats().unwrap().samples, 4);
     }
 
     #[test]

@@ -8,8 +8,10 @@
 
 pub mod mixed;
 pub mod policy;
+pub mod predictive;
 
 use crate::cluster::{DeptId, Ledger};
+use crate::forecast::ForecastStats;
 use crate::sim::SimTime;
 
 pub use self::mixed::{MixedPolicy, PolicyChoice, TierRule};
@@ -17,6 +19,7 @@ pub use self::policy::{
     two_dept_profiles, Cooperative, DeptProfile, LeaseBased, PolicySpec, ProportionalShare,
     ProvisionDecision, ProvisionPolicy, StaticPartition, TieredCooperative,
 };
+pub use self::predictive::{Predictive, PredictiveSpec};
 
 /// The RPS: ledger + policy.
 #[derive(Debug)]
@@ -136,6 +139,17 @@ impl Rps {
     /// Earliest pending lease expiry, if the policy leases at all.
     pub fn next_expiry(&self) -> Option<SimTime> {
         self.policy.next_expiry()
+    }
+
+    /// Feed one per-department demand sample to the policy (no-op for
+    /// reactive policies; the Predictive policy trains its tracker here).
+    pub fn observe(&mut self, dept: DeptId, util: f64, demand: u64, now: SimTime) {
+        self.policy.observe(dept, util, demand, now);
+    }
+
+    /// Forecast-quality counters, when the policy forecasts at all.
+    pub fn forecast_stats(&self) -> Option<ForecastStats> {
+        self.policy.forecast_stats()
     }
 
     /// A department joins the shared cluster at runtime (dynamic

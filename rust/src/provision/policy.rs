@@ -21,8 +21,12 @@
 //!   force-reclaims cascade down the tier order (a requester may only
 //!   reclaim from strictly lower-priority departments).
 //!
-//! Per-tier *mixes* of these policies live in the sibling
-//! [`crate::provision::mixed`] module ([`crate::provision::MixedPolicy`]).
+//! Two more implementations live in sibling modules, bringing the roster
+//! to seven: per-tier *mixes* in [`crate::provision::mixed`]
+//! ([`crate::provision::MixedPolicy`]) and the forecast-driven
+//! [`crate::provision::Predictive`] policy in
+//! [`crate::provision::predictive`], which pre-reserves free-pool
+//! headroom ahead of predicted service ramps (see [`crate::forecast`]).
 //!
 //! # Implementing a custom policy
 //!
@@ -87,7 +91,10 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::cluster::{DeptId, DeptKind, Ledger};
+use crate::forecast::ForecastStats;
 use crate::sim::SimTime;
+
+use super::predictive::{Predictive, PredictiveSpec};
 
 /// Static facts a policy knows about one department (from the
 /// `[[department]]` config): identity, workload kind, priority tier, and
@@ -214,6 +221,20 @@ pub trait ProvisionPolicy: fmt::Debug + Send {
     /// ([`Ledger::recover`]): the driver re-provisions them right after
     /// this hook, so stateless policies need nothing here. Default: no-op.
     fn on_recover(&mut self, _n: u64, _now: SimTime) {}
+
+    /// One per-department demand sample: `util` in [0, 1+] and `demand`
+    /// in nodes (service target or batch queue depth), fed every tick by
+    /// both coordinators. Reactive policies ignore it; the forecast-driven
+    /// [`Predictive`] policy trains its [`crate::forecast::DemandTracker`]
+    /// here. Default: no-op.
+    fn observe(&mut self, _dept: DeptId, _util: f64, _demand: u64, _now: SimTime) {}
+
+    /// Forecast-quality counters (MAE, pre-grant hit rate) for the
+    /// matrix/serve reports. Default: `None` — the policy forecasts
+    /// nothing.
+    fn forecast_stats(&self) -> Option<ForecastStats> {
+        None
+    }
 }
 
 /// Insert `p` into a profile roster, replacing any stale entry with the
@@ -243,10 +264,15 @@ pub enum PolicySpec {
         secs: u64,
     },
     Tiered,
+    /// Forecast-driven reservation over the cooperative flow; the knobs
+    /// come from the `[policy]` config section / CLI flags.
+    Predictive(PredictiveSpec),
 }
 
 impl PolicySpec {
     /// Parse a policy name; `lease_secs` supplies the term for `lease`.
+    /// `predictive` parses with the default knobs — config/CLI overlays
+    /// patch the spec afterwards (see `ExperimentConfig::predictive`).
     pub fn parse(s: &str, lease_secs: u64) -> anyhow::Result<Self> {
         Ok(match s {
             "cooperative" | "coop" => PolicySpec::Cooperative,
@@ -254,8 +280,9 @@ impl PolicySpec {
             "proportional" => PolicySpec::ProportionalShare,
             "lease" => PolicySpec::Lease { secs: lease_secs },
             "tiered" => PolicySpec::Tiered,
+            "predictive" => PolicySpec::Predictive(PredictiveSpec::default()),
             _ => anyhow::bail!(
-                "unknown policy '{s}' (cooperative|static|proportional|lease|tiered)"
+                "unknown policy '{s}' (cooperative|static|proportional|lease|tiered|predictive)"
             ),
         })
     }
@@ -267,6 +294,7 @@ impl PolicySpec {
             PolicySpec::ProportionalShare => "proportional",
             PolicySpec::Lease { .. } => "lease",
             PolicySpec::Tiered => "tiered",
+            PolicySpec::Predictive(_) => "predictive",
         }
     }
 
@@ -280,6 +308,7 @@ impl PolicySpec {
             }
             PolicySpec::Lease { secs } => Box::new(LeaseBased::new(depts.to_vec(), secs)),
             PolicySpec::Tiered => Box::new(TieredCooperative::new(depts.to_vec())),
+            PolicySpec::Predictive(spec) => Box::new(Predictive::new(depts.to_vec(), spec)),
         }
     }
 }
@@ -311,7 +340,7 @@ fn force_by_holdings(
 
 /// Split `free` evenly across `eligible` (remainder to the earliest ids in
 /// the given order); zero shares are dropped.
-fn split_even(free: u64, eligible: &[DeptId]) -> Vec<(DeptId, u64)> {
+pub(crate) fn split_even(free: u64, eligible: &[DeptId]) -> Vec<(DeptId, u64)> {
     if free == 0 || eligible.is_empty() {
         return Vec::new();
     }
@@ -330,15 +359,15 @@ fn batch_profiles(depts: &[DeptProfile]) -> Vec<&DeptProfile> {
     depts.iter().filter(|p| p.kind == DeptKind::Batch).collect()
 }
 
-fn profile(depts: &[DeptProfile], id: DeptId) -> Option<&DeptProfile> {
+pub(crate) fn profile(depts: &[DeptProfile], id: DeptId) -> Option<&DeptProfile> {
     depts.iter().find(|p| p.id == id)
 }
 
-/// The §II-B cooperative request flow shared by [`Cooperative`] and
-/// [`LeaseBased`]: free pool first; a *service* requester then forces the
-/// shortfall out of the batch departments (largest holdings first); batch
-/// requesters never force.
-fn cooperative_decision(
+/// The §II-B cooperative request flow shared by [`Cooperative`],
+/// [`LeaseBased`], and [`Predictive`]: free pool first; a *service*
+/// requester then forces the shortfall out of the batch departments
+/// (largest holdings first); batch requesters never force.
+pub(crate) fn cooperative_decision(
     depts: &[DeptProfile],
     dept: DeptId,
     need: u64,
@@ -1057,6 +1086,7 @@ mod tests {
             ("proportional", PolicySpec::ProportionalShare),
             ("lease", PolicySpec::Lease { secs: 300 }),
             ("tiered", PolicySpec::Tiered),
+            ("predictive", PolicySpec::Predictive(PredictiveSpec::default())),
         ] {
             let spec = PolicySpec::parse(name, 300).unwrap();
             assert_eq!(spec, expect);
@@ -1078,6 +1108,7 @@ mod tests {
             PolicySpec::ProportionalShare,
             PolicySpec::Lease { secs: 60 },
             PolicySpec::Tiered,
+            PolicySpec::Predictive(PredictiveSpec::default()),
         ] {
             let mut p = spec.build(&two_dept_profiles(144, 64));
             p.on_join(joiner, 10);
@@ -1127,6 +1158,7 @@ mod tests {
             PolicySpec::ProportionalShare,
             PolicySpec::Lease { secs: 60 },
             PolicySpec::Tiered,
+            PolicySpec::Predictive(PredictiveSpec::default()),
         ] {
             let mut p = spec.build(&two_dept_profiles(144, 64));
             for need in [0, 1, 9, 35, 200] {

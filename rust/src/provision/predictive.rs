@@ -1,0 +1,319 @@
+//! The `Predictive` provisioning policy: cooperative flow plus a
+//! forecast-driven free-pool reservation that provisions *ahead* of
+//! demand instead of reacting to it (the reactive gap called out by
+//! arXiv:1710.08731; see [`crate::forecast`]).
+//!
+//! Mechanism: every tick the driver feeds per-department utilization and
+//! demand samples through [`ProvisionPolicy::observe`]; each service
+//! department's [`DemandTracker`] forecasts demand one horizon ahead,
+//! and the policy keeps a per-department *target* of
+//! `ceil(forecast + k·σ)` nodes (σ = demand standard deviation over the
+//! window, `k` in tenths from the config's `headroom-tenths` knob).
+//!
+//! * **Pre-grant** — [`ProvisionPolicy::idle_grants`] withholds the
+//!   aggregate gap between targets and current service holdings from
+//!   the batch departments, so when the forecasted ramp arrives the
+//!   urgent service claim is served straight from the free pool — no
+//!   forced returns, no killed batch jobs. A claim fully covered this
+//!   way scores a pre-grant *hit*; one that still forces or is denied
+//!   scores a *miss* (the matrix's hit-rate column).
+//! * **Pre-release** — when the forecast falls, the targets (and with
+//!   them the reservation) shrink, and the next idle pass hands the
+//!   freed headroom back to the batch departments.
+//! * **Cold start** — until a tracker's window fills, no target exists
+//!   and every surface behaves exactly like [`super::Cooperative`]
+//!   (property-tested in `tests/properties.rs`).
+//!
+//! Reserving (rather than literally granting ahead) keeps the ledger
+//! conservation contract trivially intact and never strands nodes on a
+//! service CMS that its own demand loop would release again next tick.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{DeptId, DeptKind, Ledger};
+use crate::forecast::{DemandTracker, ForecastStats};
+use crate::sim::SimTime;
+
+use super::policy::{
+    cooperative_decision, profile, remove_profile, split_even, upsert_profile, DeptProfile,
+    ProvisionDecision, ProvisionPolicy,
+};
+
+/// The `[policy]` knobs of the Predictive policy (also CLI flags
+/// `--forecast-window`, `--forecast-horizon`, `--headroom-tenths`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PredictiveSpec {
+    /// Rolling history length in samples (≥ 2).
+    pub window: u32,
+    /// Forecast lookahead in seconds.
+    pub horizon_secs: u32,
+    /// Headroom multiplier k in tenths: reserve `forecast + (k/10)·σ`.
+    pub headroom_tenths: u32,
+}
+
+impl Default for PredictiveSpec {
+    fn default() -> Self {
+        Self { window: 16, horizon_secs: 60, headroom_tenths: 20 }
+    }
+}
+
+/// Forecast + k·σ headroom reservation over the cooperative request flow.
+#[derive(Debug)]
+pub struct Predictive {
+    depts: Vec<DeptProfile>,
+    spec: PredictiveSpec,
+    /// Per-department demand history (service departments drive targets;
+    /// batch trackers feed the sampling/MAE counters only).
+    trackers: BTreeMap<DeptId, DemandTracker>,
+    /// Active reservation targets, service departments only.
+    targets: BTreeMap<DeptId, u64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl Predictive {
+    pub fn new(depts: Vec<DeptProfile>, spec: PredictiveSpec) -> Self {
+        Self { depts, spec, trackers: BTreeMap::new(), targets: BTreeMap::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn spec(&self) -> PredictiveSpec {
+        self.spec
+    }
+
+    /// Free-pool nodes held back for forecasted service ramps: the sum
+    /// over service departments of `max(0, target − held)`. Reservations
+    /// never count nodes a department already holds, so a fulfilled
+    /// forecast costs the batch side nothing extra.
+    pub fn reserved(&self, ledger: &Ledger) -> u64 {
+        self.targets.iter().map(|(&d, &t)| t.saturating_sub(ledger.held(d))).sum()
+    }
+}
+
+impl ProvisionPolicy for Predictive {
+    fn name(&self) -> &str {
+        "predictive"
+    }
+
+    fn on_request(
+        &mut self,
+        dept: DeptId,
+        need: u64,
+        ledger: &Ledger,
+        _now: SimTime,
+    ) -> ProvisionDecision {
+        let d = cooperative_decision(&self.depts, dept, need, ledger);
+        // score the reservation: only service claims made while a target
+        // was live count (cold-start claims are Cooperative's, not ours)
+        let service =
+            profile(&self.depts, dept).is_some_and(|p| p.kind == DeptKind::Service);
+        if service && need > 0 && self.targets.contains_key(&dept) {
+            if d.from_free == need {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+            }
+        }
+        d
+    }
+
+    fn idle_grants(
+        &mut self,
+        ledger: &Ledger,
+        eligible: &[DeptId],
+        _now: SimTime,
+    ) -> Vec<(DeptId, u64)> {
+        // cooperative split of whatever the reservation leaves over; with
+        // no live targets (cold start) this is exactly Cooperative
+        let reserved = self.reserved(ledger);
+        split_even(ledger.free().saturating_sub(reserved), eligible)
+    }
+
+    fn observe(&mut self, dept: DeptId, util: f64, demand: u64, now: SimTime) {
+        let (window, horizon) = (self.spec.window as usize, u64::from(self.spec.horizon_secs));
+        let tracker = self
+            .trackers
+            .entry(dept)
+            .or_insert_with(|| DemandTracker::new(window, horizon, 0.3));
+        tracker.observe(now, util, demand);
+        let service =
+            profile(&self.depts, dept).is_some_and(|p| p.kind == DeptKind::Service);
+        if !service {
+            return;
+        }
+        match tracker.forecast(now) {
+            Some(pred) => {
+                let headroom = self.spec.headroom_tenths as f32 / 10.0 * tracker.demand_sigma();
+                // f32→u64 saturates on overflow/NaN, so a wild forecast
+                // can at worst pause idle grants, never corrupt the ledger
+                let target = (pred + headroom).ceil().max(0.0) as u64;
+                self.targets.insert(dept, target);
+            }
+            None => {
+                self.targets.remove(&dept);
+            }
+        }
+    }
+
+    fn forecast_stats(&self) -> Option<ForecastStats> {
+        let mut stats =
+            ForecastStats { hits: self.hits, misses: self.misses, ..ForecastStats::default() };
+        for tracker in self.trackers.values() {
+            stats.merge(&tracker.stats());
+        }
+        Some(stats)
+    }
+
+    fn on_join(&mut self, profile: DeptProfile, _now: SimTime) {
+        upsert_profile(&mut self.depts, profile);
+    }
+
+    fn on_leave(&mut self, dept: DeptId, _now: SimTime) {
+        // a departed department must neither hold a reservation nor keep
+        // feeding the MAE counters
+        remove_profile(&mut self.depts, dept);
+        self.trackers.remove(&dept);
+        self.targets.remove(&dept);
+    }
+
+    /// Deliberate no-op: the reservation is the gap between target and
+    /// *live* holdings, so a crash (which shrinks holdings through the
+    /// ledger) widens the gap automatically; no per-grant state to void.
+    fn on_crash(&mut self, _holder: Option<DeptId>, _n: u64, _now: SimTime) {}
+
+    /// Deliberate no-op: repaired nodes re-enter the free pool, where the
+    /// reservation-aware `idle_grants` pass already governs them.
+    fn on_recover(&mut self, _n: u64, _now: SimTime) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provision::policy::{two_dept_profiles, Cooperative};
+
+    fn ledger(free: u64, st: u64, ws: u64) -> Ledger {
+        let mut l = Ledger::new(free + st + ws, 2);
+        l.grant(DeptId::ST, st).unwrap();
+        l.grant(DeptId::WS, ws).unwrap();
+        l
+    }
+
+    /// Fill WS's tracker with a rising ramp so a target exists.
+    fn warm_up(p: &mut Predictive, demand: &[u64]) {
+        for (i, &d) in demand.iter().enumerate() {
+            p.observe(DeptId::WS, 0.8, d, i as SimTime * 60);
+        }
+    }
+
+    #[test]
+    fn cold_start_is_exactly_cooperative() {
+        let l = ledger(10, 50, 5);
+        let mut pred = Predictive::new(two_dept_profiles(144, 64), PredictiveSpec::default());
+        let mut coop = Cooperative::new(two_dept_profiles(144, 64));
+        assert_eq!(pred.on_request(DeptId::WS, 25, &l, 0), coop.on_request(DeptId::WS, 25, &l, 0));
+        assert_eq!(
+            pred.idle_grants(&l, &[DeptId::ST], 0),
+            coop.idle_grants(&l, &[DeptId::ST], 0)
+        );
+        assert_eq!(pred.forecast_stats().unwrap().hit_rate(), None);
+    }
+
+    #[test]
+    fn warm_tracker_reserves_headroom_from_idle_grants() {
+        let spec = PredictiveSpec { window: 4, horizon_secs: 120, headroom_tenths: 0 };
+        let mut p = Predictive::new(two_dept_profiles(144, 64), spec);
+        warm_up(&mut p, &[8, 12, 16, 20]); // +4/step ramp, 2 steps of lookahead
+        let target = *p.targets.get(&DeptId::WS).unwrap();
+        assert!(target > 20, "target must look past the last sample: {target}");
+        // WS holds 5: the gap is reserved, batch gets only the remainder
+        let l = ledger(40, 0, 5);
+        let reserved = p.reserved(&l);
+        assert_eq!(reserved, target - 5);
+        let grants = p.idle_grants(&l, &[DeptId::ST], 300);
+        let granted: u64 = grants.iter().map(|&(_, n)| n).sum();
+        assert_eq!(granted, 40 - reserved, "{grants:?}");
+    }
+
+    #[test]
+    fn reservation_never_exceeds_free_pool() {
+        let spec = PredictiveSpec { window: 4, horizon_secs: 60, headroom_tenths: 50 };
+        let mut p = Predictive::new(two_dept_profiles(144, 64), spec);
+        warm_up(&mut p, &[10, 40, 90, 160]); // violent ramp, big sigma
+        let l = ledger(6, 30, 2);
+        let grants = p.idle_grants(&l, &[DeptId::ST], 300);
+        let granted: u64 = grants.iter().map(|&(_, n)| n).sum();
+        assert!(granted <= l.free(), "over-granted: {grants:?}");
+    }
+
+    #[test]
+    fn falling_forecast_releases_the_reservation() {
+        let spec = PredictiveSpec { window: 4, horizon_secs: 120, headroom_tenths: 0 };
+        let mut p = Predictive::new(two_dept_profiles(144, 64), spec);
+        warm_up(&mut p, &[20, 16, 12, 8]); // falling ramp, 2 steps of lookahead
+        let target = *p.targets.get(&DeptId::WS).unwrap();
+        assert!(target < 8, "falling forecast must shrink the target: {target}");
+        let l = ledger(40, 0, 8); // WS already holds ≥ target: nothing reserved
+        assert_eq!(p.reserved(&l), 0);
+        assert_eq!(p.idle_grants(&l, &[DeptId::ST], 300), vec![(DeptId::ST, 40)]);
+    }
+
+    #[test]
+    fn hits_and_misses_score_only_targeted_service_claims() {
+        let spec = PredictiveSpec { window: 4, horizon_secs: 60, headroom_tenths: 10 };
+        let mut p = Predictive::new(two_dept_profiles(144, 64), spec);
+        // cold start: no scoring
+        p.on_request(DeptId::WS, 5, &ledger(10, 20, 0), 0);
+        assert_eq!(p.forecast_stats().unwrap().hits + p.forecast_stats().unwrap().misses, 0);
+        warm_up(&mut p, &[8, 12, 16, 20]);
+        // fully served from free: hit
+        p.on_request(DeptId::WS, 5, &ledger(10, 20, 0), 300);
+        // forces batch returns: miss
+        p.on_request(DeptId::WS, 5, &ledger(2, 20, 0), 360);
+        // batch claims never score
+        p.on_request(DeptId::ST, 5, &ledger(2, 20, 0), 420);
+        let s = p.forecast_stats().unwrap();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.hit_rate(), Some(0.5));
+        assert!(s.samples >= 4);
+    }
+
+    #[test]
+    fn decisions_conserve_nodes_with_live_targets() {
+        let spec = PredictiveSpec::default();
+        let mut p = Predictive::new(two_dept_profiles(144, 64), spec);
+        warm_up(&mut p, &(0..20).map(|i| 5 + i % 7).collect::<Vec<_>>());
+        let l = ledger(7, 20, 3);
+        for need in [0, 1, 9, 35, 200] {
+            let d = p.on_request(DeptId::WS, need, &l, 2000);
+            assert_eq!(d.from_free + d.force_total() + d.denied, need, "{d:?}");
+            assert!(d.from_free <= l.free());
+        }
+    }
+
+    #[test]
+    fn leave_drops_tracker_target_and_profile() {
+        let mut p = Predictive::new(two_dept_profiles(144, 64), PredictiveSpec::default());
+        warm_up(&mut p, &[8, 12, 16, 20, 24, 28, 32, 36, 40, 44, 48, 52, 56, 60, 64, 68]);
+        assert!(p.targets.contains_key(&DeptId::WS));
+        p.on_leave(DeptId::WS, 1000);
+        assert!(p.targets.is_empty());
+        assert!(p.trackers.is_empty());
+        let l = ledger(40, 0, 0);
+        assert_eq!(p.idle_grants(&l, &[DeptId::ST], 1100), vec![(DeptId::ST, 40)]);
+    }
+
+    #[test]
+    fn crash_widens_the_gap_through_the_live_ledger() {
+        let spec = PredictiveSpec { window: 4, horizon_secs: 60, headroom_tenths: 0 };
+        let mut p = Predictive::new(two_dept_profiles(144, 64), spec);
+        warm_up(&mut p, &[10, 10, 10, 10]);
+        let target = *p.targets.get(&DeptId::WS).unwrap();
+        assert_eq!(target, 10);
+        // WS holds its whole target: nothing reserved…
+        let mut l = ledger(20, 0, 10);
+        assert_eq!(p.reserved(&l), 0);
+        // …then 4 of its nodes crash: the reservation reopens by itself
+        l.crash_held(DeptId::WS, 4).unwrap();
+        p.on_crash(Some(DeptId::WS), 4, 500);
+        assert_eq!(p.reserved(&l), 4);
+    }
+}

@@ -173,6 +173,9 @@ fn shipped_scenario_config_parses_and_validates() {
             "tiered-80pct",
             "flaky-fleet",
             "late-affiliates",
+            "early-divestiture",
+            "portal-farm-reactive",
+            "portal-farm-predictive",
             "correlated-portals"
         ]
     );
@@ -182,10 +185,18 @@ fn shipped_scenario_config_parses_and_validates() {
     assert_eq!(cfg.scenarios[4].mtbf, Some(86400.0));
     assert_eq!(cfg.scenarios[5].joiners, 2);
     assert_eq!(cfg.scenarios[5].join_at, 7200);
-    assert_eq!(cfg.scenarios[6].correlation, Some(0.8));
-    assert_eq!(cfg.scenarios[6].trace, None);
+    assert_eq!(cfg.scenarios[6].leavers, 1);
+    assert_eq!(cfg.scenarios[6].leave_at, 21600);
+    assert_eq!(cfg.scenarios[8].policy_kind, "predictive");
+    assert_eq!(cfg.scenarios[9].correlation, Some(0.8));
+    assert_eq!(cfg.scenarios[9].trace, None);
     // every boot-time cell leaves the join axis at its defaults
     assert!(cfg.scenarios[..5].iter().all(|s| s.joiners == 0 && s.join_at == 0));
+    // and only "early-divestiture" exercises the departure axis
+    assert!(cfg
+        .scenarios
+        .iter()
+        .all(|s| (s.leavers > 0) == (s.name == "early-divestiture")));
     // the shipped departments roster still parses too
     let cfg = ExperimentConfig::from_file("configs/departments.toml").unwrap();
     assert_eq!(cfg.departments.len(), 4);
@@ -269,7 +280,7 @@ fn swf_fixture_drives_the_matrix() {
     .unwrap();
     // kept in lockstep with `matrix_json` (this assert went stale at
     // schema v3 and hid behind the rest of the suite)
-    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(4));
+    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(5));
     assert_eq!(
         doc.get("cells").unwrap().as_arr().unwrap().len(),
         cells.len()

@@ -9,8 +9,8 @@ use phoenix_cloud::coordinator::{ConsolidationSim, DeptInput, DeptWorkload};
 use phoenix_cloud::experiments::matrix::{self, MatrixAxes, PolicyAxis, SizeScan};
 use phoenix_cloud::prop_assert;
 use phoenix_cloud::provision::{
-    DeptProfile, LeaseBased, PolicyChoice, PolicySpec, ProvisionPolicy, Rps,
-    TieredCooperative, TierRule,
+    DeptProfile, LeaseBased, PolicyChoice, PolicySpec, Predictive, PredictiveSpec,
+    ProvisionPolicy, Rps, TieredCooperative, TierRule,
 };
 use phoenix_cloud::util::prop::{check, Gen};
 use phoenix_cloud::workload::{Job, JobState};
@@ -86,6 +86,7 @@ fn prop_policies_conserve_nodes() {
                     PolicySpec::StaticPartition,
                     PolicySpec::Lease { secs: 60 },
                     PolicySpec::Tiered,
+                    PolicySpec::Predictive(PredictiveSpec::default()),
                 ]),
             });
             PolicyChoice::Mixed { default: PolicySpec::Cooperative, rules }
@@ -96,10 +97,20 @@ fn prop_policies_conserve_nodes() {
                 PolicySpec::ProportionalShare,
                 PolicySpec::Lease { secs: 60 },
                 PolicySpec::Tiered,
+                PolicySpec::Predictive(PredictiveSpec::default()),
             ]))
         };
         let mut policy = choice.build(&profiles);
         let now = g.u64_in(0, 100_000);
+        // randomly warm the forecast trackers so predictive picks exercise
+        // both the cold-start (pure cooperative) and reserving paths
+        if g.bool() {
+            for p in &profiles {
+                for t in 0..g.usize_in(2, 20) {
+                    policy.observe(p.id, g.f64_in(0.0, 1.0), g.u64_in(0, 400), t as u64 * 60);
+                }
+            }
+        }
 
         for _ in 0..g.usize_in(1, 20) {
             let dept = DeptId(g.usize_in(0, k - 1) as u16);
@@ -736,6 +747,8 @@ fn prop_k2_anchor_bit_identical_through_bisect_scan() {
         efficiency: None,
         joiners,
         join_at,
+        leavers: 0,
+        leave_at: 0,
     };
     let scen_cells = matrix::run_scenarios(
         &base,
@@ -860,6 +873,7 @@ fn prop_serve_bus_flows_conserve_nodes_against_ledger() {
             PolicySpec::Lease { secs: 40 },
             PolicySpec::Lease { secs: 260 },
             PolicySpec::Tiered,
+            PolicySpec::Predictive(PredictiveSpec::default()),
         ];
         let policy = PolicyChoice::Base(*g.pick(&specs));
         let k = g.usize_in(2, 5);
@@ -995,6 +1009,7 @@ fn prop_rps_crash_recover_conserves_under_every_policy() {
                 PolicySpec::ProportionalShare,
                 PolicySpec::Lease { secs: 60 },
                 PolicySpec::Tiered,
+                PolicySpec::Predictive(PredictiveSpec::default()),
             ]))
         };
         let mut rps = Rps::new(total, k, choice.build(&profiles));
@@ -1008,6 +1023,11 @@ fn prop_rps_crash_recover_conserves_under_every_policy() {
             now += g.u64_in(0, 300);
             match g.usize_in(0, 4) {
                 0 => {
+                    // feed the forecast trackers first so predictive picks
+                    // provision through live reservations, not just cold ones
+                    for p in &profiles {
+                        rps.observe(p.id, g.f64_in(0.0, 1.0), g.u64_in(0, 300), now);
+                    }
                     rps.provision_idle(&eligible, now);
                 }
                 1 => {
@@ -1259,4 +1279,132 @@ fn prop_ingest_queue_preserves_per_dept_fifo() {
         }
         Ok(())
     });
+}
+
+/// The Predictive policy's pre-grant floor: on randomized ledgers with a
+/// randomized set of warm forecast trackers, the batch-side idle pass
+/// never digs into the forecast reservation — granted nodes stop at
+/// `free − Σ max(0, target − held)`, the service departments' floor —
+/// and with every tracker cold the pass is the cooperative even split,
+/// decision for decision.
+#[test]
+fn prop_predictive_never_pregrants_below_the_forecast_floor() {
+    check("predictive-floor", 250, |g: &mut Gen| {
+        let k = g.usize_in(2, 6);
+        let profiles: Vec<DeptProfile> = (0..k)
+            .map(|i| DeptProfile {
+                id: DeptId(i as u16),
+                kind: if i % 2 == 0 { DeptKind::Batch } else { DeptKind::Service },
+                tier: g.u64_in(0, 3) as u8,
+                quota: g.u64_in(1, 200),
+            })
+            .collect();
+        let total = g.u64_in(k as u64, 1000);
+        let mut ledger = Ledger::new(total, k);
+        for i in 0..k {
+            let n = g.u64_in(0, ledger.free());
+            ledger.grant(DeptId(i as u16), n).unwrap();
+        }
+        let spec = PredictiveSpec {
+            window: g.u64_in(2, 8) as u32,
+            horizon_secs: g.u64_in(1, 600) as u32,
+            headroom_tenths: g.u64_in(0, 50) as u32,
+        };
+        let mut pred = Predictive::new(profiles.clone(), spec);
+        // warm a random subset of the trackers with random histories
+        // (violent ramps included: targets may dwarf the cluster)
+        let mut warmed = false;
+        for p in &profiles {
+            if g.bool() {
+                warmed = warmed || p.kind == DeptKind::Service;
+                for t in 0..(spec.window as u64 + g.u64_in(0, 4)) {
+                    pred.observe(p.id, g.f64_in(0.0, 1.0), g.u64_in(0, 500), t * 60);
+                }
+            }
+        }
+        let eligible: Vec<DeptId> =
+            profiles.iter().filter(|p| p.kind == DeptKind::Batch).map(|p| p.id).collect();
+        let now = spec.window as u64 * 60 + 600;
+        let reserved = pred.reserved(&ledger);
+        prop_assert!(warmed || reserved == 0, "cold trackers reserved {reserved}");
+        let grants = pred.idle_grants(&ledger, &eligible, now);
+        let granted: u64 = grants.iter().map(|&(_, n)| n).sum();
+        prop_assert!(
+            granted <= ledger.free().saturating_sub(reserved),
+            "idle pass dug into the reservation: granted {granted} of free {} \
+             with {reserved} reserved",
+            ledger.free()
+        );
+        for &(d, n) in &grants {
+            prop_assert!(n > 0, "zero-node pre-grant to {d}");
+            prop_assert!(eligible.contains(&d), "pre-grant to ineligible {d}");
+        }
+        if !warmed {
+            // cold start: bit-for-bit Cooperative, grants and requests alike
+            let mut coop = phoenix_cloud::provision::Cooperative::new(profiles.clone());
+            prop_assert!(
+                grants == coop.idle_grants(&ledger, &eligible, now),
+                "cold-start idle pass diverged from cooperative"
+            );
+            let dept = DeptId(g.usize_in(0, k - 1) as u16);
+            let need = g.u64_in(0, total + 10);
+            prop_assert!(
+                pred.on_request(dept, need, &ledger, now)
+                    == coop.on_request(dept, need, &ledger, now),
+                "cold-start request path diverged from cooperative"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Predictive forecasts are deterministic however the work is laid out:
+/// the same K = 2 predictive matrix cell, run serially on the wheel
+/// engine and with 4 workers on the hierarchical engine, serializes to
+/// byte-equal JSON and CSV, and the forecast MAE / pre-grant hit-rate
+/// columns agree as raw f64 bit patterns run by run.
+#[test]
+fn prop_predictive_forecasts_bit_identical_serial_vs_parallel_across_engines() {
+    use phoenix_cloud::sim::EngineKind;
+
+    let mut serial = ExperimentConfig::default();
+    serial.engine = EngineKind::Wheel;
+    serial.workers = 1;
+    let mut threaded = ExperimentConfig::default();
+    threaded.engine = EngineKind::Hier;
+    threaded.workers = 4;
+    let axes = |cfg: &ExperimentConfig| MatrixAxes {
+        ks: vec![2],
+        mixes: vec![RosterMix::Alternating],
+        policies: vec![PolicyAxis::Base(PolicySpec::Predictive(cfg.predictive))],
+        loads: vec![cfg.hpc.target_load],
+        scan: SizeScan::Bisect,
+        quick: true,
+    };
+    let a = matrix::run_matrix(&serial, &axes(&serial)).unwrap();
+    let b = matrix::run_matrix(&threaded, &axes(&threaded)).unwrap();
+    assert_eq!(
+        matrix::matrix_json(&a, true).to_string(),
+        matrix::matrix_json(&b, true).to_string(),
+        "predictive cell diverged across engine/worker layouts"
+    );
+    assert_eq!(matrix::matrix_csv(&a), matrix::matrix_csv(&b), "CSV diverged");
+    assert_eq!(a[0].runs.len(), b[0].runs.len());
+    let mut saw_forecast = false;
+    for (ra, rb) in a[0].runs.iter().zip(&b[0].runs) {
+        assert_eq!(
+            ra.forecast_mae.map(f64::to_bits),
+            rb.forecast_mae.map(f64::to_bits),
+            "forecast MAE bits diverged at {} nodes",
+            ra.nodes
+        );
+        assert_eq!(
+            ra.pregrant_hit_rate.map(f64::to_bits),
+            rb.pregrant_hit_rate.map(f64::to_bits),
+            "hit-rate bits diverged at {} nodes",
+            ra.nodes
+        );
+        saw_forecast = saw_forecast || ra.forecast_mae.is_some();
+    }
+    assert!(saw_forecast, "predictive cell never produced a forecast");
 }

@@ -77,6 +77,7 @@ fn serve_two_dept_cooperative_matches_consolidation_sim() {
                 quota: cfg.ws_nodes,
                 seed: None,
                 join_at: 0,
+                leave_at: 0,
             },
             workload: ServeWorkload::Service {
                 rates,
@@ -152,6 +153,53 @@ fn shipped_serve_config_runs_a_join_scenario() {
     let held: u64 = report.per_dept.iter().map(|d| d.holding_end).sum();
     assert_eq!(report.free_end + held, report.cluster_nodes, "ledger conservation");
     assert!(report.down_services.is_empty(), "{:?}", report.down_services);
+}
+
+// ---- pure-Rust forecaster vs the python oracle ------------------------------
+
+/// Pins `forecast::WindowForecaster` to reference vectors generated by the
+/// python oracle (`python/compile/kernels/ref.py`, via
+/// `scripts/gen_forecast_fixture.py`). This is the CI-side half of the
+/// numerics contract: it runs everywhere, no XLA or artifacts needed.
+#[test]
+fn window_forecaster_matches_python_oracle_fixture() {
+    let text = std::fs::read_to_string("tests/fixtures/forecast_ref.txt")
+        .expect("tests/fixtures/forecast_ref.txt (regenerate with \
+                 scripts/gen_forecast_fixture.py)");
+    let mut vals = text
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .flat_map(str::split_whitespace)
+        .map(|t| t.parse::<f32>().expect("fixture token"));
+    let mut take = |n: usize| -> Vec<f32> {
+        let v: Vec<f32> = vals.by_ref().take(n).collect();
+        assert_eq!(v.len(), n, "fixture truncated");
+        v
+    };
+    let head = take(4);
+    let (s, w, alpha, steps) =
+        (head[0] as usize, head[1] as usize, head[2], head[3]);
+    let util = take(s * w);
+    let reqs = take(s * w);
+    let params = take(9);
+    let want_su = take(s * 4);
+    let want_sr = take(s * 4);
+    let want_dense = take(s);
+    let want_trend = take(s);
+    assert!(vals.next().is_none(), "trailing fixture data");
+
+    let close = |got: &[f32], want: &[f32], what: &str| {
+        assert_eq!(got.len(), want.len(), "{what} length");
+        for (i, (g, r)) in got.iter().zip(want).enumerate() {
+            assert!((g - r).abs() < 1e-6, "{what}[{i}]: rust={g} oracle={r}");
+        }
+    };
+    let dense = phoenix_cloud::forecast::WindowForecaster::new(w, alpha, params).unwrap();
+    close(&dense.window_stats(&util, s).unwrap(), &want_su, "window_stats(util)");
+    close(&dense.window_stats(&reqs, s).unwrap(), &want_sr, "window_stats(reqs)");
+    close(&dense.forecast(&util, &reqs, s).unwrap(), &want_dense, "forecast dense");
+    let trend = phoenix_cloud::forecast::WindowForecaster::trend(w, alpha, steps).unwrap();
+    close(&trend.forecast(&util, &reqs, s).unwrap(), &want_trend, "forecast trend");
 }
 
 // ---- L1↔L3 numerics contract (needs `make artifacts`) -----------------------

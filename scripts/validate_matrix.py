@@ -1,11 +1,12 @@
 #!/usr/bin/env python3
-"""Validate an out/matrix.json table against schema version 4.
+"""Validate an out/matrix.json table against schema version 5.
 
-Used by CI after both matrix smokes (the synthetic quick grid and the
-trace-driven run against the bundled SWF fixture):
+Used by CI after the matrix smokes (the synthetic quick grid, the
+trace-driven run against the bundled SWF fixture, the fault-injection
+grid, and the predictive-policy grid):
 
     python3 scripts/validate_matrix.py out/matrix.json --expect-kmax 8 \
-        --expect-policies mixed lease --expect-anchor-cell
+        --expect-policies mixed lease predictive --expect-anchor-cell
 
 Schema v2 = v1 + the per-cell "scan" kind; "runs" are the scan's probes
 (descending) rather than a fixed fraction grid, and "required_nodes" is
@@ -22,6 +23,13 @@ Schema v4 = v3 + the per-cell join axis: "joiners" (trailing roster
 members that join mid-run) and "join_at" (the virtual second they
 arrive; 0 when joiners is 0).  Joiner cells are skipped by the anchor
 check, exactly like trace-driven and fault-overridden ones.
+
+Schema v5 = v4 + the departure axis and the forecast columns: per cell
+"leavers" (trailing roster members that depart mid-run) and "leave_at"
+(the virtual second they leave; 0 when leavers is 0 — leaver cells are
+skipped by the anchor check like joiner cells); per run "forecast_mae"
+and "pregrant_hit_rate" (non-null only under the predictive policy, the
+forecast-quality columns of the "predictive vs cooperative" headline).
 """
 
 import argparse
@@ -30,15 +38,16 @@ import sys
 
 CELL_KEYS = (
     "name", "k", "mix", "policy", "lease_secs", "load", "joiners",
-    "join_at", "dedicated_nodes", "baseline_completed", "scan",
-    "trace_driven", "fault_overridden", "required_nodes", "required_frac",
-    "runs", "per_dept",
+    "join_at", "leavers", "leave_at", "dedicated_nodes",
+    "baseline_completed", "scan", "trace_driven", "fault_overridden",
+    "required_nodes", "required_frac", "runs", "per_dept",
 )
 RUN_KEYS = (
     "nodes", "frac", "completed", "killed", "in_flight",
     "shortage_node_secs", "slo_violating_depts", "force_returns",
     "avg_turnaround_s", "events", "crashes", "crash_kills",
-    "availability", "mean_recovery_s",
+    "availability", "mean_recovery_s", "forecast_mae",
+    "pregrant_hit_rate",
 )
 
 
@@ -57,12 +66,14 @@ def main() -> int:
                     help="at least one run must have observed a crash")
     ap.add_argument("--expect-zero-faults", action="store_true",
                     help="every run must be crash-free with availability 1.0")
+    ap.add_argument("--expect-forecasts", action="store_true",
+                    help="at least one run must carry forecast columns")
     args = ap.parse_args()
 
     with open(args.path) as f:
         doc = json.load(f)
     assert doc["suite"] == "matrix", doc.get("suite")
-    assert doc["schema_version"] == 4, doc.get("schema_version")
+    assert doc["schema_version"] == 5, doc.get("schema_version")
     assert isinstance(doc["quick"], bool)
     cells = doc["cells"]
     assert cells, "no matrix cells recorded"
@@ -77,6 +88,14 @@ def main() -> int:
         if c["joiners"]:
             assert c["join_at"] > 0, \
                 f"cell {c['name']}: joiners without a join time"
+        assert 0 <= c["leavers"] < c["k"], \
+            f"cell {c['name']}: leavers {c['leavers']} of k {c['k']}"
+        if c["leavers"]:
+            assert c["leave_at"] > 0, \
+                f"cell {c['name']}: leavers without a leave time"
+            if c["joiners"]:
+                assert c["leave_at"] > c["join_at"], \
+                    f"cell {c['name']}: leave_at before join_at"
         if args.expect_trace_driven:
             assert c["trace_driven"], f"cell {c['name']} not trace-driven"
         assert c["runs"], f"cell {c['name']} has no runs"
@@ -95,6 +114,14 @@ def main() -> int:
             if args.expect_zero_faults:
                 assert r["crashes"] == 0 and r["availability"] == 1.0, \
                     f"cell {c['name']}: unexpected faults: {r['crashes']}"
+            for key in ("forecast_mae", "pregrant_hit_rate"):
+                v = r[key]
+                # integral floats serialize as JSON ints (0, 1)
+                assert v is None or (isinstance(v, (int, float)) and v >= 0), \
+                    f"cell {c['name']}: bad {key}: {v!r}"
+            if c["policy"] not in ("predictive", "mixed"):
+                assert r["forecast_mae"] is None, \
+                    f"cell {c['name']}: {c['policy']} reported forecasts"
         if c["required_nodes"] is not None:
             assert 1 <= c["required_nodes"] <= c["dedicated_nodes"], c["name"]
             assert c["required_nodes"] in nodes, \
@@ -111,6 +138,10 @@ def main() -> int:
     if args.expect_faults:
         assert any(r["crashes"] > 0 for c in cells for r in c["runs"]), \
             "no run observed a crash despite fault injection"
+    if args.expect_forecasts:
+        assert any(r["forecast_mae"] is not None
+                   for c in cells for r in c["runs"]), \
+            "no run carried forecast columns despite the predictive policy"
     if args.expect_anchor_cell:
         assert any(c["k"] == 2 and c["mix"] == "alternating"
                    and c["policy"] == "cooperative" for c in cells), \

@@ -19,7 +19,9 @@
 //! | R5 | `panic_path`     | library code (not `main.rs`, tests, benches) | `.unwrap()`, `.expect()`, `panic!`, `todo!`, `unimplemented!` |
 //!
 //! ¹ deterministic modules: `sim/`, `coordinator/`, `experiments/`,
-//! `provision/`, `trace/`, and `faults.rs`. Wall-clock reads are always
+//! `provision/`, `trace/`, `forecast/` (the pure-Rust forecaster must be
+//! bit-reproducible for the fixture pin and the predictive matrix
+//! columns), and `faults.rs`. Wall-clock reads are always
 //! legal in `util/bench.rs` (the one audited timing module) and in `net/`
 //! (the serve frontend's socket/file ingest boundary — external I/O by
 //! design; the deterministic core never calls into it).
@@ -151,7 +153,7 @@ impl Scope {
         Scope {
             deterministic: matches!(
                 top,
-                "sim" | "coordinator" | "experiments" | "provision" | "trace"
+                "sim" | "coordinator" | "experiments" | "provision" | "trace" | "forecast"
             ) || rel == "faults.rs",
             trace: top == "trace" || rel == "wscms/loadgen.rs",
             wall_clock_ok: rel == "util/bench.rs" || top == "net",
@@ -858,6 +860,9 @@ mod tests {
         let src = "fn f() -> u64 { std::time::Instant::now().elapsed().as_secs() }";
         assert_eq!(rules_of("sim/engine.rs", src), vec![(Rule::WallClock, 1)]);
         assert_eq!(rules_of("faults.rs", src), vec![(Rule::WallClock, 1)]);
+        // the forecast subsystem joined the deterministic set with the
+        // predictive policy: its numbers land in pinned matrix columns
+        assert_eq!(rules_of("forecast/window.rs", src), vec![(Rule::WallClock, 1)]);
         assert!(rules_of("util/bench.rs", src).is_empty());
         assert!(rules_of("wscms/serving.rs", src).is_empty());
         // net/ is the audited external-I/O boundary: exempt like bench.rs

@@ -1,0 +1,9 @@
+//~ scope: forecast/window.rs
+//! Known-bad fixture for the forecast scope: the pure-Rust forecaster
+//! joined the deterministic set with the predictive policy (its outputs
+//! land in pinned matrix columns), so a wall-clock read inside
+//! `forecast/` is a finding. Exactly one, on the `Instant::now()` line.
+
+pub fn sample_period_secs() -> u64 {
+    std::time::Instant::now().elapsed().as_secs()
+}

@@ -39,6 +39,12 @@ fn r1_wall_clock_fixture_flags() {
 }
 
 #[test]
+fn r1_forecast_scope_fixture_flags() {
+    // forecast/ joined the deterministic set with the predictive policy
+    assert_single("r1_forecast_scope.rs", Rule::WallClock, "Instant::now");
+}
+
+#[test]
 fn r2_hash_iter_fixture_flags() {
     assert_single("r2_hash_iter.rs", Rule::HashOrder, "pending");
 }
